@@ -1,0 +1,67 @@
+//! Block-size sweep (paper Fig. 3): time/memory of R_sum^(b) at fixed
+//! d = 2048 as the block size b runs from R_off-like (small b) to fully
+//! relaxed (b = d). Demonstrates the O((n d²/b) log b) interpolation of
+//! Eq. (13).
+//!
+//! Run with: `cargo run --release --offline --example grouping_sweep
+//!            [--blocks 8,32,128,512,2048] [--accuracy]`
+//!
+//! `--accuracy` additionally pretrains the small preset at b ∈ {128, d}
+//! and reports linear-eval accuracy (the Fig. 3 accuracy panel; slower).
+
+use anyhow::Result;
+use decorr::bench_harness::cmd::pretrain_and_eval;
+use decorr::bench_harness::{bench_for, loss_node_bytes, LossWorkload, Table};
+use decorr::config::{TrainConfig, Variant};
+use decorr::runtime::Engine;
+use decorr::util::cli::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env()?;
+    let blocks: Vec<usize> = args.list_or("blocks", &[8usize, 32, 128, 512, 2048])?;
+    let d = args.get_or("d", 2048usize)?;
+    let n = args.get_or("n", 128usize)?;
+    let budget = args.get_or("budget", 0.4f64)?;
+    let with_accuracy = args.switch("accuracy");
+    args.finish()?;
+
+    let engine = Engine::cpu("artifacts")?;
+    let mut table = Table::new(&["b", "fwd (ms)", "fwd+bwd (ms)", "loss-node MB"]);
+    let mut add = |label: String, variant: String| -> Result<()> {
+        let fwd = LossWorkload::load(&engine, &variant, d, n, false)?;
+        let f = bench_for(budget, 2, || fwd.run().unwrap());
+        let bwd = LossWorkload::load(&engine, &variant, d, n, true)?;
+        let b = bench_for(budget, 2, || bwd.run().unwrap());
+        table.row(vec![
+            label,
+            format!("{:.2}", f.median_ms()),
+            format!("{:.2}", b.median_ms()),
+            format!("{:.1}", loss_node_bytes(&variant, n, d) as f64 / 1e6),
+        ]);
+        Ok(())
+    };
+    add("1 (= R_off)".into(), "bt_off".into())?;
+    for &b in &blocks {
+        if b >= d {
+            add(format!("{d} (no grouping)"), "bt_sum".into())?;
+        } else {
+            add(format!("{b}"), format!("bt_sum_g{b}"))?;
+        }
+    }
+    println!("\nFig. 3 analogue (block-size sweep at d={d}, n={n}):");
+    table.print();
+
+    if with_accuracy {
+        println!("\naccuracy panel (small preset, b = 128 vs no grouping):");
+        let mut acc = Table::new(&["b", "top-1 (%)"]);
+        for (label, variant) in [("128", Variant::BtSumG128), ("d (no grouping)", Variant::BtSum)]
+        {
+            let mut cfg = TrainConfig::preset_small();
+            cfg.variant = variant;
+            let out = pretrain_and_eval(cfg, 1536, 512, 150)?;
+            acc.row(vec![label.to_string(), format!("{:.2}", out.top1)]);
+        }
+        acc.print();
+    }
+    Ok(())
+}

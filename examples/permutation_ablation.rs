@@ -1,0 +1,85 @@
+//! Permutation ablation (paper Tables 5 and 6): trains the proposed
+//! regularizer with and without per-batch feature permutation and reports
+//! (a) linear-eval accuracy and per-10-step training time (Tab. 5 shape),
+//! (b) the normalized R_off residual of the trained embeddings
+//!     (Tab. 6 / Eqs. 16–17).
+//!
+//! The paper's claim under test: *without permutation the relaxed
+//! regularizer is nearly blind — accuracy collapses and true decorrelation
+//! (measured by R_off) stays poor; with permutation both recover.*
+//!
+//! Run with: `cargo run --release --offline --example permutation_ablation
+//!            [--preset small --epochs 6 --family bt]`
+
+use anyhow::Result;
+use decorr::bench_harness::cmd::{display_name, pretrain_and_eval, project_views};
+use decorr::bench_harness::Table;
+use decorr::config::{TrainConfig, Variant};
+use decorr::regularizer;
+use decorr::runtime::Engine;
+use decorr::util::cli::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env()?;
+    let preset = args.str_or("preset", "small");
+    let mut cfg0 = TrainConfig::preset(&preset)?;
+    cfg0.epochs = args.get_or("epochs", cfg0.epochs)?;
+    cfg0.steps_per_epoch = args.get_or("steps-per-epoch", cfg0.steps_per_epoch)?;
+    cfg0.seed = args.get_or("seed", cfg0.seed)?;
+    let family = args.str_or("family", "bt");
+    let train_samples = args.get_or("train-samples", 1536usize)?;
+    let test_samples = args.get_or("test-samples", 512usize)?;
+    args.finish()?;
+
+    let (flat, grouped) = if family == "vic" {
+        (Variant::VicSum, Variant::VicSumG128)
+    } else {
+        (Variant::BtSum, Variant::BtSumG128)
+    };
+
+    let mut tab5 = Table::new(&["grouping", "permutation", "top-1 (%)", "s / 10 steps"]);
+    let mut tab6 = Table::new(&["grouping", "permutation", "normalized residual"]);
+
+    for (variant, grouping) in [(flat, "no"), (grouped, "b=128")] {
+        for permute in [false, true] {
+            let mut cfg = cfg0.clone();
+            cfg.variant = variant;
+            cfg.permute = permute;
+            println!("== {} permutation={} ==", display_name(variant), permute);
+            let out = pretrain_and_eval(cfg.clone(), train_samples, test_samples, 150)?;
+            let s_per_10 =
+                out.train_secs / (cfg.total_steps() as f64) * 10.0;
+            tab5.row(vec![
+                grouping.to_string(),
+                if permute { "yes" } else { "no" }.to_string(),
+                format!("{:.2}", out.top1),
+                format!("{s_per_10:.2}"),
+            ]);
+
+            // Table-6 residual on freshly projected twin views.
+            let engine = Engine::cpu(&cfg.artifact_dir)?;
+            let (za, zb) =
+                project_views(&engine, &cfg.preset, &out.snapshot, out.adapter, cfg.seed, 4)?;
+            let residual = if family == "vic" {
+                regularizer::normalized_vic_residual(&za, &zb)
+            } else {
+                regularizer::normalized_bt_residual(&za, &zb)
+            };
+            tab6.row(vec![
+                grouping.to_string(),
+                if permute { "yes" } else { "no" }.to_string(),
+                format!("{residual:.5}"),
+            ]);
+        }
+    }
+
+    println!("\nTable 5 analogue ({family}-style, preset {preset}):");
+    tab5.print();
+    println!("\nTable 6 analogue (normalized R_off residual of trained embeddings):");
+    tab6.print();
+    println!(
+        "\n(paper shape: permutation=no rows lose many accuracy points and keep a\n\
+         much larger residual; permutation=yes restores both at negligible time cost)"
+    );
+    Ok(())
+}

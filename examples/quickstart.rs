@@ -1,0 +1,61 @@
+//! Quickstart: the five-minute tour of the decorr public API.
+//!
+//! 1. Start the PJRT engine and load an AOT loss artifact.
+//! 2. Compute the proposed FFT regularizer on-device and validate it
+//!    against the pure-rust host implementation (paper Eq. 12).
+//! 3. Run a few SSL pretraining steps on the tiny preset.
+//!
+//! Run with: `cargo run --release --offline --example quickstart`
+//! (requires `make artifacts`).
+
+use anyhow::Result;
+use decorr::config::TrainConfig;
+use decorr::coordinator::trainer::{literal_f32, literal_i32, scalar};
+use decorr::coordinator::Trainer;
+use decorr::regularizer::{self, Q};
+use decorr::runtime::Engine;
+use decorr::util::rng::Rng;
+use decorr::util::tensor::Tensor;
+
+fn main() -> Result<()> {
+    // --- 1. Engine + artifact -------------------------------------------
+    let engine = Engine::cpu("artifacts")?;
+    println!("engine: platform={}", engine.platform());
+    let loss = engine.load_artifact("loss_bt_sum_d256_n128")?;
+    println!(
+        "loaded '{}': {} inputs, {} outputs",
+        loss.manifest().name,
+        loss.manifest().inputs.len(),
+        loss.manifest().outputs.len()
+    );
+
+    // --- 2. Device loss vs host reference -------------------------------
+    let (n, d) = (128, 256);
+    let mut rng = Rng::new(1);
+    let za = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+    let zb = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+    let perm: Vec<u32> = (0..d as u32).collect();
+    let out = loss.execute_literals(&[
+        literal_f32(&za)?,
+        literal_f32(&zb)?,
+        literal_i32(&perm)?,
+    ])?;
+    let device = scalar(&out[0])?;
+    let host =
+        0.125 * regularizer::barlow_twins_sum_loss(&za, &zb, 2f32.powi(-10), Q::L2);
+    println!("device loss = {device:.6}, host reference = {host:.6}");
+
+    // --- 3. A few pretraining steps --------------------------------------
+    let mut cfg = TrainConfig::preset_tiny();
+    cfg.epochs = 1;
+    cfg.steps_per_epoch = 10;
+    cfg.out_dir = String::new();
+    let mut trainer = Trainer::new(cfg)?;
+    let report = trainer.run()?;
+    println!(
+        "tiny pretrain: {} steps, loss {:.4} -> {:.4} ({:.1} steps/s)",
+        report.steps, report.initial_loss, report.final_loss, report.steps_per_sec
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Scaling curves (paper Fig. 2): loss-node forward / forward+backward
+//! time and the loss-node memory model versus embedding dimension d, for
+//! the baselines (R_off) and the proposed FFT regularizers (R_sum), plus
+//! the b=128 grouped variant.
+//!
+//! Also writes a CSV (`runs/fig2.csv`) for plotting.
+//!
+//! Run with: `cargo run --release --offline --example scaling_curves
+//!            [--dims 256,512,1024,2048,4096] [--budget 0.4]`
+
+use anyhow::Result;
+use decorr::bench_harness::{bench_for, loss_node_bytes, LossWorkload, Table};
+use decorr::runtime::Engine;
+use decorr::util::cli::Args;
+use std::io::Write;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env()?;
+    let dims: Vec<usize> = args.list_or("dims", &[256usize, 512, 1024, 2048, 4096])?;
+    let n = args.get_or("n", 128usize)?;
+    let budget = args.get_or("budget", 0.4f64)?;
+    let csv_path = args.str_or("csv", "runs/fig2.csv");
+    args.finish()?;
+
+    let variants = ["bt_off", "bt_sum", "bt_sum_g128", "vic_off", "vic_sum"];
+    let engine = Engine::cpu("artifacts")?;
+    std::fs::create_dir_all(std::path::Path::new(&csv_path).parent().unwrap())?;
+    let mut csv = std::fs::File::create(&csv_path)?;
+    writeln!(csv, "variant,d,fwd_ms,fwdbwd_ms,loss_node_mb")?;
+
+    let mut table = Table::new(&["variant", "d", "fwd (ms)", "fwd+bwd (ms)", "loss-node MB"]);
+    for v in &variants {
+        for &d in &dims {
+            let fwd = LossWorkload::load(&engine, v, d, n, false)?;
+            let f = bench_for(budget, 2, || fwd.run().unwrap());
+            let bwd = LossWorkload::load(&engine, v, d, n, true)?;
+            let b = bench_for(budget, 2, || bwd.run().unwrap());
+            let mb = loss_node_bytes(v, n, d) as f64 / 1e6;
+            writeln!(
+                csv,
+                "{v},{d},{:.4},{:.4},{:.3}",
+                f.median_ms(),
+                b.median_ms(),
+                mb
+            )?;
+            table.row(vec![
+                v.to_string(),
+                format!("{d}"),
+                format!("{:.2}", f.median_ms()),
+                format!("{:.2}", b.median_ms()),
+                format!("{mb:.1}"),
+            ]);
+        }
+    }
+    println!("\nFig. 2 analogue (n = {n}); CSV written to {csv_path}:");
+    table.print();
+
+    // Speedup summary at the largest d (the paper's headline numbers).
+    let d = *dims.last().unwrap();
+    let t = |v: &str| -> Result<f64> {
+        let w = LossWorkload::load(&engine, v, d, n, false)?;
+        Ok(bench_for(budget, 2, || w.run().unwrap()).median)
+    };
+    println!(
+        "\nat d={d}: proposed vs Barlow Twins {:.1}x, proposed vs VICReg {:.1}x (fwd loss)",
+        t("bt_off")? / t("bt_sum")?,
+        t("vic_off")? / t("vic_sum")?
+    );
+    Ok(())
+}

@@ -1,0 +1,620 @@
+"""AOT lowering: JAX functions → HLO text artifacts + JSON manifests.
+
+This is the only place Python touches the pipeline; it runs once at build
+time (``make artifacts``). Each artifact is emitted as
+
+* ``<name>.hlo.txt``        — HLO **text**. jax ≥ 0.5 serializes protos
+  with 64-bit instruction ids that xla_extension 0.5.1 (the version behind
+  the rust ``xla`` crate) rejects; the text parser reassigns ids, so text
+  is the interchange format (see /opt/xla-example/README.md).
+* ``<name>.manifest.json``  — ordered input/output tensor specs (name,
+  shape, dtype) in jax's pytree flattening order, plus free-form metadata.
+  The rust coordinator marshals host buffers purely from this manifest.
+
+Artifact families
+-----------------
+* ``train_<variant>_<preset>``   — one optimizer step (fwd+bwd+update).
+* ``embed_<preset>``             — backbone features (linear eval).
+* ``project_<preset>``           — projected embeddings (Table-6 diag).
+* ``loss_<variant>_d<d>_n<n>``   — loss-only forward on embeddings
+  (Fig. 2 / Tab. 12 timing workloads).
+* ``lossgrad_<variant>_d<d>_n<n>`` — loss + grads wrt embeddings
+  (backward-pass timing, Tab. 12/13).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--force]``.
+"""
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+# ---------------------------------------------------------------------------
+# Presets: CPU-scale stand-ins for the paper's configurations.
+# ---------------------------------------------------------------------------
+
+IMAGE_SHAPE = (32, 32, 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class Preset:
+    name: str
+    model: M.ModelConfig
+    batch: int
+
+
+PRESETS = {
+    # MLP backbone over flat 64-dim inputs: fast artifacts for tests.
+    "tiny": Preset(
+        "tiny",
+        M.ModelConfig(
+            backbone="mlp",
+            mlp_hidden=(128,),
+            repr_dim=64,
+            proj_hidden=128,
+            proj_layers=2,
+            embed_dim=256,
+        ),
+        batch=32,
+    ),
+    # Small convnet, d=1024: integration-test scale.
+    "small": Preset(
+        "small",
+        M.ModelConfig(
+            backbone="convnet",
+            widths=(16, 32, 64),
+            repr_dim=128,
+            proj_hidden=512,
+            proj_layers=3,
+            embed_dim=1024,
+        ),
+        batch=64,
+    ),
+    # The end-to-end training preset (~2.4 M params, d=2048): the CPU-scale
+    # analogue of the paper's ResNet-18 / d=2048 ImageNet-100 setup.
+    "e2e": Preset(
+        "e2e",
+        M.ModelConfig(
+            backbone="convnet",
+            widths=(32, 64, 128, 256),
+            repr_dim=256,
+            proj_hidden=1024,
+            proj_layers=3,
+            embed_dim=2048,
+        ),
+        batch=128,
+    ),
+}
+
+TINY_INPUT = (64,)  # flat input shape for the mlp backbone
+
+
+def input_shape(preset: Preset):
+    return TINY_INPUT if preset.model.backbone == "mlp" else IMAGE_SHAPE
+
+
+# Loss-variant table: name → LossConfig kwargs. Hyperparameters follow the
+# paper's Tables 9/10 where applicable (q=2 for BT-style, q=1 for VIC-style).
+#
+# ``use_pallas`` note: standard artifacts lower the *native XLA* forms
+# (fused dot / rfft+einsum). On the CPU PJRT testbed, interpret-mode Pallas
+# grids lower to sequential HLO while-loops, which would slow BOTH the
+# baseline (by ~40x) and the proposed loss — distorting every timing
+# comparison. The Pallas kernels still ship in dedicated ``*_pl_*`` probe
+# artifacts (emitted below) that the rust suite checks for numerical
+# equality against the native forms, and on a real TPU they are the forms
+# that tile VMEM/MXU (DESIGN.md §Hardware-Adaptation).
+def variant_cfg(variant: str, d: int, use_pallas: bool = False) -> M.LossConfig:
+    block = 0
+    q_override = None
+    base = variant
+    # "_q1"/"_q2" suffix overrides the norm exponent (App. E.1 / Tab. 11).
+    if base.endswith(("_q1", "_q2")):
+        q_override = int(base[-1])
+        base = base[:-3]
+    if "_g" in base:
+        base, blk = base.rsplit("_g", 1)
+        block = int(blk)
+    table = {
+        "bt_off": dict(variant="bt_off", q=2, lam=0.0051, scale=0.1),
+        "bt_sum": dict(variant="bt_sum", q=2, lam=2.0**-10, scale=0.125),
+        "vic_off": dict(variant="vic_off", q=2, alpha=25.0, mu=25.0, nu=1.0),
+        "vic_sum": dict(variant="vic_sum", q=1, alpha=25.0, mu=25.0, nu=1.0, scale=0.25),
+    }
+    if base not in table:
+        raise ValueError(f"unknown loss variant {variant}")
+    kwargs = dict(table[base])
+    kwargs["block"] = block
+    kwargs["use_pallas"] = use_pallas
+    if q_override is not None:
+        kwargs["q"] = q_override
+    return M.LossConfig(**kwargs)
+
+
+OPT = M.OptConfig(optimizer="lars", momentum=0.9, weight_decay=1e-4)
+
+VARIANTS = ["bt_off", "bt_sum", "bt_sum_g128", "vic_off", "vic_sum", "vic_sum_g128"]
+
+
+# ---------------------------------------------------------------------------
+# Lowering machinery
+# ---------------------------------------------------------------------------
+
+
+def _path_str(prefix: str, path) -> str:
+    """'params' + (DictKey('backbone'), DictKey('conv0_w')) → 'params.backbone.conv0_w'."""
+    parts = [prefix]
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def _specs(prefix: str, tree):
+    """Flatten a pytree of arrays into ordered (name, shape, dtype) specs."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    specs = []
+    for path, leaf in leaves:
+        # leaf is a concrete array or a ShapeDtypeStruct — both carry
+        # .shape/.dtype.
+        dtype = {"float32": "f32", "int32": "i32"}[str(leaf.dtype)]
+        specs.append(
+            {
+                "name": _path_str(prefix, path),
+                "shape": list(leaf.shape),
+                "dtype": dtype,
+            }
+        )
+    return specs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for stable
+    multi-output decomposition on the rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir, name, fn, arg_trees, arg_names, out_names, meta, force=False):
+    """Lower ``fn`` at the abstract shapes of ``arg_trees`` and write the
+    artifact pair. Skips work when the manifest exists with the same
+    content hash of the lowering config (incremental ``make artifacts``)."""
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    man_path = os.path.join(out_dir, f"{name}.manifest.json")
+
+    in_specs = []
+    for prefix, tree in zip(arg_names, arg_trees):
+        in_specs.extend(_specs(prefix, tree))
+
+    out_tree = jax.eval_shape(fn, *arg_trees)
+    out_specs = []
+    for prefix, tree in zip(out_names, out_tree if isinstance(out_tree, tuple) else (out_tree,)):
+        out_specs.extend(_specs(prefix, tree))
+
+    manifest = {
+        "name": name,
+        "inputs": in_specs,
+        "outputs": out_specs,
+        "meta": meta,
+    }
+    man_text = json.dumps(manifest, indent=1, sort_keys=True)
+    config_hash = hashlib.sha256(man_text.encode()).hexdigest()[:16]
+
+    if not force and os.path.exists(man_path) and os.path.exists(hlo_path):
+        try:
+            old = json.load(open(man_path))
+            if old.get("meta", {}).get("config_hash") == config_hash:
+                print(f"  [skip] {name} (unchanged)")
+                return
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    lowered = jax.jit(fn).lower(*arg_trees)
+    # jax dead-code-eliminates unused flattened inputs (e.g. projector
+    # params in the embed artifact); the HLO entry signature only has the
+    # *kept* ones. The manifest must describe exactly that signature —
+    # the rust side marshals buffers positionally from it.
+    kept = getattr(lowered._lowering, "compile_args", {}).get("kept_var_idx")
+    if kept is not None:
+        kept = sorted(kept)
+        in_specs = [in_specs[i] for i in kept]
+        manifest["inputs"] = in_specs
+    manifest["meta"] = dict(meta, config_hash=config_hash)
+    man_text = json.dumps(manifest, indent=1, sort_keys=True)
+    text = to_hlo_text(lowered)
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    with open(man_path, "w") as f:
+        f.write(man_text)
+    print(f"  [emit] {name}: {len(in_specs)} in / {len(out_specs)} out, "
+          f"{len(text) / 1e6:.2f} MB hlo")
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders
+# ---------------------------------------------------------------------------
+
+
+def abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), jnp.asarray(x).dtype), tree
+    )
+
+
+def build_train(out_dir, preset: Preset, variant: str, force):
+    mc = preset.model
+    lc = variant_cfg(variant, mc.embed_dim)
+    step = M.make_train_step(mc, lc, OPT)
+    params = M.init_params(jax.random.PRNGKey(0), mc, input_shape(preset))
+    opt_state = M.init_opt_state(params)
+    n = preset.batch
+    x_shape = (n, *input_shape(preset))
+    xa = jnp.zeros(x_shape, jnp.float32)
+    perm = jnp.arange(mc.embed_dim, dtype=jnp.int32)
+    lr = jnp.zeros((), jnp.float32)
+    meta = {
+        "kind": "train_step",
+        "preset": preset.name,
+        "variant": variant,
+        "d": mc.embed_dim,
+        "n": n,
+        "block": lc.block,
+        "q": lc.q,
+        "backbone": mc.backbone,
+        "image": list(input_shape(preset)),
+    }
+    emit(
+        out_dir,
+        f"train_{variant}_{preset.name}",
+        step,
+        (abstract(params), abstract(opt_state), xa, xa, perm, lr),
+        ["params", "opt_state", "xa", "xb", "perm", "lr"],
+        ["params", "opt_state", "loss", "inv", "reg"],
+        meta,
+        force,
+    )
+
+
+def write_checkpoint(path, named_tensors):
+    """decorr checkpoint format (shared with rust/src/coordinator/checkpoint.rs):
+
+    line 1: ``DECORRCKPT1``
+    line 2: JSON header ``{"tensors": [{"name", "shape", "dtype"}, ...]}``
+    rest:   concatenated little-endian payloads in header order.
+    """
+    header = {
+        "tensors": [
+            {"name": n, "shape": list(np.shape(t)), "dtype": "f32"}
+            for n, t in named_tensors
+        ]
+    }
+    with open(path, "wb") as f:
+        f.write(b"DECORRCKPT1\n")
+        f.write((json.dumps(header, sort_keys=True) + "\n").encode())
+        for _, t in named_tensors:
+            f.write(np.asarray(t, dtype="<f4").tobytes())
+
+
+def build_init(out_dir, preset: Preset, seed, force):
+    """Emit the initial parameter values (jax He init) as a checkpoint the
+    rust trainer loads; parameter names match the train manifest's
+    ``params.*`` inputs."""
+    path = os.path.join(out_dir, f"init_{preset.name}.ckpt")
+    if not force and os.path.exists(path):
+        print(f"  [skip] init_{preset.name}.ckpt (exists)")
+        return
+    mc = preset.model
+    params = M.init_params(jax.random.PRNGKey(seed), mc, input_shape(preset))
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    named = [(_path_str("params", p), np.asarray(v)) for p, v in leaves]
+    write_checkpoint(path, named)
+    total = sum(int(np.prod(np.shape(v))) for _, v in named)
+    print(f"  [emit] init_{preset.name}.ckpt: {len(named)} tensors, {total / 1e6:.2f} M params")
+
+
+def build_embed(out_dir, preset: Preset, force):
+    mc = preset.model
+    fn = M.make_embed(mc)
+    params = M.init_params(jax.random.PRNGKey(0), mc, input_shape(preset))
+    x = jnp.zeros((preset.batch, *input_shape(preset)), jnp.float32)
+    meta = {
+        "kind": "embed",
+        "preset": preset.name,
+        "repr_dim": mc.repr_dim,
+        "n": preset.batch,
+        "image": list(input_shape(preset)),
+    }
+    emit(
+        out_dir,
+        f"embed_{preset.name}",
+        fn,
+        (abstract(params), x),
+        ["params", "x"],
+        ["repr"],
+        meta,
+        force,
+    )
+
+
+def build_project(out_dir, preset: Preset, force):
+    mc = preset.model
+    fn = M.make_project(mc)
+    params = M.init_params(jax.random.PRNGKey(0), mc, input_shape(preset))
+    x = jnp.zeros((preset.batch, *input_shape(preset)), jnp.float32)
+    meta = {
+        "kind": "project",
+        "preset": preset.name,
+        "d": mc.embed_dim,
+        "n": preset.batch,
+        "image": list(input_shape(preset)),
+    }
+    emit(
+        out_dir,
+        f"project_{preset.name}",
+        fn,
+        (abstract(params), x),
+        ["params", "x"],
+        ["z"],
+        meta,
+        force,
+    )
+
+
+def build_grad_step(out_dir, preset: Preset, variant: str, shards: int, force):
+    """Per-shard gradient computation for the simulated-DDP coordinator
+    (paper App. E.3): (params, xa, xb, perm) → (grads, loss, inv, reg).
+    The shard batch is n/shards; the proposed losses need no cross-shard
+    statistics (the paper's "no collective operations" property), so
+    shard gradients simply average."""
+    mc = preset.model
+    lc = variant_cfg(variant, mc.embed_dim)
+    n = preset.batch // shards
+    assert n * shards == preset.batch, "shards must divide the preset batch"
+
+    def grad_fn(params, xa, xb, perm):
+        def objective(p):
+            za = M.embed(p, xa, mc)
+            zb = M.embed(p, xb, mc)
+            return M.loss_fn(za, zb, perm, lc)
+
+        (loss, metrics), grads = jax.value_and_grad(objective, has_aux=True)(params)
+        return grads, loss, metrics["inv"], metrics["reg"]
+
+    params = M.init_params(jax.random.PRNGKey(0), mc, input_shape(preset))
+    xa = jnp.zeros((n, *input_shape(preset)), jnp.float32)
+    perm = jnp.arange(mc.embed_dim, dtype=jnp.int32)
+    meta = {
+        "kind": "grad_step",
+        "preset": preset.name,
+        "variant": variant,
+        "d": mc.embed_dim,
+        "n": n,
+        "shards": shards,
+        "image": list(input_shape(preset)),
+    }
+    emit(
+        out_dir,
+        f"grad_{variant}_{preset.name}_s{shards}",
+        grad_fn,
+        (abstract(params), xa, xa, perm),
+        ["params", "xa", "xb", "perm"],
+        ["grads", "loss", "inv", "reg"],
+        meta,
+        force,
+    )
+
+
+def build_train_multi(out_dir, preset: Preset, variant: str, unroll: int, force):
+    """Multi-step train artifact (§Perf L2/L3): `unroll` optimizer steps
+    fused into one executable via lax.scan over stacked batches. Amortizes
+    the per-dispatch costs of the single-step path (host↔device literal
+    copies of the full parameter set, tuple decomposition, PJRT dispatch)
+    by the unroll factor — the dominant overhead when the model is small
+    and the loss node is the workload."""
+    mc = preset.model
+    lc = variant_cfg(variant, mc.embed_dim)
+    n = preset.batch
+
+    def multi_step(params, opt_state, xas, xbs, perms, lrs):
+        def body(carry, inputs):
+            p, o = carry
+            xa, xb, perm, lr = inputs
+
+            def objective(pp):
+                za = M.embed(pp, xa, mc)
+                zb = M.embed(pp, xb, mc)
+                return M.loss_fn(za, zb, perm, lc)
+
+            (loss, _metrics), grads = jax.value_and_grad(objective, has_aux=True)(p)
+            p2, o2 = M.opt_update(p, grads, o, lr, OPT)
+            return (p2, o2), loss
+
+        (p_final, o_final), losses = jax.lax.scan(
+            body, (params, opt_state), (xas, xbs, perms, lrs)
+        )
+        return p_final, o_final, losses
+
+    params = M.init_params(jax.random.PRNGKey(0), mc, input_shape(preset))
+    opt_state = M.init_opt_state(params)
+    xas = jnp.zeros((unroll, n, *input_shape(preset)), jnp.float32)
+    perms = jnp.zeros((unroll, mc.embed_dim), jnp.int32)
+    lrs = jnp.zeros((unroll,), jnp.float32)
+    meta = {
+        "kind": "train_multi",
+        "preset": preset.name,
+        "variant": variant,
+        "d": mc.embed_dim,
+        "n": n,
+        "unroll": unroll,
+        "image": list(input_shape(preset)),
+    }
+    emit(
+        out_dir,
+        f"trainmulti_{variant}_{preset.name}_k{unroll}",
+        multi_step,
+        (abstract(params), abstract(opt_state), xas, xas, perms, lrs),
+        ["params", "opt_state", "xas", "xbs", "perms", "lrs"],
+        ["params", "opt_state", "losses"],
+        meta,
+        force,
+    )
+
+
+def build_apply(out_dir, preset: Preset, force):
+    """Optimizer application for the DDP coordinator:
+    (params, opt_state, grads, lr) → (params', opt_state')."""
+    mc = preset.model
+
+    def apply_fn(params, opt_state, grads, lr):
+        return M.opt_update(params, grads, opt_state, lr, OPT)
+
+    params = M.init_params(jax.random.PRNGKey(0), mc, input_shape(preset))
+    opt_state = M.init_opt_state(params)
+    lr = jnp.zeros((), jnp.float32)
+    meta = {"kind": "apply", "preset": preset.name}
+    emit(
+        out_dir,
+        f"apply_{preset.name}",
+        apply_fn,
+        (abstract(params), abstract(opt_state), abstract(params), lr),
+        ["params", "opt_state", "grads", "lr"],
+        ["params", "opt_state"],
+        meta,
+        force,
+    )
+
+
+def build_loss_only(out_dir, variant: str, d: int, n: int, force, with_grad=False, pallas=False):
+    lc = variant_cfg(variant, d, use_pallas=pallas)
+    fn = M.make_loss_grad(lc) if with_grad else M.make_loss_only(lc)
+    za = jnp.zeros((n, d), jnp.float32)
+    perm = jnp.arange(d, dtype=jnp.int32)
+    kind = ("lossgrad" if with_grad else "loss") + ("_pl" if pallas else "")
+    meta = {
+        "kind": kind,
+        "variant": variant,
+        "d": d,
+        "n": n,
+        "block": lc.block,
+        "q": lc.q,
+        "pallas": pallas,
+    }
+    out_names = ["loss", "grad_za", "grad_zb"] if with_grad else ["loss"]
+    emit(
+        out_dir,
+        f"{kind}_{variant}_d{d}_n{n}",
+        fn,
+        (za, za, perm),
+        ["za", "zb", "perm"],
+        out_names,
+        meta,
+        force,
+    )
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small,e2e")
+    ap.add_argument("--variants", default=",".join(VARIANTS))
+    ap.add_argument(
+        "--bench-dims",
+        default="256,512,1024,2048,4096",
+        help="embedding dims for the loss-only Fig. 2 sweep",
+    )
+    ap.add_argument("--bench-n", type=int, default=128)
+    ap.add_argument(
+        "--bench-variants",
+        default="bt_off,bt_sum,bt_sum_g128,vic_off,vic_sum",
+        help="variants included in the loss-only sweep",
+    )
+    ap.add_argument(
+        "--fig3-blocks",
+        default="8,32,128,512,2048",
+        help="block sizes for the Fig. 3 grouping sweep (at d=2048)",
+    )
+    ap.add_argument("--skip-bench", action="store_true")
+    ap.add_argument("--skip-train", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    presets = [PRESETS[p] for p in args.presets.split(",") if p]
+    variants = [v for v in args.variants.split(",") if v]
+
+    if not args.skip_train:
+        for preset in presets:
+            print(f"preset {preset.name}:")
+            build_init(args.out_dir, preset, seed=0, force=args.force)
+            build_embed(args.out_dir, preset, args.force)
+            build_project(args.out_dir, preset, args.force)
+            for variant in variants:
+                build_train(args.out_dir, preset, variant, args.force)
+
+    if not args.skip_bench:
+        print("bench sweep:")
+        dims = [int(d) for d in args.bench_dims.split(",") if d]
+        for variant in [v for v in args.bench_variants.split(",") if v]:
+            for d in dims:
+                build_loss_only(args.out_dir, variant, d, args.bench_n, args.force)
+                build_loss_only(
+                    args.out_dir, variant, d, args.bench_n, args.force, with_grad=True
+                )
+        # Fig. 3 block-size sweep: R_sum^(b) at fixed d across b values
+        # (b == d is the ungrouped R_sum; b == 1 ≡ R_off is covered by the
+        # bt_off artifact above).
+        fig3_d = 2048
+        for b in [int(x) for x in args.fig3_blocks.split(",") if x]:
+            build_loss_only(args.out_dir, f"bt_sum_g{b}", fig3_d, args.bench_n, args.force)
+            build_loss_only(
+                args.out_dir, f"bt_sum_g{b}", fig3_d, args.bench_n, args.force,
+                with_grad=True,
+            )
+        # Pallas-lowered probe artifacts: the L1 kernels compiled into HLO,
+        # used by the rust suite for native-vs-Pallas numerical equality
+        # and by the kernel-form ablation bench.
+        for variant in ["bt_off", "bt_sum", "bt_sum_g128", "vic_sum"]:
+            build_loss_only(
+                args.out_dir, variant, 512, args.bench_n, args.force, pallas=True
+            )
+
+    if not args.skip_train:
+        small = PRESETS["small"]
+        # Simulated-DDP artifacts (App. E.3): per-shard grads + apply.
+        build_apply(args.out_dir, small, args.force)
+        for variant in ["bt_off", "bt_sum"]:
+            for shards in [1, 2, 4]:
+                build_grad_step(args.out_dir, small, variant, shards, args.force)
+        # q-exponent ablation artifacts (App. E.1 / Tab. 11).
+        for variant in ["bt_sum_q1", "vic_sum_q2", "bt_sum_g128_q1", "vic_sum_g128_q2"]:
+            build_train(args.out_dir, small, variant, args.force)
+        # Multi-step fused train artifacts (§Perf): scan-unrolled steps.
+        for k in [4, 16]:
+            build_train_multi(args.out_dir, PRESETS["tiny"], "bt_sum", k, args.force)
+
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

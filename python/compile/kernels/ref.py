@@ -1,0 +1,134 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels and L2 losses.
+
+Every quantity in the paper has a direct, readable implementation here:
+
+* ``crosscorr_ref``      — C(A, B) = A^T B / norm                    (§3)
+* ``covariance_ref``     — K(A) with column centering                (§3)
+* ``r_off_ref``          — Eq. (2), sum of squared off-diagonals
+* ``r_var_ref``          — Eq. (4), variance hinge
+* ``sumvec_explicit``    — Eq. (5), wrap-diagonal sums of a matrix
+* ``sumvec_fft_ref``     — Eq. (12), the FFT path (no Pallas)
+* ``r_sum_ref``          — Eq. (6)
+* ``r_sum_grouped_ref``  — Eq. (13), block-grouped variant
+* ``offdiag_sq_ref``     — same reduction the offdiag Pallas kernel does
+
+The pytest suites assert the Pallas kernels (``sumvec.py``) and the lowered
+L2 losses (``model.py``) against these, element-for-element.
+"""
+
+import jax.numpy as jnp
+
+
+def standardize(z, eps=1e-5):
+    """Column-standardize a batch: zero mean, unit std per feature.
+
+    Mirrors ``batch_normalization`` in the paper's Listing 1 (the
+    preprocessing before the cross-correlation regularizer).
+    """
+    mean = z.mean(axis=0, keepdims=True)
+    std = z.std(axis=0, keepdims=True)
+    return (z - mean) / jnp.maximum(std, eps)
+
+
+def crosscorr_ref(za, zb, norm):
+    """Cross-correlation matrix C = za^T zb / norm (inputs standardized)."""
+    return (za.T @ zb) / norm
+
+
+def covariance_ref(z):
+    """Covariance matrix K = centered(z)^T centered(z) / (n - 1)."""
+    n = z.shape[0]
+    zc = z - z.mean(axis=0, keepdims=True)
+    return (zc.T @ zc) / max(n - 1, 1)
+
+
+def r_off_ref(m):
+    """Eq. (2): sum of squared off-diagonal elements."""
+    d = m.shape[0]
+    mask = 1.0 - jnp.eye(d, dtype=m.dtype)
+    return jnp.sum((m * mask) ** 2)
+
+
+def r_var_ref(m, gamma=1.0, eps=1e-8):
+    """Eq. (4): sum_i max(0, gamma - sqrt(M_ii))."""
+    diag = jnp.clip(jnp.diag(m), 0.0, None)
+    return jnp.sum(jnp.maximum(0.0, gamma - jnp.sqrt(diag + eps)))
+
+
+def sumvec_explicit(m):
+    """Eq. (5): sumvec(M)_i = sum_j M[j, (i+j) mod d], via explicit rolls.
+
+    O(d^2) — the oracle for the FFT path.
+    """
+    d = m.shape[0]
+    rows = [jnp.trace(jnp.roll(m, shift=-i, axis=1)) for i in range(d)]
+    return jnp.stack(rows)
+
+
+def sumvec_fft_ref(za, zb, norm):
+    """Eq. (12): sumvec(C) = irfft( sum_k conj(rfft(a_k)) * rfft(b_k) ) / norm.
+
+    Pure-jnp (no Pallas) — validates both the algebra (against
+    ``sumvec_explicit``) and the Pallas kernel (against this).
+    """
+    d = za.shape[1]
+    fa = jnp.fft.rfft(za, axis=1)
+    fb = jnp.fft.rfft(zb, axis=1)
+    acc = jnp.sum(jnp.conj(fa) * fb, axis=0)
+    return jnp.fft.irfft(acc, n=d, axis=0) / norm
+
+
+def r_sum_ref(sumvec, q):
+    """Eq. (6): all-but-zeroth components of sumvec under the q-norm."""
+    tail = sumvec[1:]
+    if q == 1:
+        return jnp.sum(jnp.abs(tail))
+    return jnp.sum(tail**2)
+
+
+def group_pad(z, block):
+    """Split features into ceil(d/block) groups of size `block`, zero-padding
+    the ragged last group (paper §4.4 footnote 4). Returns (n, G, block)."""
+    n, d = z.shape
+    groups = -(-d // block)
+    pad = groups * block - d
+    if pad:
+        z = jnp.pad(z, ((0, 0), (0, pad)))
+    return z.reshape(n, groups, block)
+
+
+def sumvec_grouped_fft_ref(za, zb, block, norm):
+    """Per-block-pair summary vectors via FFT: (G, G, block) tensor where
+    entry [gi, gj] is sumvec(C_{gi,gj})."""
+    ga = group_pad(za, block)  # (n, G, b)
+    gb = group_pad(zb, block)
+    fa = jnp.fft.rfft(ga, axis=2)  # (n, G, b//2+1)
+    fb = jnp.fft.rfft(gb, axis=2)
+    # acc[gi, gj] = sum_k conj(fa[k, gi]) * fb[k, gj]
+    acc = jnp.einsum("kif,kjf->ijf", jnp.conj(fa), fb)
+    return jnp.fft.irfft(acc, n=block, axis=2) / norm
+
+
+def r_sum_grouped_ref(za, zb, block, q, norm):
+    """Eq. (13): diagonal blocks skip their zeroth (trace) component,
+    off-diagonal blocks keep all components."""
+    sv = sumvec_grouped_fft_ref(za, zb, block, norm)  # (G, G, b)
+    groups = sv.shape[0]
+    absq = jnp.abs(sv) if q == 1 else sv**2
+    # mask[gi, gj, c] = 0 iff gi == gj and c == 0
+    eye = jnp.eye(groups, dtype=sv.dtype)
+    comp0 = jnp.zeros(sv.shape[2], dtype=sv.dtype).at[0].set(1.0)
+    mask = 1.0 - eye[:, :, None] * comp0[None, None, :]
+    return jnp.sum(absq * mask)
+
+
+def offdiag_sq_ref(m):
+    """Same as r_off_ref — named for symmetry with the Pallas kernel."""
+    return r_off_ref(m)
+
+
+def diag_invariance_ref(za, zb, norm):
+    """First term of Eq. (1) computed in O(nd): sum_i (1 - C_ii)^2 where
+    C_ii = sum_k za[k,i] zb[k,i] / norm."""
+    diag = jnp.sum(za * zb, axis=0) / norm
+    return jnp.sum((1.0 - diag) ** 2)

@@ -1,0 +1,410 @@
+"""L1 Pallas kernels for the FFT decorrelation regularizer.
+
+TPU-shaped thinking (see DESIGN.md §Hardware-Adaptation): the paper's CUDA
+implementation leans on cuFFT plus pointwise torch ops. On TPU the FFT
+itself maps to the XLA ``fft`` op; what deserves a hand-written kernel is
+
+* ``spectral_reduce``          — the O(n·d) conj-multiply + batch-reduction
+  between the forward and inverse FFTs of Eq. (12). VPU-shaped elementwise
+  work, tiled so each (n × block_f) tile of the four real/imag planes sits
+  in VMEM (TPU has no complex registers, so spectra travel as separate
+  real/imag f32 arrays).
+* ``grouped_spectral_reduce``  — the same reduction with a leading group
+  axis for the R_sum^(b) regularizer of Eq. (13); the d/b groups become a
+  grid dimension.
+* ``crosscorr``                — the baseline's Z_aᵀ·Z_b matmul, MXU-tiled
+  (128×128 output blocks, accumulated over batch tiles). This is the
+  O(n·d²) contender the paper's Fig. 2 compares against.
+* ``offdiag_sq``               — R_off's masked reduction over the d×d
+  matrix, accumulated across grid steps into a scalar.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is both the correctness path and the
+form that lowers into the AOT HLO artifacts. Block shapes are still chosen
+as if for real VMEM (defaults keep every kernel under ~4 MiB of VMEM); the
+structural analysis lives in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM-conscious defaults (f32 elements).
+DEFAULT_BLOCK_F = 512  # frequency-bin tile for the spectral reduction
+DEFAULT_BLOCK_M = 128  # MXU-aligned output tile (rows)
+DEFAULT_BLOCK_N = 128  # MXU-aligned output tile (cols)
+DEFAULT_BLOCK_K = 128  # batch accumulation tile
+
+
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
+def _pad_axis(x, axis, multiple):
+    """Zero-pad ``axis`` of ``x`` up to a multiple of ``multiple``."""
+    size = x.shape[axis]
+    target = _ceil_div(size, multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads)
+
+
+# ---------------------------------------------------------------------------
+# spectral_reduce: acc[f] = sum_k conj(fa[k, f]) * fb[k, f]
+# ---------------------------------------------------------------------------
+
+
+def _spectral_reduce_kernel(ar_ref, ai_ref, br_ref, bi_ref, or_ref, oi_ref):
+    """One frequency tile: complex conj-multiply, reduce over the batch.
+
+    conj(a) * b = (ar·br + ai·bi) + i·(ar·bi − ai·br)
+    """
+    ar = ar_ref[...]
+    ai = ai_ref[...]
+    br = br_ref[...]
+    bi = bi_ref[...]
+    or_ref[...] = jnp.sum(ar * br + ai * bi, axis=0)
+    oi_ref[...] = jnp.sum(ar * bi - ai * br, axis=0)
+
+
+def _spectral_reduce_raw(fa_re, fa_im, fb_re, fb_im, block_f):
+    """Unwrapped Pallas call (forward only)."""
+    n, f = fa_re.shape
+    bf = min(block_f, f)
+    inputs = [_pad_axis(x, 1, bf) for x in (fa_re, fa_im, fb_re, fb_im)]
+    fp = inputs[0].shape[1]
+    grid = (fp // bf,)
+    in_spec = pl.BlockSpec((n, bf), lambda i: (0, i))
+    out_spec = pl.BlockSpec((bf,), lambda i: (i,))
+    acc_re, acc_im = pl.pallas_call(
+        _spectral_reduce_kernel,
+        grid=grid,
+        in_specs=[in_spec] * 4,
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((fp,), fa_re.dtype),
+            jax.ShapeDtypeStruct((fp,), fa_re.dtype),
+        ],
+        interpret=True,
+    )(*inputs)
+    return acc_re[:f], acc_im[:f]
+
+
+@functools.lru_cache(maxsize=None)
+def _spectral_reduce_vjp(block_f):
+    """custom_vjp wrapper per block size.
+
+    Pallas kernels that accumulate across grid steps are not
+    auto-differentiable; the reduction is bilinear, so the adjoints are
+    closed-form pointwise products (which XLA fuses on the backward pass —
+    matching the paper's observation that backward cost tracks forward
+    cost through the loss node).
+    """
+
+    @jax.custom_vjp
+    def f(ar, ai, br, bi):
+        return _spectral_reduce_raw(ar, ai, br, bi, block_f)
+
+    def fwd(ar, ai, br, bi):
+        return f(ar, ai, br, bi), (ar, ai, br, bi)
+
+    def bwd(res, g):
+        ar, ai, br, bi = res
+        gr, gi = g  # cotangents of (acc_re, acc_im), shape (F,)
+        gr = gr[None, :]
+        gi = gi[None, :]
+        d_ar = br * gr + bi * gi
+        d_ai = bi * gr - br * gi
+        d_br = ar * gr - ai * gi
+        d_bi = ai * gr + ar * gi
+        return d_ar, d_ai, d_br, d_bi
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "use_pallas"))
+def spectral_reduce(fa_re, fa_im, fb_re, fb_im, *, block_f=DEFAULT_BLOCK_F, use_pallas=True):
+    """Batch-reduced complex conjugate product, the hot loop of Eq. (12).
+
+    Args:
+      fa_re, fa_im: real/imag planes of rfft(A), shape (n, F).
+      fb_re, fb_im: real/imag planes of rfft(B), shape (n, F).
+      block_f: frequency tile width (VMEM sizing knob).
+      use_pallas: fall back to pure jnp when False (oracle path).
+
+    Returns:
+      (acc_re, acc_im), each of shape (F,): sum_k conj(fa_k) ∘ fb_k.
+    """
+    if not use_pallas:
+        acc_re = jnp.sum(fa_re * fb_re + fa_im * fb_im, axis=0)
+        acc_im = jnp.sum(fa_re * fb_im - fa_im * fb_re, axis=0)
+        return acc_re, acc_im
+    return _spectral_reduce_vjp(block_f)(fa_re, fa_im, fb_re, fb_im)
+
+
+def sumvec_pallas(za, zb, norm, *, block_f=DEFAULT_BLOCK_F, use_pallas=True):
+    """Full Eq. (12) pipeline: rfft → Pallas spectral reduction → irfft.
+
+    The FFTs lower to the XLA ``fft`` op (vendor FFT on TPU, DUCC on CPU);
+    the reduction between them is the Pallas kernel.
+    """
+    d = za.shape[1]
+    fa = jnp.fft.rfft(za, axis=1)
+    fb = jnp.fft.rfft(zb, axis=1)
+    acc_re, acc_im = spectral_reduce(
+        jnp.real(fa), jnp.imag(fa), jnp.real(fb), jnp.imag(fb),
+        block_f=block_f, use_pallas=use_pallas,
+    )
+    acc = jax.lax.complex(acc_re, acc_im)
+    return jnp.fft.irfft(acc, n=d, axis=0) / norm
+
+
+# ---------------------------------------------------------------------------
+# grouped_spectral_reduce: acc[gi, gj, f] = sum_k conj(fa[k, gi, f]) fb[k, gj, f]
+# ---------------------------------------------------------------------------
+
+
+def _grouped_spectral_reduce_kernel(ar_ref, ai_ref, br_ref, bi_ref, or_ref, oi_ref):
+    """One (gi, gj) block pair: conj-multiply, reduce over batch axis 0.
+
+    Block shapes: a* (n, 1, F), b* (n, 1, F), o* (1, 1, F).
+    """
+    ar = ar_ref[...]
+    ai = ai_ref[...]
+    br = br_ref[...]
+    bi = bi_ref[...]
+    or_ref[...] = jnp.sum(ar * br + ai * bi, axis=0)[None, ...]
+    oi_ref[...] = jnp.sum(ar * bi - ai * br, axis=0)[None, ...]
+
+
+def _grouped_spectral_reduce_raw(fa_re, fa_im, fb_re, fb_im):
+    n, g, f = fa_re.shape
+    grid = (g, g)
+    a_spec = pl.BlockSpec((n, 1, f), lambda gi, gj: (0, gi, 0))
+    b_spec = pl.BlockSpec((n, 1, f), lambda gi, gj: (0, gj, 0))
+    o_spec = pl.BlockSpec((1, 1, f), lambda gi, gj: (gi, gj, 0))
+    acc_re, acc_im = pl.pallas_call(
+        _grouped_spectral_reduce_kernel,
+        grid=grid,
+        in_specs=[a_spec, a_spec, b_spec, b_spec],
+        out_specs=[o_spec, o_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, g, f), fa_re.dtype),
+            jax.ShapeDtypeStruct((g, g, f), fa_re.dtype),
+        ],
+        interpret=True,
+    )(fa_re, fa_im, fb_re, fb_im)
+    return acc_re, acc_im
+
+
+@jax.custom_vjp
+def _grouped_spectral_reduce_vjp(fa_re, fa_im, fb_re, fb_im):
+    return _grouped_spectral_reduce_raw(fa_re, fa_im, fb_re, fb_im)
+
+
+def _grouped_fwd(ar, ai, br, bi):
+    return _grouped_spectral_reduce_vjp(ar, ai, br, bi), (ar, ai, br, bi)
+
+
+def _grouped_bwd(res, g):
+    # or[i,j,f] = Σ_k ar[k,i,f]·br[k,j,f] + ai[k,i,f]·bi[k,j,f]
+    # oi[i,j,f] = Σ_k ar[k,i,f]·bi[k,j,f] − ai[k,i,f]·br[k,j,f]
+    ar, ai, br, bi = res
+    gr, gi = g  # (G, G, F)
+    d_ar = jnp.einsum("kjf,ijf->kif", br, gr) + jnp.einsum("kjf,ijf->kif", bi, gi)
+    d_ai = jnp.einsum("kjf,ijf->kif", bi, gr) - jnp.einsum("kjf,ijf->kif", br, gi)
+    d_br = jnp.einsum("kif,ijf->kjf", ar, gr) - jnp.einsum("kif,ijf->kjf", ai, gi)
+    d_bi = jnp.einsum("kif,ijf->kjf", ai, gr) + jnp.einsum("kif,ijf->kjf", ar, gi)
+    return d_ar, d_ai, d_br, d_bi
+
+
+_grouped_spectral_reduce_vjp.defvjp(_grouped_fwd, _grouped_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def grouped_spectral_reduce(fa_re, fa_im, fb_re, fb_im, *, use_pallas=True):
+    """Grouped conj-multiply-reduce for R_sum^(b) (Eq. 13).
+
+    Args:
+      fa_*: rfft planes of the grouped view A, shape (n, G, F).
+      fb_*: rfft planes of the grouped view B, shape (n, G, F).
+
+    Returns:
+      (acc_re, acc_im), each (G, G, F): entry [gi, gj] is the spectral
+      accumulator of block C_{gi,gj}.
+    """
+    if not use_pallas:
+        acc_re = jnp.einsum("kif,kjf->ijf", fa_re, fb_re) + jnp.einsum(
+            "kif,kjf->ijf", fa_im, fb_im
+        )
+        acc_im = jnp.einsum("kif,kjf->ijf", fa_re, fb_im) - jnp.einsum(
+            "kif,kjf->ijf", fa_im, fb_re
+        )
+        return acc_re, acc_im
+    return _grouped_spectral_reduce_vjp(fa_re, fa_im, fb_re, fb_im)
+
+
+# ---------------------------------------------------------------------------
+# crosscorr: C = za^T zb / norm — the baseline O(n d^2) path, MXU-tiled
+# ---------------------------------------------------------------------------
+
+
+def _crosscorr_kernel(a_ref, b_ref, o_ref):
+    """One (bm × bn) output tile, accumulated over the batch grid axis.
+
+    a block: (bk, bm); b block: (bk, bn); o block: (bm, bn), revisited
+    across grid axis 2 (the batch/contraction axis).
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[...] += jax.lax.dot_general(
+        a, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def _crosscorr_raw(za, zb, block_m, block_n, block_k):
+    n, d = za.shape
+    bm = min(block_m, d)
+    bn = min(block_n, d)
+    bk = min(block_k, n)
+    za_p = _pad_axis(_pad_axis(za, 1, bm), 0, bk)
+    zb_p = _pad_axis(_pad_axis(zb, 1, bn), 0, bk)
+    npad, dpa = za_p.shape
+    dpb = zb_p.shape[1]
+    grid = (dpa // bm, dpb // bn, npad // bk)
+    out = pl.pallas_call(
+        _crosscorr_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((dpa, dpb), za.dtype),
+        interpret=True,
+    )(za_p, zb_p)
+    return out[:d, :d]
+
+
+@functools.lru_cache(maxsize=None)
+def _crosscorr_vjp(block_m, block_n, block_k):
+    """C = zaᵀ·zb is bilinear: the adjoints are two (n×d)·(d×d) matmuls."""
+
+    @jax.custom_vjp
+    def f(za, zb):
+        return _crosscorr_raw(za, zb, block_m, block_n, block_k)
+
+    def fwd(za, zb):
+        return f(za, zb), (za, zb)
+
+    def bwd(res, g):
+        za, zb = res
+        return zb @ g.T, za @ g
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "use_pallas")
+)
+def crosscorr(
+    za,
+    zb,
+    norm,
+    *,
+    block_m=DEFAULT_BLOCK_M,
+    block_n=DEFAULT_BLOCK_N,
+    block_k=DEFAULT_BLOCK_K,
+    use_pallas=True,
+):
+    """Cross-correlation matrix C = zaᵀ·zb / norm (inputs standardized).
+
+    The MXU-native formulation of the Barlow Twins / VICReg baseline: the
+    (d × d) output is tiled into (block_m × block_n) MXU tiles, contracted
+    over batch tiles of block_k rows.
+    """
+    if not use_pallas:
+        return (za.T @ zb) / norm
+    return _crosscorr_vjp(block_m, block_n, block_k)(za, zb) / norm
+
+
+# ---------------------------------------------------------------------------
+# offdiag_sq: R_off(M) = sum of squared off-diagonal elements
+# ---------------------------------------------------------------------------
+
+
+def _offdiag_sq_kernel(m_ref, o_ref, *, block_m, block_n):
+    """Partial sum of squared off-diagonal entries of one (bm × bn) tile,
+    accumulated into the (1, 1) scalar output across the whole grid."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    m = m_ref[...]
+    rows = i * block_m + jax.lax.broadcasted_iota(jnp.int32, m.shape, 0)
+    cols = j * block_n + jax.lax.broadcasted_iota(jnp.int32, m.shape, 1)
+    mask = (rows != cols).astype(m.dtype)
+    o_ref[...] += jnp.sum((m * mask) ** 2)[None, None]
+
+
+def _offdiag_sq_raw(m, block_m, block_n):
+    d0, d1 = m.shape
+    bm = min(block_m, d0)
+    bn = min(block_n, d1)
+    mp = _pad_axis(_pad_axis(m, 0, bm), 1, bn)
+    grid = (mp.shape[0] // bm, mp.shape[1] // bn)
+    kernel = functools.partial(_offdiag_sq_kernel, block_m=bm, block_n=bn)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), m.dtype),
+        interpret=True,
+    )(mp)
+    return out[0, 0]
+
+
+@functools.lru_cache(maxsize=None)
+def _offdiag_sq_vjp(block_m, block_n):
+    """∂/∂M Σ_{i≠j} M_ij² = 2·M ⊙ (1 − I)."""
+
+    @jax.custom_vjp
+    def f(m):
+        return _offdiag_sq_raw(m, block_m, block_n)
+
+    def fwd(m):
+        return f(m), m
+
+    def bwd(m, g):
+        d = m.shape[0]
+        mask = 1.0 - jnp.eye(d, dtype=m.dtype)
+        return (2.0 * g * m * mask,)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "use_pallas"))
+def offdiag_sq(
+    m, *, block_m=DEFAULT_BLOCK_M, block_n=DEFAULT_BLOCK_N, use_pallas=True
+):
+    """R_off (Eq. 2) as a masked tiled reduction over a d×d matrix."""
+    if not use_pallas:
+        d = m.shape[0]
+        mask = 1.0 - jnp.eye(d, dtype=m.dtype)
+        return jnp.sum((m * mask) ** 2)
+    return _offdiag_sq_vjp(block_m, block_n)(m)

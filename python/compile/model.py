@@ -1,0 +1,459 @@
+"""L2: the JAX SSL model — backbone, projector, losses, optimizer, AOT steps.
+
+This is the build-time compute-graph layer. Everything here is lowered once
+by ``aot.py`` into HLO-text artifacts; Python never runs on the training
+path (the rust coordinator executes the artifacts via PJRT).
+
+Components
+----------
+* ``SmallConvNet`` / ``MlpBackbone`` — CPU-scale stand-ins for the paper's
+  ResNet-18/50 (the loss-node claims are backbone-agnostic; DESIGN.md
+  documents the substitution).
+* ``projector``   — BT/VICReg-style MLP head producing d-dim embeddings.
+* Loss family     — ``bt_off`` (orig. Barlow Twins, Eq. 1), ``vic_off``
+  (orig. VICReg, Eq. 3), ``bt_sum`` / ``vic_sum`` (the proposed FFT
+  regularizers, Eqs. 14/15), each with optional feature grouping (Eq. 13)
+  and the per-batch feature permutation of §4.3.
+* Optimizers      — SGD+momentum and LARS (the paper trains with LARS).
+* ``make_train_step`` — one optimizer step (fwd + bwd + update) as a pure
+  function ``(params, opt_state, xa, xb, perm, lr) -> (params', opt_state',
+  metrics)`` ready for AOT lowering.
+
+Dict keys are kept sorted-stable so jax's pytree flattening order (and
+hence the artifact manifest) is deterministic.
+"""
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels import sumvec as K
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Backbone + projector shape."""
+
+    backbone: str = "convnet"  # "convnet" | "mlp"
+    image_size: int = 32
+    channels: int = 3
+    widths: Tuple[int, ...] = (32, 64, 128, 256)  # conv channel plan
+    mlp_hidden: Tuple[int, ...] = (512, 512)  # mlp backbone plan
+    repr_dim: int = 256  # backbone output dim
+    proj_hidden: int = 1024
+    proj_layers: int = 3
+    embed_dim: int = 2048  # d — the projected embedding dim
+
+
+@dataclasses.dataclass(frozen=True)
+class LossConfig:
+    """Which regularizer family and its hyperparameters."""
+
+    variant: str = "bt_sum"  # bt_off | bt_sum | vic_off | vic_sum
+    block: int = 0  # feature-grouping block size; 0 = no grouping
+    q: int = 2  # L_q^q norm exponent for R_sum
+    lam: float = 2.0**-10  # λ (BT family)
+    alpha: float = 25.0  # α (VIC family invariance)
+    mu: float = 25.0  # μ (VIC family variance)
+    nu: float = 1.0  # ν (VIC family covariance)
+    gamma: float = 1.0  # target std in R_var
+    scale: float = 0.125  # overall loss scale
+    use_pallas: bool = True  # route hot loops through the Pallas kernels
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    """Optimizer selection; the paper uses LARS with SGD momentum."""
+
+    optimizer: str = "lars"  # "sgd" | "lars"
+    momentum: float = 0.9
+    weight_decay: float = 1e-4
+    trust_coef: float = 1e-3  # LARS trust coefficient (η)
+    clip_norm: float = 10.0  # global grad-norm clip; 0 disables
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+def _he_init(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def batchnorm(x, scale, bias, axes, eps=1e-5):
+    """Train-mode batch normalization over ``axes`` (no running stats —
+    SSL pretraining normalizes per batch, like the BT/VICReg reference)."""
+    mean = x.mean(axis=axes, keepdims=True)
+    var = x.var(axis=axes, keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xn * scale + bias
+
+
+def conv3x3(x, w):
+    """3×3 same-padding convolution, NHWC · HWIO."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Backbones
+# ---------------------------------------------------------------------------
+
+
+def init_convnet(key, cfg: ModelConfig) -> Dict[str, Any]:
+    """Conv(3×3)+BN+ReLU+pool stack ending in global average pooling, then a
+    linear map to ``repr_dim``. ~1–3 M params at the default widths."""
+    params = {}
+    c_in = cfg.channels
+    for i, c_out in enumerate(cfg.widths):
+        key, k1 = jax.random.split(key)
+        params[f"conv{i}_w"] = _he_init(k1, (3, 3, c_in, c_out), 9 * c_in)
+        params[f"conv{i}_bn_s"] = jnp.ones((c_out,), jnp.float32)
+        params[f"conv{i}_bn_b"] = jnp.zeros((c_out,), jnp.float32)
+        c_in = c_out
+    key, k1 = jax.random.split(key)
+    params["head_w"] = _he_init(k1, (c_in, cfg.repr_dim), c_in)
+    params["head_b"] = jnp.zeros((cfg.repr_dim,), jnp.float32)
+    return params
+
+
+def convnet_forward(params, x, cfg: ModelConfig):
+    """x: (n, H, W, C) → representation (n, repr_dim)."""
+    h = x
+    for i in range(len(cfg.widths)):
+        h = conv3x3(h, params[f"conv{i}_w"])
+        h = batchnorm(h, params[f"conv{i}_bn_s"], params[f"conv{i}_bn_b"], (0, 1, 2))
+        h = jax.nn.relu(h)
+        if i < len(cfg.widths) - 1:
+            h = maxpool2(h)
+    h = h.mean(axis=(1, 2))  # global average pool
+    return h @ params["head_w"] + params["head_b"]
+
+
+def init_mlp_backbone(key, cfg: ModelConfig, in_dim: int) -> Dict[str, Any]:
+    """Flat-input MLP backbone (benchmarks / tiny presets)."""
+    params = {}
+    dims = [in_dim, *cfg.mlp_hidden, cfg.repr_dim]
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k1 = jax.random.split(key)
+        params[f"fc{i}_w"] = _he_init(k1, (a, b), a)
+        params[f"fc{i}_b"] = jnp.zeros((b,), jnp.float32)
+    return params
+
+
+def mlp_backbone_forward(params, x, cfg: ModelConfig):
+    h = x.reshape(x.shape[0], -1)
+    n_layers = len(cfg.mlp_hidden) + 1
+    for i in range(n_layers):
+        h = h @ params[f"fc{i}_w"] + params[f"fc{i}_b"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Projector
+# ---------------------------------------------------------------------------
+
+
+def init_projector(key, cfg: ModelConfig) -> Dict[str, Any]:
+    """BT-style projector: (repr → h)·BN·ReLU ×(L−1), then h → d."""
+    params = {}
+    dims = [cfg.repr_dim] + [cfg.proj_hidden] * (cfg.proj_layers - 1) + [cfg.embed_dim]
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k1 = jax.random.split(key)
+        params[f"proj{i}_w"] = _he_init(k1, (a, b), a)
+        params[f"proj{i}_b"] = jnp.zeros((b,), jnp.float32)
+        if i < len(dims) - 2:
+            params[f"proj{i}_bn_s"] = jnp.ones((b,), jnp.float32)
+            params[f"proj{i}_bn_b"] = jnp.zeros((b,), jnp.float32)
+    return params
+
+
+def projector_forward(params, h, cfg: ModelConfig):
+    n_layers = cfg.proj_layers
+    for i in range(n_layers):
+        h = h @ params[f"proj{i}_w"] + params[f"proj{i}_b"]
+        if i < n_layers - 1:
+            h = batchnorm(h, params[f"proj{i}_bn_s"], params[f"proj{i}_bn_b"], (0,))
+            h = jax.nn.relu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig, in_shape) -> Dict[str, Any]:
+    """Initialize {'backbone': …, 'projector': …} for input shape
+    (H, W, C) (convnet) or (features,) (mlp)."""
+    kb, kp = jax.random.split(key)
+    if cfg.backbone == "convnet":
+        backbone = init_convnet(kb, cfg)
+    elif cfg.backbone == "mlp":
+        in_dim = 1
+        for s in in_shape:
+            in_dim *= s
+        backbone = init_mlp_backbone(kb, cfg, in_dim)
+    else:
+        raise ValueError(f"unknown backbone {cfg.backbone}")
+    return {"backbone": backbone, "projector": init_projector(kp, cfg)}
+
+
+def representation(params, x, cfg: ModelConfig):
+    """Backbone output (the features reused downstream)."""
+    if cfg.backbone == "convnet":
+        return convnet_forward(params["backbone"], x, cfg)
+    return mlp_backbone_forward(params["backbone"], x, cfg)
+
+
+def embed(params, x, cfg: ModelConfig):
+    """Projected embedding z = projector(backbone(x)) — the loss input."""
+    return projector_forward(params["projector"], representation(params, x, cfg), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Losses (operate on projected embeddings za, zb of shape (n, d))
+# ---------------------------------------------------------------------------
+
+
+def _permute(z, perm):
+    return jnp.take(z, perm, axis=1)
+
+
+def _r_sum_flat(za, zb, norm, q, use_pallas):
+    sv = (
+        K.sumvec_pallas(za, zb, norm)
+        if use_pallas
+        else ref.sumvec_fft_ref(za, zb, norm)
+    )
+    return ref.r_sum_ref(sv, q)
+
+
+def _r_sum_grouped(za, zb, block, norm, q, use_pallas):
+    ga = ref.group_pad(za, block)
+    gb = ref.group_pad(zb, block)
+    fa = jnp.fft.rfft(ga, axis=2)
+    fb = jnp.fft.rfft(gb, axis=2)
+    acc_re, acc_im = K.grouped_spectral_reduce(
+        jnp.real(fa), jnp.imag(fa), jnp.real(fb), jnp.imag(fb),
+        use_pallas=use_pallas,
+    )
+    sv = jnp.fft.irfft(jax.lax.complex(acc_re, acc_im), n=block, axis=2) / norm
+    groups = sv.shape[0]
+    absq = jnp.abs(sv) if q == 1 else sv**2
+    comp0 = jnp.zeros((sv.shape[2],), sv.dtype).at[0].set(1.0)
+    mask = 1.0 - jnp.eye(groups, dtype=sv.dtype)[:, :, None] * comp0[None, None, :]
+    return jnp.sum(absq * mask)
+
+
+def bt_loss(za, zb, perm, cfg: LossConfig):
+    """Barlow Twins-family loss (Eqs. 1/14). Returns (loss, metrics)."""
+    n = za.shape[0]
+    za = ref.standardize(za)
+    zb = ref.standardize(zb)
+    za = _permute(za, perm)
+    zb = _permute(zb, perm)
+    inv = ref.diag_invariance_ref(za, zb, float(n))
+    if cfg.variant == "bt_off":
+        c = (
+            K.crosscorr(za, zb, float(n))
+            if cfg.use_pallas
+            else ref.crosscorr_ref(za, zb, float(n))
+        )
+        reg = (
+            K.offdiag_sq(c) if cfg.use_pallas else ref.r_off_ref(c)
+        )
+    elif cfg.block > 0:
+        reg = _r_sum_grouped(za, zb, cfg.block, float(n), cfg.q, cfg.use_pallas)
+    else:
+        reg = _r_sum_flat(za, zb, float(n), cfg.q, cfg.use_pallas)
+    loss = cfg.scale * (inv + cfg.lam * reg)
+    return loss, {"inv": inv, "reg": reg}
+
+
+def vic_loss(za, zb, perm, cfg: LossConfig):
+    """VICReg-family loss (Eqs. 3/15). Returns (loss, metrics)."""
+    n = za.shape[0]
+    norm = float(max(n - 1, 1))
+    inv = jnp.sum((za - zb) ** 2) / n
+    za = _permute(za, perm)
+    zb = _permute(zb, perm)
+    ca = za - za.mean(axis=0, keepdims=True)
+    cb = zb - zb.mean(axis=0, keepdims=True)
+    var_a = jnp.sum(jnp.maximum(0.0, cfg.gamma - jnp.sqrt(jnp.mean(ca**2, axis=0) * n / norm + 1e-8)))
+    var_b = jnp.sum(jnp.maximum(0.0, cfg.gamma - jnp.sqrt(jnp.mean(cb**2, axis=0) * n / norm + 1e-8)))
+    if cfg.variant == "vic_off":
+        if cfg.use_pallas:
+            ka = K.crosscorr(ca, ca, norm)
+            kb = K.crosscorr(cb, cb, norm)
+            reg = K.offdiag_sq(ka) + K.offdiag_sq(kb)
+        else:
+            ka = ref.crosscorr_ref(ca, ca, norm)
+            kb = ref.crosscorr_ref(cb, cb, norm)
+            reg = ref.r_off_ref(ka) + ref.r_off_ref(kb)
+    elif cfg.block > 0:
+        reg = _r_sum_grouped(ca, ca, cfg.block, norm, cfg.q, cfg.use_pallas) + _r_sum_grouped(
+            cb, cb, cfg.block, norm, cfg.q, cfg.use_pallas
+        )
+    else:
+        reg = _r_sum_flat(ca, ca, norm, cfg.q, cfg.use_pallas) + _r_sum_flat(
+            cb, cb, norm, cfg.q, cfg.use_pallas
+        )
+    d = za.shape[1]
+    var = var_a + var_b
+    # Eq. (3)/(15): (α/n)·Σ‖a−b‖² + (μ/d)·(R_var A + R_var B) + (ν/d)·reg;
+    # `inv` already carries the 1/n.
+    loss = cfg.alpha * inv + cfg.mu / d * var + cfg.nu / d * reg
+    return loss, {"inv": inv, "reg": reg, "var": var}
+
+
+def loss_fn(za, zb, perm, cfg: LossConfig):
+    """Dispatch on the loss family."""
+    if cfg.variant.startswith("bt"):
+        return bt_loss(za, zb, perm, cfg)
+    if cfg.variant.startswith("vic"):
+        return vic_loss(za, zb, perm, cfg)
+    raise ValueError(f"unknown loss variant {cfg.variant}")
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+def init_opt_state(params):
+    """Momentum buffers, one per parameter leaf."""
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def _is_matrix(p):
+    return p.ndim >= 2
+
+
+def opt_update(params, grads, opt_state, lr, cfg: OptConfig):
+    """One SGD-momentum or LARS step. BN scales/biases (ndim < 2) are
+    excluded from weight decay and LARS adaptation, as is standard.
+    Gradients are globally norm-clipped first (the VIC loss can spike at
+    large d before the variance hinge settles)."""
+
+    if cfg.clip_norm > 0:
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g**2) for g in jax.tree_util.tree_leaves(grads)) + 1e-12
+        )
+        factor = jnp.minimum(1.0, cfg.clip_norm / gnorm)
+        grads = jax.tree_util.tree_map(lambda g: g * factor, grads)
+
+    def leaf(p, g, m):
+        wd = cfg.weight_decay if _is_matrix(p) else 0.0
+        g = g + wd * p
+        if cfg.optimizer == "lars" and _is_matrix(p):
+            p_norm = jnp.linalg.norm(p)
+            g_norm = jnp.linalg.norm(g)
+            trust = jnp.where(
+                (p_norm > 0.0) & (g_norm > 0.0),
+                cfg.trust_coef * p_norm / (g_norm + 1e-9),
+                1.0,
+            )
+            g = g * trust
+        m_new = cfg.momentum * m + g
+        p_new = p - lr * m_new
+        return p_new, m_new
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt_state)
+    new_p, new_m = [], []
+    for p, g, m in zip(flat_p, flat_g, flat_m):
+        pn, mn = leaf(p, g, m)
+        new_p.append(pn)
+        new_m.append(mn)
+    return tree.unflatten(new_p), tree.unflatten(new_m)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model_cfg: ModelConfig, loss_cfg: LossConfig, opt_cfg: OptConfig):
+    """Build the pure train-step function for AOT lowering.
+
+    Signature: (params, opt_state, xa, xb, perm, lr)
+             → (params', opt_state', loss, inv, reg)
+    """
+
+    def step(params, opt_state, xa, xb, perm, lr):
+        def objective(p):
+            za = embed(p, xa, model_cfg)
+            zb = embed(p, xb, model_cfg)
+            return loss_fn(za, zb, perm, loss_cfg)
+
+        (loss, metrics), grads = jax.value_and_grad(objective, has_aux=True)(params)
+        new_params, new_opt = opt_update(params, grads, opt_state, lr, opt_cfg)
+        return new_params, new_opt, loss, metrics["inv"], metrics["reg"]
+
+    return step
+
+
+def make_embed(model_cfg: ModelConfig):
+    """Frozen feature extractor: (params, x) → backbone representation."""
+
+    def fn(params, x):
+        return representation(params, x, model_cfg)
+
+    return fn
+
+
+def make_project(model_cfg: ModelConfig):
+    """(params, x) → projected embedding z (for Table-6 diagnostics)."""
+
+    def fn(params, x):
+        return embed(params, x, model_cfg)
+
+    return fn
+
+
+def make_loss_only(loss_cfg: LossConfig):
+    """Loss on raw embeddings (za, zb, perm) → scalar — the Fig. 2 / Tab. 12
+    forward-loss timing workload, isolated from the backbone."""
+
+    def fn(za, zb, perm):
+        loss, _ = loss_fn(za, zb, perm, loss_cfg)
+        return loss
+
+    return fn
+
+
+def make_loss_grad(loss_cfg: LossConfig):
+    """Loss + gradient wrt embeddings — the backward-pass timing workload
+    (Tab. 12/13): grads flow through the loss node exactly as they would
+    into the projector."""
+
+    def fn(za, zb, perm):
+        def obj(z2):
+            loss, _ = loss_fn(z2[0], z2[1], perm, loss_cfg)
+            return loss
+
+        loss, grads = jax.value_and_grad(obj)((za, zb))
+        return loss, grads[0], grads[1]
+
+    return fn

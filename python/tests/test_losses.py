@@ -1,0 +1,234 @@
+"""L2 loss semantics: equivalences the paper states, and permutation math.
+
+Key identities under test:
+* proposed loss with block=1, q=2  ==  original R_off loss (paper §4.4);
+* block=d == no grouping;
+* Pallas path == pure-jnp path for every variant;
+* permutation leaves R_off and the invariance term unchanged but
+  reshuffles sumvec (the §4.3 mechanism);
+* gradients are finite and nonzero through every variant.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _views(seed, n, d):
+    rng = np.random.RandomState(seed)
+    return (
+        jnp.asarray(rng.randn(n, d).astype(np.float32)),
+        jnp.asarray(rng.randn(n, d).astype(np.float32)),
+    )
+
+
+def _identity_perm(d):
+    return jnp.arange(d, dtype=jnp.int32)
+
+
+class TestBTFamily:
+    def test_block1_q2_equals_bt_off(self):
+        za, zb = _views(0, 16, 12)
+        perm = _identity_perm(12)
+        off = M.LossConfig(variant="bt_off", lam=0.01, scale=1.0, use_pallas=False)
+        grouped = M.LossConfig(
+            variant="bt_sum", block=1, q=2, lam=0.01, scale=1.0, use_pallas=False
+        )
+        l_off, _ = M.loss_fn(za, zb, perm, off)
+        l_g, _ = M.loss_fn(za, zb, perm, grouped)
+        assert_allclose(float(l_off), float(l_g), rtol=1e-4)
+
+    def test_block_d_equals_no_grouping(self):
+        za, zb = _views(1, 8, 16)
+        perm = _identity_perm(16)
+        flat = M.LossConfig(variant="bt_sum", block=0, q=2, scale=1.0, use_pallas=False)
+        grouped = M.LossConfig(variant="bt_sum", block=16, q=2, scale=1.0, use_pallas=False)
+        lf, _ = M.loss_fn(za, zb, perm, flat)
+        lg, _ = M.loss_fn(za, zb, perm, grouped)
+        assert_allclose(float(lf), float(lg), rtol=1e-4)
+
+    @pytest.mark.parametrize("variant,block", [
+        ("bt_off", 0), ("bt_sum", 0), ("bt_sum", 4),
+    ])
+    def test_pallas_equals_jnp(self, variant, block):
+        za, zb = _views(2, 8, 16)
+        perm = _identity_perm(16)
+        base = dict(variant=variant, block=block, q=2, scale=1.0)
+        lp, _ = M.loss_fn(za, zb, perm, M.LossConfig(**base, use_pallas=True))
+        lj, _ = M.loss_fn(za, zb, perm, M.LossConfig(**base, use_pallas=False))
+        assert_allclose(float(lp), float(lj), rtol=1e-4)
+
+    def test_invariance_term_is_permutation_invariant(self):
+        za, zb = _views(3, 32, 8)
+        rng = np.random.RandomState(0)
+        perm = jnp.asarray(rng.permutation(8).astype(np.int32))
+        cfg = M.LossConfig(variant="bt_sum", lam=0.0, scale=1.0, use_pallas=False)
+        l_id, m_id = M.loss_fn(za, zb, _identity_perm(8), cfg)
+        l_p, m_p = M.loss_fn(za, zb, perm, cfg)
+        # λ=0: loss is pure invariance, which sums over features.
+        assert_allclose(float(l_id), float(l_p), rtol=1e-4)
+        assert_allclose(float(m_id["inv"]), float(m_p["inv"]), rtol=1e-4)
+
+    def test_permutation_changes_regularizer(self):
+        za, zb = _views(4, 16, 32)
+        rng = np.random.RandomState(1)
+        perm = jnp.asarray(rng.permutation(32).astype(np.int32))
+        cfg = M.LossConfig(variant="bt_sum", scale=1.0, use_pallas=False)
+        _, m_id = M.loss_fn(za, zb, _identity_perm(32), cfg)
+        _, m_p = M.loss_fn(za, zb, perm, cfg)
+        assert abs(float(m_id["reg"]) - float(m_p["reg"])) > 1e-6
+
+    def test_r_off_is_permutation_invariant(self):
+        za, zb = _views(5, 16, 12)
+        rng = np.random.RandomState(2)
+        perm = jnp.asarray(rng.permutation(12).astype(np.int32))
+        cfg = M.LossConfig(variant="bt_off", lam=1.0, scale=1.0, use_pallas=False)
+        _, m_id = M.loss_fn(za, zb, _identity_perm(12), cfg)
+        _, m_p = M.loss_fn(za, zb, perm, cfg)
+        assert_allclose(float(m_id["reg"]), float(m_p["reg"]), rtol=1e-4)
+
+    def test_decorrelated_identical_views_minimize_loss(self):
+        # For za == zb with independent features and n >> d, both the
+        # invariance and regularizer terms should be near zero.
+        rng = np.random.RandomState(3)
+        z = jnp.asarray(rng.randn(2048, 4).astype(np.float32))
+        cfg = M.LossConfig(variant="bt_sum", scale=1.0, lam=1.0, use_pallas=False)
+        loss, m = M.loss_fn(z, z, _identity_perm(4), cfg)
+        assert float(m["inv"]) < 1e-4
+        assert float(m["reg"]) < 0.05
+
+
+class TestVICFamily:
+    def test_block1_q2_equals_vic_off(self):
+        za, zb = _views(6, 16, 10)
+        perm = _identity_perm(10)
+        off = M.LossConfig(variant="vic_off", nu=1.0, use_pallas=False)
+        grouped = M.LossConfig(variant="vic_sum", block=1, q=2, nu=1.0, use_pallas=False)
+        l_off, m_off = M.loss_fn(za, zb, perm, off)
+        l_g, m_g = M.loss_fn(za, zb, perm, grouped)
+        assert_allclose(float(m_off["reg"]), float(m_g["reg"]), rtol=1e-3)
+        assert_allclose(float(l_off), float(l_g), rtol=1e-3)
+
+    @pytest.mark.parametrize("variant,block", [
+        ("vic_off", 0), ("vic_sum", 0), ("vic_sum", 4),
+    ])
+    def test_pallas_equals_jnp(self, variant, block):
+        za, zb = _views(7, 8, 16)
+        perm = _identity_perm(16)
+        base = dict(variant=variant, block=block, q=1)
+        lp, _ = M.loss_fn(za, zb, perm, M.LossConfig(**base, use_pallas=True))
+        lj, _ = M.loss_fn(za, zb, perm, M.LossConfig(**base, use_pallas=False))
+        assert_allclose(float(lp), float(lj), rtol=1e-3)
+
+    def test_collapsed_embeddings_penalized(self):
+        # All-equal embeddings: variance hinge fires at γ per feature ×2 views.
+        z = jnp.ones((16, 8), jnp.float32) * 3.0
+        cfg = M.LossConfig(variant="vic_sum", gamma=1.0, use_pallas=False)
+        _, m = M.loss_fn(z, z, _identity_perm(8), cfg)
+        assert_allclose(float(m["var"]), 16.0, rtol=1e-3)
+
+    def test_identical_views_zero_invariance(self):
+        za, _ = _views(8, 8, 8)
+        cfg = M.LossConfig(variant="vic_sum", use_pallas=False)
+        _, m = M.loss_fn(za, za, _identity_perm(8), cfg)
+        assert float(m["inv"]) == pytest.approx(0.0, abs=1e-6)
+
+
+class TestCancellationPathology:
+    """The §4.3 story, end to end on the loss functions."""
+
+    def _adversarial_views(self, n=256, d=4, seed=0):
+        # Build embeddings whose cross-correlation has the ±x wrap-diagonal
+        # pattern: feature pairs correlated with alternating signs.
+        rng = np.random.RandomState(seed)
+        base = rng.randn(n, d).astype(np.float32)
+        za = base.copy()
+        zb = np.empty_like(base)
+        # zb feature (i+1)%d strongly correlated with za feature i, sign (-1)^i
+        for i in range(d):
+            sign = 1.0 if i % 2 == 0 else -1.0
+            zb[:, (i + 1) % d] = sign * base[:, i] + 0.1 * rng.randn(n)
+        return jnp.asarray(za), jnp.asarray(zb)
+
+    def test_r_sum_blind_but_r_off_sees(self):
+        za, zb = self._adversarial_views()
+        sa, sb = ref.standardize(za), ref.standardize(zb)
+        n = za.shape[0]
+        c = ref.crosscorr_ref(sa, sb, float(n))
+        sv = ref.sumvec_explicit(c)
+        r_sum = float(ref.r_sum_ref(sv, 2))
+        r_off = float(ref.r_off_ref(c))
+        assert r_off > 1.0, "individual correlations are large"
+        assert r_sum < 0.1 * r_off, "but the sums cancel"
+
+    def test_random_permutation_exposes_cancellation(self):
+        # d=8: with more features, permutations that happen to preserve the
+        # cancelling cyclic structure become vanishingly rare.
+        za, zb = self._adversarial_views(d=8)
+        sa, sb = ref.standardize(za), ref.standardize(zb)
+        n = za.shape[0]
+        rng = np.random.RandomState(42)
+        exposed = 0
+        trials = 8
+        c = ref.crosscorr_ref(sa, sb, float(n))
+        base = float(ref.r_sum_ref(ref.sumvec_explicit(c), 2))
+        for _ in range(trials):
+            perm = rng.permutation(za.shape[1])
+            cp = ref.crosscorr_ref(sa[:, perm], sb[:, perm], float(n))
+            if float(ref.r_sum_ref(ref.sumvec_explicit(cp), 2)) > 10 * max(base, 1e-6):
+                exposed += 1
+        assert exposed >= trials // 2, (
+            f"random permutations should usually break the cancellation "
+            f"(exposed {exposed}/{trials})"
+        )
+
+
+class TestGradients:
+    @pytest.mark.parametrize("variant,block,q", [
+        ("bt_off", 0, 2),
+        ("bt_sum", 0, 2),
+        ("bt_sum", 8, 2),
+        ("vic_off", 0, 2),
+        ("vic_sum", 0, 1),
+        ("vic_sum", 8, 1),
+    ])
+    def test_grads_finite_and_nonzero(self, variant, block, q):
+        za, zb = _views(9, 8, 16)
+        perm = _identity_perm(16)
+        cfg = M.LossConfig(variant=variant, block=block, q=q, use_pallas=True)
+
+        def obj(z):
+            loss, _ = M.loss_fn(z[0], z[1], perm, cfg)
+            return loss
+
+        g = jax.grad(obj)((za, zb))
+        for gz in g:
+            arr = np.asarray(gz)
+            assert np.all(np.isfinite(arr))
+            assert np.abs(arr).max() > 0
+
+    def test_pallas_and_jnp_grads_agree(self):
+        za, zb = _views(10, 8, 16)
+        perm = _identity_perm(16)
+        for variant in ["bt_sum", "vic_sum"]:
+            gp = jax.grad(
+                lambda z: M.loss_fn(
+                    z[0], z[1], perm, M.LossConfig(variant=variant, use_pallas=True)
+                )[0]
+            )((za, zb))
+            gj = jax.grad(
+                lambda z: M.loss_fn(
+                    z[0], z[1], perm, M.LossConfig(variant=variant, use_pallas=False)
+                )[0]
+            )((za, zb))
+            for a, b in zip(gp, gj):
+                assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)

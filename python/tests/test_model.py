@@ -1,0 +1,147 @@
+"""L2 model: shapes, initialization, optimizers, and train-step sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+MLP_CFG = M.ModelConfig(
+    backbone="mlp", mlp_hidden=(32,), repr_dim=16, proj_hidden=32,
+    proj_layers=2, embed_dim=24,
+)
+CONV_CFG = M.ModelConfig(
+    backbone="convnet", widths=(8, 16), repr_dim=24, proj_hidden=32,
+    proj_layers=2, embed_dim=40,
+)
+
+
+class TestForwardShapes:
+    def test_mlp_shapes(self):
+        params = M.init_params(jax.random.PRNGKey(0), MLP_CFG, (10,))
+        x = jnp.ones((4, 10), jnp.float32)
+        r = M.representation(params, x, MLP_CFG)
+        z = M.embed(params, x, MLP_CFG)
+        assert r.shape == (4, 16)
+        assert z.shape == (4, 24)
+
+    def test_convnet_shapes(self):
+        params = M.init_params(jax.random.PRNGKey(0), CONV_CFG, (16, 16, 3))
+        x = jnp.ones((2, 16, 16, 3), jnp.float32)
+        r = M.representation(params, x, CONV_CFG)
+        z = M.embed(params, x, CONV_CFG)
+        assert r.shape == (2, 24)
+        assert z.shape == (2, 40)
+
+    def test_different_inputs_different_embeddings(self):
+        params = M.init_params(jax.random.PRNGKey(0), MLP_CFG, (10,))
+        rng = np.random.RandomState(0)
+        x = jnp.asarray(rng.randn(4, 10).astype(np.float32))
+        z = M.embed(params, x, MLP_CFG)
+        assert float(jnp.abs(z[0] - z[1]).max()) > 1e-4
+
+
+class TestBatchNorm:
+    def test_normalizes_batch(self):
+        x = jnp.asarray(np.random.RandomState(0).randn(64, 8).astype(np.float32)) * 5 + 3
+        y = M.batchnorm(x, jnp.ones(8), jnp.zeros(8), (0,))
+        assert_allclose(np.asarray(y.mean(axis=0)), np.zeros(8), atol=1e-4)
+        assert_allclose(np.asarray(y.std(axis=0)), np.ones(8), atol=1e-2)
+
+    def test_scale_bias_applied(self):
+        x = jnp.asarray(np.random.RandomState(1).randn(64, 4).astype(np.float32))
+        y = M.batchnorm(x, 2.0 * jnp.ones(4), 7.0 * jnp.ones(4), (0,))
+        assert_allclose(np.asarray(y.mean(axis=0)), 7.0 * np.ones(4), atol=1e-4)
+
+
+class TestOptimizers:
+    def _toy(self):
+        params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+        grads = {"w": jnp.ones((4, 4)) * 0.1, "b": jnp.ones((4,)) * 0.1}
+        return params, grads, M.init_opt_state(params)
+
+    def test_sgd_descends(self):
+        params, grads, opt = self._toy()
+        cfg = M.OptConfig(optimizer="sgd", momentum=0.0, weight_decay=0.0)
+        p2, _ = M.opt_update(params, grads, opt, 0.5, cfg)
+        assert_allclose(np.asarray(p2["w"]), np.ones((4, 4)) - 0.05, atol=1e-6)
+        assert_allclose(np.asarray(p2["b"]), -0.05 * np.ones(4), atol=1e-6)
+
+    def test_momentum_accumulates(self):
+        params, grads, opt = self._toy()
+        cfg = M.OptConfig(optimizer="sgd", momentum=0.9, weight_decay=0.0)
+        p1, m1 = M.opt_update(params, grads, opt, 1.0, cfg)
+        p2, _ = M.opt_update(p1, grads, m1, 1.0, cfg)
+        # second step is larger: v2 = 0.9*g + g = 1.9g
+        step1 = np.asarray(params["w"] - p1["w"])
+        step2 = np.asarray(p1["w"] - p2["w"])
+        assert np.all(step2 > step1 * 1.5)
+
+    def test_weight_decay_only_on_matrices(self):
+        params, _, opt = self._toy()
+        grads = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+        cfg = M.OptConfig(optimizer="sgd", momentum=0.0, weight_decay=0.1)
+        p2, _ = M.opt_update(params, grads, opt, 1.0, cfg)
+        assert float(p2["w"][0, 0]) < 1.0  # decayed
+        assert float(p2["b"][0]) == 0.0  # bias untouched
+
+    def test_lars_trust_scales_update(self):
+        params, grads, opt = self._toy()
+        cfg = M.OptConfig(optimizer="lars", momentum=0.0, weight_decay=0.0, trust_coef=1e-3)
+        p2, _ = M.opt_update(params, grads, opt, 1.0, cfg)
+        # trust = 1e-3 * ||w|| / ||g|| = 1e-3 * 4 / 0.4 = 0.01 → step 0.001
+        assert_allclose(np.asarray(params["w"] - p2["w"]), 0.001 * np.ones((4, 4)), rtol=1e-3)
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("variant", ["bt_sum", "vic_sum"])
+    def test_loss_decreases_over_steps(self, variant):
+        mc = MLP_CFG
+        lc = M.LossConfig(variant=variant, use_pallas=False)
+        oc = M.OptConfig(optimizer="sgd", momentum=0.9, weight_decay=0.0)
+        step = jax.jit(M.make_train_step(mc, lc, oc))
+        params = M.init_params(jax.random.PRNGKey(0), mc, (10,))
+        opt = M.init_opt_state(params)
+        rng = np.random.RandomState(0)
+        base = rng.randn(16, 10).astype(np.float32)
+        losses, invs = [], []
+        key = jax.random.PRNGKey(1)
+        for i in range(30):
+            key, k1, k2, kp = jax.random.split(key, 4)
+            xa = jnp.asarray(base) + 0.05 * jax.random.normal(k1, base.shape)
+            xb = jnp.asarray(base) + 0.05 * jax.random.normal(k2, base.shape)
+            perm = jax.random.permutation(kp, mc.embed_dim).astype(jnp.int32)
+            params, opt, loss, inv, reg = step(params, opt, xa, xb, perm, jnp.float32(0.02))
+            losses.append(float(loss))
+            invs.append(float(inv))
+        assert np.isfinite(losses).all()
+        if variant.startswith("bt"):
+            # BT loss is well-scaled at this size; expect overall descent.
+            assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
+        else:
+            # VIC's variance hinge is noisy at n=16; the invariance term is
+            # the stable progress signal.
+            assert np.mean(invs[-5:]) < np.mean(invs[:5]), invs
+
+    def test_step_changes_all_params(self):
+        mc = MLP_CFG
+        lc = M.LossConfig(variant="bt_sum", use_pallas=False)
+        oc = M.OptConfig(optimizer="sgd", momentum=0.0, weight_decay=0.0)
+        step = jax.jit(M.make_train_step(mc, lc, oc))
+        params = M.init_params(jax.random.PRNGKey(0), mc, (10,))
+        opt = M.init_opt_state(params)
+        rng = np.random.RandomState(2)
+        xa = jnp.asarray(rng.randn(16, 10).astype(np.float32))
+        xb = jnp.asarray(rng.randn(16, 10).astype(np.float32))
+        perm = jnp.arange(mc.embed_dim, dtype=jnp.int32)
+        p2, *_ = step(params, opt, xa, xb, perm, jnp.float32(0.1))
+        flat1 = jax.tree_util.tree_leaves(params)
+        flat2 = jax.tree_util.tree_leaves(p2)
+        changed = sum(
+            float(jnp.abs(a - b).max()) > 0 for a, b in zip(flat1, flat2)
+        )
+        assert changed >= len(flat1) - 1  # everything but possibly one BN leaf

@@ -1,0 +1,65 @@
+//! Data-pipeline bench: synthesis + augmentation throughput and the
+//! prefetching loader's ability to keep the training step fed (the L3
+//! "data must not be the bottleneck" requirement; DESIGN.md §Perf L3).
+
+use std::time::Instant;
+
+use decorr::bench_harness::{bench, Table};
+use decorr::data::loader::{make_batch, BatchLoader};
+use decorr::data::synth::{ShapeWorld, ShapeWorldConfig};
+use decorr::data::{AugmentConfig, Augmenter};
+
+fn main() {
+    let ds = ShapeWorld::new(ShapeWorldConfig::default());
+    let aug = Augmenter::new(AugmentConfig::default());
+
+    // Single-image costs.
+    let synth = bench(3, 20, || ds.sample(123));
+    let img = ds.sample(7).image;
+    let mut rng = decorr::util::rng::Rng::new(1);
+    let augment = bench(3, 20, || aug.view(&img, &mut rng, false));
+    let mut t = Table::new(&["stage", "µs/image"]);
+    t.row(vec!["synthesize".into(), format!("{:.0}", synth.median * 1e6)]);
+    t.row(vec!["augment (1 view)".into(), format!("{:.0}", augment.median * 1e6)]);
+    println!("\n[bench_data_pipeline] per-image costs:");
+    t.print();
+
+    // Batch construction (single-threaded).
+    let batch128 = bench(1, 5, || make_batch(&ds, &aug, 128, 4096, 1, 0));
+    println!(
+        "single-thread batch(128): {:.1} ms ({:.0} img/s incl. both views)",
+        batch128.median * 1e3,
+        2.0 * 128.0 / batch128.median
+    );
+
+    // Loader throughput vs worker count.
+    let mut lt = Table::new(&["workers", "batches/s", "images/s"]);
+    for workers in [1usize, 2, 4, 8] {
+        let loader = BatchLoader::new(
+            ds.clone(),
+            AugmentConfig::default(),
+            128,
+            4096,
+            1,
+            workers,
+            8,
+        );
+        // warm the queue
+        for _ in 0..2 {
+            let _ = loader.next();
+        }
+        let t0 = Instant::now();
+        let n = 12;
+        for _ in 0..n {
+            let _ = loader.next();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        lt.row(vec![
+            format!("{workers}"),
+            format!("{:.1}", n as f64 / dt),
+            format!("{:.0}", n as f64 * 2.0 * 128.0 / dt),
+        ]);
+    }
+    println!("\nprefetching loader throughput:");
+    lt.print();
+}

@@ -1,0 +1,51 @@
+//! FFT substrate bench: the pure-rust radix-2 FFT vs the naive O(n²) DFT,
+//! plus circular-correlation throughput — the primitive underlying the
+//! host-side sumvec path (paper Eq. 11).
+
+use decorr::bench_harness::{bench_for, Table};
+use decorr::fft;
+use decorr::util::rng::Rng;
+
+fn main() {
+    let mut table = Table::new(&["n", "fft (µs)", "naive dft (µs)", "speedup"]);
+    for n in [64usize, 256, 1024, 4096] {
+        let mut rng = Rng::new(n as u64);
+        let x: Vec<fft::Complex> = (0..n)
+            .map(|_| fft::Complex::new(rng.gaussian() as f64, 0.0))
+            .collect();
+        let t_fft = bench_for(0.3, 2, || fft::fft(&x)).median;
+        // Cap the naive DFT input so the bench stays quick.
+        let t_dft = if n <= 1024 {
+            bench_for(0.3, 1, || fft::dft_naive(&x)).median
+        } else {
+            f64::NAN
+        };
+        table.row(vec![
+            format!("{n}"),
+            format!("{:.1}", t_fft * 1e6),
+            if t_dft.is_nan() {
+                "-".into()
+            } else {
+                format!("{:.1}", t_dft * 1e6)
+            },
+            if t_dft.is_nan() {
+                "-".into()
+            } else {
+                format!("{:.0}x", t_dft / t_fft)
+            },
+        ]);
+    }
+    println!("\n[bench_fft_host] rust FFT substrate:");
+    table.print();
+
+    let mut corr = Table::new(&["d", "circular_correlate (µs)"]);
+    for d in [256usize, 1024, 4096, 16384] {
+        let mut rng = Rng::new(d as u64);
+        let a: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+        let b: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+        let t = bench_for(0.3, 2, || fft::circular_correlate(&a, &b)).median;
+        corr.row(vec![format!("{d}"), format!("{:.1}", t * 1e6)]);
+    }
+    println!();
+    corr.print();
+}

@@ -1,0 +1,39 @@
+//! Tables 12/13 bench: forward-loss and backward improvement factors of
+//! the proposed regularizer over the baselines, per dimension.
+//!
+//! Paper shape: the fwd(loss) improvement factor grows superlinearly with
+//! d (7.5× at 8192 → 23× at 16384 on their GPU); backward improves by a
+//! smaller but growing factor.
+
+use decorr::bench_harness::{bench_for, LossWorkload, Table};
+use decorr::runtime::Engine;
+
+fn main() {
+    let n = 128;
+    let dims = [512usize, 1024, 2048, 4096];
+    let engine = Engine::cpu("artifacts").expect("run `make artifacts` first");
+
+    let mut table = Table::new(&["family", "d", "fwd speedup", "fwd+bwd speedup"]);
+    for (base, prop, family) in [
+        ("bt_off", "bt_sum", "Barlow Twins-style"),
+        ("vic_off", "vic_sum", "VICReg-style"),
+    ] {
+        for &d in &dims {
+            let t = |variant: &str, grad: bool| -> f64 {
+                let w = LossWorkload::load(&engine, variant, d, n, grad).unwrap();
+                bench_for(0.4, 2, || w.run().unwrap()).median
+            };
+            let fwd = t(base, false) / t(prop, false);
+            let bwd = t(base, true) / t(prop, true);
+            table.row(vec![
+                family.to_string(),
+                format!("{d}"),
+                format!("{fwd:.2}x"),
+                format!("{bwd:.2}x"),
+            ]);
+        }
+    }
+    println!("\n[bench_fwd_bwd] Tables 12/13 analogue (n={n}):");
+    table.print();
+    println!("(paper shape: speedup factors grow with d, fwd factor > bwd factor)");
+}

@@ -1,0 +1,33 @@
+//! Fig. 3 bench: block-size sweep of R_sum^(b) at d = 2048 via the AOT
+//! artifacts. Paper shape: cost is flat for moderate-to-large b and only
+//! climbs when b becomes very small (the (d/b)² block count).
+
+use decorr::bench_harness::{bench_for, loss_node_bytes, LossWorkload, Table};
+use decorr::runtime::Engine;
+
+fn main() {
+    let (d, n) = (2048usize, 128usize);
+    let engine = Engine::cpu("artifacts").expect("run `make artifacts` first");
+    let mut table = Table::new(&["b", "fwd (ms)", "fwd+bwd (ms)", "loss-node MB"]);
+
+    let mut add = |label: String, variant: String| {
+        let fwd = LossWorkload::load(&engine, &variant, d, n, false).unwrap();
+        let f = bench_for(0.5, 2, || fwd.run().unwrap());
+        let bwd = LossWorkload::load(&engine, &variant, d, n, true).unwrap();
+        let b = bench_for(0.5, 2, || bwd.run().unwrap());
+        table.row(vec![
+            label,
+            format!("{:.3}", f.median_ms()),
+            format!("{:.3}", b.median_ms()),
+            format!("{:.1}", loss_node_bytes(&variant, n, d) as f64 / 1e6),
+        ]);
+    };
+    add("1 (= R_off)".into(), "bt_off".into());
+    for b in [8usize, 32, 128, 512] {
+        add(format!("{b}"), format!("bt_sum_g{b}"));
+    }
+    add(format!("{d} (no grouping)"), "bt_sum".into());
+
+    println!("\n[bench_grouping] Fig. 3 analogue (d={d}, n={n}):");
+    table.print();
+}

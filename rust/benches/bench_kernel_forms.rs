@@ -1,0 +1,62 @@
+//! Kernel-form ablation: the same loss lowered two ways —
+//!
+//! * native XLA form (fused dot / rfft+einsum) — what the shipped timing
+//!   artifacts use on this CPU testbed;
+//! * Pallas-kernel form (`loss_pl_*`) — the L1 kernels of
+//!   `python/compile/kernels/sumvec.py` lowered through interpret mode
+//!   into the same HLO pipeline.
+//!
+//! Checks numerical equality between the two forms on-device and reports
+//! the interpret-mode overhead (the reason timing tables use the native
+//! form on CPU; on TPU the Pallas form is the tiled/MXU path — DESIGN.md
+//! §Hardware-Adaptation).
+
+use decorr::bench_harness::{bench_for, Table};
+use decorr::coordinator::trainer::{literal_f32, literal_i32, scalar};
+use decorr::runtime::Engine;
+use decorr::util::rng::Rng;
+use decorr::util::tensor::Tensor;
+
+fn main() {
+    let engine = Engine::cpu("artifacts").expect("run `make artifacts` first");
+    let (n, d) = (128usize, 512usize);
+    let mut rng = Rng::new(99);
+    let za = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+    let zb = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+    let perm = rng.permutation(d);
+    let inputs = [
+        literal_f32(&za).unwrap(),
+        literal_f32(&zb).unwrap(),
+        literal_i32(&perm).unwrap(),
+    ];
+
+    let mut table = Table::new(&[
+        "variant",
+        "native (ms)",
+        "pallas-lowered (ms)",
+        "overhead",
+        "|Δloss|",
+    ]);
+    for variant in ["bt_off", "bt_sum", "bt_sum_g128", "vic_sum"] {
+        let native = engine
+            .load_artifact(&format!("loss_{variant}_d{d}_n{n}"))
+            .unwrap();
+        let pallas = engine
+            .load_artifact(&format!("loss_pl_{variant}_d{d}_n{n}"))
+            .unwrap();
+        let v_native = scalar(&native.execute_literals(&inputs).unwrap()[0]).unwrap();
+        let v_pallas = scalar(&pallas.execute_literals(&inputs).unwrap()[0]).unwrap();
+        let t_native = bench_for(0.4, 2, || native.execute_literals(&inputs).unwrap()).median;
+        let t_pallas = bench_for(0.4, 2, || pallas.execute_literals(&inputs).unwrap()).median;
+        table.row(vec![
+            variant.to_string(),
+            format!("{:.2}", t_native * 1e3),
+            format!("{:.2}", t_pallas * 1e3),
+            format!("{:.1}x", t_pallas / t_native),
+            format!("{:.2e}", (v_native - v_pallas).abs()),
+        ]);
+    }
+    println!("\n[bench_kernel_forms] native vs Pallas-lowered loss (d={d}, n={n}):");
+    table.print();
+    println!("(both forms must agree numerically; interpret-mode grids cost extra on CPU)");
+}

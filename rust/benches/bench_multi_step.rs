@@ -1,0 +1,117 @@
+//! §Perf bench: single-step vs scan-fused multi-step train artifacts.
+//!
+//! The single-step path pays, per optimizer step: host→device literal
+//! upload of the full parameter set, execution dispatch, and download +
+//! tuple-decomposition of all outputs. The `trainmulti_*_k{K}` artifacts
+//! fuse K steps behind one dispatch (lax.scan), amortizing those costs —
+//! the dominant overhead when the model is small.
+
+use decorr::bench_harness::{bench, Table};
+use decorr::coordinator::trainer::{literal_f32, literal_i32};
+use decorr::coordinator::Checkpoint;
+use decorr::runtime::{Engine, ParamStore};
+use decorr::util::rng::Rng;
+use decorr::util::tensor::Tensor;
+
+fn main() {
+    let engine = Engine::cpu("artifacts").expect("run `make artifacts` first");
+    let ckpt = Checkpoint::load("artifacts/init_tiny.ckpt").unwrap();
+    let mut rng = Rng::new(42);
+    let (n, f, d) = (32usize, 64usize, 256usize);
+
+    let mut table = Table::new(&["path", "steps/call", "ms/step", "speedup"]);
+    let mut single_ms = None;
+
+    // --- single-step artifact ------------------------------------------
+    {
+        let art = engine.load_artifact("train_bt_sum_tiny").unwrap();
+        let manifest = art.manifest().clone();
+        let params =
+            ParamStore::from_checkpoint(&ckpt, &manifest.inputs_with_prefix("params.")).unwrap();
+        let opt = ParamStore::zeros(&manifest.inputs_with_prefix("opt_state.")).unwrap();
+        let xa = Tensor::from_vec(&[n, f], (0..n * f).map(|_| rng.gaussian()).collect());
+        let xa_lit = literal_f32(&xa).unwrap();
+        let perm: Vec<u32> = (0..d as u32).collect();
+        let perm_lit = literal_i32(&perm).unwrap();
+        let lr_lit = xla::Literal::vec1(&[0.01f32]).reshape(&[]).unwrap();
+        let inputs: Vec<&xla::Literal> = manifest
+            .inputs
+            .iter()
+            .map(|spec| {
+                if spec.name.starts_with("params.") {
+                    params.get(&spec.name).unwrap()
+                } else if spec.name.starts_with("opt_state.") {
+                    opt.get(&spec.name).unwrap()
+                } else {
+                    match spec.name.as_str() {
+                        "xa" | "xb" => &xa_lit,
+                        "perm" => &perm_lit,
+                        _ => &lr_lit,
+                    }
+                }
+            })
+            .collect();
+        let stats = bench(3, 15, || art.execute_literals_ref(&inputs).unwrap());
+        let ms = stats.median * 1e3;
+        single_ms = Some(ms);
+        table.row(vec![
+            "single-step".into(),
+            "1".into(),
+            format!("{ms:.2}"),
+            "1.00x".into(),
+        ]);
+    }
+
+    // --- scan-fused multi-step artifacts --------------------------------
+    for k in [4usize, 16] {
+        let art = engine
+            .load_artifact(&format!("trainmulti_bt_sum_tiny_k{k}"))
+            .unwrap();
+        let manifest = art.manifest().clone();
+        let params =
+            ParamStore::from_checkpoint(&ckpt, &manifest.inputs_with_prefix("params.")).unwrap();
+        let opt = ParamStore::zeros(&manifest.inputs_with_prefix("opt_state.")).unwrap();
+        let xas = Tensor::from_vec(
+            &[k, n, f],
+            (0..k * n * f).map(|_| rng.gaussian()).collect(),
+        );
+        let xas_lit = literal_f32(&xas).unwrap();
+        let perms: Vec<i32> = (0..k).flat_map(|_| (0..d as i32)).collect();
+        let perms_lit = xla::Literal::vec1(&perms)
+            .reshape(&[k as i64, d as i64])
+            .unwrap();
+        let lrs = Tensor::from_vec(&[k], vec![0.01; k]);
+        let lrs_lit = literal_f32(&lrs).unwrap();
+        let inputs: Vec<&xla::Literal> = manifest
+            .inputs
+            .iter()
+            .map(|spec| {
+                if spec.name.starts_with("params.") {
+                    params.get(&spec.name).unwrap()
+                } else if spec.name.starts_with("opt_state.") {
+                    opt.get(&spec.name).unwrap()
+                } else {
+                    match spec.name.as_str() {
+                        "xas" | "xbs" => &xas_lit,
+                        "perms" => &perms_lit,
+                        _ => &lrs_lit,
+                    }
+                }
+            })
+            .collect();
+        let stats = bench(2, 10, || art.execute_literals_ref(&inputs).unwrap());
+        let ms = stats.median * 1e3 / k as f64;
+        table.row(vec![
+            format!("scan-fused k={k}"),
+            format!("{k}"),
+            format!("{ms:.2}"),
+            single_ms
+                .map(|s| format!("{:.2}x", s / ms))
+                .unwrap_or_default(),
+        ]);
+    }
+
+    println!("\n[bench_multi_step] dispatch amortization (tiny preset, d=256):");
+    table.print();
+    println!("(per-step cost includes params upload + tuple download; scan fuses K steps per dispatch)");
+}

@@ -1,0 +1,69 @@
+//! Appendix C (Table 7) bench: asymptotic complexity of the host
+//! regularizer implementations — R_off O(nd²) vs R_sum-via-FFT
+//! O(nd log d) vs grouped O((nd²/b) log b) — measured on the pure-rust
+//! substrate (no XLA), plus empirical scaling exponents.
+
+use decorr::bench_harness::{bench_for, Table};
+use decorr::regularizer::{self, Q};
+use decorr::util::rng::Rng;
+use decorr::util::tensor::Tensor;
+
+fn rand_views(seed: u64, n: usize, d: usize) -> (Tensor, Tensor) {
+    let mut rng = Rng::new(seed);
+    (
+        Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect()),
+        Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect()),
+    )
+}
+
+fn main() {
+    let n = 64;
+    let dims = [128usize, 256, 512, 1024, 2048];
+    let mut table = Table::new(&[
+        "d",
+        "R_off (ms)",
+        "R_sum fft (ms)",
+        "R_sum^128 (ms)",
+        "off/fft",
+    ]);
+    let mut series_off = Vec::new();
+    let mut series_fft = Vec::new();
+    for &d in &dims {
+        let (a, b) = rand_views(d as u64, n, d);
+        let t_off = bench_for(0.4, 1, || {
+            let c = regularizer::cross_correlation(&a, &b, n as f32);
+            regularizer::r_off(&c)
+        })
+        .median;
+        let t_fft = bench_for(0.4, 1, || regularizer::r_sum_fft(&a, &b, n as f32, Q::L2)).median;
+        let t_grp = bench_for(0.4, 1, || {
+            regularizer::r_sum_grouped_fft(&a, &b, 128, n as f32, Q::L2)
+        })
+        .median;
+        series_off.push(((d as f64).ln(), t_off.ln()));
+        series_fft.push(((d as f64).ln(), t_fft.ln()));
+        table.row(vec![
+            format!("{d}"),
+            format!("{:.2}", t_off * 1e3),
+            format!("{:.2}", t_fft * 1e3),
+            format!("{:.2}", t_grp * 1e3),
+            format!("{:.1}x", t_off / t_fft),
+        ]);
+    }
+    println!("\n[bench_regularizer_host] Appendix C complexity (host rust, n={n}):");
+    table.print();
+    println!(
+        "empirical exponents: R_off ~ d^{:.2} (theory 2), R_sum fft ~ d^{:.2} (theory ~1)",
+        fit_slope(&series_off),
+        fit_slope(&series_fft)
+    );
+}
+
+fn fit_slope(pts: &[(f64, f64)]) -> f64 {
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}

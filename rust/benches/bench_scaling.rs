@@ -1,0 +1,56 @@
+//! Fig. 2 bench: loss-node fwd / fwd+bwd time and memory model vs d, for
+//! baseline (R_off) and proposed (R_sum) regularizers, via the AOT loss
+//! artifacts executed on the PJRT CPU client.
+//!
+//! Paper shape to reproduce: *_off time grows ~O(d²); *_sum ~O(d log d);
+//! the speedup factor widens with d; memory gap > 2× at large d.
+
+use decorr::bench_harness::{bench_for, loss_node_bytes, LossWorkload, Table};
+use decorr::runtime::Engine;
+
+fn main() {
+    let n = 128;
+    let dims = [256usize, 512, 1024, 2048, 4096];
+    let variants = ["bt_off", "bt_sum", "bt_sum_g128", "vic_off", "vic_sum"];
+    let engine = Engine::cpu("artifacts").expect("run `make artifacts` first");
+
+    let mut table = Table::new(&["variant", "d", "fwd (ms)", "fwd+bwd (ms)", "loss-node MB"]);
+    for v in &variants {
+        for &d in &dims {
+            let fwd = LossWorkload::load(&engine, v, d, n, false).unwrap();
+            let f = bench_for(0.5, 2, || fwd.run().unwrap());
+            let bwd = LossWorkload::load(&engine, v, d, n, true).unwrap();
+            let b = bench_for(0.5, 2, || bwd.run().unwrap());
+            table.row(vec![
+                v.to_string(),
+                format!("{d}"),
+                format!("{:.3}", f.median_ms()),
+                format!("{:.3}", b.median_ms()),
+                format!("{:.1}", loss_node_bytes(v, n, d) as f64 / 1e6),
+            ]);
+        }
+    }
+    println!("\n[bench_scaling] Fig. 2 analogue (n={n}):");
+    table.print();
+
+    // Scaling-exponent check: fit log(time) vs log(d) on the top dims.
+    for v in &variants {
+        let mut pts = Vec::new();
+        for &d in &dims[1..] {
+            let w = LossWorkload::load(&engine, v, d, n, false).unwrap();
+            let s = bench_for(0.3, 1, || w.run().unwrap());
+            pts.push(((d as f64).ln(), s.median.ln()));
+        }
+        let slope = fit_slope(&pts);
+        println!("[bench_scaling] {v}: empirical fwd-time exponent ~ d^{slope:.2}");
+    }
+}
+
+fn fit_slope(pts: &[(f64, f64)]) -> f64 {
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}

@@ -1,0 +1,63 @@
+//! Table 4 bench: full train-step wall clock (data + fwd + bwd + update)
+//! per loss variant, plus the loss-node share, at the small and e2e
+//! presets.
+//!
+//! Paper shape: the proposed loss shaves a constant-factor off total
+//! training time, with the gain concentrated at the loss node (most
+//! visible for lightweight backbones).
+
+use decorr::bench_harness::{bench, Table};
+use decorr::config::{TrainConfig, Variant};
+use decorr::coordinator::Trainer;
+use decorr::data::loader::make_batch;
+use decorr::data::synth::{ShapeWorld, ShapeWorldConfig};
+use decorr::data::{AugmentConfig, Augmenter};
+
+fn main() {
+    let mut table = Table::new(&["preset", "variant", "ms/step (median)", "vs baseline"]);
+    for preset in ["small", "e2e"] {
+        let mut baseline = None;
+        for variant in [
+            Variant::BtOff,
+            Variant::BtSum,
+            Variant::BtSumG128,
+            Variant::VicOff,
+            Variant::VicSum,
+        ] {
+            let mut cfg = TrainConfig::preset(preset).unwrap();
+            cfg.variant = variant;
+            cfg.out_dir = String::new();
+            let mut trainer = Trainer::new(cfg.clone()).expect("run `make artifacts` first");
+            let ds = ShapeWorld::new(ShapeWorldConfig {
+                seed: cfg.seed,
+                ..Default::default()
+            });
+            let aug = Augmenter::new(AugmentConfig::default());
+            let batch = make_batch(&ds, &aug, trainer.batch_size().unwrap(), 4096, 1, 0);
+            let mut epoch = 0usize;
+            let stats = bench(2, 8, || {
+                let m = trainer.step(&batch, epoch).unwrap();
+                epoch += 1;
+                m
+            });
+            let ms = stats.median * 1e3;
+            let rel = match variant {
+                Variant::BtOff | Variant::VicOff => {
+                    baseline = Some(ms);
+                    "1.00x".to_string()
+                }
+                _ => baseline
+                    .map(|b| format!("{:.2}x", b / ms))
+                    .unwrap_or_else(|| "-".into()),
+            };
+            table.row(vec![
+                preset.to_string(),
+                variant.as_str().to_string(),
+                format!("{ms:.1}"),
+                rel,
+            ]);
+        }
+    }
+    println!("\n[bench_train_step] Table 4 analogue (full step, fixed batch):");
+    table.print();
+}

@@ -1,0 +1,13 @@
+//! Benchmark harness: measurement statistics, table printers, benchmark
+//! workloads, and the CLI subcommand bodies that regenerate the paper's
+//! tables and figures (DESIGN.md §3 maps each command to its paper
+//! counterpart).
+
+pub mod cmd;
+pub mod stats;
+pub mod table;
+pub mod workload;
+
+pub use stats::{bench, bench_for, BenchStats};
+pub use table::Table;
+pub use workload::{loss_node_bytes, LossWorkload};

@@ -1,0 +1,116 @@
+//! Micro-benchmark statistics (the offline environment has no criterion;
+//! this is the measurement core all benches share).
+
+use std::time::Instant;
+
+/// Summary of repeated timed runs, in seconds.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    /// Number of measured iterations.
+    pub iters: usize,
+    /// Minimum.
+    pub min: f64,
+    /// Median.
+    pub median: f64,
+    /// Mean.
+    pub mean: f64,
+    /// 90th percentile.
+    pub p90: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad: f64,
+}
+
+impl BenchStats {
+    /// Compute stats from raw samples.
+    pub fn from_samples(mut samples: Vec<f64>) -> BenchStats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let median = samples[n / 2];
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let p90 = samples[(n * 9 / 10).min(n - 1)];
+        let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        BenchStats {
+            iters: n,
+            min: samples[0],
+            median,
+            mean,
+            p90,
+            mad: devs[n / 2],
+        }
+    }
+
+    /// Milliseconds formatting helper.
+    pub fn median_ms(&self) -> f64 {
+        self.median * 1e3
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs followed by `iters` measured ones.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchStats::from_samples(samples)
+}
+
+/// Time `f` adaptively: run for at least `budget_secs` wall time (min 3
+/// iterations) — good for workloads whose cost varies across parameters.
+pub fn bench_for<T>(budget_secs: f64, warmup: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < 3 || start.elapsed().as_secs_f64() < budget_secs {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= 1000 {
+            break;
+        }
+    }
+    BenchStats::from_samples(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_known_samples() {
+        let s = BenchStats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.iters, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 3.0);
+        assert!((s.mean - 22.0).abs() < 1e-9);
+        assert_eq!(s.p90, 100.0);
+        assert_eq!(s.mad, 1.0);
+    }
+
+    #[test]
+    fn bench_measures_work() {
+        let s = bench(1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.min >= 0.0 && s.median >= s.min);
+    }
+
+    #[test]
+    fn bench_for_respects_min_iters() {
+        let s = bench_for(0.0, 0, || 1 + 1);
+        assert!(s.iters >= 3);
+    }
+}

@@ -1,0 +1,117 @@
+//! Benchmark workloads: loss-artifact runners and the loss-node memory
+//! model used by the Fig. 2 analogue.
+
+use anyhow::Result;
+
+use crate::coordinator::trainer::{literal_f32, literal_i32, scalar};
+use crate::runtime::{Artifact, Engine};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// A compiled loss-only (or loss+grad) artifact with pre-built inputs —
+/// timing it measures exactly the loss node, like the paper's
+/// "Forward (loss)" / "Backward" columns (Tabs. 12–13, Fig. 2).
+pub struct LossWorkload {
+    artifact: Artifact,
+    za: xla::Literal,
+    zb: xla::Literal,
+    perm: xla::Literal,
+    /// Embedding dim.
+    pub d: usize,
+    /// Batch size.
+    pub n: usize,
+}
+
+impl LossWorkload {
+    /// Load `loss_<variant>_d<d>_n<n>` (or `lossgrad_...` when `grad`).
+    pub fn load(engine: &Engine, variant: &str, d: usize, n: usize, grad: bool) -> Result<LossWorkload> {
+        let kind = if grad { "lossgrad" } else { "loss" };
+        let artifact = engine.load_artifact(&format!("{kind}_{variant}_d{d}_n{n}"))?;
+        let mut rng = Rng::new(0xBE7C4 ^ d as u64);
+        let za = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+        let zb = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+        let perm = rng.permutation(d);
+        Ok(LossWorkload {
+            artifact,
+            za: literal_f32(&za)?,
+            zb: literal_f32(&zb)?,
+            perm: literal_i32(&perm)?,
+            d,
+            n,
+        })
+    }
+
+    /// Execute once; returns the loss scalar.
+    pub fn run(&self) -> Result<f32> {
+        let out = self
+            .artifact
+            .execute_literals_ref(&[&self.za, &self.zb, &self.perm])?;
+        scalar(&out[0])
+    }
+}
+
+/// Analytic peak live-set of the loss node, in bytes (f32 = 4B), mirroring
+/// the quantity behind the paper's Fig. 2 memory curves:
+///
+/// * `*_off`  — standardized/centered views (2·n·d) plus the materialized
+///   d×d correlation matrix: the O(d²) term that dominates at large d.
+/// * `*_sum`  — views plus both rfft spectra (2 views × 2 planes ×
+///   n·(d/2+1)) plus the d-vector accumulator: O(n·d), no d² term.
+/// * grouped  — views plus grouped spectra and the (d/b)²·b block summary.
+pub fn loss_node_bytes(variant: &str, n: usize, d: usize) -> usize {
+    let base = 2 * n * d; // standardized copies of both views
+    let f = d / 2 + 1;
+    let elems = if variant.ends_with("_off") {
+        let matrices = if variant.starts_with("vic") { 2 } else { 1 };
+        base + matrices * d * d
+    } else if let Some(pos) = variant.find("_g") {
+        let b: usize = variant[pos + 2..].parse().unwrap_or(d);
+        let groups = d.div_ceil(b);
+        let fb = b / 2 + 1;
+        base + 4 * n * groups * fb + groups * groups * b
+    } else {
+        base + 4 * n * f + d
+    };
+    elems * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_memory_dominated_by_d_squared() {
+        let n = 128;
+        let small = loss_node_bytes("bt_off", n, 1024);
+        let big = loss_node_bytes("bt_off", n, 8192);
+        // d² term: 64× growth for 8× d
+        assert!(big as f64 / small as f64 > 30.0);
+    }
+
+    #[test]
+    fn sum_memory_linear_in_d() {
+        let n = 128;
+        let small = loss_node_bytes("bt_sum", n, 1024);
+        let big = loss_node_bytes("bt_sum", n, 8192);
+        let ratio = big as f64 / small as f64;
+        assert!(ratio < 10.0, "{ratio}");
+    }
+
+    #[test]
+    fn sum_beats_off_at_large_d() {
+        let n = 128;
+        assert!(loss_node_bytes("bt_sum", n, 8192) < loss_node_bytes("bt_off", n, 8192) / 2);
+        assert!(loss_node_bytes("vic_sum", n, 8192) < loss_node_bytes("vic_off", n, 8192) / 2);
+    }
+
+    #[test]
+    fn grouped_between_extremes() {
+        let n = 128;
+        let d = 2048;
+        let off = loss_node_bytes("bt_off", n, d);
+        let sum = loss_node_bytes("bt_sum", n, d);
+        let g = loss_node_bytes("bt_sum_g128", n, d);
+        assert!(g <= off);
+        assert!(g >= sum / 4); // same order as the ungrouped FFT path
+    }
+}

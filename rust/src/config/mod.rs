@@ -1,0 +1,320 @@
+//! Typed configuration + a TOML-subset parser.
+//!
+//! The coordinator is configured by (in increasing precedence): built-in
+//! preset defaults → a config file (TOML subset: `key = value` pairs and
+//! `[section]` headers; strings, numbers, booleans) → CLI `--key value`
+//! overrides. The parser is ours (offline environment, no serde/toml).
+
+mod toml;
+
+pub use toml::{parse_toml, TomlDoc, TomlValue};
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+/// Loss variants (matching the artifact names emitted by `aot.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Original Barlow Twins (R_off on C(A,B)).
+    BtOff,
+    /// Proposed BT-style FFT regularizer (R_sum).
+    BtSum,
+    /// Proposed BT-style with feature grouping b=128.
+    BtSumG128,
+    /// Original VICReg (R_off on K(A), K(B)).
+    VicOff,
+    /// Proposed VICReg-style FFT regularizer.
+    VicSum,
+    /// Proposed VICReg-style with feature grouping b=128.
+    VicSumG128,
+}
+
+impl Variant {
+    /// Artifact-name fragment ("bt_sum", ...).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::BtOff => "bt_off",
+            Variant::BtSum => "bt_sum",
+            Variant::BtSumG128 => "bt_sum_g128",
+            Variant::VicOff => "vic_off",
+            Variant::VicSum => "vic_sum",
+            Variant::VicSumG128 => "vic_sum_g128",
+        }
+    }
+
+    /// Parse from the artifact-name fragment.
+    pub fn parse(s: &str) -> Result<Variant> {
+        Ok(match s {
+            "bt_off" => Variant::BtOff,
+            "bt_sum" => Variant::BtSum,
+            "bt_sum_g128" => Variant::BtSumG128,
+            "vic_off" => Variant::VicOff,
+            "vic_sum" => Variant::VicSum,
+            "vic_sum_g128" => Variant::VicSumG128,
+            other => bail!("unknown variant '{other}'"),
+        })
+    }
+
+    /// All variants, in the paper's table order.
+    pub fn all() -> [Variant; 6] {
+        [
+            Variant::BtOff,
+            Variant::BtSum,
+            Variant::BtSumG128,
+            Variant::VicOff,
+            Variant::VicSum,
+            Variant::VicSumG128,
+        ]
+    }
+
+    /// Whether this is one of the proposed (FFT) regularizers.
+    pub fn is_proposed(&self) -> bool {
+        !matches!(self, Variant::BtOff | Variant::VicOff)
+    }
+}
+
+/// Full training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Artifact preset name ("tiny" | "small" | "e2e") — must match an
+    /// emitted `train_<variant>_<preset>` artifact.
+    pub preset: String,
+    /// Loss variant.
+    pub variant: Variant,
+    /// Number of epochs.
+    pub epochs: usize,
+    /// Steps per epoch.
+    pub steps_per_epoch: usize,
+    /// Base learning rate (scaled by the warmup+cosine schedule).
+    pub lr: f32,
+    /// Linear warmup epochs.
+    pub warmup_epochs: usize,
+    /// Master seed (dataset, augmentations, permutations, init).
+    pub seed: u64,
+    /// Permute features every batch (§4.3). Ablation switch.
+    pub permute: bool,
+    /// Data-loader worker threads.
+    pub loader_workers: usize,
+    /// Prefetch queue depth.
+    pub prefetch: usize,
+    /// Virtual dataset size (indices wrap).
+    pub epoch_size: u64,
+    /// Artifact directory.
+    pub artifact_dir: String,
+    /// Output directory (metrics, checkpoints).
+    pub out_dir: String,
+    /// Log every k steps.
+    pub log_every: usize,
+    /// Extra artifact-name suffix after the variant (e.g. "_q1" for the
+    /// Table-11 q-exponent ablation artifacts).
+    pub artifact_suffix: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "tiny".into(),
+            variant: Variant::BtSum,
+            epochs: 2,
+            steps_per_epoch: 20,
+            lr: 0.2,
+            warmup_epochs: 1,
+            seed: 17,
+            permute: true,
+            loader_workers: 2,
+            prefetch: 4,
+            epoch_size: 4096,
+            artifact_dir: "artifacts".into(),
+            out_dir: "runs/default".into(),
+            log_every: 10,
+            artifact_suffix: String::new(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Smallest runnable config (unit/integration tests).
+    pub fn preset_tiny() -> TrainConfig {
+        TrainConfig::default()
+    }
+
+    /// The end-to-end training preset (~2.4 M params, d=2048).
+    pub fn preset_e2e() -> TrainConfig {
+        TrainConfig {
+            preset: "e2e".into(),
+            epochs: 10,
+            steps_per_epoch: 40,
+            lr: 0.25,
+            warmup_epochs: 2,
+            epoch_size: 5120,
+            out_dir: "runs/e2e".into(),
+            ..TrainConfig::default()
+        }
+    }
+
+    /// Mid-size preset for ablations.
+    pub fn preset_small() -> TrainConfig {
+        TrainConfig {
+            preset: "small".into(),
+            epochs: 6,
+            steps_per_epoch: 30,
+            lr: 0.25,
+            warmup_epochs: 1,
+            epoch_size: 2048,
+            out_dir: "runs/small".into(),
+            ..TrainConfig::default()
+        }
+    }
+
+    /// Look up a named preset.
+    pub fn preset(name: &str) -> Result<TrainConfig> {
+        Ok(match name {
+            "tiny" => Self::preset_tiny(),
+            "small" => Self::preset_small(),
+            "e2e" => Self::preset_e2e(),
+            other => bail!("unknown preset '{other}'"),
+        })
+    }
+
+    /// Apply a parsed TOML document (section "train" or top level).
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        for (key, value) in doc.section("train").chain(doc.section("")) {
+            self.apply_kv(key, &value.to_string_raw())?;
+        }
+        Ok(())
+    }
+
+    /// Apply CLI overrides (consumes the known flags).
+    pub fn apply_args(&mut self, args: &mut Args) -> Result<()> {
+        for key in [
+            "preset",
+            "variant",
+            "epochs",
+            "steps-per-epoch",
+            "lr",
+            "warmup-epochs",
+            "seed",
+            "permute",
+            "loader-workers",
+            "prefetch",
+            "epoch-size",
+            "artifact-dir",
+            "out-dir",
+            "log-every",
+        ] {
+            if let Some(v) = args.flag(key) {
+                if key == "preset" {
+                    // preset re-bases everything, then later flags override
+                    let keep_variant = self.variant;
+                    *self = TrainConfig::preset(&v)?;
+                    self.variant = keep_variant;
+                } else {
+                    self.apply_kv(&key.replace('-', "_"), &v)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_kv(&mut self, key: &str, v: &str) -> Result<()> {
+        match key {
+            "preset" => self.preset = v.to_string(),
+            "variant" => self.variant = Variant::parse(v)?,
+            "epochs" => self.epochs = v.parse()?,
+            "steps_per_epoch" => self.steps_per_epoch = v.parse()?,
+            "lr" => self.lr = v.parse()?,
+            "warmup_epochs" => self.warmup_epochs = v.parse()?,
+            "seed" => self.seed = v.parse()?,
+            "permute" => self.permute = v.parse()?,
+            "loader_workers" => self.loader_workers = v.parse()?,
+            "prefetch" => self.prefetch = v.parse()?,
+            "epoch_size" => self.epoch_size = v.parse()?,
+            "artifact_dir" => self.artifact_dir = v.to_string(),
+            "out_dir" => self.out_dir = v.to_string(),
+            "log_every" => self.log_every = v.parse()?,
+            "artifact_suffix" => self.artifact_suffix = v.to_string(),
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Total optimizer steps.
+    pub fn total_steps(&self) -> usize {
+        self.epochs * self.steps_per_epoch
+    }
+
+    /// The train artifact name for this config.
+    pub fn train_artifact(&self) -> String {
+        format!(
+            "train_{}{}_{}",
+            self.variant.as_str(),
+            self.artifact_suffix,
+            self.preset
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_roundtrip() {
+        for v in Variant::all() {
+            assert_eq!(Variant::parse(v.as_str()).unwrap(), v);
+        }
+        assert!(Variant::parse("nope").is_err());
+        assert!(Variant::BtSum.is_proposed());
+        assert!(!Variant::BtOff.is_proposed());
+    }
+
+    #[test]
+    fn presets_resolve() {
+        assert_eq!(TrainConfig::preset("e2e").unwrap().preset, "e2e");
+        assert!(TrainConfig::preset("nope").is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut args = Args::parse_from(
+            ["train", "--epochs", "7", "--variant", "vic_sum", "--lr", "0.5"]
+                .into_iter()
+                .map(String::from),
+        )
+        .unwrap();
+        let mut cfg = TrainConfig::default();
+        cfg.variant = Variant::parse(&args.str_or("variant", cfg.variant.as_str())).unwrap();
+        cfg.apply_args(&mut args).unwrap();
+        assert_eq!(cfg.epochs, 7);
+        assert_eq!(cfg.variant, Variant::VicSum);
+        assert_eq!(cfg.lr, 0.5);
+        args.finish().unwrap();
+    }
+
+    #[test]
+    fn toml_applies() {
+        let doc = parse_toml(
+            "[train]\nepochs = 3\nlr = 0.125\npermute = false\nvariant = \"bt_off\"\n",
+        )
+        .unwrap();
+        let mut cfg = TrainConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.epochs, 3);
+        assert_eq!(cfg.lr, 0.125);
+        assert!(!cfg.permute);
+        assert_eq!(cfg.variant, Variant::BtOff);
+    }
+
+    #[test]
+    fn artifact_name() {
+        let cfg = TrainConfig::default();
+        assert_eq!(cfg.train_artifact(), "train_bt_sum_tiny");
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = TrainConfig::default();
+        assert!(cfg.apply_kv("bogus", "1").is_err());
+    }
+}

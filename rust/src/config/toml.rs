@@ -1,0 +1,161 @@
+//! A TOML-subset parser: `[section]` headers and `key = value` pairs with
+//! string / integer / float / boolean values, `#` comments. Enough for the
+//! coordinator's config files without external crates.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl TomlValue {
+    /// The raw textual payload (strings unquoted) — config keys parse from
+    /// this uniformly.
+    pub fn to_string_raw(&self) -> String {
+        match self {
+            TomlValue::Str(s) => s.clone(),
+            TomlValue::Int(i) => i.to_string(),
+            TomlValue::Float(f) => f.to_string(),
+            TomlValue::Bool(b) => b.to_string(),
+        }
+    }
+}
+
+/// A parsed document: `(section, key) → value`. Top-level keys use the
+/// empty section name.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    /// Iterate `(key, value)` pairs of one section.
+    pub fn section<'a>(
+        &'a self,
+        name: &'a str,
+    ) -> impl Iterator<Item = (&'a str, &'a TomlValue)> + 'a {
+        self.entries
+            .iter()
+            .filter(move |((s, _), _)| s == name)
+            .map(|((_, k), v)| (k.as_str(), v))
+    }
+
+    /// Single-value lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("line {}: expected 'key = value'", lineno + 1);
+        };
+        let key = key.trim().to_string();
+        let value = parse_value(value.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.entries.insert((section.clone(), key), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue> {
+    if let Some(rest) = v.strip_prefix('"') {
+        let Some(s) = rest.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        return Ok(TomlValue::Str(s.to_string()));
+    }
+    match v {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{v}'");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml(
+            "top = 1\n[train]\nlr = 0.3 # comment\nname = \"x # y\"\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("train", "lr"), Some(&TomlValue::Float(0.3)));
+        assert_eq!(
+            doc.get("train", "name"),
+            Some(&TomlValue::Str("x # y".into()))
+        );
+        assert_eq!(doc.get("train", "flag"), Some(&TomlValue::Bool(true)));
+    }
+
+    #[test]
+    fn section_iteration() {
+        let doc = parse_toml("[a]\nx = 1\ny = 2\n[b]\nz = 3\n").unwrap();
+        let a: Vec<_> = doc.section("a").map(|(k, _)| k).collect();
+        assert_eq!(a, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(parse_toml("[oops\n").is_err());
+        assert!(parse_toml("bare\n").is_err());
+        assert!(parse_toml("x = \"unterminated\n").is_err());
+        assert!(parse_toml("x = what\n").is_err());
+    }
+
+    #[test]
+    fn raw_conversion() {
+        assert_eq!(TomlValue::Int(5).to_string_raw(), "5");
+        assert_eq!(TomlValue::Bool(false).to_string_raw(), "false");
+        assert_eq!(TomlValue::Str("s".into()).to_string_raw(), "s");
+    }
+}

@@ -1,0 +1,179 @@
+//! Checkpoint I/O (format shared with `python/compile/aot.py`).
+//!
+//! ```text
+//! line 1: DECORRCKPT1
+//! line 2: {"tensors": [{"name", "shape", "dtype"}, ...]}      (JSON)
+//! rest:   concatenated little-endian f32 payloads in header order
+//! ```
+//!
+//! Used for the jax-emitted initial parameters (`artifacts/init_*.ckpt`)
+//! and for the trainer's own checkpoints.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::tensor::Tensor;
+
+const MAGIC: &str = "DECORRCKPT1";
+
+/// A named tensor collection (parameter snapshot).
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    /// (name, tensor) pairs in file order.
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    /// Look up a tensor by name.
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.tensors.iter().map(|(_, t)| t.len()).sum()
+    }
+
+    /// Write to disk.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut specs = Vec::new();
+        for (name, t) in &self.tensors {
+            specs.push(json::obj(vec![
+                ("name", Json::Str(name.clone())),
+                (
+                    "shape",
+                    Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect()),
+                ),
+                ("dtype", Json::Str("f32".into())),
+            ]));
+        }
+        let header = json::obj(vec![("tensors", Json::Arr(specs))]);
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path.as_ref())
+                .with_context(|| format!("creating {}", path.as_ref().display()))?,
+        );
+        writeln!(f, "{MAGIC}")?;
+        writeln!(f, "{}", header.to_string_compact())?;
+        for (_, t) in &self.tensors {
+            for v in t.data() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Read from disk.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut raw = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?
+            .read_to_end(&mut raw)?;
+        let nl1 = raw
+            .iter()
+            .position(|&b| b == b'\n')
+            .context("missing magic line")?;
+        if &raw[..nl1] != MAGIC.as_bytes() {
+            bail!("bad checkpoint magic in {}", path.as_ref().display());
+        }
+        let nl2 = nl1
+            + 1
+            + raw[nl1 + 1..]
+                .iter()
+                .position(|&b| b == b'\n')
+                .context("missing header line")?;
+        let header = json::parse(std::str::from_utf8(&raw[nl1 + 1..nl2])?)?;
+        let specs = header
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .context("header missing tensors")?;
+        let mut offset = nl2 + 1;
+        let mut tensors = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let name = spec
+                .get("name")
+                .and_then(Json::as_str)
+                .context("tensor missing name")?
+                .to_string();
+            let shape: Vec<usize> = spec
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("tensor missing shape")?
+                .iter()
+                .map(|d| d.as_usize().context("bad dim"))
+                .collect::<Result<_>>()?;
+            let count: usize = shape.iter().product();
+            let bytes = count * 4;
+            if offset + bytes > raw.len() {
+                bail!("checkpoint truncated at tensor '{name}'");
+            }
+            let mut data = Vec::with_capacity(count);
+            for chunk in raw[offset..offset + bytes].chunks_exact(4) {
+                data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+            }
+            offset += bytes;
+            tensors.push((name, Tensor::from_vec(&shape, data)));
+        }
+        if offset != raw.len() {
+            bail!("checkpoint has {} trailing bytes", raw.len() - offset);
+        }
+        Ok(Checkpoint { tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            tensors: vec![
+                ("params.a".into(), Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.])),
+                ("params.b".into(), Tensor::from_vec(&[], vec![42.0])),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("decorr_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.get("params.a").unwrap().data(), ck.get("params.a").unwrap().data());
+        assert_eq!(back.get("params.b").unwrap().data(), &[42.0]);
+        assert_eq!(back.num_params(), 7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("decorr_ckpt_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOPE\n{}\n").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let dir = std::env::temp_dir().join(format!("decorr_ckpt_tr_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        sample().save(&path).unwrap();
+        let mut raw = std::fs::read(&path).unwrap();
+        raw.truncate(raw.len() - 3);
+        std::fs::write(&path, raw).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,507 @@
+//! Simulated distributed-data-parallel training (paper Appendix E.3).
+//!
+//! K worker threads each own a PJRT engine and a per-shard gradient
+//! executable (`grad_<variant>_<preset>_s<K>`); the leader broadcasts the
+//! current parameters, shards the twin-view batch, averages the returned
+//! gradients, and applies the optimizer step through the `apply_<preset>`
+//! artifact.
+//!
+//! This reproduces the *semantics* the paper leans on: the proposed
+//! regularizer is computed **per shard with no collective operations**
+//! (its spectral statistics need only the local batch — Appendix F "we do
+//! not conduct collective operations"), so data parallelism is plain
+//! gradient averaging. With K = 1 a DDP step is mathematically identical
+//! to the monolithic fused train step, which the integration tests check.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data::{AugmentConfig, BatchLoader, ShapeWorld, ShapeWorldConfig, SslBatch};
+use crate::runtime::{Engine, ParamStore, TensorSpec};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+use super::checkpoint::Checkpoint;
+use super::metrics::{MetricsLogger, StepMetrics};
+use super::schedule::LrSchedule;
+use super::trainer::{literal_f32, literal_i32, scalar, InputAdapter, TrainReport};
+
+/// Work order broadcast to a worker for one step.
+struct ShardJob {
+    params: Arc<Vec<(String, Tensor)>>,
+    xa: Tensor,
+    xb: Tensor,
+    perm: Arc<Vec<u32>>,
+}
+
+/// Gradients + metrics returned by a worker.
+struct ShardResult {
+    grads: Vec<(String, Tensor)>,
+    loss: f32,
+    inv: f32,
+    reg: f32,
+}
+
+struct Worker {
+    tx: mpsc::Sender<ShardJob>,
+    rx: mpsc::Receiver<Result<ShardResult>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The DDP leader: owns the apply executable and the parameter store,
+/// delegates gradient computation to shard workers.
+pub struct DdpTrainer {
+    /// Run configuration (batch size read from the grad manifest × shards).
+    pub cfg: TrainConfig,
+    shards: usize,
+    workers: Vec<Worker>,
+    apply: crate::runtime::Artifact,
+    params: ParamStore,
+    opt: ParamStore,
+    param_specs: Vec<TensorSpec>,
+    opt_specs: Vec<TensorSpec>,
+    grad_names: Vec<String>,
+    shard_batch: usize,
+    embed_dim: usize,
+    adapter: InputAdapter,
+    rng: Rng,
+    sched: LrSchedule,
+    metrics: MetricsLogger,
+    global_step: usize,
+}
+
+impl DdpTrainer {
+    /// Spawn `shards` workers and compile the leader-side apply artifact.
+    pub fn new(cfg: TrainConfig, shards: usize) -> Result<DdpTrainer> {
+        anyhow::ensure!(shards >= 1, "need at least one shard");
+        let grad_name = format!("grad_{}_{}_s{}", cfg.variant.as_str(), cfg.preset, shards);
+        let engine = Engine::cpu(&cfg.artifact_dir)?;
+        let apply = engine
+            .load_artifact(&format!("apply_{}", cfg.preset))
+            .context("loading apply artifact")?;
+
+        // Leader-side parameter/optimizer stores (from the apply manifest).
+        let manifest = apply.manifest().clone();
+        let param_specs: Vec<TensorSpec> = manifest
+            .inputs_with_prefix("params.")
+            .into_iter()
+            .cloned()
+            .collect();
+        let opt_specs: Vec<TensorSpec> = manifest
+            .inputs_with_prefix("opt_state.")
+            .into_iter()
+            .cloned()
+            .collect();
+        let grad_names: Vec<String> = manifest
+            .inputs_with_prefix("grads.")
+            .into_iter()
+            .map(|s| s.name.clone())
+            .collect();
+        anyhow::ensure!(!grad_names.is_empty(), "apply artifact missing grads inputs");
+
+        let init_path = format!("{}/init_{}.ckpt", cfg.artifact_dir, cfg.preset);
+        let ckpt = Checkpoint::load(&init_path)?;
+        let params = ParamStore::from_checkpoint(&ckpt, &param_specs.iter().collect::<Vec<_>>())?;
+        let opt = ParamStore::zeros(&opt_specs.iter().collect::<Vec<_>>())?;
+
+        // Probe one worker artifact's manifest on the leader to learn the
+        // shard batch size / input shape, then spawn the workers.
+        let probe = engine.load_artifact(&grad_name)?;
+        let x_idx = probe
+            .manifest()
+            .input_index("xa")
+            .context("grad manifest missing xa")?;
+        let shard_batch = probe.manifest().inputs[x_idx].shape[0];
+        let adapter = InputAdapter::for_shape(&probe.manifest().inputs[x_idx].shape[1..])?;
+        let embed_dim = probe
+            .manifest()
+            .meta_usize("d")
+            .context("grad manifest missing meta.d")?;
+        drop(probe);
+
+        let mut workers = Vec::with_capacity(shards);
+        for wid in 0..shards {
+            workers.push(spawn_worker(
+                wid,
+                cfg.artifact_dir.clone(),
+                grad_name.clone(),
+            )?);
+        }
+
+        let sched = LrSchedule::from_epochs(cfg.lr, cfg.warmup_epochs, cfg.epochs, cfg.steps_per_epoch);
+        let metrics = if cfg.out_dir.is_empty() {
+            MetricsLogger::in_memory()
+        } else {
+            MetricsLogger::new(&cfg.out_dir)?
+        };
+        // Same permutation stream constant as Trainer so K-shard runs see
+        // identical permutations for equivalence checks.
+        let rng = Rng::new(cfg.seed ^ 0xDEC0_44C0_4D1A_7031);
+        Ok(DdpTrainer {
+            cfg,
+            shards,
+            workers,
+            apply,
+            params,
+            opt,
+            param_specs,
+            opt_specs,
+            grad_names,
+            shard_batch,
+            embed_dim,
+            adapter,
+            rng,
+            sched,
+            metrics,
+            global_step: 0,
+        })
+    }
+
+    /// Global batch size = shard batch × shards.
+    pub fn batch_size(&self) -> usize {
+        self.shard_batch * self.shards
+    }
+
+    /// Number of shards (workers).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The input adapter.
+    pub fn input_adapter(&self) -> InputAdapter {
+        self.adapter
+    }
+
+    /// Current parameters as a host checkpoint.
+    pub fn snapshot(&self) -> Result<Checkpoint> {
+        self.params
+            .to_checkpoint(&self.param_specs.iter().collect::<Vec<_>>())
+    }
+
+    /// One DDP step: broadcast params → shard grads → average → apply.
+    pub fn step(&mut self, batch: &SslBatch, epoch: usize) -> Result<StepMetrics> {
+        let t0 = Instant::now();
+        let lr = self.sched.lr(self.global_step);
+        let perm: Arc<Vec<u32>> = Arc::new(if self.cfg.permute {
+            self.rng.permutation(self.embed_dim)
+        } else {
+            (0..self.embed_dim as u32).collect()
+        });
+
+        // Broadcast snapshot of the parameters.
+        let host_params: Arc<Vec<(String, Tensor)>> =
+            Arc::new(self.snapshot()?.tensors);
+
+        // Shard the batch row-wise and dispatch.
+        let xa = self.adapter.apply(&batch.view_a.images);
+        let xb = self.adapter.apply(&batch.view_b.images);
+        anyhow::ensure!(
+            xa.shape()[0] == self.batch_size(),
+            "batch is {} rows, ddp expects {}",
+            xa.shape()[0],
+            self.batch_size()
+        );
+        for (wid, worker) in self.workers.iter().enumerate() {
+            let job = ShardJob {
+                params: host_params.clone(),
+                xa: slice_rows(&xa, wid * self.shard_batch, self.shard_batch),
+                xb: slice_rows(&xb, wid * self.shard_batch, self.shard_batch),
+                perm: perm.clone(),
+            };
+            worker
+                .tx
+                .send(job)
+                .map_err(|_| anyhow::anyhow!("worker {wid} died"))?;
+        }
+
+        // Collect + average.
+        let mut acc: Option<Vec<(String, Tensor)>> = None;
+        let mut loss = 0.0f32;
+        let mut inv = 0.0f32;
+        let mut reg = 0.0f32;
+        for worker in &self.workers {
+            let result = worker
+                .rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("worker channel closed"))??;
+            loss += result.loss;
+            inv += result.inv;
+            reg += result.reg;
+            match &mut acc {
+                None => acc = Some(result.grads),
+                Some(acc) => {
+                    for ((_, a), (_, g)) in acc.iter_mut().zip(&result.grads) {
+                        for (av, gv) in a.data_mut().iter_mut().zip(g.data()) {
+                            *av += gv;
+                        }
+                    }
+                }
+            }
+        }
+        let mut grads = acc.context("no shards returned")?;
+        let inv_k = 1.0 / self.shards as f32;
+        for (_, g) in &mut grads {
+            for v in g.data_mut() {
+                *v *= inv_k;
+            }
+        }
+        loss *= inv_k;
+        inv *= inv_k;
+        reg *= inv_k;
+        if !loss.is_finite() {
+            bail!("non-finite loss at ddp step {}", self.global_step);
+        }
+
+        // Apply the optimizer update on the leader.
+        let grad_lits: Vec<(String, xla::Literal)> = self
+            .grad_names
+            .iter()
+            .zip(&grads)
+            .map(|(name, (gname, t))| {
+                debug_assert_eq!(name.trim_start_matches("grads."), gname.trim_start_matches("grads."));
+                Ok((name.clone(), literal_f32(t)?))
+            })
+            .collect::<Result<_>>()?;
+        let lr_lit = xla::Literal::vec1(&[lr])
+            .reshape(&[])
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let manifest = self.apply.manifest().clone();
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(manifest.inputs.len());
+        for spec in &manifest.inputs {
+            if spec.name.starts_with("params.") {
+                inputs.push(self.params.get(&spec.name)?);
+            } else if spec.name.starts_with("opt_state.") {
+                inputs.push(self.opt.get(&spec.name)?);
+            } else if spec.name.starts_with("grads.") {
+                let (_, lit) = grad_lits
+                    .iter()
+                    .find(|(n, _)| n == &spec.name)
+                    .context("missing grad literal")?;
+                inputs.push(lit);
+            } else if spec.name == "lr" {
+                inputs.push(&lr_lit);
+            } else {
+                bail!("unexpected apply input '{}'", spec.name);
+            }
+        }
+        let outputs = self.apply.execute_literals_ref(&inputs)?;
+        for (spec, lit) in manifest.outputs.iter().zip(outputs) {
+            if spec.name.starts_with("params.") {
+                self.params.put(&spec.name, lit)?;
+            } else if spec.name.starts_with("opt_state.") {
+                self.opt.put(&spec.name, lit)?;
+            } else {
+                bail!("unexpected apply output '{}'", spec.name);
+            }
+        }
+
+        let m = StepMetrics {
+            step: self.global_step,
+            epoch,
+            lr,
+            loss,
+            inv,
+            reg,
+            step_time: t0.elapsed().as_secs_f64(),
+        };
+        self.global_step += 1;
+        Ok(m)
+    }
+
+    /// Run the configured loop with the prefetching loader.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let dataset = ShapeWorld::new(ShapeWorldConfig {
+            seed: self.cfg.seed,
+            ..Default::default()
+        });
+        let loader = BatchLoader::new(
+            dataset,
+            AugmentConfig::default(),
+            self.batch_size(),
+            self.cfg.epoch_size,
+            self.cfg.seed,
+            self.cfg.loader_workers,
+            self.cfg.prefetch,
+        );
+        let t0 = Instant::now();
+        let total = self.cfg.total_steps();
+        for epoch in 0..self.cfg.epochs {
+            for _ in 0..self.cfg.steps_per_epoch {
+                let batch = loader.next();
+                let m = self.step(&batch, epoch)?;
+                if m.step % self.cfg.log_every == 0 || m.step + 1 == total {
+                    println!(
+                        "[ddp x{}] step {:>5}/{} loss {:.4} ({:.0} ms)",
+                        self.shards,
+                        m.step,
+                        total,
+                        m.loss,
+                        m.step_time * 1e3
+                    );
+                }
+                self.metrics.log(m)?;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let hist = self.metrics.history();
+        let k = (total / 10).clamp(1, 20);
+        let initial =
+            hist[..k.min(hist.len())].iter().map(|m| m.loss).sum::<f32>() / k.min(hist.len()) as f32;
+        Ok(TrainReport {
+            initial_loss: initial,
+            final_loss: self.metrics.recent_loss(k),
+            steps: total,
+            wall_seconds: wall,
+            steps_per_sec: total as f64 / wall,
+        })
+    }
+
+    /// Metrics so far.
+    pub fn metrics(&self) -> &MetricsLogger {
+        &self.metrics
+    }
+
+    /// Optimizer-state specs (diagnostics).
+    pub fn opt_specs(&self) -> &[TensorSpec] {
+        &self.opt_specs
+    }
+}
+
+impl Drop for DdpTrainer {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            // Closing the job channel stops the worker loop.
+            let (tx, _rx) = mpsc::channel();
+            drop(std::mem::replace(&mut w.tx, tx));
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Row-slice a (n, f...) tensor into (count, f...).
+fn slice_rows(t: &Tensor, start: usize, count: usize) -> Tensor {
+    let shape = t.shape();
+    let stride: usize = shape[1..].iter().product();
+    let mut out_shape = shape.to_vec();
+    out_shape[0] = count;
+    Tensor::from_vec(
+        &out_shape,
+        t.data()[start * stride..(start + count) * stride].to_vec(),
+    )
+}
+
+fn spawn_worker(wid: usize, artifact_dir: String, grad_name: String) -> Result<Worker> {
+    let (job_tx, job_rx) = mpsc::channel::<ShardJob>();
+    let (res_tx, res_rx) = mpsc::channel::<Result<ShardResult>>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let handle = std::thread::Builder::new()
+        .name(format!("ddp-worker-{wid}"))
+        .spawn(move || {
+            // Each worker owns its engine + executable (PJRT handles are
+            // not Send, so they must be created on the worker thread).
+            let setup = (|| -> Result<_> {
+                let engine = Engine::cpu(&artifact_dir)?;
+                let artifact = engine.load_artifact(&grad_name)?;
+                Ok((engine, artifact))
+            })();
+            let (_engine, artifact) = match setup {
+                Ok(v) => {
+                    let _ = ready_tx.send(Ok(()));
+                    v
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let manifest = artifact.manifest().clone();
+            while let Ok(job) = job_rx.recv() {
+                let result = (|| -> Result<ShardResult> {
+                    let xa_lit = literal_f32(&job.xa)?;
+                    let xb_lit = literal_f32(&job.xb)?;
+                    let perm_lit = literal_i32(&job.perm)?;
+                    let mut param_lits = Vec::new();
+                    for spec in manifest.inputs_with_prefix("params.") {
+                        let (_, t) = job
+                            .params
+                            .iter()
+                            .find(|(n, _)| n == &spec.name)
+                            .with_context(|| format!("broadcast missing {}", spec.name))?;
+                        param_lits.push(literal_f32(t)?);
+                    }
+                    let mut inputs: Vec<&xla::Literal> = Vec::new();
+                    let mut pi = 0;
+                    for spec in &manifest.inputs {
+                        if spec.name.starts_with("params.") {
+                            inputs.push(&param_lits[pi]);
+                            pi += 1;
+                        } else {
+                            match spec.name.as_str() {
+                                "xa" => inputs.push(&xa_lit),
+                                "xb" => inputs.push(&xb_lit),
+                                "perm" => inputs.push(&perm_lit),
+                                other => bail!("unexpected grad input '{other}'"),
+                            }
+                        }
+                    }
+                    let outputs = artifact.execute_literals_ref(&inputs)?;
+                    let mut grads = Vec::new();
+                    let mut loss = f32::NAN;
+                    let mut inv = f32::NAN;
+                    let mut reg = f32::NAN;
+                    for (spec, lit) in manifest.outputs.iter().zip(outputs) {
+                        if spec.name.starts_with("grads.") {
+                            let data = lit
+                                .to_vec::<f32>()
+                                .map_err(|e| anyhow::anyhow!("{e}"))?;
+                            grads.push((spec.name.clone(), Tensor::from_vec(&spec.shape, data)));
+                        } else {
+                            match spec.name.as_str() {
+                                "loss" => loss = scalar(&lit)?,
+                                "inv" => inv = scalar(&lit)?,
+                                "reg" => reg = scalar(&lit)?,
+                                other => bail!("unexpected grad output '{other}'"),
+                            }
+                        }
+                    }
+                    Ok(ShardResult {
+                        grads,
+                        loss,
+                        inv,
+                        reg,
+                    })
+                })();
+                if res_tx.send(result).is_err() {
+                    break;
+                }
+            }
+        })?;
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("worker {wid} died during setup"))??;
+    Ok(Worker {
+        tx: job_tx,
+        rx: res_rx,
+        handle: Some(handle),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_rows_extracts() {
+        let t = Tensor::from_vec(&[4, 2], vec![0., 1., 2., 3., 4., 5., 6., 7.]);
+        let s = slice_rows(&t, 1, 2);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2., 3., 4., 5.]);
+    }
+}

@@ -1,0 +1,319 @@
+//! Linear evaluation protocol (paper §5.1): freeze the backbone, extract
+//! representations through the `embed_<preset>` artifact, train a linear
+//! classifier on labelled data, report top-1 accuracy.
+//!
+//! The classifier is multinomial logistic regression trained full-batch in
+//! rust (features are ≤ a few hundred dims, classes ≤ 10 — no need for a
+//! device round-trip). Features are standardized with statistics from the
+//! training split only.
+
+use anyhow::{Context, Result};
+
+use crate::data::synth::ShapeWorld;
+use crate::runtime::{Artifact, Engine, ParamStore};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+use super::checkpoint::Checkpoint;
+use super::trainer::{literal_f32, InputAdapter};
+
+/// Extract backbone features for `count` dataset samples (unaugmented),
+/// batched at the artifact's fixed batch size.
+pub fn extract_features(
+    embed: &Artifact,
+    params: &Checkpoint,
+    dataset: &ShapeWorld,
+    start: u64,
+    count: usize,
+    adapter: InputAdapter,
+) -> Result<(Tensor, Vec<u32>)> {
+    let manifest = embed.manifest();
+    let param_specs = manifest.inputs_with_prefix("params.");
+    let store = ParamStore::from_checkpoint(params, &param_specs)?;
+    let x_idx = manifest.input_index("x").context("embed missing x")?;
+    let batch = manifest.inputs[x_idx].shape[0];
+    let repr_dim = manifest.outputs[0].shape[1];
+
+    let mut feats = Tensor::zeros(&[count, repr_dim]);
+    let mut labels = Vec::with_capacity(count);
+    let mut done = 0;
+    while done < count {
+        let take = batch.min(count - done);
+        // Build a full batch (pad by wrapping) and adapt to the input shape.
+        let samples = dataset.samples(start + done as u64, batch);
+        let stacked = crate::data::stack(&samples);
+        let x = adapter.apply(&stacked.images);
+        let x_lit = literal_f32(&x)?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(manifest.inputs.len());
+        for spec in &manifest.inputs {
+            if spec.name == "x" {
+                inputs.push(&x_lit);
+            } else {
+                inputs.push(store.get(&spec.name)?);
+            }
+        }
+        let out = embed.execute_literals_ref(&inputs)?;
+        let data = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        for i in 0..take {
+            feats.row_mut(done + i)
+                .copy_from_slice(&data[i * repr_dim..(i + 1) * repr_dim]);
+            labels.push(samples[i].label);
+        }
+        done += take;
+    }
+    Ok((feats, labels))
+}
+
+/// Multinomial logistic regression with bias, full-batch gradient descent
+/// with Nesterov-free momentum and feature standardization.
+#[derive(Clone, Debug)]
+pub struct LinearProbe {
+    /// Weights, (classes, features + 1) — last column is the bias.
+    w: Tensor,
+    mean: Vec<f32>,
+    std: Vec<f32>,
+}
+
+impl LinearProbe {
+    /// Train on (n, f) features with labels in `0..classes`.
+    pub fn train(
+        feats: &Tensor,
+        labels: &[u32],
+        classes: usize,
+        epochs: usize,
+        lr: f32,
+        seed: u64,
+    ) -> LinearProbe {
+        let (n, f) = (feats.shape()[0], feats.shape()[1]);
+        assert_eq!(labels.len(), n);
+        let mean = feats.col_means();
+        let std = feats.col_stds(&mean);
+        let x = Self::standardized(feats, &mean, &std);
+
+        let mut rng = Rng::new(seed);
+        let mut w = Tensor::zeros(&[classes, f + 1]);
+        for v in w.data_mut() {
+            *v = 0.01 * rng.gaussian();
+        }
+        let mut vel = Tensor::zeros(&[classes, f + 1]);
+        let momentum = 0.9f32;
+        let inv_n = 1.0 / n as f32;
+
+        let mut logits = vec![0.0f32; classes];
+        let mut grad = Tensor::zeros(&[classes, f + 1]);
+        for _epoch in 0..epochs {
+            grad.data_mut().fill(0.0);
+            for i in 0..n {
+                let xi = x.row(i);
+                Self::logits_into(&w, xi, &mut logits);
+                softmax_inplace(&mut logits);
+                for (c, p) in logits.iter().enumerate() {
+                    let err = p - if labels[i] as usize == c { 1.0 } else { 0.0 };
+                    let grow = grad.row_mut(c);
+                    for (g, &xv) in grow[..f].iter_mut().zip(xi) {
+                        *g += err * xv;
+                    }
+                    grow[f] += err;
+                }
+            }
+            for ((w, v), g) in w
+                .data_mut()
+                .iter_mut()
+                .zip(vel.data_mut())
+                .zip(grad.data())
+            {
+                *v = momentum * *v + g * inv_n;
+                *w -= lr * *v;
+            }
+        }
+        LinearProbe { w, mean, std }
+    }
+
+    fn standardized(feats: &Tensor, mean: &[f32], std: &[f32]) -> Tensor {
+        let (n, f) = (feats.shape()[0], feats.shape()[1]);
+        let mut x = feats.clone();
+        for i in 0..n {
+            let row = x.row_mut(i);
+            for j in 0..f {
+                row[j] = (row[j] - mean[j]) / std[j].max(1e-5);
+            }
+        }
+        x
+    }
+
+    fn logits_into(w: &Tensor, xi: &[f32], out: &mut [f32]) {
+        let f = xi.len();
+        for (c, o) in out.iter_mut().enumerate() {
+            let row = w.row(c);
+            let mut acc = row[f]; // bias
+            for (wv, xv) in row[..f].iter().zip(xi) {
+                acc += wv * xv;
+            }
+            *o = acc;
+        }
+    }
+
+    /// Predicted class per row.
+    pub fn predict(&self, feats: &Tensor) -> Vec<u32> {
+        let x = Self::standardized(feats, &self.mean, &self.std);
+        let classes = self.w.shape()[0];
+        let mut logits = vec![0.0f32; classes];
+        (0..x.shape()[0])
+            .map(|i| {
+                Self::logits_into(&self.w, x.row(i), &mut logits);
+                argmax(&logits) as u32
+            })
+            .collect()
+    }
+
+    /// Top-1 accuracy on a labelled set.
+    pub fn accuracy(&self, feats: &Tensor, labels: &[u32]) -> f32 {
+        let pred = self.predict(feats);
+        let correct = pred
+            .iter()
+            .zip(labels)
+            .filter(|(p, l)| p == l)
+            .count();
+        correct as f32 / labels.len().max(1) as f32
+    }
+}
+
+fn softmax_inplace(v: &mut [f32]) {
+    let max = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in v.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    for x in v.iter_mut() {
+        *x /= sum;
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// End-to-end linear evaluation: extract train/test features through the
+/// embed artifact and fit + score a probe.
+pub struct EvalResult {
+    /// Top-1 accuracy on held-out samples.
+    pub top1: f32,
+    /// Training-split accuracy (sanity/overfit signal).
+    pub train_top1: f32,
+}
+
+/// Run the full protocol. `train_count`/`test_count` samples are drawn from
+/// disjoint index ranges of the (virtual) dataset.
+#[allow(clippy::too_many_arguments)]
+pub fn linear_eval(
+    engine: &Engine,
+    preset: &str,
+    params: &Checkpoint,
+    dataset: &ShapeWorld,
+    adapter: InputAdapter,
+    train_count: usize,
+    test_count: usize,
+    probe_epochs: usize,
+) -> Result<EvalResult> {
+    let embed = engine.load_artifact(&format!("embed_{preset}"))?;
+    let (train_x, train_y) =
+        extract_features(&embed, params, dataset, 0, train_count, adapter)?;
+    let (test_x, test_y) = extract_features(
+        &embed,
+        params,
+        dataset,
+        train_count as u64 + 100_000, // disjoint index range
+        test_count,
+        adapter,
+    )?;
+    let probe = LinearProbe::train(
+        &train_x,
+        &train_y,
+        dataset.num_classes(),
+        probe_epochs,
+        0.5,
+        7,
+    );
+    Ok(EvalResult {
+        top1: probe.accuracy(&test_x, &test_y),
+        train_top1: probe.accuracy(&train_x, &train_y),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn separable_data(n_per: usize, f: usize, classes: usize, seed: u64) -> (Tensor, Vec<u32>) {
+        // Gaussian blobs with well-separated means.
+        let mut rng = Rng::new(seed);
+        let n = n_per * classes;
+        let mut x = Tensor::zeros(&[n, f]);
+        let mut y = Vec::with_capacity(n);
+        for c in 0..classes {
+            for i in 0..n_per {
+                let row = x.row_mut(c * n_per + i);
+                for (j, v) in row.iter_mut().enumerate() {
+                    let center = if j % classes == c { 3.0 } else { 0.0 };
+                    *v = center + 0.5 * rng.gaussian();
+                }
+                y.push(c as u32);
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn probe_separates_blobs() {
+        let (x, y) = separable_data(50, 8, 4, 1);
+        let probe = LinearProbe::train(&x, &y, 4, 100, 0.5, 2);
+        assert!(probe.accuracy(&x, &y) > 0.95);
+        let (xt, yt) = separable_data(20, 8, 4, 99);
+        assert!(probe.accuracy(&xt, &yt) > 0.9);
+    }
+
+    #[test]
+    fn probe_chance_on_random_labels() {
+        let mut rng = Rng::new(3);
+        let n = 200;
+        let mut x = Tensor::zeros(&[n, 6]);
+        for v in x.data_mut() {
+            *v = rng.gaussian();
+        }
+        let y: Vec<u32> = (0..n).map(|_| rng.next_bounded(4) as u32).collect();
+        let probe = LinearProbe::train(&x, &y, 4, 50, 0.5, 4);
+        let (xt, yt) = {
+            let mut xt = Tensor::zeros(&[n, 6]);
+            for v in xt.data_mut() {
+                *v = rng.gaussian();
+            }
+            let yt: Vec<u32> = (0..n).map(|_| rng.next_bounded(4) as u32).collect();
+            (xt, yt)
+        };
+        let acc = probe.accuracy(&xt, &yt);
+        assert!(acc < 0.45, "random-label generalization should be ~0.25, got {acc}");
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut v = vec![1.0f32, 2.0, 3.0];
+        softmax_inplace(&mut v);
+        assert!((v.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(v[2] > v[1] && v[1] > v[0]);
+    }
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Metric logging: in-memory history + JSONL stream on disk.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One logged training step.
+#[derive(Clone, Debug)]
+pub struct StepMetrics {
+    /// Global step index.
+    pub step: usize,
+    /// Epoch index.
+    pub epoch: usize,
+    /// Learning rate used.
+    pub lr: f32,
+    /// Total loss.
+    pub loss: f32,
+    /// Invariance term.
+    pub inv: f32,
+    /// Regularizer term.
+    pub reg: f32,
+    /// Wall-clock seconds for the step (data + execute).
+    pub step_time: f64,
+}
+
+/// Collects step metrics and mirrors them to `metrics.jsonl`.
+pub struct MetricsLogger {
+    history: Vec<StepMetrics>,
+    file: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl MetricsLogger {
+    /// In-memory only (tests, benches).
+    pub fn in_memory() -> MetricsLogger {
+        MetricsLogger {
+            history: Vec::new(),
+            file: None,
+        }
+    }
+
+    /// Logger writing JSONL under `out_dir/metrics.jsonl`.
+    pub fn new(out_dir: impl AsRef<Path>) -> Result<MetricsLogger> {
+        std::fs::create_dir_all(out_dir.as_ref())
+            .with_context(|| format!("creating {}", out_dir.as_ref().display()))?;
+        let path = out_dir.as_ref().join("metrics.jsonl");
+        let file = std::fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(MetricsLogger {
+            history: Vec::new(),
+            file: Some(std::io::BufWriter::new(file)),
+        })
+    }
+
+    /// Record one step.
+    pub fn log(&mut self, m: StepMetrics) -> Result<()> {
+        if let Some(f) = &mut self.file {
+            let line = json::obj(vec![
+                ("step", Json::Num(m.step as f64)),
+                ("epoch", Json::Num(m.epoch as f64)),
+                ("lr", Json::Num(m.lr as f64)),
+                ("loss", Json::Num(m.loss as f64)),
+                ("inv", Json::Num(m.inv as f64)),
+                ("reg", Json::Num(m.reg as f64)),
+                ("step_time", Json::Num(m.step_time)),
+            ]);
+            writeln!(f, "{}", line.to_string_compact())?;
+            f.flush()?;
+        }
+        self.history.push(m);
+        Ok(())
+    }
+
+    /// Full history.
+    pub fn history(&self) -> &[StepMetrics] {
+        &self.history
+    }
+
+    /// Mean loss over the last `k` steps.
+    pub fn recent_loss(&self, k: usize) -> f32 {
+        let tail = &self.history[self.history.len().saturating_sub(k)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|m| m.loss).sum::<f32>() / tail.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(i: usize, loss: f32) -> StepMetrics {
+        StepMetrics {
+            step: i,
+            epoch: 0,
+            lr: 0.1,
+            loss,
+            inv: 0.0,
+            reg: 0.0,
+            step_time: 0.01,
+        }
+    }
+
+    #[test]
+    fn history_and_recent() {
+        let mut m = MetricsLogger::in_memory();
+        for i in 0..10 {
+            m.log(step(i, i as f32)).unwrap();
+        }
+        assert_eq!(m.history().len(), 10);
+        assert!((m.recent_loss(2) - 8.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn jsonl_is_written_and_parses() {
+        let dir = std::env::temp_dir().join(format!("decorr_metrics_{}", std::process::id()));
+        let mut m = MetricsLogger::new(&dir).unwrap();
+        m.log(step(0, 1.5)).unwrap();
+        m.log(step(1, 1.0)).unwrap();
+        drop(m);
+        let text = std::fs::read_to_string(dir.join("metrics.jsonl")).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v = json::parse(lines[1]).unwrap();
+        assert_eq!(v.get("step").unwrap().as_usize(), Some(1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

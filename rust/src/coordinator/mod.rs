@@ -1,0 +1,21 @@
+//! The L3 coordinator: training loop, schedules, permutation sampling,
+//! metrics, checkpoints, and the linear-evaluation protocol.
+//!
+//! The paper's system contribution is the loss (L1/L2); the coordinator is
+//! everything a practitioner needs around it: it owns process lifecycle,
+//! the data pipeline, per-batch feature-permutation sampling (§4.3), LR
+//! scheduling, and evaluation — with Python strictly at build time.
+
+pub mod checkpoint;
+pub mod ddp;
+pub mod linear_eval;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use ddp::DdpTrainer;
+pub use linear_eval::{extract_features, linear_eval, EvalResult, LinearProbe};
+pub use metrics::{MetricsLogger, StepMetrics};
+pub use schedule::LrSchedule;
+pub use trainer::{InputAdapter, TrainReport, Trainer};

@@ -1,0 +1,97 @@
+//! Learning-rate schedule: linear warmup + cosine annealing (the recipe
+//! used by the paper's training setup, Appendix D.3).
+
+/// Warmup + cosine decay schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    /// Peak learning rate (after warmup).
+    pub base_lr: f32,
+    /// Warmup length in steps (linear 0 → base_lr).
+    pub warmup_steps: usize,
+    /// Total steps (cosine reaches ~0 here).
+    pub total_steps: usize,
+    /// Final LR floor as a fraction of base (cosine annealing target).
+    pub final_frac: f32,
+}
+
+impl LrSchedule {
+    /// Construct from epoch counts.
+    pub fn from_epochs(base_lr: f32, warmup_epochs: usize, epochs: usize, steps_per_epoch: usize) -> Self {
+        LrSchedule {
+            base_lr,
+            warmup_steps: warmup_epochs * steps_per_epoch,
+            total_steps: (epochs * steps_per_epoch).max(1),
+            final_frac: 0.001,
+        }
+    }
+
+    /// LR at optimizer step `step` (0-based).
+    pub fn lr(&self, step: usize) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.base_lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        let span = (self.total_steps.max(self.warmup_steps + 1) - self.warmup_steps) as f32;
+        let t = ((step - self.warmup_steps) as f32 / span).clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+        let floor = self.base_lr * self.final_frac;
+        floor + (self.base_lr - floor) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> LrSchedule {
+        LrSchedule {
+            base_lr: 1.0,
+            warmup_steps: 10,
+            total_steps: 110,
+            final_frac: 0.001,
+        }
+    }
+
+    #[test]
+    fn warmup_is_linear() {
+        let s = sched();
+        assert!((s.lr(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr(4) - 0.5).abs() < 1e-6);
+        assert!((s.lr(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_monotonically() {
+        let s = sched();
+        let mut prev = s.lr(10);
+        for step in 11..110 {
+            let cur = s.lr(step);
+            assert!(cur <= prev + 1e-6, "step {step}: {cur} > {prev}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn ends_near_floor() {
+        let s = sched();
+        let last = s.lr(109);
+        assert!(last < 0.01, "{last}");
+        assert!(last >= s.base_lr * s.final_frac - 1e-6);
+    }
+
+    #[test]
+    fn no_warmup_starts_at_base() {
+        let s = LrSchedule {
+            base_lr: 0.5,
+            warmup_steps: 0,
+            total_steps: 100,
+            final_frac: 0.0,
+        };
+        assert!((s.lr(0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn beyond_total_clamps() {
+        let s = sched();
+        assert!(s.lr(1000) <= s.lr(109) + 1e-6);
+    }
+}

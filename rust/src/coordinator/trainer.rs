@@ -1,0 +1,458 @@
+//! The training coordinator: owns the step loop around the AOT train
+//! artifact.
+//!
+//! Per step: pull a prefetched twin-view batch, compute the scheduled LR,
+//! sample the §4.3 feature permutation, marshal inputs in manifest order,
+//! execute the PJRT executable, and absorb the returned parameter /
+//! optimizer-state literals back into the store. Python is never invoked.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data::{AugmentConfig, BatchLoader, ShapeWorld, ShapeWorldConfig, SslBatch};
+use crate::runtime::{Artifact, Engine, ParamStore, TensorSpec};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+use super::checkpoint::Checkpoint;
+use super::metrics::{MetricsLogger, StepMetrics};
+use super::schedule::LrSchedule;
+
+/// Where each manifest input slot is sourced from on the hot path.
+#[derive(Clone, Debug)]
+enum Source {
+    Param(String),
+    Opt(String),
+    ViewA,
+    ViewB,
+    Perm,
+    Lr,
+}
+
+/// What each manifest output slot feeds back into.
+#[derive(Clone, Debug)]
+enum Sink {
+    Param(String),
+    Opt(String),
+    Loss,
+    Inv,
+    Reg,
+}
+
+/// Summary of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Mean loss over the first logged steps.
+    pub initial_loss: f32,
+    /// Mean loss over the last logged steps.
+    pub final_loss: f32,
+    /// Total optimizer steps executed.
+    pub steps: usize,
+    /// Wall-clock seconds (whole run).
+    pub wall_seconds: f64,
+    /// Steps per second.
+    pub steps_per_sec: f64,
+}
+
+/// The trainer. See module docs.
+pub struct Trainer {
+    /// Run configuration.
+    pub cfg: TrainConfig,
+    engine: Engine,
+    artifact: Artifact,
+    sources: Vec<Source>,
+    sinks: Vec<Sink>,
+    params: ParamStore,
+    opt: ParamStore,
+    embed_dim: usize,
+    input_adapt: InputAdapter,
+    rng: Rng,
+    sched: LrSchedule,
+    metrics: MetricsLogger,
+    global_step: usize,
+}
+
+/// Adapts the ShapeWorld (n, 32, 32, 3) batches to the artifact's input
+/// shape: pass-through for conv presets, 8×8 grayscale average pooling +
+/// flatten for the MLP ("tiny") preset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputAdapter {
+    /// Images used as-is; shape must match (H, W, C).
+    Image,
+    /// Average-pool to √f × √f grayscale, flatten to (f,).
+    FlatGray(usize),
+}
+
+impl InputAdapter {
+    /// Choose an adapter from the artifact's sample-input spec (minus the
+    /// batch dimension).
+    pub fn for_shape(sample_shape: &[usize]) -> Result<InputAdapter> {
+        match sample_shape {
+            [_, _, _] => Ok(InputAdapter::Image),
+            [f] => {
+                let side = (*f as f64).sqrt() as usize;
+                if side * side != *f {
+                    bail!("flat input dim {f} is not a square");
+                }
+                Ok(InputAdapter::FlatGray(*f))
+            }
+            other => bail!("unsupported artifact input shape {other:?}"),
+        }
+    }
+
+    /// Apply to a stacked (n, H, W, C) batch.
+    pub fn apply(&self, images: &Tensor) -> Tensor {
+        match self {
+            InputAdapter::Image => images.clone(),
+            InputAdapter::FlatGray(f) => {
+                let (n, h, w, c) = (
+                    images.shape()[0],
+                    images.shape()[1],
+                    images.shape()[2],
+                    images.shape()[3],
+                );
+                let side = (*f as f64).sqrt() as usize;
+                let (fy, fx) = (h / side, w / side);
+                let mut out = Tensor::zeros(&[n, *f]);
+                for i in 0..n {
+                    for by in 0..side {
+                        for bx in 0..side {
+                            let mut acc = 0.0f32;
+                            for y in by * fy..(by + 1) * fy {
+                                for x in bx * fx..(bx + 1) * fx {
+                                    for ch in 0..c {
+                                        acc += images.data()
+                                            [((i * h + y) * w + x) * c + ch];
+                                    }
+                                }
+                            }
+                            out.data_mut()[i * f + by * side + bx] =
+                                acc / (fy * fx * c) as f32;
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+impl Trainer {
+    /// Build a trainer: PJRT engine, compiled train artifact, initial
+    /// parameters from `artifacts/init_<preset>.ckpt`, zero optimizer state.
+    pub fn new(cfg: TrainConfig) -> Result<Trainer> {
+        let engine = Engine::cpu(&cfg.artifact_dir)?;
+        let artifact = engine
+            .load_artifact(&cfg.train_artifact())
+            .with_context(|| format!("loading train artifact {}", cfg.train_artifact()))?;
+        Self::with_engine_artifact(cfg, engine, artifact)
+    }
+
+    /// Variant used by tests/benches that already hold an engine+artifact.
+    pub fn with_engine_artifact(
+        cfg: TrainConfig,
+        engine: Engine,
+        artifact: Artifact,
+    ) -> Result<Trainer> {
+        let manifest = artifact.manifest().clone();
+        let mut sources = Vec::with_capacity(manifest.inputs.len());
+        let mut xa_spec: Option<&TensorSpec> = None;
+        for spec in &manifest.inputs {
+            let src = if let Some(rest) = spec.name.strip_prefix("params.") {
+                Source::Param(format!("params.{rest}"))
+            } else if let Some(rest) = spec.name.strip_prefix("opt_state.") {
+                Source::Opt(format!("opt_state.{rest}"))
+            } else {
+                match spec.name.as_str() {
+                    "xa" => {
+                        xa_spec = Some(spec);
+                        Source::ViewA
+                    }
+                    "xb" => Source::ViewB,
+                    "perm" => Source::Perm,
+                    "lr" => Source::Lr,
+                    other => bail!("unrecognized train input '{other}'"),
+                }
+            };
+            sources.push(src);
+        }
+        let xa_spec = xa_spec.context("train manifest missing 'xa'")?;
+        let input_adapt = InputAdapter::for_shape(&xa_spec.shape[1..])?;
+
+        let mut sinks = Vec::with_capacity(manifest.outputs.len());
+        for spec in &manifest.outputs {
+            let sink = if spec.name.starts_with("params.") {
+                Sink::Param(spec.name.clone())
+            } else if spec.name.starts_with("opt_state.") {
+                Sink::Opt(spec.name.clone())
+            } else {
+                match spec.name.as_str() {
+                    "loss" => Sink::Loss,
+                    "inv" => Sink::Inv,
+                    "reg" => Sink::Reg,
+                    other => bail!("unrecognized train output '{other}'"),
+                }
+            };
+            sinks.push(sink);
+        }
+
+        let embed_dim = manifest
+            .meta_usize("d")
+            .context("train manifest missing meta.d")?;
+
+        // Initial parameters come from the jax-side init checkpoint so the
+        // device path reproduces the reference initialization exactly.
+        let init_path = format!("{}/init_{}.ckpt", cfg.artifact_dir, cfg.preset);
+        let ckpt = Checkpoint::load(&init_path)?;
+        let param_specs: Vec<&TensorSpec> = manifest.inputs_with_prefix("params.");
+        let opt_specs: Vec<&TensorSpec> = manifest.inputs_with_prefix("opt_state.");
+        let params = ParamStore::from_checkpoint(&ckpt, &param_specs)?;
+        let opt = ParamStore::zeros(&opt_specs)?;
+
+        let sched = LrSchedule::from_epochs(
+            cfg.lr,
+            cfg.warmup_epochs,
+            cfg.epochs,
+            cfg.steps_per_epoch,
+        );
+        let metrics = if cfg.out_dir.is_empty() {
+            MetricsLogger::in_memory()
+        } else {
+            MetricsLogger::new(&cfg.out_dir)?
+        };
+        let rng = Rng::new(cfg.seed ^ 0xDEC0_44C0_4D1A_7031);
+        Ok(Trainer {
+            cfg,
+            engine,
+            artifact,
+            sources,
+            sinks,
+            params,
+            opt,
+            embed_dim,
+            input_adapt,
+            rng,
+            sched,
+            metrics,
+            global_step: 0,
+        })
+    }
+
+    /// The PJRT engine (shared with eval paths).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Projected-embedding dimension d.
+    pub fn embed_dim(&self) -> usize {
+        self.embed_dim
+    }
+
+    /// The input adapter for this preset.
+    pub fn input_adapter(&self) -> InputAdapter {
+        self.input_adapt
+    }
+
+    /// Current parameters as a host checkpoint.
+    pub fn snapshot(&self) -> Result<Checkpoint> {
+        let specs = self.artifact.manifest().inputs_with_prefix("params.");
+        self.params.to_checkpoint(&specs)
+    }
+
+    /// Execute one optimizer step on a prepared batch. Returns the step
+    /// metrics.
+    pub fn step(&mut self, batch: &SslBatch, epoch: usize) -> Result<StepMetrics> {
+        let t0 = Instant::now();
+        let lr = self.sched.lr(self.global_step);
+        let perm: Vec<u32> = if self.cfg.permute {
+            self.rng.permutation(self.embed_dim)
+        } else {
+            (0..self.embed_dim as u32).collect()
+        };
+
+        let xa = self.input_adapt.apply(&batch.view_a.images);
+        let xb = self.input_adapt.apply(&batch.view_b.images);
+        let xa_lit = literal_f32(&xa)?;
+        let xb_lit = literal_f32(&xb)?;
+        let perm_lit = literal_i32(&perm)?;
+        let lr_lit = xla::Literal::vec1(&[lr])
+            .reshape(&[])
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        // Marshal in manifest order. Literals are passed by reference;
+        // params/opt literals live in the stores.
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.sources.len());
+        for src in &self.sources {
+            inputs.push(match src {
+                Source::Param(name) => self.params.get(name)?,
+                Source::Opt(name) => self.opt.get(name)?,
+                Source::ViewA => &xa_lit,
+                Source::ViewB => &xb_lit,
+                Source::Perm => &perm_lit,
+                Source::Lr => &lr_lit,
+            });
+        }
+        let outputs = self.artifact.execute_literals_ref(&inputs)?;
+        anyhow::ensure!(
+            outputs.len() == self.sinks.len(),
+            "train step returned {} outputs, expected {}",
+            outputs.len(),
+            self.sinks.len()
+        );
+
+        let mut loss = f32::NAN;
+        let mut inv = f32::NAN;
+        let mut reg = f32::NAN;
+        for (sink, lit) in self.sinks.iter().zip(outputs) {
+            match sink {
+                Sink::Param(name) => self.params.put(name, lit)?,
+                Sink::Opt(name) => self.opt.put(name, lit)?,
+                Sink::Loss => loss = scalar(&lit)?,
+                Sink::Inv => inv = scalar(&lit)?,
+                Sink::Reg => reg = scalar(&lit)?,
+            }
+        }
+        if !loss.is_finite() {
+            bail!("non-finite loss at step {}", self.global_step);
+        }
+
+        let m = StepMetrics {
+            step: self.global_step,
+            epoch,
+            lr,
+            loss,
+            inv,
+            reg,
+            step_time: t0.elapsed().as_secs_f64(),
+        };
+        self.global_step += 1;
+        Ok(m)
+    }
+
+    /// Run the configured training loop with the prefetching data pipeline.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let dataset = ShapeWorld::new(ShapeWorldConfig {
+            seed: self.cfg.seed,
+            ..Default::default()
+        });
+        let loader = BatchLoader::new(
+            dataset,
+            AugmentConfig::default(),
+            self.batch_size()?,
+            self.cfg.epoch_size,
+            self.cfg.seed,
+            self.cfg.loader_workers,
+            self.cfg.prefetch,
+        );
+        let t0 = Instant::now();
+        let total = self.cfg.total_steps();
+        for epoch in 0..self.cfg.epochs {
+            for _ in 0..self.cfg.steps_per_epoch {
+                let batch = loader.next();
+                let m = self.step(&batch, epoch)?;
+                if m.step % self.cfg.log_every == 0 || m.step + 1 == total {
+                    println!(
+                        "step {:>5}/{} epoch {:>3} lr {:.4} loss {:.4} inv {:.4} reg {:.4} ({:.0} ms)",
+                        m.step, total, epoch, m.lr, m.loss, m.inv, m.reg,
+                        m.step_time * 1e3
+                    );
+                }
+                self.metrics.log(m)?;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let hist = self.metrics.history();
+        let k = (total / 10).clamp(1, 20);
+        let initial = hist[..k.min(hist.len())]
+            .iter()
+            .map(|m| m.loss)
+            .sum::<f32>()
+            / k.min(hist.len()) as f32;
+        let final_loss = self.metrics.recent_loss(k);
+        Ok(TrainReport {
+            initial_loss: initial,
+            final_loss,
+            steps: total,
+            wall_seconds: wall,
+            steps_per_sec: total as f64 / wall,
+        })
+    }
+
+    /// Batch size from the artifact manifest (input xa's leading dim).
+    pub fn batch_size(&self) -> Result<usize> {
+        let idx = self
+            .artifact
+            .manifest()
+            .input_index("xa")
+            .context("no xa input")?;
+        Ok(self.artifact.manifest().inputs[idx].shape[0])
+    }
+
+    /// Training metrics so far.
+    pub fn metrics(&self) -> &MetricsLogger {
+        &self.metrics
+    }
+}
+
+/// f32 tensor → literal.
+pub fn literal_f32(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+/// u32 permutation → i32 literal.
+pub fn literal_i32(perm: &[u32]) -> Result<xla::Literal> {
+    let v: Vec<i32> = perm.iter().map(|&p| p as i32).collect();
+    xla::Literal::vec1(&v)
+        .reshape(&[perm.len() as i64])
+        .map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+/// Extract a scalar f32 from a literal.
+pub fn scalar(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adapter_selection() {
+        assert_eq!(
+            InputAdapter::for_shape(&[32, 32, 3]).unwrap(),
+            InputAdapter::Image
+        );
+        assert_eq!(
+            InputAdapter::for_shape(&[64]).unwrap(),
+            InputAdapter::FlatGray(64)
+        );
+        assert!(InputAdapter::for_shape(&[65]).is_err());
+        assert!(InputAdapter::for_shape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn flat_gray_pools_correctly() {
+        // 4x4 image, f=4 → 2x2 pooling over 2x2 blocks
+        let mut img = Tensor::zeros(&[1, 4, 4, 1]);
+        for y in 0..4 {
+            for x in 0..4 {
+                img.data_mut()[y * 4 + x] = if y < 2 && x < 2 { 1.0 } else { 0.0 };
+            }
+        }
+        let flat = InputAdapter::FlatGray(4).apply(&img);
+        assert_eq!(flat.shape(), &[1, 4]);
+        assert_eq!(flat.data(), &[1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn image_adapter_is_identity() {
+        let img = Tensor::from_vec(&[1, 2, 2, 1], vec![1., 2., 3., 4.]);
+        assert_eq!(InputAdapter::Image.apply(&img).data(), img.data());
+    }
+}

@@ -1,0 +1,321 @@
+//! SSL augmentation pipeline, in rust (Python is build-time only, so the
+//! per-batch augmentations the paper takes from solo-learn/DALI live here).
+//!
+//! The pipeline mirrors the Barlow Twins recipe at 32×32 scale: random
+//! resized crop, horizontal flip, color jitter (brightness/contrast/
+//! saturation), random grayscale, gaussian blur, and solarization. Two
+//! independent draws produce the two views. Parameters follow the
+//! asymmetric convention of the paper's Appendix D.2 (view B solarizes,
+//! view A blurs more often).
+
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+/// Augmentation strengths / probabilities.
+#[derive(Clone, Debug)]
+pub struct AugmentConfig {
+    /// Minimum area fraction for the random resized crop.
+    pub crop_min_area: f32,
+    /// Horizontal-flip probability.
+    pub flip_p: f32,
+    /// Color-jitter application probability.
+    pub jitter_p: f32,
+    /// Max brightness delta (additive).
+    pub brightness: f32,
+    /// Max contrast factor delta (multiplicative around the mean).
+    pub contrast: f32,
+    /// Max saturation factor delta.
+    pub saturation: f32,
+    /// Random-grayscale probability.
+    pub grayscale_p: f32,
+    /// Gaussian-blur probability (view A convention).
+    pub blur_p: f32,
+    /// Solarization probability (view B convention).
+    pub solarize_p: f32,
+}
+
+impl Default for AugmentConfig {
+    fn default() -> Self {
+        AugmentConfig {
+            crop_min_area: 0.35,
+            flip_p: 0.5,
+            jitter_p: 0.8,
+            brightness: 0.4,
+            contrast: 0.4,
+            saturation: 0.2,
+            grayscale_p: 0.2,
+            blur_p: 0.5,
+            solarize_p: 0.2,
+        }
+    }
+}
+
+/// Stateless augmentation engine; all randomness comes from the caller's
+/// [`Rng`], keeping the whole data path reproducible.
+#[derive(Clone, Debug)]
+pub struct Augmenter {
+    cfg: AugmentConfig,
+}
+
+impl Augmenter {
+    /// Create an augmenter.
+    pub fn new(cfg: AugmentConfig) -> Self {
+        Augmenter { cfg }
+    }
+
+    /// Produce one augmented view. `view_b` selects the asymmetric branch
+    /// (solarize instead of frequent blur), per the BT recipe.
+    pub fn view(&self, img: &Tensor, rng: &mut Rng, view_b: bool) -> Tensor {
+        let mut out = self.random_resized_crop(img, rng);
+        if rng.bernoulli(self.cfg.flip_p) {
+            out = Self::hflip(&out);
+        }
+        if rng.bernoulli(self.cfg.jitter_p) {
+            self.color_jitter(&mut out, rng);
+        }
+        if rng.bernoulli(self.cfg.grayscale_p) {
+            Self::grayscale(&mut out);
+        }
+        let blur_p = if view_b { 0.1 } else { self.cfg.blur_p };
+        if rng.bernoulli(blur_p) {
+            out = Self::blur3(&out);
+        }
+        if view_b && rng.bernoulli(self.cfg.solarize_p) {
+            Self::solarize(&mut out, 0.5);
+        }
+        for v in out.data_mut() {
+            *v = v.clamp(0.0, 1.0);
+        }
+        out
+    }
+
+    /// Random resized crop back to the original resolution (bilinear).
+    fn random_resized_crop(&self, img: &Tensor, rng: &mut Rng) -> Tensor {
+        let (h, w) = (img.shape()[0], img.shape()[1]);
+        let area = rng.uniform(self.cfg.crop_min_area, 1.0);
+        let aspect = rng.uniform(0.75, 1.333);
+        let ch = ((h as f32 * area.sqrt() / aspect.sqrt()).round() as usize).clamp(4, h);
+        let cw = ((w as f32 * area.sqrt() * aspect.sqrt()).round() as usize).clamp(4, w);
+        let y0 = rng.next_bounded((h - ch + 1) as u64) as usize;
+        let x0 = rng.next_bounded((w - cw + 1) as u64) as usize;
+        Self::resize_bilinear(img, y0, x0, ch, cw, h, w)
+    }
+
+    /// Bilinear resize of the crop `[y0..y0+ch, x0..x0+cw]` to (oh, ow).
+    fn resize_bilinear(
+        img: &Tensor,
+        y0: usize,
+        x0: usize,
+        ch: usize,
+        cw: usize,
+        oh: usize,
+        ow: usize,
+    ) -> Tensor {
+        let (h, w, c) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+        let mut out = Tensor::zeros(&[oh, ow, c]);
+        let data = img.data();
+        let sy = ch as f32 / oh as f32;
+        let sx = cw as f32 / ow as f32;
+        for oy in 0..oh {
+            let fy = (oy as f32 + 0.5) * sy - 0.5 + y0 as f32;
+            let fy = fy.clamp(0.0, (h - 1) as f32);
+            let iy = fy.floor() as usize;
+            let iy1 = (iy + 1).min(h - 1);
+            let wy = fy - iy as f32;
+            for ox in 0..ow {
+                let fx = (ox as f32 + 0.5) * sx - 0.5 + x0 as f32;
+                let fx = fx.clamp(0.0, (w - 1) as f32);
+                let ix = fx.floor() as usize;
+                let ix1 = (ix + 1).min(w - 1);
+                let wx = fx - ix as f32;
+                for ci in 0..c {
+                    let p00 = data[(iy * w + ix) * c + ci];
+                    let p01 = data[(iy * w + ix1) * c + ci];
+                    let p10 = data[(iy1 * w + ix) * c + ci];
+                    let p11 = data[(iy1 * w + ix1) * c + ci];
+                    let top = p00 * (1.0 - wx) + p01 * wx;
+                    let bot = p10 * (1.0 - wx) + p11 * wx;
+                    out.data_mut()[(oy * ow + ox) * c + ci] = top * (1.0 - wy) + bot * wy;
+                }
+            }
+        }
+        out
+    }
+
+    fn hflip(img: &Tensor) -> Tensor {
+        let (h, w, c) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+        let mut out = Tensor::zeros(&[h, w, c]);
+        for y in 0..h {
+            for x in 0..w {
+                for ci in 0..c {
+                    out.data_mut()[(y * w + x) * c + ci] =
+                        img.data()[(y * w + (w - 1 - x)) * c + ci];
+                }
+            }
+        }
+        out
+    }
+
+    fn color_jitter(&self, img: &mut Tensor, rng: &mut Rng) {
+        let b = rng.uniform(-self.cfg.brightness, self.cfg.brightness);
+        let ct = 1.0 + rng.uniform(-self.cfg.contrast, self.cfg.contrast);
+        let sat = 1.0 + rng.uniform(-self.cfg.saturation, self.cfg.saturation);
+        let mean = img.mean();
+        let c = img.shape()[2];
+        let data = img.data_mut();
+        for px in data.chunks_mut(c) {
+            let gray: f32 = (px[0] + px[1] + px[2]) / 3.0;
+            for v in px.iter_mut() {
+                // saturation: move towards/away from the pixel gray value
+                *v = gray + (*v - gray) * sat;
+                // contrast: scale around the image mean; brightness: shift
+                *v = (*v - mean) * ct + mean + b;
+            }
+        }
+    }
+
+    fn grayscale(img: &mut Tensor) {
+        let c = img.shape()[2];
+        for px in img.data_mut().chunks_mut(c) {
+            let g = 0.299 * px[0] + 0.587 * px[1] + 0.114 * px[2];
+            px.fill(g);
+        }
+    }
+
+    /// 3×3 binomial blur (σ ≈ 0.8 — appropriate for 32×32 inputs).
+    fn blur3(img: &Tensor) -> Tensor {
+        let (h, w, c) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+        let mut out = Tensor::zeros(&[h, w, c]);
+        let k = [1.0f32, 2.0, 1.0];
+        for y in 0..h {
+            for x in 0..w {
+                for ci in 0..c {
+                    let mut acc = 0.0;
+                    let mut wsum = 0.0;
+                    for (dy, ky) in (-1i64..=1).zip(k) {
+                        for (dx, kx) in (-1i64..=1).zip(k) {
+                            let yy = y as i64 + dy;
+                            let xx = x as i64 + dx;
+                            if yy >= 0 && yy < h as i64 && xx >= 0 && xx < w as i64 {
+                                acc += ky * kx
+                                    * img.data()[((yy as usize) * w + xx as usize) * c + ci];
+                                wsum += ky * kx;
+                            }
+                        }
+                    }
+                    out.data_mut()[(y * w + x) * c + ci] = acc / wsum;
+                }
+            }
+        }
+        out
+    }
+
+    fn solarize(img: &mut Tensor, threshold: f32) {
+        for v in img.data_mut() {
+            if *v > threshold {
+                *v = 1.0 - *v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{ShapeWorld, ShapeWorldConfig};
+
+    fn test_image() -> Tensor {
+        ShapeWorld::new(ShapeWorldConfig::default()).sample(3).image
+    }
+
+    #[test]
+    fn view_preserves_shape_and_range() {
+        let aug = Augmenter::new(AugmentConfig::default());
+        let img = test_image();
+        let mut rng = Rng::new(0);
+        for i in 0..20 {
+            let v = aug.view(&img, &mut rng, i % 2 == 0);
+            assert_eq!(v.shape(), img.shape());
+            assert!(v.data().iter().all(|&x| (0.0..=1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn views_are_random() {
+        let aug = Augmenter::new(AugmentConfig::default());
+        let img = test_image();
+        let mut rng = Rng::new(1);
+        let v1 = aug.view(&img, &mut rng, false);
+        let v2 = aug.view(&img, &mut rng, false);
+        assert_ne!(v1.data(), v2.data());
+    }
+
+    #[test]
+    fn deterministic_given_rng_state() {
+        let aug = Augmenter::new(AugmentConfig::default());
+        let img = test_image();
+        let v1 = aug.view(&img, &mut Rng::new(7), true);
+        let v2 = aug.view(&img, &mut Rng::new(7), true);
+        assert_eq!(v1.data(), v2.data());
+    }
+
+    #[test]
+    fn hflip_is_involution() {
+        let img = test_image();
+        let back = Augmenter::hflip(&Augmenter::hflip(&img));
+        assert_eq!(back.data(), img.data());
+    }
+
+    #[test]
+    fn grayscale_equalizes_channels() {
+        let mut img = test_image();
+        Augmenter::grayscale(&mut img);
+        for px in img.data().chunks(3) {
+            assert!((px[0] - px[1]).abs() < 1e-6 && (px[1] - px[2]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn solarize_inverts_bright_pixels() {
+        let mut img = Tensor::from_vec(&[1, 2, 1], vec![0.9, 0.2]);
+        Augmenter::solarize(&mut img, 0.5);
+        assert!((img.data()[0] - 0.1).abs() < 1e-6);
+        assert!((img.data()[1] - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn blur_smooths() {
+        let img = test_image();
+        let blurred = Augmenter::blur3(&img);
+        // total variation decreases under blur
+        let tv = |t: &Tensor| -> f32 {
+            let (h, w, c) = (t.shape()[0], t.shape()[1], t.shape()[2]);
+            let mut acc = 0.0;
+            for y in 0..h {
+                for x in 1..w {
+                    for ci in 0..c {
+                        acc += (t.data()[(y * w + x) * c + ci]
+                            - t.data()[(y * w + x - 1) * c + ci])
+                            .abs();
+                    }
+                }
+            }
+            acc
+        };
+        assert!(tv(&blurred) < tv(&img));
+    }
+
+    #[test]
+    fn crop_resize_identity_when_full() {
+        // cropping the full image and resizing to the same size ≈ identity
+        let img = test_image();
+        let out = Augmenter::resize_bilinear(&img, 0, 0, 32, 32, 32, 32);
+        let max_err = img
+            .data()
+            .iter()
+            .zip(out.data())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-5, "max_err {max_err}");
+    }
+}

@@ -1,0 +1,77 @@
+//! Synthetic data substrate: dataset synthesis, SSL augmentations, and a
+//! prefetching batch loader.
+//!
+//! The paper pretrains on ImageNet/ImageNet-100, which this environment
+//! does not have. Per DESIGN.md §Substitutions we synthesize **ShapeWorld**:
+//! procedurally generated 32×32×3 images of parametric shapes. The dataset
+//! gives the two properties the paper's study actually needs:
+//!
+//! 1. semantics-preserving augmentations (crop/flip/jitter leave the shape
+//!    class intact), so the SSL invariance objective is meaningful;
+//! 2. a downstream label structure (shape class) for linear evaluation.
+//!
+//! Everything is deterministic from a seed: sample `i` of dataset `seed` is
+//! identical across runs and machines; the two augmented views of a sample
+//! use independent draws, like the paper's two transformation streams.
+
+pub mod augment;
+pub mod loader;
+pub mod synth;
+
+pub use augment::{AugmentConfig, Augmenter};
+pub use loader::{BatchLoader, SslBatch};
+pub use synth::{ShapeWorld, ShapeWorldConfig};
+
+use crate::util::tensor::Tensor;
+
+/// One labelled image: (H, W, C) tensor in `[0, 1]` plus its class id.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// Image tensor, shape (H, W, C).
+    pub image: Tensor,
+    /// Class label in `0..num_classes`.
+    pub label: u32,
+}
+
+/// A labelled batch: images stacked to (n, H, W, C), labels (n,).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Stacked images, shape (n, H, W, C).
+    pub images: Tensor,
+    /// Labels, length n.
+    pub labels: Vec<u32>,
+}
+
+/// Stack per-sample images into one (n, H, W, C) tensor.
+pub fn stack(samples: &[Sample]) -> Batch {
+    assert!(!samples.is_empty());
+    let ishape = samples[0].image.shape().to_vec();
+    let mut shape = vec![samples.len()];
+    shape.extend_from_slice(&ishape);
+    let stride: usize = ishape.iter().product();
+    let mut images = Tensor::zeros(&shape);
+    for (i, s) in samples.iter().enumerate() {
+        assert_eq!(s.image.shape(), &ishape[..], "ragged sample shapes");
+        images.data_mut()[i * stride..(i + 1) * stride].copy_from_slice(s.image.data());
+    }
+    Batch {
+        images,
+        labels: samples.iter().map(|s| s.label).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_shapes() {
+        let s = Sample {
+            image: Tensor::zeros(&[4, 4, 3]),
+            label: 1,
+        };
+        let b = stack(&[s.clone(), s]);
+        assert_eq!(b.images.shape(), &[2, 4, 4, 3]);
+        assert_eq!(b.labels, vec![1, 1]);
+    }
+}

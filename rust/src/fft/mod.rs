@@ -1,0 +1,332 @@
+//! Pure-rust FFT substrate.
+//!
+//! The paper's efficiency claim rests on computing `sumvec(C)` via the
+//! convolution theorem (Eq. 12): `F⁻¹( Σ_k conj(F(a_k)) ∘ F(b_k) ) / (n-1)`.
+//! On the device path the FFT is the HLO `fft` op inside the AOT artifact;
+//! this module is the *host* implementation used to (a) validate the device
+//! numerics end-to-end, (b) power the Table-6-style diagnostics over trained
+//! embeddings, and (c) serve as the `O(d log d)` contender in the host
+//! complexity benchmarks (Appendix C / Table 7).
+//!
+//! We implement an iterative radix-2 Cooley–Tukey transform with a
+//! Bluestein fallback for non-power-of-two lengths, plus the real-input
+//! helpers `rfft`/`irfft` matching `numpy.fft.rfft` conventions.
+
+mod complex;
+
+pub use complex::Complex;
+
+/// Forward DFT, in place, radix-2 iterative Cooley–Tukey.
+/// Panics unless `x.len()` is a power of two (use [`fft`] for general n).
+pub fn fft_pow2(x: &mut [Complex]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fft_pow2 requires power-of-two length");
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        let j = j as usize;
+        if j > i {
+            x.swap(i, j);
+        }
+    }
+    // Butterfly stages. Twiddles are computed per stage from a single root;
+    // recurrence multiplication keeps it O(n log n) with no table allocation.
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * std::f64::consts::PI / len as f64;
+        let wlen = Complex::new(ang.cos(), ang.sin());
+        for chunk in x.chunks_mut(len) {
+            let mut w = Complex::new(1.0, 0.0);
+            let half = len / 2;
+            for i in 0..half {
+                let u = chunk[i];
+                let v = chunk[i + half] * w;
+                chunk[i] = u + v;
+                chunk[i + half] = u - v;
+                w = w * wlen;
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Inverse DFT, in place, normalized by 1/n. Power-of-two length only.
+pub fn ifft_pow2(x: &mut [Complex]) {
+    let n = x.len();
+    for v in x.iter_mut() {
+        *v = v.conj();
+    }
+    fft_pow2(x);
+    let inv = 1.0 / n as f64;
+    for v in x.iter_mut() {
+        *v = v.conj() * inv;
+    }
+}
+
+/// Forward DFT for arbitrary length: radix-2 when possible, otherwise
+/// Bluestein's algorithm (chirp-z through a power-of-two convolution).
+pub fn fft(x: &[Complex]) -> Vec<Complex> {
+    let n = x.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n.is_power_of_two() {
+        let mut buf = x.to_vec();
+        fft_pow2(&mut buf);
+        return buf;
+    }
+    bluestein(x, false)
+}
+
+/// Inverse DFT for arbitrary length, normalized by 1/n.
+pub fn ifft(x: &[Complex]) -> Vec<Complex> {
+    let n = x.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n.is_power_of_two() {
+        let mut buf = x.to_vec();
+        ifft_pow2(&mut buf);
+        return buf;
+    }
+    bluestein(x, true)
+}
+
+/// Bluestein chirp-z transform: expresses an arbitrary-length DFT as a
+/// power-of-two circular convolution.
+fn bluestein(x: &[Complex], inverse: bool) -> Vec<Complex> {
+    let n = x.len();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    // chirp[k] = exp(sign * i * pi * k^2 / n)
+    let mut chirp = Vec::with_capacity(n);
+    for k in 0..n {
+        // k^2 mod 2n avoids precision loss for large k.
+        let k2 = (k as u64 * k as u64) % (2 * n as u64);
+        let ang = sign * std::f64::consts::PI * k2 as f64 / n as f64;
+        chirp.push(Complex::new(ang.cos(), ang.sin()));
+    }
+    let m = (2 * n - 1).next_power_of_two();
+    let mut a = vec![Complex::ZERO; m];
+    let mut b = vec![Complex::ZERO; m];
+    for k in 0..n {
+        a[k] = x[k] * chirp[k];
+        b[k] = chirp[k].conj();
+    }
+    for k in 1..n {
+        b[m - k] = chirp[k].conj();
+    }
+    fft_pow2(&mut a);
+    fft_pow2(&mut b);
+    for k in 0..m {
+        a[k] = a[k] * b[k];
+    }
+    ifft_pow2(&mut a);
+    let norm = if inverse { 1.0 / n as f64 } else { 1.0 };
+    (0..n).map(|k| a[k] * chirp[k] * norm).collect()
+}
+
+/// Real-input forward transform; returns the `n/2 + 1` non-redundant bins
+/// (numpy `rfft` convention).
+pub fn rfft(x: &[f32]) -> Vec<Complex> {
+    let buf: Vec<Complex> = x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect();
+    let full = fft(&buf);
+    full[..x.len() / 2 + 1].to_vec()
+}
+
+/// Inverse of [`rfft`]: reconstructs a length-`n` real signal from its
+/// `n/2 + 1` spectrum bins (numpy `irfft` convention).
+pub fn irfft(spec: &[Complex], n: usize) -> Vec<f32> {
+    assert_eq!(spec.len(), n / 2 + 1, "irfft spectrum length mismatch");
+    let mut full = vec![Complex::ZERO; n];
+    full[..spec.len()].copy_from_slice(spec);
+    for k in spec.len()..n {
+        full[k] = spec[n - k].conj();
+    }
+    ifft(&full).iter().map(|c| c.re as f32).collect()
+}
+
+/// Naive `O(n²)` DFT — the correctness oracle for the fast paths.
+pub fn dft_naive(x: &[Complex]) -> Vec<Complex> {
+    let n = x.len();
+    let mut out = vec![Complex::ZERO; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = Complex::ZERO;
+        for (j, &v) in x.iter().enumerate() {
+            let ang = -2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64;
+            acc = acc + v * Complex::new(ang.cos(), ang.sin());
+        }
+        *o = acc;
+    }
+    out
+}
+
+/// Circular convolution `x * y` via FFT (`O(n log n)`).
+pub fn circular_convolve(x: &[f32], y: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), y.len());
+    let fx = fft(&x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect::<Vec<_>>());
+    let fy = fft(&y.iter().map(|&v| Complex::new(v as f64, 0.0)).collect::<Vec<_>>());
+    let prod: Vec<Complex> = fx.iter().zip(&fy).map(|(a, b)| *a * *b).collect();
+    ifft(&prod).iter().map(|c| c.re as f32).collect()
+}
+
+/// Circular correlation `inv(x) * y` via FFT — the paper's Eq. 11:
+/// `F⁻¹( conj(F(x)) ∘ F(y) )`. Component `i` equals
+/// `Σ_j x[j] · y[(i+j) mod d]` (paper Eq. 8 / Appendix A).
+pub fn circular_correlate(x: &[f32], y: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), y.len());
+    let fx = fft(&x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect::<Vec<_>>());
+    let fy = fft(&y.iter().map(|&v| Complex::new(v as f64, 0.0)).collect::<Vec<_>>());
+    let prod: Vec<Complex> = fx.iter().zip(&fy).map(|(a, b)| a.conj() * *b).collect();
+    ifft(&prod).iter().map(|c| c.re as f32).collect()
+}
+
+/// Involution (paper §4.2): reverse components 1..d, keep component 0.
+/// `inv(x)[i] = x[(d - i) mod d]`.
+pub fn involution(x: &[f32]) -> Vec<f32> {
+    let d = x.len();
+    (0..d).map(|i| x[(d - i) % d]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian()).collect()
+    }
+
+    fn assert_close(a: &[Complex], b: &[Complex], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x.re - y.re).abs() < tol && (x.im - y.im).abs() < tol,
+                "bin {i}: {x:?} vs {y:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fft_matches_naive_dft_pow2() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 2, 4, 8, 64, 256] {
+            let x: Vec<Complex> = (0..n)
+                .map(|_| Complex::new(rng.gaussian() as f64, rng.gaussian() as f64))
+                .collect();
+            assert_close(&fft(&x), &dft_naive(&x), 1e-8 * n as f64 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn fft_matches_naive_dft_arbitrary() {
+        let mut rng = Rng::new(2);
+        for n in [3usize, 5, 6, 7, 12, 100, 129] {
+            let x: Vec<Complex> = (0..n)
+                .map(|_| Complex::new(rng.gaussian() as f64, rng.gaussian() as f64))
+                .collect();
+            assert_close(&fft(&x), &dft_naive(&x), 1e-7 * n as f64 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn ifft_inverts_fft() {
+        let mut rng = Rng::new(3);
+        for n in [4usize, 7, 16, 100] {
+            let x: Vec<Complex> = (0..n)
+                .map(|_| Complex::new(rng.gaussian() as f64, rng.gaussian() as f64))
+                .collect();
+            let y = ifft(&fft(&x));
+            assert_close(&y, &x, 1e-9 * n as f64 + 1e-10);
+        }
+    }
+
+    #[test]
+    fn rfft_irfft_roundtrip() {
+        let mut rng = Rng::new(4);
+        for n in [2usize, 8, 64, 256] {
+            let x = randvec(&mut rng, n);
+            let y = irfft(&rfft(&x), n);
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn convolution_theorem_holds() {
+        // circular_convolve via FFT must equal the O(n^2) definition.
+        let mut rng = Rng::new(5);
+        let n = 33;
+        let x = randvec(&mut rng, n);
+        let y = randvec(&mut rng, n);
+        let fast = circular_convolve(&x, &y);
+        for i in 0..n {
+            let mut direct = 0.0f64;
+            for j in 0..n {
+                direct += x[j] as f64 * y[(i + n - j % n) % n] as f64;
+            }
+            assert!((fast[i] as f64 - direct).abs() < 1e-4, "lag {i}");
+        }
+    }
+
+    #[test]
+    fn circular_correlation_matches_eq8() {
+        // [inv(x) * y]_i == sum_j x[j] y[(i+j) mod d]  (paper Eq. 8)
+        let mut rng = Rng::new(6);
+        for d in [4usize, 9, 32] {
+            let x = randvec(&mut rng, d);
+            let y = randvec(&mut rng, d);
+            let fast = circular_correlate(&x, &y);
+            for i in 0..d {
+                let direct: f64 = (0..d)
+                    .map(|j| x[j] as f64 * y[(i + j) % d] as f64)
+                    .sum();
+                assert!(
+                    (fast[i] as f64 - direct).abs() < 1e-4,
+                    "d={d} i={i}: {} vs {direct}",
+                    fast[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn involution_definition() {
+        let x = [10.0f32, 1.0, 2.0, 3.0];
+        // inv(x)[i] = x[(4 - i) mod 4] => [x0, x3, x2, x1]
+        assert_eq!(involution(&x), vec![10.0, 3.0, 2.0, 1.0]);
+        assert_eq!(involution(&involution(&x)), x.to_vec());
+    }
+
+    #[test]
+    fn correlation_equals_convolution_with_involution() {
+        // inv(x) * y computed via circular_convolve(involution(x), y)
+        // must equal circular_correlate(x, y).
+        let mut rng = Rng::new(7);
+        let d = 16;
+        let x = randvec(&mut rng, d);
+        let y = randvec(&mut rng, d);
+        let a = circular_convolve(&involution(&x), &y);
+        let b = circular_correlate(&x, &y);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let mut rng = Rng::new(8);
+        let n = 64;
+        let x: Vec<Complex> = (0..n)
+            .map(|_| Complex::new(rng.gaussian() as f64, 0.0))
+            .collect();
+        let f = fft(&x);
+        let e_time: f64 = x.iter().map(|c| c.norm_sq()).sum();
+        let e_freq: f64 = f.iter().map(|c| c.norm_sq()).sum::<f64>() / n as f64;
+        assert!((e_time - e_freq).abs() < 1e-6 * e_time);
+    }
+}

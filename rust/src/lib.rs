@@ -1,0 +1,46 @@
+//! # decorr — FFT-based decorrelated representation learning
+//!
+//! A three-layer reproduction of *"Learning Decorrelated Representations
+//! Efficiently Using Fast Fourier Transform"* (Shigeto, Shimbo, Yoshikawa,
+//! Takeuchi, 2023):
+//!
+//! - **L1** (build-time Python): Pallas kernels for the spectral reduction at
+//!   the heart of the `R_sum` regularizer (`python/compile/kernels/`).
+//! - **L2** (build-time Python): the JAX SSL model — backbone, projector, and
+//!   the Barlow Twins / VICReg loss families with the proposed FFT
+//!   regularizer, AOT-lowered to HLO text (`python/compile/model.py`).
+//! - **L3** (this crate): the training coordinator. Loads the AOT artifacts
+//!   via the PJRT C API (`xla` crate) and owns everything else: config, the
+//!   synthetic data + augmentation pipeline, the step loop with per-batch
+//!   feature permutation, LR scheduling, metrics, checkpointing, linear
+//!   evaluation, and the benchmark harness regenerating the paper's tables
+//!   and figures.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the
+//! compute graphs once; afterwards the `decorr` binary is self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use decorr::config::TrainConfig;
+//! use decorr::coordinator::Trainer;
+//!
+//! let cfg = TrainConfig::preset_tiny();
+//! let mut trainer = Trainer::new(cfg).unwrap();
+//! let report = trainer.run().unwrap();
+//! println!("final loss {:.4}", report.final_loss);
+//! ```
+//!
+//! Host-side reference implementations of every quantity in the paper
+//! (cross-correlation, `R_off`, `sumvec`, `R_sum`, grouped variants) live in
+//! [`regularizer`], backed by the pure-rust FFT in [`fft`]; they validate the
+//! device path and power the Table-6-style decorrelation diagnostics.
+
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod fft;
+pub mod regularizer;
+pub mod runtime;
+pub mod util;

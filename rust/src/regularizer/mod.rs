@@ -1,0 +1,492 @@
+//! Host-side reference implementations of the paper's losses and
+//! regularizers.
+//!
+//! Everything in §3–§4 of the paper is implemented here over plain host
+//! tensors, in both the "slow" `O(nd²)` form (materialize the matrix) and
+//! the proposed `O(nd log d)` FFT form (Eq. 12):
+//!
+//! - cross-correlation `C(A,B)` and covariance `K(A)` matrices,
+//! - Barlow Twins' `R_off` (Eq. 2) and invariance term,
+//! - VICReg's `R_var` (Eq. 4),
+//! - `sumvec` (Eq. 5) — naive and via circular correlation + FFT,
+//! - `R_sum` (Eq. 6) and the grouped `R_sum^(b)` (Eq. 13),
+//! - the normalized decorrelation residuals of Eqs. 16–17 (Table 6).
+//!
+//! These functions validate the AOT device path (integration tests compare
+//! HLO-executed losses against these), feed the Table-6 diagnostics over
+//! trained embeddings, and serve as the contenders in the host complexity
+//! benches (Appendix C). They are written for clarity first, but the FFT
+//! path is genuinely `O(nd log d)` so the complexity benches are honest.
+
+use crate::fft;
+use crate::util::tensor::Tensor;
+
+/// Which norm exponent `q ∈ {1, 2}` the `R_sum` family uses (Eq. 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Q {
+    /// `Σ |v_i|` — works better for VICReg-style covariance regularization
+    /// (paper Appendix E.1).
+    L1,
+    /// `Σ v_i²` — works better for Barlow Twins-style cross-correlation
+    /// regularization, and makes `R_sum^(1)` coincide with `R_off`.
+    L2,
+}
+
+impl Q {
+    #[inline]
+    fn apply(self, v: f32) -> f32 {
+        match self {
+            Q::L1 => v.abs(),
+            Q::L2 => v * v,
+        }
+    }
+}
+
+/// Cross-correlation matrix `C(A, B) = (1/norm) Σ_k a_k b_kᵀ` for
+/// **already standardized** views (paper §4.1). `norm` is `n` for the
+/// Barlow Twins convention (Listing 1) or `n-1` for the unbiased form.
+pub fn cross_correlation(a: &Tensor, b: &Tensor, norm: f32) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    let (n, d) = (a.shape()[0], a.shape()[1]);
+    let mut c = Tensor::zeros(&[d, d]);
+    let inv = 1.0 / norm;
+    for k in 0..n {
+        let ra = a.row(k);
+        let rb = b.row(k);
+        for i in 0..d {
+            let ai = ra[i] * inv;
+            let crow = &mut c.data_mut()[i * d..(i + 1) * d];
+            for (cij, &bj) in crow.iter_mut().zip(rb) {
+                *cij += ai * bj;
+            }
+        }
+    }
+    c
+}
+
+/// Covariance matrix `K(A) = (1/(n-1)) Σ_k (a_k - ā)(a_k - ā)ᵀ`.
+pub fn covariance(a: &Tensor) -> Tensor {
+    let mut centered = a.clone();
+    centered.center_columns();
+    let n = a.shape()[0];
+    cross_correlation(&centered, &centered, (n as f32 - 1.0).max(1.0))
+}
+
+/// Barlow Twins' off-diagonal regularizer `R_off(M) = Σ_{i≠j} M_ij²` (Eq. 2).
+pub fn r_off(m: &Tensor) -> f64 {
+    let d = m.shape()[0];
+    assert_eq!(m.shape(), &[d, d]);
+    let mut acc = 0.0f64;
+    for i in 0..d {
+        let row = m.row(i);
+        for (j, &v) in row.iter().enumerate() {
+            if i != j {
+                acc += (v as f64) * (v as f64);
+            }
+        }
+    }
+    acc
+}
+
+/// Barlow Twins' invariance term `Σ_i (1 - M_ii)²` (first term of Eq. 1).
+pub fn diag_invariance(m: &Tensor) -> f64 {
+    let d = m.shape()[0];
+    (0..d)
+        .map(|i| {
+            let v = 1.0 - m.at2(i, i) as f64;
+            v * v
+        })
+        .sum()
+}
+
+/// VICReg's variance hinge `R_var(M) = Σ_i max(0, γ - √M_ii)` (Eq. 4).
+pub fn r_var(m: &Tensor, gamma: f32) -> f64 {
+    let d = m.shape()[0];
+    (0..d)
+        .map(|i| (gamma as f64 - (m.at2(i, i) as f64).max(0.0).sqrt()).max(0.0))
+        .sum()
+}
+
+/// `sumvec(M)` computed naively from a materialized d×d matrix (Eq. 5):
+/// `sumvec(M)_i = Σ_j M[j, (i+j) mod d]`. `O(d²)`.
+pub fn sumvec_naive(m: &Tensor) -> Vec<f32> {
+    let d = m.shape()[0];
+    assert_eq!(m.shape(), &[d, d]);
+    let mut v = vec![0.0f32; d];
+    for j in 0..d {
+        let row = m.row(j);
+        for i in 0..d {
+            v[i] += row[(i + j) % d];
+        }
+    }
+    v
+}
+
+/// `sumvec(C(A,B))` computed directly from embeddings via the convolution
+/// theorem (Eq. 12): `F⁻¹( Σ_k conj(F(a_k)) ∘ F(b_k) ) / norm`.
+/// `O(nd log d)` time, `O(d)` extra space.
+pub fn sumvec_fft(a: &Tensor, b: &Tensor, norm: f32) -> Vec<f32> {
+    assert_eq!(a.shape(), b.shape());
+    let (n, d) = (a.shape()[0], a.shape()[1]);
+    let bins = d / 2 + 1;
+    let mut acc = vec![fft::Complex::ZERO; bins];
+    for k in 0..n {
+        let fa = fft::rfft(a.row(k));
+        let fb = fft::rfft(b.row(k));
+        for (s, (x, y)) in acc.iter_mut().zip(fa.iter().zip(&fb)) {
+            *s = *s + x.conj() * *y;
+        }
+    }
+    let inv = 1.0 / norm as f64;
+    for s in &mut acc {
+        *s = *s * inv;
+    }
+    fft::irfft(&acc, d)
+}
+
+/// `R_sum(M)` over a precomputed summary vector (Eq. 6): all but the zeroth
+/// component, under the `q`-norm.
+pub fn r_sum_from_sumvec(sumvec: &[f32], q: Q) -> f64 {
+    sumvec[1..].iter().map(|&v| q.apply(v) as f64).sum()
+}
+
+/// The proposed regularizer `R_sum(C(A,B))` straight from embeddings
+/// (`O(nd log d)`).
+pub fn r_sum_fft(a: &Tensor, b: &Tensor, norm: f32, q: Q) -> f64 {
+    r_sum_from_sumvec(&sumvec_fft(a, b, norm), q)
+}
+
+/// Extract the `(gi, gj)` block of size b×b from columns of `a`/`b` and
+/// return the per-block summary vector via FFT. Helper for the grouped
+/// regularizer; blocks index submatrices `C_ij` of the correlation matrix.
+fn block_sumvec(a: &Tensor, b: &Tensor, gi: usize, gj: usize, bs: usize, norm: f32) -> Vec<f32> {
+    let (n, d) = (a.shape()[0], a.shape()[1]);
+    let take = |t: &Tensor, g: usize, k: usize| -> Vec<f32> {
+        let mut v = vec![0.0f32; bs];
+        let row = t.row(k);
+        for (idx, slot) in v.iter_mut().enumerate() {
+            let col = g * bs + idx;
+            if col < d {
+                *slot = row[col];
+            } // zero-pad the ragged last group (paper footnote 4)
+        }
+        v
+    };
+    let bins = bs / 2 + 1;
+    let mut acc = vec![fft::Complex::ZERO; bins];
+    for k in 0..n {
+        let fa = fft::rfft(&take(a, gi, k));
+        let fb = fft::rfft(&take(b, gj, k));
+        for (s, (x, y)) in acc.iter_mut().zip(fa.iter().zip(&fb)) {
+            *s = *s + x.conj() * *y;
+        }
+    }
+    let inv = 1.0 / norm as f64;
+    for s in &mut acc {
+        *s = *s * inv;
+    }
+    fft::irfft(&acc, bs)
+}
+
+/// Grouped regularizer `R_sum^(b)(C(A,B))` (Eq. 13), computed blockwise via
+/// FFT in `O((nd²/b) log b)`. Diagonal blocks skip their zeroth summary
+/// component (it holds the block trace); off-diagonal blocks keep all `b`
+/// components.
+pub fn r_sum_grouped_fft(a: &Tensor, b: &Tensor, block: usize, norm: f32, q: Q) -> f64 {
+    assert!(block >= 1);
+    let d = a.shape()[1];
+    let groups = d.div_ceil(block);
+    let mut acc = 0.0f64;
+    for gi in 0..groups {
+        for gj in 0..groups {
+            let sv = block_sumvec(a, b, gi, gj, block, norm);
+            let start = if gi == gj { 1 } else { 0 };
+            for &v in &sv[start..] {
+                acc += q.apply(v) as f64;
+            }
+        }
+    }
+    acc
+}
+
+/// Grouped regularizer computed naively from a materialized matrix —
+/// the oracle for [`r_sum_grouped_fft`].
+pub fn r_sum_grouped_naive(m: &Tensor, block: usize, q: Q) -> f64 {
+    let d = m.shape()[0];
+    let groups = d.div_ceil(block);
+    let mut acc = 0.0f64;
+    for gi in 0..groups {
+        for gj in 0..groups {
+            // materialize the (zero-padded) block and take its sumvec
+            let mut blk = Tensor::zeros(&[block, block]);
+            for bi in 0..block {
+                for bj in 0..block {
+                    let (i, j) = (gi * block + bi, gj * block + bj);
+                    if i < d && j < d {
+                        blk.set2(bi, bj, m.at2(i, j));
+                    }
+                }
+            }
+            let sv = sumvec_naive(&blk);
+            let start = if gi == gj { 1 } else { 0 };
+            for &v in &sv[start..] {
+                acc += q.apply(v) as f64;
+            }
+        }
+    }
+    acc
+}
+
+/// Normalized Barlow Twins residual (paper Eq. 16): mean squared
+/// off-diagonal cross-correlation, `R_off(C(A,B)) / (d(d-1))`.
+/// Views are standardized internally. Used for Table 6.
+pub fn normalized_bt_residual(a: &Tensor, b: &Tensor) -> f64 {
+    let mut sa = a.clone();
+    let mut sb = b.clone();
+    sa.standardize_columns(1e-6);
+    sb.standardize_columns(1e-6);
+    let n = a.shape()[0] as f32;
+    let c = cross_correlation(&sa, &sb, n);
+    let d = c.shape()[0] as f64;
+    r_off(&c) / (d * (d - 1.0))
+}
+
+/// Normalized VICReg residual (paper Eq. 17):
+/// `(R_off(K(A)) + R_off(K(B))) / (2 d (d-1))`. Used for Table 6.
+pub fn normalized_vic_residual(a: &Tensor, b: &Tensor) -> f64 {
+    let ka = covariance(a);
+    let kb = covariance(b);
+    let d = ka.shape()[0] as f64;
+    (r_off(&ka) + r_off(&kb)) / (2.0 * d * (d - 1.0))
+}
+
+/// Full host-side Barlow Twins loss (Eq. 1) — `O(nd²)` baseline.
+pub fn barlow_twins_loss(a: &Tensor, b: &Tensor, lambda: f32) -> f64 {
+    let mut sa = a.clone();
+    let mut sb = b.clone();
+    sa.standardize_columns(1e-6);
+    sb.standardize_columns(1e-6);
+    let n = a.shape()[0] as f32;
+    let c = cross_correlation(&sa, &sb, n);
+    diag_invariance(&c) + lambda as f64 * r_off(&c)
+}
+
+/// Full host-side proposed Barlow Twins-style loss (Eq. 14 with `R_sum`) —
+/// `O(nd log d)`.
+pub fn barlow_twins_sum_loss(a: &Tensor, b: &Tensor, lambda: f32, q: Q) -> f64 {
+    let mut sa = a.clone();
+    let mut sb = b.clone();
+    sa.standardize_columns(1e-6);
+    sb.standardize_columns(1e-6);
+    let n = a.shape()[0] as f32;
+    // Invariance term still needs the diagonal of C, which is O(nd).
+    let d = a.shape()[1];
+    let mut inv_term = 0.0f64;
+    for i in 0..d {
+        let mut cii = 0.0f64;
+        for k in 0..a.shape()[0] {
+            cii += (sa.at2(k, i) * sb.at2(k, i)) as f64;
+        }
+        cii /= n as f64;
+        inv_term += (1.0 - cii) * (1.0 - cii);
+    }
+    inv_term + lambda as f64 * r_sum_fft(&sa, &sb, n, q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, n: usize, d: usize) -> Tensor {
+        Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect())
+    }
+
+    #[test]
+    fn sumvec_zeroth_is_trace() {
+        let mut rng = Rng::new(1);
+        let m = rand_tensor(&mut rng, 6, 6);
+        let sv = sumvec_naive(&m);
+        let trace: f32 = (0..6).map(|i| m.at2(i, i)).sum();
+        assert!((sv[0] - trace).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sumvec_partitions_all_elements() {
+        // Every element of M appears in exactly one component of sumvec,
+        // so the components must sum to the total element sum (paper §4.1).
+        let mut rng = Rng::new(2);
+        let m = rand_tensor(&mut rng, 8, 8);
+        let sv = sumvec_naive(&m);
+        let total: f32 = m.data().iter().sum();
+        let sv_total: f32 = sv.iter().sum();
+        assert!((total - sv_total).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sumvec_fft_matches_naive() {
+        let mut rng = Rng::new(3);
+        for (n, d) in [(4usize, 8usize), (7, 16), (5, 12), (3, 5)] {
+            let a = rand_tensor(&mut rng, n, d);
+            let b = rand_tensor(&mut rng, n, d);
+            let c = cross_correlation(&a, &b, n as f32 - 1.0);
+            let naive = sumvec_naive(&c);
+            let fast = sumvec_fft(&a, &b, n as f32 - 1.0);
+            for (i, (x, y)) in naive.iter().zip(&fast).enumerate() {
+                assert!((x - y).abs() < 1e-3, "n={n} d={d} i={i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_b1_q2_equals_r_off() {
+        // R_sum^(1) with q=2 reduces to R_off (paper §4.4).
+        let mut rng = Rng::new(4);
+        let (n, d) = (6, 10);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        let c = cross_correlation(&a, &b, n as f32);
+        let grouped = r_sum_grouped_fft(&a, &b, 1, n as f32, Q::L2);
+        let off = r_off(&c);
+        assert!(
+            (grouped - off).abs() < 1e-4 * off.abs().max(1.0),
+            "{grouped} vs {off}"
+        );
+    }
+
+    #[test]
+    fn grouped_bd_equals_r_sum() {
+        // R_sum^(d) == R_sum (paper §4.4).
+        let mut rng = Rng::new(5);
+        let (n, d) = (5, 12);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        for q in [Q::L1, Q::L2] {
+            let grouped = r_sum_grouped_fft(&a, &b, d, n as f32, q);
+            let flat = r_sum_fft(&a, &b, n as f32, q);
+            assert!(
+                (grouped - flat).abs() < 1e-4 * flat.abs().max(1.0),
+                "q={q:?}: {grouped} vs {flat}"
+            );
+        }
+    }
+
+    #[test]
+    fn grouped_fft_matches_grouped_naive() {
+        let mut rng = Rng::new(6);
+        let (n, d) = (4, 12);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        let c = cross_correlation(&a, &b, n as f32);
+        for block in [2usize, 3, 4, 6, 5 /* ragged */] {
+            for q in [Q::L1, Q::L2] {
+                let fast = r_sum_grouped_fft(&a, &b, block, n as f32, q);
+                let naive = r_sum_grouped_naive(&c, block, q);
+                assert!(
+                    (fast - naive).abs() < 1e-3 * naive.abs().max(1.0),
+                    "block={block} q={q:?}: {fast} vs {naive}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn r_sum_is_weaker_than_r_off() {
+        // minimizers of R_off also minimize R_sum: if C is diagonal,
+        // R_sum's off-trace components vanish.
+        let d = 8;
+        let mut c = Tensor::zeros(&[d, d]);
+        for i in 0..d {
+            c.set2(i, i, 1.0);
+        }
+        let sv = sumvec_naive(&c);
+        assert!((sv[0] - d as f32).abs() < 1e-5);
+        for &v in &sv[1..] {
+            assert!(v.abs() < 1e-6);
+        }
+        assert!(r_sum_from_sumvec(&sv, Q::L2) < 1e-10);
+        assert!(r_off(&c) < 1e-10);
+    }
+
+    #[test]
+    fn cancellation_gives_undesirable_minimum() {
+        // The weakness the paper fixes with permutation: off-diagonal
+        // elements that cancel along a wrap-diagonal make R_sum ~ 0
+        // while R_off stays large (§4.3).
+        let d = 4;
+        let mut c = Tensor::zeros(&[d, d]);
+        // wrap-diagonal i=1 holds elements (j, (1+j) mod 4); fill with +x/-x.
+        c.set2(0, 1, 0.9);
+        c.set2(1, 2, -0.9);
+        c.set2(2, 3, 0.9);
+        c.set2(3, 0, -0.9);
+        let sv = sumvec_naive(&c);
+        assert!(r_sum_from_sumvec(&sv, Q::L2) < 1e-10, "cancels to zero");
+        assert!(r_off(&c) > 3.0, "but individual correlations are large");
+    }
+
+    #[test]
+    fn covariance_of_constant_is_zero_and_rvar_fires() {
+        let t = Tensor::from_vec(&[4, 3], vec![2.0; 12]);
+        let k = covariance(&t);
+        assert!(k.data().iter().all(|v| v.abs() < 1e-9));
+        // collapsed embedding: variance 0 => hinge = gamma per feature
+        assert!((r_var(&k, 1.0) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn standardized_views_give_unit_diag_crosscorr_with_self() {
+        let mut rng = Rng::new(7);
+        let mut a = rand_tensor(&mut rng, 64, 6);
+        a.standardize_columns(1e-6);
+        let c = cross_correlation(&a, &a, 64.0);
+        for i in 0..6 {
+            assert!((c.at2(i, i) - 1.0).abs() < 1e-3, "C_{i}{i}={}", c.at2(i, i));
+        }
+        assert!(diag_invariance(&c) < 1e-4);
+    }
+
+    #[test]
+    fn bt_losses_agree_on_decorrelated_data() {
+        // For (nearly) feature-decorrelated inputs both losses are small
+        // and dominated by the invariance term, so they should agree.
+        let mut rng = Rng::new(8);
+        let a = rand_tensor(&mut rng, 512, 4);
+        let full = barlow_twins_loss(&a, &a, 1.0);
+        let fast = barlow_twins_sum_loss(&a, &a, 1.0, Q::L2);
+        // identical views => invariance = 0; residual correlations are
+        // O(1/sqrt(n)); R_sum <= R_off-ish magnitude here.
+        assert!(full < 0.5, "full {full}");
+        assert!(fast < 0.5, "fast {fast}");
+    }
+
+    #[test]
+    fn permuted_features_change_sumvec_but_not_r_off() {
+        // R_off is permutation-invariant (sum over all off-diag squares),
+        // sumvec components are not — this is exactly why permutation
+        // breaks the cancellation minima.
+        let mut rng = Rng::new(9);
+        let (n, d) = (16, 8);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        let perm = rng.permutation(d);
+        let ap = a.permute_columns(&perm);
+        let bp = b.permute_columns(&perm);
+        let c = cross_correlation(&a, &b, n as f32);
+        let cp = cross_correlation(&ap, &bp, n as f32);
+        let off = r_off(&c);
+        let off_p = r_off(&cp);
+        assert!((off - off_p).abs() < 1e-3 * off.max(1.0));
+        let sv = sumvec_naive(&c);
+        let sv_p = sumvec_naive(&cp);
+        // trace is invariant
+        assert!((sv[0] - sv_p[0]).abs() < 1e-3);
+        // but the off-trace components almost surely differ
+        let diff: f32 = sv[1..]
+            .iter()
+            .zip(&sv_p[1..])
+            .map(|(x, y)| (x - y).abs())
+            .sum();
+        assert!(diff > 1e-3, "permutation should reshuffle the sums");
+    }
+}

@@ -1,0 +1,277 @@
+//! Compiled artifact + manifest: the unit the coordinator executes.
+
+use anyhow::{Context, Result};
+
+use super::HostValue;
+use crate::util::json::{self, Json};
+
+/// Shape/dtype/name of one tensor crossing the artifact boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    /// Logical name (e.g. `"params.proj.w0"`, `"batch_a"`, `"loss"`).
+    pub name: String,
+    /// Dimensions; empty for scalars.
+    pub shape: Vec<usize>,
+    /// `"f32"` or `"i32"`.
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Byte size (f32/i32 are both 4 bytes).
+    pub fn bytes(&self) -> usize {
+        self.elements() * 4
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("tensor spec missing name"))?
+            .to_string();
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("tensor spec {name} missing dtype"))?
+            .to_string();
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("tensor spec {name} missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim in {name}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// Parsed `<name>.manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Artifact name.
+    pub name: String,
+    /// Ordered executable inputs.
+    pub inputs: Vec<TensorSpec>,
+    /// Ordered executable outputs (tuple components).
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata copied from the lowering config
+    /// (loss variant, d, n, block size, ...).
+    pub meta: Json,
+}
+
+impl Manifest {
+    /// Parse manifest JSON.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = json::parse(text).context("manifest json")?;
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("unnamed")
+            .to_string();
+        let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing '{key}'"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(Manifest {
+            name,
+            inputs: parse_specs("inputs")?,
+            outputs: parse_specs("outputs")?,
+            meta: v.get("meta").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    /// Build a manifest programmatically (tests, ad-hoc benches).
+    pub fn synthetic(name: &str, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>) -> Manifest {
+        Manifest {
+            name: name.to_string(),
+            inputs,
+            outputs,
+            meta: Json::Null,
+        }
+    }
+
+    /// Index of the input named `name`.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+
+    /// Index of the output named `name`.
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s.name == name)
+    }
+
+    /// Names of inputs with the given prefix, in manifest order.
+    pub fn inputs_with_prefix(&self, prefix: &str) -> Vec<&TensorSpec> {
+        self.inputs
+            .iter()
+            .filter(|s| s.name.starts_with(prefix))
+            .collect()
+    }
+
+    /// Meta field as usize (e.g. `"d"`, `"n"`).
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(Json::as_usize)
+    }
+
+    /// Meta field as str (e.g. `"variant"`).
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(Json::as_str)
+    }
+}
+
+/// A compiled executable plus its manifest.
+pub struct Artifact {
+    manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    pub(super) fn new(manifest: Manifest, exe: xla::PjRtLoadedExecutable) -> Artifact {
+        Artifact { manifest, exe }
+    }
+
+    /// The artifact's manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute with host values in manifest input order; returns host
+    /// values in manifest output order.
+    ///
+    /// Validates shapes/dtypes against the manifest before crossing the
+    /// FFI boundary so mismatches fail with a named tensor instead of an
+    /// opaque XLA error.
+    pub fn execute(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        anyhow::ensure!(
+            inputs.len() == self.manifest.inputs.len(),
+            "artifact {}: got {} inputs, manifest expects {}",
+            self.manifest.name,
+            inputs.len(),
+            self.manifest.inputs.len()
+        );
+        for (v, spec) in inputs.iter().zip(&self.manifest.inputs) {
+            anyhow::ensure!(
+                v.shape() == spec.shape && v.dtype() == spec.dtype,
+                "artifact {}: input '{}' expects {:?}:{} got {:?}:{}",
+                self.manifest.name,
+                spec.name,
+                spec.shape,
+                spec.dtype,
+                v.shape(),
+                v.dtype()
+            );
+        }
+        let literals = inputs
+            .iter()
+            .map(HostValue::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let raw = self.execute_literals(&literals)?;
+        anyhow::ensure!(
+            raw.len() == self.manifest.outputs.len(),
+            "artifact {}: got {} outputs, manifest expects {}",
+            self.manifest.name,
+            raw.len(),
+            self.manifest.outputs.len()
+        );
+        raw.iter()
+            .zip(&self.manifest.outputs)
+            .map(|(lit, spec)| HostValue::from_literal(lit, spec))
+            .collect()
+    }
+
+    /// Low-level execute: literals in, decomposed tuple literals out.
+    /// No manifest validation — the hot path for callers that manage
+    /// literals themselves (avoids Tensor↔Literal conversions).
+    pub fn execute_literals(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.run(self.exe.execute::<xla::Literal>(inputs))
+    }
+
+    /// Like [`Self::execute_literals`] but borrowing inputs — lets the
+    /// trainer pass store-resident parameter literals without cloning.
+    pub fn execute_literals_ref(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.run(self.exe.execute::<&xla::Literal>(inputs))
+    }
+
+    fn run(
+        &self,
+        outs: std::result::Result<Vec<Vec<xla::PjRtBuffer>>, xla::Error>,
+    ) -> Result<Vec<xla::Literal>> {
+        let outs = outs.map_err(|e| anyhow::anyhow!("executing {}: {e}", self.manifest.name))?;
+        let mut result = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {}: {e}", self.manifest.name))?;
+        // Lowered with return_tuple=True: single tuple output.
+        result
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("decomposing result of {}: {e}", self.manifest.name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+        "name": "toy",
+        "inputs": [
+            {"name": "x", "shape": [2, 3], "dtype": "f32"},
+            {"name": "perm", "shape": [3], "dtype": "i32"}
+        ],
+        "outputs": [
+            {"name": "loss", "shape": [], "dtype": "f32"}
+        ],
+        "meta": {"variant": "bt_sum", "d": 3}
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.name, "toy");
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.inputs[0].name, "x");
+        assert_eq!(m.inputs[0].shape, vec![2, 3]);
+        assert_eq!(m.inputs[1].dtype, "i32");
+        assert_eq!(m.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(m.meta_str("variant"), Some("bt_sum"));
+        assert_eq!(m.meta_usize("d"), Some(3));
+        assert_eq!(m.input_index("perm"), Some(1));
+        assert_eq!(m.output_index("loss"), Some(0));
+        assert_eq!(m.input_index("nope"), None);
+    }
+
+    #[test]
+    fn spec_sizes() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.inputs[0].elements(), 6);
+        assert_eq!(m.inputs[0].bytes(), 24);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"inputs": [{}], "outputs": []}"#).is_err());
+    }
+
+    #[test]
+    fn prefix_filter() {
+        let m = Manifest::parse(
+            r#"{"name":"t","inputs":[
+                {"name":"params.a","shape":[1],"dtype":"f32"},
+                {"name":"batch","shape":[1],"dtype":"f32"},
+                {"name":"params.b","shape":[1],"dtype":"f32"}
+            ],"outputs":[]}"#,
+        )
+        .unwrap();
+        let p = m.inputs_with_prefix("params.");
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].name, "params.a");
+    }
+}

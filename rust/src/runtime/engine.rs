@@ -1,0 +1,73 @@
+//! The PJRT engine: client ownership + artifact loading/compilation.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::artifact::{Artifact, Manifest};
+
+/// Owns the PJRT client and compiles artifacts against it.
+///
+/// One `Engine` per process; artifacts are compiled once and cached by the
+/// caller (compilation of a full train step takes O(seconds), execution
+/// O(ms), so the coordinator compiles everything up front).
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine rooted at `artifact_dir`
+    /// (usually `artifacts/`).
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Engine {
+            client,
+            artifact_dir: artifact_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Platform name reported by PJRT ("cpu" / "Host").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Directory artifacts are loaded from.
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Load `<name>.hlo.txt` + `<name>.manifest.json` from the artifact
+    /// directory and compile the executable.
+    pub fn load_artifact(&self, name: &str) -> Result<Artifact> {
+        let hlo_path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let manifest_path = self.artifact_dir.join(format!("{name}.manifest.json"));
+        let manifest_text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Manifest::parse(&manifest_text)
+            .with_context(|| format!("parsing {}", manifest_path.display()))?;
+        self.compile_with_manifest(&hlo_path, manifest)
+    }
+
+    /// Compile an HLO text file against an explicit manifest (used by tests
+    /// and by ad-hoc benchmark artifacts).
+    pub fn compile_with_manifest(&self, hlo_path: &Path, manifest: Manifest) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", hlo_path.display()))?;
+        Ok(Artifact::new(manifest, exe))
+    }
+}

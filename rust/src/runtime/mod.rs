@@ -1,0 +1,109 @@
+//! PJRT runtime: loads AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from the rust hot path.
+//!
+//! Interchange format is **HLO text** (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which the pinned
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md).
+//!
+//! Each artifact `<name>.hlo.txt` ships with `<name>.manifest.json`
+//! describing the ordered input/output tensors (name, shape, dtype) so the
+//! coordinator can marshal host data without guessing jax's flattening
+//! order. Executables lowered with `return_tuple=True` return a single
+//! tuple literal; [`Artifact::execute`] decomposes it into the named
+//! outputs.
+
+mod artifact;
+mod engine;
+pub mod params;
+
+pub use artifact::{Artifact, Manifest, TensorSpec};
+pub use engine::Engine;
+pub use params::ParamStore;
+
+use crate::util::tensor::Tensor;
+use anyhow::Result;
+
+/// Host-side value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    /// f32 tensor (row-major).
+    F32(Tensor),
+    /// i32 tensor (shape, data) — used for permutation indices and labels.
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl HostValue {
+    /// Scalar f32 convenience constructor.
+    pub fn scalar(v: f32) -> Self {
+        HostValue::F32(Tensor::from_vec(&[], vec![v]))
+    }
+
+    /// Wrap a permutation (u32 indices) as an i32 vector value.
+    pub fn from_permutation(perm: &[u32]) -> Self {
+        HostValue::I32(vec![perm.len()], perm.iter().map(|&p| p as i32).collect())
+    }
+
+    /// Shape of the value.
+    pub fn shape(&self) -> Vec<usize> {
+        match self {
+            HostValue::F32(t) => t.shape().to_vec(),
+            HostValue::I32(s, _) => s.clone(),
+        }
+    }
+
+    /// Dtype name matching the manifest convention ("f32" / "i32").
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            HostValue::F32(_) => "f32",
+            HostValue::I32(..) => "i32",
+        }
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64>;
+        let lit = match self {
+            HostValue::F32(t) => {
+                dims = t.shape().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data()).reshape(&dims)?
+            }
+            HostValue::I32(shape, data) => {
+                dims = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read back from an XLA literal according to a manifest spec.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostValue> {
+        match spec.dtype.as_str() {
+            "f32" => {
+                let data = lit.to_vec::<f32>()?;
+                Ok(HostValue::F32(Tensor::from_vec(&spec.shape, data)))
+            }
+            "i32" => {
+                let data = lit.to_vec::<i32>()?;
+                Ok(HostValue::I32(spec.shape.clone(), data))
+            }
+            other => anyhow::bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+
+    /// Borrow the f32 tensor or fail.
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            _ => anyhow::bail!("expected f32 tensor"),
+        }
+    }
+
+    /// Consume into the f32 tensor or fail.
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            _ => anyhow::bail!("expected f32 tensor"),
+        }
+    }
+}

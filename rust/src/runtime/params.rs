@@ -1,0 +1,169 @@
+//! Named parameter store: host-resident literals keyed by manifest names.
+//!
+//! The train artifact's inputs/outputs carry flattened pytree names
+//! (`params.backbone.conv0_w`, `opt_state.projector.proj1_b`, ...). The
+//! store owns one `xla::Literal` per name and hands them out in whatever
+//! order a given artifact's manifest requires, so the same trained
+//! parameters can feed `train_*`, `embed_*`, and `project_*` artifacts.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::TensorSpec;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::util::tensor::Tensor;
+
+/// Host-resident named tensors as XLA literals.
+pub struct ParamStore {
+    entries: BTreeMap<String, xla::Literal>,
+}
+
+fn literal_from_tensor(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("literal reshape: {e}"))
+}
+
+fn tensor_from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal read: {e}"))?;
+    Ok(Tensor::from_vec(shape, data))
+}
+
+impl ParamStore {
+    /// Build from a checkpoint, validating against the manifest specs that
+    /// share the checkpoint's name prefix.
+    pub fn from_checkpoint(ckpt: &Checkpoint, specs: &[&TensorSpec]) -> Result<ParamStore> {
+        let mut entries = BTreeMap::new();
+        for spec in specs {
+            let t = ckpt
+                .get(&spec.name)
+                .with_context(|| format!("checkpoint missing tensor '{}'", spec.name))?;
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "checkpoint tensor '{}' has shape {:?}, manifest expects {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+            entries.insert(spec.name.clone(), literal_from_tensor(t)?);
+        }
+        Ok(ParamStore { entries })
+    }
+
+    /// Zero-initialized store matching the given specs (optimizer state).
+    pub fn zeros(specs: &[&TensorSpec]) -> Result<ParamStore> {
+        let mut entries = BTreeMap::new();
+        for spec in specs {
+            let t = Tensor::zeros(&spec.shape);
+            entries.insert(spec.name.clone(), literal_from_tensor(&t)?);
+        }
+        Ok(ParamStore { entries })
+    }
+
+    /// Number of stored tensors.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Borrow the literal for `name`.
+    pub fn get(&self, name: &str) -> Result<&xla::Literal> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("param store missing '{name}'"))
+    }
+
+    /// Replace the literal for `name` (must already exist).
+    pub fn put(&mut self, name: &str, lit: xla::Literal) -> Result<()> {
+        match self.entries.get_mut(name) {
+            Some(slot) => {
+                *slot = lit;
+                Ok(())
+            }
+            None => bail!("param store has no slot '{name}'"),
+        }
+    }
+
+    /// Snapshot to host tensors (checkpointing, diagnostics). Shapes come
+    /// from the provided specs (must match the stored names).
+    pub fn to_checkpoint(&self, specs: &[&TensorSpec]) -> Result<Checkpoint> {
+        let mut tensors = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let lit = self.get(&spec.name)?;
+            tensors.push((spec.name.clone(), tensor_from_literal(lit, &spec.shape)?));
+        }
+        Ok(Checkpoint { tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<TensorSpec> {
+        vec![
+            TensorSpec {
+                name: "params.w".into(),
+                shape: vec![2, 2],
+                dtype: "f32".into(),
+            },
+            TensorSpec {
+                name: "params.b".into(),
+                shape: vec![2],
+                dtype: "f32".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn from_checkpoint_roundtrip() {
+        let ck = Checkpoint {
+            tensors: vec![
+                ("params.w".into(), Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.])),
+                ("params.b".into(), Tensor::from_vec(&[2], vec![5., 6.])),
+            ],
+        };
+        let specs = specs();
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let store = ParamStore::from_checkpoint(&ck, &refs).unwrap();
+        assert_eq!(store.len(), 2);
+        let back = store.to_checkpoint(&refs).unwrap();
+        assert_eq!(back.get("params.w").unwrap().data(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let ck = Checkpoint {
+            tensors: vec![("params.w".into(), Tensor::zeros(&[3]))],
+        };
+        let specs = vec![TensorSpec {
+            name: "params.w".into(),
+            shape: vec![2, 2],
+            dtype: "f32".into(),
+        }];
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        assert!(ParamStore::from_checkpoint(&ck, &refs).is_err());
+    }
+
+    #[test]
+    fn zeros_and_put() {
+        let specs = specs();
+        let refs: Vec<&TensorSpec> = specs.iter().collect();
+        let mut store = ParamStore::zeros(&refs).unwrap();
+        let t = Tensor::from_vec(&[2], vec![7., 8.]);
+        store.put("params.b", literal_from_tensor(&t).unwrap()).unwrap();
+        assert!(store.put("params.nope", literal_from_tensor(&t).unwrap()).is_err());
+        let back = store.to_checkpoint(&refs).unwrap();
+        assert_eq!(back.get("params.b").unwrap().data(), &[7., 8.]);
+        assert_eq!(back.get("params.w").unwrap().data(), &[0.0; 4]);
+    }
+}

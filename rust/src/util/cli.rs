@@ -1,0 +1,202 @@
+//! A small command-line argument parser.
+//!
+//! The offline environment only ships the `xla`/`anyhow` crates, so we own
+//! the CLI surface: `decorr <subcommand> [--flag value] [--switch] [pos…]`.
+//! Flags may be given as `--key value` or `--key=value`; `--switch` with no
+//! value is a boolean. Unknown-flag detection is the caller's duty via
+//! [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: a subcommand, `--key value` flags, and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// The subcommand (first non-flag token), if any.
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    consumed: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — `argv[0]` excluded.
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if flag.is_empty() {
+                    // `--` separator: rest is positional
+                    args.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // Peek: a following token that isn't a flag is the value.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            args.flags.insert(flag.to_string(), v);
+                        }
+                        _ => {
+                            args.flags.insert(flag.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Result<Args> {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    /// Raw flag lookup (marks the flag consumed).
+    pub fn flag(&mut self, key: &str) -> Option<String> {
+        let v = self.flags.get(key).cloned();
+        if v.is_some() {
+            self.consumed.insert(key.to_string());
+        }
+        v
+    }
+
+    /// String flag with default.
+    pub fn str_or(&mut self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string flag.
+    pub fn str_required(&mut self, key: &str) -> Result<String> {
+        self.flag(key)
+            .with_context(|| format!("missing required flag --{key}"))
+    }
+
+    /// Typed flag with default; errors on parse failure.
+    pub fn get_or<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("invalid value for --{key}: {e}")),
+        }
+    }
+
+    /// Boolean switch: present (with no value or `=true`) means true.
+    pub fn switch(&mut self, key: &str) -> bool {
+        matches!(self.flag(key).as_deref(), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list flag, e.g. `--dims 512,1024,2048`.
+    pub fn list_or<T: std::str::FromStr>(&mut self, key: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse::<T>()
+                        .map_err(|e| anyhow::anyhow!("invalid element in --{key}: {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error on any flag that was provided but never consumed — catches
+    /// typos like `--epohcs`.
+    pub fn finish(&self) -> Result<()> {
+        let unknown: Vec<_> = self
+            .flags
+            .keys()
+            .filter(|k| !self.consumed.contains(*k))
+            .cloned()
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown flag(s): {}", unknown.join(", "));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // NB: value-taking is greedy, so positionals go before flags (or
+        // after `--`); a bare switch followed by a positional would consume
+        // it as the value.
+        let mut a = parse("train pos1 --epochs 5 --lr=0.3 --verbose");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get_or("epochs", 0usize).unwrap(), 5);
+        assert_eq!(a.get_or("lr", 0.0f32).unwrap(), 0.3);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = parse("bench");
+        assert_eq!(a.get_or("iters", 7usize).unwrap(), 7);
+        assert_eq!(a.str_or("out", "x.json"), "x.json");
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let mut a = parse("train --epohcs 5");
+        let _ = a.get_or("epochs", 0usize).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn required_flag_errors_when_missing() {
+        let mut a = parse("eval");
+        assert!(a.str_required("checkpoint").is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let mut a = parse("sweep --dims 512,1024, 2048");
+        // note: "--dims 512,1024," consumes the next token? no — next token
+        // "2048" is not a flag so it became the value... verify semantics:
+        // "--dims" takes "512,1024," then "2048" is positional.
+        assert_eq!(a.list_or("dims", &[0usize]).unwrap(), vec![512, 1024]);
+        assert_eq!(a.positional, vec!["2048"]);
+    }
+
+    #[test]
+    fn double_dash_separator() {
+        let a = parse("run -- --not-a-flag");
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let mut a = parse("train --dry-run");
+        assert!(a.switch("dry-run"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Small self-contained utilities: RNG, JSON, tensors, timing.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod tensor;
+pub mod timer;

@@ -1,0 +1,263 @@
+//! A small row-major `f32` tensor used on the host side.
+//!
+//! This is not an ndarray clone — just the minimal shape-carrying container
+//! the data pipeline, regularizer validators, and linear-eval solver need.
+//! Device math lives in the AOT-compiled XLA executables; host math here is
+//! deliberately simple and well-tested.
+
+use std::fmt;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    /// Zero-filled tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Build from existing data; panics if the element count mismatches.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} incompatible with {} elements",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Tensor shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat immutable view.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Flat mutable view.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D element access (row-major).
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// 2-D element assignment.
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Immutable row view of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    /// Mutable row view of a 2-D tensor.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Mean over all elements.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Column means of a 2-D tensor (length = ncols).
+    pub fn col_means(&self) -> Vec<f32> {
+        assert_eq!(self.shape.len(), 2);
+        let (n, d) = (self.shape[0], self.shape[1]);
+        let mut m = vec![0.0f32; d];
+        for i in 0..n {
+            let row = self.row(i);
+            for (mj, &x) in m.iter_mut().zip(row) {
+                *mj += x;
+            }
+        }
+        let inv = 1.0 / n.max(1) as f32;
+        for mj in &mut m {
+            *mj *= inv;
+        }
+        m
+    }
+
+    /// Column standard deviations (population) of a 2-D tensor.
+    pub fn col_stds(&self, means: &[f32]) -> Vec<f32> {
+        assert_eq!(self.shape.len(), 2);
+        let (n, d) = (self.shape[0], self.shape[1]);
+        assert_eq!(means.len(), d);
+        let mut s = vec![0.0f32; d];
+        for i in 0..n {
+            let row = self.row(i);
+            for j in 0..d {
+                let c = row[j] - means[j];
+                s[j] += c * c;
+            }
+        }
+        let inv = 1.0 / n.max(1) as f32;
+        for sj in &mut s {
+            *sj = (*sj * inv).sqrt();
+        }
+        s
+    }
+
+    /// Center columns (subtract column means). Returns the means.
+    pub fn center_columns(&mut self) -> Vec<f32> {
+        let means = self.col_means();
+        let (n, d) = (self.shape[0], self.shape[1]);
+        for i in 0..n {
+            let row = &mut self.data[i * d..(i + 1) * d];
+            for j in 0..d {
+                row[j] -= means[j];
+            }
+        }
+        means
+    }
+
+    /// Standardize columns to zero mean / unit std (std clamped at eps).
+    /// This is the `batch_normalization` preprocessing in the paper's
+    /// Listing 1 before the cross-correlation regularizer is applied.
+    pub fn standardize_columns(&mut self, eps: f32) {
+        let means = self.center_columns();
+        let stds = self.col_stds(&vec![0.0; means.len()]);
+        let (n, d) = (self.shape[0], self.shape[1]);
+        for i in 0..n {
+            let row = &mut self.data[i * d..(i + 1) * d];
+            for j in 0..d {
+                row[j] /= stds[j].max(eps);
+            }
+        }
+    }
+
+    /// Apply a column permutation: `out[:, j] = self[:, perm[j]]`.
+    /// This is the feature permutation of §4.3.
+    pub fn permute_columns(&self, perm: &[u32]) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (n, d) = (self.shape[0], self.shape[1]);
+        assert_eq!(perm.len(), d);
+        let mut out = Tensor::zeros(&[n, d]);
+        for i in 0..n {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (j, &p) in perm.iter().enumerate() {
+                dst[j] = src[p as usize];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_indexing() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        t.set2(1, 2, 5.0);
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.at2(0, 0), 0.0);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn col_means_and_center() {
+        let mut t = Tensor::from_vec(&[2, 2], vec![1.0, 10.0, 3.0, 30.0]);
+        let m = t.col_means();
+        assert_eq!(m, vec![2.0, 20.0]);
+        t.center_columns();
+        assert_eq!(t.col_means(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn standardize_gives_unit_std() {
+        let mut t = Tensor::from_vec(&[4, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        t.standardize_columns(1e-6);
+        let m = t.col_means();
+        let s = t.col_stds(&m);
+        assert!(m[0].abs() < 1e-6);
+        assert!((s[0] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn permute_columns_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let perm = vec![2u32, 0, 1];
+        let p = t.permute_columns(&perm);
+        assert_eq!(p.row(0), &[3., 1., 2.]);
+        // inverse permutation restores
+        let mut inv = vec![0u32; 3];
+        for (j, &pj) in perm.iter().enumerate() {
+            inv[pj as usize] = j as u32;
+        }
+        assert_eq!(p.permute_columns(&inv), t);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).reshape(&[3, 2]);
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.at2(2, 1), 6.0);
+    }
+}

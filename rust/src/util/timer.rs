@@ -1,0 +1,94 @@
+//! Wall-clock timing helpers for the bench harness and trainer metrics.
+
+use std::time::Instant;
+
+/// Accumulates wall-clock time across labelled sections.
+#[derive(Debug, Default)]
+pub struct SectionTimer {
+    sections: Vec<(String, f64)>,
+}
+
+impl SectionTimer {
+    /// New, empty timer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and accumulate under `label`.
+    pub fn time<T>(&mut self, label: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        match self.sections.iter_mut().find(|(l, _)| l == label) {
+            Some((_, acc)) => *acc += dt,
+            None => self.sections.push((label.to_string(), dt)),
+        }
+        out
+    }
+
+    /// Accumulated seconds for `label` (0.0 if never timed).
+    pub fn seconds(&self, label: &str) -> f64 {
+        self.sections
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    /// All (label, seconds) pairs in insertion order.
+    pub fn sections(&self) -> &[(String, f64)] {
+        &self.sections
+    }
+
+    /// Human-readable summary line.
+    pub fn summary(&self) -> String {
+        self.sections
+            .iter()
+            .map(|(l, s)| format!("{l}={s:.3}s"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Format a duration in seconds as `XdYhZm` / `XmYs` / `X.XXs`.
+pub fn human_duration(secs: f64) -> String {
+    if secs >= 86_400.0 {
+        let d = (secs / 86_400.0).floor();
+        let h = ((secs - d * 86_400.0) / 3600.0).floor();
+        format!("{d:.0}d {h:.0}h")
+    } else if secs >= 3600.0 {
+        let h = (secs / 3600.0).floor();
+        let m = ((secs - h * 3600.0) / 60.0).floor();
+        format!("{h:.0}h {m:.0}m")
+    } else if secs >= 60.0 {
+        let m = (secs / 60.0).floor();
+        format!("{m:.0}m {:.0}s", secs - m * 60.0)
+    } else {
+        format!("{secs:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_sections() {
+        let mut t = SectionTimer::new();
+        let v = t.time("a", || 42);
+        assert_eq!(v, 42);
+        t.time("a", || ());
+        t.time("b", || ());
+        assert!(t.seconds("a") >= 0.0);
+        assert_eq!(t.sections().len(), 2);
+        assert!(t.summary().contains("a="));
+    }
+
+    #[test]
+    fn human_durations() {
+        assert_eq!(human_duration(1.5), "1.50s");
+        assert_eq!(human_duration(90.0), "1m 30s");
+        assert_eq!(human_duration(3700.0), "1h 1m");
+        assert_eq!(human_duration(100_000.0), "1d 3h");
+    }
+}

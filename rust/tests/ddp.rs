@@ -1,0 +1,100 @@
+//! Integration tests for the simulated-DDP coordinator (paper App. E.3).
+
+use decorr::config::TrainConfig;
+use decorr::coordinator::{DdpTrainer, Trainer};
+use decorr::data::loader::make_batch;
+use decorr::data::synth::{ShapeWorld, ShapeWorldConfig};
+use decorr::data::{AugmentConfig, Augmenter};
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/grad_bt_sum_small_s1.manifest.json").exists()
+}
+
+fn small_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::preset_small();
+    cfg.out_dir = String::new();
+    cfg.epochs = 1;
+    cfg.steps_per_epoch = 3;
+    cfg
+}
+
+/// With one shard, a DDP step (grad artifact + apply artifact) must be
+/// mathematically identical to the fused monolithic train step.
+#[test]
+fn one_shard_matches_monolithic_step() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = small_cfg();
+    let mut mono = Trainer::new(cfg.clone()).unwrap();
+    let mut ddp = DdpTrainer::new(cfg.clone(), 1).unwrap();
+    assert_eq!(mono.batch_size().unwrap(), ddp.batch_size());
+
+    let dataset = ShapeWorld::new(ShapeWorldConfig {
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    let aug = Augmenter::new(AugmentConfig::default());
+    for step in 0..3 {
+        let batch = make_batch(&dataset, &aug, ddp.batch_size(), 2048, cfg.seed, step);
+        let m1 = mono.step(&batch, 0).unwrap();
+        let m2 = ddp.step(&batch, 0).unwrap();
+        let rel = (m1.loss - m2.loss).abs() / m1.loss.abs().max(1e-6);
+        assert!(
+            rel < 1e-3,
+            "step {step}: monolithic {} vs ddp {} (rel {rel:.2e})",
+            m1.loss,
+            m2.loss
+        );
+    }
+    // Parameters must agree after the same updates.
+    let s1 = mono.snapshot().unwrap();
+    let s2 = ddp.snapshot().unwrap();
+    for ((n1, t1), (n2, t2)) in s1.tensors.iter().zip(&s2.tensors) {
+        assert_eq!(n1, n2);
+        let max_rel = t1
+            .data()
+            .iter()
+            .zip(t2.data())
+            .map(|(a, b)| (a - b).abs() / a.abs().max(1e-3))
+            .fold(0.0f32, f32::max);
+        assert!(max_rel < 1e-2, "{n1}: max rel diff {max_rel}");
+    }
+}
+
+/// Multi-shard training runs and descends; per-shard losses average into
+/// a finite global loss (the paper's no-collective-ops property: each
+/// shard's loss uses only local statistics).
+#[test]
+fn multi_shard_training_descends() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = small_cfg();
+    cfg.epochs = 1;
+    cfg.steps_per_epoch = 8;
+    cfg.log_every = usize::MAX;
+    let mut ddp = DdpTrainer::new(cfg, 4).unwrap();
+    assert_eq!(ddp.shards(), 4);
+    let report = ddp.run().unwrap();
+    assert!(report.final_loss.is_finite());
+    assert!(
+        report.final_loss < report.initial_loss * 1.05,
+        "{} -> {}",
+        report.initial_loss,
+        report.final_loss
+    );
+}
+
+/// Shard counts that don't match an emitted artifact fail cleanly.
+#[test]
+fn missing_shard_artifact_is_an_error() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = small_cfg();
+    assert!(DdpTrainer::new(cfg, 3).is_err());
+}

@@ -1,0 +1,241 @@
+//! Integration tests over the real AOT artifacts (requires `make artifacts`).
+//!
+//! These exercise the full L3↔L2↔L1 stack: the rust PJRT runtime executes
+//! jax-lowered HLO containing the Pallas kernels, and the results are
+//! validated against the pure-rust host implementations of the paper's
+//! quantities.
+
+use decorr::config::TrainConfig;
+use decorr::coordinator::trainer::{literal_f32, literal_i32, scalar};
+use decorr::coordinator::{linear_eval, InputAdapter, Trainer};
+use decorr::data::synth::{ShapeWorld, ShapeWorldConfig};
+use decorr::regularizer;
+use decorr::runtime::Engine;
+use decorr::util::rng::Rng;
+use decorr::util::tensor::Tensor;
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/train_bt_sum_tiny.manifest.json").exists()
+}
+
+fn rand_tensor(rng: &mut Rng, n: usize, d: usize) -> Tensor {
+    Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect())
+}
+
+/// Device loss artifact vs the pure-rust host implementation of the same
+/// equation — the strongest cross-layer correctness signal in the repo.
+#[test]
+fn device_bt_sum_loss_matches_host_reference() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::cpu("artifacts").unwrap();
+    let art = engine.load_artifact("loss_bt_sum_d256_n128").unwrap();
+    let (n, d) = (128usize, 256usize);
+
+    let mut rng = Rng::new(42);
+    let za = rand_tensor(&mut rng, n, d);
+    let zb = rand_tensor(&mut rng, n, d);
+    let perm: Vec<u32> = (0..d as u32).collect();
+
+    let inputs = [
+        literal_f32(&za).unwrap(),
+        literal_f32(&zb).unwrap(),
+        literal_i32(&perm).unwrap(),
+    ];
+    let out = art.execute_literals(&inputs).unwrap();
+    let device_loss = scalar(&out[0]).unwrap();
+
+    // Host: scale * (inv + λ·R_sum) with the aot.py bt_sum hyperparameters.
+    let host_loss =
+        0.125 * regularizer::barlow_twins_sum_loss(&za, &zb, 2f32.powi(-10), regularizer::Q::L2);
+    let rel = (device_loss as f64 - host_loss).abs() / host_loss.abs().max(1e-9);
+    assert!(
+        rel < 2e-3,
+        "device {device_loss} vs host {host_loss} (rel {rel:.2e})"
+    );
+}
+
+/// Same check for the baseline R_off loss (crosscorr + offdiag kernels).
+#[test]
+fn device_bt_off_loss_matches_host_reference() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::cpu("artifacts").unwrap();
+    let art = engine.load_artifact("loss_bt_off_d256_n128").unwrap();
+    let (n, d) = (128usize, 256usize);
+    let mut rng = Rng::new(7);
+    let za = rand_tensor(&mut rng, n, d);
+    let zb = rand_tensor(&mut rng, n, d);
+    let perm: Vec<u32> = (0..d as u32).collect();
+    let inputs = [
+        literal_f32(&za).unwrap(),
+        literal_f32(&zb).unwrap(),
+        literal_i32(&perm).unwrap(),
+    ];
+    let out = art.execute_literals(&inputs).unwrap();
+    let device_loss = scalar(&out[0]).unwrap();
+    let host_loss = 0.1 * regularizer::barlow_twins_loss(&za, &zb, 0.0051);
+    let rel = (device_loss as f64 - host_loss).abs() / host_loss.abs().max(1e-9);
+    assert!(
+        rel < 2e-3,
+        "device {device_loss} vs host {host_loss} (rel {rel:.2e})"
+    );
+}
+
+/// Permutation invariance contract (§4.3): R_off path is permutation-
+/// invariant on-device; the R_sum path is not.
+#[test]
+fn device_permutation_semantics() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::cpu("artifacts").unwrap();
+    let (n, d) = (128usize, 256usize);
+    let mut rng = Rng::new(3);
+    let za = rand_tensor(&mut rng, n, d);
+    let zb = rand_tensor(&mut rng, n, d);
+    let id: Vec<u32> = (0..d as u32).collect();
+    let shuffled = rng.permutation(d);
+
+    let run = |name: &str, perm: &[u32]| -> f32 {
+        let art = engine.load_artifact(name).unwrap();
+        let inputs = [
+            literal_f32(&za).unwrap(),
+            literal_f32(&zb).unwrap(),
+            literal_i32(perm).unwrap(),
+        ];
+        scalar(&art.execute_literals(&inputs).unwrap()[0]).unwrap()
+    };
+
+    let off_id = run("loss_bt_off_d256_n128", &id);
+    let off_pm = run("loss_bt_off_d256_n128", &shuffled);
+    assert!(
+        (off_id - off_pm).abs() / off_id.abs().max(1e-6) < 1e-3,
+        "R_off must be permutation-invariant: {off_id} vs {off_pm}"
+    );
+
+    let sum_id = run("loss_bt_sum_d256_n128", &id);
+    let sum_pm = run("loss_bt_sum_d256_n128", &shuffled);
+    assert!(
+        (sum_id - sum_pm).abs() > 1e-7,
+        "R_sum should depend on the permutation: {sum_id} vs {sum_pm}"
+    );
+}
+
+/// Trainer end-to-end on the tiny preset: losses finite + decreasing.
+#[test]
+fn tiny_training_run_descends() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = TrainConfig::preset_tiny();
+    cfg.epochs = 2;
+    cfg.steps_per_epoch = 15;
+    cfg.out_dir = String::new(); // in-memory metrics
+    cfg.lr = 0.1;
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let report = trainer.run().unwrap();
+    assert_eq!(report.steps, 30);
+    assert!(report.final_loss.is_finite());
+    assert!(
+        report.final_loss < report.initial_loss,
+        "no descent: {} -> {}",
+        report.initial_loss,
+        report.final_loss
+    );
+}
+
+/// Snapshot → linear eval path: a briefly-trained tiny model must beat
+/// chance on ShapeWorld classification.
+#[test]
+fn tiny_linear_eval_beats_chance() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = TrainConfig::preset_tiny();
+    cfg.epochs = 2;
+    cfg.steps_per_epoch = 15;
+    cfg.out_dir = String::new();
+    let seed = cfg.seed;
+    let mut trainer = Trainer::new(cfg).unwrap();
+    trainer.run().unwrap();
+    let snapshot = trainer.snapshot().unwrap();
+    let dataset = ShapeWorld::new(ShapeWorldConfig {
+        seed,
+        ..Default::default()
+    });
+    let result = linear_eval(
+        trainer.engine(),
+        "tiny",
+        &snapshot,
+        &dataset,
+        trainer.input_adapter(),
+        512,
+        256,
+        120,
+    )
+    .unwrap();
+    let chance = 1.0 / dataset.num_classes() as f32;
+    assert!(
+        result.top1 > chance + 0.1,
+        "top1 {} should beat chance {}",
+        result.top1,
+        chance
+    );
+}
+
+/// Checkpoint save/load through the trainer snapshot.
+#[test]
+fn snapshot_roundtrip() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = TrainConfig::preset_tiny();
+    cfg.epochs = 1;
+    cfg.steps_per_epoch = 2;
+    cfg.out_dir = String::new();
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let dataset = ShapeWorld::new(ShapeWorldConfig::default());
+    let aug = decorr::data::Augmenter::new(decorr::data::AugmentConfig::default());
+    let batch = decorr::data::loader::make_batch(
+        &dataset,
+        &aug,
+        trainer.batch_size().unwrap(),
+        256,
+        1,
+        0,
+    );
+    trainer.step(&batch, 0).unwrap();
+    let snap = trainer.snapshot().unwrap();
+    let dir = std::env::temp_dir().join(format!("decorr_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("snap.ckpt");
+    snap.save(&path).unwrap();
+    let back = decorr::coordinator::Checkpoint::load(&path).unwrap();
+    assert_eq!(back.num_params(), snap.num_params());
+    for (name, t) in &snap.tensors {
+        assert_eq!(back.get(name).unwrap().data(), t.data(), "{name}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The InputAdapter must match the tiny artifact's flat input.
+#[test]
+fn tiny_adapter_is_flat() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = TrainConfig::preset_tiny();
+    let trainer = Trainer::new(cfg).unwrap();
+    assert_eq!(trainer.input_adapter(), InputAdapter::FlatGray(64));
+    assert_eq!(trainer.embed_dim(), 256);
+}

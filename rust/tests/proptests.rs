@@ -1,0 +1,281 @@
+//! Property-based tests over the coordinator substrates.
+//!
+//! The offline environment has no `proptest` crate, so this file carries a
+//! small property harness (`for_cases`) driving the crate's deterministic
+//! RNG: each property is checked over many randomized cases and failures
+//! report the case seed for exact reproduction.
+
+use decorr::config::{TrainConfig, Variant};
+use decorr::coordinator::LrSchedule;
+use decorr::data::loader::make_batch;
+use decorr::data::synth::{ShapeWorld, ShapeWorldConfig, Vocab};
+use decorr::data::{AugmentConfig, Augmenter};
+use decorr::fft;
+use decorr::regularizer::{self, Q};
+use decorr::util::json;
+use decorr::util::rng::Rng;
+use decorr::util::tensor::Tensor;
+
+/// Run `prop` over `cases` seeded random cases; panic with the seed on
+/// failure so the case can be replayed.
+fn for_cases(cases: u64, prop: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at case seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn rand_tensor(rng: &mut Rng, n: usize, d: usize) -> Tensor {
+    Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect())
+}
+
+// ---------------------------------------------------------------- sumvec
+
+/// sumvec computed via FFT == sumvec computed from the materialized matrix,
+/// across random shapes (the paper's Eq. 5 ≡ Eq. 12 identity).
+#[test]
+fn prop_sumvec_fft_equals_naive() {
+    for_cases(40, |rng| {
+        let n = 1 + rng.next_bounded(12) as usize;
+        let d = 2 + rng.next_bounded(40) as usize;
+        let a = rand_tensor(rng, n, d);
+        let b = rand_tensor(rng, n, d);
+        let c = regularizer::cross_correlation(&a, &b, n as f32);
+        let naive = regularizer::sumvec_naive(&c);
+        let fast = regularizer::sumvec_fft(&a, &b, n as f32);
+        for (i, (x, y)) in naive.iter().zip(&fast).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-3 * (1.0 + x.abs()),
+                "n={n} d={d} i={i}: {x} vs {y}"
+            );
+        }
+    });
+}
+
+/// Every element of C contributes to exactly one sumvec component.
+#[test]
+fn prop_sumvec_partitions_matrix() {
+    for_cases(40, |rng| {
+        let d = 2 + rng.next_bounded(32) as usize;
+        let m = rand_tensor(rng, d, d);
+        let sv = regularizer::sumvec_naive(&m);
+        let total: f32 = m.data().iter().sum();
+        let sv_total: f32 = sv.iter().sum();
+        assert!((total - sv_total).abs() < 1e-3 * (1.0 + total.abs()));
+    });
+}
+
+/// R_off is invariant under simultaneous feature permutation of both views;
+/// the trace component of sumvec is too.
+#[test]
+fn prop_r_off_permutation_invariant() {
+    for_cases(30, |rng| {
+        let n = 4 + rng.next_bounded(12) as usize;
+        let d = 3 + rng.next_bounded(20) as usize;
+        let a = rand_tensor(rng, n, d);
+        let b = rand_tensor(rng, n, d);
+        let perm = rng.permutation(d);
+        let c = regularizer::cross_correlation(&a, &b, n as f32);
+        let cp = regularizer::cross_correlation(
+            &a.permute_columns(&perm),
+            &b.permute_columns(&perm),
+            n as f32,
+        );
+        let off = regularizer::r_off(&c);
+        let off_p = regularizer::r_off(&cp);
+        assert!((off - off_p).abs() < 1e-3 * (1.0 + off.abs()));
+        let tr = regularizer::sumvec_naive(&c)[0];
+        let tr_p = regularizer::sumvec_naive(&cp)[0];
+        assert!((tr - tr_p).abs() < 1e-3 * (1.0 + tr.abs()));
+    });
+}
+
+/// Grouped regularizer interpolates: b=1,q=2 == R_off; b=d == R_sum.
+#[test]
+fn prop_grouping_interpolates() {
+    for_cases(20, |rng| {
+        let n = 3 + rng.next_bounded(8) as usize;
+        let d = 4 + rng.next_bounded(12) as usize;
+        let a = rand_tensor(rng, n, d);
+        let b = rand_tensor(rng, n, d);
+        let c = regularizer::cross_correlation(&a, &b, n as f32);
+        let g1 = regularizer::r_sum_grouped_fft(&a, &b, 1, n as f32, Q::L2);
+        let off = regularizer::r_off(&c);
+        assert!((g1 - off).abs() < 1e-3 * (1.0 + off.abs()), "b=1: {g1} vs {off}");
+        let gd = regularizer::r_sum_grouped_fft(&a, &b, d, n as f32, Q::L2);
+        let flat = regularizer::r_sum_fft(&a, &b, n as f32, Q::L2);
+        assert!((gd - flat).abs() < 1e-3 * (1.0 + flat.abs()), "b=d: {gd} vs {flat}");
+    });
+}
+
+/// R_sum is never larger than d times R_off (Cauchy–Schwarz on each
+/// wrap-diagonal sum of d elements), and both vanish together on diagonal C.
+#[test]
+fn prop_r_sum_bounded_by_r_off() {
+    for_cases(30, |rng| {
+        let n = 3 + rng.next_bounded(10) as usize;
+        let d = 2 + rng.next_bounded(24) as usize;
+        let a = rand_tensor(rng, n, d);
+        let b = rand_tensor(rng, n, d);
+        let c = regularizer::cross_correlation(&a, &b, n as f32);
+        let r_sum = regularizer::r_sum_fft(&a, &b, n as f32, Q::L2);
+        let r_off = regularizer::r_off(&c);
+        assert!(
+            r_sum <= d as f64 * r_off + 1e-3,
+            "d={d}: r_sum {r_sum} > d*r_off {}",
+            d as f64 * r_off
+        );
+    });
+}
+
+// ------------------------------------------------------------------- fft
+
+/// FFT round-trip at random lengths (pow2 and not).
+#[test]
+fn prop_fft_roundtrip() {
+    for_cases(40, |rng| {
+        let n = 1 + rng.next_bounded(128) as usize;
+        let x: Vec<fft::Complex> = (0..n)
+            .map(|_| fft::Complex::new(rng.gaussian() as f64, rng.gaussian() as f64))
+            .collect();
+        let y = fft::ifft(&fft::fft(&x));
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a.re - b.re).abs() < 1e-8 * n as f64 + 1e-9, "n={n}");
+            assert!((a.im - b.im).abs() < 1e-8 * n as f64 + 1e-9, "n={n}");
+        }
+    });
+}
+
+/// Circular correlation linearity: corr(x, y1 + y2) = corr(x,y1) + corr(x,y2).
+#[test]
+fn prop_correlation_linear() {
+    for_cases(30, |rng| {
+        let d = 2 + rng.next_bounded(40) as usize;
+        let x: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+        let y1: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+        let y2: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+        let sum: Vec<f32> = y1.iter().zip(&y2).map(|(a, b)| a + b).collect();
+        let lhs = fft::circular_correlate(&x, &sum);
+        let r1 = fft::circular_correlate(&x, &y1);
+        let r2 = fft::circular_correlate(&x, &y2);
+        for i in 0..d {
+            assert!((lhs[i] - r1[i] - r2[i]).abs() < 1e-3, "d={d} i={i}");
+        }
+    });
+}
+
+// ------------------------------------------------------------------ data
+
+/// Batches are deterministic functions of (seed, index) and label-aligned
+/// across views, at random batch sizes.
+#[test]
+fn prop_batches_deterministic_and_aligned() {
+    for_cases(10, |rng| {
+        let batch = 1 + rng.next_bounded(12) as usize;
+        let seed = rng.next_u64();
+        let bi = rng.next_bounded(100);
+        let ds = ShapeWorld::new(ShapeWorldConfig {
+            seed,
+            ..Default::default()
+        });
+        let aug = Augmenter::new(AugmentConfig::default());
+        let b1 = make_batch(&ds, &aug, batch, 1000, seed, bi);
+        let b2 = make_batch(&ds, &aug, batch, 1000, seed, bi);
+        assert_eq!(b1.view_a.images.data(), b2.view_a.images.data());
+        assert_eq!(b1.view_a.labels, b1.view_b.labels);
+        assert_eq!(b1.view_a.images.shape()[0], batch);
+    });
+}
+
+/// Labels are always within the vocabulary range.
+#[test]
+fn prop_labels_in_range() {
+    for_cases(10, |rng| {
+        let vocab = if rng.bernoulli(0.5) { Vocab::A } else { Vocab::B };
+        let ds = ShapeWorld::new(ShapeWorldConfig {
+            seed: rng.next_u64(),
+            vocab,
+            ..Default::default()
+        });
+        for i in 0..50 {
+            assert!((ds.sample(i).label as usize) < ds.num_classes());
+        }
+    });
+}
+
+// ------------------------------------------------------------ scheduling
+
+/// LR is always positive, bounded by base, and continuous at the
+/// warmup/cosine boundary.
+#[test]
+fn prop_lr_schedule_sane() {
+    for_cases(30, |rng| {
+        let spe = 1 + rng.next_bounded(50) as usize;
+        let warm = rng.next_bounded(5) as usize;
+        let epochs = 1 + warm + rng.next_bounded(20) as usize;
+        let base = rng.uniform(0.01, 1.0);
+        let s = LrSchedule::from_epochs(base, warm, epochs, spe);
+        let total = epochs * spe;
+        for step in 0..total {
+            let lr = s.lr(step);
+            assert!(lr > 0.0 && lr <= base * 1.0001, "step {step}: {lr}");
+        }
+        if warm > 0 {
+            let boundary = warm * spe;
+            let before = s.lr(boundary - 1);
+            let after = s.lr(boundary);
+            assert!((before - after).abs() < base * 0.25, "jump at warmup end");
+        }
+    });
+}
+
+// ------------------------------------------------------------------ json
+
+/// JSON round-trips arbitrary nested values built from the RNG.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut Rng, depth: usize) -> json::Json {
+        match if depth == 0 { rng.next_bounded(4) } else { rng.next_bounded(6) } {
+            0 => json::Json::Null,
+            1 => json::Json::Bool(rng.bernoulli(0.5)),
+            2 => json::Json::Num((rng.gaussian() * 100.0).round() as f64),
+            3 => json::Json::Str(format!("s{}✓\"\\{}", rng.next_bounded(10), rng.next_bounded(10))),
+            4 => json::Json::Arr((0..rng.next_bounded(4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.next_bounded(4) {
+                    m.insert(format!("k{i}"), gen(rng, depth - 1));
+                }
+                json::Json::Obj(m)
+            }
+        }
+    }
+    for_cases(50, |rng| {
+        let v = gen(rng, 3);
+        let text = v.to_string_compact();
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back, v, "{text}");
+    });
+}
+
+// ---------------------------------------------------------------- config
+
+/// Every variant round-trips through its artifact-name fragment, and the
+/// train artifact name embeds both variant and preset.
+#[test]
+fn prop_config_artifact_names() {
+    for v in Variant::all() {
+        let mut cfg = TrainConfig::default();
+        cfg.variant = v;
+        for preset in ["tiny", "small", "e2e"] {
+            cfg.preset = preset.into();
+            let name = cfg.train_artifact();
+            assert!(name.contains(v.as_str()));
+            assert!(name.ends_with(preset));
+        }
+    }
+}
