@@ -13,8 +13,12 @@ use anyhow::Result;
 use decorr::bench_harness::cmd::pretrain_and_eval;
 use decorr::bench_harness::{bench_for, loss_node_bytes, LossWorkload, Table};
 use decorr::config::{TrainConfig, Variant};
+use decorr::regularizer::kernel::{DecorrelationKernel, GroupedFftKernel, NaiveMatrixKernel};
+use decorr::regularizer::Q;
 use decorr::runtime::Engine;
 use decorr::util::cli::Args;
+use decorr::util::rng::Rng;
+use decorr::util::tensor::Tensor;
 
 fn main() -> Result<()> {
     let mut args = Args::from_env()?;
@@ -24,6 +28,45 @@ fn main() -> Result<()> {
     let budget = args.get_or("budget", 0.4f64)?;
     let with_accuracy = args.switch("accuracy");
     args.finish()?;
+
+    // Host-side interpolation first (needs no artifacts): the same Eq. 13
+    // sweep through the GroupedFftKernel on the pure-rust substrate, with
+    // the NaiveMatrixKernel as the b = 1 (≡ R_off) endpoint.
+    let (hn, hd) = (64usize, 512usize);
+    let mut rng = Rng::new(0x9501);
+    let ha = Tensor::from_vec(&[hn, hd], (0..hn * hd).map(|_| rng.gaussian()).collect());
+    let hb = Tensor::from_vec(&[hn, hd], (0..hn * hd).map(|_| rng.gaussian()).collect());
+    let mut host = Table::new(&["b", "host kernel (ms)", "R_sum^b (q=2)"]);
+    let mut naive = NaiveMatrixKernel::new(hd);
+    let t_naive = bench_for(0.2, 1, || {
+        naive.reset();
+        naive.accumulate(&ha, &hb);
+        naive.r_off(hn as f32).unwrap()
+    });
+    let v_naive = naive.r_off(hn as f32).unwrap();
+    host.row(vec![
+        "1 (= R_off, naive)".into(),
+        format!("{:.2}", t_naive.median_ms()),
+        format!("{v_naive:.4}"),
+    ]);
+    // Single-threaded like the naive endpoint, so the b-interpolation
+    // column reflects algorithmic cost, not thread count.
+    for b in [8usize, 32, 128, hd] {
+        let mut kernel = GroupedFftKernel::new(hd, b);
+        let stats = bench_for(0.2, 1, || {
+            kernel.reset();
+            kernel.accumulate(&ha, &hb);
+            kernel.r_sum(hn as f32, Q::L2)
+        });
+        let value = kernel.r_sum(hn as f32, Q::L2);
+        host.row(vec![
+            if b == hd { format!("{hd} (no grouping)") } else { format!("{b}") },
+            format!("{:.2}", stats.median_ms()),
+            format!("{value:.4}"),
+        ]);
+    }
+    println!("\nhost DecorrelationKernel sweep (d={hd}, n={hn}, no artifacts needed):");
+    host.print();
 
     let engine = Engine::cpu("artifacts")?;
     let mut table = Table::new(&["b", "fwd (ms)", "fwd+bwd (ms)", "loss-node MB"]);

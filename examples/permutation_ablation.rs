@@ -12,10 +12,11 @@
 //!            [--preset small --epochs 6 --family bt]`
 
 use anyhow::Result;
-use decorr::bench_harness::cmd::{display_name, pretrain_and_eval, project_views};
+use decorr::bench_harness::cmd::{display_name, pretrain_and_eval};
 use decorr::bench_harness::Table;
 use decorr::config::{TrainConfig, Variant};
-use decorr::regularizer;
+use decorr::coordinator::project_views;
+use decorr::regularizer::kernel::{normalized_residual, ResidualFamily};
 use decorr::runtime::Engine;
 use decorr::util::cli::Args;
 
@@ -31,10 +32,10 @@ fn main() -> Result<()> {
     let test_samples = args.get_or("test-samples", 512usize)?;
     args.finish()?;
 
-    let (flat, grouped) = if family == "vic" {
-        (Variant::VicSum, Variant::VicSumG128)
+    let (flat, grouped, residual_family) = if family == "vic" {
+        (Variant::VicSum, Variant::VicSumG128, ResidualFamily::VicReg)
     } else {
-        (Variant::BtSum, Variant::BtSumG128)
+        (Variant::BtSum, Variant::BtSumG128, ResidualFamily::BarlowTwins)
     };
 
     let mut tab5 = Table::new(&["grouping", "permutation", "top-1 (%)", "s / 10 steps"]);
@@ -56,15 +57,12 @@ fn main() -> Result<()> {
                 format!("{s_per_10:.2}"),
             ]);
 
-            // Table-6 residual on freshly projected twin views.
+            // Table-6 residual on freshly projected twin views, through
+            // the DecorrelationKernel trait.
             let engine = Engine::cpu(&cfg.artifact_dir)?;
             let (za, zb) =
                 project_views(&engine, &cfg.preset, &out.snapshot, out.adapter, cfg.seed, 4)?;
-            let residual = if family == "vic" {
-                regularizer::normalized_vic_residual(&za, &zb)
-            } else {
-                regularizer::normalized_bt_residual(&za, &zb)
-            };
+            let residual = normalized_residual(residual_family, &za, &zb);
             tab6.row(vec![
                 grouping.to_string(),
                 if permute { "yes" } else { "no" }.to_string(),

@@ -2,7 +2,8 @@
 //!
 //! 1. Start the PJRT engine and load an AOT loss artifact.
 //! 2. Compute the proposed FFT regularizer on-device and validate it
-//!    against the pure-rust host implementation (paper Eq. 12).
+//!    against the pure-rust host implementation (paper Eq. 12), then
+//!    against the planned `DecorrelationKernel` host path.
 //! 3. Run a few SSL pretraining steps on the tiny preset.
 //!
 //! Run with: `cargo run --release --offline --example quickstart`
@@ -12,6 +13,7 @@ use anyhow::Result;
 use decorr::config::TrainConfig;
 use decorr::coordinator::trainer::{literal_f32, literal_i32, scalar};
 use decorr::coordinator::Trainer;
+use decorr::regularizer::kernel::{DecorrelationKernel, FftSumvecKernel};
 use decorr::regularizer::{self, Q};
 use decorr::runtime::Engine;
 use decorr::util::rng::Rng;
@@ -44,6 +46,23 @@ fn main() -> Result<()> {
     let host =
         0.125 * regularizer::barlow_twins_sum_loss(&za, &zb, 2f32.powi(-10), Q::L2);
     println!("device loss = {device:.6}, host reference = {host:.6}");
+
+    // --- 2b. The same R_sum through the DecorrelationKernel trait --------
+    // The kernel plans its FFTs once, accumulates the batch with zero
+    // per-sample allocation, and evaluates on read — the API the bench
+    // harness and trainer diagnostics use.
+    let mut sa = za.clone();
+    let mut sb = zb.clone();
+    sa.standardize_columns(1e-6);
+    sb.standardize_columns(1e-6);
+    let mut kernel = FftSumvecKernel::new(d);
+    kernel.accumulate(&sa, &sb);
+    let r_sum = kernel.r_sum(n as f32, Q::L2);
+    let r_sum_free = regularizer::r_sum_fft(&sa, &sb, n as f32, Q::L2);
+    println!(
+        "host kernel R_sum = {r_sum:.6} over {} samples (free-function check {r_sum_free:.6})",
+        kernel.samples()
+    );
 
     // --- 3. A few pretraining steps --------------------------------------
     let mut cfg = TrainConfig::preset_tiny();

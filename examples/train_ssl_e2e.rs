@@ -102,6 +102,10 @@ fn main() -> Result<()> {
         eval.train_top1 * 100.0,
         100.0 / dataset.num_classes() as f32
     );
+    println!(
+        "feature decorrelation residual {:.5} (Eq. 16 via DecorrelationKernel)",
+        eval.feature_residual
+    );
 
     // --- transfer probe (ShapeWorld-B, paper Tab. 3 analogue) ------------
     println!("\n=== transfer probe (ShapeWorld-B) ===");

@@ -1,10 +1,22 @@
 //! FFT substrate bench: the pure-rust radix-2 FFT vs the naive O(n²) DFT,
-//! plus circular-correlation throughput — the primitive underlying the
-//! host-side sumvec path (paper Eq. 11).
+//! circular-correlation throughput, and — the headline for the planning
+//! layer — the planned (FftPlan/RfftPlan + reused scratch) vs unplanned
+//! (per-call allocation + recurrence twiddles) spectral accumulation loop
+//! of the paper's Eq. 12. Emits `BENCH_fft_host.json` for the perf
+//! trajectory.
 
-use decorr::bench_harness::{bench_for, Table};
+use decorr::bench_harness::{bench_for, table, Table};
 use decorr::fft;
 use decorr::util::rng::Rng;
+
+/// The pre-planning rfft: allocate a complex buffer, run the recurrence
+/// radix-2 transform, truncate — exactly what the legacy free function
+/// did per call. Kept here as the "unplanned" contender.
+fn rfft_unplanned(x: &[f32]) -> Vec<fft::Complex> {
+    let mut buf: Vec<fft::Complex> = x.iter().map(|&v| fft::Complex::new(v as f64, 0.0)).collect();
+    fft::fft_pow2(&mut buf);
+    buf[..x.len() / 2 + 1].to_vec()
+}
 
 fn main() {
     let mut table = Table::new(&["n", "fft (µs)", "naive dft (µs)", "speedup"]);
@@ -48,4 +60,80 @@ fn main() {
     }
     println!();
     corr.print();
+
+    // Planned vs unplanned Eq.-12 accumulation: Σ_k conj(F(a_k)) ∘ F(b_k)
+    // over a small batch of rows at each embedding dimension. The planned
+    // side builds plan + scratch once and then runs allocation-free.
+    let rows = 8usize;
+    let mut planned_tbl = Table::new(&[
+        "d",
+        "unplanned (µs/row)",
+        "planned (µs/row)",
+        "speedup",
+    ]);
+    for d in [1024usize, 4096, 8192] {
+        let mut rng = Rng::new(0xF17 ^ d as u64);
+        let a_rows: Vec<Vec<f32>> = (0..rows)
+            .map(|_| (0..d).map(|_| rng.gaussian()).collect())
+            .collect();
+        let b_rows: Vec<Vec<f32>> = (0..rows)
+            .map(|_| (0..d).map(|_| rng.gaussian()).collect())
+            .collect();
+        let bins = d / 2 + 1;
+
+        let t_unplanned = bench_for(0.3, 1, || {
+            let mut acc = vec![fft::Complex::ZERO; bins];
+            for k in 0..rows {
+                let fa = rfft_unplanned(&a_rows[k]);
+                let fb = rfft_unplanned(&b_rows[k]);
+                for (s, (x, y)) in acc.iter_mut().zip(fa.iter().zip(&fb)) {
+                    *s = *s + x.conj() * *y;
+                }
+            }
+            acc[0]
+        })
+        .median;
+
+        let plan = fft::RfftPlan::new(d);
+        let mut scratch = plan.make_scratch();
+        let mut fa = vec![fft::Complex::ZERO; bins];
+        let mut fb = vec![fft::Complex::ZERO; bins];
+        let mut acc = vec![fft::Complex::ZERO; bins];
+        let t_planned = bench_for(0.3, 1, || {
+            for v in acc.iter_mut() {
+                *v = fft::Complex::ZERO;
+            }
+            for k in 0..rows {
+                plan.forward_into(&a_rows[k], &mut fa, &mut scratch);
+                plan.forward_into(&b_rows[k], &mut fb, &mut scratch);
+                for (s, (x, y)) in acc.iter_mut().zip(fa.iter().zip(&fb)) {
+                    *s = *s + x.conj() * *y;
+                }
+            }
+            acc[0]
+        })
+        .median;
+
+        planned_tbl.row(vec![
+            format!("{d}"),
+            format!("{:.1}", t_unplanned * 1e6 / rows as f64),
+            format!("{:.1}", t_planned * 1e6 / rows as f64),
+            format!("{:.2}x", t_unplanned / t_planned),
+        ]);
+    }
+    println!("\nplanned vs unplanned Eq.-12 accumulation ({rows} rows):");
+    planned_tbl.print();
+
+    if let Err(e) = table::write_json(
+        "BENCH_fft_host.json",
+        &[
+            ("fft_vs_naive_dft", &table),
+            ("circular_correlate", &corr),
+            ("planned_vs_unplanned", &planned_tbl),
+        ],
+    ) {
+        eprintln!("could not write BENCH_fft_host.json: {e}");
+    } else {
+        println!("\nwrote BENCH_fft_host.json");
+    }
 }

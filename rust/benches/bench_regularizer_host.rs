@@ -1,10 +1,13 @@
 //! Appendix C (Table 7) bench: asymptotic complexity of the host
 //! regularizer implementations — R_off O(nd²) vs R_sum-via-FFT
 //! O(nd log d) vs grouped O((nd²/b) log b) — measured on the pure-rust
-//! substrate (no XLA), plus empirical scaling exponents.
+//! substrate (no XLA) through the DecorrelationKernel contender set,
+//! plus empirical scaling exponents. Emits `BENCH_regularizer_host.json`
+//! for the perf trajectory.
 
-use decorr::bench_harness::{bench_for, Table};
-use decorr::regularizer::{self, Q};
+use decorr::bench_harness::{bench_for, table, Contender, Table};
+use decorr::regularizer::kernel::default_threads;
+use decorr::regularizer::Q;
 use decorr::util::rng::Rng;
 use decorr::util::tensor::Tensor;
 
@@ -19,44 +22,65 @@ fn rand_views(seed: u64, n: usize, d: usize) -> (Tensor, Tensor) {
 fn main() {
     let n = 64;
     let dims = [128usize, 256, 512, 1024, 2048];
-    let mut table = Table::new(&[
-        "d",
-        "R_off (ms)",
-        "R_sum fft (ms)",
-        "R_sum^128 (ms)",
-        "off/fft",
-    ]);
+    let mut rows = Table::new(&["d", "contender", "median (ms)"]);
     let mut series_off = Vec::new();
     let mut series_fft = Vec::new();
+    let mut summary = Table::new(&["d", "R_off naive (ms)", "R_sum fft (ms)", "off/fft"]);
     for &d in &dims {
         let (a, b) = rand_views(d as u64, n, d);
-        let t_off = bench_for(0.4, 1, || {
-            let c = regularizer::cross_correlation(&a, &b, n as f32);
-            regularizer::r_off(&c)
-        })
-        .median;
-        let t_fft = bench_for(0.4, 1, || regularizer::r_sum_fft(&a, &b, n as f32, Q::L2)).median;
-        let t_grp = bench_for(0.4, 1, || {
-            regularizer::r_sum_grouped_fft(&a, &b, 128, n as f32, Q::L2)
-        })
-        .median;
+        // Explicit, index-stable contender list: [0] = naive baseline,
+        // [1] = single-thread planned FFT (the exponent-fit pair), then
+        // the grouped and multi-threaded extras.
+        let mut contenders = vec![
+            Contender::naive_r_off(d, 1),
+            Contender::fft_r_sum(d, Q::L2, 1),
+            Contender::grouped_r_sum(d, 128.min(d), Q::L2, 1),
+        ];
+        if default_threads() > 1 {
+            contenders.push(Contender::fft_r_sum(d, Q::L2, default_threads()));
+        }
+        let mut t_off = f64::NAN;
+        let mut t_fft = f64::NAN;
+        for (i, c) in contenders.iter_mut().enumerate() {
+            let t = bench_for(0.4, 1, || c.run(&a, &b, n as f32)).median;
+            if i == 0 {
+                t_off = t;
+            } else if i == 1 {
+                t_fft = t;
+            }
+            rows.row(vec![
+                format!("{d}"),
+                c.label.clone(),
+                format!("{:.3}", t * 1e3),
+            ]);
+        }
         series_off.push(((d as f64).ln(), t_off.ln()));
         series_fft.push(((d as f64).ln(), t_fft.ln()));
-        table.row(vec![
+        summary.row(vec![
             format!("{d}"),
             format!("{:.2}", t_off * 1e3),
             format!("{:.2}", t_fft * 1e3),
-            format!("{:.2}", t_grp * 1e3),
             format!("{:.1}x", t_off / t_fft),
         ]);
     }
-    println!("\n[bench_regularizer_host] Appendix C complexity (host rust, n={n}):");
-    table.print();
+    println!("\n[bench_regularizer_host] Appendix C complexity (host kernels, n={n}):");
+    rows.print();
+    println!();
+    summary.print();
     println!(
         "empirical exponents: R_off ~ d^{:.2} (theory 2), R_sum fft ~ d^{:.2} (theory ~1)",
         fit_slope(&series_off),
         fit_slope(&series_fft)
     );
+
+    if let Err(e) = table::write_json(
+        "BENCH_regularizer_host.json",
+        &[("contenders", &rows), ("summary", &summary)],
+    ) {
+        eprintln!("could not write BENCH_regularizer_host.json: {e}");
+    } else {
+        println!("wrote BENCH_regularizer_host.json");
+    }
 }
 
 fn fit_slope(pts: &[(f64, f64)]) -> f64 {

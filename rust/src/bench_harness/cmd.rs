@@ -8,18 +8,22 @@
 use anyhow::{Context, Result};
 
 use crate::config::{TrainConfig, Variant};
-use crate::coordinator::trainer::literal_f32;
 use crate::coordinator::{linear_eval, Checkpoint, InputAdapter, Trainer};
 use crate::data::synth::{ShapeWorld, ShapeWorldConfig, Vocab};
-use crate::regularizer;
-use crate::runtime::{Engine, ParamStore};
+use crate::runtime::Engine;
 use crate::util::cli::Args;
+use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 use crate::util::timer::human_duration;
 
+use super::contenders::Contender;
 use super::stats::bench_for;
 use super::table::Table;
 use super::workload::{loss_node_bytes, LossWorkload};
+
+// Re-exported from its new home in the coordinator so existing callers
+// (`decorr::bench_harness::cmd::project_views`) keep working.
+pub use crate::coordinator::project_views;
 
 /// Outcome of one pretrain + linear-eval cycle.
 pub struct RunOutcome {
@@ -161,9 +165,10 @@ pub fn eval(args: &mut Args) -> Result<()> {
         probe_epochs,
     )?;
     println!(
-        "top1 {:.2}%  (train split {:.2}%)",
+        "top1 {:.2}%  (train split {:.2}%, feature residual {:.5})",
         result.top1 * 100.0,
-        result.train_top1 * 100.0
+        result.train_top1 * 100.0,
+        result.feature_residual
     );
     Ok(())
 }
@@ -300,57 +305,10 @@ pub fn table4(args: &mut Args) -> Result<()> {
 
 // --------------------------------------------------------------- table 6
 
-/// Collect projected embeddings of augmented twin views through the
-/// `project_<preset>` artifact.
-pub fn project_views(
-    engine: &Engine,
-    preset: &str,
-    snapshot: &Checkpoint,
-    adapter: InputAdapter,
-    seed: u64,
-    batches: usize,
-) -> Result<(Tensor, Tensor)> {
-    let project = engine.load_artifact(&format!("project_{preset}"))?;
-    let manifest = project.manifest().clone();
-    let store = ParamStore::from_checkpoint(snapshot, &manifest.inputs_with_prefix("params."))?;
-    let x_idx = manifest.input_index("x").context("no x")?;
-    let n = manifest.inputs[x_idx].shape[0];
-    let d = manifest.outputs[0].shape[1];
-
-    let dataset = ShapeWorld::new(ShapeWorldConfig {
-        seed,
-        ..Default::default()
-    });
-    let aug = crate::data::Augmenter::new(crate::data::AugmentConfig::default());
-    let mut za = Tensor::zeros(&[n * batches, d]);
-    let mut zb = Tensor::zeros(&[n * batches, d]);
-    for bi in 0..batches {
-        let batch =
-            crate::data::loader::make_batch(&dataset, &aug, n, 100_000, seed, bi as u64);
-        for (view, out_t) in [(&batch.view_a, &mut za), (&batch.view_b, &mut zb)] {
-            let x = adapter.apply(&view.images);
-            let x_lit = literal_f32(&x)?;
-            let mut inputs: Vec<&xla::Literal> = Vec::new();
-            for spec in &manifest.inputs {
-                if spec.name == "x" {
-                    inputs.push(&x_lit);
-                } else {
-                    inputs.push(store.get(&spec.name)?);
-                }
-            }
-            let out = project.execute_literals_ref(&inputs)?;
-            let data = out[0]
-                .to_vec::<f32>()
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
-            out_t.data_mut()[bi * n * d..(bi + 1) * n * d].copy_from_slice(&data);
-        }
-    }
-    Ok((za, zb))
-}
-
 /// `decorr table6` — paper Tab. 6 analogue: normalized R_off residuals
 /// (Eqs. 16–17) of embeddings from models trained with/without feature
-/// permutation. The heart of the §4.3 story.
+/// permutation, computed through `Trainer::diagnose_embeddings` (the
+/// `DecorrelationKernel` trait). The heart of the §4.3 story.
 pub fn table6(args: &mut Args) -> Result<()> {
     let cfg0 = base_cfg(args)?;
     let batches = args.get_or("batches", 4usize)?;
@@ -375,31 +333,18 @@ pub fn table6(args: &mut Args) -> Result<()> {
         cfg.permute = permute;
         cfg.out_dir = String::new();
         println!("== {} perm={} ==", v.as_str(), permute);
-        let preset = cfg.preset.clone();
-        let seed = cfg.seed;
         let mut trainer = Trainer::new(cfg)?;
         trainer.run()?;
         let snap = trainer.snapshot()?;
-        let (za, zb) = project_views(
-            trainer.engine(),
-            &preset,
-            &snap,
-            trainer.input_adapter(),
-            seed,
-            batches,
-        )?;
-        let residual = if family == "vic" {
-            regularizer::normalized_vic_residual(&za, &zb)
-        } else {
-            regularizer::normalized_bt_residual(&za, &zb)
-        };
+        // The residual family (Eq. 16 vs 17) follows the trained variant.
+        let diag = trainer.diagnose_embeddings(&snap, batches)?;
         t.row(vec![
             label.to_string(),
             grouping.to_string(),
             if permute { "yes" } else { "no" }.to_string(),
-            format!("{residual:.5}"),
+            format!("{:.5}", diag.residual),
         ]);
-        Ok(residual)
+        Ok(diag.residual)
     };
 
     let base_res = run(baseline, true, &display_name(baseline), "-", &mut table)?;
@@ -418,6 +363,47 @@ pub fn table6(args: &mut Args) -> Result<()> {
          (paper shape: w/o permutation the residual stays far above baseline;\n\
           permutation pulls it down toward the baseline)"
     );
+    Ok(())
+}
+
+// --------------------------------------------------------------- table 7
+
+/// `decorr table7` — paper App. C / Tab. 7 analogue: host-side asymptotic
+/// complexity of the regularizer forms, measured over the
+/// [`Contender`] set (every form a `DecorrelationKernel` instance:
+/// naive matrix, planned FFT single/multi-threaded, grouped). Needs no
+/// artifacts. `--json <path>` additionally writes the machine-readable
+/// table.
+pub fn table7(args: &mut Args) -> Result<()> {
+    let n = args.get_or("n", 64usize)?;
+    let dims: Vec<usize> = args.list_or("dims", &[128usize, 256, 512, 1024, 2048])?;
+    let budget = args.get_or("budget", 0.3f64)?;
+    let json = args.flag("json");
+    args.finish()?;
+
+    let mut table = Table::new(&["d", "contender", "median (ms)", "value"]);
+    for &d in &dims {
+        let mut rng = Rng::new(0x7AB7 ^ d as u64);
+        let a = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+        let b = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+        for mut c in Contender::standard_set(d) {
+            let stats = bench_for(budget, 1, || c.run(&a, &b, n as f32));
+            let value = c.run(&a, &b, n as f32);
+            table.row(vec![
+                format!("{d}"),
+                c.label.clone(),
+                format!("{:.3}", stats.median_ms()),
+                format!("{value:.4}"),
+            ]);
+        }
+    }
+    println!("\nTable 7 analogue (host kernel complexity, n={n}):");
+    table.print();
+    println!("(paper shape: the naive matrix form grows ~d², the planned FFT form ~d log d)");
+    if let Some(path) = json {
+        crate::bench_harness::table::write_json(&path, &[("table7", &table)])?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

@@ -1,0 +1,147 @@
+//! Host regularizer contenders: named [`DecorrelationKernel`] instances
+//! that the complexity benches (`bench_regularizer_host`, Appendix C /
+//! Table 7) and the `decorr table7` subcommand time against each other.
+//!
+//! A contender bundles a kernel with the evaluation it is benchmarked
+//! for (`R_off` for the materialized-matrix baseline, `R_sum`-style for
+//! the spectral forms), so a bench loop is just
+//! `contender.run(&a, &b, norm)` — reset, accumulate the batch, evaluate.
+
+use crate::regularizer::kernel::{
+    default_threads, DecorrelationKernel, FftSumvecKernel, GroupedFftKernel, NaiveMatrixKernel,
+};
+use crate::regularizer::Q;
+use crate::util::tensor::Tensor;
+
+/// How a contender reduces its accumulated state to the benched scalar.
+enum Eval {
+    /// Exact off-diagonal square sum (Eq. 2).
+    ROff,
+    /// Summary-vector regularizer under exponent `q` (Eq. 6 / Eq. 13).
+    RSum(Q),
+}
+
+/// A labeled, runnable kernel instance for the host complexity benches.
+pub struct Contender {
+    /// Row label used in tables and JSON output.
+    pub label: String,
+    kernel: Box<dyn DecorrelationKernel>,
+    eval: Eval,
+}
+
+impl Contender {
+    /// The `O(nd²)` materialized-matrix baseline evaluating `R_off`.
+    pub fn naive_r_off(d: usize, threads: usize) -> Contender {
+        Contender {
+            label: if threads > 1 {
+                format!("R_off naive ({threads}t)")
+            } else {
+                "R_off naive".to_string()
+            },
+            kernel: Box::new(NaiveMatrixKernel::with_threads(d, threads)),
+            eval: Eval::ROff,
+        }
+    }
+
+    /// The planned `O(nd log d)` spectral kernel evaluating `R_sum`.
+    pub fn fft_r_sum(d: usize, q: Q, threads: usize) -> Contender {
+        Contender {
+            label: if threads > 1 {
+                format!("R_sum fft ({threads}t)")
+            } else {
+                "R_sum fft".to_string()
+            },
+            kernel: Box::new(FftSumvecKernel::with_threads(d, threads)),
+            eval: Eval::RSum(q),
+        }
+    }
+
+    /// The grouped `R_sum^(b)` kernel (Eq. 13).
+    pub fn grouped_r_sum(d: usize, block: usize, q: Q, threads: usize) -> Contender {
+        Contender {
+            label: if threads > 1 {
+                format!("R_sum^{block} ({threads}t)")
+            } else {
+                format!("R_sum^{block}")
+            },
+            kernel: Box::new(GroupedFftKernel::with_threads(d, block, threads)),
+            eval: Eval::RSum(q),
+        }
+    }
+
+    /// Kernel identifier (stable across labels).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    /// One full evaluation: reset state, accumulate the batch, reduce.
+    /// Plans persist across calls, so repeated runs measure the planned
+    /// steady state the paper's complexity claims are about.
+    pub fn run(&mut self, a: &Tensor, b: &Tensor, norm: f32) -> f64 {
+        self.kernel.reset();
+        self.kernel.accumulate(a, b);
+        match self.eval {
+            Eval::ROff => self
+                .kernel
+                .r_off(norm)
+                .expect("R_off contender must materialize the matrix"),
+            Eval::RSum(q) => self.kernel.r_sum(norm, q),
+        }
+    }
+
+    /// The standard Appendix-C contender set at dimension `d`. All
+    /// single-threaded except the explicitly labeled multi-threaded FFT
+    /// entry, so the complexity comparison stays apples-to-apples and
+    /// threading shows up as its own row.
+    pub fn standard_set(d: usize) -> Vec<Contender> {
+        let mut set = vec![
+            Contender::naive_r_off(d, 1),
+            Contender::fft_r_sum(d, Q::L2, 1),
+            Contender::grouped_r_sum(d, 128.min(d), Q::L2, 1),
+        ];
+        let mt = default_threads();
+        if mt > 1 {
+            set.push(Contender::fft_r_sum(d, Q::L2, mt));
+        }
+        set
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regularizer;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn contenders_agree_where_they_must() {
+        let (n, d) = (6usize, 16usize);
+        let mut rng = Rng::new(31);
+        let a = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+        let b = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+        let norm = n as f32;
+        // b=1 grouped with q=2 equals R_off (paper §4.4); b=d equals R_sum.
+        let off = Contender::naive_r_off(d, 1).run(&a, &b, norm);
+        let g1 = Contender::grouped_r_sum(d, 1, Q::L2, 1).run(&a, &b, norm);
+        assert!((off - g1).abs() < 1e-4 * off.abs().max(1.0), "{off} vs {g1}");
+        let flat = Contender::fft_r_sum(d, Q::L2, 1).run(&a, &b, norm);
+        let gd = Contender::grouped_r_sum(d, d, Q::L2, 1).run(&a, &b, norm);
+        assert!((flat - gd).abs() < 1e-4 * flat.abs().max(1.0));
+        let free = regularizer::r_sum_fft(&a, &b, norm, Q::L2);
+        assert!((flat - free).abs() < 1e-6 * free.abs().max(1.0));
+    }
+
+    #[test]
+    fn standard_set_is_runnable_and_reusable() {
+        let (n, d) = (4usize, 12usize);
+        let mut rng = Rng::new(32);
+        let a = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+        let b = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+        for mut c in Contender::standard_set(d) {
+            let v1 = c.run(&a, &b, n as f32);
+            let v2 = c.run(&a, &b, n as f32); // reset must make runs idempotent
+            assert!(v1.is_finite());
+            assert!((v1 - v2).abs() < 1e-9 * (1.0 + v1.abs()), "{}", c.label);
+        }
+    }
+}

@@ -4,10 +4,12 @@
 //! counterpart).
 
 pub mod cmd;
+pub mod contenders;
 pub mod stats;
 pub mod table;
 pub mod workload;
 
+pub use contenders::Contender;
 pub use stats::{bench, bench_for, BenchStats};
 pub use table::Table;
 pub use workload::{loss_node_bytes, LossWorkload};

@@ -1,5 +1,11 @@
 //! Aligned plain-text table printer for benchmark / experiment output
-//! (the rows the paper's tables and figure series report).
+//! (the rows the paper's tables and figure series report), plus the
+//! machine-readable JSON form the `BENCH_*.json` perf-trajectory files
+//! use.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
 
 /// Column-aligned table builder.
 #[derive(Clone, Debug, Default)]
@@ -72,6 +78,48 @@ impl Table {
     pub fn print(&self) {
         print!("{}", self.render());
     }
+
+    /// Machine-readable form: `{"columns": [...], "rows": [{col: val}]}`
+    /// with numeric-looking cells emitted as JSON numbers so downstream
+    /// tooling can plot perf trajectories without re-parsing strings.
+    pub fn to_json(&self) -> Json {
+        let columns = Json::Arr(self.header.iter().map(|h| Json::Str(h.clone())).collect());
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                for (h, c) in self.header.iter().zip(r) {
+                    m.insert(h.clone(), cell_json(c));
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("columns".to_string(), columns);
+        top.insert("rows".to_string(), Json::Arr(rows));
+        Json::Obj(top)
+    }
+}
+
+/// Parse a cell into a JSON number when it looks like one, keeping the
+/// original string otherwise.
+fn cell_json(cell: &str) -> Json {
+    match cell.parse::<f64>() {
+        Ok(v) if v.is_finite() => Json::Num(v),
+        _ => Json::Str(cell.to_string()),
+    }
+}
+
+/// Write one or more named tables as a single JSON document — the format
+/// of the benches' `BENCH_*.json` files, so future PRs can track a perf
+/// trajectory across revisions.
+pub fn write_json(path: &str, tables: &[(&str, &Table)]) -> std::io::Result<()> {
+    let mut top = BTreeMap::new();
+    for (name, t) in tables {
+        top.insert((*name).to_string(), t.to_json());
+    }
+    std::fs::write(path, Json::Obj(top).to_string_compact())
 }
 
 #[cfg(test)]
@@ -95,5 +143,16 @@ mod tests {
     #[should_panic]
     fn arity_mismatch_panics() {
         Table::new(&["a"]).row(vec!["x".into(), "y".into()]);
+    }
+
+    #[test]
+    fn json_form_detects_numbers() {
+        let mut t = Table::new(&["model", "ms"]);
+        t.row(vec!["bt_sum".into(), "12.5".into()]);
+        let j = t.to_json();
+        let rows = j.get("rows").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("ms").and_then(|v| v.as_f64()), Some(12.5));
+        assert_eq!(rows[0].get("model").and_then(|v| v.as_str()), Some("bt_sum"));
     }
 }

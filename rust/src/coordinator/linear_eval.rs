@@ -9,13 +9,64 @@
 
 use anyhow::{Context, Result};
 
-use crate::data::synth::ShapeWorld;
+use crate::data::synth::{ShapeWorld, ShapeWorldConfig};
+use crate::regularizer::kernel::{default_threads, DecorrelationKernel, NaiveMatrixKernel};
 use crate::runtime::{Artifact, Engine, ParamStore};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
 use super::checkpoint::Checkpoint;
 use super::trainer::{literal_f32, InputAdapter};
+
+/// Collect projected embeddings of augmented twin views through the
+/// `project_<preset>` artifact. Shared by the Table-6 diagnostics
+/// ([`super::Trainer::diagnose_embeddings`]), the `decorr table6`
+/// subcommand, and the permutation-ablation example.
+pub fn project_views(
+    engine: &Engine,
+    preset: &str,
+    snapshot: &Checkpoint,
+    adapter: InputAdapter,
+    seed: u64,
+    batches: usize,
+) -> Result<(Tensor, Tensor)> {
+    let project = engine.load_artifact(&format!("project_{preset}"))?;
+    let manifest = project.manifest().clone();
+    let store = ParamStore::from_checkpoint(snapshot, &manifest.inputs_with_prefix("params."))?;
+    let x_idx = manifest.input_index("x").context("no x")?;
+    let n = manifest.inputs[x_idx].shape[0];
+    let d = manifest.outputs[0].shape[1];
+
+    let dataset = ShapeWorld::new(ShapeWorldConfig {
+        seed,
+        ..Default::default()
+    });
+    let aug = crate::data::Augmenter::new(crate::data::AugmentConfig::default());
+    let mut za = Tensor::zeros(&[n * batches, d]);
+    let mut zb = Tensor::zeros(&[n * batches, d]);
+    for bi in 0..batches {
+        let batch =
+            crate::data::loader::make_batch(&dataset, &aug, n, 100_000, seed, bi as u64);
+        for (view, out_t) in [(&batch.view_a, &mut za), (&batch.view_b, &mut zb)] {
+            let x = adapter.apply(&view.images);
+            let x_lit = literal_f32(&x)?;
+            let mut inputs: Vec<&xla::Literal> = Vec::new();
+            for spec in &manifest.inputs {
+                if spec.name == "x" {
+                    inputs.push(&x_lit);
+                } else {
+                    inputs.push(store.get(&spec.name)?);
+                }
+            }
+            let out = project.execute_literals_ref(&inputs)?;
+            let data = out[0]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            out_t.data_mut()[bi * n * d..(bi + 1) * n * d].copy_from_slice(&data);
+        }
+    }
+    Ok((za, zb))
+}
 
 /// Extract backbone features for `count` dataset samples (unaugmented),
 /// batched at the artifact's fixed batch size.
@@ -209,6 +260,11 @@ pub struct EvalResult {
     pub top1: f32,
     /// Training-split accuracy (sanity/overfit signal).
     pub train_top1: f32,
+    /// Normalized decorrelation residual (Eq. 16 form) of the extracted
+    /// training-split representations against themselves — how far the
+    /// frozen backbone's features are from feature-decorrelated, computed
+    /// through the `DecorrelationKernel` trait.
+    pub feature_residual: f64,
 }
 
 /// Run the full protocol. `train_count`/`test_count` samples are drawn from
@@ -243,9 +299,22 @@ pub fn linear_eval(
         0.5,
         7,
     );
+    // Self-correlation residual of the standardized features (Eq. 16 with
+    // A = B): standardize one copy and accumulate through the threaded
+    // matrix kernel — the trait path without the paired-view overhead.
+    let feature_residual = {
+        let mut s = train_x.clone();
+        s.standardize_columns(1e-6);
+        let (rows, cols) = (s.shape()[0], s.shape()[1]);
+        let mut kernel = NaiveMatrixKernel::with_threads(cols, default_threads());
+        kernel.accumulate(&s, &s);
+        let df = cols as f64;
+        kernel.r_off(rows as f32).expect("matrix kernel answers r_off") / (df * (df - 1.0))
+    };
     Ok(EvalResult {
         top1: probe.accuracy(&test_x, &test_y),
         train_top1: probe.accuracy(&train_x, &train_y),
+        feature_residual,
     })
 }
 

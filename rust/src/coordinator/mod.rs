@@ -15,7 +15,7 @@ pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use ddp::DdpTrainer;
-pub use linear_eval::{extract_features, linear_eval, EvalResult, LinearProbe};
+pub use linear_eval::{extract_features, linear_eval, project_views, EvalResult, LinearProbe};
 pub use metrics::{MetricsLogger, StepMetrics};
 pub use schedule::LrSchedule;
-pub use trainer::{InputAdapter, TrainReport, Trainer};
+pub use trainer::{EmbeddingDiagnostics, InputAdapter, TrainReport, Trainer};

@@ -41,6 +41,21 @@ enum Sink {
     Reg,
 }
 
+/// Table-6-style decorrelation diagnostics of projected twin-view
+/// embeddings, computed on the host through the `DecorrelationKernel`
+/// trait (paper Eqs. 16–17 for the residual, Eq. 12 for `R_sum`).
+#[derive(Clone, Debug)]
+pub struct EmbeddingDiagnostics {
+    /// Normalized `R_off` residual (Eq. 16 for BT-family variants,
+    /// Eq. 17 for VIC-family) — the true-decorrelation measure.
+    pub residual: f64,
+    /// `R_sum` (q = 2) of the standardized views via the planned FFT
+    /// kernel — the relaxed quantity the proposed loss actually trains.
+    pub r_sum_l2: f64,
+    /// Number of embedding pairs diagnosed.
+    pub samples: usize,
+}
+
 /// Summary of a training run.
 #[derive(Clone, Debug)]
 pub struct TrainReport {
@@ -259,6 +274,48 @@ impl Trainer {
     pub fn snapshot(&self) -> Result<Checkpoint> {
         let specs = self.artifact.manifest().inputs_with_prefix("params.");
         self.params.to_checkpoint(&specs)
+    }
+
+    /// Table-6-style decorrelation diagnostics: project `batches` batches
+    /// of augmented twin views through the `project_<preset>` artifact and
+    /// measure both the exact normalized residual (Eq. 16/17, matched to
+    /// this trainer's loss family) and the relaxed `R_sum` (Eq. 12), each
+    /// through the host `DecorrelationKernel` trait.
+    pub fn diagnose_embeddings(
+        &self,
+        snapshot: &Checkpoint,
+        batches: usize,
+    ) -> Result<EmbeddingDiagnostics> {
+        use crate::regularizer::kernel::{
+            default_threads, normalized_residual, DecorrelationKernel, FftSumvecKernel,
+            ResidualFamily,
+        };
+        let (za, zb) = super::linear_eval::project_views(
+            &self.engine,
+            &self.cfg.preset,
+            snapshot,
+            self.input_adapt,
+            self.cfg.seed,
+            batches,
+        )?;
+        let family = if self.cfg.variant.as_str().starts_with("vic") {
+            ResidualFamily::VicReg
+        } else {
+            ResidualFamily::BarlowTwins
+        };
+        let residual = normalized_residual(family, &za, &zb);
+        let mut sa = za.clone();
+        let mut sb = zb.clone();
+        sa.standardize_columns(1e-6);
+        sb.standardize_columns(1e-6);
+        let n = za.shape()[0];
+        let mut kernel = FftSumvecKernel::with_threads(za.shape()[1], default_threads());
+        kernel.accumulate(&sa, &sb);
+        Ok(EmbeddingDiagnostics {
+            residual,
+            r_sum_l2: kernel.r_sum(n as f32, crate::regularizer::Q::L2),
+            samples: n,
+        })
     }
 
     /// Execute one optimizer step on a prepared batch. Returns the step

@@ -11,13 +11,26 @@
 //! We implement an iterative radix-2 Cooley–Tukey transform with a
 //! Bluestein fallback for non-power-of-two lengths, plus the real-input
 //! helpers `rfft`/`irfft` matching `numpy.fft.rfft` conventions.
+//!
+//! Hot paths should use the [`plan`] module directly: [`FftPlan`] /
+//! [`RfftPlan`] precompute twiddle tables, bit-reversal schedules, and
+//! Bluestein chirp spectra once, and execute with caller-owned scratch so
+//! the per-sample loop does zero allocation and no trig. The free
+//! functions below keep the original one-call-per-transform API but route
+//! through a per-thread plan cache, so repeated same-length calls (the
+//! old per-call Bluestein allocation hotspot) are amortized too.
 
 mod complex;
+pub mod plan;
 
 pub use complex::Complex;
+pub use plan::{FftPlan, RfftPlan, RfftScratch};
 
 /// Forward DFT, in place, radix-2 iterative Cooley–Tukey.
 /// Panics unless `x.len()` is a power of two (use [`fft`] for general n).
+///
+/// This is the *unplanned* reference path: twiddles come from a per-stage
+/// recurrence instead of a table. [`FftPlan`] is the fast path.
 pub fn fft_pow2(x: &mut [Complex]) {
     let n = x.len();
     assert!(n.is_power_of_two(), "fft_pow2 requires power-of-two length");
@@ -69,84 +82,49 @@ pub fn ifft_pow2(x: &mut [Complex]) {
 
 /// Forward DFT for arbitrary length: radix-2 when possible, otherwise
 /// Bluestein's algorithm (chirp-z through a power-of-two convolution).
+/// Uses this thread's cached [`FftPlan`], so repeated same-length calls
+/// recompute no tables and (for Bluestein lengths) reuse the convolution
+/// scratch.
 pub fn fft(x: &[Complex]) -> Vec<Complex> {
-    let n = x.len();
-    if n == 0 {
+    if x.is_empty() {
         return Vec::new();
     }
-    if n.is_power_of_two() {
-        let mut buf = x.to_vec();
-        fft_pow2(&mut buf);
-        return buf;
-    }
-    bluestein(x, false)
+    let mut buf = x.to_vec();
+    plan::with_plan(x.len(), |p, s| p.forward(&mut buf, s));
+    buf
 }
 
-/// Inverse DFT for arbitrary length, normalized by 1/n.
+/// Inverse DFT for arbitrary length, normalized by 1/n. Plan-cached like
+/// [`fft`].
 pub fn ifft(x: &[Complex]) -> Vec<Complex> {
-    let n = x.len();
-    if n == 0 {
+    if x.is_empty() {
         return Vec::new();
     }
-    if n.is_power_of_two() {
-        let mut buf = x.to_vec();
-        ifft_pow2(&mut buf);
-        return buf;
-    }
-    bluestein(x, true)
-}
-
-/// Bluestein chirp-z transform: expresses an arbitrary-length DFT as a
-/// power-of-two circular convolution.
-fn bluestein(x: &[Complex], inverse: bool) -> Vec<Complex> {
-    let n = x.len();
-    let sign = if inverse { 1.0 } else { -1.0 };
-    // chirp[k] = exp(sign * i * pi * k^2 / n)
-    let mut chirp = Vec::with_capacity(n);
-    for k in 0..n {
-        // k^2 mod 2n avoids precision loss for large k.
-        let k2 = (k as u64 * k as u64) % (2 * n as u64);
-        let ang = sign * std::f64::consts::PI * k2 as f64 / n as f64;
-        chirp.push(Complex::new(ang.cos(), ang.sin()));
-    }
-    let m = (2 * n - 1).next_power_of_two();
-    let mut a = vec![Complex::ZERO; m];
-    let mut b = vec![Complex::ZERO; m];
-    for k in 0..n {
-        a[k] = x[k] * chirp[k];
-        b[k] = chirp[k].conj();
-    }
-    for k in 1..n {
-        b[m - k] = chirp[k].conj();
-    }
-    fft_pow2(&mut a);
-    fft_pow2(&mut b);
-    for k in 0..m {
-        a[k] = a[k] * b[k];
-    }
-    ifft_pow2(&mut a);
-    let norm = if inverse { 1.0 / n as f64 } else { 1.0 };
-    (0..n).map(|k| a[k] * chirp[k] * norm).collect()
+    let mut buf = x.to_vec();
+    plan::with_plan(x.len(), |p, s| p.inverse(&mut buf, s));
+    buf
 }
 
 /// Real-input forward transform; returns the `n/2 + 1` non-redundant bins
-/// (numpy `rfft` convention).
+/// (numpy `rfft` convention). Plan-cached per thread.
 pub fn rfft(x: &[f32]) -> Vec<Complex> {
-    let buf: Vec<Complex> = x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect();
-    let full = fft(&buf);
-    full[..x.len() / 2 + 1].to_vec()
+    plan::with_rplan(x.len(), |p, s| {
+        let mut out = vec![Complex::ZERO; p.bins()];
+        p.forward_into(x, &mut out, s);
+        out
+    })
 }
 
 /// Inverse of [`rfft`]: reconstructs a length-`n` real signal from its
-/// `n/2 + 1` spectrum bins (numpy `irfft` convention).
+/// `n/2 + 1` spectrum bins (numpy `irfft` convention). Plan-cached per
+/// thread.
 pub fn irfft(spec: &[Complex], n: usize) -> Vec<f32> {
     assert_eq!(spec.len(), n / 2 + 1, "irfft spectrum length mismatch");
-    let mut full = vec![Complex::ZERO; n];
-    full[..spec.len()].copy_from_slice(spec);
-    for k in spec.len()..n {
-        full[k] = spec[n - k].conj();
-    }
-    ifft(&full).iter().map(|c| c.re as f32).collect()
+    plan::with_rplan(n, |p, s| {
+        let mut out = vec![0.0f32; n];
+        p.inverse_into(spec, &mut out, s);
+        out
+    })
 }
 
 /// Naive `O(n²)` DFT — the correctness oracle for the fast paths.
@@ -164,24 +142,50 @@ pub fn dft_naive(x: &[Complex]) -> Vec<Complex> {
     out
 }
 
-/// Circular convolution `x * y` via FFT (`O(n log n)`).
+/// Circular convolution `x * y` via FFT (`O(n log n)`), plan-cached.
 pub fn circular_convolve(x: &[f32], y: &[f32]) -> Vec<f32> {
     assert_eq!(x.len(), y.len());
-    let fx = fft(&x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect::<Vec<_>>());
-    let fy = fft(&y.iter().map(|&v| Complex::new(v as f64, 0.0)).collect::<Vec<_>>());
-    let prod: Vec<Complex> = fx.iter().zip(&fy).map(|(a, b)| *a * *b).collect();
-    ifft(&prod).iter().map(|c| c.re as f32).collect()
+    let n = x.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    plan::with_rplan(n, |p, s| {
+        let bins = p.bins();
+        let mut fx = vec![Complex::ZERO; bins];
+        let mut fy = vec![Complex::ZERO; bins];
+        p.forward_into(x, &mut fx, s);
+        p.forward_into(y, &mut fy, s);
+        for (a, b) in fx.iter_mut().zip(&fy) {
+            *a = *a * *b;
+        }
+        let mut out = vec![0.0f32; n];
+        p.inverse_into(&fx, &mut out, s);
+        out
+    })
 }
 
 /// Circular correlation `inv(x) * y` via FFT — the paper's Eq. 11:
 /// `F⁻¹( conj(F(x)) ∘ F(y) )`. Component `i` equals
-/// `Σ_j x[j] · y[(i+j) mod d]` (paper Eq. 8 / Appendix A).
+/// `Σ_j x[j] · y[(i+j) mod d]` (paper Eq. 8 / Appendix A). Plan-cached.
 pub fn circular_correlate(x: &[f32], y: &[f32]) -> Vec<f32> {
     assert_eq!(x.len(), y.len());
-    let fx = fft(&x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect::<Vec<_>>());
-    let fy = fft(&y.iter().map(|&v| Complex::new(v as f64, 0.0)).collect::<Vec<_>>());
-    let prod: Vec<Complex> = fx.iter().zip(&fy).map(|(a, b)| a.conj() * *b).collect();
-    ifft(&prod).iter().map(|c| c.re as f32).collect()
+    let n = x.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    plan::with_rplan(n, |p, s| {
+        let bins = p.bins();
+        let mut fx = vec![Complex::ZERO; bins];
+        let mut fy = vec![Complex::ZERO; bins];
+        p.forward_into(x, &mut fx, s);
+        p.forward_into(y, &mut fy, s);
+        for (a, b) in fx.iter_mut().zip(&fy) {
+            *a = a.conj() * *b;
+        }
+        let mut out = vec![0.0f32; n];
+        p.inverse_into(&fx, &mut out, s);
+        out
+    })
 }
 
 /// Involution (paper §4.2): reverse components 1..d, keep component 0.

@@ -1,0 +1,460 @@
+//! Planned FFT execution.
+//!
+//! The unplanned entry points in [`crate::fft`] recompute twiddle factors,
+//! bit-reversal permutations, and (for non-power-of-two lengths) the whole
+//! Bluestein chirp and kernel spectrum on every call, and allocate fresh
+//! buffers each time. That is fine for one-off transforms but ruins the
+//! per-sample hot loop of the paper's Eq. 12,
+//! `Σ_k conj(F(a_k)) ∘ F(b_k)`, where the same length-`d` transform runs
+//! `2n` times per batch.
+//!
+//! A [`FftPlan`] precomputes everything that depends only on the length:
+//!
+//! * per-stage twiddle tables for the radix-2 butterflies,
+//! * the bit-reversal swap schedule,
+//! * for non-power-of-two lengths, the Bluestein chirp `exp(-iπk²/n)` and
+//!   the forward spectrum of the chirp kernel (the convolution multiplier).
+//!
+//! [`RfftPlan`] layers the real-input (`rfft`/`irfft`) conventions on top
+//! and pairs with a caller-owned [`RfftScratch`] arena, so steady-state
+//! transforms do **zero allocation and no trigonometry**.
+//!
+//! ## Plan-reuse contract
+//!
+//! A plan is immutable after construction and `Sync`: many threads may
+//! execute transforms through a shared `&FftPlan`/`&RfftPlan`
+//! simultaneously, each with its **own** scratch (scratch is the only
+//! mutable state, and it is caller-owned). Build the plan once per batch
+//! (or cache it), build one scratch per worker thread, then run the hot
+//! loop allocation-free. The legacy free functions route through a
+//! per-thread plan cache ([`with_plan`] / [`with_rplan`]) so callers that
+//! don't manage plans still amortize table construction across calls.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use super::Complex;
+
+/// A precomputed plan for forward/inverse DFTs of one fixed length.
+///
+/// Power-of-two lengths run a table-driven iterative radix-2
+/// Cooley–Tukey transform in place; other lengths run Bluestein's
+/// chirp-z algorithm through a power-of-two convolution whose chirp and
+/// kernel spectrum are precomputed here.
+#[derive(Clone, Debug)]
+pub struct FftPlan {
+    /// Transform length.
+    n: usize,
+    /// Power-of-two working length (`n` itself when `n` is a power of
+    /// two, otherwise the Bluestein convolution length `≥ 2n-1`).
+    m: usize,
+    /// Bit-reversal swap pairs `(i, j)` with `i < j` for length `m`.
+    swaps: Vec<(u32, u32)>,
+    /// Per-stage butterfly twiddles for length `m`, concatenated; the
+    /// stage with half-length `h` starts at offset `h - 1`.
+    twiddles: Vec<Complex>,
+    /// Bluestein chirp `exp(-iπk²/n)`, length `n` (empty when pow2).
+    chirp: Vec<Complex>,
+    /// Forward spectrum of the Bluestein kernel, length `m` (empty when
+    /// pow2).
+    kernel_spec: Vec<Complex>,
+}
+
+impl FftPlan {
+    /// Build a plan for length-`n` transforms.
+    pub fn new(n: usize) -> FftPlan {
+        assert!(n >= 1, "FftPlan requires n >= 1");
+        let m = if n.is_power_of_two() {
+            n
+        } else {
+            (2 * n - 1).next_power_of_two()
+        };
+        let mut swaps = Vec::new();
+        if m > 1 {
+            let bits = m.trailing_zeros();
+            for i in 0..m {
+                let j = ((i as u32).reverse_bits() >> (32 - bits)) as usize;
+                if j > i {
+                    swaps.push((i as u32, j as u32));
+                }
+            }
+        }
+        let mut twiddles = Vec::with_capacity(m.saturating_sub(1));
+        let mut half = 1;
+        while half < m {
+            // Stage with butterfly span 2·half uses w^i = exp(-iπ·i/half).
+            let ang = -std::f64::consts::PI / half as f64;
+            for i in 0..half {
+                let a = ang * i as f64;
+                twiddles.push(Complex::new(a.cos(), a.sin()));
+            }
+            half <<= 1;
+        }
+        let mut plan = FftPlan {
+            n,
+            m,
+            swaps,
+            twiddles,
+            chirp: Vec::new(),
+            kernel_spec: Vec::new(),
+        };
+        if !n.is_power_of_two() {
+            let mut chirp = Vec::with_capacity(n);
+            for k in 0..n {
+                // k² mod 2n avoids precision loss for large k.
+                let k2 = (k as u64 * k as u64) % (2 * n as u64);
+                let ang = -std::f64::consts::PI * k2 as f64 / n as f64;
+                chirp.push(Complex::new(ang.cos(), ang.sin()));
+            }
+            let mut kernel = vec![Complex::ZERO; m];
+            for (k, c) in chirp.iter().enumerate() {
+                kernel[k] = c.conj();
+            }
+            for k in 1..n {
+                kernel[m - k] = chirp[k].conj();
+            }
+            plan.pow2_forward(&mut kernel);
+            plan.chirp = chirp;
+            plan.kernel_spec = kernel;
+        }
+        plan
+    }
+
+    /// Transform length.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Always false — plans exist only for `n ≥ 1`.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Required scratch length for [`forward`](Self::forward) /
+    /// [`inverse`](Self::inverse): 0 for power-of-two lengths, the
+    /// Bluestein convolution length otherwise.
+    pub fn scratch_len(&self) -> usize {
+        if self.n.is_power_of_two() {
+            0
+        } else {
+            self.m
+        }
+    }
+
+    /// Allocate a scratch buffer sized for this plan.
+    pub fn make_scratch(&self) -> Vec<Complex> {
+        vec![Complex::ZERO; self.scratch_len()]
+    }
+
+    /// Forward DFT of `x` in place. `scratch` must have length
+    /// [`scratch_len`](Self::scratch_len).
+    pub fn forward(&self, x: &mut [Complex], scratch: &mut [Complex]) {
+        assert_eq!(x.len(), self.n, "plan length mismatch");
+        if self.n.is_power_of_two() {
+            self.pow2_forward(x);
+        } else {
+            self.bluestein_forward(x, scratch);
+        }
+    }
+
+    /// Inverse DFT of `x` in place, normalized by `1/n`. `scratch` must
+    /// have length [`scratch_len`](Self::scratch_len).
+    pub fn inverse(&self, x: &mut [Complex], scratch: &mut [Complex]) {
+        // ifft(x) = conj(fft(conj(x))) / n
+        for v in x.iter_mut() {
+            *v = v.conj();
+        }
+        self.forward(x, scratch);
+        let inv = 1.0 / self.n as f64;
+        for v in x.iter_mut() {
+            *v = v.conj() * inv;
+        }
+    }
+
+    /// Table-driven iterative radix-2 transform over the working length
+    /// `m` (no trig, no allocation).
+    fn pow2_forward(&self, x: &mut [Complex]) {
+        let m = self.m;
+        debug_assert_eq!(x.len(), m);
+        if m <= 1 {
+            return;
+        }
+        for &(i, j) in &self.swaps {
+            x.swap(i as usize, j as usize);
+        }
+        let mut half = 1;
+        while half < m {
+            let tw = &self.twiddles[half - 1..2 * half - 1];
+            for chunk in x.chunks_mut(2 * half) {
+                let (lo, hi) = chunk.split_at_mut(half);
+                for i in 0..half {
+                    let u = lo[i];
+                    let v = hi[i] * tw[i];
+                    lo[i] = u + v;
+                    hi[i] = u - v;
+                }
+            }
+            half <<= 1;
+        }
+    }
+
+    /// Bluestein chirp-z transform using the precomputed chirp and kernel
+    /// spectrum; the only working memory is the caller's scratch.
+    fn bluestein_forward(&self, x: &mut [Complex], scratch: &mut [Complex]) {
+        let (n, m) = (self.n, self.m);
+        assert_eq!(scratch.len(), m, "bluestein scratch length mismatch");
+        for k in 0..n {
+            scratch[k] = x[k] * self.chirp[k];
+        }
+        for v in scratch[n..].iter_mut() {
+            *v = Complex::ZERO;
+        }
+        self.pow2_forward(scratch);
+        for (v, &kspec) in scratch.iter_mut().zip(&self.kernel_spec) {
+            *v = *v * kspec;
+        }
+        // Inverse pow2 of the product: conj → forward → conj, scaled 1/m.
+        for v in scratch.iter_mut() {
+            *v = v.conj();
+        }
+        self.pow2_forward(scratch);
+        let invm = 1.0 / m as f64;
+        for (xi, (&c, s)) in x.iter_mut().zip(self.chirp.iter().zip(scratch.iter())) {
+            *xi = s.conj() * invm * c;
+        }
+    }
+}
+
+/// Scratch arena for [`RfftPlan`]: the full complex buffer plus the
+/// Bluestein convolution buffer. One per worker thread; reused across
+/// every transform of the batch.
+#[derive(Clone, Debug)]
+pub struct RfftScratch {
+    full: Vec<Complex>,
+    blu: Vec<Complex>,
+}
+
+/// A plan for real-input transforms in the `numpy.fft.rfft`/`irfft`
+/// conventions (`n/2 + 1` non-redundant bins), built on [`FftPlan`].
+#[derive(Clone, Debug)]
+pub struct RfftPlan {
+    plan: FftPlan,
+}
+
+impl RfftPlan {
+    /// Build a plan for length-`n` real transforms.
+    pub fn new(n: usize) -> RfftPlan {
+        RfftPlan {
+            plan: FftPlan::new(n),
+        }
+    }
+
+    /// Signal length.
+    pub fn len(&self) -> usize {
+        self.plan.n
+    }
+
+    /// Always false — plans exist only for `n ≥ 1`.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Number of non-redundant spectrum bins, `n/2 + 1`.
+    pub fn bins(&self) -> usize {
+        self.plan.n / 2 + 1
+    }
+
+    /// Allocate a scratch arena sized for this plan.
+    pub fn make_scratch(&self) -> RfftScratch {
+        RfftScratch {
+            full: vec![Complex::ZERO; self.plan.n],
+            blu: self.plan.make_scratch(),
+        }
+    }
+
+    /// Forward real transform of `x` into `out` (`bins()` long).
+    /// Allocation-free given a reused scratch.
+    pub fn forward_into(&self, x: &[f32], out: &mut [Complex], s: &mut RfftScratch) {
+        let n = self.plan.n;
+        assert_eq!(x.len(), n, "rfft input length mismatch");
+        assert_eq!(out.len(), self.bins(), "rfft output length mismatch");
+        for (slot, &v) in s.full.iter_mut().zip(x) {
+            *slot = Complex::new(v as f64, 0.0);
+        }
+        self.plan.forward(&mut s.full, &mut s.blu);
+        out.copy_from_slice(&s.full[..out.len()]);
+    }
+
+    /// Inverse real transform of a `bins()`-long spectrum into the
+    /// length-`n` real signal `out`. Allocation-free given a reused
+    /// scratch.
+    pub fn inverse_into(&self, spec: &[Complex], out: &mut [f32], s: &mut RfftScratch) {
+        let n = self.plan.n;
+        assert_eq!(spec.len(), self.bins(), "irfft spectrum length mismatch");
+        assert_eq!(out.len(), n, "irfft output length mismatch");
+        s.full[..spec.len()].copy_from_slice(spec);
+        for k in spec.len()..n {
+            s.full[k] = spec[n - k].conj();
+        }
+        self.plan.inverse(&mut s.full, &mut s.blu);
+        for (o, v) in out.iter_mut().zip(&s.full) {
+            *o = v.re as f32;
+        }
+    }
+}
+
+// ------------------------------------------------------ per-thread cache
+
+struct CachedPlan {
+    plan: FftPlan,
+    scratch: Vec<Complex>,
+}
+
+struct CachedRplan {
+    plan: RfftPlan,
+    scratch: RfftScratch,
+}
+
+thread_local! {
+    static CPLANS: RefCell<HashMap<usize, CachedPlan>> = RefCell::new(HashMap::new());
+    static RPLANS: RefCell<HashMap<usize, CachedRplan>> = RefCell::new(HashMap::new());
+}
+
+/// Run `f` with this thread's cached complex plan (and its scratch) for
+/// length `n`, building and caching one on first use. This is what makes
+/// the legacy free functions (`fft::fft`, `fft::ifft`, ...) amortized:
+/// repeated calls at the same length reuse tables and Bluestein spectra
+/// instead of recomputing them per call.
+///
+/// `f` must not recursively call back into the plan cache.
+pub fn with_plan<R>(n: usize, f: impl FnOnce(&FftPlan, &mut [Complex]) -> R) -> R {
+    CPLANS.with(|cell| {
+        let mut map = cell.borrow_mut();
+        let entry = map.entry(n).or_insert_with(|| {
+            let plan = FftPlan::new(n);
+            let scratch = plan.make_scratch();
+            CachedPlan { plan, scratch }
+        });
+        f(&entry.plan, &mut entry.scratch)
+    })
+}
+
+/// Run `f` with this thread's cached real-transform plan (and its
+/// scratch) for length `n`. Same contract as [`with_plan`].
+pub fn with_rplan<R>(n: usize, f: impl FnOnce(&RfftPlan, &mut RfftScratch) -> R) -> R {
+    RPLANS.with(|cell| {
+        let mut map = cell.borrow_mut();
+        let entry = map.entry(n).or_insert_with(|| {
+            let plan = RfftPlan::new(n);
+            let scratch = plan.make_scratch();
+            CachedRplan { plan, scratch }
+        });
+        f(&entry.plan, &mut entry.scratch)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{dft_naive, fft_pow2};
+    use crate::util::rng::Rng;
+
+    fn randc(rng: &mut Rng, n: usize) -> Vec<Complex> {
+        (0..n)
+            .map(|_| Complex::new(rng.gaussian() as f64, rng.gaussian() as f64))
+            .collect()
+    }
+
+    fn assert_close(a: &[Complex], b: &[Complex], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x.re - y.re).abs() < tol && (x.im - y.im).abs() < tol,
+                "bin {i}: {x:?} vs {y:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn planned_pow2_matches_unplanned() {
+        let mut rng = Rng::new(11);
+        for n in [1usize, 2, 4, 8, 64, 256, 1024] {
+            let x = randc(&mut rng, n);
+            let plan = FftPlan::new(n);
+            assert_eq!(plan.scratch_len(), 0);
+            let mut scratch = plan.make_scratch();
+            let mut planned = x.clone();
+            plan.forward(&mut planned, &mut scratch);
+            let mut reference = x.clone();
+            fft_pow2(&mut reference);
+            assert_close(&planned, &reference, 1e-6);
+        }
+    }
+
+    #[test]
+    fn planned_bluestein_matches_naive_dft() {
+        let mut rng = Rng::new(12);
+        for n in [3usize, 5, 6, 7, 12, 100, 129] {
+            let x = randc(&mut rng, n);
+            let plan = FftPlan::new(n);
+            assert!(plan.scratch_len() >= 2 * n - 1);
+            let mut scratch = plan.make_scratch();
+            let mut planned = x.clone();
+            plan.forward(&mut planned, &mut scratch);
+            assert_close(&planned, &dft_naive(&x), 1e-6 * n as f64 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn planned_inverse_roundtrips() {
+        let mut rng = Rng::new(13);
+        for n in [2usize, 7, 16, 100] {
+            let x = randc(&mut rng, n);
+            let plan = FftPlan::new(n);
+            let mut scratch = plan.make_scratch();
+            let mut buf = x.clone();
+            plan.forward(&mut buf, &mut scratch);
+            plan.inverse(&mut buf, &mut scratch);
+            assert_close(&buf, &x, 1e-9 * n as f64 + 1e-10);
+        }
+    }
+
+    #[test]
+    fn rfft_plan_roundtrips_and_scratch_is_reusable() {
+        let mut rng = Rng::new(14);
+        for n in [2usize, 8, 12, 64, 129] {
+            let plan = RfftPlan::new(n);
+            let mut scratch = plan.make_scratch();
+            let mut spec = vec![Complex::ZERO; plan.bins()];
+            let mut back = vec![0.0f32; n];
+            // Reuse the same scratch across several transforms.
+            for _ in 0..3 {
+                let x: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+                plan.forward_into(&x, &mut spec, &mut scratch);
+                plan.inverse_into(&spec, &mut back, &mut scratch);
+                for (a, b) in x.iter().zip(&back) {
+                    assert!((a - b).abs() < 1e-4, "n={n}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cached_plans_match_direct_plans() {
+        let mut rng = Rng::new(15);
+        for n in [8usize, 12, 100] {
+            let x = randc(&mut rng, n);
+            let mut cached = x.clone();
+            with_plan(n, |p, s| p.forward(&mut cached, s));
+            let plan = FftPlan::new(n);
+            let mut scratch = plan.make_scratch();
+            let mut direct = x.clone();
+            plan.forward(&mut direct, &mut scratch);
+            assert_close(&cached, &direct, 1e-12);
+            // Second use hits the cache and must give identical results.
+            let mut again = x.clone();
+            with_plan(n, |p, s| p.forward(&mut again, s));
+            assert_close(&again, &direct, 1e-15);
+        }
+    }
+}

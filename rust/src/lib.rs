@@ -35,6 +35,13 @@
 //! (cross-correlation, `R_off`, `sumvec`, `R_sum`, grouped variants) live in
 //! [`regularizer`], backed by the pure-rust FFT in [`fft`]; they validate the
 //! device path and power the Table-6-style decorrelation diagnostics.
+//!
+//! Hot host paths go through two planned layers: [`fft::plan`] (precomputed
+//! twiddle/bit-reversal/Bluestein tables with caller-owned scratch — zero
+//! allocation and no trig per transform) and [`regularizer::kernel`] (the
+//! `DecorrelationKernel` trait: stateful, batched, multi-threaded evaluators
+//! that the bench harness contenders, trainer diagnostics, and examples all
+//! share).
 
 pub mod bench_harness;
 pub mod config;

@@ -4,7 +4,7 @@
 //! decorr smoke   [--hlo path]          verify the PJRT runtime (FFT probe)
 //! decorr train   [--config file] [...] SSL pretraining
 //! decorr eval    --checkpoint dir      linear evaluation of a checkpoint
-//! decorr table1|table3|table4|table6   regenerate paper tables
+//! decorr table1|table3|table4|table6|table7   regenerate paper tables
 //! decorr fig2|fig3                     regenerate paper figures
 //! ```
 //!
@@ -29,6 +29,7 @@ fn main() -> Result<()> {
         "table3" => decorr::bench_harness::cmd::table3(&mut args),
         "table4" => decorr::bench_harness::cmd::table4(&mut args),
         "table6" => decorr::bench_harness::cmd::table6(&mut args),
+        "table7" => decorr::bench_harness::cmd::table7(&mut args),
         "table11" => decorr::bench_harness::cmd::table11(&mut args),
         "fig2" => decorr::bench_harness::cmd::fig2(&mut args),
         "fig3" => decorr::bench_harness::cmd::fig3(&mut args),
@@ -54,6 +55,7 @@ SUBCOMMANDS
   table3   transfer-learning probe                       (paper Tab. 3)
   table4   wall-clock training time, baseline vs FFT     (paper Tab. 4)
   table6   normalized decorrelation residuals            (paper Tab. 6)
+  table7   host kernel complexity, no artifacts needed   (paper Tab. 7)
   table11  q-exponent ablation                           (paper Tab. 11)
   fig2     loss-node time/memory scaling vs d            (paper Fig. 2)
   fig3     block-size sweep                              (paper Fig. 3)

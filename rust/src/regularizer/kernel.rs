@@ -1,0 +1,745 @@
+//! The `DecorrelationKernel` subsystem: stateful, planned, batched
+//! evaluators for every decorrelation regularizer in the paper.
+//!
+//! The free functions in [`crate::regularizer`] are one-shot: each call
+//! re-plans its FFTs and walks the batch single-threaded. This module is
+//! the engine behind them — a small trait with three implementations, one
+//! per regularizer form:
+//!
+//! * [`NaiveMatrixKernel`] materializes the `d×d` correlation matrix
+//!   (Barlow Twins' `R_off`, Eq. 2 — the `O(nd²)` baseline) and is the
+//!   only kernel that can answer exact off-diagonal queries.
+//! * [`FftSumvecKernel`] accumulates the spectral sum
+//!   `Σ_k conj(F(a_k)) ∘ F(b_k)` of Eq. 12 through a single reused
+//!   [`RfftPlan`] — `O(nd log d)` time, `O(d)` state, zero allocation
+//!   and no trig per sample.
+//! * [`GroupedFftKernel`] is the blockwise `R_sum^(b)` of Eq. 13: one
+//!   length-`b` plan shared by all `(d/b)²` blocks, with each group's
+//!   spectrum computed once per sample and reused across block pairs.
+//!
+//! ## Accumulation model
+//!
+//! Kernels separate *accumulation* from *evaluation*: `accumulate(a, b)`
+//! folds a batch of paired rows into internal sufficient statistics
+//! (unscaled — call it repeatedly to stream a large batch through), and
+//! the evaluation methods (`sumvec`, `r_sum`, `r_off`) apply the `1/norm`
+//! scale on read. `reset()` clears the statistics but keeps the plans, so
+//! a kernel is reusable across batches with no re-planning.
+//!
+//! Accumulation is multi-threaded: kernels built with
+//! [`with_threads`](FftSumvecKernel::with_threads) split the batch into
+//! sample chunks, run one `std::thread` scoped worker per chunk (plans
+//! are `Sync`; each worker owns its scratch), and merge the per-worker
+//! partial sums in deterministic chunk order.
+//!
+//! ## Which equation is which
+//!
+//! | kernel               | paper quantity                 | complexity        |
+//! |----------------------|--------------------------------|-------------------|
+//! | `NaiveMatrixKernel`  | `C(A,B)`, `R_off` (Eqs. 1–2)   | `O(nd²)`          |
+//! | `FftSumvecKernel`    | `sumvec`/`R_sum` (Eqs. 5–6,12) | `O(nd log d)`     |
+//! | `GroupedFftKernel`   | `R_sum^(b)` (Eq. 13)           | `O((nd²/b) log b)`|
+
+use crate::fft::{Complex, RfftPlan};
+use crate::util::tensor::Tensor;
+
+use super::{accumulate_cross_range, r_sum_from_sumvec, sumvec_naive, Q};
+
+/// Default worker-thread count for sample-chunk accumulation: the
+/// machine's parallelism, capped — accumulation is memory-bound and sees
+/// diminishing returns past a few workers.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// A stateful evaluator for one decorrelation regularizer form.
+///
+/// See the module docs for the accumulation model. All evaluation
+/// methods scale the accumulated statistics by `1/norm` on read (`n` for
+/// the Barlow Twins convention, `n-1` for the unbiased form).
+pub trait DecorrelationKernel {
+    /// Short stable identifier ("naive-matrix", "fft-sumvec", ...).
+    fn name(&self) -> &'static str;
+
+    /// Embedding dimension `d` this kernel was planned for.
+    fn dim(&self) -> usize;
+
+    /// Total rows accumulated since construction or the last `reset`.
+    fn samples(&self) -> usize;
+
+    /// Clear accumulated statistics; plans and buffers are kept.
+    fn reset(&mut self);
+
+    /// Fold a batch of paired samples (both `(n, d)`) into the
+    /// accumulated correlation statistics. May be called repeatedly.
+    fn accumulate(&mut self, a: &Tensor, b: &Tensor);
+
+    /// Summary vector of the accumulated correlation, scaled by `1/norm`.
+    /// Flat kernels return the `d`-component `sumvec` (Eq. 5 ≡ Eq. 12);
+    /// the grouped kernel returns its per-block summaries concatenated in
+    /// row-major block order (`(d/b)²` blocks of `b` components each).
+    fn sumvec(&self, norm: f32) -> Vec<f32>;
+
+    /// The regularizer value this kernel computes (Eq. 6, Eq. 13, or the
+    /// sumvec reduction of the materialized matrix), under exponent `q`.
+    fn r_sum(&self, norm: f32, q: Q) -> f64;
+
+    /// Exact off-diagonal square sum `R_off` (Eq. 2). Only kernels that
+    /// materialize the matrix can answer; spectral kernels return `None`
+    /// (the FFT representation has already collapsed the off-diagonals).
+    fn r_off(&self, norm: f32) -> Option<f64>;
+}
+
+// --------------------------------------------------------- naive matrix
+
+/// Materialized-matrix kernel: accumulates the raw `Σ_k a_k b_kᵀ` outer
+/// products into a `d×d` matrix. The `O(nd²)` baseline contender, and
+/// the oracle for exact `R_off` queries (Eqs. 1–2, 16–17).
+pub struct NaiveMatrixKernel {
+    c: Tensor,
+    samples: usize,
+    threads: usize,
+}
+
+impl NaiveMatrixKernel {
+    /// Single-threaded kernel for dimension `d`.
+    pub fn new(d: usize) -> NaiveMatrixKernel {
+        Self::with_threads(d, 1)
+    }
+
+    /// Kernel accumulating over `threads` sample-chunk workers. Note the
+    /// merge cost: each worker owns a `d×d` partial, so large `d` with
+    /// many threads trades memory for accumulation speed.
+    pub fn with_threads(d: usize, threads: usize) -> NaiveMatrixKernel {
+        NaiveMatrixKernel {
+            c: Tensor::zeros(&[d, d]),
+            samples: 0,
+            threads: threads.max(1),
+        }
+    }
+
+    /// The accumulated correlation matrix scaled by `1/norm`.
+    pub fn matrix(&self, norm: f32) -> Tensor {
+        let mut m = self.c.clone();
+        let inv = 1.0 / norm;
+        for v in m.data_mut() {
+            *v *= inv;
+        }
+        m
+    }
+}
+
+impl DecorrelationKernel for NaiveMatrixKernel {
+    fn name(&self) -> &'static str {
+        "naive-matrix"
+    }
+
+    fn dim(&self) -> usize {
+        self.c.shape()[0]
+    }
+
+    fn samples(&self) -> usize {
+        self.samples
+    }
+
+    fn reset(&mut self) {
+        self.c.data_mut().fill(0.0);
+        self.samples = 0;
+    }
+
+    fn accumulate(&mut self, a: &Tensor, b: &Tensor) {
+        assert_eq!(a.shape(), b.shape());
+        assert_eq!(a.shape()[1], self.dim());
+        let n = a.shape()[0];
+        let t = self.threads.min(n.max(1));
+        if t <= 1 {
+            accumulate_cross_range(&mut self.c, a, b, 0, n);
+        } else {
+            let d = self.dim();
+            let chunk = n.div_ceil(t);
+            let partials: Vec<Tensor> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..t)
+                    .map(|ti| {
+                        let lo = ti * chunk;
+                        let hi = ((ti + 1) * chunk).min(n);
+                        scope.spawn(move || {
+                            let mut part = Tensor::zeros(&[d, d]);
+                            if lo < hi {
+                                accumulate_cross_range(&mut part, a, b, lo, hi);
+                            }
+                            part
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for part in partials {
+                for (dst, src) in self.c.data_mut().iter_mut().zip(part.data()) {
+                    *dst += *src;
+                }
+            }
+        }
+        self.samples += n;
+    }
+
+    fn sumvec(&self, norm: f32) -> Vec<f32> {
+        let mut sv = sumvec_naive(&self.c);
+        let inv = 1.0 / norm;
+        for v in &mut sv {
+            *v *= inv;
+        }
+        sv
+    }
+
+    fn r_sum(&self, norm: f32, q: Q) -> f64 {
+        r_sum_from_sumvec(&self.sumvec(norm), q)
+    }
+
+    fn r_off(&self, norm: f32) -> Option<f64> {
+        let d = self.dim();
+        let inv = 1.0 / norm as f64;
+        let mut acc = 0.0f64;
+        for i in 0..d {
+            let row = self.c.row(i);
+            for (j, &v) in row.iter().enumerate() {
+                if i != j {
+                    let s = v as f64 * inv;
+                    acc += s * s;
+                }
+            }
+        }
+        Some(acc)
+    }
+}
+
+// ----------------------------------------------------------- fft sumvec
+
+/// Spectral kernel for the flat `R_sum` (Eq. 12): accumulates
+/// `Σ_k conj(F(a_k)) ∘ F(b_k)` over the `d/2 + 1` rfft bins through one
+/// shared [`RfftPlan`]. The per-sample loop performs zero allocation —
+/// plan and scratch are built once per batch (scratch per worker).
+pub struct FftSumvecKernel {
+    plan: RfftPlan,
+    acc: Vec<Complex>,
+    samples: usize,
+    threads: usize,
+}
+
+impl FftSumvecKernel {
+    /// Single-threaded kernel for dimension `d`.
+    pub fn new(d: usize) -> FftSumvecKernel {
+        Self::with_threads(d, 1)
+    }
+
+    /// Kernel accumulating over `threads` sample-chunk workers.
+    pub fn with_threads(d: usize, threads: usize) -> FftSumvecKernel {
+        let plan = RfftPlan::new(d);
+        let bins = plan.bins();
+        FftSumvecKernel {
+            plan,
+            acc: vec![Complex::ZERO; bins],
+            samples: 0,
+            threads: threads.max(1),
+        }
+    }
+}
+
+/// Accumulate rows `lo..hi` of the spectral sum into `acc` using `plan`.
+/// All buffers are allocated here once for the whole chunk.
+fn sumvec_accumulate_rows(
+    plan: &RfftPlan,
+    a: &Tensor,
+    b: &Tensor,
+    lo: usize,
+    hi: usize,
+    acc: &mut [Complex],
+) {
+    let bins = plan.bins();
+    let mut scratch = plan.make_scratch();
+    let mut fa = vec![Complex::ZERO; bins];
+    let mut fb = vec![Complex::ZERO; bins];
+    for k in lo..hi {
+        plan.forward_into(a.row(k), &mut fa, &mut scratch);
+        plan.forward_into(b.row(k), &mut fb, &mut scratch);
+        for (s, (x, y)) in acc.iter_mut().zip(fa.iter().zip(&fb)) {
+            *s = *s + x.conj() * *y;
+        }
+    }
+}
+
+impl DecorrelationKernel for FftSumvecKernel {
+    fn name(&self) -> &'static str {
+        "fft-sumvec"
+    }
+
+    fn dim(&self) -> usize {
+        self.plan.len()
+    }
+
+    fn samples(&self) -> usize {
+        self.samples
+    }
+
+    fn reset(&mut self) {
+        self.acc.fill(Complex::ZERO);
+        self.samples = 0;
+    }
+
+    fn accumulate(&mut self, a: &Tensor, b: &Tensor) {
+        assert_eq!(a.shape(), b.shape());
+        assert_eq!(a.shape()[1], self.dim());
+        let n = a.shape()[0];
+        let t = self.threads.min(n.max(1));
+        if t <= 1 {
+            let plan = &self.plan;
+            sumvec_accumulate_rows(plan, a, b, 0, n, &mut self.acc);
+        } else {
+            let bins = self.plan.bins();
+            let chunk = n.div_ceil(t);
+            let plan = &self.plan;
+            let partials: Vec<Vec<Complex>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..t)
+                    .map(|ti| {
+                        let lo = ti * chunk;
+                        let hi = ((ti + 1) * chunk).min(n);
+                        scope.spawn(move || {
+                            let mut part = vec![Complex::ZERO; bins];
+                            if lo < hi {
+                                sumvec_accumulate_rows(plan, a, b, lo, hi, &mut part);
+                            }
+                            part
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for part in partials {
+                for (s, v) in self.acc.iter_mut().zip(part) {
+                    *s = *s + v;
+                }
+            }
+        }
+        self.samples += n;
+    }
+
+    fn sumvec(&self, norm: f32) -> Vec<f32> {
+        let inv = 1.0 / norm as f64;
+        let spec: Vec<Complex> = self.acc.iter().map(|&s| s * inv).collect();
+        let mut out = vec![0.0f32; self.dim()];
+        let mut scratch = self.plan.make_scratch();
+        self.plan.inverse_into(&spec, &mut out, &mut scratch);
+        out
+    }
+
+    fn r_sum(&self, norm: f32, q: Q) -> f64 {
+        r_sum_from_sumvec(&self.sumvec(norm), q)
+    }
+
+    fn r_off(&self, _norm: f32) -> Option<f64> {
+        None
+    }
+}
+
+// ----------------------------------------------------------- grouped fft
+
+/// Blockwise spectral kernel for the grouped `R_sum^(b)` (Eq. 13). The
+/// feature axis is split into `⌈d/b⌉` groups (the ragged last group is
+/// zero-padded, paper footnote 4); each sample contributes the spectrum
+/// of every group once, reused across all `(gi, gj)` block pairs.
+pub struct GroupedFftKernel {
+    d: usize,
+    block: usize,
+    groups: usize,
+    plan: RfftPlan,
+    /// `(gi*groups + gj)*bins + s` — per-block spectral accumulators.
+    acc: Vec<Complex>,
+    samples: usize,
+    threads: usize,
+}
+
+impl GroupedFftKernel {
+    /// Single-threaded kernel for dimension `d` with block size `block`.
+    pub fn new(d: usize, block: usize) -> GroupedFftKernel {
+        Self::with_threads(d, block, 1)
+    }
+
+    /// Kernel accumulating over `threads` sample-chunk workers.
+    pub fn with_threads(d: usize, block: usize, threads: usize) -> GroupedFftKernel {
+        assert!(block >= 1, "block size must be >= 1");
+        let groups = d.div_ceil(block);
+        let plan = RfftPlan::new(block);
+        let bins = plan.bins();
+        GroupedFftKernel {
+            d,
+            block,
+            groups,
+            plan,
+            acc: vec![Complex::ZERO; groups * groups * bins],
+            samples: 0,
+            threads: threads.max(1),
+        }
+    }
+
+    /// Block size `b`.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Number of feature groups `⌈d/b⌉`.
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+}
+
+/// Accumulate rows `lo..hi` of all block-pair spectra into `acc`.
+fn grouped_accumulate_rows(
+    plan: &RfftPlan,
+    a: &Tensor,
+    b: &Tensor,
+    lo: usize,
+    hi: usize,
+    block: usize,
+    groups: usize,
+    acc: &mut [Complex],
+) {
+    let d = a.shape()[1];
+    let bins = plan.bins();
+    let mut scratch = plan.make_scratch();
+    let mut pad = vec![0.0f32; block];
+    let mut fa = vec![Complex::ZERO; groups * bins];
+    let mut fb = vec![Complex::ZERO; groups * bins];
+    for k in lo..hi {
+        for (view, spectra) in [(a, &mut fa), (b, &mut fb)] {
+            let row = view.row(k);
+            for g in 0..groups {
+                for (idx, slot) in pad.iter_mut().enumerate() {
+                    let col = g * block + idx;
+                    *slot = if col < d { row[col] } else { 0.0 };
+                }
+                plan.forward_into(&pad, &mut spectra[g * bins..(g + 1) * bins], &mut scratch);
+            }
+        }
+        for gi in 0..groups {
+            for gj in 0..groups {
+                let dst = &mut acc[(gi * groups + gj) * bins..(gi * groups + gj + 1) * bins];
+                let sa = &fa[gi * bins..(gi + 1) * bins];
+                let sb = &fb[gj * bins..(gj + 1) * bins];
+                for (s, (x, y)) in dst.iter_mut().zip(sa.iter().zip(sb)) {
+                    *s = *s + x.conj() * *y;
+                }
+            }
+        }
+    }
+}
+
+impl DecorrelationKernel for GroupedFftKernel {
+    fn name(&self) -> &'static str {
+        "grouped-fft"
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn samples(&self) -> usize {
+        self.samples
+    }
+
+    fn reset(&mut self) {
+        self.acc.fill(Complex::ZERO);
+        self.samples = 0;
+    }
+
+    fn accumulate(&mut self, a: &Tensor, b: &Tensor) {
+        assert_eq!(a.shape(), b.shape());
+        assert_eq!(a.shape()[1], self.d);
+        let n = a.shape()[0];
+        let t = self.threads.min(n.max(1));
+        let (block, groups) = (self.block, self.groups);
+        if t <= 1 {
+            let plan = &self.plan;
+            grouped_accumulate_rows(plan, a, b, 0, n, block, groups, &mut self.acc);
+        } else {
+            let bins = self.plan.bins();
+            let chunk = n.div_ceil(t);
+            let plan = &self.plan;
+            let partials: Vec<Vec<Complex>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..t)
+                    .map(|ti| {
+                        let lo = ti * chunk;
+                        let hi = ((ti + 1) * chunk).min(n);
+                        scope.spawn(move || {
+                            let mut part = vec![Complex::ZERO; groups * groups * bins];
+                            if lo < hi {
+                                grouped_accumulate_rows(
+                                    plan, a, b, lo, hi, block, groups, &mut part,
+                                );
+                            }
+                            part
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for part in partials {
+                for (s, v) in self.acc.iter_mut().zip(part) {
+                    *s = *s + v;
+                }
+            }
+        }
+        self.samples += n;
+    }
+
+    fn sumvec(&self, norm: f32) -> Vec<f32> {
+        let bins = self.plan.bins();
+        let inv = 1.0 / norm as f64;
+        let mut scratch = self.plan.make_scratch();
+        let mut spec = vec![Complex::ZERO; bins];
+        let mut block_sv = vec![0.0f32; self.block];
+        let mut out = Vec::with_capacity(self.groups * self.groups * self.block);
+        for gi in 0..self.groups {
+            for gj in 0..self.groups {
+                let src = &self.acc[(gi * self.groups + gj) * bins..][..bins];
+                for (sp, &s) in spec.iter_mut().zip(src) {
+                    *sp = s * inv;
+                }
+                self.plan.inverse_into(&spec, &mut block_sv, &mut scratch);
+                out.extend_from_slice(&block_sv);
+            }
+        }
+        out
+    }
+
+    fn r_sum(&self, norm: f32, q: Q) -> f64 {
+        let bins = self.plan.bins();
+        let inv = 1.0 / norm as f64;
+        let mut scratch = self.plan.make_scratch();
+        let mut spec = vec![Complex::ZERO; bins];
+        let mut block_sv = vec![0.0f32; self.block];
+        let mut acc = 0.0f64;
+        for gi in 0..self.groups {
+            for gj in 0..self.groups {
+                let src = &self.acc[(gi * self.groups + gj) * bins..][..bins];
+                for (sp, &s) in spec.iter_mut().zip(src) {
+                    *sp = s * inv;
+                }
+                self.plan.inverse_into(&spec, &mut block_sv, &mut scratch);
+                // Diagonal blocks skip their zeroth component (the block
+                // trace); off-diagonal blocks keep all b components.
+                let start = if gi == gj { 1 } else { 0 };
+                for &v in &block_sv[start..] {
+                    acc += q.apply(v) as f64;
+                }
+            }
+        }
+        acc
+    }
+
+    fn r_off(&self, _norm: f32) -> Option<f64> {
+        None
+    }
+}
+
+// --------------------------------------------------- table-6 diagnostics
+
+/// Which normalized decorrelation residual to compute (paper Table 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResidualFamily {
+    /// Eq. 16: `R_off(C(A,B)) / (d(d-1))` over standardized views.
+    BarlowTwins,
+    /// Eq. 17: `(R_off(K(A)) + R_off(K(B))) / (2d(d-1))` over centered
+    /// views.
+    VicReg,
+}
+
+/// Normalized decorrelation residual of paired embeddings, computed
+/// through the [`DecorrelationKernel`] trait (the materialized-matrix
+/// kernel — residuals are exact off-diagonal queries). This is the
+/// quantity behind the paper's Table 6 and the trainer diagnostics.
+pub fn normalized_residual(family: ResidualFamily, a: &Tensor, b: &Tensor) -> f64 {
+    let d = a.shape()[1];
+    let df = d as f64;
+    match family {
+        ResidualFamily::BarlowTwins => {
+            let mut sa = a.clone();
+            let mut sb = b.clone();
+            sa.standardize_columns(1e-6);
+            sb.standardize_columns(1e-6);
+            let n = a.shape()[0] as f32;
+            let mut k = NaiveMatrixKernel::new(d);
+            k.accumulate(&sa, &sb);
+            k.r_off(n).expect("matrix kernel answers r_off") / (df * (df - 1.0))
+        }
+        ResidualFamily::VicReg => {
+            let n = a.shape()[0];
+            let norm = (n as f32 - 1.0).max(1.0);
+            let mut total = 0.0f64;
+            for t in [a, b] {
+                let mut centered = t.clone();
+                centered.center_columns();
+                let mut k = NaiveMatrixKernel::new(d);
+                k.accumulate(&centered, &centered);
+                total += k.r_off(norm).expect("matrix kernel answers r_off");
+            }
+            total / (2.0 * df * (df - 1.0))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regularizer::{
+        cross_correlation, r_off, r_sum_grouped_naive, sumvec_fft, sumvec_naive,
+    };
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, n: usize, d: usize) -> Tensor {
+        Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect())
+    }
+
+    #[test]
+    fn fft_kernel_matches_free_sumvec() {
+        let mut rng = Rng::new(21);
+        for (n, d) in [(4usize, 8usize), (7, 16), (5, 12), (3, 5)] {
+            let a = rand_tensor(&mut rng, n, d);
+            let b = rand_tensor(&mut rng, n, d);
+            let mut k = FftSumvecKernel::new(d);
+            k.accumulate(&a, &b);
+            assert_eq!(k.samples(), n);
+            let sv = k.sumvec(n as f32 - 1.0);
+            let reference = sumvec_fft(&a, &b, n as f32 - 1.0);
+            for (x, y) in sv.iter().zip(&reference) {
+                assert!((x - y).abs() < 1e-4, "n={n} d={d}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_accumulation_matches_one_shot() {
+        let mut rng = Rng::new(22);
+        let (n, d) = (8usize, 12usize);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        // Split the batch in two and stream it through the same kernel.
+        let a1 = Tensor::from_vec(&[4, d], a.data()[..4 * d].to_vec());
+        let a2 = Tensor::from_vec(&[4, d], a.data()[4 * d..].to_vec());
+        let b1 = Tensor::from_vec(&[4, d], b.data()[..4 * d].to_vec());
+        let b2 = Tensor::from_vec(&[4, d], b.data()[4 * d..].to_vec());
+        let mut streamed = FftSumvecKernel::new(d);
+        streamed.accumulate(&a1, &b1);
+        streamed.accumulate(&a2, &b2);
+        let mut oneshot = FftSumvecKernel::new(d);
+        oneshot.accumulate(&a, &b);
+        for (x, y) in streamed.sumvec(n as f32).iter().zip(&oneshot.sumvec(n as f32)) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_sequential() {
+        let mut rng = Rng::new(23);
+        let (n, d) = (13usize, 10usize);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        let mut seq = FftSumvecKernel::new(d);
+        let mut par = FftSumvecKernel::with_threads(d, 4);
+        seq.accumulate(&a, &b);
+        par.accumulate(&a, &b);
+        for (x, y) in seq.sumvec(n as f32).iter().zip(&par.sumvec(n as f32)) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+        let mut nseq = NaiveMatrixKernel::new(d);
+        let mut npar = NaiveMatrixKernel::with_threads(d, 3);
+        nseq.accumulate(&a, &b);
+        npar.accumulate(&a, &b);
+        let (ro_s, ro_p) = (nseq.r_off(n as f32).unwrap(), npar.r_off(n as f32).unwrap());
+        assert!((ro_s - ro_p).abs() < 1e-6 * (1.0 + ro_s.abs()));
+    }
+
+    #[test]
+    fn grouped_kernel_matches_naive_oracle() {
+        let mut rng = Rng::new(24);
+        let (n, d) = (5usize, 12usize);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        let c = cross_correlation(&a, &b, n as f32);
+        for block in [1usize, 2, 3, 4, 5, 12] {
+            for q in [Q::L1, Q::L2] {
+                let mut k = GroupedFftKernel::with_threads(d, block, 2);
+                k.accumulate(&a, &b);
+                let fast = k.r_sum(n as f32, q);
+                let naive = r_sum_grouped_naive(&c, block, q);
+                assert!(
+                    (fast - naive).abs() < 1e-3 * naive.abs().max(1.0),
+                    "block={block} q={q:?}: {fast} vs {naive}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn naive_kernel_matches_free_functions() {
+        let mut rng = Rng::new(25);
+        let (n, d) = (6usize, 9usize);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        let mut k = NaiveMatrixKernel::new(d);
+        k.accumulate(&a, &b);
+        let c = cross_correlation(&a, &b, n as f32);
+        let m = k.matrix(n as f32);
+        for (x, y) in m.data().iter().zip(c.data()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+        let ro = k.r_off(n as f32).unwrap();
+        let ro_free = r_off(&c);
+        assert!((ro - ro_free).abs() < 1e-4 * (1.0 + ro_free.abs()));
+        let sv = k.sumvec(n as f32);
+        for (x, y) in sv.iter().zip(&sumvec_naive(&c)) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn reset_clears_state_and_keeps_plan() {
+        let mut rng = Rng::new(26);
+        let (n, d) = (4usize, 8usize);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        let mut k = FftSumvecKernel::new(d);
+        k.accumulate(&a, &b);
+        let first = k.sumvec(n as f32);
+        k.reset();
+        assert_eq!(k.samples(), 0);
+        k.accumulate(&a, &b);
+        for (x, y) in first.iter().zip(&k.sumvec(n as f32)) {
+            assert!((x - y).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn residual_families_match_legacy_formulas() {
+        let mut rng = Rng::new(27);
+        let (n, d) = (32usize, 6usize);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        // Eq. 16 computed longhand from the materialized matrix.
+        let mut sa = a.clone();
+        let mut sb = b.clone();
+        sa.standardize_columns(1e-6);
+        sb.standardize_columns(1e-6);
+        let c = cross_correlation(&sa, &sb, n as f32);
+        let bt_direct = r_off(&c) / (d as f64 * (d as f64 - 1.0));
+        let bt = normalized_residual(ResidualFamily::BarlowTwins, &a, &b);
+        assert!((bt - bt_direct).abs() < 1e-6 * (1.0 + bt_direct.abs()));
+        // Eq. 17 longhand via the covariance free function.
+        let ka = crate::regularizer::covariance(&a);
+        let kb = crate::regularizer::covariance(&b);
+        let vic_direct = (r_off(&ka) + r_off(&kb)) / (2.0 * d as f64 * (d as f64 - 1.0));
+        let vic = normalized_residual(ResidualFamily::VicReg, &a, &b);
+        assert!((vic - vic_direct).abs() < 1e-6 * (1.0 + vic_direct.abs()));
+    }
+}

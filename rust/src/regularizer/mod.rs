@@ -17,8 +17,18 @@
 //! trained embeddings, and serve as the contenders in the host complexity
 //! benches (Appendix C). They are written for clarity first, but the FFT
 //! path is genuinely `O(nd log d)` so the complexity benches are honest.
+//!
+//! The heavy lifting lives in the [`kernel`] submodule: the
+//! [`DecorrelationKernel`] trait and its planned, batched, multi-threaded
+//! implementations. The free functions below are thin one-shot wrappers
+//! kept for API stability — same signatures, same numerics.
 
-use crate::fft;
+pub mod kernel;
+
+pub use kernel::{
+    DecorrelationKernel, FftSumvecKernel, GroupedFftKernel, NaiveMatrixKernel, ResidualFamily,
+};
+
 use crate::util::tensor::Tensor;
 
 /// Which norm exponent `q ∈ {1, 2}` the `R_sum` family uses (Eq. 6).
@@ -34,7 +44,7 @@ pub enum Q {
 
 impl Q {
     #[inline]
-    fn apply(self, v: f32) -> f32 {
+    pub(crate) fn apply(self, v: f32) -> f32 {
         match self {
             Q::L1 => v.abs(),
             Q::L2 => v * v,
@@ -45,23 +55,37 @@ impl Q {
 /// Cross-correlation matrix `C(A, B) = (1/norm) Σ_k a_k b_kᵀ` for
 /// **already standardized** views (paper §4.1). `norm` is `n` for the
 /// Barlow Twins convention (Listing 1) or `n-1` for the unbiased form.
+/// The accumulation is cache-friendly — row-major output with the inner
+/// loop streaming contiguous `b` rows — and the `1/norm` scale is applied
+/// once at the end instead of inside the sample loop.
 pub fn cross_correlation(a: &Tensor, b: &Tensor, norm: f32) -> Tensor {
     assert_eq!(a.shape(), b.shape());
     let (n, d) = (a.shape()[0], a.shape()[1]);
     let mut c = Tensor::zeros(&[d, d]);
+    accumulate_cross_range(&mut c, a, b, 0, n);
     let inv = 1.0 / norm;
-    for k in 0..n {
+    for v in c.data_mut() {
+        *v *= inv;
+    }
+    c
+}
+
+/// Accumulate the raw (unscaled) `Σ_k a_k b_kᵀ` for rows `lo..hi` into
+/// `c`. Shared by [`cross_correlation`] and the matrix kernel's chunked
+/// workers; the inner loop runs over contiguous rows of both `b` and `c`.
+pub(crate) fn accumulate_cross_range(c: &mut Tensor, a: &Tensor, b: &Tensor, lo: usize, hi: usize) {
+    let d = a.shape()[1];
+    for k in lo..hi {
         let ra = a.row(k);
         let rb = b.row(k);
         for i in 0..d {
-            let ai = ra[i] * inv;
+            let ai = ra[i];
             let crow = &mut c.data_mut()[i * d..(i + 1) * d];
             for (cij, &bj) in crow.iter_mut().zip(rb) {
                 *cij += ai * bj;
             }
         }
     }
-    c
 }
 
 /// Covariance matrix `K(A) = (1/(n-1)) Σ_k (a_k - ā)(a_k - ā)ᵀ`.
@@ -124,24 +148,13 @@ pub fn sumvec_naive(m: &Tensor) -> Vec<f32> {
 
 /// `sumvec(C(A,B))` computed directly from embeddings via the convolution
 /// theorem (Eq. 12): `F⁻¹( Σ_k conj(F(a_k)) ∘ F(b_k) ) / norm`.
-/// `O(nd log d)` time, `O(d)` extra space.
+/// `O(nd log d)` time, `O(d)` extra space. One-shot wrapper over
+/// [`FftSumvecKernel`].
 pub fn sumvec_fft(a: &Tensor, b: &Tensor, norm: f32) -> Vec<f32> {
     assert_eq!(a.shape(), b.shape());
-    let (n, d) = (a.shape()[0], a.shape()[1]);
-    let bins = d / 2 + 1;
-    let mut acc = vec![fft::Complex::ZERO; bins];
-    for k in 0..n {
-        let fa = fft::rfft(a.row(k));
-        let fb = fft::rfft(b.row(k));
-        for (s, (x, y)) in acc.iter_mut().zip(fa.iter().zip(&fb)) {
-            *s = *s + x.conj() * *y;
-        }
-    }
-    let inv = 1.0 / norm as f64;
-    for s in &mut acc {
-        *s = *s * inv;
-    }
-    fft::irfft(&acc, d)
+    let mut k = FftSumvecKernel::new(a.shape()[1]);
+    k.accumulate(a, b);
+    k.sumvec(norm)
 }
 
 /// `R_sum(M)` over a precomputed summary vector (Eq. 6): all but the zeroth
@@ -151,62 +164,25 @@ pub fn r_sum_from_sumvec(sumvec: &[f32], q: Q) -> f64 {
 }
 
 /// The proposed regularizer `R_sum(C(A,B))` straight from embeddings
-/// (`O(nd log d)`).
+/// (`O(nd log d)`). One-shot wrapper over [`FftSumvecKernel`].
 pub fn r_sum_fft(a: &Tensor, b: &Tensor, norm: f32, q: Q) -> f64 {
-    r_sum_from_sumvec(&sumvec_fft(a, b, norm), q)
-}
-
-/// Extract the `(gi, gj)` block of size b×b from columns of `a`/`b` and
-/// return the per-block summary vector via FFT. Helper for the grouped
-/// regularizer; blocks index submatrices `C_ij` of the correlation matrix.
-fn block_sumvec(a: &Tensor, b: &Tensor, gi: usize, gj: usize, bs: usize, norm: f32) -> Vec<f32> {
-    let (n, d) = (a.shape()[0], a.shape()[1]);
-    let take = |t: &Tensor, g: usize, k: usize| -> Vec<f32> {
-        let mut v = vec![0.0f32; bs];
-        let row = t.row(k);
-        for (idx, slot) in v.iter_mut().enumerate() {
-            let col = g * bs + idx;
-            if col < d {
-                *slot = row[col];
-            } // zero-pad the ragged last group (paper footnote 4)
-        }
-        v
-    };
-    let bins = bs / 2 + 1;
-    let mut acc = vec![fft::Complex::ZERO; bins];
-    for k in 0..n {
-        let fa = fft::rfft(&take(a, gi, k));
-        let fb = fft::rfft(&take(b, gj, k));
-        for (s, (x, y)) in acc.iter_mut().zip(fa.iter().zip(&fb)) {
-            *s = *s + x.conj() * *y;
-        }
-    }
-    let inv = 1.0 / norm as f64;
-    for s in &mut acc {
-        *s = *s * inv;
-    }
-    fft::irfft(&acc, bs)
+    assert_eq!(a.shape(), b.shape());
+    let mut k = FftSumvecKernel::new(a.shape()[1]);
+    k.accumulate(a, b);
+    k.r_sum(norm, q)
 }
 
 /// Grouped regularizer `R_sum^(b)(C(A,B))` (Eq. 13), computed blockwise via
 /// FFT in `O((nd²/b) log b)`. Diagonal blocks skip their zeroth summary
 /// component (it holds the block trace); off-diagonal blocks keep all `b`
-/// components.
+/// components. One-shot wrapper over [`GroupedFftKernel`], which computes
+/// each group's spectrum once per sample and reuses it across block pairs.
 pub fn r_sum_grouped_fft(a: &Tensor, b: &Tensor, block: usize, norm: f32, q: Q) -> f64 {
     assert!(block >= 1);
-    let d = a.shape()[1];
-    let groups = d.div_ceil(block);
-    let mut acc = 0.0f64;
-    for gi in 0..groups {
-        for gj in 0..groups {
-            let sv = block_sumvec(a, b, gi, gj, block, norm);
-            let start = if gi == gj { 1 } else { 0 };
-            for &v in &sv[start..] {
-                acc += q.apply(v) as f64;
-            }
-        }
-    }
-    acc
+    assert_eq!(a.shape(), b.shape());
+    let mut k = GroupedFftKernel::new(a.shape()[1], block);
+    k.accumulate(a, b);
+    k.r_sum(norm, q)
 }
 
 /// Grouped regularizer computed naively from a materialized matrix —
@@ -239,25 +215,17 @@ pub fn r_sum_grouped_naive(m: &Tensor, block: usize, q: Q) -> f64 {
 
 /// Normalized Barlow Twins residual (paper Eq. 16): mean squared
 /// off-diagonal cross-correlation, `R_off(C(A,B)) / (d(d-1))`.
-/// Views are standardized internally. Used for Table 6.
+/// Views are standardized internally. Used for Table 6. Wrapper over
+/// [`kernel::normalized_residual`].
 pub fn normalized_bt_residual(a: &Tensor, b: &Tensor) -> f64 {
-    let mut sa = a.clone();
-    let mut sb = b.clone();
-    sa.standardize_columns(1e-6);
-    sb.standardize_columns(1e-6);
-    let n = a.shape()[0] as f32;
-    let c = cross_correlation(&sa, &sb, n);
-    let d = c.shape()[0] as f64;
-    r_off(&c) / (d * (d - 1.0))
+    kernel::normalized_residual(ResidualFamily::BarlowTwins, a, b)
 }
 
 /// Normalized VICReg residual (paper Eq. 17):
 /// `(R_off(K(A)) + R_off(K(B))) / (2 d (d-1))`. Used for Table 6.
+/// Wrapper over [`kernel::normalized_residual`].
 pub fn normalized_vic_residual(a: &Tensor, b: &Tensor) -> f64 {
-    let ka = covariance(a);
-    let kb = covariance(b);
-    let d = ka.shape()[0] as f64;
-    (r_off(&ka) + r_off(&kb)) / (2.0 * d * (d - 1.0))
+    kernel::normalized_residual(ResidualFamily::VicReg, a, b)
 }
 
 /// Full host-side Barlow Twins loss (Eq. 1) — `O(nd²)` baseline.

@@ -11,6 +11,9 @@ use decorr::data::loader::make_batch;
 use decorr::data::synth::{ShapeWorld, ShapeWorldConfig, Vocab};
 use decorr::data::{AugmentConfig, Augmenter};
 use decorr::fft;
+use decorr::regularizer::kernel::{
+    DecorrelationKernel, FftSumvecKernel, GroupedFftKernel, NaiveMatrixKernel,
+};
 use decorr::regularizer::{self, Q};
 use decorr::util::json;
 use decorr::util::rng::Rng;
@@ -165,6 +168,164 @@ fn prop_correlation_linear() {
         for i in 0..d {
             assert!((lhs[i] - r1[i] - r2[i]).abs() < 1e-3, "d={d} i={i}");
         }
+    });
+}
+
+// ----------------------------------------------------------- planned fft
+
+/// Planned power-of-two transforms match the unplanned radix-2 path to
+/// 1e-6, and the planned inverse round-trips.
+#[test]
+fn prop_planned_fft_matches_unplanned_pow2() {
+    for_cases(30, |rng| {
+        let n = 1usize << (1 + rng.next_bounded(8) as u32); // 2..512
+        let x: Vec<fft::Complex> = (0..n)
+            .map(|_| fft::Complex::new(rng.gaussian() as f64, rng.gaussian() as f64))
+            .collect();
+        let plan = fft::FftPlan::new(n);
+        let mut scratch = plan.make_scratch();
+        let mut planned = x.clone();
+        plan.forward(&mut planned, &mut scratch);
+        let mut reference = x.clone();
+        fft::fft_pow2(&mut reference);
+        for (i, (p, r)) in planned.iter().zip(&reference).enumerate() {
+            assert!(
+                (p.re - r.re).abs() < 1e-6 && (p.im - r.im).abs() < 1e-6,
+                "n={n} bin {i}: {p:?} vs {r:?}"
+            );
+        }
+        plan.inverse(&mut planned, &mut scratch);
+        for (p, orig) in planned.iter().zip(&x) {
+            assert!((p.re - orig.re).abs() < 1e-6 && (p.im - orig.im).abs() < 1e-6, "n={n}");
+        }
+    });
+}
+
+/// Planned Bluestein (non-power-of-two) transforms match the naive DFT
+/// oracle to 1e-6.
+#[test]
+fn prop_planned_fft_matches_naive_bluestein() {
+    for_cases(20, |rng| {
+        let mut n = 3 + rng.next_bounded(60) as usize;
+        if n.is_power_of_two() {
+            n += 1; // 4,8,16,32 → 5,9,17,33: all non-pow2
+        }
+        let x: Vec<fft::Complex> = (0..n)
+            .map(|_| fft::Complex::new(rng.gaussian() as f64, rng.gaussian() as f64))
+            .collect();
+        let plan = fft::FftPlan::new(n);
+        let mut scratch = plan.make_scratch();
+        let mut planned = x.clone();
+        plan.forward(&mut planned, &mut scratch);
+        let oracle = fft::dft_naive(&x);
+        for (i, (p, r)) in planned.iter().zip(&oracle).enumerate() {
+            assert!(
+                (p.re - r.re).abs() < 1e-6 && (p.im - r.im).abs() < 1e-6,
+                "n={n} bin {i}: {p:?} vs {r:?}"
+            );
+        }
+    });
+}
+
+/// Planned rfft/irfft match the (plan-cached) free functions to 1e-6 and
+/// round-trip the signal, for power-of-two and Bluestein lengths alike.
+#[test]
+fn prop_planned_rfft_matches_free_functions() {
+    for_cases(30, |rng| {
+        let n = 2 + rng.next_bounded(80) as usize;
+        let x: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+        let plan = fft::RfftPlan::new(n);
+        let mut scratch = plan.make_scratch();
+        let mut spec = vec![fft::Complex::ZERO; plan.bins()];
+        plan.forward_into(&x, &mut spec, &mut scratch);
+        let free = fft::rfft(&x);
+        for (i, (p, r)) in spec.iter().zip(&free).enumerate() {
+            assert!(
+                (p.re - r.re).abs() < 1e-6 && (p.im - r.im).abs() < 1e-6,
+                "n={n} bin {i}"
+            );
+        }
+        let mut back = vec![0.0f32; n];
+        plan.inverse_into(&spec, &mut back, &mut scratch);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-4, "n={n}: {a} vs {b}");
+        }
+    });
+}
+
+// --------------------------------------------------------------- kernels
+
+/// The spectral and grouped kernels match the materialized-matrix oracle
+/// (`sumvec_naive` / `r_sum_grouped_naive`) for q ∈ {L1, L2} and block
+/// sizes b ∈ {1, 2, 4}.
+#[test]
+fn prop_kernels_match_naive_oracle() {
+    for_cases(15, |rng| {
+        let n = 2 + rng.next_bounded(8) as usize;
+        let d = 4 + rng.next_bounded(16) as usize;
+        let a = rand_tensor(rng, n, d);
+        let b = rand_tensor(rng, n, d);
+        let c = regularizer::cross_correlation(&a, &b, n as f32);
+        let mut fk = FftSumvecKernel::new(d);
+        fk.accumulate(&a, &b);
+        let sv = fk.sumvec(n as f32);
+        let sv_naive = regularizer::sumvec_naive(&c);
+        for (i, (x, y)) in sv.iter().zip(&sv_naive).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-3 * (1.0 + x.abs()),
+                "n={n} d={d} i={i}: {x} vs {y}"
+            );
+        }
+        for q in [Q::L1, Q::L2] {
+            let fast = fk.r_sum(n as f32, q);
+            let naive = regularizer::r_sum_from_sumvec(&sv_naive, q);
+            assert!(
+                (fast - naive).abs() < 1e-3 * (1.0 + naive.abs()),
+                "q={q:?}: {fast} vs {naive}"
+            );
+            for block in [1usize, 2, 4] {
+                let mut gk = GroupedFftKernel::new(d, block);
+                gk.accumulate(&a, &b);
+                let fast = gk.r_sum(n as f32, q);
+                let naive = regularizer::r_sum_grouped_naive(&c, block, q);
+                assert!(
+                    (fast - naive).abs() < 1e-3 * (1.0 + naive.abs()),
+                    "block={block} q={q:?}: {fast} vs {naive}"
+                );
+            }
+        }
+    });
+}
+
+/// Multi-threaded sample-chunk accumulation matches sequential
+/// accumulation for every kernel, at random shapes and thread counts.
+#[test]
+fn prop_threaded_accumulation_matches_sequential() {
+    for_cases(10, |rng| {
+        let n = 4 + rng.next_bounded(28) as usize;
+        let d = 4 + rng.next_bounded(24) as usize;
+        let threads = 2 + rng.next_bounded(5) as usize;
+        let a = rand_tensor(rng, n, d);
+        let b = rand_tensor(rng, n, d);
+        let mut seq = FftSumvecKernel::new(d);
+        let mut par = FftSumvecKernel::with_threads(d, threads);
+        seq.accumulate(&a, &b);
+        par.accumulate(&a, &b);
+        for (x, y) in seq.sumvec(n as f32).iter().zip(&par.sumvec(n as f32)) {
+            assert!((x - y).abs() < 1e-4 * (1.0 + x.abs()), "t={threads}: {x} vs {y}");
+        }
+        let mut nseq = NaiveMatrixKernel::new(d);
+        let mut npar = NaiveMatrixKernel::with_threads(d, threads);
+        nseq.accumulate(&a, &b);
+        npar.accumulate(&a, &b);
+        let (x, y) = (nseq.r_off(n as f32).unwrap(), npar.r_off(n as f32).unwrap());
+        assert!((x - y).abs() < 1e-4 * (1.0 + x.abs()));
+        let mut gseq = GroupedFftKernel::new(d, 4);
+        let mut gpar = GroupedFftKernel::with_threads(d, 4, threads);
+        gseq.accumulate(&a, &b);
+        gpar.accumulate(&a, &b);
+        let (x, y) = (gseq.r_sum(n as f32, Q::L2), gpar.r_sum(n as f32, Q::L2));
+        assert!((x - y).abs() < 1e-4 * (1.0 + x.abs()));
     });
 }
 
