@@ -15,7 +15,7 @@ use decorr::bench_harness::{bench_for, loss_node_bytes, LossWorkload, Table};
 use decorr::config::{TrainConfig, Variant};
 use decorr::regularizer::kernel::{DecorrelationKernel, GroupedFftKernel, NaiveMatrixKernel};
 use decorr::regularizer::Q;
-use decorr::runtime::Engine;
+use decorr::runtime::Session;
 use decorr::util::cli::Args;
 use decorr::util::rng::Rng;
 use decorr::util::tensor::Tensor;
@@ -68,12 +68,12 @@ fn main() -> Result<()> {
     println!("\nhost DecorrelationKernel sweep (d={hd}, n={hn}, no artifacts needed):");
     host.print();
 
-    let engine = Engine::cpu("artifacts")?;
+    let session = Session::open("artifacts")?;
     let mut table = Table::new(&["b", "fwd (ms)", "fwd+bwd (ms)", "loss-node MB"]);
     let mut add = |label: String, variant: String| -> Result<()> {
-        let fwd = LossWorkload::load(&engine, &variant, d, n, false)?;
+        let fwd = LossWorkload::load(&session, &variant, d, n, false)?;
         let f = bench_for(budget, 2, || fwd.run().unwrap());
-        let bwd = LossWorkload::load(&engine, &variant, d, n, true)?;
+        let bwd = LossWorkload::load(&session, &variant, d, n, true)?;
         let b = bench_for(budget, 2, || bwd.run().unwrap());
         table.row(vec![
             label,
@@ -97,12 +97,14 @@ fn main() -> Result<()> {
     if with_accuracy {
         println!("\naccuracy panel (small preset, b = 128 vs no grouping):");
         let mut acc = Table::new(&["b", "top-1 (%)"]);
+        let mut eval_session = None;
         for (label, variant) in [("128", Variant::BtSumG128), ("d (no grouping)", Variant::BtSum)]
         {
             let mut cfg = TrainConfig::preset_small();
             cfg.variant = variant;
-            let out = pretrain_and_eval(cfg, 1536, 512, 150)?;
+            let out = pretrain_and_eval(cfg, 1536, 512, 150, eval_session)?;
             acc.row(vec![label.to_string(), format!("{:.2}", out.top1)]);
+            eval_session = Some(out.session);
         }
         acc.print();
     }

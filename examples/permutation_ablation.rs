@@ -17,7 +17,6 @@ use decorr::bench_harness::Table;
 use decorr::config::{TrainConfig, Variant};
 use decorr::coordinator::project_views;
 use decorr::regularizer::kernel::{normalized_residual, ResidualFamily};
-use decorr::runtime::Engine;
 use decorr::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -41,13 +40,16 @@ fn main() -> Result<()> {
     let mut tab5 = Table::new(&["grouping", "permutation", "top-1 (%)", "s / 10 steps"]);
     let mut tab6 = Table::new(&["grouping", "permutation", "normalized residual"]);
 
+    // One session threaded through the whole ablation: the eval and
+    // projection artifacts compile once for all four runs.
+    let mut session = None;
     for (variant, grouping) in [(flat, "no"), (grouped, "b=128")] {
         for permute in [false, true] {
             let mut cfg = cfg0.clone();
             cfg.variant = variant;
             cfg.permute = permute;
             println!("== {} permutation={} ==", display_name(variant), permute);
-            let out = pretrain_and_eval(cfg.clone(), train_samples, test_samples, 150)?;
+            let out = pretrain_and_eval(cfg.clone(), train_samples, test_samples, 150, session)?;
             let s_per_10 =
                 out.train_secs / (cfg.total_steps() as f64) * 10.0;
             tab5.row(vec![
@@ -59,10 +61,10 @@ fn main() -> Result<()> {
 
             // Table-6 residual on freshly projected twin views, through
             // the DecorrelationKernel trait.
-            let engine = Engine::cpu(&cfg.artifact_dir)?;
             let (za, zb) =
-                project_views(&engine, &cfg.preset, &out.snapshot, out.adapter, cfg.seed, 4)?;
+                project_views(&out.session, &cfg.preset, &out.snapshot, out.adapter, cfg.seed, 4)?;
             let residual = normalized_residual(residual_family, &za, &zb);
+            session = Some(out.session);
             tab6.row(vec![
                 grouping.to_string(),
                 if permute { "yes" } else { "no" }.to_string(),

@@ -1,6 +1,8 @@
 //! Quickstart: the five-minute tour of the decorr public API.
 //!
-//! 1. Start the PJRT engine and load an AOT loss artifact.
+//! 1. Open a runtime `Session` (the process-wide artifact cache over the
+//!    PJRT engine) and load an AOT loss artifact — loading it again is a
+//!    cache hit, not a second O(seconds) compile.
 //! 2. Compute the proposed FFT regularizer on-device and validate it
 //!    against the pure-rust host implementation (paper Eq. 12), then
 //!    against the planned `DecorrelationKernel` host path.
@@ -15,20 +17,29 @@ use decorr::coordinator::trainer::{literal_f32, literal_i32, scalar};
 use decorr::coordinator::Trainer;
 use decorr::regularizer::kernel::{DecorrelationKernel, FftSumvecKernel};
 use decorr::regularizer::{self, Q};
-use decorr::runtime::Engine;
+use decorr::runtime::Session;
 use decorr::util::rng::Rng;
 use decorr::util::tensor::Tensor;
 
 fn main() -> Result<()> {
-    // --- 1. Engine + artifact -------------------------------------------
-    let engine = Engine::cpu("artifacts")?;
-    println!("engine: platform={}", engine.platform());
-    let loss = engine.load_artifact("loss_bt_sum_d256_n128")?;
+    // --- 1. Session + artifact ------------------------------------------
+    let session = Session::open("artifacts")?;
+    println!("engine: platform={}", session.engine().platform());
+    let loss = session.load("loss_bt_sum_d256_n128")?;
     println!(
         "loaded '{}': {} inputs, {} outputs",
         loss.manifest().name,
         loss.manifest().inputs.len(),
         loss.manifest().outputs.len()
+    );
+    // A second load of the same shape is a cache hit on the same
+    // executable — the device-side analogue of reusing an FftPlan.
+    let again = session.load("loss_bt_sum_d256_n128")?;
+    assert!(std::sync::Arc::ptr_eq(&loss, &again));
+    let stats = session.stats();
+    println!(
+        "session: {} loads, {} compiles ({:.0} ms compiling), {} hits",
+        stats.loads, stats.compiles, stats.compile_ms, stats.hits
     );
 
     // --- 2. Device loss vs host reference -------------------------------

@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 use decorr::bench_harness::{bench_for, loss_node_bytes, LossWorkload, Table};
-use decorr::runtime::Engine;
+use decorr::runtime::Session;
 use decorr::util::cli::Args;
 use std::io::Write;
 
@@ -23,7 +23,7 @@ fn main() -> Result<()> {
     args.finish()?;
 
     let variants = ["bt_off", "bt_sum", "bt_sum_g128", "vic_off", "vic_sum"];
-    let engine = Engine::cpu("artifacts")?;
+    let session = Session::open("artifacts")?;
     std::fs::create_dir_all(std::path::Path::new(&csv_path).parent().unwrap())?;
     let mut csv = std::fs::File::create(&csv_path)?;
     writeln!(csv, "variant,d,fwd_ms,fwdbwd_ms,loss_node_mb")?;
@@ -31,9 +31,9 @@ fn main() -> Result<()> {
     let mut table = Table::new(&["variant", "d", "fwd (ms)", "fwd+bwd (ms)", "loss-node MB"]);
     for v in &variants {
         for &d in &dims {
-            let fwd = LossWorkload::load(&engine, v, d, n, false)?;
+            let fwd = LossWorkload::load(&session, v, d, n, false)?;
             let f = bench_for(budget, 2, || fwd.run().unwrap());
-            let bwd = LossWorkload::load(&engine, v, d, n, true)?;
+            let bwd = LossWorkload::load(&session, v, d, n, true)?;
             let b = bench_for(budget, 2, || bwd.run().unwrap());
             let mb = loss_node_bytes(v, n, d) as f64 / 1e6;
             writeln!(
@@ -58,7 +58,7 @@ fn main() -> Result<()> {
     // Speedup summary at the largest d (the paper's headline numbers).
     let d = *dims.last().unwrap();
     let t = |v: &str| -> Result<f64> {
-        let w = LossWorkload::load(&engine, v, d, n, false)?;
+        let w = LossWorkload::load(&session, v, d, n, false)?;
         Ok(bench_for(budget, 2, || w.run().unwrap()).median)
     };
     println!(

@@ -87,7 +87,7 @@ fn main() -> Result<()> {
         ..Default::default()
     });
     let eval = linear_eval(
-        trainer.engine(),
+        trainer.session(),
         &preset,
         &snapshot,
         &dataset,
@@ -115,7 +115,7 @@ fn main() -> Result<()> {
         ..Default::default()
     });
     let transfer = linear_eval(
-        trainer.engine(),
+        trainer.session(),
         &preset,
         &snapshot,
         &transfer_ds,

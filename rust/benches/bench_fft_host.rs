@@ -5,7 +5,7 @@
 //! of the paper's Eq. 12. Emits `BENCH_fft_host.json` for the perf
 //! trajectory.
 
-use decorr::bench_harness::{bench_for, table, Table};
+use decorr::bench_harness::{bench_for, smoke_budget, table, Table};
 use decorr::fft;
 use decorr::util::rng::Rng;
 
@@ -25,10 +25,10 @@ fn main() {
         let x: Vec<fft::Complex> = (0..n)
             .map(|_| fft::Complex::new(rng.gaussian() as f64, 0.0))
             .collect();
-        let t_fft = bench_for(0.3, 2, || fft::fft(&x)).median;
+        let t_fft = bench_for(smoke_budget(0.3), 2, || fft::fft(&x)).median;
         // Cap the naive DFT input so the bench stays quick.
         let t_dft = if n <= 1024 {
-            bench_for(0.3, 1, || fft::dft_naive(&x)).median
+            bench_for(smoke_budget(0.3), 1, || fft::dft_naive(&x)).median
         } else {
             f64::NAN
         };
@@ -55,7 +55,7 @@ fn main() {
         let mut rng = Rng::new(d as u64);
         let a: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
         let b: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
-        let t = bench_for(0.3, 2, || fft::circular_correlate(&a, &b)).median;
+        let t = bench_for(smoke_budget(0.3), 2, || fft::circular_correlate(&a, &b)).median;
         corr.row(vec![format!("{d}"), format!("{:.1}", t * 1e6)]);
     }
     println!();
@@ -81,7 +81,7 @@ fn main() {
             .collect();
         let bins = d / 2 + 1;
 
-        let t_unplanned = bench_for(0.3, 1, || {
+        let t_unplanned = bench_for(smoke_budget(0.3), 1, || {
             let mut acc = vec![fft::Complex::ZERO; bins];
             for k in 0..rows {
                 let fa = rfft_unplanned(&a_rows[k]);
@@ -99,7 +99,7 @@ fn main() {
         let mut fa = vec![fft::Complex::ZERO; bins];
         let mut fb = vec![fft::Complex::ZERO; bins];
         let mut acc = vec![fft::Complex::ZERO; bins];
-        let t_planned = bench_for(0.3, 1, || {
+        let t_planned = bench_for(smoke_budget(0.3), 1, || {
             for v in acc.iter_mut() {
                 *v = fft::Complex::ZERO;
             }

@@ -6,12 +6,12 @@
 //! smaller but growing factor.
 
 use decorr::bench_harness::{bench_for, LossWorkload, Table};
-use decorr::runtime::Engine;
+use decorr::runtime::Session;
 
 fn main() {
     let n = 128;
     let dims = [512usize, 1024, 2048, 4096];
-    let engine = Engine::cpu("artifacts").expect("run `make artifacts` first");
+    let session = Session::open("artifacts").expect("run `make artifacts` first");
 
     let mut table = Table::new(&["family", "d", "fwd speedup", "fwd+bwd speedup"]);
     for (base, prop, family) in [
@@ -20,7 +20,7 @@ fn main() {
     ] {
         for &d in &dims {
             let t = |variant: &str, grad: bool| -> f64 {
-                let w = LossWorkload::load(&engine, variant, d, n, grad).unwrap();
+                let w = LossWorkload::load(&session, variant, d, n, grad).unwrap();
                 bench_for(0.4, 2, || w.run().unwrap()).median
             };
             let fwd = t(base, false) / t(prop, false);

@@ -3,17 +3,17 @@
 //! climbs when b becomes very small (the (d/b)² block count).
 
 use decorr::bench_harness::{bench_for, loss_node_bytes, LossWorkload, Table};
-use decorr::runtime::Engine;
+use decorr::runtime::Session;
 
 fn main() {
     let (d, n) = (2048usize, 128usize);
-    let engine = Engine::cpu("artifacts").expect("run `make artifacts` first");
+    let session = Session::open("artifacts").expect("run `make artifacts` first");
     let mut table = Table::new(&["b", "fwd (ms)", "fwd+bwd (ms)", "loss-node MB"]);
 
     let mut add = |label: String, variant: String| {
-        let fwd = LossWorkload::load(&engine, &variant, d, n, false).unwrap();
+        let fwd = LossWorkload::load(&session, &variant, d, n, false).unwrap();
         let f = bench_for(0.5, 2, || fwd.run().unwrap());
-        let bwd = LossWorkload::load(&engine, &variant, d, n, true).unwrap();
+        let bwd = LossWorkload::load(&session, &variant, d, n, true).unwrap();
         let b = bench_for(0.5, 2, || bwd.run().unwrap());
         table.row(vec![
             label,

@@ -13,12 +13,12 @@
 
 use decorr::bench_harness::{bench_for, Table};
 use decorr::coordinator::trainer::{literal_f32, literal_i32, scalar};
-use decorr::runtime::Engine;
+use decorr::runtime::Session;
 use decorr::util::rng::Rng;
 use decorr::util::tensor::Tensor;
 
 fn main() {
-    let engine = Engine::cpu("artifacts").expect("run `make artifacts` first");
+    let session = Session::open("artifacts").expect("run `make artifacts` first");
     let (n, d) = (128usize, 512usize);
     let mut rng = Rng::new(99);
     let za = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
@@ -38,11 +38,11 @@ fn main() {
         "|Δloss|",
     ]);
     for variant in ["bt_off", "bt_sum", "bt_sum_g128", "vic_sum"] {
-        let native = engine
-            .load_artifact(&format!("loss_{variant}_d{d}_n{n}"))
+        let native = session
+            .load(&format!("loss_{variant}_d{d}_n{n}"))
             .unwrap();
-        let pallas = engine
-            .load_artifact(&format!("loss_pl_{variant}_d{d}_n{n}"))
+        let pallas = session
+            .load(&format!("loss_pl_{variant}_d{d}_n{n}"))
             .unwrap();
         let v_native = scalar(&native.execute_literals(&inputs).unwrap()[0]).unwrap();
         let v_pallas = scalar(&pallas.execute_literals(&inputs).unwrap()[0]).unwrap();

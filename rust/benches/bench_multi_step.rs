@@ -9,12 +9,12 @@
 use decorr::bench_harness::{bench, Table};
 use decorr::coordinator::trainer::{literal_f32, literal_i32};
 use decorr::coordinator::Checkpoint;
-use decorr::runtime::{Engine, ParamStore};
+use decorr::runtime::{ParamStore, Session};
 use decorr::util::rng::Rng;
 use decorr::util::tensor::Tensor;
 
 fn main() {
-    let engine = Engine::cpu("artifacts").expect("run `make artifacts` first");
+    let session = Session::open("artifacts").expect("run `make artifacts` first");
     let ckpt = Checkpoint::load("artifacts/init_tiny.ckpt").unwrap();
     let mut rng = Rng::new(42);
     let (n, f, d) = (32usize, 64usize, 256usize);
@@ -24,7 +24,7 @@ fn main() {
 
     // --- single-step artifact ------------------------------------------
     {
-        let art = engine.load_artifact("train_bt_sum_tiny").unwrap();
+        let art = session.load("train_bt_sum_tiny").unwrap();
         let manifest = art.manifest().clone();
         let params =
             ParamStore::from_checkpoint(&ckpt, &manifest.inputs_with_prefix("params.")).unwrap();
@@ -64,8 +64,8 @@ fn main() {
 
     // --- scan-fused multi-step artifacts --------------------------------
     for k in [4usize, 16] {
-        let art = engine
-            .load_artifact(&format!("trainmulti_bt_sum_tiny_k{k}"))
+        let art = session
+            .load(&format!("trainmulti_bt_sum_tiny_k{k}"))
             .unwrap();
         let manifest = art.manifest().clone();
         let params =

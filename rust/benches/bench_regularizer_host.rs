@@ -5,7 +5,7 @@
 //! plus empirical scaling exponents. Emits `BENCH_regularizer_host.json`
 //! for the perf trajectory.
 
-use decorr::bench_harness::{bench_for, table, Contender, Table};
+use decorr::bench_harness::{bench_for, smoke_budget, table, Contender, Table};
 use decorr::regularizer::kernel::default_threads;
 use decorr::regularizer::Q;
 use decorr::util::rng::Rng;
@@ -42,7 +42,7 @@ fn main() {
         let mut t_off = f64::NAN;
         let mut t_fft = f64::NAN;
         for (i, c) in contenders.iter_mut().enumerate() {
-            let t = bench_for(0.4, 1, || c.run(&a, &b, n as f32)).median;
+            let t = bench_for(smoke_budget(0.4), 1, || c.run(&a, &b, n as f32)).median;
             if i == 0 {
                 t_off = t;
             } else if i == 1 {

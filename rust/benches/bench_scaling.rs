@@ -6,20 +6,20 @@
 //! the speedup factor widens with d; memory gap > 2× at large d.
 
 use decorr::bench_harness::{bench_for, loss_node_bytes, LossWorkload, Table};
-use decorr::runtime::Engine;
+use decorr::runtime::Session;
 
 fn main() {
     let n = 128;
     let dims = [256usize, 512, 1024, 2048, 4096];
     let variants = ["bt_off", "bt_sum", "bt_sum_g128", "vic_off", "vic_sum"];
-    let engine = Engine::cpu("artifacts").expect("run `make artifacts` first");
+    let session = Session::open("artifacts").expect("run `make artifacts` first");
 
     let mut table = Table::new(&["variant", "d", "fwd (ms)", "fwd+bwd (ms)", "loss-node MB"]);
     for v in &variants {
         for &d in &dims {
-            let fwd = LossWorkload::load(&engine, v, d, n, false).unwrap();
+            let fwd = LossWorkload::load(&session, v, d, n, false).unwrap();
             let f = bench_for(0.5, 2, || fwd.run().unwrap());
-            let bwd = LossWorkload::load(&engine, v, d, n, true).unwrap();
+            let bwd = LossWorkload::load(&session, v, d, n, true).unwrap();
             let b = bench_for(0.5, 2, || bwd.run().unwrap());
             table.row(vec![
                 v.to_string(),
@@ -37,7 +37,7 @@ fn main() {
     for v in &variants {
         let mut pts = Vec::new();
         for &d in &dims[1..] {
-            let w = LossWorkload::load(&engine, v, d, n, false).unwrap();
+            let w = LossWorkload::load(&session, v, d, n, false).unwrap();
             let s = bench_for(0.3, 1, || w.run().unwrap());
             pts.push(((d as f64).ln(), s.median.ln()));
         }

@@ -1,0 +1,41 @@
+//! Session compile-cache bench: cold `Session::load` (file read + manifest
+//! parse + content hash + PJRT compile) vs the cached reload of the same
+//! content key, over synthetic FFT-free HLO artifacts generated on the fly
+//! — no `make artifacts` required, only a working PJRT client. Also loads
+//! a byte-identical alias under a different name to show the content
+//! addressing dedupe. Emits `BENCH_session_compile.json` for the perf
+//! trajectory (ROADMAP "device-side plan reuse").
+
+use decorr::bench_harness::{session_compile_bench, smoke_budget, table};
+
+fn main() {
+    let outcome = match session_compile_bench(smoke_budget(0.2)) {
+        Ok(o) => o,
+        Err(e) => {
+            // No PJRT client (or no writable temp dir) — report and bow
+            // out without failing the bench run.
+            eprintln!("skipping bench_session_compile: {e:#}");
+            return;
+        }
+    };
+    println!("\n[bench_session_compile] cached vs cold artifact loads:");
+    outcome.compile_table.print();
+    println!("\nsession stats:");
+    outcome.stats_table.print();
+    println!(
+        "min cached-reload speedup: {:.0}x (acceptance target >= 100x)",
+        outcome.min_speedup
+    );
+
+    if let Err(e) = table::write_json(
+        "BENCH_session_compile.json",
+        &[
+            ("session_compile", &outcome.compile_table),
+            ("session_stats", &outcome.stats_table),
+        ],
+    ) {
+        eprintln!("could not write BENCH_session_compile.json: {e}");
+    } else {
+        println!("\nwrote BENCH_session_compile.json");
+    }
+}

@@ -10,6 +10,9 @@ pub mod table;
 pub mod workload;
 
 pub use contenders::Contender;
-pub use stats::{bench, bench_for, BenchStats};
+pub use stats::{bench, bench_for, smoke_budget, smoke_mode, BenchStats};
 pub use table::Table;
-pub use workload::{loss_node_bytes, LossWorkload};
+pub use workload::{
+    loss_node_bytes, session_compile_bench, session_stats_table, LossWorkload,
+    SessionBenchOutcome, SynthArtifacts,
+};

@@ -47,6 +47,23 @@ impl BenchStats {
     }
 }
 
+/// True when `DECORR_BENCH_SMOKE` is set: CI runs the benches in smoke
+/// mode — tiny budgets, same tables — so the `BENCH_*.json` perf
+/// trajectory accumulates on every push without burning minutes.
+pub fn smoke_mode() -> bool {
+    std::env::var_os("DECORR_BENCH_SMOKE").is_some()
+}
+
+/// `default` seconds normally; clamped to a small smoke budget when
+/// [`smoke_mode`] is active.
+pub fn smoke_budget(default: f64) -> f64 {
+    if smoke_mode() {
+        default.min(0.05)
+    } else {
+        default
+    }
+}
+
 /// Time `f` with `warmup` unmeasured runs followed by `iters` measured ones.
 pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
     for _ in 0..warmup {

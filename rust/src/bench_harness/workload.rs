@@ -1,18 +1,26 @@
-//! Benchmark workloads: loss-artifact runners and the loss-node memory
-//! model used by the Fig. 2 analogue.
+//! Benchmark workloads: loss-artifact runners, the loss-node memory
+//! model used by the Fig. 2 analogue, and the session compile-cache
+//! contender (cached vs cold artifact loads over synthetic HLO).
 
-use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
 
 use crate::coordinator::trainer::{literal_f32, literal_i32, scalar};
-use crate::runtime::{Artifact, Engine};
+use crate::runtime::{artifact_paths, Artifact, Session, SessionStats};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
+
+use super::stats::bench_for;
+use super::table::Table;
 
 /// A compiled loss-only (or loss+grad) artifact with pre-built inputs —
 /// timing it measures exactly the loss node, like the paper's
 /// "Forward (loss)" / "Backward" columns (Tabs. 12–13, Fig. 2).
 pub struct LossWorkload {
-    artifact: Artifact,
+    artifact: Arc<Artifact>,
     za: xla::Literal,
     zb: xla::Literal,
     perm: xla::Literal,
@@ -23,10 +31,12 @@ pub struct LossWorkload {
 }
 
 impl LossWorkload {
-    /// Load `loss_<variant>_d<d>_n<n>` (or `lossgrad_...` when `grad`).
-    pub fn load(engine: &Engine, variant: &str, d: usize, n: usize, grad: bool) -> Result<LossWorkload> {
+    /// Load `loss_<variant>_d<d>_n<n>` (or `lossgrad_...` when `grad`)
+    /// through the session cache — repeated shapes across sweep rows
+    /// compile once.
+    pub fn load(session: &Session, variant: &str, d: usize, n: usize, grad: bool) -> Result<LossWorkload> {
         let kind = if grad { "lossgrad" } else { "loss" };
-        let artifact = engine.load_artifact(&format!("{kind}_{variant}_d{d}_n{n}"))?;
+        let artifact = session.load(&format!("{kind}_{variant}_d{d}_n{n}"))?;
         let mut rng = Rng::new(0xBE7C4 ^ d as u64);
         let za = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
         let zb = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
@@ -73,6 +83,222 @@ pub fn loss_node_bytes(variant: &str, n: usize, d: usize) -> usize {
         base + 4 * n * f + d
     };
     elems * 4
+}
+
+// ------------------------------------------------- session compile bench
+
+/// A directory of synthetic (FFT-free) HLO artifacts for exercising the
+/// session compile cache without `make artifacts`: each shape gets a tiny
+/// elementwise module `<name>.hlo.txt` plus a matching manifest. Used by
+/// the `decorr session-bench` contender and the session cache tests.
+/// The directory is removed on drop (best effort).
+pub struct SynthArtifacts {
+    /// Directory holding the generated artifact files.
+    pub dir: PathBuf,
+    /// Generated artifact names, one per requested shape.
+    pub names: Vec<String>,
+}
+
+impl SynthArtifacts {
+    /// Generate one artifact per `(n, d)` shape under a fresh temp dir.
+    /// `tag` keeps concurrent callers (tests) from colliding.
+    pub fn generate(tag: &str, shapes: &[(usize, usize)]) -> Result<SynthArtifacts> {
+        let dir = std::env::temp_dir().join(format!(
+            "decorr_synth_{}_{}",
+            tag,
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let mut synth = SynthArtifacts {
+            dir,
+            names: Vec::new(),
+        };
+        for &(n, d) in shapes {
+            let name = format!("synth_d{d}_n{n}");
+            synth.write(&name, n, d, "out")?;
+            synth.names.push(name);
+        }
+        Ok(synth)
+    }
+
+    /// Write one artifact: a small elementwise HLO chain over two
+    /// `f32[n,d]` inputs, lowered in the runtime's `return_tuple` shape,
+    /// plus its manifest with the output named `out_name`. Note the HLO
+    /// text embeds `name` in its module header — to vary *only* the
+    /// manifest io-signature, use [`Self::variant_manifest`].
+    pub fn write(&self, name: &str, n: usize, d: usize, out_name: &str) -> Result<()> {
+        let shape = format!("f32[{n},{d}]");
+        let hlo = format!(
+            "HloModule {name}\n\n\
+             ENTRY main {{\n  \
+             p0 = {shape} parameter(0)\n  \
+             p1 = {shape} parameter(1)\n  \
+             v0 = {shape} add(p0, p1)\n  \
+             v1 = {shape} multiply(v0, p0)\n  \
+             v2 = {shape} add(v1, p1)\n  \
+             v3 = {shape} multiply(v2, v0)\n  \
+             ROOT result = ({shape}) tuple(v3)\n\
+             }}\n"
+        );
+        let manifest = format!(
+            r#"{{"name":"{name}","inputs":[{{"name":"xa","shape":[{n},{d}],"dtype":"f32"}},{{"name":"xb","shape":[{n},{d}],"dtype":"f32"}}],"outputs":[{{"name":"{out_name}","shape":[{n},{d}],"dtype":"f32"}}],"meta":{{"synthetic":true,"d":{d},"n":{n}}}}}"#
+        );
+        let (hlo_path, manifest_path) = artifact_paths(&self.dir, name);
+        std::fs::write(&hlo_path, hlo)
+            .with_context(|| format!("writing {}", hlo_path.display()))?;
+        std::fs::write(&manifest_path, manifest)
+            .with_context(|| format!("writing {}", manifest_path.display()))?;
+        Ok(())
+    }
+
+    /// New name over a byte-identical copy of `existing`'s HLO, paired
+    /// with a manifest whose output is renamed to `out_name`: the HLO
+    /// text is unchanged but the io-signature differs, so the session's
+    /// content addressing must treat it as a distinct executable. The
+    /// cache tests use this to pin the signature's participation in the
+    /// content key.
+    pub fn variant_manifest(
+        &self,
+        existing: &str,
+        new_name: &str,
+        n: usize,
+        d: usize,
+        out_name: &str,
+    ) -> Result<()> {
+        let (src_hlo, _) = artifact_paths(&self.dir, existing);
+        let (dst_hlo, dst_manifest) = artifact_paths(&self.dir, new_name);
+        std::fs::copy(&src_hlo, &dst_hlo)
+            .with_context(|| format!("copying {}", src_hlo.display()))?;
+        let manifest = format!(
+            r#"{{"name":"{new_name}","inputs":[{{"name":"xa","shape":[{n},{d}],"dtype":"f32"}},{{"name":"xb","shape":[{n},{d}],"dtype":"f32"}}],"outputs":[{{"name":"{out_name}","shape":[{n},{d}],"dtype":"f32"}}],"meta":{{"synthetic":true,"d":{d},"n":{n}}}}}"#
+        );
+        std::fs::write(&dst_manifest, manifest)
+            .with_context(|| format!("writing {}", dst_manifest.display()))?;
+        Ok(())
+    }
+
+    /// Copy an existing artifact's files under a new name — byte-identical
+    /// HLO and manifest, so the session's content addressing must dedupe it.
+    pub fn alias(&self, existing: &str, alias: &str) -> Result<()> {
+        let (src_hlo, src_manifest) = artifact_paths(&self.dir, existing);
+        let (dst_hlo, dst_manifest) = artifact_paths(&self.dir, alias);
+        std::fs::copy(&src_hlo, &dst_hlo)
+            .with_context(|| format!("aliasing {}", src_hlo.display()))?;
+        std::fs::copy(&src_manifest, &dst_manifest)
+            .with_context(|| format!("aliasing {}", src_manifest.display()))?;
+        Ok(())
+    }
+
+    /// Smoke-execute an artifact from this set (ones in, sums out) to show
+    /// the synthetic modules really run on the PJRT client.
+    pub fn smoke(artifact: &Artifact) -> Result<f32> {
+        let manifest = artifact.manifest();
+        let (n, d) = (
+            manifest.inputs[0].shape[0],
+            manifest.inputs[0].shape[1],
+        );
+        let ones = Tensor::from_vec(&[n, d], vec![1.0; n * d]);
+        let lit = literal_f32(&ones)?;
+        let out = artifact.execute_literals_ref(&[&lit, &lit])?;
+        scalar(&out[0])
+    }
+}
+
+impl Drop for SynthArtifacts {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Result of [`session_compile_bench`].
+pub struct SessionBenchOutcome {
+    /// Per-shape cold-compile vs cached-reload timings.
+    pub compile_table: Table,
+    /// Session counters after the run (compiles, hits, source reads, ...).
+    pub stats_table: Table,
+    /// Smallest cached-reload speedup across the shapes.
+    pub min_speedup: f64,
+}
+
+/// The cached-vs-cold compile contender: generates synthetic artifacts,
+/// measures the first `Session::load` of each shape (file read + manifest
+/// parse + content hash + PJRT compile) against the cached reload, and
+/// loads a byte-identical alias of the first shape to demonstrate content
+/// addressing (a hit, not a compile).
+pub fn session_compile_bench(budget: f64) -> Result<SessionBenchOutcome> {
+    let shapes = [(8usize, 64usize), (8, 128), (8, 256)];
+    let synth = SynthArtifacts::generate("bench", &shapes)?;
+    let alias_of = synth.names[0].clone();
+    let alias = format!("{alias_of}_alias");
+    synth.alias(&alias_of, &alias)?;
+
+    let session = Session::open(&synth.dir)?;
+    let mut table = Table::new(&[
+        "artifact",
+        "cold load (ms)",
+        "cached reload (us)",
+        "speedup",
+    ]);
+    let mut min_speedup = f64::INFINITY;
+    for name in &synth.names {
+        let t0 = Instant::now();
+        let artifact = session.load(name)?;
+        let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+        SynthArtifacts::smoke(&artifact)?;
+        let cached = bench_for(budget, 1, || session.load(name).unwrap());
+        let cached_us = cached.median * 1e6;
+        let speedup = cold_ms * 1e3 / cached_us.max(1e-3);
+        min_speedup = min_speedup.min(speedup);
+        table.row(vec![
+            name.clone(),
+            format!("{cold_ms:.2}"),
+            format!("{cached_us:.2}"),
+            format!("{speedup:.0}x"),
+        ]);
+    }
+    // Content addressing: identical bytes under a different name.
+    let compiles_before = session.stats().compiles;
+    let t0 = Instant::now();
+    let aliased = session.load(&alias)?;
+    let alias_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let deduped = session.stats().compiles == compiles_before
+        && Arc::ptr_eq(&aliased, &session.load(&alias_of)?);
+    table.row(vec![
+        format!("{alias} (alias)"),
+        format!("{alias_ms:.2}"),
+        "-".into(),
+        if deduped { "dedup hit" } else { "MISS" }.to_string(),
+    ]);
+
+    let stats_table = session_stats_table(&session.stats());
+    Ok(SessionBenchOutcome {
+        compile_table: table,
+        stats_table,
+        min_speedup,
+    })
+}
+
+/// Render session counters as a bench-harness table (the shape shared by
+/// the `session-bench` subcommand and `bench_session_compile`).
+pub fn session_stats_table(stats: &SessionStats) -> Table {
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(vec!["artifact loads".into(), format!("{}", stats.loads)]);
+    table.row(vec!["cache hits".into(), format!("{}", stats.hits)]);
+    table.row(vec!["compiles".into(), format!("{}", stats.compiles)]);
+    table.row(vec![
+        "total compile (ms)".into(),
+        format!("{:.2}", stats.compile_ms),
+    ]);
+    table.row(vec![
+        "source requests".into(),
+        format!("{}", stats.source_requests),
+    ]);
+    table.row(vec![
+        "source reads".into(),
+        format!("{}", stats.source_reads),
+    ]);
+    table
 }
 
 #[cfg(test)]

@@ -1,10 +1,14 @@
 //! Simulated distributed-data-parallel training (paper Appendix E.3).
 //!
-//! K worker threads each own a PJRT engine and a per-shard gradient
-//! executable (`grad_<variant>_<preset>_s<K>`); the leader broadcasts the
-//! current parameters, shards the twin-view batch, averages the returned
-//! gradients, and applies the optimizer step through the `apply_<preset>`
-//! artifact.
+//! K worker threads share one runtime [`SharedSession`] with the leader:
+//! the per-shard gradient artifact (`grad_<variant>_<preset>_s<K>`) is
+//! read, parsed, and content-hashed once for the whole process, and the
+//! leader probes its manifest without compiling anything. Each worker
+//! still compiles its own executable on its own engine — PJRT handles are
+//! thread-affine (see below) — and executes it through a per-worker
+//! `ExecutionBinding`. The leader broadcasts the current parameters,
+//! shards the twin-view batch, averages the returned gradients, and
+//! applies the optimizer step through the `apply_<preset>` artifact.
 //!
 //! This reproduces the *semantics* the paper leans on: the proposed
 //! regularizer is computed **per shard with no collective operations**
@@ -22,7 +26,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
 use crate::data::{AugmentConfig, BatchLoader, ShapeWorld, ShapeWorldConfig, SslBatch};
-use crate::runtime::{Engine, ParamStore, TensorSpec};
+use crate::runtime::{ExecutionBinding, ParamStore, Session, SharedSession, TensorSpec};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
@@ -60,9 +64,11 @@ pub struct DdpTrainer {
     pub cfg: TrainConfig,
     shards: usize,
     workers: Vec<Worker>,
-    apply: crate::runtime::Artifact,
+    session: Session,
+    apply_binding: ExecutionBinding,
     params: ParamStore,
     opt: ParamStore,
+    grads: ParamStore,
     param_specs: Vec<TensorSpec>,
     opt_specs: Vec<TensorSpec>,
     grad_names: Vec<String>,
@@ -80,13 +86,18 @@ impl DdpTrainer {
     pub fn new(cfg: TrainConfig, shards: usize) -> Result<DdpTrainer> {
         anyhow::ensure!(shards >= 1, "need at least one shard");
         let grad_name = format!("grad_{}_{}_s{}", cfg.variant.as_str(), cfg.preset, shards);
-        let engine = Engine::cpu(&cfg.artifact_dir)?;
-        let apply = engine
-            .load_artifact(&format!("apply_{}", cfg.preset))
+        let shared = SharedSession::open(&cfg.artifact_dir);
+        let session = shared.session()?;
+        let apply = session
+            .load(&format!("apply_{}", cfg.preset))
             .context("loading apply artifact")?;
+        let apply_binding =
+            ExecutionBinding::bind(apply, &["params.", "opt_state.", "grads."], &["lr"])?;
 
-        // Leader-side parameter/optimizer stores (from the apply manifest).
-        let manifest = apply.manifest().clone();
+        // Leader-side parameter/optimizer/gradient stores (from the apply
+        // manifest). The grad store holds each step's averaged gradients
+        // so the binding can borrow them like any other store literal.
+        let manifest = apply_binding.manifest().clone();
         let param_specs: Vec<TensorSpec> = manifest
             .inputs_with_prefix("params.")
             .into_iter()
@@ -97,40 +108,36 @@ impl DdpTrainer {
             .into_iter()
             .cloned()
             .collect();
-        let grad_names: Vec<String> = manifest
+        let grad_specs: Vec<TensorSpec> = manifest
             .inputs_with_prefix("grads.")
             .into_iter()
-            .map(|s| s.name.clone())
+            .cloned()
             .collect();
+        let grad_names: Vec<String> = grad_specs.iter().map(|s| s.name.clone()).collect();
         anyhow::ensure!(!grad_names.is_empty(), "apply artifact missing grads inputs");
 
         let init_path = format!("{}/init_{}.ckpt", cfg.artifact_dir, cfg.preset);
         let ckpt = Checkpoint::load(&init_path)?;
         let params = ParamStore::from_checkpoint(&ckpt, &param_specs.iter().collect::<Vec<_>>())?;
         let opt = ParamStore::zeros(&opt_specs.iter().collect::<Vec<_>>())?;
+        let grads = ParamStore::zeros(&grad_specs.iter().collect::<Vec<_>>())?;
 
-        // Probe one worker artifact's manifest on the leader to learn the
-        // shard batch size / input shape, then spawn the workers.
-        let probe = engine.load_artifact(&grad_name)?;
+        // Probe the worker artifact's manifest through the shared source
+        // cache — no compile on the leader, and the workers reuse the
+        // parsed source when they compile on their own threads.
+        let probe = shared.manifest(&grad_name)?;
         let x_idx = probe
-            .manifest()
             .input_index("xa")
             .context("grad manifest missing xa")?;
-        let shard_batch = probe.manifest().inputs[x_idx].shape[0];
-        let adapter = InputAdapter::for_shape(&probe.manifest().inputs[x_idx].shape[1..])?;
+        let shard_batch = probe.inputs[x_idx].shape[0];
+        let adapter = InputAdapter::for_shape(&probe.inputs[x_idx].shape[1..])?;
         let embed_dim = probe
-            .manifest()
             .meta_usize("d")
             .context("grad manifest missing meta.d")?;
-        drop(probe);
 
         let mut workers = Vec::with_capacity(shards);
         for wid in 0..shards {
-            workers.push(spawn_worker(
-                wid,
-                cfg.artifact_dir.clone(),
-                grad_name.clone(),
-            )?);
+            workers.push(spawn_worker(wid, shared.clone(), grad_name.clone())?);
         }
 
         let sched = LrSchedule::from_epochs(cfg.lr, cfg.warmup_epochs, cfg.epochs, cfg.steps_per_epoch);
@@ -146,9 +153,11 @@ impl DdpTrainer {
             cfg,
             shards,
             workers,
-            apply,
+            session,
+            apply_binding,
             params,
             opt,
+            grads,
             param_specs,
             opt_specs,
             grad_names,
@@ -257,48 +266,28 @@ impl DdpTrainer {
             bail!("non-finite loss at ddp step {}", self.global_step);
         }
 
-        // Apply the optimizer update on the leader.
-        let grad_lits: Vec<(String, xla::Literal)> = self
-            .grad_names
-            .iter()
-            .zip(&grads)
-            .map(|(name, (gname, t))| {
-                debug_assert_eq!(name.trim_start_matches("grads."), gname.trim_start_matches("grads."));
-                Ok((name.clone(), literal_f32(t)?))
-            })
-            .collect::<Result<_>>()?;
+        // Apply the optimizer update on the leader: refresh the grad store
+        // with this step's averages and run one binding step — the binding
+        // marshals params/opt/grads by precomputed slot index.
+        for (name, (gname, t)) in self.grad_names.iter().zip(&grads) {
+            debug_assert_eq!(
+                name.trim_start_matches("grads."),
+                gname.trim_start_matches("grads.")
+            );
+            self.grads.put(name, literal_f32(t)?)?;
+        }
         let lr_lit = xla::Literal::vec1(&[lr])
             .reshape(&[])
             .map_err(|e| anyhow::anyhow!("{e}"))?;
-        let manifest = self.apply.manifest().clone();
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(manifest.inputs.len());
-        for spec in &manifest.inputs {
-            if spec.name.starts_with("params.") {
-                inputs.push(self.params.get(&spec.name)?);
-            } else if spec.name.starts_with("opt_state.") {
-                inputs.push(self.opt.get(&spec.name)?);
-            } else if spec.name.starts_with("grads.") {
-                let (_, lit) = grad_lits
-                    .iter()
-                    .find(|(n, _)| n == &spec.name)
-                    .context("missing grad literal")?;
-                inputs.push(lit);
-            } else if spec.name == "lr" {
-                inputs.push(&lr_lit);
-            } else {
-                bail!("unexpected apply input '{}'", spec.name);
-            }
-        }
-        let outputs = self.apply.execute_literals_ref(&inputs)?;
-        for (spec, lit) in manifest.outputs.iter().zip(outputs) {
-            if spec.name.starts_with("params.") {
-                self.params.put(&spec.name, lit)?;
-            } else if spec.name.starts_with("opt_state.") {
-                self.opt.put(&spec.name, lit)?;
-            } else {
-                bail!("unexpected apply output '{}'", spec.name);
-            }
-        }
+        let emitted = self.apply_binding.step(
+            &mut [&mut self.params, &mut self.opt, &mut self.grads],
+            &[&lr_lit],
+        )?;
+        anyhow::ensure!(
+            emitted.is_empty(),
+            "apply artifact returned {} unexpected outputs",
+            emitted.len()
+        );
 
         let m = StepMetrics {
             step: self.global_step,
@@ -366,6 +355,11 @@ impl DdpTrainer {
         &self.metrics
     }
 
+    /// The leader's runtime session (the workers share its core).
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
     /// Optimizer-state specs (diagnostics).
     pub fn opt_specs(&self) -> &[TensorSpec] {
         &self.opt_specs
@@ -397,21 +391,32 @@ fn slice_rows(t: &Tensor, start: usize, count: usize) -> Tensor {
     )
 }
 
-fn spawn_worker(wid: usize, artifact_dir: String, grad_name: String) -> Result<Worker> {
+fn spawn_worker(wid: usize, shared: SharedSession, grad_name: String) -> Result<Worker> {
     let (job_tx, job_rx) = mpsc::channel::<ShardJob>();
     let (res_tx, res_rx) = mpsc::channel::<Result<ShardResult>>();
     let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
     let handle = std::thread::Builder::new()
         .name(format!("ddp-worker-{wid}"))
         .spawn(move || {
-            // Each worker owns its engine + executable (PJRT handles are
-            // not Send, so they must be created on the worker thread).
+            // Each worker holds its own session arm over the shared core:
+            // PJRT handles are not Send, so the engine + executable must be
+            // created on the worker thread, but the source read/parse/hash
+            // and the compile stats are shared with the leader.
             let setup = (|| -> Result<_> {
-                let engine = Engine::cpu(&artifact_dir)?;
-                let artifact = engine.load_artifact(&grad_name)?;
-                Ok((engine, artifact))
+                let session = shared.session()?;
+                let artifact = session.load(&grad_name)?;
+                let binding =
+                    ExecutionBinding::bind(artifact, &["params."], &["xa", "xb", "perm"])?;
+                let param_specs: Vec<TensorSpec> = binding
+                    .manifest()
+                    .inputs_with_prefix("params.")
+                    .into_iter()
+                    .cloned()
+                    .collect();
+                let params = ParamStore::zeros(&param_specs.iter().collect::<Vec<_>>())?;
+                Ok((session, binding, param_specs, params))
             })();
-            let (_engine, artifact) = match setup {
+            let (_session, binding, param_specs, mut params) = match setup {
                 Ok(v) => {
                     let _ = ready_tx.send(Ok(()));
                     v
@@ -421,49 +426,53 @@ fn spawn_worker(wid: usize, artifact_dir: String, grad_name: String) -> Result<W
                     return;
                 }
             };
-            let manifest = artifact.manifest().clone();
+            // Broadcast order is fixed across steps (the leader snapshots
+            // the same spec list every time); resolve name → broadcast
+            // index once, on the first job.
+            let mut broadcast_order: Option<Vec<usize>> = None;
+            let manifest = binding.manifest().clone();
             while let Ok(job) = job_rx.recv() {
                 let result = (|| -> Result<ShardResult> {
                     let xa_lit = literal_f32(&job.xa)?;
                     let xb_lit = literal_f32(&job.xb)?;
                     let perm_lit = literal_i32(&job.perm)?;
-                    let mut param_lits = Vec::new();
-                    for spec in manifest.inputs_with_prefix("params.") {
-                        let (_, t) = job
-                            .params
-                            .iter()
-                            .find(|(n, _)| n == &spec.name)
-                            .with_context(|| format!("broadcast missing {}", spec.name))?;
-                        param_lits.push(literal_f32(t)?);
-                    }
-                    let mut inputs: Vec<&xla::Literal> = Vec::new();
-                    let mut pi = 0;
-                    for spec in &manifest.inputs {
-                        if spec.name.starts_with("params.") {
-                            inputs.push(&param_lits[pi]);
-                            pi += 1;
-                        } else {
-                            match spec.name.as_str() {
-                                "xa" => inputs.push(&xa_lit),
-                                "xb" => inputs.push(&xb_lit),
-                                "perm" => inputs.push(&perm_lit),
-                                other => bail!("unexpected grad input '{other}'"),
-                            }
+                    if broadcast_order.is_none() {
+                        let mut order = Vec::with_capacity(param_specs.len());
+                        for spec in &param_specs {
+                            let idx = job
+                                .params
+                                .iter()
+                                .position(|(n, _)| n == &spec.name)
+                                .with_context(|| format!("broadcast missing {}", spec.name))?;
+                            order.push(idx);
                         }
+                        broadcast_order = Some(order);
                     }
-                    let outputs = artifact.execute_literals_ref(&inputs)?;
+                    let order = broadcast_order.as_ref().expect("resolved above");
+                    for (spec, &bi) in param_specs.iter().zip(order.iter()) {
+                        let (name, t) = &job.params[bi];
+                        anyhow::ensure!(
+                            name == &spec.name,
+                            "broadcast order changed: expected {}, got {name}",
+                            spec.name
+                        );
+                        params.put(&spec.name, literal_f32(t)?)?;
+                    }
+                    let emitted =
+                        binding.step(&mut [&mut params], &[&xa_lit, &xb_lit, &perm_lit])?;
                     let mut grads = Vec::new();
                     let mut loss = f32::NAN;
                     let mut inv = f32::NAN;
                     let mut reg = f32::NAN;
-                    for (spec, lit) in manifest.outputs.iter().zip(outputs) {
-                        if spec.name.starts_with("grads.") {
+                    for (emit, lit) in binding.emits().iter().zip(emitted) {
+                        if emit.name.starts_with("grads.") {
+                            let spec = &manifest.outputs[emit.output_index];
                             let data = lit
                                 .to_vec::<f32>()
                                 .map_err(|e| anyhow::anyhow!("{e}"))?;
-                            grads.push((spec.name.clone(), Tensor::from_vec(&spec.shape, data)));
+                            grads.push((emit.name.clone(), Tensor::from_vec(&spec.shape, data)));
                         } else {
-                            match spec.name.as_str() {
+                            match emit.name.as_str() {
                                 "loss" => loss = scalar(&lit)?,
                                 "inv" => inv = scalar(&lit)?,
                                 "reg" => reg = scalar(&lit)?,

@@ -7,11 +7,13 @@
 //! device round-trip). Features are standardized with statistics from the
 //! training split only.
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 
 use crate::data::synth::{ShapeWorld, ShapeWorldConfig};
 use crate::regularizer::kernel::{default_threads, DecorrelationKernel, NaiveMatrixKernel};
-use crate::runtime::{Artifact, Engine, ParamStore};
+use crate::runtime::{Artifact, ExecutionBinding, ParamStore, Session};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
@@ -19,19 +21,21 @@ use super::checkpoint::Checkpoint;
 use super::trainer::{literal_f32, InputAdapter};
 
 /// Collect projected embeddings of augmented twin views through the
-/// `project_<preset>` artifact. Shared by the Table-6 diagnostics
+/// `project_<preset>` artifact (cached in the shared session, so repeat
+/// diagnostics reuse one executable). Shared by the Table-6 diagnostics
 /// ([`super::Trainer::diagnose_embeddings`]), the `decorr table6`
 /// subcommand, and the permutation-ablation example.
 pub fn project_views(
-    engine: &Engine,
+    session: &Session,
     preset: &str,
     snapshot: &Checkpoint,
     adapter: InputAdapter,
     seed: u64,
     batches: usize,
 ) -> Result<(Tensor, Tensor)> {
-    let project = engine.load_artifact(&format!("project_{preset}"))?;
-    let manifest = project.manifest().clone();
+    let project = session.load(&format!("project_{preset}"))?;
+    let binding = ExecutionBinding::bind(project.clone(), &["params."], &["x"])?;
+    let manifest = binding.manifest();
     let store = ParamStore::from_checkpoint(snapshot, &manifest.inputs_with_prefix("params."))?;
     let x_idx = manifest.input_index("x").context("no x")?;
     let n = manifest.inputs[x_idx].shape[0];
@@ -50,15 +54,7 @@ pub fn project_views(
         for (view, out_t) in [(&batch.view_a, &mut za), (&batch.view_b, &mut zb)] {
             let x = adapter.apply(&view.images);
             let x_lit = literal_f32(&x)?;
-            let mut inputs: Vec<&xla::Literal> = Vec::new();
-            for spec in &manifest.inputs {
-                if spec.name == "x" {
-                    inputs.push(&x_lit);
-                } else {
-                    inputs.push(store.get(&spec.name)?);
-                }
-            }
-            let out = project.execute_literals_ref(&inputs)?;
+            let out = binding.execute(&[&store], &[&x_lit])?;
             let data = out[0]
                 .to_vec::<f32>()
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -71,14 +67,15 @@ pub fn project_views(
 /// Extract backbone features for `count` dataset samples (unaugmented),
 /// batched at the artifact's fixed batch size.
 pub fn extract_features(
-    embed: &Artifact,
+    embed: &Arc<Artifact>,
     params: &Checkpoint,
     dataset: &ShapeWorld,
     start: u64,
     count: usize,
     adapter: InputAdapter,
 ) -> Result<(Tensor, Vec<u32>)> {
-    let manifest = embed.manifest();
+    let binding = ExecutionBinding::bind(embed.clone(), &["params."], &["x"])?;
+    let manifest = binding.manifest();
     let param_specs = manifest.inputs_with_prefix("params.");
     let store = ParamStore::from_checkpoint(params, &param_specs)?;
     let x_idx = manifest.input_index("x").context("embed missing x")?;
@@ -95,15 +92,7 @@ pub fn extract_features(
         let stacked = crate::data::stack(&samples);
         let x = adapter.apply(&stacked.images);
         let x_lit = literal_f32(&x)?;
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(manifest.inputs.len());
-        for spec in &manifest.inputs {
-            if spec.name == "x" {
-                inputs.push(&x_lit);
-            } else {
-                inputs.push(store.get(&spec.name)?);
-            }
-        }
-        let out = embed.execute_literals_ref(&inputs)?;
+        let out = binding.execute(&[&store], &[&x_lit])?;
         let data = out[0]
             .to_vec::<f32>()
             .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -268,10 +257,12 @@ pub struct EvalResult {
 }
 
 /// Run the full protocol. `train_count`/`test_count` samples are drawn from
-/// disjoint index ranges of the (virtual) dataset.
+/// disjoint index ranges of the (virtual) dataset. The embed artifact
+/// comes from the session cache, so sweeps evaluating many checkpoints
+/// compile it once.
 #[allow(clippy::too_many_arguments)]
 pub fn linear_eval(
-    engine: &Engine,
+    session: &Session,
     preset: &str,
     params: &Checkpoint,
     dataset: &ShapeWorld,
@@ -280,7 +271,7 @@ pub fn linear_eval(
     test_count: usize,
     probe_epochs: usize,
 ) -> Result<EvalResult> {
-    let embed = engine.load_artifact(&format!("embed_{preset}"))?;
+    let embed = session.load(&format!("embed_{preset}"))?;
     let (train_x, train_y) =
         extract_features(&embed, params, dataset, 0, train_count, adapter)?;
     let (test_x, test_y) = extract_features(

@@ -2,17 +2,21 @@
 //! artifact.
 //!
 //! Per step: pull a prefetched twin-view batch, compute the scheduled LR,
-//! sample the §4.3 feature permutation, marshal inputs in manifest order,
-//! execute the PJRT executable, and absorb the returned parameter /
-//! optimizer-state literals back into the store. Python is never invoked.
+//! sample the §4.3 feature permutation, and run one `ExecutionBinding`
+//! step — the binding (resolved once at construction) marshals the
+//! store-resident parameter/optimizer literals plus the per-step streams
+//! in manifest order and absorbs the updated state back in place. The
+//! train executable itself comes out of the shared runtime `Session`
+//! cache. Python is never invoked.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
 use crate::data::{AugmentConfig, BatchLoader, ShapeWorld, ShapeWorldConfig, SslBatch};
-use crate::runtime::{Artifact, Engine, ParamStore, TensorSpec};
+use crate::runtime::{Artifact, ExecutionBinding, ParamStore, Session, TensorSpec};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
@@ -20,26 +24,8 @@ use super::checkpoint::Checkpoint;
 use super::metrics::{MetricsLogger, StepMetrics};
 use super::schedule::LrSchedule;
 
-/// Where each manifest input slot is sourced from on the hot path.
-#[derive(Clone, Debug)]
-enum Source {
-    Param(String),
-    Opt(String),
-    ViewA,
-    ViewB,
-    Perm,
-    Lr,
-}
-
-/// What each manifest output slot feeds back into.
-#[derive(Clone, Debug)]
-enum Sink {
-    Param(String),
-    Opt(String),
-    Loss,
-    Inv,
-    Reg,
-}
+/// Per-step stream inputs of a train artifact, in binding order.
+const TRAIN_STREAMS: [&str; 4] = ["xa", "xb", "perm", "lr"];
 
 /// Table-6-style decorrelation diagnostics of projected twin-view
 /// embeddings, computed on the host through the `DecorrelationKernel`
@@ -75,10 +61,11 @@ pub struct TrainReport {
 pub struct Trainer {
     /// Run configuration.
     pub cfg: TrainConfig,
-    engine: Engine,
-    artifact: Artifact,
-    sources: Vec<Source>,
-    sinks: Vec<Sink>,
+    session: Session,
+    binding: ExecutionBinding,
+    loss_slot: usize,
+    inv_slot: Option<usize>,
+    reg_slot: Option<usize>,
     params: ParamStore,
     opt: ParamStore,
     embed_dim: usize,
@@ -155,63 +142,55 @@ impl InputAdapter {
 }
 
 impl Trainer {
-    /// Build a trainer: PJRT engine, compiled train artifact, initial
+    /// Build a trainer: runtime session, compiled train artifact, initial
     /// parameters from `artifacts/init_<preset>.ckpt`, zero optimizer state.
     pub fn new(cfg: TrainConfig) -> Result<Trainer> {
-        let engine = Engine::cpu(&cfg.artifact_dir)?;
-        let artifact = engine
-            .load_artifact(&cfg.train_artifact())
-            .with_context(|| format!("loading train artifact {}", cfg.train_artifact()))?;
-        Self::with_engine_artifact(cfg, engine, artifact)
+        let session = Session::open(&cfg.artifact_dir)?;
+        Self::with_session(cfg, session)
     }
 
-    /// Variant used by tests/benches that already hold an engine+artifact.
-    pub fn with_engine_artifact(
+    /// Build over an existing session arm, so table sweeps and benches
+    /// share compiled eval/projection artifacts across trainers.
+    pub fn with_session(cfg: TrainConfig, session: Session) -> Result<Trainer> {
+        anyhow::ensure!(
+            session.artifact_dir() == std::path::Path::new(&cfg.artifact_dir),
+            "session loads from '{}' but config expects '{}'",
+            session.artifact_dir().display(),
+            cfg.artifact_dir
+        );
+        let artifact = session
+            .load(&cfg.train_artifact())
+            .with_context(|| format!("loading train artifact {}", cfg.train_artifact()))?;
+        Self::with_session_artifact(cfg, session, artifact)
+    }
+
+    /// Variant used by tests/benches that already hold a session+artifact.
+    pub fn with_session_artifact(
         cfg: TrainConfig,
-        engine: Engine,
-        artifact: Artifact,
+        session: Session,
+        artifact: Arc<Artifact>,
     ) -> Result<Trainer> {
         let manifest = artifact.manifest().clone();
-        let mut sources = Vec::with_capacity(manifest.inputs.len());
-        let mut xa_spec: Option<&TensorSpec> = None;
-        for spec in &manifest.inputs {
-            let src = if let Some(rest) = spec.name.strip_prefix("params.") {
-                Source::Param(format!("params.{rest}"))
-            } else if let Some(rest) = spec.name.strip_prefix("opt_state.") {
-                Source::Opt(format!("opt_state.{rest}"))
-            } else {
-                match spec.name.as_str() {
-                    "xa" => {
-                        xa_spec = Some(spec);
-                        Source::ViewA
-                    }
-                    "xb" => Source::ViewB,
-                    "perm" => Source::Perm,
-                    "lr" => Source::Lr,
-                    other => bail!("unrecognized train input '{other}'"),
-                }
-            };
-            sources.push(src);
+        let binding =
+            ExecutionBinding::bind(artifact, &["params.", "opt_state."], &TRAIN_STREAMS)?;
+        // Every emitted (non-store) output must be a known scalar: a
+        // misnamed state output (e.g. "opt_stat.m") would otherwise be
+        // silently discarded and train against stale optimizer state.
+        for emit in binding.emits() {
+            anyhow::ensure!(
+                matches!(emit.name.as_str(), "loss" | "inv" | "reg"),
+                "unrecognized train output '{}'",
+                emit.name
+            );
         }
-        let xa_spec = xa_spec.context("train manifest missing 'xa'")?;
-        let input_adapt = InputAdapter::for_shape(&xa_spec.shape[1..])?;
+        let loss_slot = binding.emit_slot("loss")?;
+        let inv_slot = binding.emit_slot("inv").ok();
+        let reg_slot = binding.emit_slot("reg").ok();
 
-        let mut sinks = Vec::with_capacity(manifest.outputs.len());
-        for spec in &manifest.outputs {
-            let sink = if spec.name.starts_with("params.") {
-                Sink::Param(spec.name.clone())
-            } else if spec.name.starts_with("opt_state.") {
-                Sink::Opt(spec.name.clone())
-            } else {
-                match spec.name.as_str() {
-                    "loss" => Sink::Loss,
-                    "inv" => Sink::Inv,
-                    "reg" => Sink::Reg,
-                    other => bail!("unrecognized train output '{other}'"),
-                }
-            };
-            sinks.push(sink);
-        }
+        let xa_idx = manifest
+            .input_index("xa")
+            .context("train manifest missing 'xa'")?;
+        let input_adapt = InputAdapter::for_shape(&manifest.inputs[xa_idx].shape[1..])?;
 
         let embed_dim = manifest
             .meta_usize("d")
@@ -240,10 +219,11 @@ impl Trainer {
         let rng = Rng::new(cfg.seed ^ 0xDEC0_44C0_4D1A_7031);
         Ok(Trainer {
             cfg,
-            engine,
-            artifact,
-            sources,
-            sinks,
+            session,
+            binding,
+            loss_slot,
+            inv_slot,
+            reg_slot,
             params,
             opt,
             embed_dim,
@@ -255,9 +235,16 @@ impl Trainer {
         })
     }
 
-    /// The PJRT engine (shared with eval paths).
-    pub fn engine(&self) -> &Engine {
-        &self.engine
+    /// The runtime session (shared with eval paths — their artifacts land
+    /// in the same cache).
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    /// Consume the trainer, handing its session to the next consumer so
+    /// compiled eval/projection artifacts stay warm across runs.
+    pub fn into_session(self) -> Session {
+        self.session
     }
 
     /// Projected-embedding dimension d.
@@ -272,7 +259,7 @@ impl Trainer {
 
     /// Current parameters as a host checkpoint.
     pub fn snapshot(&self) -> Result<Checkpoint> {
-        let specs = self.artifact.manifest().inputs_with_prefix("params.");
+        let specs = self.binding.manifest().inputs_with_prefix("params.");
         self.params.to_checkpoint(&specs)
     }
 
@@ -291,7 +278,7 @@ impl Trainer {
             ResidualFamily,
         };
         let (za, zb) = super::linear_eval::project_views(
-            &self.engine,
+            &self.session,
             &self.cfg.preset,
             snapshot,
             self.input_adapt,
@@ -338,39 +325,21 @@ impl Trainer {
             .reshape(&[])
             .map_err(|e| anyhow::anyhow!("{e}"))?;
 
-        // Marshal in manifest order. Literals are passed by reference;
-        // params/opt literals live in the stores.
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(self.sources.len());
-        for src in &self.sources {
-            inputs.push(match src {
-                Source::Param(name) => self.params.get(name)?,
-                Source::Opt(name) => self.opt.get(name)?,
-                Source::ViewA => &xa_lit,
-                Source::ViewB => &xb_lit,
-                Source::Perm => &perm_lit,
-                Source::Lr => &lr_lit,
-            });
-        }
-        let outputs = self.artifact.execute_literals_ref(&inputs)?;
-        anyhow::ensure!(
-            outputs.len() == self.sinks.len(),
-            "train step returned {} outputs, expected {}",
-            outputs.len(),
-            self.sinks.len()
-        );
-
-        let mut loss = f32::NAN;
-        let mut inv = f32::NAN;
-        let mut reg = f32::NAN;
-        for (sink, lit) in self.sinks.iter().zip(outputs) {
-            match sink {
-                Sink::Param(name) => self.params.put(name, lit)?,
-                Sink::Opt(name) => self.opt.put(name, lit)?,
-                Sink::Loss => loss = scalar(&lit)?,
-                Sink::Inv => inv = scalar(&lit)?,
-                Sink::Reg => reg = scalar(&lit)?,
-            }
-        }
+        // The binding marshals store-resident literals by precomputed slot
+        // index and absorbs updated params/opt state back in place.
+        let emitted = self.binding.step(
+            &mut [&mut self.params, &mut self.opt],
+            &[&xa_lit, &xb_lit, &perm_lit, &lr_lit],
+        )?;
+        let loss = scalar(&emitted[self.loss_slot])?;
+        let inv = match self.inv_slot {
+            Some(i) => scalar(&emitted[i])?,
+            None => f32::NAN,
+        };
+        let reg = match self.reg_slot {
+            Some(i) => scalar(&emitted[i])?,
+            None => f32::NAN,
+        };
         if !loss.is_finite() {
             bail!("non-finite loss at step {}", self.global_step);
         }
@@ -439,12 +408,9 @@ impl Trainer {
 
     /// Batch size from the artifact manifest (input xa's leading dim).
     pub fn batch_size(&self) -> Result<usize> {
-        let idx = self
-            .artifact
-            .manifest()
-            .input_index("xa")
-            .context("no xa input")?;
-        Ok(self.artifact.manifest().inputs[idx].shape[0])
+        let manifest = self.binding.manifest();
+        let idx = manifest.input_index("xa").context("no xa input")?;
+        Ok(manifest.inputs[idx].shape[0])
     }
 
     /// Training metrics so far.

@@ -42,6 +42,13 @@
 //! `DecorrelationKernel` trait: stateful, batched, multi-threaded evaluators
 //! that the bench harness contenders, trainer diagnostics, and examples all
 //! share).
+//!
+//! The device path mirrors that contract with the runtime
+//! [`runtime::Session`]: a process-wide content-addressed artifact cache
+//! (compile each distinct HLO + io-signature once, share the
+//! `Arc<Artifact>`) plus [`runtime::ExecutionBinding`] (resolve manifest
+//! slot maps once, marshal borrowed literals per step). Trainer, DDP,
+//! linear eval, and the bench harness all load through it.
 
 pub mod bench_harness;
 pub mod config;

@@ -34,6 +34,7 @@ fn main() -> Result<()> {
         "fig2" => decorr::bench_harness::cmd::fig2(&mut args),
         "fig3" => decorr::bench_harness::cmd::fig3(&mut args),
         "fig5" => decorr::bench_harness::cmd::fig5(&mut args),
+        "session-bench" | "session" => decorr::bench_harness::cmd::session_bench(&mut args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -60,6 +61,8 @@ SUBCOMMANDS
   fig2     loss-node time/memory scaling vs d            (paper Fig. 2)
   fig3     block-size sweep                              (paper Fig. 3)
   fig5     simulated data-parallel training              (paper Figs. 5/6)
+  session-bench  runtime session compile cache: cold vs cached artifact
+                 loads over synthetic HLO (no artifacts needed; --json path)
 ";
 
 /// Load an FFT-bearing HLO module and execute it — proves the AOT bridge

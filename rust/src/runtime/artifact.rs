@@ -22,9 +22,24 @@ impl TensorSpec {
         self.shape.iter().product()
     }
 
-    /// Byte size (f32/i32 are both 4 bytes).
-    pub fn bytes(&self) -> usize {
-        self.elements() * 4
+    /// Bytes per element, derived from the manifest dtype. A dtype this
+    /// runtime does not know is an error, not a silent 4-byte guess.
+    pub fn element_bytes(&self) -> Result<usize> {
+        match self.dtype.as_str() {
+            "pred" | "bool" | "i8" | "u8" => Ok(1),
+            "f16" | "bf16" | "i16" | "u16" => Ok(2),
+            "f32" | "i32" | "u32" => Ok(4),
+            "f64" | "i64" | "u64" => Ok(8),
+            other => anyhow::bail!(
+                "tensor spec '{}': unsupported dtype '{other}' for byte sizing",
+                self.name
+            ),
+        }
+    }
+
+    /// Byte size of the whole tensor, derived from the dtype.
+    pub fn bytes(&self) -> Result<usize> {
+        Ok(self.elements() * self.element_bytes()?)
     }
 
     fn from_json(v: &Json) -> Result<TensorSpec> {
@@ -124,6 +139,27 @@ impl Manifest {
     /// Meta field as str (e.g. `"variant"`).
     pub fn meta_str(&self, key: &str) -> Option<&str> {
         self.meta.get(key).and_then(Json::as_str)
+    }
+
+    /// Canonical input/output signature: exactly the part of the manifest
+    /// that determines executable compatibility (ordered tensor names,
+    /// shapes, dtypes) — deliberately excluding the artifact name and the
+    /// free-form `meta` block. The session's content addressing hashes
+    /// this together with the HLO text, so renamed-but-identical
+    /// lowerings share one compiled executable.
+    pub fn io_signature(&self) -> String {
+        use std::fmt::Write;
+        let mut sig = String::new();
+        for (tag, specs) in [("in", &self.inputs), ("out", &self.outputs)] {
+            for spec in specs.iter() {
+                let _ = write!(sig, "{tag}:{}:{}:", spec.name, spec.dtype);
+                for d in &spec.shape {
+                    let _ = write!(sig, "{d},");
+                }
+                sig.push(';');
+            }
+        }
+        sig
     }
 }
 
@@ -251,7 +287,42 @@ mod tests {
     fn spec_sizes() {
         let m = Manifest::parse(MANIFEST).unwrap();
         assert_eq!(m.inputs[0].elements(), 6);
-        assert_eq!(m.inputs[0].bytes(), 24);
+        assert_eq!(m.inputs[0].bytes().unwrap(), 24);
+        assert_eq!(m.inputs[1].bytes().unwrap(), 12);
+    }
+
+    #[test]
+    fn unknown_dtype_bytes_is_an_error() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            shape: vec![2, 2],
+            dtype: "c64".into(),
+        };
+        assert!(spec.element_bytes().is_err());
+        assert!(spec.bytes().is_err());
+        let wide = TensorSpec {
+            name: "y".into(),
+            shape: vec![3],
+            dtype: "f64".into(),
+        };
+        assert_eq!(wide.bytes().unwrap(), 24);
+    }
+
+    #[test]
+    fn io_signature_tracks_specs_not_name_or_meta() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        let mut renamed = m.clone();
+        renamed.name = "other".into();
+        renamed.meta = Json::Null;
+        assert_eq!(m.io_signature(), renamed.io_signature());
+
+        let mut reshaped = m.clone();
+        reshaped.inputs[0].shape = vec![2, 4];
+        assert_ne!(m.io_signature(), reshaped.io_signature());
+
+        let mut retyped = m.clone();
+        retyped.outputs[0].dtype = "i32".into();
+        assert_ne!(m.io_signature(), retyped.io_signature());
     }
 
     #[test]

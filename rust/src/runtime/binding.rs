@@ -1,0 +1,355 @@
+//! Reusable execution bindings: resolve a manifest's input/output slot
+//! mapping **once**, then marshal literals by precomputed index on every
+//! step.
+//!
+//! Before this layer, each consumer re-derived "where does manifest slot
+//! *i* come from?" on the hot path — the trainer matched `params.` /
+//! `opt_state.` prefixes per step, the DDP gradient workers ran a linear
+//! `find()` over the broadcast parameter list per spec per step, and the
+//! apply path re-scanned the manifest every update. An
+//! [`ExecutionBinding`] does that classification at construction:
+//!
+//! * **stores** — named literal pools ([`ParamStore`]) matched by name
+//!   prefix (`"params."`, `"opt_state."`, `"grads."`, ...). Store-resident
+//!   literals are borrowed per step via `execute_literals_ref`, never
+//!   copied; outputs matching a store prefix are absorbed back in place.
+//! * **streams** — per-step literals matched by exact name (`"xa"`,
+//!   `"perm"`, `"lr"`, ...), passed positionally in the order they were
+//!   declared. A declared stream absent from the manifest is allowed (the
+//!   caller's literal is simply unused), mirroring artifacts that omit an
+//!   optional input.
+//!
+//! Outputs that match no store prefix are **emitted** in manifest order;
+//! [`ExecutionBinding::emit_slot`] gives a name → emitted-index lookup so
+//! consumers can read `loss` / `inv` / `grads.*` without per-step string
+//! matching.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::artifact::{Artifact, Manifest};
+use super::params::ParamStore;
+
+/// Where one manifest input slot is sourced from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum InSlot {
+    /// `stores[idx]` entry with this manifest name.
+    Store(usize, String),
+    /// `streams[idx]` literal of the current step.
+    Stream(usize),
+}
+
+/// Where one manifest output slot is sunk to.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum OutSlot {
+    /// Absorbed into `stores[idx]` under this manifest name.
+    Store(usize, String),
+    /// Returned to the caller (index into the emitted vector).
+    Emit(usize),
+}
+
+/// Name + manifest position of an emitted (non-store) output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EmitSpec {
+    /// Index into the manifest's output list.
+    pub output_index: usize,
+    /// Output name from the manifest.
+    pub name: String,
+}
+
+/// The pure slot-resolution half of a binding — separable from the
+/// compiled artifact so it is testable without a PJRT client.
+#[derive(Clone, Debug)]
+pub(crate) struct SlotPlan {
+    inputs: Vec<InSlot>,
+    outputs: Vec<OutSlot>,
+    emits: Vec<EmitSpec>,
+    n_stores: usize,
+    n_streams: usize,
+}
+
+impl SlotPlan {
+    pub(crate) fn resolve(
+        manifest: &Manifest,
+        store_prefixes: &[&str],
+        streams: &[&str],
+    ) -> Result<SlotPlan> {
+        let mut inputs = Vec::with_capacity(manifest.inputs.len());
+        for spec in &manifest.inputs {
+            let slot = if let Some(j) = store_prefixes
+                .iter()
+                .position(|p| spec.name.starts_with(p))
+            {
+                InSlot::Store(j, spec.name.clone())
+            } else if let Some(i) = streams.iter().position(|s| *s == spec.name) {
+                InSlot::Stream(i)
+            } else {
+                bail!(
+                    "artifact '{}': unrecognized input '{}' (store prefixes {:?}, streams {:?})",
+                    manifest.name,
+                    spec.name,
+                    store_prefixes,
+                    streams
+                );
+            };
+            inputs.push(slot);
+        }
+
+        let mut outputs = Vec::with_capacity(manifest.outputs.len());
+        let mut emits = Vec::new();
+        for (idx, spec) in manifest.outputs.iter().enumerate() {
+            let slot = if let Some(j) = store_prefixes
+                .iter()
+                .position(|p| spec.name.starts_with(p))
+            {
+                OutSlot::Store(j, spec.name.clone())
+            } else {
+                emits.push(EmitSpec {
+                    output_index: idx,
+                    name: spec.name.clone(),
+                });
+                OutSlot::Emit(emits.len() - 1)
+            };
+            outputs.push(slot);
+        }
+
+        Ok(SlotPlan {
+            inputs,
+            outputs,
+            emits,
+            n_stores: store_prefixes.len(),
+            n_streams: streams.len(),
+        })
+    }
+}
+
+/// A compiled artifact plus its resolved slot plan. Construct once, run
+/// every step; see the module docs for the store/stream model.
+pub struct ExecutionBinding {
+    artifact: Arc<Artifact>,
+    plan: SlotPlan,
+}
+
+impl ExecutionBinding {
+    /// Bind `artifact` against store prefixes and per-step stream names.
+    /// Fails fast on any manifest input that matches neither — the same
+    /// strictness the consumers previously enforced per step.
+    pub fn bind(
+        artifact: Arc<Artifact>,
+        store_prefixes: &[&str],
+        streams: &[&str],
+    ) -> Result<ExecutionBinding> {
+        let plan = SlotPlan::resolve(artifact.manifest(), store_prefixes, streams)?;
+        Ok(ExecutionBinding { artifact, plan })
+    }
+
+    /// The bound artifact.
+    pub fn artifact(&self) -> &Arc<Artifact> {
+        &self.artifact
+    }
+
+    /// The bound artifact's manifest.
+    pub fn manifest(&self) -> &Manifest {
+        self.artifact.manifest()
+    }
+
+    /// Emitted (non-store) outputs, in emission order.
+    pub fn emits(&self) -> &[EmitSpec] {
+        &self.plan.emits
+    }
+
+    /// Position of the emitted output named `name` within the vector
+    /// returned by [`Self::absorb`] / [`Self::step`].
+    pub fn emit_slot(&self, name: &str) -> Result<usize> {
+        self.plan
+            .emits
+            .iter()
+            .position(|e| e.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "artifact '{}' has no emitted output '{name}'",
+                    self.manifest().name
+                )
+            })
+    }
+
+    /// Execute with store-resident literals borrowed in place; returns the
+    /// raw outputs in manifest order. `stores` and `streams` must match
+    /// the arities declared at bind time.
+    pub fn execute(
+        &self,
+        stores: &[&ParamStore],
+        streams: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            stores.len() == self.plan.n_stores,
+            "binding for '{}': got {} stores, bound {}",
+            self.manifest().name,
+            stores.len(),
+            self.plan.n_stores
+        );
+        anyhow::ensure!(
+            streams.len() == self.plan.n_streams,
+            "binding for '{}': got {} streams, bound {}",
+            self.manifest().name,
+            streams.len(),
+            self.plan.n_streams
+        );
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(self.plan.inputs.len());
+        for slot in &self.plan.inputs {
+            refs.push(match slot {
+                InSlot::Store(j, name) => stores[*j].get(name)?,
+                InSlot::Stream(i) => streams[*i],
+            });
+        }
+        let outputs = self.artifact.execute_literals_ref(&refs)?;
+        anyhow::ensure!(
+            outputs.len() == self.plan.outputs.len(),
+            "artifact '{}' returned {} outputs, manifest expects {}",
+            self.manifest().name,
+            outputs.len(),
+            self.plan.outputs.len()
+        );
+        Ok(outputs)
+    }
+
+    /// Sink outputs: store-matched literals replace their store entries in
+    /// place; the rest are returned in emission order (see [`Self::emits`]).
+    pub fn absorb(
+        &self,
+        outputs: Vec<xla::Literal>,
+        stores: &mut [&mut ParamStore],
+    ) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            outputs.len() == self.plan.outputs.len(),
+            "binding for '{}': absorbing {} outputs, expected {}",
+            self.manifest().name,
+            outputs.len(),
+            self.plan.outputs.len()
+        );
+        anyhow::ensure!(
+            stores.len() == self.plan.n_stores,
+            "binding for '{}': got {} stores, bound {}",
+            self.manifest().name,
+            stores.len(),
+            self.plan.n_stores
+        );
+        let mut emitted = Vec::with_capacity(self.plan.emits.len());
+        for (slot, lit) in self.plan.outputs.iter().zip(outputs) {
+            match slot {
+                OutSlot::Store(j, name) => stores[*j].put(name, lit)?,
+                OutSlot::Emit(_) => emitted.push(lit),
+            }
+        }
+        Ok(emitted)
+    }
+
+    /// One full step: execute, absorb store outputs in place, return the
+    /// emitted literals. The hot-path entry point for trainer/DDP updates.
+    pub fn step(
+        &self,
+        stores: &mut [&mut ParamStore],
+        streams: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let outputs = {
+            let ro: Vec<&ParamStore> = stores.iter().map(|s| &**s).collect();
+            self.execute(&ro, streams)?
+        };
+        self.absorb(outputs, stores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn train_like_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+                "name": "train_toy",
+                "inputs": [
+                    {"name": "params.w", "shape": [2, 2], "dtype": "f32"},
+                    {"name": "xa", "shape": [4, 2], "dtype": "f32"},
+                    {"name": "opt_state.m", "shape": [2, 2], "dtype": "f32"},
+                    {"name": "xb", "shape": [4, 2], "dtype": "f32"},
+                    {"name": "perm", "shape": [2], "dtype": "i32"},
+                    {"name": "lr", "shape": [], "dtype": "f32"}
+                ],
+                "outputs": [
+                    {"name": "params.w", "shape": [2, 2], "dtype": "f32"},
+                    {"name": "loss", "shape": [], "dtype": "f32"},
+                    {"name": "opt_state.m", "shape": [2, 2], "dtype": "f32"},
+                    {"name": "inv", "shape": [], "dtype": "f32"}
+                ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn resolves_stores_and_streams() {
+        let m = train_like_manifest();
+        let plan =
+            SlotPlan::resolve(&m, &["params.", "opt_state."], &["xa", "xb", "perm", "lr"]).unwrap();
+        assert_eq!(plan.inputs.len(), 6);
+        assert_eq!(plan.inputs[0], InSlot::Store(0, "params.w".into()));
+        assert_eq!(plan.inputs[1], InSlot::Stream(0));
+        assert_eq!(plan.inputs[2], InSlot::Store(1, "opt_state.m".into()));
+        assert_eq!(plan.inputs[4], InSlot::Stream(2));
+        assert_eq!(plan.inputs[5], InSlot::Stream(3));
+        // outputs: params.w -> store 0, loss -> emit 0, opt -> store 1, inv -> emit 1
+        assert_eq!(plan.outputs[0], OutSlot::Store(0, "params.w".into()));
+        assert_eq!(plan.outputs[1], OutSlot::Emit(0));
+        assert_eq!(plan.outputs[3], OutSlot::Emit(1));
+        assert_eq!(plan.emits.len(), 2);
+        assert_eq!(plan.emits[0].name, "loss");
+        assert_eq!(plan.emits[0].output_index, 1);
+        assert_eq!(plan.emits[1].name, "inv");
+        assert_eq!(plan.emits[1].output_index, 3);
+    }
+
+    #[test]
+    fn unrecognized_input_is_rejected() {
+        let m = train_like_manifest();
+        // 'lr' neither a store prefix nor a declared stream
+        let err = SlotPlan::resolve(&m, &["params.", "opt_state."], &["xa", "xb", "perm"]);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("lr"), "{msg}");
+    }
+
+    #[test]
+    fn declared_but_absent_stream_is_allowed() {
+        let m = train_like_manifest();
+        let plan = SlotPlan::resolve(
+            &m,
+            &["params.", "opt_state."],
+            &["xa", "xb", "perm", "lr", "extra_unused"],
+        )
+        .unwrap();
+        assert_eq!(plan.n_streams, 5);
+    }
+
+    #[test]
+    fn grad_like_outputs_all_emit() {
+        let m = Manifest::parse(
+            r#"{
+                "name": "grad_toy",
+                "inputs": [
+                    {"name": "params.w", "shape": [2], "dtype": "f32"},
+                    {"name": "xa", "shape": [2, 2], "dtype": "f32"}
+                ],
+                "outputs": [
+                    {"name": "grads.w", "shape": [2], "dtype": "f32"},
+                    {"name": "loss", "shape": [], "dtype": "f32"}
+                ]
+            }"#,
+        )
+        .unwrap();
+        let plan = SlotPlan::resolve(&m, &["params."], &["xa"]).unwrap();
+        assert_eq!(plan.emits.len(), 2);
+        assert_eq!(plan.emits[0].name, "grads.w");
+        assert_eq!(plan.emits[1].name, "loss");
+    }
+}

@@ -6,11 +6,24 @@ use anyhow::{Context, Result};
 
 use super::artifact::{Artifact, Manifest};
 
+/// Paths of the HLO text and manifest files for artifact `name` under
+/// `dir` — the single definition of the on-disk layout, shared by the
+/// engine and the session's source cache.
+pub fn artifact_paths(dir: &Path, name: &str) -> (PathBuf, PathBuf) {
+    (
+        dir.join(format!("{name}.hlo.txt")),
+        dir.join(format!("{name}.manifest.json")),
+    )
+}
+
 /// Owns the PJRT client and compiles artifacts against it.
 ///
-/// One `Engine` per process; artifacts are compiled once and cached by the
-/// caller (compilation of a full train step takes O(seconds), execution
-/// O(ms), so the coordinator compiles everything up front).
+/// The engine itself is uncached — every `load_artifact` call compiles
+/// (O(seconds) for a full train step; execution is O(ms)). Consumers go
+/// through [`super::Session`], which wraps one engine per thread in the
+/// process-wide content-addressed cache so identical shapes compile once.
+/// PJRT handles are thread-affine: an engine (and any executable it
+/// compiled) must stay on the thread that created it.
 pub struct Engine {
     client: xla::PjRtClient,
     artifact_dir: PathBuf,
@@ -43,10 +56,10 @@ impl Engine {
     }
 
     /// Load `<name>.hlo.txt` + `<name>.manifest.json` from the artifact
-    /// directory and compile the executable.
+    /// directory and compile the executable. Uncached — prefer
+    /// [`super::Session::load`], which memoizes by content.
     pub fn load_artifact(&self, name: &str) -> Result<Artifact> {
-        let hlo_path = self.artifact_dir.join(format!("{name}.hlo.txt"));
-        let manifest_path = self.artifact_dir.join(format!("{name}.manifest.json"));
+        let (hlo_path, manifest_path) = artifact_paths(&self.artifact_dir, name);
         let manifest_text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("reading {}", manifest_path.display()))?;
         let manifest = Manifest::parse(&manifest_text)

@@ -1,6 +1,28 @@
 //! PJRT runtime: loads AOT artifacts produced by `python/compile/aot.py`
 //! and executes them from the rust hot path.
 //!
+//! ## Session / Binding architecture
+//!
+//! The runtime is layered so that the expensive work happens once and the
+//! per-step work is index lookups:
+//!
+//! * [`Engine`] — owns the PJRT client and knows how to compile one HLO
+//!   file against one manifest. Uncached; the low-level substrate.
+//! * [`Session`] / [`SharedSession`] (in [`session`]) — the process-wide
+//!   artifact cache. The shared core de-duplicates source reads (manifest
+//!   parse + HLO content hash) across every thread and keeps the
+//!   compile/hit/miss [`SessionStats`] plus the persistent compile-time
+//!   index (`artifacts/.session-index.json`). Each executing thread holds
+//!   a `Session` arm (one engine + a content-addressed `Arc<Artifact>`
+//!   cache): loading the same name — or identical HLO + io-signature under
+//!   a different name — twice compiles once. This is the device-side
+//!   mirror of the host `fft::plan` contract.
+//! * [`ExecutionBinding`] (in [`binding`]) — resolves a manifest's
+//!   input/output slot mapping (parameter stores vs per-step streams)
+//!   once, then marshals borrowed literals by precomputed index on every
+//!   step. The trainer, DDP workers/leader, and eval paths all execute
+//!   through bindings.
+//!
 //! Interchange format is **HLO text** (not serialized `HloModuleProto`):
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids which the pinned
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids and
@@ -14,12 +36,19 @@
 //! outputs.
 
 mod artifact;
+pub mod binding;
 mod engine;
 pub mod params;
+pub mod session;
 
 pub use artifact::{Artifact, Manifest, TensorSpec};
-pub use engine::Engine;
+pub use binding::{EmitSpec, ExecutionBinding};
+pub use engine::{artifact_paths, Engine};
 pub use params::ParamStore;
+pub use session::{
+    ArtifactSource, ContentKey, Session, SessionStats, SharedSession, WarmupReport,
+    SESSION_INDEX_FILE,
+};
 
 use crate::util::tensor::Tensor;
 use anyhow::Result;
@@ -39,9 +68,18 @@ impl HostValue {
         HostValue::F32(Tensor::from_vec(&[], vec![v]))
     }
 
-    /// Wrap a permutation (u32 indices) as an i32 vector value.
-    pub fn from_permutation(perm: &[u32]) -> Self {
-        HostValue::I32(vec![perm.len()], perm.iter().map(|&p| p as i32).collect())
+    /// Wrap a permutation (u32 indices) as an i32 vector value. Errors on
+    /// indices above `i32::MAX` instead of silently truncating them.
+    pub fn from_permutation(perm: &[u32]) -> Result<Self> {
+        let data = perm
+            .iter()
+            .map(|&p| {
+                i32::try_from(p).map_err(|_| {
+                    anyhow::anyhow!("permutation index {p} does not fit the i32 device dtype")
+                })
+            })
+            .collect::<Result<Vec<i32>>>()?;
+        Ok(HostValue::I32(vec![perm.len()], data))
     }
 
     /// Shape of the value.
@@ -105,5 +143,35 @@ impl HostValue {
             HostValue::F32(t) => Ok(t),
             _ => anyhow::bail!("expected f32 tensor"),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_permutation_checked_cast() {
+        let v = HostValue::from_permutation(&[2, 0, 1]).unwrap();
+        assert_eq!(v.shape(), vec![3]);
+        assert_eq!(v.dtype(), "i32");
+        match v {
+            HostValue::I32(shape, data) => {
+                assert_eq!(shape, vec![3]);
+                assert_eq!(data, vec![2, 0, 1]);
+            }
+            _ => panic!("expected i32 value"),
+        }
+        // i32::MAX is representable; one past it must error, not wrap.
+        assert!(HostValue::from_permutation(&[i32::MAX as u32]).is_ok());
+        assert!(HostValue::from_permutation(&[i32::MAX as u32 + 1]).is_err());
+        assert!(HostValue::from_permutation(&[u32::MAX]).is_err());
+    }
+
+    #[test]
+    fn scalar_shape_and_dtype() {
+        let v = HostValue::scalar(1.5);
+        assert_eq!(v.shape(), Vec::<usize>::new());
+        assert_eq!(v.dtype(), "f32");
     }
 }

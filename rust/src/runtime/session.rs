@@ -1,0 +1,660 @@
+//! The shared runtime **Session**: a process-wide, content-addressed
+//! artifact cache with per-thread execution arms.
+//!
+//! PR 1 gave the host FFT a planning layer (`fft::plan`) so repeated
+//! transforms share twiddles and scratch. The device path had no analogue:
+//! every consumer (`Trainer`, the DDP leader and each of its workers,
+//! `linear_eval`, the bench harness commands) constructed its own
+//! [`Engine`](super::Engine) and called `load_artifact`, re-reading,
+//! re-parsing, and — at O(seconds) per PJRT compile — re-lowering identical
+//! (variant, d, n) loss shapes. The Session is the device-side mirror of
+//! the `FftPlan` contract: plan (compile) once, execute many times.
+//!
+//! ## Architecture
+//!
+//! Two layers, split along what may and may not cross threads:
+//!
+//! * [`SharedSession`] — the process-wide core (`Send + Sync`, cheap
+//!   `Clone`). Owns a lock-striped source cache (artifact name →
+//!   parsed manifest + [`ContentKey`]), the atomic compile/hit/miss
+//!   [`SessionStats`], and the eviction-free persistent index
+//!   (`artifacts/.session-index.json`) recording compile times per shape.
+//!   Every thread in the process — trainer, DDP workers, warmup threads —
+//!   shares one core, so each `<name>.hlo.txt` / `<name>.manifest.json`
+//!   pair is read, parsed, and hashed exactly once per process.
+//! * [`Session`] — a per-thread execution arm: one [`Engine`] plus a
+//!   lock-striped map `ContentKey → Arc<Artifact>`. PJRT handles are
+//!   **thread-affine** (the `xla` crate's client/executable types are not
+//!   `Send`; see the worker-thread note in `coordinator::ddp`), so
+//!   compiled executables cannot migrate between threads — the compiler
+//!   enforces this, because `Session` owns an `Engine`. A thread obtains
+//!   its arm with [`SharedSession::session`]; within an arm, loading the
+//!   same artifact name — or an *identical HLO + manifest signature under
+//!   a different name* — twice compiles once and returns the same
+//!   `Arc<Artifact>` (pointer-equal).
+//!
+//! Content addressing keys on FNV-128 of the manifest's input/output
+//! signature ([`Manifest::io_signature`]) plus the HLO text, never on the
+//! artifact *name*, so renamed-but-identical lowerings (e.g. the q-ablation
+//! suffix artifacts when a suffix is a no-op at a given shape) share one
+//! executable. A stored-signature comparison on every hit guards against
+//! hash collisions.
+//!
+//! [`Session::warmup`] resolves sources (file read + manifest parse +
+//! content hash) for a batch of names in parallel threads against the
+//! shared core, then compiles each *distinct* content key exactly once on
+//! the calling thread's engine — the compile itself is thread-affine for
+//! the reason above, and is the dominant cost the stats make visible.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{Artifact, Manifest};
+use super::engine::{artifact_paths, Engine};
+use crate::util::json::{self, Json};
+
+/// File name of the persistent compile-time index, under the artifact dir.
+pub const SESSION_INDEX_FILE: &str = ".session-index.json";
+
+/// Lock stripes for the source and compiled maps. Eight keeps contention
+/// negligible for the handful of artifact names a run touches while
+/// letting concurrent warmup/source threads proceed independently.
+const STRIPES: usize = 8;
+
+// ------------------------------------------------------------------ keys
+
+/// 128-bit FNV-1a content hash of (manifest io-signature, HLO text).
+///
+/// The artifact *name* and free-form manifest `meta` are deliberately
+/// excluded: two names with byte-identical HLO and the same input/output
+/// signature address the same executable.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct ContentKey {
+    hi: u64,
+    lo: u64,
+}
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+const FNV_BASIS_A: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_BASIS_B: u64 = FNV_BASIS_A ^ 0x9e37_79b9_7f4a_7c15;
+
+impl ContentKey {
+    /// Hash a signature + HLO text pair.
+    pub fn of(signature: &str, hlo_text: &str) -> ContentKey {
+        let (mut a, mut b) = (FNV_BASIS_A, FNV_BASIS_B);
+        for chunk in [signature.as_bytes(), b"\x00", hlo_text.as_bytes()] {
+            for &byte in chunk {
+                a = (a ^ byte as u64).wrapping_mul(FNV_PRIME);
+                b = (b ^ byte as u64).wrapping_mul(FNV_PRIME);
+            }
+        }
+        ContentKey { hi: b, lo: a }
+    }
+
+    /// Hex form used by the persistent index.
+    pub fn hex(&self) -> String {
+        format!("{:016x}{:016x}", self.hi, self.lo)
+    }
+
+    fn stripe(&self) -> usize {
+        (self.lo as usize) % STRIPES
+    }
+}
+
+impl fmt::Display for ContentKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.hex())
+    }
+}
+
+// --------------------------------------------------------------- sources
+
+/// A resolved artifact source: everything about `<name>` that is knowable
+/// without a PJRT client. Shared process-wide; reading + parsing + hashing
+/// happens once per name.
+pub struct ArtifactSource {
+    /// Artifact name (file stem under the artifact dir).
+    pub name: String,
+    /// Path of the HLO text file (compilation re-reads it via the XLA
+    /// text parser; the OS page cache keeps that cheap).
+    pub hlo_path: PathBuf,
+    /// Size of the HLO text in bytes (recorded in the index).
+    pub hlo_bytes: usize,
+    /// Parsed manifest.
+    pub manifest: Manifest,
+    /// Canonical input/output signature (see [`Manifest::io_signature`]).
+    pub signature: String,
+    /// Content key addressing the compiled executable.
+    pub key: ContentKey,
+}
+
+// ----------------------------------------------------------------- stats
+
+#[derive(Default)]
+struct StatsCells {
+    loads: AtomicU64,
+    hits: AtomicU64,
+    compiles: AtomicU64,
+    compile_nanos: AtomicU64,
+    source_requests: AtomicU64,
+    source_reads: AtomicU64,
+}
+
+/// Snapshot of the session's compile/hit/miss counters. Loads and source
+/// requests are counted process-wide across every execution arm.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SessionStats {
+    /// Artifact load requests (across all arms).
+    pub loads: u64,
+    /// Loads answered from a compiled cache (no compile).
+    pub hits: u64,
+    /// Loads that compiled (cache misses).
+    pub compiles: u64,
+    /// Total wall-clock spent compiling, in milliseconds.
+    pub compile_ms: f64,
+    /// Source resolutions requested (load + manifest-only + warmup).
+    pub source_requests: u64,
+    /// Sources actually read + parsed + hashed from disk.
+    pub source_reads: u64,
+}
+
+impl StatsCells {
+    fn snapshot(&self) -> SessionStats {
+        SessionStats {
+            loads: self.loads.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            compiles: self.compiles.load(Ordering::Relaxed),
+            compile_ms: self.compile_nanos.load(Ordering::Relaxed) as f64 / 1e6,
+            source_requests: self.source_requests.load(Ordering::Relaxed),
+            source_reads: self.source_reads.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ----------------------------------------------------------------- index
+
+/// One shape's record in the persistent index.
+#[derive(Clone, Debug)]
+struct IndexEntry {
+    name: String,
+    signature: String,
+    hlo_bytes: usize,
+    compile_ms: f64,
+    compiles: u64,
+}
+
+/// Eviction-free persistent index mapping content keys to observed compile
+/// times, at `<artifact_dir>/.session-index.json`. Best-effort: a missing
+/// or unwritable file never fails a load — the index is telemetry for the
+/// perf trajectory, not a correctness dependency.
+struct SessionIndex {
+    path: PathBuf,
+    entries: BTreeMap<String, IndexEntry>,
+}
+
+impl SessionIndex {
+    fn open(dir: &Path) -> SessionIndex {
+        let path = dir.join(SESSION_INDEX_FILE);
+        let mut entries = BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(doc) = json::parse(&text) {
+                if let Some(Json::Obj(map)) = doc.get("entries").cloned() {
+                    for (key, v) in map {
+                        let entry = IndexEntry {
+                            name: v
+                                .get("name")
+                                .and_then(Json::as_str)
+                                .unwrap_or_default()
+                                .to_string(),
+                            signature: v
+                                .get("signature")
+                                .and_then(Json::as_str)
+                                .unwrap_or_default()
+                                .to_string(),
+                            hlo_bytes: v
+                                .get("hlo_bytes")
+                                .and_then(Json::as_usize)
+                                .unwrap_or(0),
+                            compile_ms: v
+                                .get("compile_ms")
+                                .and_then(Json::as_f64)
+                                .unwrap_or(0.0),
+                            compiles: v
+                                .get("compiles")
+                                .and_then(Json::as_usize)
+                                .unwrap_or(0) as u64,
+                        };
+                        entries.insert(key, entry);
+                    }
+                }
+            }
+        }
+        SessionIndex { path, entries }
+    }
+
+    fn record(&mut self, src: &ArtifactSource, compile_ms: f64) {
+        let entry = self
+            .entries
+            .entry(src.key.hex())
+            .or_insert_with(|| IndexEntry {
+                name: src.name.clone(),
+                signature: src.signature.clone(),
+                hlo_bytes: src.hlo_bytes,
+                compile_ms: 0.0,
+                compiles: 0,
+            });
+        entry.compile_ms = compile_ms;
+        entry.compiles += 1;
+        self.save();
+    }
+
+    fn save(&self) {
+        let mut map = BTreeMap::new();
+        for (key, e) in &self.entries {
+            map.insert(
+                key.clone(),
+                json::obj(vec![
+                    ("name", Json::Str(e.name.clone())),
+                    ("signature", Json::Str(e.signature.clone())),
+                    ("hlo_bytes", Json::Num(e.hlo_bytes as f64)),
+                    ("compile_ms", Json::Num(e.compile_ms)),
+                    ("compiles", Json::Num(e.compiles as f64)),
+                ]),
+            );
+        }
+        let doc = json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("entries", Json::Obj(map)),
+        ]);
+        // Compiles are O(seconds); a whole-file rewrite per compile is noise.
+        let _ = std::fs::write(&self.path, doc.to_string_compact());
+    }
+}
+
+// ------------------------------------------------------------------ core
+
+struct SessionCore {
+    artifact_dir: PathBuf,
+    sources: Vec<Mutex<HashMap<String, Arc<ArtifactSource>>>>,
+    stats: StatsCells,
+    index: Mutex<SessionIndex>,
+}
+
+fn name_stripe(name: &str) -> usize {
+    let mut h = FNV_BASIS_A;
+    for &b in name.as_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    (h as usize) % STRIPES
+}
+
+/// The process-wide half of the session: source cache + stats + index.
+/// `Send + Sync` and cheap to clone — hand one to every thread (the DDP
+/// leader clones it into each gradient worker).
+#[derive(Clone)]
+pub struct SharedSession {
+    core: Arc<SessionCore>,
+}
+
+impl SharedSession {
+    /// Open the shared core over an artifact directory. Does not touch
+    /// PJRT — cheap, and usable on machines without the XLA extension
+    /// (e.g. for manifest inspection).
+    pub fn open(artifact_dir: impl AsRef<Path>) -> SharedSession {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let index = SessionIndex::open(&dir);
+        SharedSession {
+            core: Arc::new(SessionCore {
+                artifact_dir: dir,
+                sources: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+                stats: StatsCells::default(),
+                index: Mutex::new(index),
+            }),
+        }
+    }
+
+    /// The artifact directory this session loads from.
+    pub fn artifact_dir(&self) -> &Path {
+        &self.core.artifact_dir
+    }
+
+    /// Resolve `<name>` to its source (read + parse + hash), once per
+    /// process: concurrent requests for the same name from any number of
+    /// threads perform a single read. The stripe lock is held across the
+    /// read so racing requesters wait for, then share, the first result.
+    pub fn source(&self, name: &str) -> Result<Arc<ArtifactSource>> {
+        self.core.stats.source_requests.fetch_add(1, Ordering::Relaxed);
+        let stripe = &self.core.sources[name_stripe(name)];
+        let mut map = stripe.lock().expect("source stripe poisoned");
+        if let Some(src) = map.get(name) {
+            return Ok(src.clone());
+        }
+        self.core.stats.source_reads.fetch_add(1, Ordering::Relaxed);
+        let (hlo_path, manifest_path) = artifact_paths(&self.core.artifact_dir, name);
+        let manifest_text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Manifest::parse(&manifest_text)
+            .with_context(|| format!("parsing {}", manifest_path.display()))?;
+        let hlo_text = std::fs::read_to_string(&hlo_path)
+            .with_context(|| format!("reading {}", hlo_path.display()))?;
+        let signature = manifest.io_signature();
+        let key = ContentKey::of(&signature, &hlo_text);
+        let src = Arc::new(ArtifactSource {
+            name: name.to_string(),
+            hlo_path,
+            hlo_bytes: hlo_text.len(),
+            manifest,
+            signature,
+            key,
+        });
+        map.insert(name.to_string(), src.clone());
+        Ok(src)
+    }
+
+    /// The manifest of `<name>` without compiling anything — replaces the
+    /// "compile a whole executable just to read its shapes" probe pattern.
+    pub fn manifest(&self, name: &str) -> Result<Manifest> {
+        Ok(self.source(name)?.manifest.clone())
+    }
+
+    /// Current compile/hit/miss counters.
+    pub fn stats(&self) -> SessionStats {
+        self.core.stats.snapshot()
+    }
+
+    /// Create an execution arm for the *calling* thread: one fresh PJRT
+    /// engine plus a compiled-artifact cache, backed by this shared core.
+    pub fn session(&self) -> Result<Session> {
+        let engine = Engine::cpu(&self.core.artifact_dir)?;
+        Ok(Session {
+            shared: self.clone(),
+            engine,
+            compiled: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+        })
+    }
+}
+
+// --------------------------------------------------------------- session
+
+struct CachedArtifact {
+    signature: String,
+    artifact: Arc<Artifact>,
+}
+
+/// Summary returned by [`Session::warmup`].
+#[derive(Clone, Copy, Debug)]
+pub struct WarmupReport {
+    /// Names requested (after de-duplication).
+    pub requested: usize,
+    /// Distinct content keys among them.
+    pub distinct_shapes: usize,
+    /// Executables actually compiled by this warmup call.
+    pub compiled: usize,
+    /// Loads answered from cache (aliases + already-warm shapes).
+    pub reused: usize,
+    /// Wall-clock spent compiling during this call, in milliseconds.
+    pub compile_ms: f64,
+}
+
+/// A per-thread execution arm over the [`SharedSession`] core: owns one
+/// [`Engine`] and the compiled-artifact cache. Not `Send` (the engine's
+/// PJRT handles are thread-affine); create one per thread that executes.
+///
+/// The compiled map shares the core's stripe layout for uniformity, but
+/// on a thread-affine arm the stripe mutexes exist for the `&self`
+/// interior-mutability API, not for contention — they are uncontended by
+/// construction and cost nanoseconds on the cached-load path.
+pub struct Session {
+    shared: SharedSession,
+    engine: Engine,
+    compiled: Vec<Mutex<HashMap<ContentKey, CachedArtifact>>>,
+}
+
+impl Session {
+    /// One-call construction: shared core + an execution arm for the
+    /// calling thread. The common entry point for single-threaded
+    /// consumers (trainer, eval, benches).
+    pub fn open(artifact_dir: impl AsRef<Path>) -> Result<Session> {
+        SharedSession::open(artifact_dir).session()
+    }
+
+    /// The process-wide core (clone it into other threads).
+    pub fn shared(&self) -> &SharedSession {
+        &self.shared
+    }
+
+    /// This arm's engine (platform queries, uncached escape hatch).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// The artifact directory.
+    pub fn artifact_dir(&self) -> &Path {
+        self.shared.artifact_dir()
+    }
+
+    /// Manifest of `<name>` without compiling (delegates to the core).
+    pub fn manifest(&self, name: &str) -> Result<Manifest> {
+        self.shared.manifest(name)
+    }
+
+    /// Current compile/hit/miss counters (process-wide).
+    pub fn stats(&self) -> SessionStats {
+        self.shared.stats()
+    }
+
+    /// Load `<name>`, compiling at most once per distinct content key:
+    /// repeat loads of the same name — or of a different name whose HLO
+    /// text and manifest io-signature are identical — return the cached
+    /// `Arc<Artifact>` (pointer-equal with the first).
+    pub fn load(&self, name: &str) -> Result<Arc<Artifact>> {
+        let stats = &self.shared.core.stats;
+        stats.loads.fetch_add(1, Ordering::Relaxed);
+        let src = self.shared.source(name)?;
+        let stripe = &self.compiled[src.key.stripe()];
+        let mut map = stripe.lock().expect("compiled stripe poisoned");
+        if let Some(cached) = map.get(&src.key) {
+            anyhow::ensure!(
+                cached.signature == src.signature,
+                "content-hash collision between '{}' and a cached artifact \
+                 (key {}): differing io-signatures",
+                name,
+                src.key
+            );
+            stats.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(cached.artifact.clone());
+        }
+        let t0 = Instant::now();
+        let artifact = self
+            .engine
+            .compile_with_manifest(&src.hlo_path, src.manifest.clone())
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let elapsed = t0.elapsed();
+        stats.compiles.fetch_add(1, Ordering::Relaxed);
+        stats
+            .compile_nanos
+            .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        self.shared
+            .core
+            .index
+            .lock()
+            .expect("index poisoned")
+            .record(&src, elapsed.as_secs_f64() * 1e3);
+        let artifact = Arc::new(artifact);
+        map.insert(
+            src.key,
+            CachedArtifact {
+                signature: src.signature.clone(),
+                artifact: artifact.clone(),
+            },
+        );
+        Ok(artifact)
+    }
+
+    /// Warm the cache for a batch of artifact names.
+    ///
+    /// Stage 1 resolves every source (file read, manifest parse, content
+    /// hash) in parallel threads against the shared core — concurrent with
+    /// each other and de-duplicated process-wide. Stage 2 compiles each
+    /// *distinct* content key exactly once on this arm's engine; compiles
+    /// are thread-affine because PJRT executables cannot leave the thread
+    /// that owns their client (see the module docs), and they dominate the
+    /// wall-clock this report surfaces.
+    pub fn warmup(&self, names: &[&str]) -> Result<WarmupReport> {
+        let mut uniq: Vec<&str> = Vec::with_capacity(names.len());
+        for &n in names {
+            if !uniq.contains(&n) {
+                uniq.push(n);
+            }
+        }
+        if uniq.is_empty() {
+            return Ok(WarmupReport {
+                requested: 0,
+                distinct_shapes: 0,
+                compiled: 0,
+                reused: 0,
+                compile_ms: 0.0,
+            });
+        }
+
+        // Stage 1: parallel source resolution.
+        let workers = uniq.len().clamp(1, STRIPES);
+        let chunk = uniq.len().div_ceil(workers);
+        let shared = &self.shared;
+        let mut outcomes: Vec<Result<()>> = Vec::with_capacity(workers);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = uniq
+                .chunks(chunk)
+                .map(|part| {
+                    scope.spawn(move || -> Result<()> {
+                        for name in part {
+                            shared.source(name)?;
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            for h in handles {
+                outcomes.push(
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow::anyhow!("warmup thread panicked"))),
+                );
+            }
+        });
+        for outcome in outcomes {
+            outcome?;
+        }
+
+        // Stage 2: compile once per distinct content key.
+        let before = self.stats();
+        let mut keys: Vec<ContentKey> = Vec::with_capacity(uniq.len());
+        for name in &uniq {
+            let key = self.shared.source(name)?.key;
+            if !keys.contains(&key) {
+                keys.push(key);
+            }
+            self.load(name)?;
+        }
+        let after = self.stats();
+        let compiled = (after.compiles - before.compiles) as usize;
+        Ok(WarmupReport {
+            requested: uniq.len(),
+            distinct_shapes: keys.len(),
+            compiled,
+            reused: uniq.len() - compiled,
+            compile_ms: after.compile_ms - before.compile_ms,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn content_key_is_deterministic_and_content_sensitive() {
+        let a = ContentKey::of("sig", "HloModule m");
+        let b = ContentKey::of("sig", "HloModule m");
+        assert_eq!(a, b);
+        assert_eq!(a.hex(), b.hex());
+        assert_eq!(a.hex().len(), 32);
+        assert_ne!(a, ContentKey::of("sig2", "HloModule m"));
+        assert_ne!(a, ContentKey::of("sig", "HloModule n"));
+        // signature/text boundary is unambiguous
+        assert_ne!(ContentKey::of("ab", "c"), ContentKey::of("a", "bc"));
+    }
+
+    #[test]
+    fn name_stripe_in_range() {
+        for name in ["", "a", "loss_bt_sum_d256_n128", "train_bt_sum_tiny"] {
+            assert!(name_stripe(name) < STRIPES);
+        }
+    }
+
+    #[test]
+    fn index_roundtrips_through_json() {
+        let dir = std::env::temp_dir().join(format!("decorr_idx_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let src = ArtifactSource {
+            name: "toy".into(),
+            hlo_path: dir.join("toy.hlo.txt"),
+            hlo_bytes: 42,
+            manifest: Manifest::synthetic("toy", vec![], vec![]),
+            signature: "in:|out:".into(),
+            key: ContentKey::of("in:|out:", "text"),
+        };
+        {
+            let mut idx = SessionIndex::open(&dir);
+            idx.record(&src, 12.5);
+            idx.record(&src, 7.5);
+        }
+        let idx = SessionIndex::open(&dir);
+        let entry = idx.entries.get(&src.key.hex()).expect("entry persisted");
+        assert_eq!(entry.name, "toy");
+        assert_eq!(entry.hlo_bytes, 42);
+        assert_eq!(entry.compiles, 2);
+        assert!((entry.compile_ms - 7.5).abs() < 1e-9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_source_is_an_error() {
+        let shared = SharedSession::open("/nonexistent/decorr-artifacts");
+        assert!(shared.source("nope").is_err());
+        // stats still count the request
+        assert_eq!(shared.stats().source_requests, 1);
+    }
+
+    #[test]
+    fn shared_source_reads_once_under_concurrency() {
+        let dir = std::env::temp_dir().join(format!("decorr_src_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t.hlo.txt"), "HloModule t\n").unwrap();
+        std::fs::write(
+            dir.join("t.manifest.json"),
+            r#"{"name":"t","inputs":[],"outputs":[]}"#,
+        )
+        .unwrap();
+        let shared = SharedSession::open(&dir);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let shared = shared.clone();
+                scope.spawn(move || {
+                    for _ in 0..4 {
+                        shared.source("t").unwrap();
+                    }
+                });
+            }
+        });
+        let stats = shared.stats();
+        assert_eq!(stats.source_requests, 32);
+        assert_eq!(stats.source_reads, 1, "one disk read for 32 requests");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

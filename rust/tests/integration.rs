@@ -172,7 +172,7 @@ fn tiny_linear_eval_beats_chance() {
         ..Default::default()
     });
     let result = linear_eval(
-        trainer.engine(),
+        trainer.session(),
         "tiny",
         &snapshot,
         &dataset,
