@@ -10,8 +10,9 @@
 //! and reports linear-eval accuracy (the Fig. 3 accuracy panel; slower).
 
 use anyhow::Result;
+use decorr::api::LossSpec;
 use decorr::bench_harness::cmd::pretrain_and_eval;
-use decorr::bench_harness::{bench_for, loss_node_bytes, LossWorkload, Table};
+use decorr::bench_harness::{bench_for, LossWorkload, Table};
 use decorr::config::{TrainConfig, Variant};
 use decorr::regularizer::kernel::{DecorrelationKernel, GroupedFftKernel, NaiveMatrixKernel};
 use decorr::regularizer::Q;
@@ -70,25 +71,25 @@ fn main() -> Result<()> {
 
     let session = Session::open("artifacts")?;
     let mut table = Table::new(&["b", "fwd (ms)", "fwd+bwd (ms)", "loss-node MB"]);
-    let mut add = |label: String, variant: String| -> Result<()> {
-        let fwd = LossWorkload::load(&session, &variant, d, n, false)?;
+    let mut add = |label: String, spec: LossSpec| -> Result<()> {
+        let fwd = LossWorkload::for_spec(&session, &spec, d, n, false)?;
         let f = bench_for(budget, 2, || fwd.run().unwrap());
-        let bwd = LossWorkload::load(&session, &variant, d, n, true)?;
+        let bwd = LossWorkload::for_spec(&session, &spec, d, n, true)?;
         let b = bench_for(budget, 2, || bwd.run().unwrap());
         table.row(vec![
             label,
             format!("{:.2}", f.median_ms()),
             format!("{:.2}", b.median_ms()),
-            format!("{:.1}", loss_node_bytes(&variant, n, d) as f64 / 1e6),
+            format!("{:.1}", spec.loss_node_bytes(n, d) as f64 / 1e6),
         ]);
         Ok(())
     };
-    add("1 (= R_off)".into(), "bt_off".into())?;
+    add("1 (= R_off)".into(), LossSpec::parse("bt_off")?)?;
     for &b in &blocks {
         if b >= d {
-            add(format!("{d} (no grouping)"), "bt_sum".into())?;
+            add(format!("{d} (no grouping)"), LossSpec::parse("bt_sum")?)?;
         } else {
-            add(format!("{b}"), format!("bt_sum_g{b}"))?;
+            add(format!("{b}"), LossSpec::parse(&format!("bt_sum@b={b}"))?)?;
         }
     }
     println!("\nFig. 3 analogue (block-size sweep at d={d}, n={n}):");
@@ -101,7 +102,7 @@ fn main() -> Result<()> {
         for (label, variant) in [("128", Variant::BtSumG128), ("d (no grouping)", Variant::BtSum)]
         {
             let mut cfg = TrainConfig::preset_small();
-            cfg.variant = variant;
+            cfg.spec = variant.spec();
             let out = pretrain_and_eval(cfg, 1536, 512, 150, eval_session)?;
             acc.row(vec![label.to_string(), format!("{:.2}", out.top1)]);
             eval_session = Some(out.session);

@@ -12,11 +12,11 @@
 //!            [--preset small --epochs 6 --family bt]`
 
 use anyhow::Result;
-use decorr::bench_harness::cmd::{display_name, pretrain_and_eval};
+use decorr::bench_harness::cmd::pretrain_and_eval;
 use decorr::bench_harness::Table;
 use decorr::config::{TrainConfig, Variant};
 use decorr::coordinator::project_views;
-use decorr::regularizer::kernel::{normalized_residual, ResidualFamily};
+use decorr::regularizer::kernel::normalized_residual;
 use decorr::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -31,11 +31,13 @@ fn main() -> Result<()> {
     let test_samples = args.get_or("test-samples", 512usize)?;
     args.finish()?;
 
-    let (flat, grouped, residual_family) = if family == "vic" {
-        (Variant::VicSum, Variant::VicSumG128, ResidualFamily::VicReg)
+    let (flat, grouped) = if family == "vic" {
+        (Variant::VicSum.spec(), Variant::VicSumG128.spec())
     } else {
-        (Variant::BtSum, Variant::BtSumG128, ResidualFamily::BarlowTwins)
+        (Variant::BtSum.spec(), Variant::BtSumG128.spec())
     };
+    // The Table-6 residual family (Eq. 16 vs 17) is spec-derived.
+    let residual_family = flat.residual_family();
 
     let mut tab5 = Table::new(&["grouping", "permutation", "top-1 (%)", "s / 10 steps"]);
     let mut tab6 = Table::new(&["grouping", "permutation", "normalized residual"]);
@@ -46,9 +48,9 @@ fn main() -> Result<()> {
     for (variant, grouping) in [(flat, "no"), (grouped, "b=128")] {
         for permute in [false, true] {
             let mut cfg = cfg0.clone();
-            cfg.variant = variant;
+            cfg.spec = variant;
             cfg.permute = permute;
-            println!("== {} permutation={} ==", display_name(variant), permute);
+            println!("== {} permutation={} ==", variant.display_name(), permute);
             let out = pretrain_and_eval(cfg.clone(), train_samples, test_samples, 150, session)?;
             let s_per_10 =
                 out.train_secs / (cfg.total_steps() as f64) * 10.0;

@@ -12,6 +12,7 @@
 //! (requires `make artifacts`).
 
 use anyhow::Result;
+use decorr::api::{LossExecutor, LossSpec};
 use decorr::config::TrainConfig;
 use decorr::coordinator::trainer::{literal_f32, literal_i32, scalar};
 use decorr::coordinator::Trainer;
@@ -73,6 +74,21 @@ fn main() -> Result<()> {
     println!(
         "host kernel R_sum = {r_sum:.6} over {} samples (free-function check {r_sum_free:.6})",
         kernel.samples()
+    );
+
+    // --- 2c. The typed api front door ------------------------------------
+    // A LossSpec names one point of the paper's design space; the kernel,
+    // artifact ids, and labels above are all derived from it. The
+    // HostExecutor wraps the standardize + accumulate + evaluate dance.
+    let spec = LossSpec::parse("bt_sum")?;
+    let mut exec = spec.host_executor(d)?;
+    let facade = exec.evaluate(&za, &zb)?;
+    println!(
+        "spec '{}' ({}) via HostExecutor: R_sum = {:.6}, loss artifact id '{}'",
+        spec,
+        spec.display_name(),
+        facade.regularizer.unwrap_or(f64::NAN),
+        spec.loss_artifact(d, n, false),
     );
 
     // --- 3. A few pretraining steps --------------------------------------

@@ -14,7 +14,8 @@
 //! recorded in EXPERIMENTS.md.
 
 use anyhow::Result;
-use decorr::config::{TrainConfig, Variant};
+use decorr::api::LossSpec;
+use decorr::config::TrainConfig;
 use decorr::coordinator::{linear_eval, Trainer};
 use decorr::data::synth::{ShapeWorld, ShapeWorldConfig, Vocab};
 use decorr::util::cli::Args;
@@ -23,7 +24,7 @@ use decorr::util::timer::human_duration;
 fn main() -> Result<()> {
     let mut args = Args::from_env()?;
     let mut cfg = TrainConfig::preset_e2e();
-    cfg.variant = Variant::parse(&args.str_or("variant", "bt_sum"))?;
+    cfg.spec = LossSpec::parse(&args.str_or("variant", "bt_sum"))?;
     let preset_flag = args.str_or("preset", &cfg.preset.clone());
     cfg.preset = preset_flag;
     cfg.epochs = args.get_or("epochs", cfg.epochs)?;
@@ -36,10 +37,7 @@ fn main() -> Result<()> {
 
     println!(
         "=== end-to-end SSL pretraining: {} on preset {} ({} epochs x {} steps) ===",
-        cfg.variant.as_str(),
-        cfg.preset,
-        cfg.epochs,
-        cfg.steps_per_epoch
+        cfg.spec, cfg.preset, cfg.epochs, cfg.steps_per_epoch
     );
     let seed = cfg.seed;
     let preset = cfg.preset.clone();

@@ -113,7 +113,73 @@ def input_shape(preset: Preset):
 # artifacts (emitted below) that the rust suite checks for numerical
 # equality against the native forms, and on a real TPU they are the forms
 # that tile VMEM/MXU (DESIGN.md §Hardware-Adaptation).
+def normalize_variant(spec: str) -> str:
+    """Normalize the rust ``api::LossSpec`` grammar to an artifact fragment.
+
+    ``"bt_sum@b=64,q=1"`` → ``"bt_sum_g64_q1"``; plain fragments pass
+    through unchanged (idempotent). Only the structural options (``b``,
+    ``q``) participate in artifact names; execution knobs (``norm``,
+    ``lambda``, ``threads``) are ignored here. Canonical suffix order is
+    ``_g<block>`` then ``_q<q>`` (an existing ``_q`` suffix is lifted so
+    a ``@b=`` option lands before it), and ``@`` options override
+    fragment suffixes — both mirroring ``LossSpec::parse``. The ``_q``
+    suffix is dropped at the family default (q=2 for bt, q=1 for vic).
+    """
+    spec = spec.strip().lower()
+    base, _, opts = spec.partition("@")
+    # Lift existing structural suffixes so options can override them and
+    # the canonical _g-then-_q order is restored on re-append.
+    q = None
+    if base.endswith(("_q1", "_q2")):
+        q = int(base[-1])
+        base = base[:-3]
+    block = None
+    if "_g" in base:
+        base, _, blk = base.rpartition("_g")
+        block = int(blk)
+    for kv in filter(None, (t.strip() for t in opts.split(","))):
+        key, _, value = kv.partition("=")
+        if key in ("b", "block"):
+            block = int(value)
+        elif key == "q":
+            q = int(value)
+        elif key not in ("norm", "lambda", "lam", "threads", "t"):
+            # Mirror LossSpec::parse: reject typos instead of silently
+            # building artifacts for a different loss.
+            raise ValueError(
+                f"unknown loss-spec option '{key}' in '{spec}' "
+                "(valid: b, q, norm, lambda, threads)"
+            )
+    if block is not None:
+        base += f"_g{block}"
+    default_q = 1 if base.startswith("vic") else 2
+    if q is not None and q != default_q:
+        base += f"_q{q}"
+    return base
+
+
+def split_variants(arg: str):
+    """Split a --variants list. Semicolons separate entries when present;
+    with commas, a bare ``key=value`` token (no ``@``) is the continuation
+    of the previous entry's option list, so a single spec-grammar entry
+    like ``"bt_sum@b=64,q=1"`` stays whole. Mirrors the rust CLI's
+    ``parse_variant_list``."""
+    if ";" in arg:
+        entries = [t for t in arg.split(";") if t.strip()]
+    else:
+        entries = []
+        for tok in arg.split(","):
+            if not tok.strip():
+                continue
+            if "=" in tok and "@" not in tok and entries:
+                entries[-1] += "," + tok
+            else:
+                entries.append(tok)
+    return [normalize_variant(v) for v in entries]
+
+
 def variant_cfg(variant: str, d: int, use_pallas: bool = False) -> M.LossConfig:
+    variant = normalize_variant(variant)
     block = 0
     q_override = None
     base = variant
@@ -561,7 +627,7 @@ def main():
 
     os.makedirs(args.out_dir, exist_ok=True)
     presets = [PRESETS[p] for p in args.presets.split(",") if p]
-    variants = [v for v in args.variants.split(",") if v]
+    variants = split_variants(args.variants)
 
     if not args.skip_train:
         for preset in presets:
@@ -575,7 +641,7 @@ def main():
     if not args.skip_bench:
         print("bench sweep:")
         dims = [int(d) for d in args.bench_dims.split(",") if d]
-        for variant in [v for v in args.bench_variants.split(",") if v]:
+        for variant in split_variants(args.bench_variants):
             for d in dims:
                 build_loss_only(args.out_dir, variant, d, args.bench_n, args.force)
                 build_loss_only(

@@ -108,3 +108,37 @@ class TestRoundTrip:
         assert cfg.q == 1
         with pytest.raises(ValueError):
             aot.variant_cfg("nope", 64)
+
+    def test_spec_grammar_normalizes_to_fragments(self):
+        # mirrors the rust api::LossSpec grammar and suffix defaults
+        assert aot.normalize_variant("bt_sum@b=64,q=1") == "bt_sum_g64_q1"
+        assert aot.normalize_variant("vic_sum@b=256,q=2") == "vic_sum_g256_q2"
+        # family-default q is dropped, matching the rust fragment scheme
+        assert aot.normalize_variant("bt_sum@q=2") == "bt_sum"
+        assert aot.normalize_variant("vic_sum@b=64,q=1") == "vic_sum_g64"
+        # fragments pass through untouched (idempotent)
+        assert aot.normalize_variant("bt_sum_g128") == "bt_sum_g128"
+        assert aot.normalize_variant("bt_sum_g64_q1") == "bt_sum_g64_q1"
+        # fragment + option grammars compose in canonical _g-then-_q order
+        assert aot.normalize_variant("bt_sum_q1@b=64") == "bt_sum_g64_q1"
+        # execution knobs are not part of artifact names
+        assert aot.normalize_variant("bt_off@lambda=0.005") == "bt_off"
+        # unknown option keys are typos, not silently-dropped knobs
+        with pytest.raises(ValueError):
+            aot.normalize_variant("bt_sum@blck=64")
+        # variant_cfg accepts the grammar end to end
+        cfg = aot.variant_cfg("bt_sum@b=64,q=1", 2048)
+        assert cfg.block == 64 and cfg.q == 1 and cfg.variant == "bt_sum"
+
+    def test_split_variants_handles_both_separators(self):
+        assert aot.split_variants("bt_off,bt_sum") == ["bt_off", "bt_sum"]
+        assert aot.split_variants("bt_sum@b=64,q=1;vic_off") == [
+            "bt_sum_g64_q1",
+            "vic_off",
+        ]
+        # a single comma-bearing spec entry stays whole without semicolons
+        assert aot.split_variants("bt_sum@b=64,q=1") == ["bt_sum_g64_q1"]
+        assert aot.split_variants("bt_sum@b=64,q=1,vic_off") == [
+            "bt_sum_g64_q1",
+            "vic_off",
+        ]

@@ -5,7 +5,7 @@
 //! plus empirical scaling exponents. Emits `BENCH_regularizer_host.json`
 //! for the perf trajectory.
 
-use decorr::bench_harness::{bench_for, smoke_budget, table, Contender, Table};
+use decorr::bench_harness::{bench_for, default_grouped_block, smoke_budget, table, Contender, Table};
 use decorr::regularizer::kernel::default_threads;
 use decorr::regularizer::Q;
 use decorr::util::rng::Rng;
@@ -34,7 +34,7 @@ fn main() {
         let mut contenders = vec![
             Contender::naive_r_off(d, 1),
             Contender::fft_r_sum(d, Q::L2, 1),
-            Contender::grouped_r_sum(d, 128.min(d), Q::L2, 1),
+            Contender::grouped_r_sum(d, default_grouped_block(d), Q::L2, 1),
         ];
         if default_threads() > 1 {
             contenders.push(Contender::fft_r_sum(d, Q::L2, default_threads()));

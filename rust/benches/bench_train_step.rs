@@ -6,6 +6,7 @@
 //! training time, with the gain concentrated at the loss node (most
 //! visible for lightweight backbones).
 
+use decorr::api::RegularizerForm;
 use decorr::bench_harness::{bench, Table};
 use decorr::config::{TrainConfig, Variant};
 use decorr::coordinator::Trainer;
@@ -17,15 +18,15 @@ fn main() {
     let mut table = Table::new(&["preset", "variant", "ms/step (median)", "vs baseline"]);
     for preset in ["small", "e2e"] {
         let mut baseline = None;
-        for variant in [
-            Variant::BtOff,
-            Variant::BtSum,
-            Variant::BtSumG128,
-            Variant::VicOff,
-            Variant::VicSum,
+        for spec in [
+            Variant::BtOff.spec(),
+            Variant::BtSum.spec(),
+            Variant::BtSumG128.spec(),
+            Variant::VicOff.spec(),
+            Variant::VicSum.spec(),
         ] {
             let mut cfg = TrainConfig::preset(preset).unwrap();
-            cfg.variant = variant;
+            cfg.spec = spec;
             cfg.out_dir = String::new();
             let mut trainer = Trainer::new(cfg.clone()).expect("run `make artifacts` first");
             let ds = ShapeWorld::new(ShapeWorldConfig {
@@ -41,18 +42,17 @@ fn main() {
                 m
             });
             let ms = stats.median * 1e3;
-            let rel = match variant {
-                Variant::BtOff | Variant::VicOff => {
-                    baseline = Some(ms);
-                    "1.00x".to_string()
-                }
-                _ => baseline
+            let rel = if spec.form == RegularizerForm::OffDiag {
+                baseline = Some(ms);
+                "1.00x".to_string()
+            } else {
+                baseline
                     .map(|b| format!("{:.2}x", b / ms))
-                    .unwrap_or_else(|| "-".into()),
+                    .unwrap_or_else(|| "-".into())
             };
             table.row(vec![
                 preset.to_string(),
-                variant.as_str().to_string(),
+                spec.to_string(),
                 format!("{ms:.1}"),
                 rel,
             ]);

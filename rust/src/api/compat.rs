@@ -1,0 +1,99 @@
+//! Legacy `Variant` ↔ `LossSpec` bridge.
+//!
+//! The closed [`Variant`] enum predates the typed spec API; it survives
+//! as a thin alias layer naming the paper's six table presets so existing
+//! configs, artifact names, and call sites keep working. New code should
+//! construct [`LossSpec`]s directly — the spec space is a strict superset
+//! (any block size, either `q`, norm convention, λ, threads).
+
+use crate::config::Variant;
+use crate::regularizer::Q;
+
+use super::spec::{LossFamily, LossSpec, RegularizerForm};
+
+impl Variant {
+    /// The equivalent typed spec. Every derived quantity (artifact ids,
+    /// kernels, labels) matches the legacy hand-derived values exactly —
+    /// asserted by the compat tests in `tests/api.rs`.
+    pub fn spec(&self) -> LossSpec {
+        let (family, form) = match self {
+            Variant::BtOff => (LossFamily::BarlowTwins, RegularizerForm::OffDiag),
+            Variant::BtSum => (LossFamily::BarlowTwins, RegularizerForm::Sum { q: Q::L2 }),
+            Variant::BtSumG128 => (
+                LossFamily::BarlowTwins,
+                RegularizerForm::GroupedSum { q: Q::L2, block: 128 },
+            ),
+            Variant::VicOff => (LossFamily::VicReg, RegularizerForm::OffDiag),
+            Variant::VicSum => (LossFamily::VicReg, RegularizerForm::Sum { q: Q::L1 }),
+            Variant::VicSumG128 => (
+                LossFamily::VicReg,
+                RegularizerForm::GroupedSum { q: Q::L1, block: 128 },
+            ),
+        };
+        LossSpec::builder(family)
+            .form(form)
+            .build()
+            .unwrap_or_else(|e| unreachable!("paper preset specs are valid: {e}"))
+    }
+}
+
+impl From<Variant> for LossSpec {
+    fn from(v: Variant) -> LossSpec {
+        v.spec()
+    }
+}
+
+impl LossSpec {
+    /// The paper's six table presets, in table order — the spec-space
+    /// image of [`Variant::all`].
+    pub fn paper_presets() -> [LossSpec; 6] {
+        Variant::all().map(|v| v.spec())
+    }
+
+    /// The legacy enum member this spec corresponds to, if it is one of
+    /// the six paper presets (structural match on family + form; norm, λ,
+    /// and threads are execution knobs the enum never carried).
+    pub fn legacy_variant(&self) -> Option<Variant> {
+        Variant::all()
+            .into_iter()
+            .find(|v| {
+                let s = v.spec();
+                s.family == self.family && s.form == self.form
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_round_trip_through_specs() {
+        for v in Variant::all() {
+            let spec = v.spec();
+            assert_eq!(spec.artifact_fragment(), v.as_str(), "{v:?}");
+            assert_eq!(spec.legacy_variant(), Some(v));
+            assert_eq!(LossSpec::parse(v.as_str()).unwrap(), spec);
+            assert_eq!(spec.is_proposed(), v.is_proposed());
+        }
+    }
+
+    #[test]
+    fn specs_outside_the_enum_have_no_legacy_variant() {
+        assert_eq!(
+            LossSpec::parse("bt_sum@b=64,q=1").unwrap().legacy_variant(),
+            None
+        );
+        assert_eq!(
+            LossSpec::parse("vic_sum@b=256,q=2").unwrap().legacy_variant(),
+            None
+        );
+        // ...but knob-only deviations still map back.
+        assert_eq!(
+            LossSpec::parse("bt_sum@lambda=0.005,threads=4")
+                .unwrap()
+                .legacy_variant(),
+            Some(Variant::BtSum)
+        );
+    }
+}

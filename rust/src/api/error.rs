@@ -1,0 +1,169 @@
+//! Typed validation errors for the [`LossSpec`](super::LossSpec) API.
+//!
+//! Every checkable precondition of the loss-specification surface has a
+//! dedicated variant, so callers can match on the failure instead of
+//! parsing panic strings. `SpecError` implements [`std::error::Error`],
+//! so it composes with `anyhow::Result` throughout the coordinator via
+//! `?`.
+
+use std::fmt;
+
+/// A validation or parse failure of a loss specification or one of the
+/// tensors it is applied to. No public `api` or `regularizer` entry point
+/// panics on bad input — they return one of these.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecError {
+    /// The grouped regularizer's block size does not evenly divide the
+    /// embedding dimension (or is zero). The host spectral path requires
+    /// `block | d`; only the device artifacts zero-pad a ragged last
+    /// group (paper footnote 4).
+    BlockMismatch {
+        /// Requested block size `b`.
+        block: usize,
+        /// Embedding dimension `d` (0 when the dimension is not yet
+        /// known, i.e. the block was rejected at build time).
+        d: usize,
+    },
+    /// The embedding dimension is too small for any decorrelation
+    /// regularizer (`d >= 2` is required — with one feature there is
+    /// nothing to decorrelate).
+    DimTooSmall {
+        /// Offending dimension.
+        d: usize,
+    },
+    /// A tensor's feature dimension does not match the dimension the
+    /// kernel/executor was planned for.
+    DimMismatch {
+        /// Dimension the spec/kernel was built for.
+        expected: usize,
+        /// Dimension of the offered tensor.
+        got: usize,
+    },
+    /// The batch size does not match the one a device executable was
+    /// compiled for (AOT artifacts have fixed shapes).
+    BatchMismatch {
+        /// Batch size the executable was compiled for.
+        expected: usize,
+        /// Batch size of the offered views.
+        got: usize,
+    },
+    /// Paired views disagree in shape.
+    ShapeMismatch {
+        /// Shape of view A.
+        a: Vec<usize>,
+        /// Shape of view B.
+        b: Vec<usize>,
+    },
+    /// A tensor has the wrong rank for the operation (views must be
+    /// `(n, d)` matrices).
+    BadRank {
+        /// Required rank.
+        expected: usize,
+        /// Offered rank.
+        got: usize,
+    },
+    /// A matrix argument is not square where a `d x d` correlation
+    /// matrix is required.
+    NotSquare {
+        /// Offending shape.
+        shape: Vec<usize>,
+    },
+    /// The norm exponent is outside the paper's `q ∈ {1, 2}`.
+    InvalidQ {
+        /// Offending token.
+        q: String,
+    },
+    /// A spec string could not be parsed.
+    Parse {
+        /// The input that failed.
+        input: String,
+        /// What went wrong.
+        reason: String,
+    },
+    /// An artifact manifest does not match what the spec expects.
+    Manifest {
+        /// Artifact name being checked.
+        artifact: String,
+        /// What disagreed.
+        reason: String,
+    },
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::BlockMismatch { block: 0, .. } => {
+                write!(f, "grouped block size must be >= 1")
+            }
+            SpecError::BlockMismatch { block, d } => write!(
+                f,
+                "block size {block} does not divide the embedding dimension {d} \
+                 (the host spectral path requires block | d)"
+            ),
+            SpecError::DimTooSmall { d } => {
+                write!(f, "embedding dimension {d} is too small (need d >= 2)")
+            }
+            SpecError::DimMismatch { expected, got } => write!(
+                f,
+                "embedding dimension mismatch: planned for d={expected}, got d={got}"
+            ),
+            SpecError::BatchMismatch { expected, got } => write!(
+                f,
+                "batch-size mismatch: executable compiled for n={expected}, got n={got}"
+            ),
+            SpecError::ShapeMismatch { a, b } => {
+                write!(f, "paired views disagree in shape: {a:?} vs {b:?}")
+            }
+            SpecError::BadRank { expected, got } => {
+                write!(f, "expected a rank-{expected} tensor, got rank {got}")
+            }
+            SpecError::NotSquare { shape } => {
+                write!(f, "expected a square (d, d) matrix, got shape {shape:?}")
+            }
+            SpecError::InvalidQ { q } => {
+                write!(f, "invalid norm exponent q='{q}' (valid: 1, 2)")
+            }
+            SpecError::Parse { input, reason } => {
+                write!(f, "cannot parse loss spec '{input}': {reason}")
+            }
+            SpecError::Manifest { artifact, reason } => {
+                write!(f, "artifact '{artifact}' does not match the spec: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = SpecError::BlockMismatch { block: 5, d: 12 };
+        let s = e.to_string();
+        assert!(s.contains('5') && s.contains("12"), "{s}");
+        let z = SpecError::BlockMismatch { block: 0, d: 0 }.to_string();
+        assert!(z.contains(">= 1"), "{z}");
+        let p = SpecError::Parse {
+            input: "xx".into(),
+            reason: "nope".into(),
+        }
+        .to_string();
+        assert!(p.contains("xx") && p.contains("nope"), "{p}");
+    }
+
+    #[test]
+    fn is_std_error() {
+        fn takes_error<E: std::error::Error + Send + Sync + 'static>(_: E) {}
+        takes_error(SpecError::DimTooSmall { d: 1 });
+        // and therefore converts into anyhow::Error via `?`
+        fn through_anyhow() -> anyhow::Result<()> {
+            let typed: Result<(), SpecError> = Err(SpecError::DimTooSmall { d: 1 });
+            typed?;
+            Ok(())
+        }
+        assert!(through_anyhow().is_err());
+    }
+}

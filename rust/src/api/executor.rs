@@ -1,0 +1,431 @@
+//! The fallible `LossExecutor` facade: one polymorphic interface over the
+//! host (pure-rust kernel) and device (PJRT artifact) loss paths.
+//!
+//! A [`LossExecutor`] takes a pair of host-resident twin-view embedding
+//! matrices and returns the loss terms the spec describes. The two
+//! implementations share the [`LossSpec`]-derived contract:
+//!
+//! * [`HostExecutor`] standardizes (BT) or centers (VIC) the views and
+//!   drives the spec-derived [`DecorrelationKernel`] — the path behind
+//!   trainer diagnostics, the eval feature residual, and the host bench
+//!   contenders.
+//! * [`DeviceExecutor`] loads the spec-derived `loss_*` artifact through
+//!   the runtime [`Session`] cache and executes it via PJRT — the path
+//!   the integration checks and `decorr spec --check` use to confirm the
+//!   lowered graph agrees with the host reference.
+//!
+//! Nothing here panics on bad input: construction fails with a typed
+//! [`SpecError`], evaluation with `anyhow::Error` (wrapping `SpecError`
+//! for shape problems, PJRT errors for device ones).
+
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::regularizer::kernel::DecorrelationKernel;
+use crate::runtime::literal::{literal_f32, literal_i32, scalar};
+use crate::runtime::{Artifact, Session};
+use crate::util::tensor::Tensor;
+
+use super::error::SpecError;
+use super::spec::{LossFamily, LossSpec, RegularizerForm};
+
+/// Which execution substrate a [`LossExecutor`] runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust kernels over host tensors.
+    Host,
+    /// AOT-lowered HLO executed through the PJRT runtime.
+    Device,
+}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Backend::Host => "host",
+            Backend::Device => "device",
+        })
+    }
+}
+
+/// One loss evaluation. The device path only observes the fused scalar;
+/// the host path decomposes it.
+#[derive(Clone, Copy, Debug)]
+pub struct LossOutput {
+    /// The total loss: `invariance + λ · regularizer` when the terms are
+    /// observable, the artifact's fused scalar on the device path.
+    pub total: f64,
+    /// The invariance term (BT: `Σ_i (1 - C_ii)²`; VIC: the mean squared
+    /// view distance), when the backend exposes it.
+    pub invariance: Option<f64>,
+    /// The decorrelation regularizer value, when the backend exposes it.
+    pub regularizer: Option<f64>,
+}
+
+/// A loss evaluator derived from a [`LossSpec`]. See the module docs.
+pub trait LossExecutor {
+    /// The spec this executor evaluates.
+    fn spec(&self) -> &LossSpec;
+
+    /// The substrate it runs on.
+    fn backend(&self) -> Backend;
+
+    /// Evaluate the loss on paired `(n, d)` views.
+    fn evaluate(&mut self, a: &Tensor, b: &Tensor) -> Result<LossOutput>;
+
+    /// Row label for tables: `"<spec> [host]"`.
+    fn label(&self) -> String {
+        format!("{} [{}]", self.spec(), self.backend())
+    }
+}
+
+/// Check a pair of views against the executor's planned dimension.
+fn check_views(a: &Tensor, b: &Tensor, d: usize) -> Result<usize, SpecError> {
+    if a.shape().len() != 2 {
+        return Err(SpecError::BadRank {
+            expected: 2,
+            got: a.shape().len(),
+        });
+    }
+    if a.shape() != b.shape() {
+        return Err(SpecError::ShapeMismatch {
+            a: a.shape().to_vec(),
+            b: b.shape().to_vec(),
+        });
+    }
+    if a.shape()[1] != d {
+        return Err(SpecError::DimMismatch {
+            expected: d,
+            got: a.shape()[1],
+        });
+    }
+    Ok(a.shape()[0])
+}
+
+// ------------------------------------------------------------------ host
+
+/// Host-side executor: spec-derived kernel + the family's view
+/// normalization. Reusable across batches — plans persist, statistics are
+/// reset per evaluation.
+pub struct HostExecutor {
+    spec: LossSpec,
+    kernel: Box<dyn DecorrelationKernel>,
+}
+
+impl HostExecutor {
+    /// Build for embedding dimension `d`. Fails (typed) when the spec
+    /// cannot be instantiated at `d` (block mismatch, `d < 2`).
+    pub fn new(spec: &LossSpec, d: usize) -> Result<HostExecutor, SpecError> {
+        Ok(HostExecutor {
+            spec: *spec,
+            kernel: spec.kernel(d)?,
+        })
+    }
+
+    /// The underlying kernel's stable identifier.
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    /// Reduce the accumulated kernel state under this spec's form.
+    fn reduce(&self, norm: f32) -> Result<f64> {
+        Ok(match self.spec.form {
+            RegularizerForm::OffDiag => self
+                .kernel
+                .r_off(norm)
+                .context("R_off spec must derive a matrix kernel")?,
+            _ => self.kernel.r_sum(norm, self.spec.q()),
+        })
+    }
+}
+
+impl LossExecutor for HostExecutor {
+    fn spec(&self) -> &LossSpec {
+        &self.spec
+    }
+
+    fn backend(&self) -> Backend {
+        Backend::Host
+    }
+
+    fn evaluate(&mut self, a: &Tensor, b: &Tensor) -> Result<LossOutput> {
+        let n = check_views(a, b, self.kernel.dim())?;
+        let norm = self.spec.norm_value(n);
+        // Self-evaluation (a and b are the same tensor — the eval
+        // feature-residual path) normalizes one copy instead of two.
+        let same_view = std::ptr::eq(a, b);
+        let (inv, reg) = match self.spec.family {
+            LossFamily::BarlowTwins => {
+                let mut sa = a.clone();
+                sa.standardize_columns(1e-6);
+                let sb_owned = if same_view {
+                    None
+                } else {
+                    let mut sb = b.clone();
+                    sb.standardize_columns(1e-6);
+                    Some(sb)
+                };
+                let sb = sb_owned.as_ref().unwrap_or(&sa);
+                self.kernel.reset();
+                self.kernel.accumulate(&sa, sb);
+                let reg = self.reduce(norm)?;
+                // Invariance needs only the diagonal of C — O(nd).
+                let d = self.kernel.dim();
+                let mut inv = 0.0f64;
+                for i in 0..d {
+                    let mut cii = 0.0f64;
+                    for k in 0..n {
+                        cii += (sa.at2(k, i) * sb.at2(k, i)) as f64;
+                    }
+                    cii /= norm as f64;
+                    inv += (1.0 - cii) * (1.0 - cii);
+                }
+                (inv, reg)
+            }
+            LossFamily::VicReg => {
+                // Invariance: mean squared view distance (Eq. 3's s-term).
+                let mut inv = 0.0f64;
+                if !same_view {
+                    for (x, y) in a.data().iter().zip(b.data()) {
+                        let diff = (x - y) as f64;
+                        inv += diff * diff;
+                    }
+                    inv /= n as f64;
+                }
+                // Covariance term per view, summed (Eq. 4's c-term under
+                // this spec's regularizer form). x + x is exact in f64,
+                // so the self-evaluation shortcut stays bit-identical.
+                let mut reg = 0.0f64;
+                for t in [a, b] {
+                    let mut centered = t.clone();
+                    centered.center_columns();
+                    self.kernel.reset();
+                    self.kernel.accumulate(&centered, &centered);
+                    reg += self.reduce(norm)?;
+                    if same_view {
+                        reg += reg;
+                        break;
+                    }
+                }
+                (inv, reg)
+            }
+        };
+        Ok(LossOutput {
+            total: inv + self.spec.lambda as f64 * reg,
+            invariance: Some(inv),
+            regularizer: Some(reg),
+        })
+    }
+}
+
+// ---------------------------------------------------------------- device
+
+/// Device-side executor: the spec-derived `loss_<fragment>_d<d>_n<n>`
+/// artifact, loaded through the shared [`Session`] cache and executed per
+/// evaluation with an identity feature permutation (call
+/// [`set_permutation`](DeviceExecutor::set_permutation) to exercise the
+/// §4.3 path).
+pub struct DeviceExecutor {
+    spec: LossSpec,
+    artifact: Arc<Artifact>,
+    perm: Vec<u32>,
+    d: usize,
+    n: usize,
+}
+
+impl DeviceExecutor {
+    /// Load the loss-only (or loss+grad when `grad`) artifact for shape
+    /// `(n, d)` from `session`'s cache and bind it to this spec. Fails
+    /// when the artifact is absent, fails to compile, or its manifest
+    /// disagrees with the spec.
+    pub fn new(
+        session: &Session,
+        spec: &LossSpec,
+        d: usize,
+        n: usize,
+        grad: bool,
+    ) -> Result<DeviceExecutor> {
+        if d < 2 {
+            return Err(SpecError::DimTooSmall { d }.into());
+        }
+        let name = spec.loss_artifact(d, n, grad);
+        let artifact = session
+            .load(&name)
+            .with_context(|| format!("loading device loss artifact {name}"))?;
+        let manifest = artifact.manifest();
+        for spec_in in manifest.inputs.iter().take(2) {
+            if spec_in.shape != [n, d] {
+                return Err(SpecError::Manifest {
+                    artifact: name.clone(),
+                    reason: format!(
+                        "input '{}' has shape {:?}, spec expects [{n}, {d}]",
+                        spec_in.name, spec_in.shape
+                    ),
+                }
+                .into());
+            }
+        }
+        Ok(DeviceExecutor {
+            spec: *spec,
+            artifact,
+            perm: (0..d as u32).collect(),
+            d,
+            n,
+        })
+    }
+
+    /// Replace the identity feature permutation fed to the artifact.
+    pub fn set_permutation(&mut self, perm: Vec<u32>) -> Result<(), SpecError> {
+        if perm.len() != self.d {
+            return Err(SpecError::DimMismatch {
+                expected: self.d,
+                got: perm.len(),
+            });
+        }
+        self.perm = perm;
+        Ok(())
+    }
+
+    /// The compiled artifact (shared with the session cache).
+    pub fn artifact(&self) -> &Arc<Artifact> {
+        &self.artifact
+    }
+}
+
+impl LossExecutor for DeviceExecutor {
+    fn spec(&self) -> &LossSpec {
+        &self.spec
+    }
+
+    fn backend(&self) -> Backend {
+        Backend::Device
+    }
+
+    fn evaluate(&mut self, a: &Tensor, b: &Tensor) -> Result<LossOutput> {
+        let n = check_views(a, b, self.d)?;
+        if n != self.n {
+            return Err(SpecError::BatchMismatch {
+                expected: self.n,
+                got: n,
+            }
+            .into());
+        }
+        let za = literal_f32(a)?;
+        let zb = literal_f32(b)?;
+        let perm = literal_i32(&self.perm)?;
+        let out = self.artifact.execute_literals_ref(&[&za, &zb, &perm])?;
+        let total = scalar(&out[0])? as f64;
+        Ok(LossOutput {
+            total,
+            invariance: None,
+            regularizer: None,
+        })
+    }
+}
+
+impl LossSpec {
+    /// Derive a host executor for dimension `d` (typed failure).
+    pub fn host_executor(&self, d: usize) -> Result<HostExecutor, SpecError> {
+        HostExecutor::new(self, d)
+    }
+
+    /// Derive a device executor over `session` for shape `(n, d)`.
+    pub fn device_executor(
+        &self,
+        session: &Session,
+        d: usize,
+        n: usize,
+        grad: bool,
+    ) -> Result<DeviceExecutor> {
+        DeviceExecutor::new(session, self, d, n, grad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::regularizer::{self, Q};
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, n: usize, d: usize) -> Tensor {
+        Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect())
+    }
+
+    #[test]
+    fn host_bt_sum_matches_legacy_composition() {
+        let mut rng = Rng::new(101);
+        let (n, d) = (32usize, 16usize);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        let lambda = 2f32.powi(-10);
+        let spec = LossSpec::builder(LossFamily::BarlowTwins)
+            .sum(Q::L2)
+            .lambda(lambda)
+            .build()
+            .unwrap();
+        let mut exec = spec.host_executor(d).unwrap();
+        let out = exec.evaluate(&a, &b).unwrap();
+        // Bit-identical to the pre-redesign host composition: same
+        // standardization, same diag loop, same single-thread FFT kernel.
+        let legacy = regularizer::barlow_twins_sum_loss(&a, &b, lambda, Q::L2);
+        assert_eq!(out.total, legacy);
+        assert!(out.invariance.is_some() && out.regularizer.is_some());
+    }
+
+    #[test]
+    fn host_bt_off_matches_legacy_r_off() {
+        let mut rng = Rng::new(102);
+        let (n, d) = (24usize, 10usize);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        let spec = LossSpec::builder(LossFamily::BarlowTwins).off().build().unwrap();
+        let mut exec = spec.host_executor(d).unwrap();
+        let reg = exec.evaluate(&a, &b).unwrap().regularizer.unwrap();
+        let mut sa = a.clone();
+        let mut sb = b.clone();
+        sa.standardize_columns(1e-6);
+        sb.standardize_columns(1e-6);
+        let mut k = crate::regularizer::kernel::NaiveMatrixKernel::new(d);
+        k.accumulate(&sa, &sb);
+        assert_eq!(reg, k.r_off(n as f32).unwrap());
+    }
+
+    #[test]
+    fn host_vic_reg_sums_both_views() {
+        let mut rng = Rng::new(103);
+        let (n, d) = (20usize, 8usize);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        let spec = LossSpec::builder(LossFamily::VicReg).sum(Q::L1).build().unwrap();
+        let mut exec = spec.host_executor(d).unwrap();
+        let out = exec.evaluate(&a, &b).unwrap();
+        let norm = (n as f32 - 1.0).max(1.0);
+        let mut expect = 0.0;
+        for t in [&a, &b] {
+            let mut c = (*t).clone();
+            c.center_columns();
+            expect += regularizer::r_sum_fft(&c, &c, norm, Q::L1);
+        }
+        assert_eq!(out.regularizer.unwrap(), expect);
+        // identical views -> zero invariance
+        let same = exec.evaluate(&a, &a).unwrap();
+        assert_eq!(same.invariance, Some(0.0));
+    }
+
+    #[test]
+    fn shape_errors_are_typed_not_panics() {
+        let spec = LossSpec::parse("bt_sum").unwrap();
+        let mut exec = spec.host_executor(8).unwrap();
+        let a = Tensor::zeros(&[4, 8]);
+        let b = Tensor::zeros(&[4, 6]);
+        let err = exec.evaluate(&a, &b).unwrap_err();
+        assert!(err.downcast_ref::<SpecError>().is_some(), "{err}");
+        let wrong_d = Tensor::zeros(&[4, 6]);
+        let err = exec.evaluate(&wrong_d, &wrong_d).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SpecError>(),
+            Some(&SpecError::DimMismatch { expected: 8, got: 6 })
+        );
+    }
+}

@@ -1,0 +1,46 @@
+//! The `api` front door: typed, composable loss specification and the
+//! fallible executor facade.
+//!
+//! Everything the library can train, evaluate, or benchmark is named by a
+//! [`LossSpec`] — a point of the paper's design space (§3–§4):
+//!
+//! ```text
+//!            {Barlow Twins, VICReg}                    LossFamily
+//!          × {R_off, R_sum, R_sum^(b)}                 RegularizerForm
+//!          × q ∈ {1, 2}  × block b  × norm  × λ  × threads
+//!                      │
+//!                  LossSpec  ("vic_sum@b=64,q=1", "bt_sum_g128", ...)
+//!                      │
+//!        ┌─────────────┼────────────────┬───────────────────┐
+//!        ▼             ▼                ▼                   ▼
+//!  host kernel   artifact ids     diagnostics          labels/memory
+//!  .kernel(d)    .train_artifact  .residual_family     .display_name
+//!                .loss_artifact   (Eq. 16 vs 17)       .contender_label
+//!                .grad_artifact                        .loss_node_bytes
+//!        │             │
+//!        ▼             ▼
+//!  HostExecutor   DeviceExecutor        — both impl LossExecutor
+//!  (planned FFT   (runtime::Session
+//!   kernels)       + PJRT artifact)
+//! ```
+//!
+//! The derivations that used to be duplicated per consumer (trainer, DDP,
+//! linear eval, bench harness, CLI) live here once; consumers hold a spec
+//! and ask for what they need. Validation is typed and total — every
+//! checkable precondition returns a [`SpecError`] instead of panicking,
+//! which is what makes the surface fit for a serving path.
+//!
+//! The legacy [`Variant`](crate::config::Variant) enum survives as a thin
+//! alias layer over the six paper presets (see [`compat`]); its artifact
+//! names and labels are byte-identical to the spec-derived ones.
+
+#![deny(missing_docs)]
+
+pub mod compat;
+pub mod error;
+pub mod executor;
+pub mod spec;
+
+pub use error::SpecError;
+pub use executor::{Backend, DeviceExecutor, HostExecutor, LossExecutor, LossOutput};
+pub use spec::{LossFamily, LossSpec, LossSpecBuilder, NormConvention, RegularizerForm};

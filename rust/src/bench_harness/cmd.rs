@@ -7,9 +7,11 @@
 
 use anyhow::{Context, Result};
 
+use crate::api::{LossExecutor, LossSpec, RegularizerForm};
 use crate::config::{TrainConfig, Variant};
 use crate::coordinator::{linear_eval, Checkpoint, InputAdapter, Trainer};
 use crate::data::synth::{ShapeWorld, ShapeWorldConfig, Vocab};
+use crate::regularizer::kernel::DecorrelationKernel;
 use crate::runtime::Session;
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
@@ -19,7 +21,7 @@ use crate::util::timer::human_duration;
 use super::contenders::Contender;
 use super::stats::bench_for;
 use super::table::Table;
-use super::workload::{loss_node_bytes, LossWorkload};
+use super::workload::LossWorkload;
 
 // Re-exported from its new home in the coordinator so existing callers
 // (`decorr::bench_harness::cmd::project_views`) keep working.
@@ -27,8 +29,8 @@ pub use crate::coordinator::project_views;
 
 /// Outcome of one pretrain + linear-eval cycle.
 pub struct RunOutcome {
-    /// Loss variant trained.
-    pub variant: Variant,
+    /// Loss spec trained.
+    pub spec: LossSpec,
     /// Linear-probe top-1 accuracy (%).
     pub top1: f32,
     /// Pretraining wall time (seconds).
@@ -55,7 +57,7 @@ pub fn pretrain_and_eval(
     session: Option<Session>,
 ) -> Result<RunOutcome> {
     cfg.out_dir = String::new(); // tables log their own summary
-    let variant = cfg.variant;
+    let spec = cfg.spec;
     let seed = cfg.seed;
     let preset = cfg.preset.clone();
     let session = match session {
@@ -81,7 +83,7 @@ pub fn pretrain_and_eval(
     )?;
     let adapter = trainer.input_adapter();
     Ok(RunOutcome {
-        variant,
+        spec,
         top1: eval.top1 * 100.0,
         train_secs: report.wall_seconds,
         final_loss: report.final_loss,
@@ -101,16 +103,42 @@ fn base_cfg(args: &mut Args) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
-/// Human-facing row label per variant (paper Table 1 wording).
+/// Human-facing row label per legacy variant (paper Table 1 wording).
+/// Compat wrapper over [`LossSpec::display_name`], which covers the whole
+/// spec space.
 pub fn display_name(v: Variant) -> String {
-    match v {
-        Variant::BtOff => "Barlow Twins (R_off)".into(),
-        Variant::BtSum => "Proposed (BT-style)".into(),
-        Variant::BtSumG128 => "Proposed (BT-style, b=128)".into(),
-        Variant::VicOff => "VICReg (R_off)".into(),
-        Variant::VicSum => "Proposed (VIC-style)".into(),
-        Variant::VicSumG128 => "Proposed (VIC-style, b=128)".into(),
-    }
+    v.spec().display_name()
+}
+
+/// Parse a `--variants` list into specs. Entries are separated by `;`
+/// when one is present (spec-grammar entries like `bt_sum@b=64,q=1`
+/// contain commas), by `,` otherwise — so both the legacy
+/// `--variants bt_off,bt_sum` and `--variants "bt_sum@b=64,q=1;vic_off"`
+/// forms work. Mirrors `aot.py split_variants`.
+fn parse_variant_list(args: &mut Args, key: &str, defaults: &[String]) -> Result<Vec<LossSpec>> {
+    let raw = match args.flag(key) {
+        Some(list) => {
+            let sep = if list.contains(';') { ';' } else { ',' };
+            let mut entries: Vec<String> = Vec::new();
+            for tok in list.split(sep).filter(|t| !t.trim().is_empty()) {
+                // With ',' as separator, a bare `key=value` token is the
+                // continuation of the previous entry's option list.
+                if sep == ',' && tok.contains('=') && !tok.contains('@') {
+                    if let Some(prev) = entries.last_mut() {
+                        prev.push(',');
+                        prev.push_str(tok);
+                        continue;
+                    }
+                }
+                entries.push(tok.to_string());
+            }
+            entries
+        }
+        None => defaults.to_vec(),
+    };
+    raw.iter()
+        .map(|v| LossSpec::parse(v).map_err(anyhow::Error::from))
+        .collect()
 }
 
 // ---------------------------------------------------------------- train
@@ -124,7 +152,7 @@ pub fn train(args: &mut Args) -> Result<()> {
     }
     cfg.apply_args(args)?;
     args.finish()?;
-    println!("training {} on preset {}", cfg.variant.as_str(), cfg.preset);
+    println!("training {} on preset {}", cfg.spec, cfg.preset);
     let out_dir = cfg.out_dir.clone();
     let mut trainer = Trainer::new(cfg)?;
     let report = trainer.run()?;
@@ -190,8 +218,9 @@ pub fn eval(args: &mut Args) -> Result<()> {
 /// `decorr table1` — paper Tab. 1 analogue: linear-eval accuracy for every
 /// loss variant under the same budget.
 pub fn table1(args: &mut Args) -> Result<()> {
-    let defaults: Vec<String> = Variant::all().iter().map(|v| v.as_str().to_string()).collect();
-    let variants: Vec<String> = args.list_or("variants", &defaults)?;
+    let defaults: Vec<String> =
+        LossSpec::paper_presets().iter().map(|s| s.to_string()).collect();
+    let variants = parse_variant_list(args, "variants", &defaults)?;
     let mut cfg0 = base_cfg(args)?;
     let train_samples = args.get_or("train-samples", 2048usize)?;
     let test_samples = args.get_or("test-samples", 512usize)?;
@@ -200,11 +229,11 @@ pub fn table1(args: &mut Args) -> Result<()> {
     let mut table = Table::new(&["model", "top-1 (%)", "final loss", "train time"]);
     let mut session = None;
     for v in &variants {
-        cfg0.variant = Variant::parse(v)?;
+        cfg0.spec = *v;
         println!("== {v} ==");
         let out = pretrain_and_eval(cfg0.clone(), train_samples, test_samples, 150, session)?;
         table.row(vec![
-            display_name(out.variant),
+            out.spec.display_name(),
             format!("{:.2}", out.top1),
             format!("{:.4}", out.final_loss),
             human_duration(out.train_secs),
@@ -225,7 +254,7 @@ pub fn table1(args: &mut Args) -> Result<()> {
 /// ShapeWorld-B vocabulary (substitute for VOC object detection).
 pub fn table3(args: &mut Args) -> Result<()> {
     let defaults = ["bt_off", "bt_sum", "vic_off", "vic_sum"].map(String::from);
-    let variants: Vec<String> = args.list_or("variants", &defaults)?;
+    let variants = parse_variant_list(args, "variants", &defaults)?;
     let mut cfg0 = base_cfg(args)?;
     let train_samples = args.get_or("train-samples", 1536usize)?;
     let test_samples = args.get_or("test-samples", 512usize)?;
@@ -234,7 +263,7 @@ pub fn table3(args: &mut Args) -> Result<()> {
     let mut table = Table::new(&["model", "pretrain top-1 (%)", "transfer top-1 (%)"]);
     let mut session = None;
     for v in &variants {
-        cfg0.variant = Variant::parse(v)?;
+        cfg0.spec = *v;
         println!("== {v} ==");
         let out = pretrain_and_eval(cfg0.clone(), train_samples, test_samples, 150, session)?;
         // Transfer: same frozen backbone, new vocabulary — and the same
@@ -256,7 +285,7 @@ pub fn table3(args: &mut Args) -> Result<()> {
             150,
         )?;
         table.row(vec![
-            display_name(out.variant),
+            out.spec.display_name(),
             format!("{:.2}", out.top1),
             format!("{:.2}", transfer.top1 * 100.0),
         ]);
@@ -283,8 +312,9 @@ pub fn table4(args: &mut Args) -> Result<()> {
     let mut table = Table::new(&["model", "steps", "wall time", "ms/step", "speedup"]);
     let mut baseline_ms = None;
     for variant in [Variant::BtOff, Variant::BtSum, Variant::VicOff, Variant::VicSum] {
+        let spec = variant.spec();
         let mut cfg = TrainConfig::preset(&preset)?;
-        cfg.variant = variant;
+        cfg.spec = spec;
         cfg.epochs = 1;
         cfg.steps_per_epoch = steps;
         // Keep the warmup schedule: timing is lr-independent and the VIC
@@ -293,22 +323,21 @@ pub fn table4(args: &mut Args) -> Result<()> {
         cfg.seed = seed;
         cfg.out_dir = String::new();
         cfg.log_every = usize::MAX;
-        println!("== {} ==", variant.as_str());
+        println!("== {spec} ==");
         let mut trainer = Trainer::new(cfg)?;
         let report = trainer.run()?;
         let ms = report.wall_seconds * 1e3 / report.steps as f64;
-        let speedup = match variant {
-            Variant::BtOff | Variant::VicOff => {
-                baseline_ms = Some(ms);
-                "1.00x (baseline)".to_string()
-            }
-            _ => match baseline_ms {
+        let speedup = if spec.form == RegularizerForm::OffDiag {
+            baseline_ms = Some(ms);
+            "1.00x (baseline)".to_string()
+        } else {
+            match baseline_ms {
                 Some(b) => format!("{:.2}x", b / ms),
                 None => "-".to_string(),
-            },
+            }
         };
         table.row(vec![
-            display_name(variant),
+            spec.display_name(),
             format!("{}", report.steps),
             human_duration(report.wall_seconds),
             format!("{ms:.1}"),
@@ -332,22 +361,22 @@ pub fn table6(args: &mut Args) -> Result<()> {
     let family = args.str_or("family", "bt");
     args.finish()?;
 
-    let (variant, grouped): (Variant, Variant) = if family == "vic" {
-        (Variant::VicSum, Variant::VicSumG128)
+    let (variant, grouped): (LossSpec, LossSpec) = if family == "vic" {
+        (Variant::VicSum.spec(), Variant::VicSumG128.spec())
     } else {
-        (Variant::BtSum, Variant::BtSumG128)
+        (Variant::BtSum.spec(), Variant::BtSumG128.spec())
     };
     let baseline = if family == "vic" {
-        Variant::VicOff
+        Variant::VicOff.spec()
     } else {
-        Variant::BtOff
+        Variant::BtOff.spec()
     };
 
     let mut table = Table::new(&["model", "grouping", "perm", "normalized residual"]);
     // One session threaded through the whole sweep: the project_<preset>
     // diagnostics executable compiles once for all five runs.
     let mut session: Option<Session> = None;
-    let run = |v: Variant,
+    let run = |v: LossSpec,
                permute: bool,
                label: &str,
                grouping: &str,
@@ -355,10 +384,10 @@ pub fn table6(args: &mut Args) -> Result<()> {
                sess: &mut Option<Session>|
      -> Result<f64> {
         let mut cfg = cfg0.clone();
-        cfg.variant = v;
+        cfg.spec = v;
         cfg.permute = permute;
         cfg.out_dir = String::new();
-        println!("== {} perm={} ==", v.as_str(), permute);
+        println!("== {v} perm={permute} ==");
         let mut trainer = match sess.take() {
             Some(s) => Trainer::with_session(cfg, s)?,
             None => Trainer::new(cfg)?,
@@ -377,11 +406,11 @@ pub fn table6(args: &mut Args) -> Result<()> {
         Ok(diag.residual)
     };
 
-    let base_res = run(baseline, true, &display_name(baseline), "-", &mut table, &mut session)?;
-    let no_perm = run(variant, false, &display_name(variant), "no", &mut table, &mut session)?;
-    let with_perm = run(variant, true, &display_name(variant), "no", &mut table, &mut session)?;
-    run(grouped, false, &display_name(grouped), "b=128", &mut table, &mut session)?;
-    run(grouped, true, &display_name(grouped), "b=128", &mut table, &mut session)?;
+    let base_res = run(baseline, true, &baseline.display_name(), "-", &mut table, &mut session)?;
+    let no_perm = run(variant, false, &variant.display_name(), "no", &mut table, &mut session)?;
+    let with_perm = run(variant, true, &variant.display_name(), "no", &mut table, &mut session)?;
+    run(grouped, false, &grouped.display_name(), "b=128", &mut table, &mut session)?;
+    run(grouped, true, &grouped.display_name(), "b=128", &mut table, &mut session)?;
 
     println!(
         "\nTable 6 analogue (normalized decorrelation residual, Eqs. 16/17; preset {}):",
@@ -402,12 +431,22 @@ pub fn table6(args: &mut Args) -> Result<()> {
 /// complexity of the regularizer forms, measured over the
 /// [`Contender`] set (every form a `DecorrelationKernel` instance:
 /// naive matrix, planned FFT single/multi-threaded, grouped). Needs no
-/// artifacts. `--json <path>` additionally writes the machine-readable
-/// table.
+/// artifacts. `--specs "bt_sum@b=64,q=1;vic_off"` (semicolon-separated
+/// loss specs — any point of the spec space) appends extra contenders
+/// beyond the standard set; `--json <path>` additionally writes the
+/// machine-readable table.
 pub fn table7(args: &mut Args) -> Result<()> {
     let n = args.get_or("n", 64usize)?;
     let dims: Vec<usize> = args.list_or("dims", &[128usize, 256, 512, 1024, 2048])?;
     let budget = args.get_or("budget", 0.3f64)?;
+    let extra_specs: Vec<LossSpec> = match args.flag("specs") {
+        Some(list) => list
+            .split(';')
+            .filter(|t| !t.trim().is_empty())
+            .map(LossSpec::parse)
+            .collect::<Result<_, _>>()?,
+        None => Vec::new(),
+    };
     let json = args.flag("json");
     args.finish()?;
 
@@ -416,7 +455,14 @@ pub fn table7(args: &mut Args) -> Result<()> {
         let mut rng = Rng::new(0x7AB7 ^ d as u64);
         let a = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
         let b = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
-        for mut c in Contender::standard_set(d) {
+        let mut contenders = Contender::standard_set(d);
+        for spec in &extra_specs {
+            contenders.push(
+                Contender::from_spec(spec, d)
+                    .with_context(|| format!("contender spec '{spec}' at d={d}"))?,
+            );
+        }
+        for mut c in contenders {
             let stats = bench_for(budget, 1, || c.run(&a, &b, n as f32));
             let value = c.run(&a, &b, n as f32);
             table.row(vec![
@@ -444,34 +490,34 @@ pub fn table7(args: &mut Args) -> Result<()> {
 /// cross-correlation regularizer, q=1 better for the VIC-style covariance
 /// regularizer.
 pub fn table11(args: &mut Args) -> Result<()> {
-    let mut cfg0 = base_cfg(args)?;
+    let cfg0 = base_cfg(args)?;
     let train_samples = args.get_or("train-samples", 1536usize)?;
     let test_samples = args.get_or("test-samples", 512usize)?;
     args.finish()?;
 
     let mut table = Table::new(&["model", "q", "top-1 (%)"]);
     let mut session = None;
-    // (variant, artifact suffix, q label)
-    let runs: [(Variant, &str, &str); 4] = [
-        (Variant::BtSum, "_q1", "1"),
-        (Variant::BtSum, "", "2"),
-        (Variant::VicSum, "", "1"),
-        (Variant::VicSum, "_q2", "2"),
+    // q is spec-native now: "bt_sum@q=1" derives the same
+    // `train_bt_sum_q1_*` artifact ids the legacy `artifact_suffix`
+    // escape hatch produced.
+    let runs: [(&str, &str); 4] = [
+        ("bt_sum@q=1", "1"),
+        ("bt_sum", "2"),
+        ("vic_sum", "1"),
+        ("vic_sum@q=2", "2"),
     ];
-    for (variant, suffix, q) in runs {
+    for (spec_str, q) in runs {
         let mut cfg = cfg0.clone();
-        cfg.variant = variant;
-        cfg.artifact_suffix = suffix.to_string();
-        println!("== {} q={} ==", variant.as_str(), q);
+        cfg.spec = LossSpec::parse(spec_str)?;
+        println!("== {} q={} ==", cfg.spec, q);
         let out = pretrain_and_eval(cfg, train_samples, test_samples, 150, session)?;
         table.row(vec![
-            display_name(variant),
+            out.spec.display_name(),
             q.to_string(),
             format!("{:.2}", out.top1),
         ]);
         session = Some(out.session);
     }
-    cfg0.preset = cfg0.preset.clone();
     println!("\nTable 11 analogue (q-exponent ablation, preset {}):", cfg0.preset);
     table.print();
     println!("(paper shape: BT-style prefers q=2, VIC-style prefers q=1)");
@@ -485,7 +531,7 @@ pub fn table11(args: &mut Args) -> Result<()> {
 /// demonstrates the proposed loss's no-collective-ops property (per-shard
 /// losses + plain gradient averaging).
 pub fn fig5(args: &mut Args) -> Result<()> {
-    let variant = Variant::parse(&args.str_or("variant", "bt_sum"))?;
+    let spec = LossSpec::parse(&args.str_or("variant", "bt_sum"))?;
     let steps = args.get_or("steps", 6usize)?;
     let shard_counts: Vec<usize> = args.list_or("shards", &[1usize, 2, 4])?;
     let seed = args.get_or("seed", 17u64)?;
@@ -495,7 +541,7 @@ pub fn fig5(args: &mut Args) -> Result<()> {
     let mut base_ms = None;
     for &shards in &shard_counts {
         let mut cfg = TrainConfig::preset_small();
-        cfg.variant = variant;
+        cfg.spec = spec;
         cfg.seed = seed;
         cfg.out_dir = String::new();
         cfg.epochs = 1;
@@ -528,10 +574,7 @@ pub fn fig5(args: &mut Args) -> Result<()> {
         };
         table.row(vec![format!("{shards}"), format!("{ms:.1}"), scaling]);
     }
-    println!(
-        "\nFig. 5/6 analogue (simulated DDP, {} on preset small, global batch fixed):",
-        variant.as_str()
-    );
+    println!("\nFig. 5/6 analogue (simulated DDP, {spec} on preset small, global batch fixed):");
     table.print();
     println!(
         "(the proposed loss computes per-shard with no collective ops — paper App. F;\n\
@@ -547,7 +590,7 @@ pub fn fig5(args: &mut Args) -> Result<()> {
 pub fn fig2(args: &mut Args) -> Result<()> {
     let dims: Vec<usize> = args.list_or("dims", &[256usize, 512, 1024, 2048, 4096])?;
     let defaults = ["bt_off", "bt_sum", "bt_sum_g128", "vic_off", "vic_sum"].map(String::from);
-    let variants: Vec<String> = args.list_or("variants", &defaults)?;
+    let variants = parse_variant_list(args, "variants", &defaults)?;
     let n = args.get_or("n", 128usize)?;
     let budget = args.get_or("budget", 0.4f64)?;
     let artifact_dir = args.str_or("artifact-dir", "artifacts");
@@ -555,18 +598,18 @@ pub fn fig2(args: &mut Args) -> Result<()> {
 
     let session = Session::open(&artifact_dir)?;
     let mut table = Table::new(&["variant", "d", "fwd (ms)", "fwd+bwd (ms)", "loss-node MB"]);
-    for v in &variants {
+    for spec in &variants {
         for &d in &dims {
-            let fwd = LossWorkload::load(&session, v, d, n, false)?;
+            let fwd = LossWorkload::for_spec(&session, spec, d, n, false)?;
             let f_stats = bench_for(budget, 2, || fwd.run().unwrap());
-            let bwd = LossWorkload::load(&session, v, d, n, true)?;
+            let bwd = LossWorkload::for_spec(&session, spec, d, n, true)?;
             let b_stats = bench_for(budget, 2, || bwd.run().unwrap());
             table.row(vec![
-                v.clone(),
+                spec.to_string(),
                 format!("{d}"),
                 format!("{:.2}", f_stats.median_ms()),
                 format!("{:.2}", b_stats.median_ms()),
-                format!("{:.1}", loss_node_bytes(v, n, d) as f64 / 1e6),
+                format!("{:.1}", spec.loss_node_bytes(n, d) as f64 / 1e6),
             ]);
         }
     }
@@ -593,30 +636,153 @@ pub fn fig3(args: &mut Args) -> Result<()> {
     // b = 1 is exactly R_off (paper §4.4) — covered by the bt_off artifact.
     // Repeat rows (every b ≥ d maps to the same bt_sum artifact) are cache
     // hits through the session instead of fresh compiles.
-    let mut add_row = |label: String, variant: &str| -> Result<()> {
-        let fwd = LossWorkload::load(&session, variant, d, n, false)?;
+    let mut add_row = |label: String, spec: LossSpec| -> Result<()> {
+        let fwd = LossWorkload::for_spec(&session, &spec, d, n, false)?;
         let f_stats = bench_for(budget, 2, || fwd.run().unwrap());
-        let bwd = LossWorkload::load(&session, variant, d, n, true)?;
+        let bwd = LossWorkload::for_spec(&session, &spec, d, n, true)?;
         let b_stats = bench_for(budget, 2, || bwd.run().unwrap());
         table.row(vec![
             label,
             format!("{:.2}", f_stats.median_ms()),
             format!("{:.2}", b_stats.median_ms()),
-            format!("{:.1}", loss_node_bytes(variant, n, d) as f64 / 1e6),
+            format!("{:.1}", spec.loss_node_bytes(n, d) as f64 / 1e6),
         ]);
         Ok(())
     };
-    add_row("1 (= R_off)".into(), "bt_off")?;
+    add_row("1 (= R_off)".into(), LossSpec::parse("bt_off")?)?;
     for &b in &blocks {
         if b >= d {
-            add_row(format!("{d} (no grouping)"), "bt_sum")?;
+            add_row(format!("{d} (no grouping)"), LossSpec::parse("bt_sum")?)?;
         } else {
-            add_row(format!("{b}"), &format!("bt_sum_g{b}"))?;
+            add_row(format!("{b}"), LossSpec::parse(&format!("bt_sum@b={b}"))?)?;
         }
     }
     println!("\nFig. 3 analogue (block-size sweep at d={d}, n={n}):");
     table.print();
     println!("(paper shape: flat until b gets very small, then the (d/b)^2 block count bites)");
+    Ok(())
+}
+
+// ------------------------------------------------------------------ spec
+
+/// `decorr spec <spec-string>` — parse a loss spec and pretty-print every
+/// component the `api` front door derives from it: the typed fields, the
+/// artifact ids (train per preset, loss/lossgrad at `--d`/`--n`, DDP
+/// grad), the host kernel, the Table-6 residual family, labels, and the
+/// loss-node memory model. `--check` additionally evaluates the spec on
+/// random views through the host `LossExecutor` (and the device one too
+/// when `--device` is given and the artifact exists) — the polymorphic
+/// facade end to end.
+pub fn spec(args: &mut Args) -> Result<()> {
+    let mut input = args.positional.first().cloned().or_else(|| args.flag("spec"));
+    let d = args.get_or("d", 512usize)?;
+    let n = args.get_or("n", 128usize)?;
+    // `--check`/`--device` are switches, but the greedy CLI parser takes
+    // a following bare token as the flag's value — `decorr spec --check
+    // bt_sum` parses as check="bt_sum". Recover that token as the spec.
+    let mut check = false;
+    let mut device = false;
+    for (key, target) in [("check", &mut check), ("device", &mut device)] {
+        if let Some(v) = args.flag(key) {
+            match v.as_str() {
+                "true" | "1" | "yes" => *target = true,
+                "false" | "0" | "no" => {}
+                swallowed => {
+                    *target = true;
+                    if input.is_none() {
+                        input = Some(swallowed.to_string());
+                    }
+                }
+            }
+        }
+    }
+    let input = input
+        .context("usage: decorr spec <spec-string> [--d 512] [--n 128] [--check] [--device]")?;
+    let artifact_dir = args.str_or("artifact-dir", "artifacts");
+    args.finish()?;
+
+    let spec = LossSpec::parse(&input)?;
+    let mut table = Table::new(&["component", "derived value"]);
+    table.row(vec!["canonical spec".into(), spec.to_string()]);
+    table.row(vec!["family".into(), format!("{:?}", spec.family)]);
+    table.row(vec!["form".into(), format!("{:?}", spec.form)]);
+    table.row(vec!["q".into(), format!("{:?}", spec.q())]);
+    table.row(vec![
+        "norm".into(),
+        format!("{} (n={n} -> {})", spec.norm.tag(), spec.norm_value(n)),
+    ]);
+    table.row(vec!["lambda".into(), format!("{}", spec.lambda)]);
+    table.row(vec![
+        "threads".into(),
+        format!("{} (resolved {})", spec.threads, spec.resolved_threads()),
+    ]);
+    table.row(vec!["display name".into(), spec.display_name()]);
+    table.row(vec!["contender label".into(), spec.contender_label()]);
+    table.row(vec![
+        "legacy variant".into(),
+        spec.legacy_variant()
+            .map(|v| v.as_str().to_string())
+            .unwrap_or_else(|| "- (outside the closed enum)".into()),
+    ]);
+    table.row(vec![
+        "residual family".into(),
+        format!("{:?}", spec.residual_family()),
+    ]);
+    for preset in ["tiny", "small", "e2e"] {
+        table.row(vec![
+            format!("train artifact ({preset})"),
+            spec.train_artifact(preset),
+        ]);
+    }
+    table.row(vec![
+        format!("loss artifact (d={d}, n={n})"),
+        spec.loss_artifact(d, n, false),
+    ]);
+    table.row(vec![
+        format!("lossgrad artifact (d={d}, n={n})"),
+        spec.loss_artifact(d, n, true),
+    ]);
+    table.row(vec![
+        "grad artifact (small, 4 shards)".into(),
+        spec.grad_artifact("small", 4),
+    ]);
+    match spec.kernel(d) {
+        Ok(k) => table.row(vec![format!("host kernel (d={d})"), k.name().to_string()]),
+        Err(e) => table.row(vec![format!("host kernel (d={d})"), format!("error: {e}")]),
+    }
+    table.row(vec![
+        format!("loss-node memory (d={d}, n={n})"),
+        format!("{:.1} MB", spec.loss_node_bytes(n, d) as f64 / 1e6),
+    ]);
+    println!("\nloss spec '{input}':");
+    table.print();
+
+    if check {
+        let mut rng = Rng::new(0x5bec ^ d as u64);
+        let a = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+        let b = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+        // Polymorphic selection: host always; device when requested.
+        let mut executors: Vec<Box<dyn LossExecutor>> =
+            vec![Box::new(spec.host_executor(d)?)];
+        if device {
+            let session = Session::open(&artifact_dir)?;
+            executors.push(Box::new(spec.device_executor(&session, d, n, false)?));
+        }
+        let mut out = Table::new(&["executor", "backend", "total", "invariance", "regularizer"]);
+        for exec in &mut executors {
+            let result = exec.evaluate(&a, &b)?;
+            let opt = |v: Option<f64>| v.map(|x| format!("{x:.6}")).unwrap_or_else(|| "-".into());
+            out.row(vec![
+                exec.label(),
+                exec.backend().to_string(),
+                format!("{:.6}", result.total),
+                opt(result.invariance),
+                opt(result.regularizer),
+            ]);
+        }
+        println!("\nexecutor check (random views, n={n}, d={d}):");
+        out.print();
+    }
     Ok(())
 }
 

@@ -6,12 +6,25 @@
 //! for (`R_off` for the materialized-matrix baseline, `R_sum`-style for
 //! the spectral forms), so a bench loop is just
 //! `contender.run(&a, &b, norm)` — reset, accumulate the batch, evaluate.
+//!
+//! Contenders are [`LossSpec`]-derived: [`Contender::from_spec`] accepts
+//! any point of the spec space (so `decorr table7 --specs ...` can bench
+//! configurations outside the legacy enum), and the named convenience
+//! constructors route their labels through the same
+//! [`LossSpec::contender_label`] derivation.
 
-use crate::regularizer::kernel::{
-    default_threads, DecorrelationKernel, FftSumvecKernel, GroupedFftKernel, NaiveMatrixKernel,
-};
+use crate::api::{LossFamily, LossSpec, RegularizerForm, SpecError};
+use crate::regularizer::kernel::{default_threads, DecorrelationKernel};
 use crate::regularizer::Q;
 use crate::util::tensor::Tensor;
+
+/// The bench-standard grouping block at dimension `d`: the largest block
+/// `<= 128` that divides `d` (the paper's b=128 at the standard dims; the
+/// nearest divisor at odd user-supplied dims, since the host grouped path
+/// never pads).
+pub fn default_grouped_block(d: usize) -> usize {
+    (1..=128.min(d)).rev().find(|b| d % b == 0).unwrap_or(1)
+}
 
 /// How a contender reduces its accumulated state to the benched scalar.
 enum Eval {
@@ -30,43 +43,54 @@ pub struct Contender {
 }
 
 impl Contender {
+    /// Derive a contender from any [`LossSpec`] at dimension `d`: the
+    /// spec's kernel, its label, and the matching evaluation (`R_off` for
+    /// the off-diagonal form, `R_sum` under the spec's `q` otherwise).
+    /// Typed failure when the spec cannot be instantiated at `d`.
+    pub fn from_spec(spec: &LossSpec, d: usize) -> Result<Contender, SpecError> {
+        let kernel = spec.kernel(d)?;
+        let eval = match spec.form {
+            RegularizerForm::OffDiag => Eval::ROff,
+            _ => Eval::RSum(spec.q()),
+        };
+        Ok(Contender {
+            label: spec.contender_label(),
+            kernel,
+            eval,
+        })
+    }
+
     /// The `O(nd²)` materialized-matrix baseline evaluating `R_off`.
     pub fn naive_r_off(d: usize, threads: usize) -> Contender {
-        Contender {
-            label: if threads > 1 {
-                format!("R_off naive ({threads}t)")
-            } else {
-                "R_off naive".to_string()
-            },
-            kernel: Box::new(NaiveMatrixKernel::with_threads(d, threads)),
-            eval: Eval::ROff,
-        }
+        let spec = LossSpec::builder(LossFamily::BarlowTwins)
+            .off()
+            .threads(threads.max(1))
+            .build()
+            .unwrap_or_else(|e| unreachable!("off spec is always valid: {e}"));
+        Self::from_spec(&spec, d)
+            .unwrap_or_else(|e| panic!("naive_r_off contender at d={d}: {e}"))
     }
 
     /// The planned `O(nd log d)` spectral kernel evaluating `R_sum`.
     pub fn fft_r_sum(d: usize, q: Q, threads: usize) -> Contender {
-        Contender {
-            label: if threads > 1 {
-                format!("R_sum fft ({threads}t)")
-            } else {
-                "R_sum fft".to_string()
-            },
-            kernel: Box::new(FftSumvecKernel::with_threads(d, threads)),
-            eval: Eval::RSum(q),
-        }
+        let spec = LossSpec::builder(LossFamily::BarlowTwins)
+            .sum(q)
+            .threads(threads.max(1))
+            .build()
+            .unwrap_or_else(|e| unreachable!("sum spec is always valid: {e}"));
+        Self::from_spec(&spec, d).unwrap_or_else(|e| panic!("fft_r_sum contender at d={d}: {e}"))
     }
 
-    /// The grouped `R_sum^(b)` kernel (Eq. 13).
+    /// The grouped `R_sum^(b)` kernel (Eq. 13). `block` must divide `d`
+    /// (the spec-level contract of the host grouped path).
     pub fn grouped_r_sum(d: usize, block: usize, q: Q, threads: usize) -> Contender {
-        Contender {
-            label: if threads > 1 {
-                format!("R_sum^{block} ({threads}t)")
-            } else {
-                format!("R_sum^{block}")
-            },
-            kernel: Box::new(GroupedFftKernel::with_threads(d, block, threads)),
-            eval: Eval::RSum(q),
-        }
+        let spec = LossSpec::builder(LossFamily::BarlowTwins)
+            .grouped(q, block)
+            .threads(threads.max(1))
+            .build()
+            .unwrap_or_else(|e| panic!("grouped contender b={block}: {e}"));
+        Self::from_spec(&spec, d)
+            .unwrap_or_else(|e| panic!("grouped contender b={block} at d={d}: {e}"))
     }
 
     /// Kernel identifier (stable across labels).
@@ -97,7 +121,7 @@ impl Contender {
         let mut set = vec![
             Contender::naive_r_off(d, 1),
             Contender::fft_r_sum(d, Q::L2, 1),
-            Contender::grouped_r_sum(d, 128.min(d), Q::L2, 1),
+            Contender::grouped_r_sum(d, default_grouped_block(d), Q::L2, 1),
         ];
         let mt = default_threads();
         if mt > 1 {

@@ -9,7 +9,7 @@ pub mod stats;
 pub mod table;
 pub mod workload;
 
-pub use contenders::Contender;
+pub use contenders::{default_grouped_block, Contender};
 pub use stats::{bench, bench_for, smoke_budget, smoke_mode, BenchStats};
 pub use table::Table;
 pub use workload::{

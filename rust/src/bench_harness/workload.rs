@@ -8,7 +8,8 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::trainer::{literal_f32, literal_i32, scalar};
+use crate::api::LossSpec;
+use crate::runtime::literal::{literal_f32, literal_i32, scalar};
 use crate::runtime::{artifact_paths, Artifact, Session, SessionStats};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
@@ -31,9 +32,24 @@ pub struct LossWorkload {
 }
 
 impl LossWorkload {
+    /// Load the spec-derived loss artifact
+    /// ([`LossSpec::loss_artifact`]) through the session cache —
+    /// repeated shapes across sweep rows compile once.
+    pub fn for_spec(
+        session: &Session,
+        spec: &LossSpec,
+        d: usize,
+        n: usize,
+        grad: bool,
+    ) -> Result<LossWorkload> {
+        Self::load(session, &spec.artifact_fragment(), d, n, grad)
+    }
+
     /// Load `loss_<variant>_d<d>_n<n>` (or `lossgrad_...` when `grad`)
     /// through the session cache — repeated shapes across sweep rows
-    /// compile once.
+    /// compile once. String-fragment twin of [`Self::for_spec`], kept
+    /// for callers benching artifacts outside the spec grammar (e.g.
+    /// the Pallas-lowered `loss_pl_*` probes).
     pub fn load(session: &Session, variant: &str, d: usize, n: usize, grad: bool) -> Result<LossWorkload> {
         let kind = if grad { "lossgrad" } else { "loss" };
         let artifact = session.load(&format!("{kind}_{variant}_d{d}_n{n}"))?;
@@ -61,7 +77,10 @@ impl LossWorkload {
 }
 
 /// Analytic peak live-set of the loss node, in bytes (f32 = 4B), mirroring
-/// the quantity behind the paper's Fig. 2 memory curves:
+/// the quantity behind the paper's Fig. 2 memory curves. String-fragment
+/// twin of [`LossSpec::loss_node_bytes`] — the model lives there; this
+/// wrapper parses the fragment and keeps a heuristic fallback for names
+/// outside the spec grammar (e.g. the Pallas `pl_`-prefixed probes):
 ///
 /// * `*_off`  — standardized/centered views (2·n·d) plus the materialized
 ///   d×d correlation matrix: the O(d²) term that dominates at large d.
@@ -69,6 +88,9 @@ impl LossWorkload {
 ///   n·(d/2+1)) plus the d-vector accumulator: O(n·d), no d² term.
 /// * grouped  — views plus grouped spectra and the (d/b)²·b block summary.
 pub fn loss_node_bytes(variant: &str, n: usize, d: usize) -> usize {
+    if let Ok(spec) = LossSpec::parse(variant) {
+        return spec.loss_node_bytes(n, d);
+    }
     let base = 2 * n * d; // standardized copies of both views
     let f = d / 2 + 1;
     let elems = if variant.ends_with("_off") {

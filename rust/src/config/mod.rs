@@ -4,6 +4,13 @@
 //! preset defaults → a config file (TOML subset: `key = value` pairs and
 //! `[section]` headers; strings, numbers, booleans) → CLI `--key value`
 //! overrides. The parser is ours (offline environment, no serde/toml).
+//!
+//! The loss itself is configured as a typed [`LossSpec`] (the `api` front
+//! door): the `variant` key accepts both the legacy artifact fragments
+//! (`"bt_sum"`, `"vic_sum_g128"`) and the full spec grammar
+//! (`"vic_sum@b=64,q=1"`), case-insensitively. The closed [`Variant`]
+//! enum survives as a thin alias layer naming the paper's six table
+//! presets.
 
 mod toml;
 
@@ -11,9 +18,17 @@ pub use toml::{parse_toml, TomlDoc, TomlValue};
 
 use anyhow::{bail, Result};
 
+use crate::api::LossSpec;
 use crate::util::cli::Args;
 
-/// Loss variants (matching the artifact names emitted by `aot.py`).
+/// The paper's six table presets (matching the artifact names emitted by
+/// `aot.py`).
+///
+/// **Legacy alias layer.** `Variant` predates the typed [`LossSpec`] API
+/// and names only the closed set the paper tabulates; every member
+/// converts losslessly via [`Variant::spec`] (see `api::compat`), and the
+/// spec space is a strict superset (any block size, either `q`, norm
+/// convention, λ, threads). Prefer `LossSpec` in new code.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Variant {
     /// Original Barlow Twins (R_off on C(A,B)).
@@ -43,16 +58,19 @@ impl Variant {
         }
     }
 
-    /// Parse from the artifact-name fragment.
+    /// Parse from the artifact-name fragment (case-insensitive).
     pub fn parse(s: &str) -> Result<Variant> {
-        Ok(match s {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
             "bt_off" => Variant::BtOff,
             "bt_sum" => Variant::BtSum,
             "bt_sum_g128" => Variant::BtSumG128,
             "vic_off" => Variant::VicOff,
             "vic_sum" => Variant::VicSum,
             "vic_sum_g128" => Variant::VicSumG128,
-            other => bail!("unknown variant '{other}'"),
+            other => bail!(
+                "unknown variant '{other}' (valid: bt_off, bt_sum, bt_sum_g128, \
+                 vic_off, vic_sum, vic_sum_g128; or a loss spec like 'bt_sum@b=64,q=1')"
+            ),
         })
     }
 
@@ -80,8 +98,9 @@ pub struct TrainConfig {
     /// Artifact preset name ("tiny" | "small" | "e2e") — must match an
     /// emitted `train_<variant>_<preset>` artifact.
     pub preset: String,
-    /// Loss variant.
-    pub variant: Variant,
+    /// The typed loss specification. Everything loss-derived (artifact
+    /// ids, residual family, labels) comes from here.
+    pub spec: LossSpec,
     /// Number of epochs.
     pub epochs: usize,
     /// Steps per epoch.
@@ -106,8 +125,10 @@ pub struct TrainConfig {
     pub out_dir: String,
     /// Log every k steps.
     pub log_every: usize,
-    /// Extra artifact-name suffix after the variant (e.g. "_q1" for the
-    /// Table-11 q-exponent ablation artifacts).
+    /// Extra raw artifact-name suffix appended after the spec fragment.
+    /// Legacy escape hatch (the Table-11 runs used `"_q1"` here before
+    /// `q` became part of the spec); prefer expressing `q` in the spec,
+    /// which derives the same artifact names.
     pub artifact_suffix: String,
 }
 
@@ -115,7 +136,7 @@ impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
             preset: "tiny".into(),
-            variant: Variant::BtSum,
+            spec: Variant::BtSum.spec(),
             epochs: 2,
             steps_per_epoch: 20,
             lr: 0.2,
@@ -167,13 +188,13 @@ impl TrainConfig {
         }
     }
 
-    /// Look up a named preset.
+    /// Look up a named preset (case-insensitive).
     pub fn preset(name: &str) -> Result<TrainConfig> {
-        Ok(match name {
+        Ok(match name.trim().to_ascii_lowercase().as_str() {
             "tiny" => Self::preset_tiny(),
             "small" => Self::preset_small(),
             "e2e" => Self::preset_e2e(),
-            other => bail!("unknown preset '{other}'"),
+            other => bail!("unknown preset '{other}' (valid: tiny, small, e2e)"),
         })
     }
 
@@ -190,6 +211,7 @@ impl TrainConfig {
         for key in [
             "preset",
             "variant",
+            "spec",
             "epochs",
             "steps-per-epoch",
             "lr",
@@ -206,9 +228,9 @@ impl TrainConfig {
             if let Some(v) = args.flag(key) {
                 if key == "preset" {
                     // preset re-bases everything, then later flags override
-                    let keep_variant = self.variant;
+                    let keep_spec = self.spec;
                     *self = TrainConfig::preset(&v)?;
-                    self.variant = keep_variant;
+                    self.spec = keep_spec;
                 } else {
                     self.apply_kv(&key.replace('-', "_"), &v)?;
                 }
@@ -220,7 +242,9 @@ impl TrainConfig {
     fn apply_kv(&mut self, key: &str, v: &str) -> Result<()> {
         match key {
             "preset" => self.preset = v.to_string(),
-            "variant" => self.variant = Variant::parse(v)?,
+            // "variant" and "spec" are aliases: both accept the legacy
+            // fragments and the full spec grammar.
+            "variant" | "spec" => self.spec = LossSpec::parse(v)?,
             "epochs" => self.epochs = v.parse()?,
             "steps_per_epoch" => self.steps_per_epoch = v.parse()?,
             "lr" => self.lr = v.parse()?,
@@ -244,14 +268,15 @@ impl TrainConfig {
         self.epochs * self.steps_per_epoch
     }
 
+    /// The spec fragment plus the legacy raw suffix — the variant part of
+    /// every artifact id this config resolves.
+    pub fn variant_fragment(&self) -> String {
+        format!("{}{}", self.spec.artifact_fragment(), self.artifact_suffix)
+    }
+
     /// The train artifact name for this config.
     pub fn train_artifact(&self) -> String {
-        format!(
-            "train_{}{}_{}",
-            self.variant.as_str(),
-            self.artifact_suffix,
-            self.preset
-        )
+        format!("train_{}_{}", self.variant_fragment(), self.preset)
     }
 }
 
@@ -270,9 +295,21 @@ mod tests {
     }
 
     #[test]
+    fn variant_parse_is_case_insensitive_and_reports_valid_set() {
+        assert_eq!(Variant::parse("BT_SUM").unwrap(), Variant::BtSum);
+        assert_eq!(Variant::parse("  Vic_Sum_G128 ").unwrap(), Variant::VicSumG128);
+        let err = Variant::parse("nope").unwrap_err().to_string();
+        for valid in ["bt_off", "bt_sum_g128", "vic_sum"] {
+            assert!(err.contains(valid), "error should list '{valid}': {err}");
+        }
+    }
+
+    #[test]
     fn presets_resolve() {
         assert_eq!(TrainConfig::preset("e2e").unwrap().preset, "e2e");
-        assert!(TrainConfig::preset("nope").is_err());
+        assert_eq!(TrainConfig::preset("TINY").unwrap().preset, "tiny");
+        let err = TrainConfig::preset("nope").unwrap_err().to_string();
+        assert!(err.contains("tiny") && err.contains("small") && err.contains("e2e"), "{err}");
     }
 
     #[test]
@@ -284,11 +321,25 @@ mod tests {
         )
         .unwrap();
         let mut cfg = TrainConfig::default();
-        cfg.variant = Variant::parse(&args.str_or("variant", cfg.variant.as_str())).unwrap();
         cfg.apply_args(&mut args).unwrap();
         assert_eq!(cfg.epochs, 7);
-        assert_eq!(cfg.variant, Variant::VicSum);
+        assert_eq!(cfg.spec, Variant::VicSum.spec());
         assert_eq!(cfg.lr, 0.5);
+        args.finish().unwrap();
+    }
+
+    #[test]
+    fn cli_accepts_spec_grammar() {
+        let mut args = Args::parse_from(
+            ["train", "--variant", "bt_sum@b=64,q=1"]
+                .into_iter()
+                .map(String::from),
+        )
+        .unwrap();
+        let mut cfg = TrainConfig::default();
+        cfg.apply_args(&mut args).unwrap();
+        assert_eq!(cfg.spec.artifact_fragment(), "bt_sum_g64_q1");
+        assert_eq!(cfg.train_artifact(), "train_bt_sum_g64_q1_tiny");
         args.finish().unwrap();
     }
 
@@ -303,13 +354,25 @@ mod tests {
         assert_eq!(cfg.epochs, 3);
         assert_eq!(cfg.lr, 0.125);
         assert!(!cfg.permute);
-        assert_eq!(cfg.variant, Variant::BtOff);
+        assert_eq!(cfg.spec, Variant::BtOff.spec());
     }
 
     #[test]
     fn artifact_name() {
         let cfg = TrainConfig::default();
         assert_eq!(cfg.train_artifact(), "train_bt_sum_tiny");
+        // the legacy raw-suffix escape hatch still composes
+        let q1 = TrainConfig {
+            artifact_suffix: "_q1".into(),
+            ..TrainConfig::default()
+        };
+        assert_eq!(q1.train_artifact(), "train_bt_sum_q1_tiny");
+        // … and the spec-native q derives the identical name
+        let spec_q1 = TrainConfig {
+            spec: LossSpec::parse("bt_sum@q=1").unwrap(),
+            ..TrainConfig::default()
+        };
+        assert_eq!(spec_q1.train_artifact(), "train_bt_sum_q1_tiny");
     }
 
     #[test]

@@ -85,7 +85,8 @@ impl DdpTrainer {
     /// Spawn `shards` workers and compile the leader-side apply artifact.
     pub fn new(cfg: TrainConfig, shards: usize) -> Result<DdpTrainer> {
         anyhow::ensure!(shards >= 1, "need at least one shard");
-        let grad_name = format!("grad_{}_{}_s{}", cfg.variant.as_str(), cfg.preset, shards);
+        // Spec-derived per-shard gradient artifact id.
+        let grad_name = cfg.spec.grad_artifact(&cfg.preset, shards);
         let shared = SharedSession::open(&cfg.artifact_dir);
         let session = shared.session()?;
         let apply = session
@@ -126,6 +127,9 @@ impl DdpTrainer {
         // cache — no compile on the leader, and the workers reuse the
         // parsed source when they compile on their own threads.
         let probe = shared.manifest(&grad_name)?;
+        cfg.spec
+            .validate_manifest(&probe, None)
+            .with_context(|| format!("grad artifact {grad_name} vs configured spec"))?;
         let x_idx = probe
             .input_index("xa")
             .context("grad manifest missing xa")?;
@@ -276,9 +280,7 @@ impl DdpTrainer {
             );
             self.grads.put(name, literal_f32(t)?)?;
         }
-        let lr_lit = xla::Literal::vec1(&[lr])
-            .reshape(&[])
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let lr_lit = crate::runtime::literal::literal_scalar(lr)?;
         let emitted = self.apply_binding.step(
             &mut [&mut self.params, &mut self.opt, &mut self.grads],
             &[&lr_lit],

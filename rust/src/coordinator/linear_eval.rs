@@ -11,8 +11,8 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::api::{LossExecutor, LossFamily, LossSpec};
 use crate::data::synth::{ShapeWorld, ShapeWorldConfig};
-use crate::regularizer::kernel::{default_threads, DecorrelationKernel, NaiveMatrixKernel};
 use crate::runtime::{Artifact, ExecutionBinding, ParamStore, Session};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
@@ -252,7 +252,7 @@ pub struct EvalResult {
     /// Normalized decorrelation residual (Eq. 16 form) of the extracted
     /// training-split representations against themselves — how far the
     /// frozen backbone's features are from feature-decorrelated, computed
-    /// through the `DecorrelationKernel` trait.
+    /// through the host `LossExecutor` facade (an `R_off` spec).
     pub feature_residual: f64,
 }
 
@@ -291,16 +291,20 @@ pub fn linear_eval(
         7,
     );
     // Self-correlation residual of the standardized features (Eq. 16 with
-    // A = B): standardize one copy and accumulate through the threaded
-    // matrix kernel — the trait path without the paired-view overhead.
+    // A = B), through the host `LossExecutor` facade: a BT-family R_off
+    // spec with auto threads derives the threaded matrix kernel and
+    // handles the standardization.
     let feature_residual = {
-        let mut s = train_x.clone();
-        s.standardize_columns(1e-6);
-        let (rows, cols) = (s.shape()[0], s.shape()[1]);
-        let mut kernel = NaiveMatrixKernel::with_threads(cols, default_threads());
-        kernel.accumulate(&s, &s);
+        let cols = train_x.shape()[1];
+        let spec = LossSpec::builder(LossFamily::BarlowTwins)
+            .off()
+            .threads(0)
+            .build()
+            .map_err(anyhow::Error::from)?;
+        let mut exec = spec.host_executor(cols)?;
+        let out = exec.evaluate(&train_x, &train_x)?;
         let df = cols as f64;
-        kernel.r_off(rows as f32).expect("matrix kernel answers r_off") / (df * (df - 1.0))
+        out.regularizer.context("R_off spec reports the regularizer")? / (df * (df - 1.0))
     };
     Ok(EvalResult {
         top1: probe.accuracy(&test_x, &test_y),

@@ -16,9 +16,15 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::TrainConfig;
 use crate::data::{AugmentConfig, BatchLoader, ShapeWorld, ShapeWorldConfig, SslBatch};
+use crate::runtime::literal::literal_scalar;
 use crate::runtime::{Artifact, ExecutionBinding, ParamStore, Session, TensorSpec};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
+
+// Marshaling helpers moved to `runtime::literal`; re-exported here so the
+// historical `coordinator::trainer::{literal_f32, ...}` paths keep
+// working across tests, benches, and examples.
+pub use crate::runtime::literal::{literal_f32, literal_i32, scalar};
 
 use super::checkpoint::Checkpoint;
 use super::metrics::{MetricsLogger, StepMetrics};
@@ -171,6 +177,23 @@ impl Trainer {
         artifact: Arc<Artifact>,
     ) -> Result<Trainer> {
         let manifest = artifact.manifest().clone();
+        // Spec-derived manifest expectations: meta.d present, and the
+        // lowered variant (when recorded) matches the configured spec
+        // (including any legacy raw artifact_suffix).
+        cfg.spec
+            .validate_manifest(&manifest, Some(&cfg.variant_fragment()))
+            .with_context(|| format!("artifact {} vs configured spec", manifest.name))?;
+        // λ and the norm convention are baked into the artifact at
+        // lowering time; spec overrides of them only steer host-side
+        // executors. Say so instead of silently ignoring them.
+        if cfg.spec.lambda != 1.0 || cfg.spec.norm != cfg.spec.family.default_norm() {
+            eprintln!(
+                "warning: spec '{}' overrides lambda/norm, but train artifact '{}' \
+                 baked its loss hyperparameters in at lowering time — the overrides \
+                 apply only to host-side executors/diagnostics",
+                cfg.spec, manifest.name
+            );
+        }
         let binding =
             ExecutionBinding::bind(artifact, &["params.", "opt_state."], &TRAIN_STREAMS)?;
         // Every emitted (non-store) output must be a known scalar: a
@@ -265,18 +288,17 @@ impl Trainer {
 
     /// Table-6-style decorrelation diagnostics: project `batches` batches
     /// of augmented twin views through the `project_<preset>` artifact and
-    /// measure both the exact normalized residual (Eq. 16/17, matched to
-    /// this trainer's loss family) and the relaxed `R_sum` (Eq. 12), each
-    /// through the host `DecorrelationKernel` trait.
+    /// measure both the exact normalized residual (Eq. 16/17 — the family
+    /// follows this trainer's spec) and the relaxed `R_sum` (Eq. 12), the
+    /// latter through the spec-derived host `LossExecutor`.
     pub fn diagnose_embeddings(
         &self,
         snapshot: &Checkpoint,
         batches: usize,
     ) -> Result<EmbeddingDiagnostics> {
-        use crate::regularizer::kernel::{
-            default_threads, normalized_residual, DecorrelationKernel, FftSumvecKernel,
-            ResidualFamily,
-        };
+        use crate::api::{LossExecutor, LossFamily, LossSpec};
+        use crate::regularizer::kernel::normalized_residual;
+        use crate::regularizer::Q;
         let (za, zb) = super::linear_eval::project_views(
             &self.session,
             &self.cfg.preset,
@@ -285,22 +307,21 @@ impl Trainer {
             self.cfg.seed,
             batches,
         )?;
-        let family = if self.cfg.variant.as_str().starts_with("vic") {
-            ResidualFamily::VicReg
-        } else {
-            ResidualFamily::BarlowTwins
-        };
-        let residual = normalized_residual(family, &za, &zb);
-        let mut sa = za.clone();
-        let mut sb = zb.clone();
-        sa.standardize_columns(1e-6);
-        sb.standardize_columns(1e-6);
+        let residual = normalized_residual(self.cfg.spec.residual_family(), &za, &zb);
+        // The relaxed quantity is always the flat q=2 R_sum over
+        // standardized views, whatever the trained family — a BT-family
+        // diagnostic spec with auto threads.
+        let diag_spec = LossSpec::builder(LossFamily::BarlowTwins)
+            .sum(Q::L2)
+            .threads(0)
+            .build()
+            .map_err(anyhow::Error::from)?;
         let n = za.shape()[0];
-        let mut kernel = FftSumvecKernel::with_threads(za.shape()[1], default_threads());
-        kernel.accumulate(&sa, &sb);
+        let mut exec = diag_spec.host_executor(za.shape()[1])?;
+        let out = exec.evaluate(&za, &zb)?;
         Ok(EmbeddingDiagnostics {
             residual,
-            r_sum_l2: kernel.r_sum(n as f32, crate::regularizer::Q::L2),
+            r_sum_l2: out.regularizer.context("host executor reports the regularizer")?,
             samples: n,
         })
     }
@@ -321,9 +342,7 @@ impl Trainer {
         let xa_lit = literal_f32(&xa)?;
         let xb_lit = literal_f32(&xb)?;
         let perm_lit = literal_i32(&perm)?;
-        let lr_lit = xla::Literal::vec1(&[lr])
-            .reshape(&[])
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let lr_lit = literal_scalar(lr)?;
 
         // The binding marshals store-resident literals by precomputed slot
         // index and absorbs updated params/opt state back in place.
@@ -417,28 +436,6 @@ impl Trainer {
     pub fn metrics(&self) -> &MetricsLogger {
         &self.metrics
     }
-}
-
-/// f32 tensor → literal.
-pub fn literal_f32(t: &Tensor) -> Result<xla::Literal> {
-    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(t.data())
-        .reshape(&dims)
-        .map_err(|e| anyhow::anyhow!("{e}"))
-}
-
-/// u32 permutation → i32 literal.
-pub fn literal_i32(perm: &[u32]) -> Result<xla::Literal> {
-    let v: Vec<i32> = perm.iter().map(|&p| p as i32).collect();
-    xla::Literal::vec1(&v)
-        .reshape(&[perm.len() as i64])
-        .map_err(|e| anyhow::anyhow!("{e}"))
-}
-
-/// Extract a scalar f32 from a literal.
-pub fn scalar(lit: &xla::Literal) -> Result<f32> {
-    lit.get_first_element::<f32>()
-        .map_err(|e| anyhow::anyhow!("{e}"))
 }
 
 #[cfg(test)]

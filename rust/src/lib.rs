@@ -19,22 +19,63 @@
 //! Python never runs on the training path: `make artifacts` lowers the
 //! compute graphs once; afterwards the `decorr` binary is self-contained.
 //!
+//! ## The `api` front door
+//!
+//! The crate's single entry point for naming a loss is the typed
+//! [`api::LossSpec`] — one point of the paper's design space,
+//! `{BT, VICReg} × {R_off, R_sum, R_sum^(b)} × q × block × norm × λ ×
+//! threads`, parsed from strings like `"bt_sum"` or `"vic_sum@b=64,q=1"`.
+//! Every consumer derivation flows from it:
+//!
+//! ```text
+//!                       LossSpec
+//!                          │
+//!      ┌───────────┬───────┴───────┬──────────────────┐
+//!      ▼           ▼               ▼                  ▼
+//!  .kernel(d)   .train_artifact  .residual_family  .display_name
+//!  host DecorrelationKernel      (Table-6 Eq.16/17).contender_label
+//!      │        .loss_artifact                     .loss_node_bytes
+//!      ▼        .grad_artifact   → runtime::Session ids
+//!  HostExecutor       └────────→  DeviceExecutor
+//!      └────────── api::LossExecutor ───────┘
+//! ```
+//!
+//! Validation is typed ([`api::SpecError`]: block must divide `d`,
+//! `d >= 2`, shape agreement, …) — no public entry point panics on bad
+//! input. The legacy closed [`config::Variant`] enum survives as a thin
+//! alias layer over the six paper presets; its artifact names and labels
+//! are byte-identical to the spec-derived ones.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
+//! use decorr::api::{LossExecutor, LossSpec};
 //! use decorr::config::TrainConfig;
 //! use decorr::coordinator::Trainer;
 //!
-//! let cfg = TrainConfig::preset_tiny();
+//! // Train any point of the design space — not just the six presets.
+//! let mut cfg = TrainConfig::preset_tiny();
+//! cfg.spec = LossSpec::parse("bt_sum@b=64,q=1").unwrap();
 //! let mut trainer = Trainer::new(cfg).unwrap();
 //! let report = trainer.run().unwrap();
 //! println!("final loss {:.4}", report.final_loss);
+//!
+//! // Evaluate the same spec on the host, no artifacts needed.
+//! let spec = LossSpec::parse("vic_sum@b=256,q=2").unwrap();
+//! let mut host = spec.host_executor(512).unwrap();
+//! # let (a, b) = (decorr::util::tensor::Tensor::zeros(&[8, 512]),
+//! #               decorr::util::tensor::Tensor::zeros(&[8, 512]));
+//! let out = host.evaluate(&a, &b).unwrap();
 //! ```
+//!
+//! ## Substrates under the front door
 //!
 //! Host-side reference implementations of every quantity in the paper
 //! (cross-correlation, `R_off`, `sumvec`, `R_sum`, grouped variants) live in
 //! [`regularizer`], backed by the pure-rust FFT in [`fft`]; they validate the
-//! device path and power the Table-6-style decorrelation diagnostics.
+//! device path and power the Table-6-style decorrelation diagnostics. Each
+//! checked entry point has a fallible `try_*` twin returning
+//! [`api::SpecError`].
 //!
 //! Hot host paths go through two planned layers: [`fft::plan`] (precomputed
 //! twiddle/bit-reversal/Bluestein tables with caller-owned scratch — zero
@@ -48,8 +89,10 @@
 //! (compile each distinct HLO + io-signature once, share the
 //! `Arc<Artifact>`) plus [`runtime::ExecutionBinding`] (resolve manifest
 //! slot maps once, marshal borrowed literals per step). Trainer, DDP,
-//! linear eval, and the bench harness all load through it.
+//! linear eval, and the bench harness all load through it, with artifact
+//! ids derived from the spec.
 
+pub mod api;
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;

@@ -4,6 +4,7 @@
 //! decorr smoke   [--hlo path]          verify the PJRT runtime (FFT probe)
 //! decorr train   [--config file] [...] SSL pretraining
 //! decorr eval    --checkpoint dir      linear evaluation of a checkpoint
+//! decorr spec    <loss-spec> [--check] inspect a parsed LossSpec's derivations
 //! decorr table1|table3|table4|table6|table7   regenerate paper tables
 //! decorr fig2|fig3                     regenerate paper figures
 //! ```
@@ -25,6 +26,7 @@ fn main() -> Result<()> {
         }
         "train" => decorr::bench_harness::cmd::train(&mut args),
         "eval" => decorr::bench_harness::cmd::eval(&mut args),
+        "spec" => decorr::bench_harness::cmd::spec(&mut args),
         "table1" => decorr::bench_harness::cmd::table1(&mut args),
         "table3" => decorr::bench_harness::cmd::table3(&mut args),
         "table4" => decorr::bench_harness::cmd::table4(&mut args),
@@ -50,8 +52,12 @@ USAGE: decorr <subcommand> [flags]
 
 SUBCOMMANDS
   smoke    verify the PJRT runtime by executing an FFT-bearing HLO module
-  train    SSL pretraining (--preset tiny|small|e2e, --variant bt_sum, ...)
+  train    SSL pretraining (--preset tiny|small|e2e, --variant bt_sum, ...;
+           --variant accepts full loss specs, e.g. 'bt_sum@b=64,q=1')
   eval     linear evaluation of a saved checkpoint (--checkpoint dir)
+  spec     parse a loss spec and pretty-print its derived components
+           (kernel, artifact ids, labels; --check evaluates it through
+           the host/device LossExecutor facade)
   table1   accuracy comparison across loss variants      (paper Tab. 1)
   table3   transfer-learning probe                       (paper Tab. 3)
   table4   wall-clock training time, baseline vs FFT     (paper Tab. 4)

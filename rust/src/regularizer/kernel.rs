@@ -593,7 +593,7 @@ pub fn normalized_residual(family: ResidualFamily, a: &Tensor, b: &Tensor) -> f6
 mod tests {
     use super::*;
     use crate::regularizer::{
-        cross_correlation, r_off, r_sum_grouped_naive, sumvec_fft, sumvec_naive,
+        cross_correlation, r_off, r_sum_grouped_padded_naive, sumvec_fft, sumvec_naive,
     };
     use crate::util::rng::Rng;
 
@@ -667,12 +667,12 @@ mod tests {
         let a = rand_tensor(&mut rng, n, d);
         let b = rand_tensor(&mut rng, n, d);
         let c = cross_correlation(&a, &b, n as f32);
-        for block in [1usize, 2, 3, 4, 5, 12] {
+        for block in [1usize, 2, 3, 4, 5 /* ragged: kernel zero-pads */, 12] {
             for q in [Q::L1, Q::L2] {
                 let mut k = GroupedFftKernel::with_threads(d, block, 2);
                 k.accumulate(&a, &b);
                 let fast = k.r_sum(n as f32, q);
-                let naive = r_sum_grouped_naive(&c, block, q);
+                let naive = r_sum_grouped_padded_naive(&c, block, q);
                 assert!(
                     (fast - naive).abs() < 1e-3 * naive.abs().max(1.0),
                     "block={block} q={q:?}: {fast} vs {naive}"

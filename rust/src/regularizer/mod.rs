@@ -22,6 +22,18 @@
 //! [`DecorrelationKernel`] trait and its planned, batched, multi-threaded
 //! implementations. The free functions below are thin one-shot wrappers
 //! kept for API stability — same signatures, same numerics.
+//!
+//! ## Fallible twins
+//!
+//! Every public free function with a checkable precondition has a
+//! `try_*` twin returning `Result<_, SpecError>` (typed: shape mismatch,
+//! non-square matrix, block not dividing `d`). The original names remain
+//! as thin wrappers that panic on those same conditions — their
+//! historical contract, now documented per function — so hot loops that
+//! have already validated shapes pay nothing. New code (and anything on
+//! a serving path) should call the `try_*` forms or go through the
+//! [`crate::api`] front door, which routes all checks through
+//! [`SpecError`].
 
 pub mod kernel;
 
@@ -29,7 +41,45 @@ pub use kernel::{
     DecorrelationKernel, FftSumvecKernel, GroupedFftKernel, NaiveMatrixKernel, ResidualFamily,
 };
 
+use crate::api::SpecError;
 use crate::util::tensor::Tensor;
+
+/// Validate a pair of `(n, d)` views: both rank 2, identical shapes.
+fn paired_views(a: &Tensor, b: &Tensor) -> Result<(usize, usize), SpecError> {
+    if a.shape().len() != 2 {
+        return Err(SpecError::BadRank {
+            expected: 2,
+            got: a.shape().len(),
+        });
+    }
+    if a.shape() != b.shape() {
+        return Err(SpecError::ShapeMismatch {
+            a: a.shape().to_vec(),
+            b: b.shape().to_vec(),
+        });
+    }
+    Ok((a.shape()[0], a.shape()[1]))
+}
+
+/// Validate a square `(d, d)` matrix argument.
+fn square_dim(m: &Tensor) -> Result<usize, SpecError> {
+    match m.shape() {
+        [d, d2] if d == d2 => Ok(*d),
+        other => Err(SpecError::NotSquare {
+            shape: other.to_vec(),
+        }),
+    }
+}
+
+/// Validate a grouping block against a dimension (`block >= 1` and
+/// `block | d` — the host path never zero-pads; see
+/// [`r_sum_grouped_padded_naive`] for the explicit ragged oracle).
+fn check_block(block: usize, d: usize) -> Result<(), SpecError> {
+    if block == 0 || d % block != 0 {
+        return Err(SpecError::BlockMismatch { block, d });
+    }
+    Ok(())
+}
 
 /// Which norm exponent `q ∈ {1, 2}` the `R_sum` family uses (Eq. 6).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -58,16 +108,24 @@ impl Q {
 /// The accumulation is cache-friendly — row-major output with the inner
 /// loop streaming contiguous `b` rows — and the `1/norm` scale is applied
 /// once at the end instead of inside the sample loop.
-pub fn cross_correlation(a: &Tensor, b: &Tensor, norm: f32) -> Tensor {
-    assert_eq!(a.shape(), b.shape());
-    let (n, d) = (a.shape()[0], a.shape()[1]);
+pub fn try_cross_correlation(a: &Tensor, b: &Tensor, norm: f32) -> Result<Tensor, SpecError> {
+    let (n, d) = paired_views(a, b)?;
     let mut c = Tensor::zeros(&[d, d]);
     accumulate_cross_range(&mut c, a, b, 0, n);
     let inv = 1.0 / norm;
     for v in c.data_mut() {
         *v *= inv;
     }
-    c
+    Ok(c)
+}
+
+/// Panicking wrapper over [`try_cross_correlation`], kept for API
+/// stability.
+///
+/// # Panics
+/// If the views are not rank-2 tensors of identical shape.
+pub fn cross_correlation(a: &Tensor, b: &Tensor, norm: f32) -> Tensor {
+    try_cross_correlation(a, b, norm).unwrap_or_else(|e| panic!("cross_correlation: {e}"))
 }
 
 /// Accumulate the raw (unscaled) `Σ_k a_k b_kᵀ` for rows `lo..hi` into
@@ -97,9 +155,8 @@ pub fn covariance(a: &Tensor) -> Tensor {
 }
 
 /// Barlow Twins' off-diagonal regularizer `R_off(M) = Σ_{i≠j} M_ij²` (Eq. 2).
-pub fn r_off(m: &Tensor) -> f64 {
-    let d = m.shape()[0];
-    assert_eq!(m.shape(), &[d, d]);
+pub fn try_r_off(m: &Tensor) -> Result<f64, SpecError> {
+    let d = square_dim(m)?;
     let mut acc = 0.0f64;
     for i in 0..d {
         let row = m.row(i);
@@ -109,7 +166,15 @@ pub fn r_off(m: &Tensor) -> f64 {
             }
         }
     }
-    acc
+    Ok(acc)
+}
+
+/// Panicking wrapper over [`try_r_off`], kept for API stability.
+///
+/// # Panics
+/// If `m` is not a square matrix.
+pub fn r_off(m: &Tensor) -> f64 {
+    try_r_off(m).unwrap_or_else(|e| panic!("r_off: {e}"))
 }
 
 /// Barlow Twins' invariance term `Σ_i (1 - M_ii)²` (first term of Eq. 1).
@@ -133,9 +198,8 @@ pub fn r_var(m: &Tensor, gamma: f32) -> f64 {
 
 /// `sumvec(M)` computed naively from a materialized d×d matrix (Eq. 5):
 /// `sumvec(M)_i = Σ_j M[j, (i+j) mod d]`. `O(d²)`.
-pub fn sumvec_naive(m: &Tensor) -> Vec<f32> {
-    let d = m.shape()[0];
-    assert_eq!(m.shape(), &[d, d]);
+pub fn try_sumvec_naive(m: &Tensor) -> Result<Vec<f32>, SpecError> {
+    let d = square_dim(m)?;
     let mut v = vec![0.0f32; d];
     for j in 0..d {
         let row = m.row(j);
@@ -143,18 +207,34 @@ pub fn sumvec_naive(m: &Tensor) -> Vec<f32> {
             v[i] += row[(i + j) % d];
         }
     }
-    v
+    Ok(v)
+}
+
+/// Panicking wrapper over [`try_sumvec_naive`], kept for API stability.
+///
+/// # Panics
+/// If `m` is not a square matrix.
+pub fn sumvec_naive(m: &Tensor) -> Vec<f32> {
+    try_sumvec_naive(m).unwrap_or_else(|e| panic!("sumvec_naive: {e}"))
 }
 
 /// `sumvec(C(A,B))` computed directly from embeddings via the convolution
 /// theorem (Eq. 12): `F⁻¹( Σ_k conj(F(a_k)) ∘ F(b_k) ) / norm`.
 /// `O(nd log d)` time, `O(d)` extra space. One-shot wrapper over
 /// [`FftSumvecKernel`].
-pub fn sumvec_fft(a: &Tensor, b: &Tensor, norm: f32) -> Vec<f32> {
-    assert_eq!(a.shape(), b.shape());
-    let mut k = FftSumvecKernel::new(a.shape()[1]);
+pub fn try_sumvec_fft(a: &Tensor, b: &Tensor, norm: f32) -> Result<Vec<f32>, SpecError> {
+    let (_, d) = paired_views(a, b)?;
+    let mut k = FftSumvecKernel::new(d);
     k.accumulate(a, b);
-    k.sumvec(norm)
+    Ok(k.sumvec(norm))
+}
+
+/// Panicking wrapper over [`try_sumvec_fft`], kept for API stability.
+///
+/// # Panics
+/// If the views are not rank-2 tensors of identical shape.
+pub fn sumvec_fft(a: &Tensor, b: &Tensor, norm: f32) -> Vec<f32> {
+    try_sumvec_fft(a, b, norm).unwrap_or_else(|e| panic!("sumvec_fft: {e}"))
 }
 
 /// `R_sum(M)` over a precomputed summary vector (Eq. 6): all but the zeroth
@@ -165,11 +245,19 @@ pub fn r_sum_from_sumvec(sumvec: &[f32], q: Q) -> f64 {
 
 /// The proposed regularizer `R_sum(C(A,B))` straight from embeddings
 /// (`O(nd log d)`). One-shot wrapper over [`FftSumvecKernel`].
-pub fn r_sum_fft(a: &Tensor, b: &Tensor, norm: f32, q: Q) -> f64 {
-    assert_eq!(a.shape(), b.shape());
-    let mut k = FftSumvecKernel::new(a.shape()[1]);
+pub fn try_r_sum_fft(a: &Tensor, b: &Tensor, norm: f32, q: Q) -> Result<f64, SpecError> {
+    let (_, d) = paired_views(a, b)?;
+    let mut k = FftSumvecKernel::new(d);
     k.accumulate(a, b);
-    k.r_sum(norm, q)
+    Ok(k.r_sum(norm, q))
+}
+
+/// Panicking wrapper over [`try_r_sum_fft`], kept for API stability.
+///
+/// # Panics
+/// If the views are not rank-2 tensors of identical shape.
+pub fn r_sum_fft(a: &Tensor, b: &Tensor, norm: f32, q: Q) -> f64 {
+    try_r_sum_fft(a, b, norm, q).unwrap_or_else(|e| panic!("r_sum_fft: {e}"))
 }
 
 /// Grouped regularizer `R_sum^(b)(C(A,B))` (Eq. 13), computed blockwise via
@@ -177,17 +265,63 @@ pub fn r_sum_fft(a: &Tensor, b: &Tensor, norm: f32, q: Q) -> f64 {
 /// component (it holds the block trace); off-diagonal blocks keep all `b`
 /// components. One-shot wrapper over [`GroupedFftKernel`], which computes
 /// each group's spectrum once per sample and reuses it across block pairs.
-pub fn r_sum_grouped_fft(a: &Tensor, b: &Tensor, block: usize, norm: f32, q: Q) -> f64 {
-    assert!(block >= 1);
-    assert_eq!(a.shape(), b.shape());
-    let mut k = GroupedFftKernel::new(a.shape()[1], block);
+///
+/// The block size must evenly divide `d`
+/// ([`SpecError::BlockMismatch`] otherwise — silently zero-padding a
+/// ragged last group would change the regularizer's value relative to the
+/// artifact names advertising `b`). The device artifacts *do* pad (paper
+/// footnote 4); for a host-side ragged oracle use
+/// [`r_sum_grouped_padded_naive`] or drive [`GroupedFftKernel`] directly.
+pub fn try_r_sum_grouped_fft(
+    a: &Tensor,
+    b: &Tensor,
+    block: usize,
+    norm: f32,
+    q: Q,
+) -> Result<f64, SpecError> {
+    let (_, d) = paired_views(a, b)?;
+    check_block(block, d)?;
+    let mut k = GroupedFftKernel::new(d, block);
     k.accumulate(a, b);
-    k.r_sum(norm, q)
+    Ok(k.r_sum(norm, q))
+}
+
+/// Panicking wrapper over [`try_r_sum_grouped_fft`], kept for API
+/// stability.
+///
+/// # Panics
+/// If the views are not rank-2 tensors of identical shape, or if `block`
+/// does not evenly divide `d`.
+pub fn r_sum_grouped_fft(a: &Tensor, b: &Tensor, block: usize, norm: f32, q: Q) -> f64 {
+    try_r_sum_grouped_fft(a, b, block, norm, q)
+        .unwrap_or_else(|e| panic!("r_sum_grouped_fft: {e}"))
 }
 
 /// Grouped regularizer computed naively from a materialized matrix —
-/// the oracle for [`r_sum_grouped_fft`].
+/// the oracle for [`r_sum_grouped_fft`]. Rejects blocks that do not
+/// divide `d`; see [`r_sum_grouped_padded_naive`] for the explicitly
+/// zero-padded ragged form.
+pub fn try_r_sum_grouped_naive(m: &Tensor, block: usize, q: Q) -> Result<f64, SpecError> {
+    let d = square_dim(m)?;
+    check_block(block, d)?;
+    Ok(r_sum_grouped_padded_naive(m, block, q))
+}
+
+/// Panicking wrapper over [`try_r_sum_grouped_naive`].
+///
+/// # Panics
+/// If `m` is not square or `block` does not evenly divide `d`.
 pub fn r_sum_grouped_naive(m: &Tensor, block: usize, q: Q) -> f64 {
+    try_r_sum_grouped_naive(m, block, q).unwrap_or_else(|e| panic!("r_sum_grouped_naive: {e}"))
+}
+
+/// Grouped regularizer over a materialized matrix with an explicitly
+/// **zero-padded** ragged last group (paper footnote 4) — the permissive
+/// oracle matching the device artifacts' padding semantics and
+/// [`GroupedFftKernel`]'s behaviour at any `block >= 1`. The validated
+/// public entry points ([`try_r_sum_grouped_naive`],
+/// [`try_r_sum_grouped_fft`]) reject ragged blocks instead.
+pub fn r_sum_grouped_padded_naive(m: &Tensor, block: usize, q: Q) -> f64 {
     let d = m.shape()[0];
     let groups = d.div_ceil(block);
     let mut acc = 0.0f64;
@@ -346,7 +480,7 @@ mod tests {
         let a = rand_tensor(&mut rng, n, d);
         let b = rand_tensor(&mut rng, n, d);
         let c = cross_correlation(&a, &b, n as f32);
-        for block in [2usize, 3, 4, 6, 5 /* ragged */] {
+        for block in [2usize, 3, 4, 6, 12] {
             for q in [Q::L1, Q::L2] {
                 let fast = r_sum_grouped_fft(&a, &b, block, n as f32, q);
                 let naive = r_sum_grouped_naive(&c, block, q);
@@ -356,6 +490,54 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn grouped_free_fns_reject_ragged_blocks() {
+        // 5 does not divide 12: the validated entry points reject it with
+        // a typed error instead of silently zero-padding …
+        let mut rng = Rng::new(61);
+        let (n, d) = (4, 12);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        let c = cross_correlation(&a, &b, n as f32);
+        assert_eq!(
+            try_r_sum_grouped_fft(&a, &b, 5, n as f32, Q::L2),
+            Err(crate::api::SpecError::BlockMismatch { block: 5, d: 12 })
+        );
+        assert_eq!(
+            try_r_sum_grouped_naive(&c, 5, Q::L2),
+            Err(crate::api::SpecError::BlockMismatch { block: 5, d: 12 })
+        );
+        assert_eq!(
+            try_r_sum_grouped_fft(&a, &b, 0, n as f32, Q::L2),
+            Err(crate::api::SpecError::BlockMismatch { block: 0, d: 12 })
+        );
+        // … while the explicit padded oracle and the kernel keep the
+        // footnote-4 zero-padding semantics, and agree with each other.
+        let padded = r_sum_grouped_padded_naive(&c, 5, Q::L2);
+        let mut k = GroupedFftKernel::new(d, 5);
+        k.accumulate(&a, &b);
+        let fast = k.r_sum(n as f32, Q::L2);
+        assert!(
+            (fast - padded).abs() < 1e-3 * padded.abs().max(1.0),
+            "{fast} vs {padded}"
+        );
+    }
+
+    #[test]
+    fn try_twins_reject_bad_shapes() {
+        let a = Tensor::zeros(&[4, 8]);
+        let b = Tensor::zeros(&[4, 6]);
+        assert!(try_cross_correlation(&a, &b, 4.0).is_err());
+        assert!(try_sumvec_fft(&a, &b, 4.0).is_err());
+        assert!(try_r_sum_fft(&a, &b, 4.0, Q::L2).is_err());
+        let rect = Tensor::zeros(&[4, 8]);
+        assert!(try_r_off(&rect).is_err());
+        assert!(try_sumvec_naive(&rect).is_err());
+        // valid inputs still succeed through the fallible path
+        let ok = Tensor::zeros(&[4, 8]);
+        assert!(try_cross_correlation(&a, &ok, 4.0).is_ok());
     }
 
     #[test]

@@ -1,0 +1,37 @@
+//! Host ↔ `xla::Literal` marshaling helpers shared by every execution
+//! path (trainer, DDP, eval, executors, benches). Formerly private to
+//! the coordinator; they live with the runtime so the `api` executors and
+//! the bench harness can marshal without depending on the coordinator.
+
+use anyhow::Result;
+
+use crate::util::tensor::Tensor;
+
+/// f32 tensor → literal (row-major, shape-preserving).
+pub fn literal_f32(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+/// u32 permutation → i32 literal.
+pub fn literal_i32(perm: &[u32]) -> Result<xla::Literal> {
+    let v: Vec<i32> = perm.iter().map(|&p| p as i32).collect();
+    xla::Literal::vec1(&v)
+        .reshape(&[perm.len() as i64])
+        .map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+/// Scalar f32 → rank-0 literal (e.g. the per-step learning rate).
+pub fn literal_scalar(v: f32) -> Result<xla::Literal> {
+    xla::Literal::vec1(&[v])
+        .reshape(&[])
+        .map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+/// Extract a scalar f32 from a literal.
+pub fn scalar(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow::anyhow!("{e}"))
+}

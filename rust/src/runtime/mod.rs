@@ -38,12 +38,14 @@
 mod artifact;
 pub mod binding;
 mod engine;
+pub mod literal;
 pub mod params;
 pub mod session;
 
 pub use artifact::{Artifact, Manifest, TensorSpec};
 pub use binding::{EmitSpec, ExecutionBinding};
 pub use engine::{artifact_paths, Engine};
+pub use literal::{literal_f32, literal_i32, literal_scalar, scalar};
 pub use params::ParamStore;
 pub use session::{
     ArtifactSource, ContentKey, Session, SessionStats, SharedSession, WarmupReport,

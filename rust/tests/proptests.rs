@@ -5,6 +5,7 @@
 //! RNG: each property is checked over many randomized cases and failures
 //! report the case seed for exact reproduction.
 
+use decorr::api::{LossFamily, LossSpec, NormConvention, RegularizerForm};
 use decorr::config::{TrainConfig, Variant};
 use decorr::coordinator::LrSchedule;
 use decorr::data::loader::make_batch;
@@ -287,7 +288,9 @@ fn prop_kernels_match_naive_oracle() {
                 let mut gk = GroupedFftKernel::new(d, block);
                 gk.accumulate(&a, &b);
                 let fast = gk.r_sum(n as f32, q);
-                let naive = regularizer::r_sum_grouped_naive(&c, block, q);
+                // padded oracle: d is random here, so blocks may be ragged
+                // (the kernel zero-pads; the validated free fns reject).
+                let naive = regularizer::r_sum_grouped_padded_naive(&c, block, q);
                 assert!(
                     (fast - naive).abs() < 1e-3 * (1.0 + naive.abs()),
                     "block={block} q={q:?}: {fast} vs {naive}"
@@ -431,12 +434,91 @@ fn prop_json_roundtrip() {
 fn prop_config_artifact_names() {
     for v in Variant::all() {
         let mut cfg = TrainConfig::default();
-        cfg.variant = v;
+        cfg.spec = v.spec();
         for preset in ["tiny", "small", "e2e"] {
             cfg.preset = preset.into();
             let name = cfg.train_artifact();
             assert!(name.contains(v.as_str()));
             assert!(name.ends_with(preset));
+            // the legacy string and the spec-derived id agree exactly
+            assert_eq!(name, format!("train_{}_{preset}", v.as_str()));
         }
     }
+}
+
+// ------------------------------------------------------------- loss spec
+
+/// Draw a random spec from the full product space: family × form
+/// (off / sum / grouped, q ∈ {1, 2}, assorted blocks) × norm × λ ×
+/// threads.
+fn rand_spec(rng: &mut Rng) -> LossSpec {
+    let family = if rng.bernoulli(0.5) {
+        LossFamily::BarlowTwins
+    } else {
+        LossFamily::VicReg
+    };
+    let q = if rng.bernoulli(0.5) {
+        decorr::regularizer::Q::L1
+    } else {
+        decorr::regularizer::Q::L2
+    };
+    let form = match rng.next_bounded(3) {
+        0 => RegularizerForm::OffDiag,
+        1 => RegularizerForm::Sum { q },
+        _ => {
+            let blocks = [1usize, 2, 16, 64, 128, 256, 2048];
+            RegularizerForm::GroupedSum {
+                q,
+                block: blocks[rng.next_bounded(blocks.len() as u64) as usize],
+            }
+        }
+    };
+    let mut b = LossSpec::builder(family).form(form);
+    if rng.bernoulli(0.5) {
+        b = b.norm(if rng.bernoulli(0.5) {
+            NormConvention::BatchSize
+        } else {
+            NormConvention::Unbiased
+        });
+    }
+    if rng.bernoulli(0.5) {
+        let lambdas = [1.0f32, 0.005, 0.0051, 2.0f32.powi(-10), 25.0, 0.5];
+        b = b.lambda(lambdas[rng.next_bounded(lambdas.len() as u64) as usize]);
+    }
+    if rng.bernoulli(0.5) {
+        b = b.threads(rng.next_bounded(9) as usize); // 0 (auto) ..= 8
+    }
+    b.build().expect("non-zero blocks always build")
+}
+
+/// `LossSpec::parse(spec.to_string()) == spec` over the full product
+/// space — the canonical-form round-trip the config layer depends on.
+#[test]
+fn prop_loss_spec_roundtrip() {
+    for_cases(200, |rng| {
+        let spec = rand_spec(rng);
+        let text = spec.to_string();
+        let back = LossSpec::parse(&text)
+            .unwrap_or_else(|e| panic!("reparse of '{text}' failed: {e}"));
+        assert_eq!(back, spec, "{text}");
+        // parsing is case-insensitive
+        let upper = LossSpec::parse(&text.to_ascii_uppercase())
+            .unwrap_or_else(|e| panic!("upper-case reparse of '{text}' failed: {e}"));
+        assert_eq!(upper, spec, "{text}");
+    });
+}
+
+/// The artifact fragment itself parses back to the same structural spec
+/// (fragments do not carry norm/λ/threads, so compare the structure).
+#[test]
+fn prop_spec_fragment_parses_back() {
+    for_cases(100, |rng| {
+        let spec = rand_spec(rng);
+        let frag = spec.artifact_fragment();
+        let back = LossSpec::parse(&frag)
+            .unwrap_or_else(|e| panic!("fragment '{frag}' failed: {e}"));
+        assert_eq!(back.family, spec.family, "{frag}");
+        assert_eq!(back.form, spec.form, "{frag}");
+        assert_eq!(back.artifact_fragment(), frag);
+    });
 }
