@@ -12,10 +12,10 @@
 //! (requires `make artifacts`).
 
 use anyhow::Result;
+use decorr::api::train::DriverBuilder;
 use decorr::api::{LossExecutor, LossSpec};
 use decorr::config::TrainConfig;
 use decorr::coordinator::trainer::{literal_f32, literal_i32, scalar};
-use decorr::coordinator::Trainer;
 use decorr::regularizer::kernel::{DecorrelationKernel, FftSumvecKernel};
 use decorr::regularizer::{self, Q};
 use decorr::runtime::Session;
@@ -92,11 +92,13 @@ fn main() -> Result<()> {
     );
 
     // --- 3. A few pretraining steps --------------------------------------
+    // Drivers are built through the api::train front door: one fallible
+    // DriverBuilder covers fresh runs, session reuse, DDP, and resume.
     let mut cfg = TrainConfig::preset_tiny();
     cfg.epochs = 1;
     cfg.steps_per_epoch = 10;
     cfg.out_dir = String::new();
-    let mut trainer = Trainer::new(cfg)?;
+    let mut trainer = DriverBuilder::new(cfg).build_trainer()?;
     let report = trainer.run()?;
     println!(
         "tiny pretrain: {} steps, loss {:.4} -> {:.4} ({:.1} steps/s)",

@@ -8,15 +8,16 @@
 //! Run with:
 //!   cargo run --release --offline --example train_ssl_e2e
 //! Flags (optional): --epochs N --steps-per-epoch K --variant bt_sum
-//!                   --preset e2e --out-dir runs/e2e
+//!                   --preset e2e --out-dir runs/e2e --resume path.ckpt
 //!
 //! The loss curve lands in <out-dir>/metrics.jsonl; the run summary is
 //! recorded in EXPERIMENTS.md.
 
 use anyhow::Result;
+use decorr::api::train::DriverBuilder;
 use decorr::api::LossSpec;
 use decorr::config::TrainConfig;
-use decorr::coordinator::{linear_eval, Trainer};
+use decorr::coordinator::linear_eval;
 use decorr::data::synth::{ShapeWorld, ShapeWorldConfig, Vocab};
 use decorr::util::cli::Args;
 use decorr::util::timer::human_duration;
@@ -33,6 +34,7 @@ fn main() -> Result<()> {
     cfg.lr = args.get_or("lr", cfg.lr)?;
     let train_samples = args.get_or("train-samples", 3072usize)?;
     let test_samples = args.get_or("test-samples", 768usize)?;
+    let resume = args.flag("resume");
     args.finish()?;
 
     println!(
@@ -42,7 +44,12 @@ fn main() -> Result<()> {
     let seed = cfg.seed;
     let preset = cfg.preset.clone();
     let out_dir = cfg.out_dir.clone();
-    let mut trainer = Trainer::new(cfg)?;
+    let mut builder = DriverBuilder::new(cfg);
+    if let Some(path) = &resume {
+        println!("resuming parameters from {path}");
+        builder = builder.resume_from(path.clone());
+    }
+    let mut trainer = builder.build_trainer()?;
     println!(
         "batch size {} | embed dim {}",
         trainer.batch_size()?,

@@ -6,7 +6,7 @@
 //! fuse K steps behind one dispatch (lax.scan), amortizing those costs —
 //! the dominant overhead when the model is small.
 
-use decorr::bench_harness::{bench, Table};
+use decorr::bench_harness::{bench, smoke_mode, table, Table};
 use decorr::coordinator::trainer::{literal_f32, literal_i32};
 use decorr::coordinator::Checkpoint;
 use decorr::runtime::{ParamStore, Session};
@@ -15,6 +15,7 @@ use decorr::util::tensor::Tensor;
 
 fn main() {
     let session = Session::open("artifacts").expect("run `make artifacts` first");
+    let smoke = smoke_mode();
     let ckpt = Checkpoint::load("artifacts/init_tiny.ckpt").unwrap();
     let mut rng = Rng::new(42);
     let (n, f, d) = (32usize, 64usize, 256usize);
@@ -51,7 +52,8 @@ fn main() {
                 }
             })
             .collect();
-        let stats = bench(3, 15, || art.execute_literals_ref(&inputs).unwrap());
+        let (warmup, iters) = if smoke { (1, 3) } else { (3, 15) };
+        let stats = bench(warmup, iters, || art.execute_literals_ref(&inputs).unwrap());
         let ms = stats.median * 1e3;
         single_ms = Some(ms);
         table.row(vec![
@@ -99,7 +101,8 @@ fn main() {
                 }
             })
             .collect();
-        let stats = bench(2, 10, || art.execute_literals_ref(&inputs).unwrap());
+        let (warmup, iters) = if smoke { (1, 3) } else { (2, 10) };
+        let stats = bench(warmup, iters, || art.execute_literals_ref(&inputs).unwrap());
         let ms = stats.median * 1e3 / k as f64;
         table.row(vec![
             format!("scan-fused k={k}"),
@@ -114,4 +117,6 @@ fn main() {
     println!("\n[bench_multi_step] dispatch amortization (tiny preset, d=256):");
     table.print();
     println!("(per-step cost includes params upload + tuple download; scan fuses K steps per dispatch)");
+    table::write_json("BENCH_multi_step.json", &[("multi_step", &table)]).unwrap();
+    println!("wrote BENCH_multi_step.json");
 }

@@ -2,20 +2,29 @@
 //! per loss variant, plus the loss-node share, at the small and e2e
 //! presets.
 //!
+//! Drivers are built through the `api::train::DriverBuilder` front door
+//! and share one runtime `Session` across every (preset, variant) cell,
+//! so eval/projection artifacts compile once for the whole table. The
+//! machine-readable form lands in `BENCH_train_step.json` (the perf
+//! trajectory format).
+//!
 //! Paper shape: the proposed loss shaves a constant-factor off total
 //! training time, with the gain concentrated at the loss node (most
 //! visible for lightweight backbones).
 
+use decorr::api::train::DriverBuilder;
 use decorr::api::RegularizerForm;
-use decorr::bench_harness::{bench, Table};
+use decorr::bench_harness::{bench, smoke_mode, table, Table};
 use decorr::config::{TrainConfig, Variant};
-use decorr::coordinator::Trainer;
 use decorr::data::loader::make_batch;
 use decorr::data::synth::{ShapeWorld, ShapeWorldConfig};
 use decorr::data::{AugmentConfig, Augmenter};
+use decorr::runtime::Session;
 
 fn main() {
-    let mut table = Table::new(&["preset", "variant", "ms/step (median)", "vs baseline"]);
+    let (warmup, iters) = if smoke_mode() { (1, 3) } else { (2, 8) };
+    let mut tbl = Table::new(&["preset", "variant", "ms/step (median)", "vs baseline"]);
+    let mut session: Option<Session> = None;
     for preset in ["small", "e2e"] {
         let mut baseline = None;
         for spec in [
@@ -28,15 +37,20 @@ fn main() {
             let mut cfg = TrainConfig::preset(preset).unwrap();
             cfg.spec = spec;
             cfg.out_dir = String::new();
-            let mut trainer = Trainer::new(cfg.clone()).expect("run `make artifacts` first");
+            let seed = cfg.seed;
+            let mut builder = DriverBuilder::new(cfg);
+            if let Some(s) = session.take() {
+                builder = builder.session(s);
+            }
+            let mut trainer = builder.build_trainer().expect("run `make artifacts` first");
             let ds = ShapeWorld::new(ShapeWorldConfig {
-                seed: cfg.seed,
+                seed,
                 ..Default::default()
             });
             let aug = Augmenter::new(AugmentConfig::default());
             let batch = make_batch(&ds, &aug, trainer.batch_size().unwrap(), 4096, 1, 0);
             let mut epoch = 0usize;
-            let stats = bench(2, 8, || {
+            let stats = bench(warmup, iters, || {
                 let m = trainer.step(&batch, epoch).unwrap();
                 epoch += 1;
                 m
@@ -50,14 +64,17 @@ fn main() {
                     .map(|b| format!("{:.2}x", b / ms))
                     .unwrap_or_else(|| "-".into())
             };
-            table.row(vec![
+            tbl.row(vec![
                 preset.to_string(),
                 spec.to_string(),
                 format!("{ms:.1}"),
                 rel,
             ]);
+            session = Some(trainer.into_session());
         }
     }
     println!("\n[bench_train_step] Table 4 analogue (full step, fixed batch):");
-    table.print();
+    tbl.print();
+    table::write_json("BENCH_train_step.json", &[("train_step", &tbl)]).unwrap();
+    println!("wrote BENCH_train_step.json");
 }

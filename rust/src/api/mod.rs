@@ -33,6 +33,14 @@
 //! The legacy [`Variant`](crate::config::Variant) enum survives as a thin
 //! alias layer over the six paper presets (see [`compat`]); its artifact
 //! names and labels are byte-identical to the spec-derived ones.
+//!
+//! Beyond describing losses, the front door also *runs* them: the
+//! [`train`] subsystem turns `LossSpec + TrainConfig` into a polymorphic
+//! [`TrainDriver`] (monolithic or DDP) via one fallible
+//! [`DriverBuilder`], drives it through the shared
+//! [`run_loop`](train::run_loop) with composable
+//! [`TrainObserver`] hooks, and expands `(b, q)` spec grids into sweeps
+//! ([`SweepPlan`]) sharing a single runtime session.
 
 #![deny(missing_docs)]
 
@@ -40,7 +48,9 @@ pub mod compat;
 pub mod error;
 pub mod executor;
 pub mod spec;
+pub mod train;
 
 pub use error::SpecError;
 pub use executor::{Backend, DeviceExecutor, HostExecutor, LossExecutor, LossOutput};
 pub use spec::{LossFamily, LossSpec, LossSpecBuilder, NormConvention, RegularizerForm};
+pub use train::{DriverBuilder, SweepPlan, TrainDriver, TrainObserver, TrainReport};

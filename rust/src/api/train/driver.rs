@@ -1,0 +1,231 @@
+//! The [`TrainDriver`] trait and its single fallible constructor,
+//! [`DriverBuilder`].
+//!
+//! A driver is "something that can take one optimizer step": the
+//! monolithic [`Trainer`] (fused train artifact) and the simulated-DDP
+//! [`DdpTrainer`] (per-shard grad artifacts + leader apply) both implement
+//! it, so the shared [`run_loop`](super::run_loop), the observers, and the
+//! spec-grid sweeps are written once against the trait.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::TrainConfig;
+use crate::coordinator::{
+    Checkpoint, DdpTrainer, EmbeddingDiagnostics, InputAdapter, MetricsLogger, StepMetrics,
+    Trainer,
+};
+use crate::data::SslBatch;
+use crate::runtime::{Artifact, Session};
+
+use super::super::spec::LossSpec;
+
+/// One polymorphic training backend: everything the shared step loop,
+/// the observers, and the sweep harness need from a trainer.
+///
+/// Implemented by [`Trainer`] and [`DdpTrainer`]; construct either via
+/// [`DriverBuilder`]. Object-safe, so heterogeneous sweeps can hold
+/// `Box<dyn TrainDriver>`.
+pub trait TrainDriver {
+    /// The typed loss specification this driver trains.
+    fn spec(&self) -> &LossSpec;
+
+    /// The full run configuration (epochs, schedule, seeds, dirs).
+    fn config(&self) -> &TrainConfig;
+
+    /// Execute one optimizer step on a prepared twin-view batch.
+    fn step(&mut self, batch: &SslBatch, epoch: usize) -> Result<StepMetrics>;
+
+    /// Current parameters as a host checkpoint.
+    fn snapshot(&self) -> Result<Checkpoint>;
+
+    /// Table-6-style decorrelation diagnostics of a parameter snapshot:
+    /// project `batches` twin-view batches and measure the normalized
+    /// residual (Eq. 16/17) plus the relaxed `R_sum` through the host
+    /// [`LossExecutor`](crate::api::LossExecutor).
+    fn diagnose(&self, snapshot: &Checkpoint, batches: usize) -> Result<EmbeddingDiagnostics>;
+
+    /// The metrics logger the step loop records into (shareable: `log`
+    /// takes `&self`).
+    fn metrics(&self) -> &MetricsLogger;
+
+    /// The runtime session whose artifact cache this driver loads from.
+    fn session(&self) -> &Session;
+
+    /// Consume the driver, handing its session to the next consumer so
+    /// compiled artifacts stay warm across a sweep.
+    fn into_session(self: Box<Self>) -> Session;
+
+    /// Batch size expected by the underlying executable(s).
+    fn batch_size(&self) -> Result<usize>;
+
+    /// The input adapter matching the artifact's sample shape.
+    fn input_adapter(&self) -> InputAdapter;
+
+    /// Render one step's console line. The default is the monolithic
+    /// trainer's historical format; drivers may override (DDP prefixes
+    /// its shard count).
+    fn format_step(&self, m: &StepMetrics, total: usize) -> String {
+        format!(
+            "step {:>5}/{} epoch {:>3} lr {:.4} loss {:.4} inv {:.4} reg {:.4} ({:.0} ms)",
+            m.step,
+            total,
+            m.epoch,
+            m.lr,
+            m.loss,
+            m.inv,
+            m.reg,
+            m.step_time * 1e3
+        )
+    }
+}
+
+/// The single fallible constructor for every [`TrainDriver`].
+///
+/// Replaces the historical `Trainer::new` / `with_session` /
+/// `with_session_artifact` / `DdpTrainer::new` constructor zoo (those now
+/// delegate here). Failures are typed: spec/manifest disagreements surface
+/// as [`SpecError`](super::super::SpecError) wrapped in `anyhow::Error`
+/// with artifact context, never panics.
+///
+/// ```no_run
+/// use decorr::api::train::DriverBuilder;
+/// use decorr::api::LossSpec;
+/// use decorr::config::TrainConfig;
+///
+/// let cfg = TrainConfig::preset_tiny();
+/// let spec = LossSpec::parse("bt_sum@b=64,q=1").unwrap();
+/// let mut driver = DriverBuilder::for_spec(spec, cfg).build().unwrap();
+/// let report = decorr::api::train::run_driver(driver.as_mut(), &mut []).unwrap();
+/// println!("{:.2} steps/s", report.steps_per_sec);
+/// ```
+pub struct DriverBuilder {
+    cfg: TrainConfig,
+    session: Option<Session>,
+    artifact: Option<Arc<Artifact>>,
+    shards: Option<usize>,
+    resume: Option<String>,
+}
+
+impl DriverBuilder {
+    /// Start from a full config (its `spec` field names the loss).
+    pub fn new(cfg: TrainConfig) -> DriverBuilder {
+        DriverBuilder {
+            cfg,
+            session: None,
+            artifact: None,
+            shards: None,
+            resume: None,
+        }
+    }
+
+    /// Start from an explicit `LossSpec` + config (the spec overrides
+    /// `cfg.spec`).
+    pub fn for_spec(spec: LossSpec, mut cfg: TrainConfig) -> DriverBuilder {
+        cfg.spec = spec;
+        DriverBuilder::new(cfg)
+    }
+
+    /// Reuse an existing runtime session arm, so sweeps and benches share
+    /// compiled artifacts across drivers. Must load from the config's
+    /// artifact directory.
+    pub fn session(mut self, session: Session) -> DriverBuilder {
+        self.session = Some(session);
+        self
+    }
+
+    /// Use an already-loaded train artifact (tests/benches that hold one;
+    /// monolithic driver only).
+    pub fn artifact(mut self, artifact: Arc<Artifact>) -> DriverBuilder {
+        self.artifact = Some(artifact);
+        self
+    }
+
+    /// Build the simulated-DDP driver over `shards` worker shards instead
+    /// of the monolithic trainer.
+    pub fn ddp(mut self, shards: usize) -> DriverBuilder {
+        self.shards = Some(shards);
+        self
+    }
+
+    /// Resume: load this checkpoint into the parameter store before the
+    /// first step (replacing the preset's init checkpoint). Optimizer
+    /// state restarts at zero — the checkpoint format carries parameters
+    /// only.
+    pub fn resume_from(mut self, path: impl Into<String>) -> DriverBuilder {
+        self.resume = Some(path.into());
+        self
+    }
+
+    /// Resolve the session against the config's artifact directory.
+    fn resolve_session(cfg: &TrainConfig, session: Option<Session>) -> Result<Session> {
+        match session {
+            Some(s) => {
+                anyhow::ensure!(
+                    s.artifact_dir() == std::path::Path::new(&cfg.artifact_dir),
+                    "session loads from '{}' but config expects '{}'",
+                    s.artifact_dir().display(),
+                    cfg.artifact_dir
+                );
+                Ok(s)
+            }
+            None => Session::open(&cfg.artifact_dir),
+        }
+    }
+
+    /// Load the resume checkpoint, if any.
+    fn resolve_resume(resume: Option<&str>) -> Result<Option<Checkpoint>> {
+        resume
+            .map(|path| {
+                Checkpoint::load(path).with_context(|| format!("loading resume checkpoint {path}"))
+            })
+            .transpose()
+    }
+
+    /// Build the monolithic [`Trainer`]. Fails when a DDP shard count was
+    /// requested — use [`build`](Self::build) for the polymorphic path.
+    pub fn build_trainer(self) -> Result<Trainer> {
+        anyhow::ensure!(
+            self.shards.is_none(),
+            "a shard count was set — build() or build_ddp() constructs the DDP driver"
+        );
+        let cfg = self.cfg;
+        let session = Self::resolve_session(&cfg, self.session)?;
+        let artifact = match self.artifact {
+            Some(a) => a,
+            None => session
+                .load(&cfg.train_artifact())
+                .with_context(|| format!("loading train artifact {}", cfg.train_artifact()))?,
+        };
+        let resume = Self::resolve_resume(self.resume.as_deref())?;
+        Trainer::from_parts(cfg, session, artifact, resume.as_ref())
+    }
+
+    /// Build the simulated-DDP [`DdpTrainer`] (shard count from
+    /// [`ddp`](Self::ddp), default 1).
+    pub fn build_ddp(self) -> Result<DdpTrainer> {
+        anyhow::ensure!(
+            self.artifact.is_none(),
+            "a preloaded train artifact only applies to the monolithic trainer"
+        );
+        let shards = self.shards.unwrap_or(1);
+        let session = match self.session {
+            Some(s) => Some(Self::resolve_session(&self.cfg, Some(s))?),
+            None => None,
+        };
+        let resume = Self::resolve_resume(self.resume.as_deref())?;
+        DdpTrainer::from_parts(self.cfg, shards, session, resume.as_ref())
+    }
+
+    /// Build the driver the builder describes: [`DdpTrainer`] when a
+    /// shard count was set, [`Trainer`] otherwise — boxed behind the
+    /// polymorphic trait.
+    pub fn build(self) -> Result<Box<dyn TrainDriver>> {
+        if self.shards.is_some() {
+            Ok(Box::new(self.build_ddp()?))
+        } else {
+            Ok(Box::new(self.build_trainer()?))
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! The `api::train` subsystem: one polymorphic step-loop surface over the
+//! monolithic [`Trainer`](crate::coordinator::Trainer) and the simulated
+//! DDP [`DdpTrainer`](crate::coordinator::DdpTrainer).
+//!
+//! The paper's efficiency claim (`O(nd log d)` FFT regularizers vs
+//! `O(nd²)` materialized matrices) is only measurable end-to-end through
+//! the training step loop; this module owns that loop **once** and makes
+//! every way of running it composable:
+//!
+//! ```text
+//!  LossSpec + TrainConfig
+//!         │
+//!         ▼
+//!   DriverBuilder ── .session(…) .ddp(k) .resume_from(ckpt)
+//!         │
+//!         ▼
+//!    TrainDriver  (Trainer | DdpTrainer — step/snapshot/diagnose/…)
+//!         │
+//!         ▼
+//!     run_loop(driver, loader, observers) ─→ TrainReport
+//!         │                    │
+//!         │                    ├─ MetricsObserver      (mirror JSONL)
+//!         │                    ├─ CheckpointObserver   (periodic saves)
+//!         │                    ├─ DiagnosticsObserver  (Table-6 residuals)
+//!         │                    └─ BenchObserver        (steps/sec → JSON)
+//!         ▼
+//!     SweepPlan  ("bt_sum@b={64,128},q={1,2}" → drivers over one Session)
+//! ```
+//!
+//! * [`TrainDriver`] is the polymorphic contract: one optimizer step on a
+//!   prepared twin-view batch, plus the snapshot/diagnose/metrics surface
+//!   every consumer of a training run needs.
+//! * [`DriverBuilder`] is the single fallible constructor — it replaces
+//!   the `new` / `with_session` / `with_session_artifact` zoo and is the
+//!   only place resume checkpoints enter the parameter store.
+//! * [`run_loop`] owns the epoch/step skeleton (batch → step → log →
+//!   observers) once, so `Trainer::run` and `DdpTrainer::run` are thin
+//!   delegations with bit-identical numerics (pinned by `tests/driver.rs`).
+//! * [`TrainObserver`] hooks compose side effects without touching the
+//!   loop; the four shipped observers cover metrics mirroring, periodic
+//!   checkpoints, Table-6 diagnostics, and throughput capture.
+//! * [`SweepPlan`] expands a `(b, q)` spec-grid grammar into the ordered
+//!   spec list behind `decorr sweep` and the `BENCH_spec_grid.json` CI
+//!   trajectory.
+
+pub mod driver;
+pub mod observer;
+pub mod run;
+pub mod sweep;
+
+pub use driver::{DriverBuilder, TrainDriver};
+pub use observer::{
+    BenchObserver, CheckpointObserver, DiagnosticsObserver, MetricsObserver, TrainObserver,
+};
+pub use run::{run_driver, run_loop, TrainReport};
+pub use sweep::SweepPlan;

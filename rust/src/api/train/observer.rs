@@ -1,0 +1,243 @@
+//! [`TrainObserver`]: composable side effects hooked into the shared
+//! [`run_loop`](super::run_loop), plus the four shipped observers.
+//!
+//! Observers see the driver by shared reference after each step / epoch /
+//! run, so they can snapshot, diagnose, or read metrics without owning the
+//! loop — checkpointing composes with metrics mirroring composes with
+//! throughput capture, where the old hand-rolled loops allowed none of it.
+
+use anyhow::{Context, Result};
+
+use crate::bench_harness::table::{write_json, Table};
+use crate::coordinator::{EmbeddingDiagnostics, MetricsLogger, StepMetrics};
+
+use super::driver::TrainDriver;
+use super::run::TrainReport;
+
+/// Hooks into the shared step loop. All methods default to no-ops, so an
+/// observer implements only what it watches.
+pub trait TrainObserver {
+    /// Called after every optimizer step, before the metrics log.
+    fn on_step(&mut self, _driver: &dyn TrainDriver, _m: &StepMetrics) -> Result<()> {
+        Ok(())
+    }
+
+    /// Called after each epoch's steps complete.
+    fn on_epoch_end(&mut self, _driver: &dyn TrainDriver, _epoch: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// Called once with the finished run's report.
+    fn on_finish(&mut self, _driver: &dyn TrainDriver, _report: &TrainReport) -> Result<()> {
+        Ok(())
+    }
+}
+
+// --------------------------------------------------------------- metrics
+
+/// Mirrors every step into its own [`MetricsLogger`] — e.g. a second
+/// JSONL stream beside the driver's, or an in-memory capture for tests.
+pub struct MetricsObserver {
+    logger: MetricsLogger,
+}
+
+impl MetricsObserver {
+    /// Mirror into the given logger.
+    pub fn new(logger: MetricsLogger) -> MetricsObserver {
+        MetricsObserver { logger }
+    }
+
+    /// Mirror into a fresh in-memory logger.
+    pub fn in_memory() -> MetricsObserver {
+        MetricsObserver::new(MetricsLogger::in_memory())
+    }
+
+    /// The mirrored logger.
+    pub fn logger(&self) -> &MetricsLogger {
+        &self.logger
+    }
+}
+
+impl TrainObserver for MetricsObserver {
+    fn on_step(&mut self, _driver: &dyn TrainDriver, m: &StepMetrics) -> Result<()> {
+        self.logger.log(m.clone())
+    }
+}
+
+// ----------------------------------------------------------- checkpoints
+
+/// Periodically saves the driver's parameter snapshot under a directory
+/// (`step<NNNNNN>.ckpt` every `every_steps` steps, `final.ckpt` at the
+/// end). Resumable via `DriverBuilder::resume_from`.
+pub struct CheckpointObserver {
+    dir: String,
+    every_steps: usize,
+    saved: Vec<String>,
+}
+
+impl CheckpointObserver {
+    /// Save under `dir` every `every_steps` steps (0 = final only).
+    pub fn new(dir: impl Into<String>, every_steps: usize) -> CheckpointObserver {
+        CheckpointObserver {
+            dir: dir.into(),
+            every_steps,
+            saved: Vec::new(),
+        }
+    }
+
+    /// Paths written so far, in save order.
+    pub fn saved(&self) -> &[String] {
+        &self.saved
+    }
+
+    fn save(&mut self, driver: &dyn TrainDriver, file: &str) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating checkpoint dir {}", self.dir))?;
+        let path = format!("{}/{file}", self.dir);
+        driver.snapshot()?.save(&path)?;
+        self.saved.push(path);
+        Ok(())
+    }
+}
+
+impl TrainObserver for CheckpointObserver {
+    fn on_step(&mut self, driver: &dyn TrainDriver, m: &StepMetrics) -> Result<()> {
+        if self.every_steps > 0 && (m.step + 1) % self.every_steps == 0 {
+            self.save(driver, &format!("step{:06}.ckpt", m.step + 1))?;
+        }
+        Ok(())
+    }
+
+    fn on_finish(&mut self, driver: &dyn TrainDriver, _report: &TrainReport) -> Result<()> {
+        self.save(driver, "final.ckpt")
+    }
+}
+
+// ----------------------------------------------------------- diagnostics
+
+/// Runs the Table-6 decorrelation diagnostics (normalized residual,
+/// Eq. 16/17, through the host `LossExecutor`) on a fresh snapshot every
+/// `every_epochs` epochs — eval-during-training without forking the loop.
+pub struct DiagnosticsObserver {
+    batches: usize,
+    every_epochs: usize,
+    history: Vec<(usize, EmbeddingDiagnostics)>,
+}
+
+impl DiagnosticsObserver {
+    /// Diagnose over `batches` projected batches every `every_epochs`
+    /// epochs (0 = never).
+    pub fn new(batches: usize, every_epochs: usize) -> DiagnosticsObserver {
+        DiagnosticsObserver {
+            batches,
+            every_epochs,
+            history: Vec::new(),
+        }
+    }
+
+    /// `(epoch, diagnostics)` pairs recorded so far.
+    pub fn history(&self) -> &[(usize, EmbeddingDiagnostics)] {
+        &self.history
+    }
+}
+
+impl TrainObserver for DiagnosticsObserver {
+    fn on_epoch_end(&mut self, driver: &dyn TrainDriver, epoch: usize) -> Result<()> {
+        if self.every_epochs == 0 || (epoch + 1) % self.every_epochs != 0 {
+            return Ok(());
+        }
+        let snapshot = driver.snapshot()?;
+        let diag = driver.diagnose(&snapshot, self.batches)?;
+        println!(
+            "[diag] epoch {epoch}: residual {:.5}, R_sum {:.5} over {} samples",
+            diag.residual, diag.r_sum_l2, diag.samples
+        );
+        self.history.push((epoch, diag));
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------- bench
+
+/// Captures per-step wall times and renders a throughput row
+/// (steps/sec, median ms/step) at the end of the run — optionally
+/// written straight into the `BENCH_*.json` trajectory via
+/// [`table::write_json`](crate::bench_harness::table::write_json).
+pub struct BenchObserver {
+    json_path: Option<String>,
+    step_times: Vec<f64>,
+    table: Option<Table>,
+}
+
+impl BenchObserver {
+    /// Capture only (read the table back via [`table`](Self::table)).
+    pub fn new() -> BenchObserver {
+        BenchObserver {
+            json_path: None,
+            step_times: Vec::new(),
+            table: None,
+        }
+    }
+
+    /// Capture and additionally write the finished table to `path`.
+    pub fn with_json(path: impl Into<String>) -> BenchObserver {
+        BenchObserver {
+            json_path: Some(path.into()),
+            ..BenchObserver::new()
+        }
+    }
+
+    /// Median per-step wall time in milliseconds, once steps were seen.
+    pub fn median_step_ms(&self) -> Option<f64> {
+        if self.step_times.is_empty() {
+            return None;
+        }
+        let mut sorted = self.step_times.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("step times are finite"));
+        Some(sorted[sorted.len() / 2] * 1e3)
+    }
+
+    /// The rendered throughput table (after the run finished).
+    pub fn table(&self) -> Option<&Table> {
+        self.table.as_ref()
+    }
+}
+
+impl Default for BenchObserver {
+    fn default() -> Self {
+        BenchObserver::new()
+    }
+}
+
+impl TrainObserver for BenchObserver {
+    fn on_step(&mut self, _driver: &dyn TrainDriver, m: &StepMetrics) -> Result<()> {
+        self.step_times.push(m.step_time);
+        Ok(())
+    }
+
+    fn on_finish(&mut self, _driver: &dyn TrainDriver, report: &TrainReport) -> Result<()> {
+        let mut table = Table::new(&[
+            "spec",
+            "steps",
+            "steps/sec",
+            "ms/step (median)",
+            "final loss",
+        ]);
+        table.row(vec![
+            report.spec.clone(),
+            format!("{}", report.steps),
+            format!("{:.2}", report.steps_per_sec),
+            self.median_step_ms()
+                .map(|ms| format!("{ms:.1}"))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.4}", report.final_loss),
+        ]);
+        if let Some(path) = &self.json_path {
+            write_json(path, &[("train_steps", &table)])
+                .with_context(|| format!("writing {path}"))?;
+            println!("wrote {path}");
+        }
+        self.table = Some(table);
+        Ok(())
+    }
+}

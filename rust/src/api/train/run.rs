@@ -1,0 +1,209 @@
+//! The shared epoch/step skeleton ([`run_loop`]) and the run summary
+//! ([`TrainReport`]) every driver produces.
+//!
+//! `Trainer::run` and `DdpTrainer::run` are thin delegations to
+//! [`run_driver`]; the loop body (batch → step → console line → observers
+//! → metrics log) lives here once, so composing eval-during-training,
+//! bench capture, or checkpointing is an observer away instead of a
+//! copy-paste of the loop.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::{AugmentConfig, BatchLoader, ShapeWorld, ShapeWorldConfig};
+use crate::util::json::{self, Json};
+
+use super::driver::TrainDriver;
+use super::observer::TrainObserver;
+
+/// Summary of a training run, labelled by the spec it trained so per-run
+/// throughput can join the `BENCH_*.json` perf trajectory.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Canonical spec label of the trained loss (`LossSpec` display form).
+    pub spec: String,
+    /// Mean loss over the first logged steps.
+    pub initial_loss: f32,
+    /// Mean loss over the last logged steps.
+    pub final_loss: f32,
+    /// Total optimizer steps executed.
+    pub steps: usize,
+    /// Wall-clock seconds (whole run).
+    pub wall_seconds: f64,
+    /// Steps per second.
+    pub steps_per_sec: f64,
+}
+
+/// Column order of the JSON row form, shared by [`TrainReport::to_json`]
+/// and [`TrainReport::write_json`].
+const REPORT_COLUMNS: [&str; 6] = [
+    "spec",
+    "steps",
+    "initial_loss",
+    "final_loss",
+    "wall_seconds",
+    "steps_per_sec",
+];
+
+impl TrainReport {
+    /// The report as one JSON row object.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("spec", Json::Str(self.spec.clone())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("initial_loss", Json::Num(self.initial_loss as f64)),
+            ("final_loss", Json::Num(self.final_loss as f64)),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("steps_per_sec", Json::Num(self.steps_per_sec)),
+        ])
+    }
+
+    /// Write reports as `{"<table>": {"columns": [...], "rows": [...]}}`
+    /// — the `BENCH_*.json` trajectory format (`decorr sweep` emits
+    /// `BENCH_spec_grid.json` this way).
+    pub fn write_json(path: &str, table: &str, reports: &[TrainReport]) -> Result<()> {
+        let columns = Json::Arr(
+            REPORT_COLUMNS
+                .iter()
+                .map(|c| Json::Str((*c).to_string()))
+                .collect(),
+        );
+        let rows = Json::Arr(reports.iter().map(TrainReport::to_json).collect());
+        let tbl = json::obj(vec![("columns", columns), ("rows", rows)]);
+        let mut top = BTreeMap::new();
+        top.insert(table.to_string(), tbl);
+        std::fs::write(path, Json::Obj(top).to_string_compact())
+            .with_context(|| format!("writing {path}"))?;
+        Ok(())
+    }
+}
+
+/// Run the driver's configured epochs over `loader`, with `observers`
+/// hooked into every step/epoch/finish. Owns the skeleton the per-trainer
+/// loops used to duplicate; numerics are bit-identical to the
+/// pre-redesign direct loops (pinned by `tests/driver.rs`).
+pub fn run_loop(
+    driver: &mut dyn TrainDriver,
+    loader: &BatchLoader,
+    observers: &mut [&mut dyn TrainObserver],
+) -> Result<TrainReport> {
+    let (epochs, steps_per_epoch, log_every, total) = {
+        let cfg = driver.config();
+        // log_every = 0 would be a modulo-by-zero; clamp to every-step.
+        (
+            cfg.epochs,
+            cfg.steps_per_epoch,
+            cfg.log_every.max(1),
+            cfg.total_steps(),
+        )
+    };
+    let t0 = Instant::now();
+    for epoch in 0..epochs {
+        for _ in 0..steps_per_epoch {
+            let batch = loader.next();
+            let m = driver.step(&batch, epoch)?;
+            if m.step % log_every == 0 || m.step + 1 == total {
+                println!("{}", driver.format_step(&m, total));
+            }
+            for obs in observers.iter_mut() {
+                obs.on_step(&*driver, &m)?;
+            }
+            driver.metrics().log(m)?;
+        }
+        for obs in observers.iter_mut() {
+            obs.on_epoch_end(&*driver, epoch)?;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let hist = driver.metrics().history();
+    let k = (total / 10).clamp(1, 20);
+    let initial = hist[..k.min(hist.len())]
+        .iter()
+        .map(|m| m.loss)
+        .sum::<f32>()
+        / k.min(hist.len()) as f32;
+    let report = TrainReport {
+        spec: driver.spec().to_string(),
+        initial_loss: initial,
+        final_loss: driver.metrics().recent_loss(k),
+        steps: total,
+        wall_seconds: wall,
+        steps_per_sec: total as f64 / wall,
+    };
+    for obs in observers.iter_mut() {
+        obs.on_finish(&*driver, &report)?;
+    }
+    Ok(report)
+}
+
+/// [`run_loop`] plus the standard prefetching data pipeline the trainers
+/// always used: a seeded ShapeWorld dataset and a `BatchLoader` sized from
+/// the driver's config — the body behind `Trainer::run` and
+/// `DdpTrainer::run`.
+pub fn run_driver(
+    driver: &mut dyn TrainDriver,
+    observers: &mut [&mut dyn TrainObserver],
+) -> Result<TrainReport> {
+    let (seed, epoch_size, workers, prefetch) = {
+        let cfg = driver.config();
+        (cfg.seed, cfg.epoch_size, cfg.loader_workers, cfg.prefetch)
+    };
+    let dataset = ShapeWorld::new(ShapeWorldConfig {
+        seed,
+        ..Default::default()
+    });
+    let loader = BatchLoader::new(
+        dataset,
+        AugmentConfig::default(),
+        driver.batch_size()?,
+        epoch_size,
+        seed,
+        workers,
+        prefetch,
+    );
+    run_loop(driver, &loader, observers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(spec: &str, sps: f64) -> TrainReport {
+        TrainReport {
+            spec: spec.to_string(),
+            initial_loss: 2.0,
+            final_loss: 1.0,
+            steps: 8,
+            wall_seconds: 8.0 / sps,
+            steps_per_sec: sps,
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrips_through_parser() {
+        let j = report("bt_sum@b=64,q=1", 12.5).to_json();
+        assert_eq!(j.get("spec").and_then(Json::as_str), Some("bt_sum@b=64,q=1"));
+        assert_eq!(j.get("steps").and_then(|v| v.as_usize()), Some(8));
+        assert_eq!(j.get("steps_per_sec").and_then(|v| v.as_f64()), Some(12.5));
+    }
+
+    #[test]
+    fn write_json_emits_bench_table_shape() {
+        let dir = std::env::temp_dir().join(format!("decorr_report_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_spec_grid.json");
+        let reports = [report("bt_sum", 10.0), report("vic_sum", 9.0)];
+        TrainReport::write_json(path.to_str().unwrap(), "spec_grid", &reports).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = json::parse(&text).unwrap();
+        let grid = v.get("spec_grid").unwrap();
+        let rows = grid.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("spec").and_then(Json::as_str), Some("vic_sum"));
+        let cols = grid.get("columns").and_then(Json::as_arr).unwrap();
+        assert_eq!(cols.len(), super::REPORT_COLUMNS.len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

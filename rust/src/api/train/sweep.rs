@@ -1,0 +1,164 @@
+//! [`SweepPlan`]: the spec-grid grammar behind `decorr sweep`.
+//!
+//! A sweep string is one or more `;`-separated [`LossSpec`] entries whose
+//! option values may be `{a,b,c}` alternation sets; the plan is the
+//! cartesian expansion of every set, deduplicated, in first-appearance
+//! order:
+//!
+//! ```text
+//! bt_sum@b={64,128,256},q={1,2}    → 6 specs
+//! bt_off;vic_sum@q={1,2}           → 3 specs (vic q=1 is the default —
+//!                                    "vic_sum@q=1" and "vic_sum" dedupe)
+//! ```
+//!
+//! Expansion happens on the string level, so the sets compose with every
+//! spec-grammar option (`b`, `q`, `norm`, `lambda`, `threads`); each
+//! expanded candidate then goes through the ordinary typed
+//! [`LossSpec::parse`] validation.
+
+use super::super::error::SpecError;
+use super::super::spec::LossSpec;
+
+/// Hard cap on the expanded grid, so a typo'd grammar cannot demand an
+/// unbounded sweep.
+const MAX_GRID: usize = 256;
+
+/// An ordered, deduplicated list of loss specs expanded from the grid
+/// grammar. See the module docs.
+#[derive(Clone, Debug)]
+pub struct SweepPlan {
+    specs: Vec<LossSpec>,
+}
+
+impl SweepPlan {
+    /// Parse and expand a sweep-grid string. Fails (typed) on unbalanced
+    /// braces, empty sets, grids over 256 points, or any expanded entry
+    /// that is not a valid loss spec.
+    pub fn parse(input: &str) -> Result<SweepPlan, SpecError> {
+        let mut specs: Vec<LossSpec> = Vec::new();
+        for entry in input.split(';').filter(|t| !t.trim().is_empty()) {
+            for candidate in expand_sets(entry.trim())? {
+                if specs.len() >= MAX_GRID {
+                    return Err(SpecError::Parse {
+                        input: input.to_string(),
+                        reason: format!("sweep grid exceeds {MAX_GRID} specs"),
+                    });
+                }
+                let spec = LossSpec::parse(&candidate)?;
+                if !specs.contains(&spec) {
+                    specs.push(spec);
+                }
+            }
+        }
+        if specs.is_empty() {
+            return Err(SpecError::Parse {
+                input: input.to_string(),
+                reason: "empty sweep grid".to_string(),
+            });
+        }
+        Ok(SweepPlan { specs })
+    }
+
+    /// The expanded specs, in first-appearance order.
+    pub fn specs(&self) -> &[LossSpec] {
+        &self.specs
+    }
+
+    /// Number of distinct specs in the plan.
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Whether the plan is empty (never true for a parsed plan).
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+}
+
+/// Expand every `{a,b,c}` alternation set in `s` into the cartesian
+/// product of candidate strings (identity when no set is present).
+fn expand_sets(s: &str) -> Result<Vec<String>, SpecError> {
+    let err = |reason: &str| SpecError::Parse {
+        input: s.to_string(),
+        reason: reason.to_string(),
+    };
+    let Some(open) = s.find('{') else {
+        if s.contains('}') {
+            return Err(err("unbalanced '}' in sweep grid"));
+        }
+        return Ok(vec![s.to_string()]);
+    };
+    let close = s[open..]
+        .find('}')
+        .map(|i| open + i)
+        .ok_or_else(|| err("unbalanced '{' in sweep grid"))?;
+    let alts = &s[open + 1..close];
+    if alts.trim().is_empty() {
+        return Err(err("empty {} alternation set"));
+    }
+    let mut out = Vec::new();
+    for alt in alts.split(',') {
+        let alt = alt.trim();
+        if alt.is_empty() {
+            return Err(err("empty alternative in {} set"));
+        }
+        let candidate = format!("{}{}{}", &s[..open], alt, &s[close + 1..]);
+        let expanded = expand_sets(&candidate)?;
+        if out.len() + expanded.len() > MAX_GRID {
+            return Err(err("sweep grid expansion exceeds the 256-spec cap"));
+        }
+        out.extend(expanded);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::RegularizerForm;
+
+    #[test]
+    fn expands_b_q_grid() {
+        let plan = SweepPlan::parse("bt_sum@b={64,128,256},q={1,2}").unwrap();
+        assert_eq!(plan.len(), 6);
+        assert!(!plan.is_empty());
+        // first-appearance order: b varies slowest (outermost set).
+        assert_eq!(plan.specs()[0].to_string(), "bt_sum_g64_q1");
+        assert_eq!(plan.specs()[1].to_string(), "bt_sum_g64");
+        for spec in plan.specs() {
+            assert!(matches!(spec.form, RegularizerForm::GroupedSum { .. }));
+        }
+    }
+
+    #[test]
+    fn dedupes_default_q_aliases() {
+        // vic q=1 is the family default: "vic_sum@q=1" == "vic_sum".
+        let plan = SweepPlan::parse("vic_sum@q={1,2};vic_sum").unwrap();
+        assert_eq!(plan.len(), 2);
+    }
+
+    #[test]
+    fn entries_compose_with_plain_specs() {
+        let plan = SweepPlan::parse("bt_off; bt_sum@b={32,64}").unwrap();
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.specs()[0].to_string(), "bt_off");
+    }
+
+    #[test]
+    fn rejects_malformed_grids() {
+        assert!(SweepPlan::parse("").is_err());
+        assert!(SweepPlan::parse("bt_sum@b={64,128").is_err());
+        assert!(SweepPlan::parse("bt_sum@b=64}").is_err());
+        assert!(SweepPlan::parse("bt_sum@b={}").is_err());
+        assert!(SweepPlan::parse("bt_sum@b={64,}").is_err());
+        assert!(SweepPlan::parse("nope@b={64}").is_err());
+    }
+
+    #[test]
+    fn caps_grid_explosion() {
+        // 20^3 = 8000 candidates — must fail, not expand.
+        let alts = (1..=20).map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+        let grid = format!("bt_sum@b={{{alts}}},q={{1,2}},threads={{{alts}}}");
+        assert!(SweepPlan::parse(&grid).is_err());
+    }
+}

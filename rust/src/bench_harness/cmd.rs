@@ -7,6 +7,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::api::train::{run_driver, BenchObserver, DriverBuilder, SweepPlan, TrainReport};
 use crate::api::{LossExecutor, LossSpec, RegularizerForm};
 use crate::config::{TrainConfig, Variant};
 use crate::coordinator::{linear_eval, Checkpoint, InputAdapter, Trainer};
@@ -144,6 +145,8 @@ fn parse_variant_list(args: &mut Args, key: &str, defaults: &[String]) -> Result
 // ---------------------------------------------------------------- train
 
 /// `decorr train`: plain pretraining run with metrics + checkpoint output.
+/// `--resume <checkpoint>` loads a saved parameter snapshot into the store
+/// before the first step (through `DriverBuilder::resume_from`).
 pub fn train(args: &mut Args) -> Result<()> {
     let mut cfg = TrainConfig::default();
     if let Some(path) = args.flag("config") {
@@ -151,10 +154,16 @@ pub fn train(args: &mut Args) -> Result<()> {
         cfg.apply_toml(&doc)?;
     }
     cfg.apply_args(args)?;
+    let resume = args.flag("resume");
     args.finish()?;
     println!("training {} on preset {}", cfg.spec, cfg.preset);
     let out_dir = cfg.out_dir.clone();
-    let mut trainer = Trainer::new(cfg)?;
+    let mut builder = DriverBuilder::new(cfg);
+    if let Some(path) = &resume {
+        println!("resuming parameters from {path}");
+        builder = builder.resume_from(path.clone());
+    }
+    let mut trainer = builder.build_trainer()?;
     let report = trainer.run()?;
     let snap = trainer.snapshot()?;
     std::fs::create_dir_all(&out_dir)?;
@@ -782,6 +791,142 @@ pub fn spec(args: &mut Args) -> Result<()> {
         }
         println!("\nexecutor check (random views, n={n}, d={d}):");
         out.print();
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------- sweep
+
+/// `decorr sweep` — expand a `(b, q)` spec-grid grammar
+/// (`--grid "bt_sum@b={64,128},q={1,2}"`, entries `;`-separated) and
+/// measure every point:
+///
+/// * default (train mode, requires matching `train_*` artifacts): build a
+///   [`TrainDriver`](crate::api::train::TrainDriver) per spec through
+///   `DriverBuilder` — all sharing **one** runtime `Session`, so repeated
+///   shapes compile once — run each through the shared `run_loop` with a
+///   `BenchObserver`, and report per-run throughput. `--shards K` sweeps
+///   the DDP driver instead of the monolithic trainer.
+/// * `--host`: evaluate each spec through the host `LossExecutor` at
+///   `--d`/`--n` — no artifacts needed; this is the CI smoke path.
+///
+/// `--json <path>` writes the machine-readable grid (the
+/// `BENCH_spec_grid.json` trajectory format).
+pub fn sweep(args: &mut Args) -> Result<()> {
+    let grid = args.str_or("grid", "bt_sum@b={64,128},q={1,2}");
+    // `--host` is a switch, but the greedy CLI parser takes a following
+    // bare token as its value — reject the swallow loudly instead of
+    // silently falling back to the artifact-requiring train mode.
+    let host = match args.flag("host").as_deref() {
+        None | Some("false") | Some("0") | Some("no") => false,
+        Some("true") | Some("1") | Some("yes") => true,
+        Some(swallowed) => anyhow::bail!(
+            "unexpected value '{swallowed}' after --host (it takes no value; \
+             did you mean `--host --json {swallowed}`?)"
+        ),
+    };
+    let json = args.flag("json");
+    // Only the active mode's flags are consumed, so an inapplicable flag
+    // (e.g. `--shards` with `--host`) fails `args.finish()` instead of
+    // being silently ignored.
+    let (d, n, budget) = if host {
+        (
+            args.get_or("d", 256usize)?,
+            args.get_or("n", 128usize)?,
+            args.get_or("budget", super::stats::smoke_budget(0.2))?,
+        )
+    } else {
+        (0, 0, 0.0)
+    };
+    let (preset, epochs, steps_per_epoch, seed, shards) = if host {
+        (String::new(), 0, 0, 0, 0)
+    } else {
+        (
+            args.str_or("preset", "small"),
+            args.get_or("epochs", 1usize)?,
+            args.get_or("steps-per-epoch", 4usize)?,
+            args.get_or("seed", 17u64)?,
+            args.get_or("shards", 0usize)?,
+        )
+    };
+    args.finish()?;
+
+    let plan = SweepPlan::parse(&grid)?;
+    println!("sweep grid '{grid}' -> {} specs", plan.len());
+
+    let mut table = Table::new(&["spec", "backend", "median (ms)", "throughput", "value"]);
+    let mut reports: Vec<TrainReport> = Vec::new();
+    if host {
+        // Host-kernel sweep: every grid point through the spec-derived
+        // HostExecutor on random views — the artifact-free smoke path.
+        let mut rng = Rng::new(0x53EE9 ^ d as u64);
+        let a = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+        let b = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+        for spec in plan.specs() {
+            let mut exec = spec
+                .host_executor(d)
+                .with_context(|| format!("host executor for '{spec}' at d={d}"))?;
+            let stats = bench_for(budget, 1, || exec.evaluate(&a, &b).unwrap());
+            let out = exec.evaluate(&a, &b)?;
+            table.row(vec![
+                spec.to_string(),
+                "host".into(),
+                format!("{:.3}", stats.median_ms()),
+                format!("{:.1} eval/s", 1.0 / stats.median),
+                format!("{:.4}", out.total),
+            ]);
+        }
+    } else {
+        // Train-driver sweep: one shared Session threaded across every
+        // driver, observers capturing throughput.
+        let mut session: Option<Session> = None;
+        for spec in plan.specs() {
+            let mut cfg = TrainConfig::preset(&preset)?;
+            cfg.spec = *spec;
+            cfg.epochs = epochs;
+            cfg.steps_per_epoch = steps_per_epoch;
+            cfg.seed = seed;
+            cfg.out_dir = String::new();
+            cfg.log_every = usize::MAX;
+            println!("== {spec} ==");
+            let mut builder = DriverBuilder::new(cfg);
+            if let Some(s) = session.take() {
+                builder = builder.session(s);
+            }
+            if shards > 0 {
+                builder = builder.ddp(shards);
+            }
+            let mut driver = builder.build()?;
+            let mut bench = BenchObserver::new();
+            let report = run_driver(driver.as_mut(), &mut [&mut bench])?;
+            table.row(vec![
+                report.spec.clone(),
+                if shards > 0 {
+                    format!("ddp x{shards}")
+                } else {
+                    "train".into()
+                },
+                bench
+                    .median_step_ms()
+                    .map(|ms| format!("{ms:.1}"))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{:.2} steps/s", report.steps_per_sec),
+                format!("{:.4}", report.final_loss),
+            ]);
+            reports.push(report);
+            session = Some(driver.into_session());
+        }
+    }
+
+    println!("\nspec-grid sweep ({} points):", plan.len());
+    table.print();
+    if let Some(path) = json {
+        if reports.is_empty() {
+            crate::bench_harness::table::write_json(&path, &[("spec_grid", &table)])?;
+        } else {
+            TrainReport::write_json(&path, "spec_grid", &reports)?;
+        }
+        println!("wrote {path}");
     }
     Ok(())
 }

@@ -24,8 +24,10 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::api::train::{DriverBuilder, TrainDriver};
+use crate::api::LossSpec;
 use crate::config::TrainConfig;
-use crate::data::{AugmentConfig, BatchLoader, ShapeWorld, ShapeWorldConfig, SslBatch};
+use crate::data::SslBatch;
 use crate::runtime::{ExecutionBinding, ParamStore, Session, SharedSession, TensorSpec};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
@@ -33,7 +35,10 @@ use crate::util::tensor::Tensor;
 use super::checkpoint::Checkpoint;
 use super::metrics::{MetricsLogger, StepMetrics};
 use super::schedule::LrSchedule;
-use super::trainer::{literal_f32, literal_i32, scalar, InputAdapter, TrainReport};
+use super::trainer::{
+    diagnose_projected, literal_f32, literal_i32, scalar, EmbeddingDiagnostics, InputAdapter,
+    TrainReport,
+};
 
 /// Work order broadcast to a worker for one step.
 struct ShardJob {
@@ -64,7 +69,9 @@ pub struct DdpTrainer {
     pub cfg: TrainConfig,
     shards: usize,
     workers: Vec<Worker>,
-    session: Session,
+    // `Option` so `into_session` can move the arm out of a `Drop` type;
+    // `None` is unobservable (the taking method consumes `self`).
+    session: Option<Session>,
     apply_binding: ExecutionBinding,
     params: ParamStore,
     opt: ParamStore,
@@ -83,12 +90,31 @@ pub struct DdpTrainer {
 
 impl DdpTrainer {
     /// Spawn `shards` workers and compile the leader-side apply artifact.
+    /// Convenience over [`DriverBuilder::ddp`].
     pub fn new(cfg: TrainConfig, shards: usize) -> Result<DdpTrainer> {
+        DriverBuilder::new(cfg).ddp(shards).build_ddp()
+    }
+
+    /// The real constructor, reached only through [`DriverBuilder`]. An
+    /// existing `session` arm shares its `SharedSession` core with the
+    /// workers; `resume` replaces the init-checkpoint parameters.
+    pub(crate) fn from_parts(
+        cfg: TrainConfig,
+        shards: usize,
+        session: Option<Session>,
+        resume: Option<&Checkpoint>,
+    ) -> Result<DdpTrainer> {
         anyhow::ensure!(shards >= 1, "need at least one shard");
         // Spec-derived per-shard gradient artifact id.
         let grad_name = cfg.spec.grad_artifact(&cfg.preset, shards);
-        let shared = SharedSession::open(&cfg.artifact_dir);
-        let session = shared.session()?;
+        let (shared, session) = match session {
+            Some(s) => (s.shared().clone(), s),
+            None => {
+                let shared = SharedSession::open(&cfg.artifact_dir);
+                let session = shared.session()?;
+                (shared, session)
+            }
+        };
         let apply = session
             .load(&format!("apply_{}", cfg.preset))
             .context("loading apply artifact")?;
@@ -117,8 +143,15 @@ impl DdpTrainer {
         let grad_names: Vec<String> = grad_specs.iter().map(|s| s.name.clone()).collect();
         anyhow::ensure!(!grad_names.is_empty(), "apply artifact missing grads inputs");
 
-        let init_path = format!("{}/init_{}.ckpt", cfg.artifact_dir, cfg.preset);
-        let ckpt = Checkpoint::load(&init_path)?;
+        // Initial parameters: the jax-side init checkpoint, or the resume
+        // snapshot when one was given (optimizer state restarts at zero).
+        let ckpt = match resume {
+            Some(c) => c.clone(),
+            None => {
+                let init_path = format!("{}/init_{}.ckpt", cfg.artifact_dir, cfg.preset);
+                Checkpoint::load(&init_path)?
+            }
+        };
         let params = ParamStore::from_checkpoint(&ckpt, &param_specs.iter().collect::<Vec<_>>())?;
         let opt = ParamStore::zeros(&opt_specs.iter().collect::<Vec<_>>())?;
         let grads = ParamStore::zeros(&grad_specs.iter().collect::<Vec<_>>())?;
@@ -157,7 +190,7 @@ impl DdpTrainer {
             cfg,
             shards,
             workers,
-            session,
+            session: Some(session),
             apply_binding,
             params,
             opt,
@@ -304,52 +337,11 @@ impl DdpTrainer {
         Ok(m)
     }
 
-    /// Run the configured loop with the prefetching loader.
+    /// Run the configured loop with the prefetching loader — a thin
+    /// delegation to the shared [`run_loop`](crate::api::train::run_loop)
+    /// (no observers).
     pub fn run(&mut self) -> Result<TrainReport> {
-        let dataset = ShapeWorld::new(ShapeWorldConfig {
-            seed: self.cfg.seed,
-            ..Default::default()
-        });
-        let loader = BatchLoader::new(
-            dataset,
-            AugmentConfig::default(),
-            self.batch_size(),
-            self.cfg.epoch_size,
-            self.cfg.seed,
-            self.cfg.loader_workers,
-            self.cfg.prefetch,
-        );
-        let t0 = Instant::now();
-        let total = self.cfg.total_steps();
-        for epoch in 0..self.cfg.epochs {
-            for _ in 0..self.cfg.steps_per_epoch {
-                let batch = loader.next();
-                let m = self.step(&batch, epoch)?;
-                if m.step % self.cfg.log_every == 0 || m.step + 1 == total {
-                    println!(
-                        "[ddp x{}] step {:>5}/{} loss {:.4} ({:.0} ms)",
-                        self.shards,
-                        m.step,
-                        total,
-                        m.loss,
-                        m.step_time * 1e3
-                    );
-                }
-                self.metrics.log(m)?;
-            }
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let hist = self.metrics.history();
-        let k = (total / 10).clamp(1, 20);
-        let initial =
-            hist[..k.min(hist.len())].iter().map(|m| m.loss).sum::<f32>() / k.min(hist.len()) as f32;
-        Ok(TrainReport {
-            initial_loss: initial,
-            final_loss: self.metrics.recent_loss(k),
-            steps: total,
-            wall_seconds: wall,
-            steps_per_sec: total as f64 / wall,
-        })
+        crate::api::train::run_driver(self, &mut [])
     }
 
     /// Metrics so far.
@@ -359,12 +351,90 @@ impl DdpTrainer {
 
     /// The leader's runtime session (the workers share its core).
     pub fn session(&self) -> &Session {
-        &self.session
+        self.session.as_ref().expect("session present until into_session")
+    }
+
+    /// Consume the leader, handing its session arm to the next consumer
+    /// so compiled artifacts stay warm across a sweep. Workers shut down
+    /// on drop as usual.
+    pub fn into_session(mut self) -> Session {
+        self.session.take().expect("session present until into_session")
+    }
+
+    /// Table-6-style decorrelation diagnostics of a parameter snapshot
+    /// (same contract as `Trainer::diagnose_embeddings`).
+    pub fn diagnose_embeddings(
+        &self,
+        snapshot: &Checkpoint,
+        batches: usize,
+    ) -> Result<EmbeddingDiagnostics> {
+        diagnose_projected(
+            self.session(),
+            &self.cfg.preset,
+            &self.cfg.spec,
+            self.adapter,
+            self.cfg.seed,
+            snapshot,
+            batches,
+        )
     }
 
     /// Optimizer-state specs (diagnostics).
     pub fn opt_specs(&self) -> &[TensorSpec] {
         &self.opt_specs
+    }
+}
+
+impl TrainDriver for DdpTrainer {
+    fn spec(&self) -> &LossSpec {
+        &self.cfg.spec
+    }
+
+    fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    fn step(&mut self, batch: &SslBatch, epoch: usize) -> Result<StepMetrics> {
+        DdpTrainer::step(self, batch, epoch)
+    }
+
+    fn snapshot(&self) -> Result<Checkpoint> {
+        DdpTrainer::snapshot(self)
+    }
+
+    fn diagnose(&self, snapshot: &Checkpoint, batches: usize) -> Result<EmbeddingDiagnostics> {
+        self.diagnose_embeddings(snapshot, batches)
+    }
+
+    fn metrics(&self) -> &MetricsLogger {
+        &self.metrics
+    }
+
+    fn session(&self) -> &Session {
+        DdpTrainer::session(self)
+    }
+
+    fn into_session(self: Box<Self>) -> Session {
+        DdpTrainer::into_session(*self)
+    }
+
+    fn batch_size(&self) -> Result<usize> {
+        Ok(DdpTrainer::batch_size(self))
+    }
+
+    fn input_adapter(&self) -> InputAdapter {
+        self.adapter
+    }
+
+    fn format_step(&self, m: &StepMetrics, total: usize) -> String {
+        format!(
+            "[ddp x{}] step {:>5}/{} loss {:.4} ({:.0} ms)",
+            self.shards,
+            m.step,
+            total,
+            m.loss,
+            m.step_time * 1e3
+        )
     }
 }
 

@@ -1,7 +1,14 @@
 //! Metric logging: in-memory history + JSONL stream on disk.
+//!
+//! [`MetricsLogger`] is internally synchronized: [`MetricsLogger::log`]
+//! takes `&self`, so the shared `api::train::run_loop`, observers, and
+//! report builders can all record through one logger without threading
+//! `&mut` across layers (which previously blocked composing metrics with
+//! checkpointing in a single step loop).
 
 use std::io::Write;
 use std::path::Path;
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::{Context, Result};
 
@@ -26,18 +33,26 @@ pub struct StepMetrics {
     pub step_time: f64,
 }
 
-/// Collects step metrics and mirrors them to `metrics.jsonl`.
-pub struct MetricsLogger {
+/// The synchronized interior: history + optional JSONL mirror.
+struct MetricsInner {
     history: Vec<StepMetrics>,
     file: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+/// Collects step metrics and mirrors them to `metrics.jsonl`.
+/// Shareable by reference: all methods take `&self`.
+pub struct MetricsLogger {
+    inner: Mutex<MetricsInner>,
 }
 
 impl MetricsLogger {
     /// In-memory only (tests, benches).
     pub fn in_memory() -> MetricsLogger {
         MetricsLogger {
-            history: Vec::new(),
-            file: None,
+            inner: Mutex::new(MetricsInner {
+                history: Vec::new(),
+                file: None,
+            }),
         }
     }
 
@@ -49,14 +64,23 @@ impl MetricsLogger {
         let file = std::fs::File::create(&path)
             .with_context(|| format!("creating {}", path.display()))?;
         Ok(MetricsLogger {
-            history: Vec::new(),
-            file: Some(std::io::BufWriter::new(file)),
+            inner: Mutex::new(MetricsInner {
+                history: Vec::new(),
+                file: Some(std::io::BufWriter::new(file)),
+            }),
         })
     }
 
+    /// Lock the interior, recovering from a poisoned lock (a panicking
+    /// observer must not wedge every later metrics read).
+    fn lock(&self) -> MutexGuard<'_, MetricsInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Record one step.
-    pub fn log(&mut self, m: StepMetrics) -> Result<()> {
-        if let Some(f) = &mut self.file {
+    pub fn log(&self, m: StepMetrics) -> Result<()> {
+        let mut inner = self.lock();
+        if let Some(f) = &mut inner.file {
             let line = json::obj(vec![
                 ("step", Json::Num(m.step as f64)),
                 ("epoch", Json::Num(m.epoch as f64)),
@@ -69,18 +93,30 @@ impl MetricsLogger {
             writeln!(f, "{}", line.to_string_compact())?;
             f.flush()?;
         }
-        self.history.push(m);
+        inner.history.push(m);
         Ok(())
     }
 
-    /// Full history.
-    pub fn history(&self) -> &[StepMetrics] {
-        &self.history
+    /// Snapshot of the full history.
+    pub fn history(&self) -> Vec<StepMetrics> {
+        self.lock().history.clone()
+    }
+
+    /// Number of logged steps.
+    pub fn len(&self) -> usize {
+        self.lock().history.len()
+    }
+
+    /// Whether nothing has been logged yet.
+    pub fn is_empty(&self) -> bool {
+        self.lock().history.is_empty()
     }
 
     /// Mean loss over the last `k` steps.
     pub fn recent_loss(&self, k: usize) -> f32 {
-        let tail = &self.history[self.history.len().saturating_sub(k)..];
+        let inner = self.lock();
+        let h = &inner.history;
+        let tail = &h[h.len().saturating_sub(k)..];
         if tail.is_empty() {
             return f32::NAN;
         }
@@ -106,18 +142,20 @@ mod tests {
 
     #[test]
     fn history_and_recent() {
-        let mut m = MetricsLogger::in_memory();
+        let m = MetricsLogger::in_memory();
         for i in 0..10 {
             m.log(step(i, i as f32)).unwrap();
         }
         assert_eq!(m.history().len(), 10);
+        assert_eq!(m.len(), 10);
+        assert!(!m.is_empty());
         assert!((m.recent_loss(2) - 8.5).abs() < 1e-6);
     }
 
     #[test]
     fn jsonl_is_written_and_parses() {
         let dir = std::env::temp_dir().join(format!("decorr_metrics_{}", std::process::id()));
-        let mut m = MetricsLogger::new(&dir).unwrap();
+        let m = MetricsLogger::new(&dir).unwrap();
         m.log(step(0, 1.5)).unwrap();
         m.log(step(1, 1.0)).unwrap();
         drop(m);
@@ -127,5 +165,23 @@ mod tests {
         let v = json::parse(lines[1]).unwrap();
         assert_eq!(v.get("step").unwrap().as_usize(), Some(1));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shared_reference_logging_is_thread_safe() {
+        // `log` takes `&self`: two threads can record into one logger —
+        // what lets run_loop and observers share the trainer's logger.
+        let m = MetricsLogger::in_memory();
+        std::thread::scope(|s| {
+            for t in 0..2 {
+                let m = &m;
+                s.spawn(move || {
+                    for i in 0..50 {
+                        m.log(step(t * 50 + i, 1.0)).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(m.len(), 100);
     }
 }

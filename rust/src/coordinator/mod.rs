@@ -1,10 +1,43 @@
-//! The L3 coordinator: training loop, schedules, permutation sampling,
-//! metrics, checkpoints, and the linear-evaluation protocol.
+//! The L3 coordinator: training backends, schedules, permutation
+//! sampling, metrics, checkpoints, and the linear-evaluation protocol.
 //!
 //! The paper's system contribution is the loss (L1/L2); the coordinator is
-//! everything a practitioner needs around it: it owns process lifecycle,
-//! the data pipeline, per-batch feature-permutation sampling (§4.3), LR
-//! scheduling, and evaluation — with Python strictly at build time.
+//! everything a practitioner needs around it — with Python strictly at
+//! build time. Since the `api::train` redesign the step loop itself lives
+//! **once**, behind the api front door; this module provides the two
+//! driver backends and the run-state plumbing they share:
+//!
+//! ```text
+//!   LossSpec + TrainConfig ─→ DriverBuilder ─┬─→ Trainer      (fused step)
+//!                                            └─→ DdpTrainer   (K shards)
+//!                 both impl api::train::TrainDriver
+//!                                │
+//!            api::train::run_loop(driver, loader, observers)
+//!                │                       │
+//!         MetricsLogger (&self log)      TrainObserver hooks
+//!         Checkpoint (save/resume)       (metrics / ckpt / diag / bench)
+//!         LrSchedule, per-batch §4.3 permutation (inside step())
+//! ```
+//!
+//! * [`Trainer`] — the monolithic backend: one fused AOT train artifact
+//!   per optimizer step, executed through a pre-resolved
+//!   `ExecutionBinding`.
+//! * [`DdpTrainer`] — the simulated-DDP backend (paper App. E.3): K shard
+//!   workers over one shared runtime session core, plain gradient
+//!   averaging, leader-side apply artifact.
+//! * [`MetricsLogger`] — internally synchronized (`log` takes `&self`),
+//!   so the shared loop and any observer can record through one logger.
+//! * [`Checkpoint`] — parameter snapshots; `DriverBuilder::resume_from`
+//!   loads one back into the store before the first step.
+//! * [`LrSchedule`] — warmup + cosine, evaluated inside each driver's
+//!   `step` so direct stepping and the shared loop see identical LRs.
+//! * `linear_eval` — the frozen-backbone probe protocol behind the
+//!   table commands and the e2e example.
+//!
+//! Construct drivers via [`api::train::DriverBuilder`](crate::api::train::DriverBuilder)
+//! (the legacy `Trainer::new` / `with_session` / `with_session_artifact` /
+//! `DdpTrainer::new` constructors are thin delegations kept for
+//! compatibility).
 
 pub mod checkpoint;
 pub mod ddp;

@@ -1,21 +1,30 @@
-//! The training coordinator: owns the step loop around the AOT train
-//! artifact.
+//! The monolithic training coordinator: one fused AOT train artifact per
+//! optimizer step.
 //!
-//! Per step: pull a prefetched twin-view batch, compute the scheduled LR,
+//! Per step: take a prepared twin-view batch, compute the scheduled LR,
 //! sample the §4.3 feature permutation, and run one `ExecutionBinding`
 //! step — the binding (resolved once at construction) marshals the
 //! store-resident parameter/optimizer literals plus the per-step streams
 //! in manifest order and absorbs the updated state back in place. The
 //! train executable itself comes out of the shared runtime `Session`
 //! cache. Python is never invoked.
+//!
+//! The epoch/step skeleton does **not** live here: `Trainer` implements
+//! [`TrainDriver`](crate::api::train::TrainDriver), is constructed through
+//! [`DriverBuilder`](crate::api::train::DriverBuilder) (which the legacy
+//! `new`/`with_session`/`with_session_artifact` constructors delegate to),
+//! and [`Trainer::run`] is a thin delegation to the shared
+//! [`run_loop`](crate::api::train::run_loop).
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::api::train::{DriverBuilder, TrainDriver};
+use crate::api::LossSpec;
 use crate::config::TrainConfig;
-use crate::data::{AugmentConfig, BatchLoader, ShapeWorld, ShapeWorldConfig, SslBatch};
+use crate::data::SslBatch;
 use crate::runtime::literal::literal_scalar;
 use crate::runtime::{Artifact, ExecutionBinding, ParamStore, Session, TensorSpec};
 use crate::util::rng::Rng;
@@ -25,6 +34,10 @@ use crate::util::tensor::Tensor;
 // historical `coordinator::trainer::{literal_f32, ...}` paths keep
 // working across tests, benches, and examples.
 pub use crate::runtime::literal::{literal_f32, literal_i32, scalar};
+
+// The run summary moved to `api::train` (it now carries the spec label);
+// re-exported so `coordinator::trainer::TrainReport` keeps resolving.
+pub use crate::api::train::TrainReport;
 
 use super::checkpoint::Checkpoint;
 use super::metrics::{MetricsLogger, StepMetrics};
@@ -46,21 +59,6 @@ pub struct EmbeddingDiagnostics {
     pub r_sum_l2: f64,
     /// Number of embedding pairs diagnosed.
     pub samples: usize,
-}
-
-/// Summary of a training run.
-#[derive(Clone, Debug)]
-pub struct TrainReport {
-    /// Mean loss over the first logged steps.
-    pub initial_loss: f32,
-    /// Mean loss over the last logged steps.
-    pub final_loss: f32,
-    /// Total optimizer steps executed.
-    pub steps: usize,
-    /// Wall-clock seconds (whole run).
-    pub wall_seconds: f64,
-    /// Steps per second.
-    pub steps_per_sec: f64,
 }
 
 /// The trainer. See module docs.
@@ -149,32 +147,41 @@ impl InputAdapter {
 
 impl Trainer {
     /// Build a trainer: runtime session, compiled train artifact, initial
-    /// parameters from `artifacts/init_<preset>.ckpt`, zero optimizer state.
+    /// parameters from `artifacts/init_<preset>.ckpt`, zero optimizer
+    /// state. Convenience over [`DriverBuilder`].
     pub fn new(cfg: TrainConfig) -> Result<Trainer> {
-        let session = Session::open(&cfg.artifact_dir)?;
-        Self::with_session(cfg, session)
+        DriverBuilder::new(cfg).build_trainer()
     }
 
     /// Build over an existing session arm, so table sweeps and benches
     /// share compiled eval/projection artifacts across trainers.
+    /// Convenience over [`DriverBuilder::session`].
     pub fn with_session(cfg: TrainConfig, session: Session) -> Result<Trainer> {
-        anyhow::ensure!(
-            session.artifact_dir() == std::path::Path::new(&cfg.artifact_dir),
-            "session loads from '{}' but config expects '{}'",
-            session.artifact_dir().display(),
-            cfg.artifact_dir
-        );
-        let artifact = session
-            .load(&cfg.train_artifact())
-            .with_context(|| format!("loading train artifact {}", cfg.train_artifact()))?;
-        Self::with_session_artifact(cfg, session, artifact)
+        DriverBuilder::new(cfg).session(session).build_trainer()
     }
 
     /// Variant used by tests/benches that already hold a session+artifact.
+    /// Convenience over [`DriverBuilder::artifact`].
     pub fn with_session_artifact(
         cfg: TrainConfig,
         session: Session,
         artifact: Arc<Artifact>,
+    ) -> Result<Trainer> {
+        DriverBuilder::new(cfg)
+            .session(session)
+            .artifact(artifact)
+            .build_trainer()
+    }
+
+    /// The real constructor, reached only through [`DriverBuilder`]:
+    /// validate the artifact manifest against the spec, resolve the
+    /// execution binding, and populate the parameter store from the init
+    /// checkpoint — or from `resume` when a resume checkpoint was given.
+    pub(crate) fn from_parts(
+        cfg: TrainConfig,
+        session: Session,
+        artifact: Arc<Artifact>,
+        resume: Option<&Checkpoint>,
     ) -> Result<Trainer> {
         let manifest = artifact.manifest().clone();
         // Spec-derived manifest expectations: meta.d present, and the
@@ -220,9 +227,16 @@ impl Trainer {
             .context("train manifest missing meta.d")?;
 
         // Initial parameters come from the jax-side init checkpoint so the
-        // device path reproduces the reference initialization exactly.
-        let init_path = format!("{}/init_{}.ckpt", cfg.artifact_dir, cfg.preset);
-        let ckpt = Checkpoint::load(&init_path)?;
+        // device path reproduces the reference initialization exactly; a
+        // resume checkpoint replaces them (optimizer state restarts at
+        // zero — the checkpoint format carries parameters only).
+        let ckpt = match resume {
+            Some(c) => c.clone(),
+            None => {
+                let init_path = format!("{}/init_{}.ckpt", cfg.artifact_dir, cfg.preset);
+                Checkpoint::load(&init_path)?
+            }
+        };
         let param_specs: Vec<&TensorSpec> = manifest.inputs_with_prefix("params.");
         let opt_specs: Vec<&TensorSpec> = manifest.inputs_with_prefix("opt_state.");
         let params = ParamStore::from_checkpoint(&ckpt, &param_specs)?;
@@ -296,34 +310,15 @@ impl Trainer {
         snapshot: &Checkpoint,
         batches: usize,
     ) -> Result<EmbeddingDiagnostics> {
-        use crate::api::{LossExecutor, LossFamily, LossSpec};
-        use crate::regularizer::kernel::normalized_residual;
-        use crate::regularizer::Q;
-        let (za, zb) = super::linear_eval::project_views(
+        diagnose_projected(
             &self.session,
             &self.cfg.preset,
-            snapshot,
+            &self.cfg.spec,
             self.input_adapt,
             self.cfg.seed,
+            snapshot,
             batches,
-        )?;
-        let residual = normalized_residual(self.cfg.spec.residual_family(), &za, &zb);
-        // The relaxed quantity is always the flat q=2 R_sum over
-        // standardized views, whatever the trained family — a BT-family
-        // diagnostic spec with auto threads.
-        let diag_spec = LossSpec::builder(LossFamily::BarlowTwins)
-            .sum(Q::L2)
-            .threads(0)
-            .build()
-            .map_err(anyhow::Error::from)?;
-        let n = za.shape()[0];
-        let mut exec = diag_spec.host_executor(za.shape()[1])?;
-        let out = exec.evaluate(&za, &zb)?;
-        Ok(EmbeddingDiagnostics {
-            residual,
-            r_sum_l2: out.regularizer.context("host executor reports the regularizer")?,
-            samples: n,
-        })
+        )
     }
 
     /// Execute one optimizer step on a prepared batch. Returns the step
@@ -376,53 +371,11 @@ impl Trainer {
         Ok(m)
     }
 
-    /// Run the configured training loop with the prefetching data pipeline.
+    /// Run the configured training loop with the prefetching data
+    /// pipeline — a thin delegation to the shared
+    /// [`run_loop`](crate::api::train::run_loop) (no observers).
     pub fn run(&mut self) -> Result<TrainReport> {
-        let dataset = ShapeWorld::new(ShapeWorldConfig {
-            seed: self.cfg.seed,
-            ..Default::default()
-        });
-        let loader = BatchLoader::new(
-            dataset,
-            AugmentConfig::default(),
-            self.batch_size()?,
-            self.cfg.epoch_size,
-            self.cfg.seed,
-            self.cfg.loader_workers,
-            self.cfg.prefetch,
-        );
-        let t0 = Instant::now();
-        let total = self.cfg.total_steps();
-        for epoch in 0..self.cfg.epochs {
-            for _ in 0..self.cfg.steps_per_epoch {
-                let batch = loader.next();
-                let m = self.step(&batch, epoch)?;
-                if m.step % self.cfg.log_every == 0 || m.step + 1 == total {
-                    println!(
-                        "step {:>5}/{} epoch {:>3} lr {:.4} loss {:.4} inv {:.4} reg {:.4} ({:.0} ms)",
-                        m.step, total, epoch, m.lr, m.loss, m.inv, m.reg,
-                        m.step_time * 1e3
-                    );
-                }
-                self.metrics.log(m)?;
-            }
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let hist = self.metrics.history();
-        let k = (total / 10).clamp(1, 20);
-        let initial = hist[..k.min(hist.len())]
-            .iter()
-            .map(|m| m.loss)
-            .sum::<f32>()
-            / k.min(hist.len()) as f32;
-        let final_loss = self.metrics.recent_loss(k);
-        Ok(TrainReport {
-            initial_loss: initial,
-            final_loss,
-            steps: total,
-            wall_seconds: wall,
-            steps_per_sec: total as f64 / wall,
-        })
+        crate::api::train::run_driver(self, &mut [])
     }
 
     /// Batch size from the artifact manifest (input xa's leading dim).
@@ -436,6 +389,88 @@ impl Trainer {
     pub fn metrics(&self) -> &MetricsLogger {
         &self.metrics
     }
+}
+
+impl TrainDriver for Trainer {
+    fn spec(&self) -> &LossSpec {
+        &self.cfg.spec
+    }
+
+    fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    fn step(&mut self, batch: &SslBatch, epoch: usize) -> Result<StepMetrics> {
+        Trainer::step(self, batch, epoch)
+    }
+
+    fn snapshot(&self) -> Result<Checkpoint> {
+        Trainer::snapshot(self)
+    }
+
+    fn diagnose(&self, snapshot: &Checkpoint, batches: usize) -> Result<EmbeddingDiagnostics> {
+        self.diagnose_embeddings(snapshot, batches)
+    }
+
+    fn metrics(&self) -> &MetricsLogger {
+        &self.metrics
+    }
+
+    fn session(&self) -> &Session {
+        &self.session
+    }
+
+    fn into_session(self: Box<Self>) -> Session {
+        Trainer::into_session(*self)
+    }
+
+    fn batch_size(&self) -> Result<usize> {
+        Trainer::batch_size(self)
+    }
+
+    fn input_adapter(&self) -> InputAdapter {
+        self.input_adapt
+    }
+}
+
+/// Table-6-style diagnostics shared by every [`TrainDriver`]: project
+/// `batches` batches of augmented twin views through the
+/// `project_<preset>` artifact and measure both the exact normalized
+/// residual (Eq. 16/17 — the family follows `spec`) and the relaxed
+/// `R_sum` (Eq. 12) through the spec-derived host `LossExecutor`.
+pub(crate) fn diagnose_projected(
+    session: &Session,
+    preset: &str,
+    spec: &LossSpec,
+    adapter: InputAdapter,
+    seed: u64,
+    snapshot: &Checkpoint,
+    batches: usize,
+) -> Result<EmbeddingDiagnostics> {
+    use crate::api::{LossExecutor, LossFamily};
+    use crate::regularizer::kernel::normalized_residual;
+    use crate::regularizer::Q;
+    let (za, zb) =
+        super::linear_eval::project_views(session, preset, snapshot, adapter, seed, batches)?;
+    let residual = normalized_residual(spec.residual_family(), &za, &zb);
+    // The relaxed quantity is always the flat q=2 R_sum over standardized
+    // views, whatever the trained family — a BT-family diagnostic spec
+    // with auto threads.
+    let diag_spec = LossSpec::builder(LossFamily::BarlowTwins)
+        .sum(Q::L2)
+        .threads(0)
+        .build()
+        .map_err(anyhow::Error::from)?;
+    let n = za.shape()[0];
+    let mut exec = diag_spec.host_executor(za.shape()[1])?;
+    let out = exec.evaluate(&za, &zb)?;
+    Ok(EmbeddingDiagnostics {
+        residual,
+        r_sum_l2: out
+            .regularizer
+            .context("host executor reports the regularizer")?,
+        samples: n,
+    })
 }
 
 #[cfg(test)]

@@ -46,19 +46,36 @@
 //! alias layer over the six paper presets; its artifact names and labels
 //! are byte-identical to the spec-derived ones.
 //!
+//! The front door also *runs* training: [`api::train`] owns the step loop
+//! once, behind one polymorphic surface —
+//!
+//! ```text
+//!  LossSpec + TrainConfig → DriverBuilder → TrainDriver (Trainer | DdpTrainer)
+//!                                               │
+//!                       run_loop(driver, loader, observers) → TrainReport
+//!                                               │
+//!              MetricsObserver / CheckpointObserver / DiagnosticsObserver /
+//!              BenchObserver — and SweepPlan grids over one shared Session
+//! ```
+//!
+//! `Trainer::run` and `DdpTrainer::run` are thin delegations to that loop
+//! with bit-identical numerics; `decorr sweep` expands `(b, q)` spec grids
+//! through it into the `BENCH_spec_grid.json` trajectory.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
+//! use decorr::api::train::DriverBuilder;
 //! use decorr::api::{LossExecutor, LossSpec};
 //! use decorr::config::TrainConfig;
-//! use decorr::coordinator::Trainer;
 //!
-//! // Train any point of the design space — not just the six presets.
+//! // Train any point of the design space — not just the six presets —
+//! // through the single fallible driver constructor.
 //! let mut cfg = TrainConfig::preset_tiny();
 //! cfg.spec = LossSpec::parse("bt_sum@b=64,q=1").unwrap();
-//! let mut trainer = Trainer::new(cfg).unwrap();
+//! let mut trainer = DriverBuilder::new(cfg).build_trainer().unwrap();
 //! let report = trainer.run().unwrap();
-//! println!("final loss {:.4}", report.final_loss);
+//! println!("{}: final loss {:.4}", report.spec, report.final_loss);
 //!
 //! // Evaluate the same spec on the host, no artifacts needed.
 //! let spec = LossSpec::parse("vic_sum@b=256,q=2").unwrap();

@@ -2,9 +2,10 @@
 //!
 //! ```text
 //! decorr smoke   [--hlo path]          verify the PJRT runtime (FFT probe)
-//! decorr train   [--config file] [...] SSL pretraining
+//! decorr train   [--config file] [--resume ckpt] [...] SSL pretraining
 //! decorr eval    --checkpoint dir      linear evaluation of a checkpoint
 //! decorr spec    <loss-spec> [--check] inspect a parsed LossSpec's derivations
+//! decorr sweep   [--grid "bt_sum@b={64,128},q={1,2}"] spec-grid sweep
 //! decorr table1|table3|table4|table6|table7   regenerate paper tables
 //! decorr fig2|fig3                     regenerate paper figures
 //! ```
@@ -36,6 +37,7 @@ fn main() -> Result<()> {
         "fig2" => decorr::bench_harness::cmd::fig2(&mut args),
         "fig3" => decorr::bench_harness::cmd::fig3(&mut args),
         "fig5" => decorr::bench_harness::cmd::fig5(&mut args),
+        "sweep" => decorr::bench_harness::cmd::sweep(&mut args),
         "session-bench" | "session" => decorr::bench_harness::cmd::session_bench(&mut args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -53,11 +55,17 @@ USAGE: decorr <subcommand> [flags]
 SUBCOMMANDS
   smoke    verify the PJRT runtime by executing an FFT-bearing HLO module
   train    SSL pretraining (--preset tiny|small|e2e, --variant bt_sum, ...;
-           --variant accepts full loss specs, e.g. 'bt_sum@b=64,q=1')
+           --variant accepts full loss specs, e.g. 'bt_sum@b=64,q=1';
+           --resume <ckpt> loads a saved snapshot before the first step)
   eval     linear evaluation of a saved checkpoint (--checkpoint dir)
   spec     parse a loss spec and pretty-print its derived components
            (kernel, artifact ids, labels; --check evaluates it through
            the host/device LossExecutor facade)
+  sweep    expand a (b, q) spec grid (--grid \"bt_sum@b={64,128},q={1,2}\")
+           into TrainDrivers sharing one runtime session and report
+           per-spec throughput; --host measures the host LossExecutor
+           instead (no artifacts needed); --shards K sweeps the DDP
+           driver; --json path writes BENCH_spec_grid.json
   table1   accuracy comparison across loss variants      (paper Tab. 1)
   table3   transfer-learning probe                       (paper Tab. 3)
   table4   wall-clock training time, baseline vs FFT     (paper Tab. 4)

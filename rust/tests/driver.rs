@@ -1,0 +1,321 @@
+//! Golden tests for the `api::train` driver surface.
+//!
+//! The redesign's core promise is that routing `Trainer::run` /
+//! `DdpTrainer::run` through the shared `run_loop` changes *nothing*
+//! numerically: the artifact-gated tests here pin bit-identical step
+//! losses between a hand-rolled pre-redesign loop and the driver path,
+//! plus the save → resume → loss-continuity contract of
+//! `DriverBuilder::resume_from`. The host-only tests cover the
+//! `LrSchedule` boundary cases the loop depends on and the sweep grammar.
+
+use decorr::api::train::{
+    run_driver, BenchObserver, CheckpointObserver, DriverBuilder, MetricsObserver, SweepPlan,
+    TrainDriver, TrainObserver, TrainReport,
+};
+use decorr::api::{LossExecutor, LossSpec};
+use decorr::config::TrainConfig;
+use decorr::coordinator::{Checkpoint, LrSchedule};
+use decorr::data::loader::make_batch;
+use decorr::data::synth::{ShapeWorld, ShapeWorldConfig};
+use decorr::data::{AugmentConfig, Augmenter, BatchLoader};
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/train_bt_sum_tiny.manifest.json").exists()
+}
+
+fn train_artifact_present(spec: &LossSpec, preset: &str) -> bool {
+    std::path::Path::new(&format!(
+        "artifacts/{}.manifest.json",
+        spec.train_artifact(preset)
+    ))
+    .exists()
+}
+
+/// A deterministic tiny config: single loader worker so batch order is
+/// strictly sequential (multi-worker loaders may deliver out of index
+/// order), silent logging.
+fn tiny_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::preset_tiny();
+    cfg.epochs = 2;
+    cfg.steps_per_epoch = 4;
+    cfg.out_dir = String::new();
+    cfg.loader_workers = 1;
+    cfg.log_every = usize::MAX;
+    cfg
+}
+
+/// The pre-redesign `Trainer::run` skeleton, written out longhand as the
+/// golden oracle: same loader construction, same nested epoch/step loop,
+/// stepping the driver directly. Hands the session back for the next
+/// build.
+fn direct_loop_losses(
+    mut driver: Box<dyn TrainDriver>,
+) -> (Vec<f32>, decorr::runtime::Session) {
+    let cfg = driver.config().clone();
+    let dataset = ShapeWorld::new(ShapeWorldConfig {
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    let loader = BatchLoader::new(
+        dataset,
+        AugmentConfig::default(),
+        driver.batch_size().unwrap(),
+        cfg.epoch_size,
+        cfg.seed,
+        cfg.loader_workers,
+        cfg.prefetch,
+    );
+    let mut losses = Vec::new();
+    for epoch in 0..cfg.epochs {
+        for _ in 0..cfg.steps_per_epoch {
+            let batch = loader.next();
+            losses.push(driver.step(&batch, epoch).unwrap().loss);
+        }
+    }
+    (losses, driver.into_session())
+}
+
+/// Paper-preset specs produce bit-identical step losses through the
+/// shared `run_loop` vs the pre-redesign direct loop.
+#[test]
+fn run_loop_matches_direct_loop_bit_identically() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut checked = 0;
+    for spec in LossSpec::paper_presets() {
+        if !train_artifact_present(&spec, "tiny") {
+            eprintln!("skipping {spec}: no tiny train artifact");
+            continue;
+        }
+        let mut cfg = tiny_cfg();
+        cfg.spec = spec;
+
+        // Golden: the hand-rolled pre-redesign loop.
+        let direct = DriverBuilder::new(cfg.clone()).build().unwrap();
+        let (losses_direct, session) = direct_loop_losses(direct);
+
+        // Redesigned: Trainer::run → run_loop delegation, over the same
+        // session (the compiled train executable is a cache hit).
+        let mut trainer = DriverBuilder::new(cfg).session(session).build_trainer().unwrap();
+        let report = trainer.run().unwrap();
+        let losses_loop: Vec<f32> = trainer.metrics().history().iter().map(|m| m.loss).collect();
+
+        assert_eq!(
+            losses_direct, losses_loop,
+            "step losses diverged for {spec}"
+        );
+        assert_eq!(report.steps, losses_loop.len());
+        assert_eq!(report.spec, spec.to_string());
+        checked += 1;
+    }
+    assert!(checked > 0, "no paper-preset tiny artifacts found");
+}
+
+/// Observers compose on one run: metrics mirroring, periodic checkpoints,
+/// and throughput capture all fire without forking the loop.
+#[test]
+fn observers_fire_during_run() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = tiny_cfg();
+    let total = cfg.total_steps();
+    let dir = std::env::temp_dir().join(format!("decorr_obs_{}", std::process::id()));
+    let mut trainer = DriverBuilder::new(cfg).build_trainer().unwrap();
+    let mut mirror = MetricsObserver::in_memory();
+    let mut ckpts = CheckpointObserver::new(dir.to_str().unwrap(), 3);
+    let mut bench = BenchObserver::new();
+    let report = run_driver(
+        &mut trainer,
+        &mut [&mut mirror, &mut ckpts, &mut bench],
+    )
+    .unwrap();
+    // Mirror saw every step, in order, identical to the driver's logger.
+    assert_eq!(mirror.logger().len(), total);
+    let mirrored: Vec<f32> = mirror.logger().history().iter().map(|m| m.loss).collect();
+    let primary: Vec<f32> = trainer.metrics().history().iter().map(|m| m.loss).collect();
+    assert_eq!(mirrored, primary);
+    // Periodic saves every 3 steps + the final checkpoint.
+    assert_eq!(ckpts.saved().len(), total / 3 + 1);
+    for path in ckpts.saved() {
+        assert!(Checkpoint::load(path).is_ok(), "unreadable {path}");
+    }
+    // Throughput capture rendered a table consistent with the report.
+    assert!(bench.median_step_ms().unwrap() > 0.0);
+    assert!(bench.table().is_some());
+    assert!(report.steps_per_sec > 0.0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// save → resume → loss continuity: a resumed driver restores the saved
+/// parameters bit-identically and keeps training at the saved loss level.
+#[test]
+fn save_resume_restores_params_and_loss_level() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = tiny_cfg();
+    cfg.epochs = 2;
+    cfg.steps_per_epoch = 6;
+    let mut trainer = DriverBuilder::new(cfg.clone()).build_trainer().unwrap();
+    let report = trainer.run().unwrap();
+    let snap = trainer.snapshot().unwrap();
+    let dir = std::env::temp_dir().join(format!("decorr_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resume.ckpt");
+    snap.save(&path).unwrap();
+
+    let mut resumed = DriverBuilder::new(cfg.clone())
+        .session(trainer.into_session())
+        .resume_from(path.to_str().unwrap())
+        .build_trainer()
+        .unwrap();
+    // Bit-identical parameter restoration.
+    let restored = resumed.snapshot().unwrap();
+    assert_eq!(restored.num_params(), snap.num_params());
+    for (name, t) in &snap.tensors {
+        assert_eq!(restored.get(name).unwrap().data(), t.data(), "{name}");
+    }
+    // Continuity: the next step's loss stays at the trained level, well
+    // below a fresh run's initial loss (optimizer state restarts at
+    // zero, so exact equality with an uninterrupted run is not claimed).
+    let dataset = ShapeWorld::new(ShapeWorldConfig {
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    let aug = Augmenter::new(AugmentConfig::default());
+    let batch = make_batch(
+        &dataset,
+        &aug,
+        resumed.batch_size().unwrap(),
+        cfg.epoch_size,
+        cfg.seed,
+        0,
+    );
+    let m = resumed.step(&batch, 0).unwrap();
+    assert!(m.loss.is_finite());
+    assert!(
+        m.loss <= report.initial_loss * 1.2,
+        "resumed loss {} regressed far above the fresh initial loss {}",
+        m.loss,
+        report.initial_loss
+    );
+    // A missing resume checkpoint is a typed build failure, not a panic.
+    assert!(DriverBuilder::new(cfg)
+        .resume_from(dir.join("nope.ckpt").to_str().unwrap())
+        .build_trainer()
+        .is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The builder surfaces spec/artifact disagreements as errors.
+#[test]
+fn builder_rejects_unresolvable_specs() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = tiny_cfg();
+    // No train artifact was lowered for this off-grid block size.
+    cfg.spec = LossSpec::parse("bt_sum@b=63").unwrap();
+    assert!(DriverBuilder::new(cfg).build_trainer().is_err());
+}
+
+/// LrSchedule boundary cases the shared loop leans on.
+#[test]
+fn lr_schedule_warmup_cosine_boundaries() {
+    // Warmup's last step reaches base exactly; the cosine picks up from
+    // base and decays monotonically to the floor.
+    let s = LrSchedule::from_epochs(1.0, 1, 10, 10);
+    assert!((s.lr(9) - 1.0).abs() < 1e-6, "warmup end: {}", s.lr(9));
+    assert!(s.lr(10) <= 1.0 + 1e-6 && s.lr(10) > 0.9, "handoff: {}", s.lr(10));
+    let mut prev = s.lr(10);
+    for step in 11..100 {
+        let cur = s.lr(step);
+        assert!(cur <= prev + 1e-6, "step {step}: {cur} > {prev}");
+        prev = cur;
+    }
+    assert!(s.lr(99) < 0.01);
+    // Degenerate: warmup spans the whole run — cosine never engages
+    // below base, and the post-run clamp holds.
+    let w = LrSchedule::from_epochs(0.5, 2, 2, 5);
+    assert!((w.lr(9) - 0.5).abs() < 1e-6);
+    assert!((w.lr(10) - 0.5).abs() < 1e-6, "t=0 cosine: {}", w.lr(10));
+    assert!(w.lr(1000) <= w.lr(10) + 1e-6);
+    // Zero-length schedule stays finite at base.
+    let z = LrSchedule::from_epochs(0.25, 0, 0, 0);
+    assert!(z.lr(0).is_finite());
+    assert!((z.lr(0) - 0.25).abs() < 1e-6);
+}
+
+/// The sweep grammar expands to host executors without artifacts — the
+/// path `decorr sweep --host` (the CI smoke trajectory) takes.
+#[test]
+fn sweep_plan_runs_through_host_executors() {
+    let plan = SweepPlan::parse("bt_sum@b={64,128},q={1,2}").unwrap();
+    assert_eq!(plan.len(), 4);
+    let (n, d) = (16usize, 256usize);
+    let a = decorr::util::tensor::Tensor::zeros(&[n, d]);
+    for spec in plan.specs() {
+        let mut exec = spec.host_executor(d).unwrap();
+        let out = exec.evaluate(&a, &a).unwrap();
+        assert!(out.total.is_finite(), "{spec}");
+    }
+    // Blocks that don't divide d fail typed at executor construction.
+    let bad = SweepPlan::parse("bt_sum@b={63}").unwrap();
+    assert!(bad.specs()[0].host_executor(d).is_err());
+}
+
+/// TrainReport's JSON serializer emits the BENCH table shape consumed by
+/// the perf-trajectory tooling.
+#[test]
+fn train_report_serializes_to_bench_shape() {
+    let dir = std::env::temp_dir().join(format!("decorr_report_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_spec_grid.json");
+    let reports = vec![TrainReport {
+        spec: "bt_sum_g64_q1".into(),
+        initial_loss: 3.0,
+        final_loss: 1.5,
+        steps: 8,
+        wall_seconds: 2.0,
+        steps_per_sec: 4.0,
+    }];
+    TrainReport::write_json(path.to_str().unwrap(), "spec_grid", &reports).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"spec_grid\""));
+    assert!(text.contains("bt_sum_g64_q1"));
+    assert!(text.contains("\"columns\"") && text.contains("\"rows\""));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A boxed driver built with `.ddp(1)` runs the same loop: one-shard DDP
+/// losses track the monolithic trainer's within tolerance (the DDP
+/// equivalence itself is pinned in tests/ddp.rs; here we check the
+/// polymorphic path end to end).
+#[test]
+fn boxed_ddp_driver_runs_through_run_loop() {
+    if !std::path::Path::new("artifacts/grad_bt_sum_small_s1.manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = TrainConfig::preset_small();
+    cfg.out_dir = String::new();
+    cfg.epochs = 1;
+    cfg.steps_per_epoch = 3;
+    cfg.loader_workers = 1;
+    cfg.log_every = usize::MAX;
+    let mut driver = DriverBuilder::new(cfg).ddp(1).build().unwrap();
+    let mut bench = BenchObserver::new();
+    let observers: &mut [&mut dyn TrainObserver] = &mut [&mut bench];
+    let report = run_driver(driver.as_mut(), observers).unwrap();
+    assert_eq!(report.steps, 3);
+    assert!(report.final_loss.is_finite());
+    assert!(bench.median_step_ms().is_some());
+    // The session hands off through the boxed trait object too.
+    let _session = driver.into_session();
+}
