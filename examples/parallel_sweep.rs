@@ -1,0 +1,83 @@
+//! Parallel spec-grid sweeps through the work-stealing `SweepScheduler`.
+//!
+//! 1. Host mode (no artifacts, no PJRT): expand a `(b, q)` grid and
+//!    measure every spec's host `LossExecutor` across worker threads,
+//!    then verify the scheduler's determinism contract — per-spec values
+//!    are bit-identical no matter how many workers ran the grid.
+//! 2. Train mode (requires `make artifacts`): the same grid surface over
+//!    `TrainDriver`s, each worker owning one per-thread `Session` arm of
+//!    a single shared session core, with the cross-arm compile/hit
+//!    stats printed at the end.
+//!
+//! Run with: `cargo run --release --offline --example parallel_sweep`
+
+use anyhow::Result;
+use decorr::api::train::{SweepMode, SweepPlan, SweepScheduler};
+use decorr::config::TrainConfig;
+
+fn main() -> Result<()> {
+    // --- 1. Host-mode grid across workers -------------------------------
+    let grid = "bt_sum@b={64,128},q={1,2};vic_sum";
+    let plan = SweepPlan::parse(grid)?;
+    let mode = SweepMode::Host {
+        d: 256,
+        n: 64,
+        budget: 0.05,
+    };
+    println!("host grid '{grid}' -> {} specs", plan.len());
+    let serial = SweepScheduler::new(plan.clone(), mode.clone()).workers(1).run()?;
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get().min(4))
+        .unwrap_or(2);
+    let parallel = SweepScheduler::new(plan, mode).workers(workers).run()?;
+    println!(
+        "serial {:.2}s vs {} workers {:.2}s ({:.2}x)",
+        serial.wall_seconds,
+        parallel.workers,
+        parallel.wall_seconds,
+        serial.wall_seconds / parallel.wall_seconds
+    );
+    parallel.table().print();
+    for (s, p) in serial.results.iter().zip(&parallel.results) {
+        assert_eq!(
+            s.report.final_loss.to_bits(),
+            p.report.final_loss.to_bits(),
+            "determinism contract broken for {}",
+            s.report.spec
+        );
+    }
+    println!("per-spec values bit-identical across worker counts ✓");
+
+    // --- 2. Train-mode grid over per-thread session arms ----------------
+    let present: Vec<&str> = ["bt_sum", "bt_off", "vic_sum"]
+        .into_iter()
+        .filter(|v| {
+            std::path::Path::new(&format!("artifacts/train_{v}_tiny.manifest.json")).exists()
+        })
+        .collect();
+    if present.is_empty() {
+        println!("\n(skipping train-mode sweep: run `make artifacts` first)");
+        return Ok(());
+    }
+    let mut base = TrainConfig::preset_tiny();
+    base.epochs = 1;
+    base.steps_per_epoch = 4;
+    base.out_dir = String::new();
+    base.log_every = usize::MAX;
+    let plan = SweepPlan::parse(&present.join(";"))?;
+    let outcome = SweepScheduler::new(
+        plan,
+        SweepMode::Train { base, shards: 0 },
+    )
+    .workers(2)
+    .run()?;
+    println!("\ntrain-mode sweep ({} workers):", outcome.workers);
+    outcome.table().print();
+    if let Some(stats) = &outcome.session_stats {
+        println!(
+            "session arms {} | compiles {} ({:.0} ms) | hits {} | sources read {}",
+            stats.arms, stats.compiles, stats.compile_ms, stats.hits, stats.source_reads
+        );
+    }
+    Ok(())
+}

@@ -79,11 +79,18 @@ fn main() -> Result<()> {
         );
     }
 
-    let snapshot = trainer.snapshot()?;
+    // Full run state (format v2): a later `--resume` continues momentum
+    // and the LR-schedule position, not just the parameters.
+    let snapshot = trainer.snapshot_state()?;
     std::fs::create_dir_all(&out_dir)?;
     let ckpt = format!("{out_dir}/final.ckpt");
     snapshot.save(&ckpt)?;
-    println!("checkpoint saved to {ckpt}");
+    println!(
+        "checkpoint saved to {ckpt} (v2: {} params + {} opt-state elems @ step {})",
+        snapshot.num_params(),
+        snapshot.num_opt_params(),
+        snapshot.step
+    );
 
     // --- linear evaluation (frozen backbone) -----------------------------
     println!("\n=== linear evaluation (ShapeWorld-A) ===");

@@ -1,0 +1,86 @@
+//! Parallel-vs-serial sweep scheduler contender: the same host-mode spec
+//! grid through `SweepScheduler` at 1 worker and at the machine's core
+//! count, reporting wall-clock and speedup — the scale lever ROADMAP
+//! names for the sweep surface. Host mode needs no artifacts and no
+//! PJRT. Also asserts the scheduler's determinism contract on the way
+//! through: per-spec values must be bit-identical across worker counts.
+//! Emits `BENCH_sweep_scheduler.json` for the perf trajectory.
+
+use decorr::api::train::{SweepMode, SweepPlan, SweepScheduler};
+use decorr::bench_harness::{smoke_budget, table, Table};
+
+fn main() {
+    let grid = "bt_sum@b={64,128},q={1,2};vic_sum;bt_off";
+    let plan = match SweepPlan::parse(grid) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("bad bench grid: {e}");
+            return;
+        }
+    };
+    let mode = SweepMode::Host {
+        d: 512,
+        n: 64,
+        budget: smoke_budget(0.15),
+    };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2);
+    let mut table_out = Table::new(&["workers", "specs", "wall (s)", "speedup"]);
+    let mut serial_wall = None;
+    let mut serial_values: Vec<(String, u32)> = Vec::new();
+    for workers in [1usize, cores.clamp(2, 8)] {
+        let outcome = match SweepScheduler::new(plan.clone(), mode.clone())
+            .workers(workers)
+            .run()
+        {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("sweep failed at {workers} workers: {e:#}");
+                return;
+            }
+        };
+        let values: Vec<(String, u32)> = outcome
+            .results
+            .iter()
+            .map(|r| (r.report.spec.clone(), r.report.final_loss.to_bits()))
+            .collect();
+        match serial_wall {
+            None => {
+                serial_wall = Some(outcome.wall_seconds);
+                serial_values = values;
+            }
+            Some(base) => {
+                assert_eq!(
+                    serial_values, values,
+                    "scheduler determinism violated: values depend on worker count"
+                );
+                println!(
+                    "[bench_sweep_scheduler] {workers} workers: {:.2}x speedup",
+                    base / outcome.wall_seconds
+                );
+            }
+        }
+        let speedup = serial_wall
+            .map(|base| format!("{:.2}x", base / outcome.wall_seconds))
+            .unwrap_or_else(|| "1.00x".into());
+        table_out.row(vec![
+            format!("{}", outcome.workers),
+            format!("{}", outcome.results.len()),
+            format!("{:.3}", outcome.wall_seconds),
+            speedup,
+        ]);
+    }
+    println!("\n[bench_sweep_scheduler] host-mode sweep, grid '{grid}':");
+    table_out.print();
+    println!("(per-spec values bit-identical across worker counts — asserted above)");
+
+    if let Err(e) = table::write_json(
+        "BENCH_sweep_scheduler.json",
+        &[("sweep_scheduler", &table_out)],
+    ) {
+        eprintln!("could not write BENCH_sweep_scheduler.json: {e}");
+    } else {
+        println!("\nwrote BENCH_sweep_scheduler.json");
+    }
+}

@@ -40,7 +40,9 @@
 //! [`DriverBuilder`], drives it through the shared
 //! [`run_loop`](train::run_loop) with composable
 //! [`TrainObserver`] hooks, and expands `(b, q)` spec grids into sweeps
-//! ([`SweepPlan`]) sharing a single runtime session.
+//! ([`SweepPlan`]) that the work-stealing [`SweepScheduler`] executes
+//! concurrently across per-thread arms of a single shared runtime
+//! session.
 
 #![deny(missing_docs)]
 
@@ -53,4 +55,6 @@ pub mod train;
 pub use error::SpecError;
 pub use executor::{Backend, DeviceExecutor, HostExecutor, LossExecutor, LossOutput};
 pub use spec::{LossFamily, LossSpec, LossSpecBuilder, NormConvention, RegularizerForm};
-pub use train::{DriverBuilder, SweepPlan, TrainDriver, TrainObserver, TrainReport};
+pub use train::{
+    DriverBuilder, SweepPlan, SweepScheduler, TrainDriver, TrainObserver, TrainReport,
+};

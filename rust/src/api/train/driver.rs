@@ -40,6 +40,15 @@ pub trait TrainDriver {
     /// Current parameters as a host checkpoint.
     fn snapshot(&self) -> Result<Checkpoint>;
 
+    /// Full resumable run state (checkpoint format v2): parameters plus
+    /// optimizer state and the global step, so
+    /// [`DriverBuilder::resume_from`] continues momentum and the LR
+    /// schedule seamlessly. Defaults to the parameter snapshot for
+    /// drivers without restorable optimizer state.
+    fn snapshot_state(&self) -> Result<Checkpoint> {
+        self.snapshot()
+    }
+
     /// Table-6-style decorrelation diagnostics of a parameter snapshot:
     /// project `batches` twin-view batches and measure the normalized
     /// residual (Eq. 16/17) plus the relaxed `R_sum` through the host
@@ -150,9 +159,12 @@ impl DriverBuilder {
     }
 
     /// Resume: load this checkpoint into the parameter store before the
-    /// first step (replacing the preset's init checkpoint). Optimizer
-    /// state restarts at zero — the checkpoint format carries parameters
-    /// only.
+    /// first step (replacing the preset's init checkpoint). A v2
+    /// checkpoint (saved by [`TrainDriver::snapshot_state`] or the
+    /// `CheckpointObserver`) also restores the optimizer state and the
+    /// global step — momentum and the LR-schedule position continue
+    /// where the saved run stood; a v1 params-only file restarts both at
+    /// zero.
     pub fn resume_from(mut self, path: impl Into<String>) -> DriverBuilder {
         self.resume = Some(path.into());
         self

@@ -12,19 +12,30 @@
 //!         │
 //!         ▼
 //!   DriverBuilder ── .session(…) .ddp(k) .resume_from(ckpt)
-//!         │
-//!         ▼
+//!         │                                 (v2 checkpoints restore the
+//!         ▼                                  optimizer state + LR position)
 //!    TrainDriver  (Trainer | DdpTrainer — step/snapshot/diagnose/…)
 //!         │
 //!         ▼
 //!     run_loop(driver, loader, observers) ─→ TrainReport
-//!         │                    │
-//!         │                    ├─ MetricsObserver      (mirror JSONL)
-//!         │                    ├─ CheckpointObserver   (periodic saves)
-//!         │                    ├─ DiagnosticsObserver  (Table-6 residuals)
-//!         │                    └─ BenchObserver        (steps/sec → JSON)
+//!                              │
+//!                              ├─ MetricsObserver      (mirror JSONL)
+//!                              ├─ CheckpointObserver   (periodic v2 saves)
+//!                              ├─ DiagnosticsObserver  (Table-6 residuals)
+//!                              └─ BenchObserver        (steps/sec → JSON)
+//!
+//!  SweepPlan ("bt_sum@b={64,128},q={1,2}")
+//!         │ expand
 //!         ▼
-//!     SweepPlan  ("bt_sum@b={64,128},q={1,2}" → drivers over one Session)
+//!   SweepScheduler ── K worker threads, one Session arm each,
+//!         │           lock-free job claim + results sink
+//!         ├─ worker 0: DriverBuilder → run_loop + BenchObserver
+//!         ├─ worker 1: DriverBuilder → run_loop + BenchObserver
+//!         └─ …
+//!         ▼
+//!   SweepOutcome (spec-sorted, bit-identical to serial)
+//!         ▼
+//!   BENCH_spec_grid.json  ──CI──▶  decorr bench-diff regression gate
 //! ```
 //!
 //! * [`TrainDriver`] is the polymorphic contract: one optimizer step on a
@@ -32,7 +43,9 @@
 //!   every consumer of a training run needs.
 //! * [`DriverBuilder`] is the single fallible constructor — it replaces
 //!   the `new` / `with_session` / `with_session_artifact` zoo and is the
-//!   only place resume checkpoints enter the parameter store.
+//!   only place resume checkpoints enter the parameter store (v2
+//!   checkpoints carry the optimizer state and schedule position back in
+//!   through [`TrainDriver::snapshot_state`]).
 //! * [`run_loop`] owns the epoch/step skeleton (batch → step → log →
 //!   observers) once, so `Trainer::run` and `DdpTrainer::run` are thin
 //!   delegations with bit-identical numerics (pinned by `tests/driver.rs`).
@@ -40,17 +53,21 @@
 //!   loop; the four shipped observers cover metrics mirroring, periodic
 //!   checkpoints, Table-6 diagnostics, and throughput capture.
 //! * [`SweepPlan`] expands a `(b, q)` spec-grid grammar into the ordered
-//!   spec list behind `decorr sweep` and the `BENCH_spec_grid.json` CI
-//!   trajectory.
+//!   spec list behind `decorr sweep`; [`SweepScheduler`] runs it —
+//!   serially or across K per-thread session arms (`--parallel K`) —
+//!   into the deterministic, spec-sorted `BENCH_spec_grid.json` CI
+//!   trajectory that `decorr bench-diff` gates against regressions.
 
 pub mod driver;
 pub mod observer;
 pub mod run;
+pub mod scheduler;
 pub mod sweep;
 
 pub use driver::{DriverBuilder, TrainDriver};
 pub use observer::{
     BenchObserver, CheckpointObserver, DiagnosticsObserver, MetricsObserver, TrainObserver,
 };
-pub use run::{run_driver, run_loop, TrainReport};
+pub use run::{run_driver, run_driver_with, run_loop, run_loop_with, RunOptions, TrainReport};
+pub use scheduler::{SweepJobReport, SweepMode, SweepOutcome, SweepScheduler};
 pub use sweep::SweepPlan;

@@ -66,9 +66,12 @@ impl TrainObserver for MetricsObserver {
 
 // ----------------------------------------------------------- checkpoints
 
-/// Periodically saves the driver's parameter snapshot under a directory
+/// Periodically saves the driver's full run state under a directory
 /// (`step<NNNNNN>.ckpt` every `every_steps` steps, `final.ckpt` at the
-/// end). Resumable via `DriverBuilder::resume_from`.
+/// end) — checkpoint format v2 via
+/// [`TrainDriver::snapshot_state`], so a
+/// `DriverBuilder::resume_from` continues the optimizer momentum and
+/// LR-schedule position, not just the parameters.
 pub struct CheckpointObserver {
     dir: String,
     every_steps: usize,
@@ -94,7 +97,7 @@ impl CheckpointObserver {
         std::fs::create_dir_all(&self.dir)
             .with_context(|| format!("creating checkpoint dir {}", self.dir))?;
         let path = format!("{}/{file}", self.dir);
-        driver.snapshot()?.save(&path)?;
+        driver.snapshot_state()?.save(&path)?;
         self.saved.push(path);
         Ok(())
     }

@@ -80,6 +80,23 @@ impl TrainReport {
     }
 }
 
+/// Presentation knobs for [`run_loop_with`] / [`run_driver_with`]. The
+/// loop's *numerics* are never affected — only what it prints.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunOptions {
+    /// Suppress the per-step console lines. The parallel sweep scheduler
+    /// sets this so K concurrent workers don't interleave step logs; all
+    /// metrics still land in the driver's logger and the observers.
+    pub quiet: bool,
+}
+
+impl RunOptions {
+    /// Options with per-step printing suppressed.
+    pub fn quiet() -> RunOptions {
+        RunOptions { quiet: true }
+    }
+}
+
 /// Run the driver's configured epochs over `loader`, with `observers`
 /// hooked into every step/epoch/finish. Owns the skeleton the per-trainer
 /// loops used to duplicate; numerics are bit-identical to the
@@ -88,6 +105,16 @@ pub fn run_loop(
     driver: &mut dyn TrainDriver,
     loader: &BatchLoader,
     observers: &mut [&mut dyn TrainObserver],
+) -> Result<TrainReport> {
+    run_loop_with(driver, loader, observers, &RunOptions::default())
+}
+
+/// [`run_loop`] with presentation options (see [`RunOptions`]).
+pub fn run_loop_with(
+    driver: &mut dyn TrainDriver,
+    loader: &BatchLoader,
+    observers: &mut [&mut dyn TrainObserver],
+    opts: &RunOptions,
 ) -> Result<TrainReport> {
     let (epochs, steps_per_epoch, log_every, total) = {
         let cfg = driver.config();
@@ -104,7 +131,7 @@ pub fn run_loop(
         for _ in 0..steps_per_epoch {
             let batch = loader.next();
             let m = driver.step(&batch, epoch)?;
-            if m.step % log_every == 0 || m.step + 1 == total {
+            if !opts.quiet && (m.step % log_every == 0 || m.step + 1 == total) {
                 println!("{}", driver.format_step(&m, total));
             }
             for obs in observers.iter_mut() {
@@ -146,6 +173,15 @@ pub fn run_driver(
     driver: &mut dyn TrainDriver,
     observers: &mut [&mut dyn TrainObserver],
 ) -> Result<TrainReport> {
+    run_driver_with(driver, observers, &RunOptions::default())
+}
+
+/// [`run_driver`] with presentation options (see [`RunOptions`]).
+pub fn run_driver_with(
+    driver: &mut dyn TrainDriver,
+    observers: &mut [&mut dyn TrainObserver],
+    opts: &RunOptions,
+) -> Result<TrainReport> {
     let (seed, epoch_size, workers, prefetch) = {
         let cfg = driver.config();
         (cfg.seed, cfg.epoch_size, cfg.loader_workers, cfg.prefetch)
@@ -163,7 +199,7 @@ pub fn run_driver(
         workers,
         prefetch,
     );
-    run_loop(driver, &loader, observers)
+    run_loop_with(driver, &loader, observers, opts)
 }
 
 #[cfg(test)]

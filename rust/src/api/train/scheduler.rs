@@ -1,0 +1,520 @@
+//! [`SweepScheduler`]: concurrent execution of a [`SweepPlan`] across
+//! per-thread [`Session`] arms of one [`SharedSession`].
+//!
+//! `decorr sweep` used to walk its spec grid serially — one grid point at
+//! a time through a single session arm — so sweep wall-clock grew
+//! linearly with grid size even though the shared session core was built
+//! precisely so per-thread arms can compile-once and execute
+//! concurrently. The scheduler closes that gap:
+//!
+//! ```text
+//!  SweepPlan ──expand──▶ jobs[0..G]          (first-appearance order)
+//!                           │
+//!              AtomicUsize job counter       (lock-free work stealing:
+//!                           │                 idle workers claim the next
+//!        ┌──────────┬───────┴──────┐          unclaimed index)
+//!        ▼          ▼              ▼
+//!    worker 0   worker 1  …   worker K-1
+//!    Session    Session       Session        (one arm per thread — PJRT
+//!    arm 0      arm 1         arm K-1         handles are thread-affine)
+//!        │          │              │
+//!        └──────────┴───────┬──────┘
+//!                           ▼
+//!            OnceLock results sink[0..G]     (lock-free: each job index
+//!                           │                 is written exactly once)
+//!                           ▼
+//!          spec-sorted SweepOutcome ─▶ BENCH_spec_grid.json
+//! ```
+//!
+//! * **Work stealing.** Jobs live behind one atomic counter; a worker
+//!   that finishes early immediately claims the next unclaimed index, so
+//!   a grid of mixed-cost specs (e.g. `bt_off` beside grouped FFT forms)
+//!   load-balances without any up-front partitioning.
+//! * **Per-thread arms.** In train mode every worker owns one `Session`
+//!   arm of a single `SharedSession`: artifact sources are read, parsed,
+//!   and content-hashed once process-wide (the scheduler prefetches them
+//!   before spawning workers), each arm compiles each *distinct* shape
+//!   it executes exactly once, and all compile/hit/load counters
+//!   aggregate into the one cross-arm [`SessionStats`].
+//! * **Determinism.** Each job's numerics depend only on its spec and
+//!   the base config (seeded data pipeline, seeded permutations), never
+//!   on which worker ran it or in what order — per-spec losses are
+//!   bit-identical between `--parallel 1` and `--parallel K` (pinned by
+//!   `tests/scheduler.rs`). Results are merged spec-sorted, so the
+//!   emitted `BENCH_spec_grid.json` is deterministic modulo timing
+//!   fields.
+//!
+//! Host mode (`SweepMode::Host`) runs the same machinery with no session
+//! at all: every worker evaluates spec-derived host `LossExecutor`s on
+//! one shared pair of random views — the artifact-free CI smoke path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::bench_harness::stats::bench_for;
+use crate::bench_harness::table::Table;
+use crate::config::TrainConfig;
+use crate::runtime::{Session, SessionStats, SharedSession};
+use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
+
+use super::super::executor::LossExecutor;
+use super::super::spec::LossSpec;
+use super::driver::DriverBuilder;
+use super::observer::BenchObserver;
+use super::run::{run_driver_with, RunOptions, TrainReport};
+use super::sweep::SweepPlan;
+
+/// What each grid point executes.
+#[derive(Clone, Debug)]
+pub enum SweepMode {
+    /// Evaluate the spec-derived host `LossExecutor` on random `(n, d)`
+    /// views for `budget` seconds per spec — no artifacts, no PJRT.
+    Host {
+        /// Embedding dimension of the random views.
+        d: usize,
+        /// Batch size of the random views.
+        n: usize,
+        /// Measurement budget per spec, in seconds.
+        budget: f64,
+    },
+    /// Build a `TrainDriver` per spec (monolithic, or DDP when
+    /// `shards > 0`) over a per-worker session arm and run the shared
+    /// step loop with a throughput observer.
+    Train {
+        /// The base run configuration; each job clones it and swaps in
+        /// its spec. `artifact_dir` names the shared session's root.
+        /// For the bit-identical-at-any-K guarantee, keep
+        /// `loader_workers` at 1 — multi-worker loaders may deliver
+        /// batches out of index order, independent of the scheduler
+        /// (`decorr sweep` pins this).
+        base: TrainConfig,
+        /// DDP shard count (0 = monolithic trainer).
+        shards: usize,
+    },
+}
+
+/// One finished grid point.
+#[derive(Clone, Debug)]
+pub struct SweepJobReport {
+    /// The spec this job measured.
+    pub spec: LossSpec,
+    /// Index of the worker thread that executed the job.
+    pub worker: usize,
+    /// Backend label for tables ("host", "train", "ddp x4").
+    pub backend: String,
+    /// Throughput unit matching `report.steps_per_sec` ("eval/s" on the
+    /// host path, "steps/s" on the driver paths).
+    pub throughput_unit: &'static str,
+    /// Median per-unit wall time in milliseconds, when steps were seen.
+    pub median_ms: Option<f64>,
+    /// The run summary in the `BENCH_spec_grid.json` row shape. On the
+    /// host path `initial_loss`/`final_loss` both carry the executor's
+    /// total and `steps` counts measured evaluations.
+    pub report: TrainReport,
+}
+
+/// The merged result of a scheduled sweep: spec-sorted job reports plus
+/// the cross-arm session counters the sweep contributed (train mode).
+#[derive(Debug)]
+pub struct SweepOutcome {
+    /// Job reports, sorted by canonical spec string — deterministic
+    /// regardless of worker count or claim order.
+    pub results: Vec<SweepJobReport>,
+    /// Worker threads actually used (clamped to the grid size).
+    pub workers: usize,
+    /// Whole-sweep wall-clock, in seconds.
+    pub wall_seconds: f64,
+    /// Session counter movement attributable to this sweep (compiles,
+    /// hits, arms handed out). `None` on the host path.
+    pub session_stats: Option<SessionStats>,
+}
+
+impl SweepOutcome {
+    /// The per-spec run summaries, in the outcome's spec-sorted order.
+    pub fn reports(&self) -> Vec<TrainReport> {
+        self.results.iter().map(|r| r.report.clone()).collect()
+    }
+
+    /// Write the spec-sorted grid as `BENCH_spec_grid.json` (the
+    /// `TrainReport` trajectory format under the `spec_grid` table key).
+    pub fn write_json(&self, path: &str) -> Result<()> {
+        TrainReport::write_json(path, "spec_grid", &self.reports())
+    }
+
+    /// Render the human-facing sweep table.
+    pub fn table(&self) -> Table {
+        let mut table = Table::new(&[
+            "spec",
+            "backend",
+            "median (ms)",
+            "throughput",
+            "value",
+            "worker",
+        ]);
+        for r in &self.results {
+            table.row(vec![
+                r.report.spec.clone(),
+                r.backend.clone(),
+                r.median_ms
+                    .map(|ms| format!("{ms:.3}"))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{:.1} {}", r.report.steps_per_sec, r.throughput_unit),
+                format!("{:.4}", r.report.final_loss),
+                format!("w{}", r.worker),
+            ]);
+        }
+        table
+    }
+}
+
+/// Expands a [`SweepPlan`] into jobs and runs them concurrently across
+/// `workers` threads. See the module docs for the execution model.
+pub struct SweepScheduler {
+    plan: SweepPlan,
+    mode: SweepMode,
+    workers: usize,
+}
+
+impl SweepScheduler {
+    /// Schedule `plan` under `mode` with one worker (serial). Raise the
+    /// concurrency with [`workers`](Self::workers).
+    pub fn new(plan: SweepPlan, mode: SweepMode) -> SweepScheduler {
+        SweepScheduler {
+            plan,
+            mode,
+            workers: 1,
+        }
+    }
+
+    /// Set the worker-thread count (clamped to `[1, grid size]` at run
+    /// time — an arm per worker is pointless past one job each).
+    pub fn workers(mut self, workers: usize) -> SweepScheduler {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Run every grid point to completion and merge the results. Fails
+    /// on the first job error (after all workers drained), with the
+    /// failing spec named in the error context.
+    pub fn run(&self) -> Result<SweepOutcome> {
+        let t0 = Instant::now();
+        let jobs: Vec<LossSpec> = self.plan.specs().to_vec();
+        anyhow::ensure!(!jobs.is_empty(), "empty sweep plan");
+        let workers = self.workers.clamp(1, jobs.len());
+        let (mut results, session_stats) = match &self.mode {
+            SweepMode::Host { d, n, budget } => {
+                (run_host(&jobs, workers, *d, *n, *budget)?, None)
+            }
+            SweepMode::Train { base, shards } => {
+                let (results, stats) = run_train(&jobs, workers, base, *shards)?;
+                (results, Some(stats))
+            }
+        };
+        results.sort_by(|x, y| x.report.spec.cmp(&y.report.spec));
+        Ok(SweepOutcome {
+            results,
+            workers,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            session_stats,
+        })
+    }
+}
+
+/// The shared random views every host job evaluates — generated once per
+/// sweep from the same seed the serial `decorr sweep --host` path always
+/// used, so host values are reproducible across runs and worker counts.
+fn host_views(d: usize, n: usize) -> (Tensor, Tensor) {
+    let mut rng = Rng::new(0x53EE9 ^ d as u64);
+    let a = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+    let b = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+    (a, b)
+}
+
+fn host_job(
+    spec: &LossSpec,
+    a: &Tensor,
+    b: &Tensor,
+    d: usize,
+    budget: f64,
+    worker: usize,
+) -> Result<SweepJobReport> {
+    let mut exec = spec
+        .host_executor(d)
+        .with_context(|| format!("host executor for '{spec}' at d={d}"))?;
+    let stats = bench_for(budget, 1, || exec.evaluate(a, b).unwrap());
+    let out = exec.evaluate(a, b)?;
+    let report = TrainReport {
+        spec: spec.to_string(),
+        initial_loss: out.total as f32,
+        final_loss: out.total as f32,
+        steps: stats.iters,
+        wall_seconds: stats.median * stats.iters as f64,
+        steps_per_sec: 1.0 / stats.median,
+    };
+    Ok(SweepJobReport {
+        spec: *spec,
+        worker,
+        backend: "host".into(),
+        throughput_unit: "eval/s",
+        median_ms: Some(stats.median_ms()),
+        report,
+    })
+}
+
+fn run_host(
+    jobs: &[LossSpec],
+    workers: usize,
+    d: usize,
+    n: usize,
+    budget: f64,
+) -> Result<Vec<SweepJobReport>> {
+    let (a, b) = host_views(d, n);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<OnceLock<Result<SweepJobReport>>> =
+        jobs.iter().map(|_| OnceLock::new()).collect();
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let (next, slots, a, b) = (&next, &slots, &a, &b);
+            scope.spawn(move || loop {
+                let idx = next.fetch_add(1, Ordering::Relaxed);
+                if idx >= jobs.len() {
+                    break;
+                }
+                let _ = slots[idx].set(host_job(&jobs[idx], a, b, d, budget, w));
+            });
+        }
+    });
+    collect_slots(jobs, slots, Vec::new())
+}
+
+fn train_job(
+    shared: &SharedSession,
+    base: &TrainConfig,
+    shards: usize,
+    spec: LossSpec,
+    arm: &mut Option<Session>,
+    worker: usize,
+) -> Result<SweepJobReport> {
+    let session = match arm.take() {
+        Some(s) => s,
+        // A previous failed build consumed this worker's arm with it;
+        // grow a fresh one so the remaining jobs still run.
+        None => shared.session()?,
+    };
+    let mut cfg = base.clone();
+    cfg.spec = spec;
+    let mut builder = DriverBuilder::new(cfg).session(session);
+    if shards > 0 {
+        builder = builder.ddp(shards);
+    }
+    let mut driver = builder.build()?;
+    let mut bench = BenchObserver::new();
+    let report = run_driver_with(driver.as_mut(), &mut [&mut bench], &RunOptions::quiet())?;
+    let job = SweepJobReport {
+        spec,
+        worker,
+        backend: if shards > 0 {
+            format!("ddp x{shards}")
+        } else {
+            "train".into()
+        },
+        throughput_unit: "steps/s",
+        median_ms: bench.median_step_ms(),
+        report,
+    };
+    *arm = Some(driver.into_session());
+    Ok(job)
+}
+
+fn run_train(
+    jobs: &[LossSpec],
+    workers: usize,
+    base: &TrainConfig,
+    shards: usize,
+) -> Result<(Vec<SweepJobReport>, SessionStats)> {
+    let shared = SharedSession::open(&base.artifact_dir);
+    // Warm the shared source cache before any worker spawns: each
+    // distinct artifact is read + parsed + content-hashed exactly once
+    // process-wide, so K arms start their compiles without re-reading.
+    let mut names: Vec<String> = jobs
+        .iter()
+        .map(|s| {
+            if shards > 0 {
+                s.grad_artifact(&base.preset, shards)
+            } else {
+                s.train_artifact(&base.preset)
+            }
+        })
+        .collect();
+    if shards > 0 {
+        names.push(format!("apply_{}", base.preset));
+    }
+    shared.prefetch_sources(&names);
+    let before = shared.stats();
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<OnceLock<Result<SweepJobReport>>> =
+        jobs.iter().map(|_| OnceLock::new()).collect();
+    let setup_errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let shared = shared.clone();
+            let (next, slots, setup_errors) = (&next, &slots, &setup_errors);
+            scope.spawn(move || {
+                let mut arm = match shared.session() {
+                    Ok(s) => Some(s),
+                    Err(e) => {
+                        setup_errors
+                            .lock()
+                            .unwrap_or_else(|p| p.into_inner())
+                            .push(e.context(format!(
+                                "creating the session arm for sweep worker {w}"
+                            )));
+                        return;
+                    }
+                };
+                loop {
+                    let idx = next.fetch_add(1, Ordering::Relaxed);
+                    if idx >= jobs.len() {
+                        break;
+                    }
+                    let spec = jobs[idx];
+                    println!("== {spec} == (sweep worker {w})");
+                    let _ = slots[idx].set(train_job(&shared, base, shards, spec, &mut arm, w));
+                }
+            });
+        }
+    });
+    let stats = shared.stats().delta(&before);
+    let errors = setup_errors
+        .into_inner()
+        .unwrap_or_else(|p| p.into_inner());
+    Ok((collect_slots(jobs, slots, errors)?, stats))
+}
+
+/// Drain the lock-free sink into job-index order, surfacing the first
+/// failure (a job error, or a worker-setup error that left jobs unrun).
+fn collect_slots(
+    jobs: &[LossSpec],
+    slots: Vec<OnceLock<Result<SweepJobReport>>>,
+    mut setup_errors: Vec<anyhow::Error>,
+) -> Result<Vec<SweepJobReport>> {
+    let mut results = Vec::with_capacity(jobs.len());
+    for (idx, slot) in slots.into_iter().enumerate() {
+        match slot.into_inner() {
+            Some(Ok(r)) => results.push(r),
+            Some(Err(e)) => {
+                return Err(e.context(format!("sweep job '{}' failed", jobs[idx])))
+            }
+            None => {
+                return Err(match setup_errors.pop() {
+                    Some(e) => e,
+                    None => anyhow::anyhow!("sweep job '{}' was never executed", jobs[idx]),
+                })
+            }
+        }
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn host_mode() -> SweepMode {
+        SweepMode::Host {
+            d: 64,
+            n: 16,
+            budget: 0.0,
+        }
+    }
+
+    #[test]
+    fn parallel_host_sweep_matches_serial_bitwise() {
+        let plan = SweepPlan::parse("bt_sum@b={16,32},q={1,2};vic_sum").unwrap();
+        let serial = SweepScheduler::new(plan.clone(), host_mode())
+            .workers(1)
+            .run()
+            .unwrap();
+        let parallel = SweepScheduler::new(plan, host_mode())
+            .workers(4)
+            .run()
+            .unwrap();
+        assert_eq!(serial.results.len(), 5);
+        assert_eq!(parallel.results.len(), 5);
+        assert_eq!(serial.workers, 1);
+        assert_eq!(parallel.workers, 4);
+        for (s, p) in serial.results.iter().zip(&parallel.results) {
+            assert_eq!(s.report.spec, p.report.spec);
+            assert_eq!(
+                s.report.final_loss.to_bits(),
+                p.report.final_loss.to_bits(),
+                "loss bits diverged for {}",
+                s.report.spec
+            );
+        }
+    }
+
+    #[test]
+    fn results_are_spec_sorted_regardless_of_claim_order() {
+        let plan = SweepPlan::parse("vic_sum;bt_off;bt_sum@q=1").unwrap();
+        let outcome = SweepScheduler::new(plan, host_mode())
+            .workers(3)
+            .run()
+            .unwrap();
+        let specs: Vec<&str> = outcome.results.iter().map(|r| r.report.spec.as_str()).collect();
+        let mut sorted = specs.clone();
+        sorted.sort();
+        assert_eq!(specs, sorted, "outcome must be spec-sorted");
+        assert!(outcome.wall_seconds > 0.0);
+        assert!(outcome.session_stats.is_none(), "host mode has no session");
+    }
+
+    #[test]
+    fn workers_clamp_to_grid_size() {
+        let plan = SweepPlan::parse("bt_sum;vic_sum").unwrap();
+        let outcome = SweepScheduler::new(plan, host_mode())
+            .workers(16)
+            .run()
+            .unwrap();
+        assert_eq!(outcome.workers, 2);
+    }
+
+    #[test]
+    fn job_failure_names_the_failing_spec() {
+        // Block 63 does not divide d=64: the executor build fails typed,
+        // and the scheduler surfaces it with the spec in context.
+        let plan = SweepPlan::parse("bt_sum;bt_sum@b=63").unwrap();
+        let err = SweepScheduler::new(plan, host_mode())
+            .workers(2)
+            .run()
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("bt_sum_g63"), "error must name the spec: {msg}");
+    }
+
+    #[test]
+    fn outcome_table_and_json_share_the_sorted_order() {
+        let plan = SweepPlan::parse("vic_sum;bt_sum").unwrap();
+        let outcome = SweepScheduler::new(plan, host_mode())
+            .workers(2)
+            .run()
+            .unwrap();
+        let table = outcome.table();
+        let json = table.to_json();
+        let rows = json.get("rows").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[0].get("spec").and_then(|v| v.as_str()),
+            Some("bt_sum"),
+            "bt_sum sorts before vic_sum"
+        );
+        let reports = outcome.reports();
+        assert_eq!(reports[0].spec, "bt_sum");
+        assert_eq!(reports[1].spec, "vic_sum");
+    }
+}

@@ -7,7 +7,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::api::train::{run_driver, BenchObserver, DriverBuilder, SweepPlan, TrainReport};
+use crate::api::train::{DriverBuilder, SweepMode, SweepPlan, SweepScheduler};
 use crate::api::{LossExecutor, LossSpec, RegularizerForm};
 use crate::config::{TrainConfig, Variant};
 use crate::coordinator::{linear_eval, Checkpoint, InputAdapter, Trainer};
@@ -145,8 +145,10 @@ fn parse_variant_list(args: &mut Args, key: &str, defaults: &[String]) -> Result
 // ---------------------------------------------------------------- train
 
 /// `decorr train`: plain pretraining run with metrics + checkpoint output.
-/// `--resume <checkpoint>` loads a saved parameter snapshot into the store
-/// before the first step (through `DriverBuilder::resume_from`).
+/// The final checkpoint is format v2 (parameters + optimizer state +
+/// step), so `--resume <checkpoint>` continues momentum and the
+/// LR-schedule position through `DriverBuilder::resume_from`; v1
+/// params-only checkpoints still resume with fresh optimizer state.
 pub fn train(args: &mut Args) -> Result<()> {
     let mut cfg = TrainConfig::default();
     if let Some(path) = args.flag("config") {
@@ -165,7 +167,7 @@ pub fn train(args: &mut Args) -> Result<()> {
     }
     let mut trainer = builder.build_trainer()?;
     let report = trainer.run()?;
-    let snap = trainer.snapshot()?;
+    let snap = trainer.snapshot_state()?;
     std::fs::create_dir_all(&out_dir)?;
     let ckpt_path = format!("{out_dir}/final.ckpt");
     snap.save(&ckpt_path)?;
@@ -799,19 +801,23 @@ pub fn spec(args: &mut Args) -> Result<()> {
 
 /// `decorr sweep` — expand a `(b, q)` spec-grid grammar
 /// (`--grid "bt_sum@b={64,128},q={1,2}"`, entries `;`-separated) and
-/// measure every point:
+/// measure every point through the work-stealing
+/// [`SweepScheduler`](crate::api::train::SweepScheduler):
 ///
-/// * default (train mode, requires matching `train_*` artifacts): build a
-///   [`TrainDriver`](crate::api::train::TrainDriver) per spec through
-///   `DriverBuilder` — all sharing **one** runtime `Session`, so repeated
-///   shapes compile once — run each through the shared `run_loop` with a
-///   `BenchObserver`, and report per-run throughput. `--shards K` sweeps
-///   the DDP driver instead of the monolithic trainer.
+/// * default (train mode, requires matching `train_*` artifacts): each
+///   worker thread owns one per-thread `Session` arm of a single shared
+///   session core and drives a
+///   [`TrainDriver`](crate::api::train::TrainDriver) per claimed spec
+///   through the shared `run_loop` with a `BenchObserver`. `--shards K`
+///   sweeps the DDP driver instead of the monolithic trainer.
 /// * `--host`: evaluate each spec through the host `LossExecutor` at
 ///   `--d`/`--n` — no artifacts needed; this is the CI smoke path.
 ///
+/// `--parallel K` (default 1) sets the worker-thread count in either
+/// mode. Per-spec results are bit-identical across worker counts and the
+/// output is spec-sorted, so `--parallel` changes only wall-clock.
 /// `--json <path>` writes the machine-readable grid (the
-/// `BENCH_spec_grid.json` trajectory format).
+/// `BENCH_spec_grid.json` trajectory format `decorr bench-diff` gates).
 pub fn sweep(args: &mut Args) -> Result<()> {
     let grid = args.str_or("grid", "bt_sum@b={64,128},q={1,2}");
     // `--host` is a switch, but the greedy CLI parser takes a following
@@ -825,108 +831,148 @@ pub fn sweep(args: &mut Args) -> Result<()> {
              did you mean `--host --json {swallowed}`?)"
         ),
     };
+    let parallel = args.get_or("parallel", 1usize)?;
     let json = args.flag("json");
     // Only the active mode's flags are consumed, so an inapplicable flag
     // (e.g. `--shards` with `--host`) fails `args.finish()` instead of
     // being silently ignored.
-    let (d, n, budget) = if host {
-        (
-            args.get_or("d", 256usize)?,
-            args.get_or("n", 128usize)?,
-            args.get_or("budget", super::stats::smoke_budget(0.2))?,
-        )
+    let mode = if host {
+        SweepMode::Host {
+            d: args.get_or("d", 256usize)?,
+            n: args.get_or("n", 128usize)?,
+            budget: args.get_or("budget", super::stats::smoke_budget(0.2))?,
+        }
     } else {
-        (0, 0, 0.0)
-    };
-    let (preset, epochs, steps_per_epoch, seed, shards) = if host {
-        (String::new(), 0, 0, 0, 0)
-    } else {
-        (
-            args.str_or("preset", "small"),
-            args.get_or("epochs", 1usize)?,
-            args.get_or("steps-per-epoch", 4usize)?,
-            args.get_or("seed", 17u64)?,
-            args.get_or("shards", 0usize)?,
-        )
+        let mut base = TrainConfig::preset(&args.str_or("preset", "small"))?;
+        base.epochs = args.get_or("epochs", 1usize)?;
+        base.steps_per_epoch = args.get_or("steps-per-epoch", 4usize)?;
+        base.seed = args.get_or("seed", 17u64)?;
+        base.out_dir = String::new();
+        base.log_every = usize::MAX;
+        // Single-threaded loader: multi-worker loaders may deliver
+        // batches out of index order, which would break the advertised
+        // bit-identical-at-any-K contract for reasons unrelated to the
+        // scheduler (see data::loader).
+        base.loader_workers = 1;
+        SweepMode::Train {
+            base,
+            shards: args.get_or("shards", 0usize)?,
+        }
     };
     args.finish()?;
 
     let plan = SweepPlan::parse(&grid)?;
-    println!("sweep grid '{grid}' -> {} specs", plan.len());
+    println!(
+        "sweep grid '{grid}' -> {} specs over {} worker(s)",
+        plan.len(),
+        parallel.clamp(1, plan.len())
+    );
+    let outcome = SweepScheduler::new(plan, mode).workers(parallel).run()?;
 
-    let mut table = Table::new(&["spec", "backend", "median (ms)", "throughput", "value"]);
-    let mut reports: Vec<TrainReport> = Vec::new();
-    if host {
-        // Host-kernel sweep: every grid point through the spec-derived
-        // HostExecutor on random views — the artifact-free smoke path.
-        let mut rng = Rng::new(0x53EE9 ^ d as u64);
-        let a = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
-        let b = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
-        for spec in plan.specs() {
-            let mut exec = spec
-                .host_executor(d)
-                .with_context(|| format!("host executor for '{spec}' at d={d}"))?;
-            let stats = bench_for(budget, 1, || exec.evaluate(&a, &b).unwrap());
-            let out = exec.evaluate(&a, &b)?;
-            table.row(vec![
-                spec.to_string(),
-                "host".into(),
-                format!("{:.3}", stats.median_ms()),
-                format!("{:.1} eval/s", 1.0 / stats.median),
-                format!("{:.4}", out.total),
-            ]);
-        }
-    } else {
-        // Train-driver sweep: one shared Session threaded across every
-        // driver, observers capturing throughput.
-        let mut session: Option<Session> = None;
-        for spec in plan.specs() {
-            let mut cfg = TrainConfig::preset(&preset)?;
-            cfg.spec = *spec;
-            cfg.epochs = epochs;
-            cfg.steps_per_epoch = steps_per_epoch;
-            cfg.seed = seed;
-            cfg.out_dir = String::new();
-            cfg.log_every = usize::MAX;
-            println!("== {spec} ==");
-            let mut builder = DriverBuilder::new(cfg);
-            if let Some(s) = session.take() {
-                builder = builder.session(s);
-            }
-            if shards > 0 {
-                builder = builder.ddp(shards);
-            }
-            let mut driver = builder.build()?;
-            let mut bench = BenchObserver::new();
-            let report = run_driver(driver.as_mut(), &mut [&mut bench])?;
-            table.row(vec![
-                report.spec.clone(),
-                if shards > 0 {
-                    format!("ddp x{shards}")
-                } else {
-                    "train".into()
-                },
-                bench
-                    .median_step_ms()
-                    .map(|ms| format!("{ms:.1}"))
-                    .unwrap_or_else(|| "-".into()),
-                format!("{:.2} steps/s", report.steps_per_sec),
-                format!("{:.4}", report.final_loss),
-            ]);
-            reports.push(report);
-            session = Some(driver.into_session());
-        }
+    println!(
+        "\nspec-grid sweep ({} points, {} workers, {:.2}s wall):",
+        outcome.results.len(),
+        outcome.workers,
+        outcome.wall_seconds
+    );
+    outcome.table().print();
+    if let Some(stats) = &outcome.session_stats {
+        println!(
+            "session: {} arms, {} compiles ({:.0} ms), {} cache hits, \
+             {} source reads for {} requests",
+            stats.arms,
+            stats.compiles,
+            stats.compile_ms,
+            stats.hits,
+            stats.source_reads,
+            stats.source_requests
+        );
     }
-
-    println!("\nspec-grid sweep ({} points):", plan.len());
-    table.print();
     if let Some(path) = json {
-        if reports.is_empty() {
-            crate::bench_harness::table::write_json(&path, &[("spec_grid", &table)])?;
-        } else {
-            TrainReport::write_json(&path, "spec_grid", &reports)?;
-        }
+        outcome.write_json(&path)?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------ bench-diff
+
+/// `decorr bench-diff --baseline <dir> --current <dir>` — the
+/// bench-trajectory regression gate. Compares the `BENCH_*.json`
+/// documents in two directories (a previous push's uploaded artifact vs
+/// this push's fresh output), matching rows by their string identity
+/// cells and classifying numeric columns by name (throughputs
+/// higher-is-better, times lower-is-better; losses and counters are
+/// never gated).
+///
+/// Movements past half of `--max-regress` (default 20%) are printed as
+/// warnings; movements past the full threshold fail the command —
+/// `--warn-only` downgrades failures to warnings (useful while a
+/// trajectory format settles). A missing baseline directory or file is a
+/// clean skip, so the first run after a format change stays green.
+pub fn bench_diff(args: &mut Args) -> Result<()> {
+    let baseline = args.str_required("baseline")?;
+    let current = args.str_or("current", ".");
+    let max_regress = args.get_or("max-regress", 20.0f64)?;
+    let warn_only = args.switch("warn-only");
+    let default_files: Vec<String> = [
+        "BENCH_fft_host.json",
+        "BENCH_regularizer_host.json",
+        "BENCH_session_compile.json",
+        "BENCH_spec_grid.json",
+        "BENCH_spec_grid_parallel.json",
+    ]
+    .map(String::from)
+    .to_vec();
+    let files: Vec<String> = match args.flag("files") {
+        Some(list) => list
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| s.trim().to_string())
+            .collect(),
+        None => default_files,
+    };
+    args.finish()?;
+
+    let baseline_dir = std::path::Path::new(&baseline);
+    if !baseline_dir.is_dir() {
+        println!("bench-diff: no baseline directory at '{baseline}' — nothing to compare");
+        return Ok(());
+    }
+    let report = super::diff::diff_dirs(baseline_dir, std::path::Path::new(&current), &files)?;
+    for note in &report.skipped {
+        println!("bench-diff: skipped {note}");
+    }
+    let warn_at = max_regress * 0.5;
+    println!(
+        "\nbench-trajectory diff ({} comparisons; showing movement beyond {:.0}%):",
+        report.comparisons.len(),
+        warn_at
+    );
+    report.table(warn_at, max_regress).print();
+    let warnings = report.regressions(warn_at).len();
+    let failures = report.regressions(max_regress);
+    println!(
+        "bench-diff: {} comparisons, {} warnings (>{:.0}%), {} regressions (>{:.0}%)",
+        report.comparisons.len(),
+        warnings,
+        warn_at,
+        failures.len(),
+        max_regress
+    );
+    if !failures.is_empty() {
+        let worst = failures
+            .iter()
+            .map(|r| format!("{}/{} {} {:+.1}%", r.file, r.key, r.column, r.regress_pct))
+            .collect::<Vec<_>>()
+            .join("; ");
+        if warn_only {
+            println!("bench-diff: WARN-ONLY — would have failed on: {worst}");
+        } else {
+            anyhow::bail!(
+                "bench trajectory regressed beyond {max_regress:.0}%: {worst}"
+            );
+        }
     }
     Ok(())
 }

@@ -1,0 +1,489 @@
+//! Bench-trajectory comparison: the engine behind `decorr bench-diff`.
+//!
+//! CI uploads `BENCH_*.json` per push (fft host, regularizer host,
+//! session compile, spec grid) but for four PRs never *compared* them —
+//! the paper's wall-clock story (`O(nd log d)` FFT regularizers vs the
+//! `O(nd²)` baselines) was recorded but unguarded. This module diffs two
+//! directories of `BENCH_*.json` documents and classifies per-row metric
+//! movement so the CI gate can warn on, then fail, throughput
+//! regressions.
+//!
+//! The comparison is format-driven, not file-driven: every document is
+//! the `table::write_json` shape (`{"<table>": {"columns": [...],
+//! "rows": [{col: val}]}}`), rows are matched across sides by their
+//! string-valued cells (spec labels, contender names, dimensions printed
+//! as labels), and numeric columns are classified by name —
+//! `*_per_sec`/`throughput`/`speedup` are higher-is-better,
+//! `ms`/`seconds`/`time`/`wall` are lower-is-better, anything else
+//! (loss values, counters) is ignored. A format change between pushes
+//! therefore degrades to "no matching rows", never to a false failure.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::table::Table;
+
+/// Which way a metric column improves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Smaller is better (times).
+    LowerBetter,
+    /// Larger is better (throughputs).
+    HigherBetter,
+}
+
+/// Classify a column name as a perf metric, or `None` for identity and
+/// value columns that must not gate (labels, losses, counters).
+pub fn metric_direction(column: &str) -> Option<Direction> {
+    let c = column.to_ascii_lowercase();
+    if c.contains("per_sec")
+        || c.contains("per sec")
+        || c.contains("throughput")
+        || c.contains("speedup")
+    {
+        return Some(Direction::HigherBetter);
+    }
+    if c.contains("ms")
+        || c.contains("µs")
+        || c.contains("(us)")
+        || c.contains("seconds")
+        || c.contains("time")
+        || c.contains("wall")
+    {
+        return Some(Direction::LowerBetter);
+    }
+    None
+}
+
+/// Absolute floor below which a time column is scheduler noise, in the
+/// column's own unit (10 µs): regressions where both sides sit under the
+/// floor never gate.
+fn noise_floor(column: &str) -> f64 {
+    let c = column.to_ascii_lowercase();
+    if c.contains("µs") || c.contains("(us)") {
+        10.0
+    } else if c.contains("ms") {
+        0.01
+    } else if c.contains("seconds") || c.contains("wall") || c.contains("time") {
+        1e-5
+    } else {
+        0.0
+    }
+}
+
+/// One numeric comparison between a baseline row and its current match.
+#[derive(Clone, Debug)]
+pub struct RowDiff {
+    /// File the rows came from.
+    pub file: String,
+    /// Table key inside the file.
+    pub table: String,
+    /// Identity key the rows matched on (joined string cells).
+    pub key: String,
+    /// Metric column compared.
+    pub column: String,
+    /// Improvement direction of the column.
+    pub direction: Direction,
+    /// Baseline value.
+    pub baseline: f64,
+    /// Current value.
+    pub current: f64,
+    /// Regression percentage: positive = current is worse, by this much
+    /// relative to baseline (direction-aware).
+    pub regress_pct: f64,
+}
+
+/// Everything one `bench-diff` invocation observed.
+#[derive(Debug, Default)]
+pub struct DiffReport {
+    /// All numeric comparisons made, in file/table/row order.
+    pub comparisons: Vec<RowDiff>,
+    /// Human-readable notes about skipped inputs (missing files, tables
+    /// present on one side only, unmatched rows).
+    pub skipped: Vec<String>,
+}
+
+impl DiffReport {
+    /// Comparisons whose regression exceeds `threshold_pct`.
+    pub fn regressions(&self, threshold_pct: f64) -> Vec<&RowDiff> {
+        self.comparisons
+            .iter()
+            .filter(|c| c.regress_pct > threshold_pct)
+            .collect()
+    }
+
+    /// Render the comparisons whose |movement| exceeds `show_pct` (plus
+    /// every regression beyond `threshold_pct`) as a table.
+    pub fn table(&self, show_pct: f64, threshold_pct: f64) -> Table {
+        let mut table = Table::new(&[
+            "file", "table", "row", "metric", "baseline", "current", "delta", "verdict",
+        ]);
+        for c in &self.comparisons {
+            let shown = c.regress_pct.abs() >= show_pct || c.regress_pct > threshold_pct;
+            if !shown {
+                continue;
+            }
+            let verdict = if c.regress_pct > threshold_pct {
+                "REGRESSION"
+            } else if c.regress_pct > show_pct {
+                "warning"
+            } else {
+                "improved"
+            };
+            table.row(vec![
+                c.file.clone(),
+                c.table.clone(),
+                c.key.clone(),
+                c.column.clone(),
+                format!("{:.4}", c.baseline),
+                format!("{:.4}", c.current),
+                format!("{:+.1}%", c.regress_pct),
+                verdict.to_string(),
+            ]);
+        }
+        table
+    }
+}
+
+/// Compare every `files` entry present in both directories, accumulating
+/// into one [`DiffReport`]. Files missing on either side are noted in
+/// `skipped`, never errors — the first push after a format change has no
+/// comparable baseline and must stay green.
+pub fn diff_dirs(baseline_dir: &Path, current_dir: &Path, files: &[String]) -> Result<DiffReport> {
+    let mut report = DiffReport::default();
+    for file in files {
+        let base_path = baseline_dir.join(file);
+        let cur_path = current_dir.join(file);
+        if !base_path.is_file() || !cur_path.is_file() {
+            report.skipped.push(format!(
+                "{file}: missing on {} side",
+                if base_path.is_file() { "current" } else { "baseline" }
+            ));
+            continue;
+        }
+        let base = parse_doc(&base_path)?;
+        let cur = parse_doc(&cur_path)?;
+        diff_docs(file, &base, &cur, &mut report);
+    }
+    Ok(report)
+}
+
+fn parse_doc(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    json::parse(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Diff two parsed `BENCH_*.json` documents into `report`.
+pub fn diff_docs(file: &str, baseline: &Json, current: &Json, report: &mut DiffReport) {
+    let (Json::Obj(base_tables), Json::Obj(cur_tables)) = (baseline, current) else {
+        report
+            .skipped
+            .push(format!("{file}: not a table document on one side"));
+        return;
+    };
+    for (table_name, cur_table) in cur_tables {
+        let Some(base_table) = base_tables.get(table_name) else {
+            report
+                .skipped
+                .push(format!("{file}/{table_name}: new table (no baseline)"));
+            continue;
+        };
+        diff_tables(file, table_name, base_table, cur_table, report);
+    }
+}
+
+/// Whether a numeric column is part of a row's *identity* rather than a
+/// measurement: the shape dimensions tables sweep over (`d`, `n`, `b`,
+/// `q`) and structural counts. Loss values and iteration counts (which
+/// vary run to run in adaptive benches) are deliberately excluded — a
+/// moving metric in the key would orphan rows instead of gating them.
+fn is_identity_column(name: &str) -> bool {
+    if metric_direction(name).is_some() {
+        return false;
+    }
+    let n = name.to_ascii_lowercase();
+    n.len() <= 2 || matches!(n.as_str(), "shards" | "workers" | "block" | "dim")
+}
+
+/// The identity key of a row: its string-valued cells plus the numeric
+/// identity columns (see [`is_identity_column`]), in column order.
+fn row_key(columns: &[String], row: &Json) -> String {
+    let mut parts = Vec::new();
+    for col in columns {
+        match row.get(col) {
+            Some(Json::Str(s)) => parts.push(format!("{col}={s}")),
+            Some(Json::Num(v)) if is_identity_column(col) => {
+                parts.push(format!("{col}={v}"));
+            }
+            _ => {}
+        }
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        parts.join(",")
+    }
+}
+
+fn table_columns(table: &Json) -> Vec<String> {
+    table
+        .get("columns")
+        .and_then(Json::as_arr)
+        .map(|cols| {
+            cols.iter()
+                .filter_map(|c| c.as_str().map(str::to_string))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn diff_tables(file: &str, table: &str, baseline: &Json, current: &Json, report: &mut DiffReport) {
+    let columns = table_columns(current);
+    let base_rows = baseline.get("rows").and_then(Json::as_arr).unwrap_or(&[]);
+    let cur_rows = current.get("rows").and_then(Json::as_arr).unwrap_or(&[]);
+    // Index baseline rows by identity key; rows without any string cell
+    // fall back to their position.
+    let base_columns = table_columns(baseline);
+    let mut base_by_key: BTreeMap<String, &Json> = BTreeMap::new();
+    for (i, row) in base_rows.iter().enumerate() {
+        let key = match row_key(&base_columns, row) {
+            k if k.is_empty() => format!("#{i}"),
+            k => k,
+        };
+        base_by_key.insert(key, row);
+    }
+    let mut matched = 0usize;
+    for (i, row) in cur_rows.iter().enumerate() {
+        let key = match row_key(&columns, row) {
+            k if k.is_empty() => format!("#{i}"),
+            k => k,
+        };
+        let Some(base_row) = base_by_key.get(&key) else {
+            continue;
+        };
+        matched += 1;
+        for col in &columns {
+            let Some(direction) = metric_direction(col) else {
+                continue;
+            };
+            let (Some(base_v), Some(cur_v)) = (
+                base_row.get(col).and_then(Json::as_f64),
+                row.get(col).and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            if !base_v.is_finite() || !cur_v.is_finite() || base_v <= 0.0 {
+                continue;
+            }
+            // Sub-noise-floor timings regress by huge percentages on
+            // nothing; skip them when both sides sit under the floor.
+            if direction == Direction::LowerBetter && base_v.max(cur_v) < noise_floor(col) {
+                continue;
+            }
+            let regress_pct = match direction {
+                Direction::LowerBetter => (cur_v - base_v) / base_v * 100.0,
+                Direction::HigherBetter => (base_v - cur_v) / base_v * 100.0,
+            };
+            report.comparisons.push(RowDiff {
+                file: file.to_string(),
+                table: table.to_string(),
+                key: key.clone(),
+                column: col.clone(),
+                direction,
+                baseline: base_v,
+                current: cur_v,
+                regress_pct,
+            });
+        }
+    }
+    if matched == 0 && !cur_rows.is_empty() {
+        report.skipped.push(format!(
+            "{file}/{table}: no rows matched the baseline (format change?)"
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_doc(spec: &str, steps_per_sec: f64, wall: f64) -> Json {
+        json::parse(&format!(
+            r#"{{"spec_grid":{{"columns":["spec","steps","final_loss","wall_seconds","steps_per_sec"],
+                "rows":[{{"spec":"{spec}","steps":8,"final_loss":1.5,
+                          "wall_seconds":{wall},"steps_per_sec":{steps_per_sec}}}]}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn column_classification() {
+        assert_eq!(metric_direction("steps_per_sec"), Some(Direction::HigherBetter));
+        assert_eq!(metric_direction("throughput"), Some(Direction::HigherBetter));
+        assert_eq!(metric_direction("speedup"), Some(Direction::HigherBetter));
+        assert_eq!(metric_direction("median (ms)"), Some(Direction::LowerBetter));
+        assert_eq!(metric_direction("wall_seconds"), Some(Direction::LowerBetter));
+        assert_eq!(metric_direction("ms/step (median)"), Some(Direction::LowerBetter));
+        assert_eq!(metric_direction("fft (µs)"), Some(Direction::LowerBetter));
+        assert!(noise_floor("fft (µs)") > noise_floor("median (ms)"));
+        assert_eq!(noise_floor("steps"), 0.0);
+        assert_eq!(metric_direction("spec"), None);
+        assert_eq!(metric_direction("final_loss"), None);
+        assert_eq!(metric_direction("steps"), None);
+        assert_eq!(metric_direction("value"), None);
+    }
+
+    #[test]
+    fn throughput_drop_is_a_regression() {
+        let base = grid_doc("bt_sum", 100.0, 1.0);
+        let cur = grid_doc("bt_sum", 70.0, 1.5);
+        let mut report = DiffReport::default();
+        diff_docs("BENCH_spec_grid.json", &base, &cur, &mut report);
+        // steps_per_sec 100 → 70 = 30% regression; wall 1.0 → 1.5 = 50%.
+        let severe = report.regressions(20.0);
+        assert_eq!(severe.len(), 2);
+        assert!(severe.iter().any(|r| r.column == "steps_per_sec"
+            && (r.regress_pct - 30.0).abs() < 1e-9));
+        assert!(report.regressions(60.0).is_empty());
+    }
+
+    #[test]
+    fn improvement_is_not_a_regression() {
+        let base = grid_doc("bt_sum", 100.0, 1.0);
+        let cur = grid_doc("bt_sum", 140.0, 0.7);
+        let mut report = DiffReport::default();
+        diff_docs("f.json", &base, &cur, &mut report);
+        assert_eq!(report.comparisons.len(), 2);
+        assert!(report.regressions(0.0).is_empty());
+        assert!(report.comparisons.iter().all(|c| c.regress_pct < 0.0));
+    }
+
+    #[test]
+    fn rows_match_on_string_identity_not_position() {
+        // Same specs, reversed row order: still compared pairwise.
+        let base = json::parse(
+            r#"{"t":{"columns":["spec","steps_per_sec"],
+                "rows":[{"spec":"a","steps_per_sec":10.0},
+                        {"spec":"b","steps_per_sec":20.0}]}}"#,
+        )
+        .unwrap();
+        let cur = json::parse(
+            r#"{"t":{"columns":["spec","steps_per_sec"],
+                "rows":[{"spec":"b","steps_per_sec":20.0},
+                        {"spec":"a","steps_per_sec":5.0}]}}"#,
+        )
+        .unwrap();
+        let mut report = DiffReport::default();
+        diff_docs("f.json", &base, &cur, &mut report);
+        assert_eq!(report.comparisons.len(), 2);
+        let a = report
+            .comparisons
+            .iter()
+            .find(|c| c.key.contains("spec=a"))
+            .unwrap();
+        assert!((a.regress_pct - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn numeric_dimension_columns_join_the_row_identity() {
+        // Same contender at two d's: rows must match per-(d, contender),
+        // not collapse onto one key.
+        let base = json::parse(
+            r#"{"rows":{"columns":["d","contender","median (ms)"],
+                "rows":[{"d":128,"contender":"R_sum fft","median (ms)":1.0},
+                        {"d":2048,"contender":"R_sum fft","median (ms)":8.0}]}}"#,
+        )
+        .unwrap();
+        let cur = json::parse(
+            r#"{"rows":{"columns":["d","contender","median (ms)"],
+                "rows":[{"d":128,"contender":"R_sum fft","median (ms)":1.0},
+                        {"d":2048,"contender":"R_sum fft","median (ms)":12.0}]}}"#,
+        )
+        .unwrap();
+        let mut report = DiffReport::default();
+        diff_docs("BENCH_regularizer_host.json", &base, &cur, &mut report);
+        assert_eq!(report.comparisons.len(), 2);
+        let slow = report
+            .comparisons
+            .iter()
+            .find(|c| c.key.contains("d=2048"))
+            .unwrap();
+        assert!((slow.regress_pct - 50.0).abs() < 1e-9);
+        let fast = report
+            .comparisons
+            .iter()
+            .find(|c| c.key.contains("d=128"))
+            .unwrap();
+        assert!(fast.regress_pct.abs() < 1e-9);
+    }
+
+    #[test]
+    fn format_changes_degrade_to_skips_not_failures() {
+        // Old-format rows (string throughput cells, different identity)
+        // simply don't match — zero comparisons, a note, no error.
+        let base = json::parse(
+            r#"{"spec_grid":{"columns":["spec","backend","throughput"],
+                "rows":[{"spec":"bt_sum","backend":"host","throughput":"422.1 eval/s"}]}}"#,
+        )
+        .unwrap();
+        let cur = grid_doc("bt_sum", 100.0, 1.0);
+        let mut report = DiffReport::default();
+        diff_docs("BENCH_spec_grid.json", &base, &cur, &mut report);
+        assert!(report.comparisons.is_empty());
+        assert_eq!(report.skipped.len(), 1);
+        assert!(report.skipped[0].contains("no rows matched"));
+    }
+
+    #[test]
+    fn tiny_ms_timings_are_noise_floored() {
+        let base = json::parse(
+            r#"{"t":{"columns":["k","median (ms)"],
+                "rows":[{"k":"fast","median (ms)":0.001}]}}"#,
+        )
+        .unwrap();
+        let cur = json::parse(
+            r#"{"t":{"columns":["k","median (ms)"],
+                "rows":[{"k":"fast","median (ms)":0.005}]}}"#,
+        )
+        .unwrap();
+        let mut report = DiffReport::default();
+        diff_docs("f.json", &base, &cur, &mut report);
+        assert!(
+            report.comparisons.is_empty(),
+            "sub-floor timings must not gate: {:?}",
+            report.comparisons
+        );
+    }
+
+    #[test]
+    fn diff_dirs_skips_missing_files() {
+        let dir = std::env::temp_dir().join(format!("decorr_diff_{}", std::process::id()));
+        let (base_dir, cur_dir) = (dir.join("base"), dir.join("cur"));
+        std::fs::create_dir_all(&base_dir).unwrap();
+        std::fs::create_dir_all(&cur_dir).unwrap();
+        std::fs::write(
+            base_dir.join("BENCH_a.json"),
+            grid_doc("bt_sum", 100.0, 1.0).to_string_compact(),
+        )
+        .unwrap();
+        std::fs::write(
+            cur_dir.join("BENCH_a.json"),
+            grid_doc("bt_sum", 90.0, 1.1).to_string_compact(),
+        )
+        .unwrap();
+        let files = vec!["BENCH_a.json".to_string(), "BENCH_b.json".to_string()];
+        let report = diff_dirs(&base_dir, &cur_dir, &files).unwrap();
+        assert_eq!(report.comparisons.len(), 2);
+        assert_eq!(report.skipped.len(), 1);
+        assert!(report.skipped[0].contains("BENCH_b.json"));
+        // 10% slip warns below a 20% gate but does not regress past it.
+        assert!(report.regressions(20.0).is_empty());
+        assert_eq!(report.regressions(5.0).len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

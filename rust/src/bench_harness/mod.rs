@@ -5,11 +5,13 @@
 
 pub mod cmd;
 pub mod contenders;
+pub mod diff;
 pub mod stats;
 pub mod table;
 pub mod workload;
 
 pub use contenders::{default_grouped_block, Contender};
+pub use diff::{diff_dirs, DiffReport};
 pub use stats::{bench, bench_for, smoke_budget, smoke_mode, BenchStats};
 pub use table::Table;
 pub use workload::{

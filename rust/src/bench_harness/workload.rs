@@ -320,6 +320,7 @@ pub fn session_stats_table(stats: &SessionStats) -> Table {
         "source reads".into(),
         format!("{}", stats.source_reads),
     ]);
+    table.row(vec!["execution arms".into(), format!("{}", stats.arms)]);
     table
 }
 

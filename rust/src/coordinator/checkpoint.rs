@@ -1,13 +1,27 @@
 //! Checkpoint I/O (format shared with `python/compile/aot.py`).
 //!
+//! Two wire versions coexist:
+//!
 //! ```text
-//! line 1: DECORRCKPT1
-//! line 2: {"tensors": [{"name", "shape", "dtype"}, ...]}      (JSON)
-//! rest:   concatenated little-endian f32 payloads in header order
+//! v1 (params only — what aot.py emits for init checkpoints):
+//!   line 1: DECORRCKPT1
+//!   line 2: {"tensors": [{"name", "shape", "dtype"}, ...]}        (JSON)
+//!   rest:   concatenated little-endian f32 payloads in header order
+//!
+//! v2 (params + optimizer state + schedule position):
+//!   line 1: DECORRCKPT2
+//!   line 2: {"tensors": [...], "opt_tensors": [...], "step": N}   (JSON)
+//!   rest:   tensor payloads, then opt-tensor payloads, header order
 //! ```
 //!
-//! Used for the jax-emitted initial parameters (`artifacts/init_*.ckpt`)
-//! and for the trainer's own checkpoints.
+//! [`Checkpoint::load`] reads both; v1 files load with empty optimizer
+//! state and `step = 0`, so every existing `artifacts/init_*.ckpt` and
+//! pre-v2 training checkpoint keeps working. [`Checkpoint::save`] emits
+//! v1 when the checkpoint is params-only (keeping byte-compatibility
+//! with the aot.py reader/writer) and v2 as soon as optimizer state or a
+//! step position is present. `DriverBuilder::resume_from` restores all
+//! three: parameters bit-identically, optimizer state (momentum) into
+//! the store, and the global step — which re-anchors the LR schedule.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -17,17 +31,76 @@ use anyhow::{bail, Context, Result};
 use crate::util::json::{self, Json};
 use crate::util::tensor::Tensor;
 
-const MAGIC: &str = "DECORRCKPT1";
+const MAGIC_V1: &str = "DECORRCKPT1";
+const MAGIC_V2: &str = "DECORRCKPT2";
 
-/// A named tensor collection (parameter snapshot).
+/// A named tensor collection: a parameter snapshot, optionally paired
+/// with the optimizer state and step position that make a resume
+/// seamless (checkpoint format v2).
 #[derive(Clone, Debug, Default)]
 pub struct Checkpoint {
-    /// (name, tensor) pairs in file order.
+    /// (name, tensor) parameter pairs in file order.
     pub tensors: Vec<(String, Tensor)>,
+    /// (name, tensor) optimizer-state pairs in file order (empty for v1
+    /// files and pure parameter snapshots).
+    pub opt_tensors: Vec<(String, Tensor)>,
+    /// Global optimizer step at save time (0 for v1 files). Resuming
+    /// restores the LR-schedule position from this.
+    pub step: usize,
+}
+
+fn tensor_specs(tensors: &[(String, Tensor)]) -> Json {
+    let mut specs = Vec::new();
+    for (name, t) in tensors {
+        specs.push(json::obj(vec![
+            ("name", Json::Str(name.clone())),
+            (
+                "shape",
+                Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect()),
+            ),
+            ("dtype", Json::Str("f32".into())),
+        ]));
+    }
+    Json::Arr(specs)
+}
+
+/// Read one header spec list's payloads from `raw` starting at `offset`.
+fn read_tensor_list(
+    specs: &[Json],
+    raw: &[u8],
+    offset: &mut usize,
+) -> Result<Vec<(String, Tensor)>> {
+    let mut tensors = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let name = spec
+            .get("name")
+            .and_then(Json::as_str)
+            .context("tensor missing name")?
+            .to_string();
+        let shape: Vec<usize> = spec
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("tensor missing shape")?
+            .iter()
+            .map(|d| d.as_usize().context("bad dim"))
+            .collect::<Result<_>>()?;
+        let count: usize = shape.iter().product();
+        let bytes = count * 4;
+        if *offset + bytes > raw.len() {
+            bail!("checkpoint truncated at tensor '{name}'");
+        }
+        let mut data = Vec::with_capacity(count);
+        for chunk in raw[*offset..*offset + bytes].chunks_exact(4) {
+            data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        *offset += bytes;
+        tensors.push((name, Tensor::from_vec(&shape, data)));
+    }
+    Ok(tensors)
 }
 
 impl Checkpoint {
-    /// Look up a tensor by name.
+    /// Look up a parameter tensor by name.
     pub fn get(&self, name: &str) -> Option<&Tensor> {
         self.tensors
             .iter()
@@ -35,32 +108,47 @@ impl Checkpoint {
             .map(|(_, t)| t)
     }
 
-    /// Total parameter count.
+    /// Look up an optimizer-state tensor by name.
+    pub fn get_opt(&self, name: &str) -> Option<&Tensor> {
+        self.opt_tensors
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+    }
+
+    /// Total parameter count (optimizer state excluded).
     pub fn num_params(&self) -> usize {
         self.tensors.iter().map(|(_, t)| t.len()).sum()
     }
 
-    /// Write to disk.
+    /// Total optimizer-state element count.
+    pub fn num_opt_params(&self) -> usize {
+        self.opt_tensors.iter().map(|(_, t)| t.len()).sum()
+    }
+
+    /// Whether this checkpoint carries resumable run state (optimizer
+    /// tensors and/or a step position) beyond the bare parameters.
+    pub fn has_run_state(&self) -> bool {
+        !self.opt_tensors.is_empty() || self.step > 0
+    }
+
+    /// Write to disk: v1 when params-only (byte-compatible with aot.py),
+    /// v2 when optimizer state or a step position is present.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let mut specs = Vec::new();
-        for (name, t) in &self.tensors {
-            specs.push(json::obj(vec![
-                ("name", Json::Str(name.clone())),
-                (
-                    "shape",
-                    Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect()),
-                ),
-                ("dtype", Json::Str("f32".into())),
-            ]));
+        let v2 = self.has_run_state();
+        let mut header_fields = vec![("tensors", tensor_specs(&self.tensors))];
+        if v2 {
+            header_fields.push(("opt_tensors", tensor_specs(&self.opt_tensors)));
+            header_fields.push(("step", Json::Num(self.step as f64)));
         }
-        let header = json::obj(vec![("tensors", Json::Arr(specs))]);
+        let header = json::obj(header_fields);
         let mut f = std::io::BufWriter::new(
             std::fs::File::create(path.as_ref())
                 .with_context(|| format!("creating {}", path.as_ref().display()))?,
         );
-        writeln!(f, "{MAGIC}")?;
+        writeln!(f, "{}", if v2 { MAGIC_V2 } else { MAGIC_V1 })?;
         writeln!(f, "{}", header.to_string_compact())?;
-        for (_, t) in &self.tensors {
+        for (_, t) in self.tensors.iter().chain(&self.opt_tensors) {
             for v in t.data() {
                 f.write_all(&v.to_le_bytes())?;
             }
@@ -68,7 +156,7 @@ impl Checkpoint {
         Ok(())
     }
 
-    /// Read from disk.
+    /// Read from disk (either format version).
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let mut raw = Vec::new();
         std::fs::File::open(path.as_ref())
@@ -78,9 +166,11 @@ impl Checkpoint {
             .iter()
             .position(|&b| b == b'\n')
             .context("missing magic line")?;
-        if &raw[..nl1] != MAGIC.as_bytes() {
-            bail!("bad checkpoint magic in {}", path.as_ref().display());
-        }
+        let v2 = match &raw[..nl1] {
+            m if m == MAGIC_V1.as_bytes() => false,
+            m if m == MAGIC_V2.as_bytes() => true,
+            _ => bail!("bad checkpoint magic in {}", path.as_ref().display()),
+        };
         let nl2 = nl1
             + 1
             + raw[nl1 + 1..]
@@ -93,36 +183,29 @@ impl Checkpoint {
             .and_then(Json::as_arr)
             .context("header missing tensors")?;
         let mut offset = nl2 + 1;
-        let mut tensors = Vec::with_capacity(specs.len());
-        for spec in specs {
-            let name = spec
-                .get("name")
-                .and_then(Json::as_str)
-                .context("tensor missing name")?
-                .to_string();
-            let shape: Vec<usize> = spec
-                .get("shape")
+        let tensors = read_tensor_list(specs, &raw, &mut offset)?;
+        let (opt_tensors, step) = if v2 {
+            let opt_specs = header
+                .get("opt_tensors")
                 .and_then(Json::as_arr)
-                .context("tensor missing shape")?
-                .iter()
-                .map(|d| d.as_usize().context("bad dim"))
-                .collect::<Result<_>>()?;
-            let count: usize = shape.iter().product();
-            let bytes = count * 4;
-            if offset + bytes > raw.len() {
-                bail!("checkpoint truncated at tensor '{name}'");
-            }
-            let mut data = Vec::with_capacity(count);
-            for chunk in raw[offset..offset + bytes].chunks_exact(4) {
-                data.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
-            }
-            offset += bytes;
-            tensors.push((name, Tensor::from_vec(&shape, data)));
-        }
+                .context("v2 header missing opt_tensors")?;
+            let opt = read_tensor_list(opt_specs, &raw, &mut offset)?;
+            let step = header
+                .get("step")
+                .and_then(Json::as_usize)
+                .context("v2 header missing step")?;
+            (opt, step)
+        } else {
+            (Vec::new(), 0)
+        };
         if offset != raw.len() {
             bail!("checkpoint has {} trailing bytes", raw.len() - offset);
         }
-        Ok(Checkpoint { tensors })
+        Ok(Checkpoint {
+            tensors,
+            opt_tensors,
+            step,
+        })
     }
 }
 
@@ -136,6 +219,18 @@ mod tests {
                 ("params.a".into(), Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.])),
                 ("params.b".into(), Tensor::from_vec(&[], vec![42.0])),
             ],
+            ..Checkpoint::default()
+        }
+    }
+
+    fn sample_v2() -> Checkpoint {
+        Checkpoint {
+            opt_tensors: vec![
+                ("opt_state.m.a".into(), Tensor::from_vec(&[2, 3], vec![0.5; 6])),
+                ("opt_state.m.b".into(), Tensor::from_vec(&[], vec![-0.25])),
+            ],
+            step: 17,
+            ..sample()
         }
     }
 
@@ -151,6 +246,53 @@ mod tests {
         assert_eq!(back.get("params.a").unwrap().data(), ck.get("params.a").unwrap().data());
         assert_eq!(back.get("params.b").unwrap().data(), &[42.0]);
         assert_eq!(back.num_params(), 7);
+        assert!(back.opt_tensors.is_empty());
+        assert_eq!(back.step, 0);
+        assert!(!back.has_run_state());
+        // Params-only checkpoints stay on the v1 wire format.
+        let raw = std::fs::read(&path).unwrap();
+        assert!(raw.starts_with(b"DECORRCKPT1\n"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v2_roundtrips_optimizer_state_and_step() {
+        let dir = std::env::temp_dir().join(format!("decorr_ckpt_v2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        let ck = sample_v2();
+        assert!(ck.has_run_state());
+        ck.save(&path).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        assert!(raw.starts_with(b"DECORRCKPT2\n"));
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 17);
+        assert_eq!(back.num_params(), 7);
+        assert_eq!(back.num_opt_params(), 7);
+        assert_eq!(
+            back.get_opt("opt_state.m.a").unwrap().data(),
+            ck.get_opt("opt_state.m.a").unwrap().data()
+        );
+        assert_eq!(back.get_opt("opt_state.m.b").unwrap().data(), &[-0.25]);
+        // Params and opt state never cross-contaminate lookups.
+        assert!(back.get("opt_state.m.a").is_none());
+        assert!(back.get_opt("params.a").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn step_only_checkpoints_use_v2() {
+        let dir = std::env::temp_dir().join(format!("decorr_ckpt_s_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        let ck = Checkpoint {
+            step: 5,
+            ..sample()
+        };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 5);
+        assert!(back.opt_tensors.is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -161,6 +303,9 @@ mod tests {
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"NOPE\n{}\n").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        // A v3 from the future is rejected, not misparsed.
+        std::fs::write(&path, b"DECORRCKPT3\n{\"tensors\":[]}\n").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -169,10 +314,16 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("decorr_ckpt_tr_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("t.ckpt");
-        sample().save(&path).unwrap();
+        sample_v2().save(&path).unwrap();
         let mut raw = std::fs::read(&path).unwrap();
         raw.truncate(raw.len() - 3);
         std::fs::write(&path, raw).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        // Trailing garbage is rejected too.
+        sample_v2().save(&path).unwrap();
+        let mut padded = std::fs::read(&path).unwrap();
+        padded.extend_from_slice(&[0, 0, 0]);
+        std::fs::write(&path, padded).unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -144,7 +144,9 @@ impl DdpTrainer {
         anyhow::ensure!(!grad_names.is_empty(), "apply artifact missing grads inputs");
 
         // Initial parameters: the jax-side init checkpoint, or the resume
-        // snapshot when one was given (optimizer state restarts at zero).
+        // snapshot when one was given. A v2 resume checkpoint restores
+        // the optimizer state and the global step (LR position) too; v1
+        // params-only files restart both at zero.
         let ckpt = match resume {
             Some(c) => c.clone(),
             None => {
@@ -153,7 +155,17 @@ impl DdpTrainer {
             }
         };
         let params = ParamStore::from_checkpoint(&ckpt, &param_specs.iter().collect::<Vec<_>>())?;
-        let opt = ParamStore::zeros(&opt_specs.iter().collect::<Vec<_>>())?;
+        let opt = if ckpt.opt_tensors.is_empty() {
+            ParamStore::zeros(&opt_specs.iter().collect::<Vec<_>>())?
+        } else {
+            let opt_ckpt = Checkpoint {
+                tensors: ckpt.opt_tensors.clone(),
+                ..Checkpoint::default()
+            };
+            ParamStore::from_checkpoint(&opt_ckpt, &opt_specs.iter().collect::<Vec<_>>())
+                .context("restoring optimizer state from the resume checkpoint")?
+        };
+        let global_step = ckpt.step;
         let grads = ParamStore::zeros(&grad_specs.iter().collect::<Vec<_>>())?;
 
         // Probe the worker artifact's manifest through the shared source
@@ -204,7 +216,7 @@ impl DdpTrainer {
             rng,
             sched,
             metrics,
-            global_step: 0,
+            global_step,
         })
     }
 
@@ -227,6 +239,18 @@ impl DdpTrainer {
     pub fn snapshot(&self) -> Result<Checkpoint> {
         self.params
             .to_checkpoint(&self.param_specs.iter().collect::<Vec<_>>())
+    }
+
+    /// Full resumable run state (checkpoint format v2): parameters plus
+    /// the leader's optimizer state and global step.
+    pub fn snapshot_state(&self) -> Result<Checkpoint> {
+        let mut ckpt = self.snapshot()?;
+        ckpt.opt_tensors = self
+            .opt
+            .to_checkpoint(&self.opt_specs.iter().collect::<Vec<_>>())?
+            .tensors;
+        ckpt.step = self.global_step;
+        Ok(ckpt)
     }
 
     /// One DDP step: broadcast params → shard grads → average → apply.
@@ -400,6 +424,10 @@ impl TrainDriver for DdpTrainer {
 
     fn snapshot(&self) -> Result<Checkpoint> {
         DdpTrainer::snapshot(self)
+    }
+
+    fn snapshot_state(&self) -> Result<Checkpoint> {
+        DdpTrainer::snapshot_state(self)
     }
 
     fn diagnose(&self, snapshot: &Checkpoint, batches: usize) -> Result<EmbeddingDiagnostics> {

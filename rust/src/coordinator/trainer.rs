@@ -228,8 +228,10 @@ impl Trainer {
 
         // Initial parameters come from the jax-side init checkpoint so the
         // device path reproduces the reference initialization exactly; a
-        // resume checkpoint replaces them (optimizer state restarts at
-        // zero — the checkpoint format carries parameters only).
+        // resume checkpoint replaces them. A v2 resume checkpoint also
+        // restores the optimizer state (momentum) and the global step —
+        // which re-anchors the LR schedule — while v1 params-only files
+        // restart both at zero, as before.
         let ckpt = match resume {
             Some(c) => c.clone(),
             None => {
@@ -240,7 +242,17 @@ impl Trainer {
         let param_specs: Vec<&TensorSpec> = manifest.inputs_with_prefix("params.");
         let opt_specs: Vec<&TensorSpec> = manifest.inputs_with_prefix("opt_state.");
         let params = ParamStore::from_checkpoint(&ckpt, &param_specs)?;
-        let opt = ParamStore::zeros(&opt_specs)?;
+        let opt = if ckpt.opt_tensors.is_empty() {
+            ParamStore::zeros(&opt_specs)?
+        } else {
+            let opt_ckpt = Checkpoint {
+                tensors: ckpt.opt_tensors.clone(),
+                ..Checkpoint::default()
+            };
+            ParamStore::from_checkpoint(&opt_ckpt, &opt_specs)
+                .context("restoring optimizer state from the resume checkpoint")?
+        };
+        let global_step = ckpt.step;
 
         let sched = LrSchedule::from_epochs(
             cfg.lr,
@@ -268,7 +280,7 @@ impl Trainer {
             rng,
             sched,
             metrics,
-            global_step: 0,
+            global_step,
         })
     }
 
@@ -298,6 +310,18 @@ impl Trainer {
     pub fn snapshot(&self) -> Result<Checkpoint> {
         let specs = self.binding.manifest().inputs_with_prefix("params.");
         self.params.to_checkpoint(&specs)
+    }
+
+    /// Full resumable run state as a host checkpoint (format v2):
+    /// parameters plus the optimizer state and the global step, so a
+    /// `--resume` from it continues momentum and the LR schedule exactly
+    /// where this run stands.
+    pub fn snapshot_state(&self) -> Result<Checkpoint> {
+        let mut ckpt = self.snapshot()?;
+        let opt_specs = self.binding.manifest().inputs_with_prefix("opt_state.");
+        ckpt.opt_tensors = self.opt.to_checkpoint(&opt_specs)?.tensors;
+        ckpt.step = self.global_step;
+        Ok(ckpt)
     }
 
     /// Table-6-style decorrelation diagnostics: project `batches` batches
@@ -406,6 +430,10 @@ impl TrainDriver for Trainer {
 
     fn snapshot(&self) -> Result<Checkpoint> {
         Trainer::snapshot(self)
+    }
+
+    fn snapshot_state(&self) -> Result<Checkpoint> {
+        Trainer::snapshot_state(self)
     }
 
     fn diagnose(&self, snapshot: &Checkpoint, batches: usize) -> Result<EmbeddingDiagnostics> {

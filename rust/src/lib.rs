@@ -55,12 +55,22 @@
 //!                       run_loop(driver, loader, observers) → TrainReport
 //!                                               │
 //!              MetricsObserver / CheckpointObserver / DiagnosticsObserver /
-//!              BenchObserver — and SweepPlan grids over one shared Session
+//!              BenchObserver     (v2 checkpoints carry optimizer state +
+//!                                 step, so --resume continues seamlessly)
+//!
+//!  SweepPlan → SweepScheduler → K workers × per-thread Session arms
+//!                                  │   (lock-free job claim + sink)
+//!                                  ▼
+//!              spec-sorted BENCH_spec_grid.json → decorr bench-diff gate
 //! ```
 //!
 //! `Trainer::run` and `DdpTrainer::run` are thin delegations to that loop
 //! with bit-identical numerics; `decorr sweep` expands `(b, q)` spec grids
-//! through it into the `BENCH_spec_grid.json` trajectory.
+//! through the work-stealing [`api::train::SweepScheduler`] — serially or
+//! across `--parallel K` worker threads, each owning one per-thread arm
+//! of a single shared runtime session, with per-spec losses bit-identical
+//! at any worker count — into the `BENCH_spec_grid.json` trajectory that
+//! `decorr bench-diff` gates against >20% throughput regressions in CI.
 //!
 //! ## Quick tour
 //!

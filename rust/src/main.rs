@@ -5,7 +5,8 @@
 //! decorr train   [--config file] [--resume ckpt] [...] SSL pretraining
 //! decorr eval    --checkpoint dir      linear evaluation of a checkpoint
 //! decorr spec    <loss-spec> [--check] inspect a parsed LossSpec's derivations
-//! decorr sweep   [--grid "bt_sum@b={64,128},q={1,2}"] spec-grid sweep
+//! decorr sweep   [--grid "bt_sum@b={64,128},q={1,2}"] [--parallel K] spec-grid sweep
+//! decorr bench-diff --baseline <dir>   bench-trajectory regression gate
 //! decorr table1|table3|table4|table6|table7   regenerate paper tables
 //! decorr fig2|fig3                     regenerate paper figures
 //! ```
@@ -38,6 +39,7 @@ fn main() -> Result<()> {
         "fig3" => decorr::bench_harness::cmd::fig3(&mut args),
         "fig5" => decorr::bench_harness::cmd::fig5(&mut args),
         "sweep" => decorr::bench_harness::cmd::sweep(&mut args),
+        "bench-diff" => decorr::bench_harness::cmd::bench_diff(&mut args),
         "session-bench" | "session" => decorr::bench_harness::cmd::session_bench(&mut args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -56,16 +58,23 @@ SUBCOMMANDS
   smoke    verify the PJRT runtime by executing an FFT-bearing HLO module
   train    SSL pretraining (--preset tiny|small|e2e, --variant bt_sum, ...;
            --variant accepts full loss specs, e.g. 'bt_sum@b=64,q=1';
-           --resume <ckpt> loads a saved snapshot before the first step)
+           --resume <ckpt> restores params — and, from v2 checkpoints,
+           the optimizer state and LR-schedule position)
   eval     linear evaluation of a saved checkpoint (--checkpoint dir)
   spec     parse a loss spec and pretty-print its derived components
            (kernel, artifact ids, labels; --check evaluates it through
            the host/device LossExecutor facade)
   sweep    expand a (b, q) spec grid (--grid \"bt_sum@b={64,128},q={1,2}\")
-           into TrainDrivers sharing one runtime session and report
-           per-spec throughput; --host measures the host LossExecutor
-           instead (no artifacts needed); --shards K sweeps the DDP
-           driver; --json path writes BENCH_spec_grid.json
+           and schedule it across --parallel K worker threads, each
+           owning one per-thread arm of a shared runtime session
+           (bit-identical per-spec losses at any K; spec-sorted output);
+           --host measures the host LossExecutor instead (no artifacts
+           needed); --shards K sweeps the DDP driver; --json path writes
+           BENCH_spec_grid.json
+  bench-diff  compare two directories of BENCH_*.json perf trajectories
+           (--baseline dir [--current dir] [--max-regress 20]
+           [--warn-only]); warns past half the threshold, fails past it
+           — the CI regression gate over the uploaded bench artifacts
   table1   accuracy comparison across loss variants      (paper Tab. 1)
   table3   transfer-learning probe                       (paper Tab. 3)
   table4   wall-clock training time, baseline vs FFT     (paper Tab. 4)

@@ -101,7 +101,10 @@ impl ParamStore {
             let lit = self.get(&spec.name)?;
             tensors.push((spec.name.clone(), tensor_from_literal(lit, &spec.shape)?));
         }
-        Ok(Checkpoint { tensors })
+        Ok(Checkpoint {
+            tensors,
+            ..Checkpoint::default()
+        })
     }
 }
 
@@ -131,6 +134,7 @@ mod tests {
                 ("params.w".into(), Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.])),
                 ("params.b".into(), Tensor::from_vec(&[2], vec![5., 6.])),
             ],
+            ..Checkpoint::default()
         };
         let specs = specs();
         let refs: Vec<&TensorSpec> = specs.iter().collect();
@@ -144,6 +148,7 @@ mod tests {
     fn shape_mismatch_rejected() {
         let ck = Checkpoint {
             tensors: vec![("params.w".into(), Tensor::zeros(&[3]))],
+            ..Checkpoint::default()
         };
         let specs = vec![TensorSpec {
             name: "params.w".into(),

@@ -144,10 +144,13 @@ struct StatsCells {
     compile_nanos: AtomicU64,
     source_requests: AtomicU64,
     source_reads: AtomicU64,
+    arms: AtomicU64,
 }
 
 /// Snapshot of the session's compile/hit/miss counters. Loads and source
-/// requests are counted process-wide across every execution arm.
+/// requests are counted process-wide across every execution arm, so a
+/// multi-worker consumer (the DDP leader, the parallel sweep scheduler)
+/// reads one aggregated view no matter how many arms were handed out.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct SessionStats {
     /// Artifact load requests (across all arms).
@@ -162,6 +165,25 @@ pub struct SessionStats {
     pub source_requests: u64,
     /// Sources actually read + parsed + hashed from disk.
     pub source_reads: u64,
+    /// Per-thread execution arms handed out by [`SharedSession::session`].
+    pub arms: u64,
+}
+
+impl SessionStats {
+    /// Counter movement since an earlier snapshot — what one phase (a
+    /// sweep, a warmup, a bench contender) contributed to the
+    /// process-wide totals.
+    pub fn delta(&self, before: &SessionStats) -> SessionStats {
+        SessionStats {
+            loads: self.loads.saturating_sub(before.loads),
+            hits: self.hits.saturating_sub(before.hits),
+            compiles: self.compiles.saturating_sub(before.compiles),
+            compile_ms: (self.compile_ms - before.compile_ms).max(0.0),
+            source_requests: self.source_requests.saturating_sub(before.source_requests),
+            source_reads: self.source_reads.saturating_sub(before.source_reads),
+            arms: self.arms.saturating_sub(before.arms),
+        }
+    }
 }
 
 impl StatsCells {
@@ -173,6 +195,7 @@ impl StatsCells {
             compile_ms: self.compile_nanos.load(Ordering::Relaxed) as f64 / 1e6,
             source_requests: self.source_requests.load(Ordering::Relaxed),
             source_reads: self.source_reads.load(Ordering::Relaxed),
+            arms: self.arms.load(Ordering::Relaxed),
         }
     }
 }
@@ -370,13 +393,46 @@ impl SharedSession {
 
     /// Create an execution arm for the *calling* thread: one fresh PJRT
     /// engine plus a compiled-artifact cache, backed by this shared core.
+    ///
+    /// This is the arm-handout point the concurrent consumers build on:
+    /// each DDP gradient worker and each parallel-sweep worker thread
+    /// calls this once, owns the returned arm for its lifetime (PJRT
+    /// handles are thread-affine), and every arm's loads/compiles land in
+    /// the one process-wide [`SessionStats`] — `stats().arms` counts how
+    /// many arms were handed out.
     pub fn session(&self) -> Result<Session> {
         let engine = Engine::cpu(&self.core.artifact_dir)?;
+        self.core.stats.arms.fetch_add(1, Ordering::Relaxed);
         Ok(Session {
             shared: self.clone(),
             engine,
             compiled: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
         })
+    }
+
+    /// Resolve the sources of a batch of artifact names into the shared
+    /// cache (read + parse + hash, once per process) *without* touching
+    /// PJRT — the cross-arm half of a warmup. Worker threads that later
+    /// compile these names on their own arms skip straight to the
+    /// compile. Missing names are left for the eventual `load` to report
+    /// with full context; this prefetch is best-effort by design.
+    pub fn prefetch_sources(&self, names: &[String]) {
+        let mut uniq: Vec<&str> = Vec::with_capacity(names.len());
+        for n in names {
+            if !uniq.contains(&n.as_str()) {
+                uniq.push(n);
+            }
+        }
+        std::thread::scope(|scope| {
+            for chunk in uniq.chunks(uniq.len().div_ceil(STRIPES).max(1)) {
+                let shared = self.clone();
+                scope.spawn(move || {
+                    for name in chunk {
+                        let _ = shared.source(name);
+                    }
+                });
+            }
+        });
     }
 }
 
@@ -629,6 +685,66 @@ mod tests {
         assert!(shared.source("nope").is_err());
         // stats still count the request
         assert_eq!(shared.stats().source_requests, 1);
+    }
+
+    #[test]
+    fn stats_delta_subtracts_counters() {
+        let after = SessionStats {
+            loads: 10,
+            hits: 6,
+            compiles: 4,
+            compile_ms: 100.0,
+            source_requests: 12,
+            source_reads: 3,
+            arms: 2,
+        };
+        let before = SessionStats {
+            loads: 4,
+            hits: 2,
+            compiles: 2,
+            compile_ms: 40.0,
+            source_requests: 5,
+            source_reads: 1,
+            arms: 1,
+        };
+        let d = after.delta(&before);
+        assert_eq!(d.loads, 6);
+        assert_eq!(d.hits, 4);
+        assert_eq!(d.compiles, 2);
+        assert!((d.compile_ms - 60.0).abs() < 1e-9);
+        assert_eq!(d.source_requests, 7);
+        assert_eq!(d.source_reads, 2);
+        assert_eq!(d.arms, 1);
+        // A stale "before" from a later snapshot clamps instead of wrapping.
+        let clamped = before.delta(&after);
+        assert_eq!(clamped.loads, 0);
+        assert!(clamped.compile_ms.abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefetch_sources_reads_each_name_once() {
+        let dir = std::env::temp_dir().join(format!("decorr_prefetch_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in ["p0", "p1"] {
+            std::fs::write(dir.join(format!("{name}.hlo.txt")), format!("HloModule {name}\n"))
+                .unwrap();
+            std::fs::write(
+                dir.join(format!("{name}.manifest.json")),
+                format!(r#"{{"name":"{name}","inputs":[],"outputs":[]}}"#),
+            )
+            .unwrap();
+        }
+        let shared = SharedSession::open(&dir);
+        let names: Vec<String> = vec!["p0".into(), "p1".into(), "p0".into()];
+        shared.prefetch_sources(&names);
+        let stats = shared.stats();
+        // The repeated "p0" dedupes before any disk read happens.
+        assert_eq!(stats.source_reads, 2);
+        // A later real source() for the prefetched names is a cache hit.
+        shared.source("p0").unwrap();
+        shared.source("p1").unwrap();
+        assert_eq!(shared.stats().source_reads, 2);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -212,6 +212,70 @@ fn save_resume_restores_params_and_loss_level() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// v2 checkpoints round-trip the full run state: a resume from
+/// `snapshot_state` restores parameters AND optimizer state bit-wise and
+/// continues the global step (so the LR schedule picks up where the
+/// saved run stood, instead of re-warming up).
+#[test]
+fn v2_resume_restores_optimizer_state_and_schedule_position() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = tiny_cfg();
+    cfg.epochs = 2;
+    cfg.steps_per_epoch = 5;
+    let mut trainer = DriverBuilder::new(cfg.clone()).build_trainer().unwrap();
+    trainer.run().unwrap();
+    let state = trainer.snapshot_state().unwrap();
+    assert_eq!(state.step, cfg.total_steps());
+    assert!(state.has_run_state());
+    assert!(state.num_opt_params() > 0, "tiny preset has optimizer state");
+    let dir = std::env::temp_dir().join(format!("decorr_resume_v2_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("state.ckpt");
+    state.save(&path).unwrap();
+
+    let mut resumed = DriverBuilder::new(cfg.clone())
+        .session(trainer.into_session())
+        .resume_from(path.to_str().unwrap())
+        .build_trainer()
+        .unwrap();
+    // Bit-identical restoration of params AND optimizer state.
+    let restored = resumed.snapshot_state().unwrap();
+    for (name, t) in &state.tensors {
+        assert_eq!(restored.get(name).unwrap().data(), t.data(), "{name}");
+    }
+    for (name, t) in &state.opt_tensors {
+        assert_eq!(restored.get_opt(name).unwrap().data(), t.data(), "opt {name}");
+    }
+    // The global step continues: the next step is numbered total_steps,
+    // and its LR matches the schedule at that position — not warmup.
+    let dataset = ShapeWorld::new(ShapeWorldConfig {
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    let aug = Augmenter::new(AugmentConfig::default());
+    let batch = make_batch(
+        &dataset,
+        &aug,
+        resumed.batch_size().unwrap(),
+        cfg.epoch_size,
+        cfg.seed,
+        0,
+    );
+    let m = resumed.step(&batch, 0).unwrap();
+    assert_eq!(m.step, cfg.total_steps(), "global step must continue");
+    let sched = LrSchedule::from_epochs(cfg.lr, cfg.warmup_epochs, cfg.epochs, cfg.steps_per_epoch);
+    assert!(
+        (m.lr - sched.lr(cfg.total_steps())).abs() < 1e-7,
+        "resumed LR {} should sit at the schedule position, got schedule {}",
+        m.lr,
+        sched.lr(cfg.total_steps())
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// The builder surfaces spec/artifact disagreements as errors.
 #[test]
 fn builder_rejects_unresolvable_specs() {

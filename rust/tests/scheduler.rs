@@ -1,0 +1,236 @@
+//! Determinism and concurrency tests for the parallel sweep scheduler.
+//!
+//! The scheduler's core promise: `--parallel K` changes wall-clock only.
+//! Per-spec losses are bit-identical between serial and parallel sweeps,
+//! the merged output is spec-sorted (so `BENCH_spec_grid.json` rows are
+//! identical modulo timing fields), and in train mode every worker arm
+//! of the one `SharedSession` compiles each distinct shape it executes
+//! exactly once. Host-mode tests need no artifacts; the session stress
+//! test generates synthetic HLO and skips without a PJRT client; the
+//! train-mode tests gate on `make artifacts` like `tests/driver.rs`.
+
+use decorr::api::train::{SweepMode, SweepPlan, SweepScheduler};
+use decorr::api::LossSpec;
+use decorr::bench_harness::SynthArtifacts;
+use decorr::config::TrainConfig;
+use decorr::runtime::SharedSession;
+use decorr::util::json::{self, Json};
+
+fn host_mode(d: usize, n: usize) -> SweepMode {
+    SweepMode::Host { d, n, budget: 0.0 }
+}
+
+/// Parallel and serial host sweeps agree bit-for-bit on every spec value
+/// and produce identically ordered grids.
+#[test]
+fn parallel_and_serial_host_sweeps_are_bit_identical() {
+    let plan = SweepPlan::parse("bt_sum@b={64,128},q={1,2};vic_sum;bt_off").unwrap();
+    assert_eq!(plan.len(), 6);
+    let serial = SweepScheduler::new(plan.clone(), host_mode(256, 32))
+        .workers(1)
+        .run()
+        .unwrap();
+    let parallel = SweepScheduler::new(plan, host_mode(256, 32))
+        .workers(4)
+        .run()
+        .unwrap();
+    assert_eq!(serial.results.len(), parallel.results.len());
+    for (s, p) in serial.results.iter().zip(&parallel.results) {
+        assert_eq!(s.report.spec, p.report.spec, "grid order diverged");
+        assert_eq!(
+            s.report.final_loss.to_bits(),
+            p.report.final_loss.to_bits(),
+            "host loss bits diverged for {}",
+            s.report.spec
+        );
+        assert_eq!(
+            s.report.initial_loss.to_bits(),
+            p.report.initial_loss.to_bits()
+        );
+    }
+    // Worker attribution stays within the requested pool. (Whether the
+    // jobs actually spread across workers depends on OS scheduling — a
+    // fast grid can drain before every thread spawns — so spread itself
+    // is not asserted.)
+    assert!(parallel.results.iter().all(|r| r.worker < 4));
+}
+
+/// The emitted `BENCH_spec_grid.json` rows are identical between serial
+/// and parallel sweeps, modulo the timing fields.
+#[test]
+fn spec_grid_json_is_identical_modulo_timing() {
+    let plan = SweepPlan::parse("bt_sum@b={32,64};vic_sum@q=2").unwrap();
+    let dir = std::env::temp_dir().join(format!("decorr_sched_json_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let serial_path = dir.join("serial.json");
+    let parallel_path = dir.join("parallel.json");
+    SweepScheduler::new(plan.clone(), host_mode(128, 16))
+        .workers(1)
+        .run()
+        .unwrap()
+        .write_json(serial_path.to_str().unwrap())
+        .unwrap();
+    SweepScheduler::new(plan, host_mode(128, 16))
+        .workers(3)
+        .run()
+        .unwrap()
+        .write_json(parallel_path.to_str().unwrap())
+        .unwrap();
+
+    let parse = |p: &std::path::Path| -> Vec<Json> {
+        let doc = json::parse(&std::fs::read_to_string(p).unwrap()).unwrap();
+        doc.get("spec_grid")
+            .and_then(|t| t.get("rows"))
+            .and_then(Json::as_arr)
+            .unwrap()
+            .to_vec()
+    };
+    let (serial_rows, parallel_rows) = (parse(&serial_path), parse(&parallel_path));
+    assert_eq!(serial_rows.len(), 3);
+    assert_eq!(serial_rows.len(), parallel_rows.len());
+    // Timing fields (steps, wall_seconds, steps_per_sec) vary run to
+    // run; identity and value fields must match exactly.
+    for (s, p) in serial_rows.iter().zip(&parallel_rows) {
+        for field in ["spec", "initial_loss", "final_loss"] {
+            assert_eq!(s.get(field), p.get(field), "field '{field}' diverged");
+        }
+    }
+    // Rows are spec-sorted.
+    let specs: Vec<&str> = serial_rows
+        .iter()
+        .map(|r| r.get("spec").and_then(Json::as_str).unwrap())
+        .collect();
+    let mut sorted = specs.clone();
+    sorted.sort();
+    assert_eq!(specs, sorted);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Concurrent-arm stress: K worker threads each take their own `Session`
+/// arm over one `SharedSession` and load every name (3 distinct shapes,
+/// each also aliased). Sources are read once process-wide; every arm
+/// compiles each distinct shape exactly once (aliases are hits); the
+/// cross-arm stats aggregate all of it.
+#[test]
+fn concurrent_arms_compile_each_shape_once_per_arm() {
+    const WORKERS: usize = 4;
+    let synth = SynthArtifacts::generate("sched_arms", &[(4, 16), (4, 32), (4, 64)]).unwrap();
+    for name in &synth.names {
+        synth.alias(name, &format!("{name}_alias")).unwrap();
+    }
+    let mut all_names: Vec<String> = synth.names.clone();
+    all_names.extend(synth.names.iter().map(|n| format!("{n}_alias")));
+    let shared = SharedSession::open(&synth.dir);
+    // Probe once for PJRT availability before spawning the fleet.
+    match shared.session() {
+        Ok(_) => {}
+        Err(e) => {
+            eprintln!("skipping: no PJRT client ({e:#})");
+            return;
+        }
+    }
+    let probe_arms = shared.stats().arms;
+    assert_eq!(probe_arms, 1);
+
+    std::thread::scope(|scope| {
+        for _ in 0..WORKERS {
+            let shared = shared.clone();
+            let names = all_names.clone();
+            scope.spawn(move || {
+                let arm = shared.session().expect("arm creation");
+                for name in &names {
+                    arm.load(name).expect("load");
+                }
+                // A second pass over everything is all hits on this arm.
+                for name in &names {
+                    arm.load(name).expect("reload");
+                }
+            });
+        }
+    });
+
+    let stats = shared.stats();
+    assert_eq!(stats.arms, 1 + WORKERS as u64, "probe + one arm per worker");
+    // 3 distinct shapes × one compile per worker arm; everything else
+    // (aliases + second pass) answered from the per-arm caches.
+    assert_eq!(stats.compiles, (WORKERS * 3) as u64);
+    assert_eq!(stats.loads, (WORKERS * 12) as u64);
+    assert_eq!(stats.hits, stats.loads - stats.compiles);
+    // The 6 files were read + parsed + hashed exactly once process-wide.
+    assert_eq!(stats.source_reads, 6);
+}
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/train_bt_sum_tiny.manifest.json").exists()
+}
+
+fn present_tiny_specs() -> Vec<LossSpec> {
+    ["bt_sum", "bt_off", "vic_sum", "vic_off"]
+        .iter()
+        .filter_map(|s| LossSpec::parse(s).ok())
+        .filter(|spec| {
+            std::path::Path::new(&format!(
+                "artifacts/{}.manifest.json",
+                spec.train_artifact("tiny")
+            ))
+            .exists()
+        })
+        .collect()
+}
+
+/// Train-mode determinism: a parallel sweep over per-thread session arms
+/// reproduces the serial sweep's per-spec losses bit-for-bit.
+#[test]
+fn parallel_train_sweep_matches_serial_bitwise() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let specs = present_tiny_specs();
+    if specs.len() < 2 {
+        eprintln!("skipping: need >= 2 tiny train artifacts");
+        return;
+    }
+    let grid = specs
+        .iter()
+        .map(|s| s.to_string())
+        .collect::<Vec<_>>()
+        .join(";");
+    let plan = SweepPlan::parse(&grid).unwrap();
+    let mut base = TrainConfig::preset_tiny();
+    base.epochs = 1;
+    base.steps_per_epoch = 3;
+    base.out_dir = String::new();
+    // Single-threaded loader: multi-worker loaders may deliver batches
+    // out of index order, which would break run-to-run bit-identity for
+    // reasons unrelated to the scheduler.
+    base.loader_workers = 1;
+    base.log_every = usize::MAX;
+    let mode = SweepMode::Train {
+        base,
+        shards: 0,
+    };
+    let serial = SweepScheduler::new(plan.clone(), mode.clone())
+        .workers(1)
+        .run()
+        .unwrap();
+    let parallel = SweepScheduler::new(plan, mode)
+        .workers(specs.len())
+        .run()
+        .unwrap();
+    assert_eq!(serial.results.len(), parallel.results.len());
+    for (s, p) in serial.results.iter().zip(&parallel.results) {
+        assert_eq!(s.report.spec, p.report.spec);
+        assert_eq!(
+            s.report.final_loss.to_bits(),
+            p.report.final_loss.to_bits(),
+            "train loss bits diverged for {}",
+            s.report.spec
+        );
+    }
+    // Cross-arm stats: the parallel sweep handed out one arm per worker
+    // and compiled at least one shape per distinct spec.
+    let stats = parallel.session_stats.expect("train mode reports stats");
+    assert_eq!(stats.arms, parallel.workers as u64);
+    assert!(stats.compiles >= specs.len() as u64);
+}
