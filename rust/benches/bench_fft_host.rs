@@ -124,12 +124,74 @@ fn main() {
     println!("\nplanned vs unplanned Eq.-12 accumulation ({rows} rows):");
     planned_tbl.print();
 
+    // Split-radix vs the pre-existing planned routes, same Eq.-12 loop.
+    // "generic" is the exact route RfftPlan took before the split-radix
+    // path existed (full-length complex radix-2), so its ratio to the
+    // SIMD row is the acceptance multiple this PR gates on; "bluestein"
+    // pins the forced-convolution route at the same pow2 length.
+    let mut sr_tbl = Table::new(&[
+        "d",
+        "generic radix-2 (µs/row)",
+        "bluestein (µs/row)",
+        "split-radix scalar (µs/row)",
+        "split-radix simd (µs/row)",
+        "simd speedup vs generic",
+    ]);
+    for d in [2048usize, 8192] {
+        let mut rng = Rng::new(0x5123 ^ d as u64);
+        let a_rows: Vec<Vec<f32>> = (0..rows)
+            .map(|_| (0..d).map(|_| rng.gaussian()).collect())
+            .collect();
+        let b_rows: Vec<Vec<f32>> = (0..rows)
+            .map(|_| (0..d).map(|_| rng.gaussian()).collect())
+            .collect();
+        let time_route = |plan: &fft::RfftPlan| {
+            let bins = plan.bins();
+            let mut scratch = plan.make_scratch();
+            let mut fa = vec![fft::Complex::ZERO; bins];
+            let mut fb = vec![fft::Complex::ZERO; bins];
+            let mut acc = vec![fft::Complex::ZERO; bins];
+            bench_for(smoke_budget(0.3), 1, || {
+                for v in acc.iter_mut() {
+                    *v = fft::Complex::ZERO;
+                }
+                for k in 0..rows {
+                    plan.forward_into(&a_rows[k], &mut fa, &mut scratch);
+                    plan.forward_into(&b_rows[k], &mut fb, &mut scratch);
+                    for (s, (x, y)) in acc.iter_mut().zip(fa.iter().zip(&fb)) {
+                        *s = *s + x.conj() * *y;
+                    }
+                }
+                acc[0]
+            })
+            .median
+        };
+        let t_generic = time_route(&fft::RfftPlan::generic(d));
+        let t_blu = time_route(&fft::RfftPlan::bluestein(d));
+        let t_scalar = time_route(&fft::RfftPlan::with_exec(d, fft::FftExec::Scalar));
+        let t_simd = time_route(&fft::RfftPlan::with_exec(d, fft::FftExec::Simd));
+        sr_tbl.row(vec![
+            format!("{d}"),
+            format!("{:.1}", t_generic * 1e6 / rows as f64),
+            format!("{:.1}", t_blu * 1e6 / rows as f64),
+            format!("{:.1}", t_scalar * 1e6 / rows as f64),
+            format!("{:.1}", t_simd * 1e6 / rows as f64),
+            // Plain number (no "x" suffix): numeric cells become JSON
+            // numbers, so bench-diff gates this column as higher-better
+            // instead of folding a volatile string into the row key.
+            format!("{:.2}", t_generic / t_simd),
+        ]);
+    }
+    println!("\nsplit-radix vs generic/bluestein Eq.-12 accumulation ({rows} rows):");
+    sr_tbl.print();
+
     if let Err(e) = table::write_json(
         "BENCH_fft_host.json",
         &[
             ("fft_vs_naive_dft", &table),
             ("circular_correlate", &corr),
             ("planned_vs_unplanned", &planned_tbl),
+            ("split_radix_vs_generic", &sr_tbl),
         ],
     ) {
         eprintln!("could not write BENCH_fft_host.json: {e}");

@@ -5,7 +5,10 @@
 //! plus empirical scaling exponents. Emits `BENCH_regularizer_host.json`
 //! for the perf trajectory.
 
-use decorr::bench_harness::{bench_for, default_grouped_block, smoke_budget, table, Contender, Table};
+use decorr::bench_harness::{
+    bench_for, default_grouped_block, smoke_budget, table, Contender, Table,
+};
+use decorr::fft::FftExec;
 use decorr::regularizer::kernel::default_threads;
 use decorr::regularizer::Q;
 use decorr::util::rng::Rng;
@@ -73,9 +76,40 @@ fn main() {
         fit_slope(&series_fft)
     );
 
+    // Scalar vs SIMD butterfly flavor through the whole FftSumvecKernel,
+    // single-threaded so the ratio isolates the transform substrate. The
+    // "speedup" column is the bench-diff-gated trajectory metric.
+    let mut simd_tbl = Table::new(&[
+        "d",
+        "fft r_sum scalar (ms)",
+        "fft r_sum simd (ms)",
+        "simd speedup",
+    ]);
+    for d in [1024usize, 2048, 8192] {
+        let (a, b) = rand_views(0x51D ^ d as u64, n, d);
+        let mut sc = Contender::fft_r_sum_exec(d, Q::L2, 1, FftExec::Scalar);
+        let mut sd = Contender::fft_r_sum_exec(d, Q::L2, 1, FftExec::Simd);
+        let t_sc = bench_for(smoke_budget(0.4), 1, || sc.run(&a, &b, n as f32)).median;
+        let t_sd = bench_for(smoke_budget(0.4), 1, || sd.run(&a, &b, n as f32)).median;
+        simd_tbl.row(vec![
+            format!("{d}"),
+            format!("{:.3}", t_sc * 1e3),
+            format!("{:.3}", t_sd * 1e3),
+            // Plain number (no "x" suffix) so bench-diff sees a numeric
+            // higher-better metric rather than an identity string.
+            format!("{:.2}", t_sc / t_sd),
+        ]);
+    }
+    println!("\nscalar vs SIMD split-radix kernels (n={n}, 1 thread):");
+    simd_tbl.print();
+
     if let Err(e) = table::write_json(
         "BENCH_regularizer_host.json",
-        &[("contenders", &rows), ("summary", &summary)],
+        &[
+            ("contenders", &rows),
+            ("summary", &summary),
+            ("simd_speedup", &simd_tbl),
+        ],
     ) {
         eprintln!("could not write BENCH_regularizer_host.json: {e}");
     } else {

@@ -351,7 +351,12 @@ impl LossSpec {
     /// Derive the boxed host kernel evaluating this spec's regularizer at
     /// dimension `d`: the materialized-matrix kernel for `R_off`, the
     /// planned FFT kernel for `R_sum`, the blockwise kernel for
-    /// `R_sum^(b)` — each built with the spec's thread count.
+    /// `R_sum^(b)` — each built with the spec's thread count, which flows
+    /// into the kernels' shared sample-parallel scoped-thread pool. The
+    /// FFT kernels take the default butterfly execution flavor (SIMD
+    /// split-radix when the `simd` cargo feature is on, scalar
+    /// otherwise); benches wanting an explicit flavor use the kernels'
+    /// `with_exec` constructors directly.
     pub fn kernel(&self, d: usize) -> Result<Box<dyn DecorrelationKernel>, SpecError> {
         self.check_dims(d)?;
         let t = self.resolved_threads();

@@ -14,7 +14,8 @@
 //! [`LossSpec::contender_label`] derivation.
 
 use crate::api::{LossFamily, LossSpec, RegularizerForm, SpecError};
-use crate::regularizer::kernel::{default_threads, DecorrelationKernel};
+use crate::fft::FftExec;
+use crate::regularizer::kernel::{default_threads, DecorrelationKernel, FftSumvecKernel};
 use crate::regularizer::Q;
 use crate::util::tensor::Tensor;
 
@@ -79,6 +80,21 @@ impl Contender {
             .build()
             .unwrap_or_else(|e| unreachable!("sum spec is always valid: {e}"));
         Self::from_spec(&spec, d).unwrap_or_else(|e| panic!("fft_r_sum contender at d={d}: {e}"))
+    }
+
+    /// The spectral `R_sum` kernel pinned to an explicit butterfly
+    /// execution flavor. The label gains a `+scalar` / `+simd` suffix so
+    /// the scalar-vs-SIMD comparison lands as two separately gateable
+    /// bench-diff rows; [`Contender::fft_r_sum`] keeps the unsuffixed
+    /// feature-default flavor.
+    pub fn fft_r_sum_exec(d: usize, q: Q, threads: usize, exec: FftExec) -> Contender {
+        let mut c = Self::fft_r_sum(d, q, threads);
+        c.kernel = Box::new(FftSumvecKernel::with_exec(d, threads.max(1), exec));
+        c.label.push_str(match exec {
+            FftExec::Scalar => "+scalar",
+            FftExec::Simd => "+simd",
+        });
+        c
     }
 
     /// The grouped `R_sum^(b)` kernel (Eq. 13). `block` must divide `d`
@@ -153,6 +169,21 @@ mod tests {
         assert!((flat - gd).abs() < 1e-4 * flat.abs().max(1.0));
         let free = regularizer::r_sum_fft(&a, &b, norm, Q::L2);
         assert!((flat - free).abs() < 1e-6 * free.abs().max(1.0));
+    }
+
+    #[test]
+    fn exec_contenders_agree_and_label_distinctly() {
+        let (n, d) = (5usize, 32usize);
+        let mut rng = Rng::new(33);
+        let a = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+        let b = Tensor::from_vec(&[n, d], (0..n * d).map(|_| rng.gaussian()).collect());
+        let mut sc = Contender::fft_r_sum_exec(d, Q::L2, 1, FftExec::Scalar);
+        let mut sd = Contender::fft_r_sum_exec(d, Q::L2, 1, FftExec::Simd);
+        assert!(sc.label.ends_with("+scalar"), "{}", sc.label);
+        assert!(sd.label.ends_with("+simd"), "{}", sd.label);
+        let (v1, v2) = (sc.run(&a, &b, n as f32), sd.run(&a, &b, n as f32));
+        // Scalar and SIMD butterflies are bit-identical by construction.
+        assert_eq!(v1.to_bits(), v2.to_bits());
     }
 
     #[test]

@@ -19,6 +19,13 @@ impl Complex {
         Complex { re, im }
     }
 
+    /// Unit phasor `e^{iθ} = cos θ + i sin θ` — the twiddle-factor
+    /// constructor shared by every plan builder.
+    #[inline]
+    pub fn cis(theta: f64) -> Self {
+        Complex::new(theta.cos(), theta.sin())
+    }
+
     /// Complex conjugate.
     #[inline]
     pub fn conj(self) -> Self {
@@ -98,5 +105,13 @@ mod tests {
         assert_eq!(-a, Complex::new(-1.0, -2.0));
         assert!((a.norm_sq() - 5.0).abs() < 1e-12);
         assert!((a.abs() - 5.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cis_is_unit_phasor() {
+        let w = Complex::cis(-std::f64::consts::FRAC_PI_2);
+        assert!((w.re - 0.0).abs() < 1e-15);
+        assert!((w.im - -1.0).abs() < 1e-15);
+        assert!((Complex::cis(0.3).norm_sq() - 1.0).abs() < 1e-15);
     }
 }

@@ -8,23 +8,51 @@
 //! embeddings, and (c) serve as the `O(d log d)` contender in the host
 //! complexity benchmarks (Appendix C / Table 7).
 //!
-//! We implement an iterative radix-2 Cooley–Tukey transform with a
-//! Bluestein fallback for non-power-of-two lengths, plus the real-input
-//! helpers `rfft`/`irfft` matching `numpy.fft.rfft` conventions.
+//! ## Execution paths
+//!
+//! Real-input transforms ([`RfftPlan`], and the `rfft`/`irfft` free
+//! functions through it) route one of two ways:
+//!
+//! * **Split-radix real path** — power-of-two `d ≥ 2`. One *half-length*
+//!   Stockham complex FFT (mixed radix-4/radix-2, autosorted, split
+//!   re/im layout, no bit-reversal pass) plus an `O(d)` Hermitian
+//!   untangling pass. Butterfly stages run in a selectable [`FftExec`]
+//!   flavor: `Scalar`, or `Simd` over 4-wide `f64` lanes (the f64
+//!   analogue of an `f32x8` register — the crate's FFT is f64
+//!   throughout, so lanes hold four doubles). Both flavors are always
+//!   compiled and bit-for-bit identical; the **`simd` cargo feature only
+//!   flips the default flavor** to `Simd`, keeping stable-toolchain
+//!   builds green either way.
+//! * **Generic complex path** — every other length, and on demand via
+//!   [`RfftPlan::generic`]/[`RfftPlan::bluestein`]. A table-driven
+//!   iterative radix-2 Cooley–Tukey transform for power-of-two lengths
+//!   with a Bluestein chirp-z fallback otherwise, embedding the real
+//!   signal in a full-length complex buffer. This is the pre-split-radix
+//!   route, retained as the arbitrary-`d` fallback, the accuracy
+//!   cross-check, and the bench baseline.
+//!
+//! ## Plan reuse and threading
 //!
 //! Hot paths should use the [`plan`] module directly: [`FftPlan`] /
-//! [`RfftPlan`] precompute twiddle tables, bit-reversal schedules, and
-//! Bluestein chirp spectra once, and execute with caller-owned scratch so
-//! the per-sample loop does zero allocation and no trig. The free
-//! functions below keep the original one-call-per-transform API but route
-//! through a per-thread plan cache, so repeated same-length calls (the
+//! [`RfftPlan`] precompute twiddle tables and chirp spectra once and
+//! execute with caller-owned [`RfftScratch`], so the per-sample loop does
+//! zero allocation and no trig. Plans are immutable and `Sync` — share
+//! one `&RfftPlan` across worker threads, give each worker its own
+//! scratch, and feed each worker a row block through
+//! [`RfftPlan::execute_many`]; that is exactly how the decorrelation
+//! kernels' sample-parallel accumulation is built. The free functions
+//! below keep the original one-call-per-transform API but route through
+//! a per-thread plan cache (LRU-bounded to
+//! [`plan::PLAN_CACHE_CAP`] lengths), so repeated same-length calls (the
 //! old per-call Bluestein allocation hotspot) are amortized too.
 
 mod complex;
 pub mod plan;
+mod real;
+mod simd;
 
 pub use complex::Complex;
-pub use plan::{FftPlan, RfftPlan, RfftScratch};
+pub use plan::{FftExec, FftPlan, RfftPlan, RfftScratch};
 
 /// Forward DFT, in place, radix-2 iterative Cooley–Tukey.
 /// Panics unless `x.len()` is a power of two (use [`fft`] for general n).

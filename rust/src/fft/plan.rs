@@ -8,66 +8,132 @@
 //! `Σ_k conj(F(a_k)) ∘ F(b_k)`, where the same length-`d` transform runs
 //! `2n` times per batch.
 //!
+//! ## The two execution paths
+//!
+//! * **Split-radix real path** (power-of-two `n ≥ 2`): [`RfftPlan`]
+//!   routes through [`super::real::RealPow2`] — one half-length Stockham
+//!   complex FFT (mixed radix-4/radix-2, autosorted, split re/im
+//!   layout) plus an `O(n)` untangling pass. Butterfly stages run in
+//!   either [`FftExec::Scalar`] or [`FftExec::Simd`] flavor; the two are
+//!   bit-for-bit identical (see the `simd` module docs), and the default
+//!   flavor follows the `simd` cargo feature.
+//! * **Generic complex path** (everything else, and the explicit
+//!   [`RfftPlan::generic`] / [`RfftPlan::bluestein`] constructors):
+//!   [`FftPlan`] runs a table-driven iterative radix-2 transform for
+//!   power-of-two lengths and Bluestein's chirp-z algorithm otherwise,
+//!   embedding real input in a full-length complex buffer. This is the
+//!   pre-split-radix route, kept both as the arbitrary-`n` fallback and
+//!   as the bench baseline the split-radix speedup is measured against.
+//!
 //! A [`FftPlan`] precomputes everything that depends only on the length:
 //!
 //! * per-stage twiddle tables for the radix-2 butterflies,
 //! * the bit-reversal swap schedule,
-//! * for non-power-of-two lengths, the Bluestein chirp `exp(-iπk²/n)` and
-//!   the forward spectrum of the chirp kernel (the convolution multiplier).
+//! * for Bluestein lengths, the chirp `exp(-iπk²/n)` and the forward
+//!   spectrum of the chirp kernel (the convolution multiplier).
 //!
 //! [`RfftPlan`] layers the real-input (`rfft`/`irfft`) conventions on top
 //! and pairs with a caller-owned [`RfftScratch`] arena, so steady-state
 //! transforms do **zero allocation and no trigonometry**.
 //!
-//! ## Plan-reuse contract
+//! ## Plan-reuse + threading contract
 //!
 //! A plan is immutable after construction and `Sync`: many threads may
 //! execute transforms through a shared `&FftPlan`/`&RfftPlan`
 //! simultaneously, each with its **own** scratch (scratch is the only
 //! mutable state, and it is caller-owned). Build the plan once per batch
 //! (or cache it), build one scratch per worker thread, then run the hot
-//! loop allocation-free. The legacy free functions route through a
-//! per-thread plan cache ([`with_plan`] / [`with_rplan`]) so callers that
-//! don't manage plans still amortize table construction across calls.
+//! loop allocation-free. [`RfftPlan::execute_many`] batches whole row
+//! blocks of a sample matrix through one plan/scratch pair — this is the
+//! unit the decorrelation kernels hand to each worker of their shared
+//! sample-parallel thread pool. The legacy free functions route through
+//! a per-thread plan cache ([`with_plan`] / [`with_rplan`]) that is
+//! LRU-bounded to [`PLAN_CACHE_CAP`] distinct lengths, so callers that
+//! don't manage plans still amortize table construction across calls
+//! without unbounded growth under sweeps over many `d`.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 
+use super::real::{RealPow2, RealScratch};
 use super::Complex;
+
+/// Butterfly execution flavor for the split-radix real path.
+///
+/// `Scalar` and `Simd` perform identical IEEE-754 operations in the same
+/// order, so outputs are bit-for-bit equal; `Simd` groups independent
+/// butterflies into 4-wide `f64` lanes that LLVM lowers to packed
+/// vector arithmetic. The `Default` flavor follows the `simd` cargo
+/// feature (`Simd` when enabled, `Scalar` otherwise); both flavors are
+/// always compiled, so benches and tests can compare them in one binary.
+/// The generic complex path ignores the flavor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FftExec {
+    /// One butterfly at a time.
+    Scalar,
+    /// 4-wide `f64` lanes over the Stockham stride loop.
+    Simd,
+}
+
+impl Default for FftExec {
+    fn default() -> FftExec {
+        if cfg!(feature = "simd") {
+            FftExec::Simd
+        } else {
+            FftExec::Scalar
+        }
+    }
+}
 
 /// A precomputed plan for forward/inverse DFTs of one fixed length.
 ///
 /// Power-of-two lengths run a table-driven iterative radix-2
-/// Cooley–Tukey transform in place; other lengths run Bluestein's
-/// chirp-z algorithm through a power-of-two convolution whose chirp and
-/// kernel spectrum are precomputed here.
+/// Cooley–Tukey transform in place; other lengths (and any length under
+/// [`FftPlan::new_bluestein`]) run Bluestein's chirp-z algorithm through
+/// a power-of-two convolution whose chirp and kernel spectrum are
+/// precomputed here.
 #[derive(Clone, Debug)]
 pub struct FftPlan {
     /// Transform length.
     n: usize,
-    /// Power-of-two working length (`n` itself when `n` is a power of
-    /// two, otherwise the Bluestein convolution length `≥ 2n-1`).
+    /// Power-of-two working length (`n` itself on the direct radix-2
+    /// route, otherwise the Bluestein convolution length `≥ 2n-1`).
     m: usize,
     /// Bit-reversal swap pairs `(i, j)` with `i < j` for length `m`.
     swaps: Vec<(u32, u32)>,
     /// Per-stage butterfly twiddles for length `m`, concatenated; the
     /// stage with half-length `h` starts at offset `h - 1`.
     twiddles: Vec<Complex>,
-    /// Bluestein chirp `exp(-iπk²/n)`, length `n` (empty when pow2).
+    /// Bluestein chirp `exp(-iπk²/n)`, length `n` (empty on the direct
+    /// radix-2 route — emptiness selects the route).
     chirp: Vec<Complex>,
-    /// Forward spectrum of the Bluestein kernel, length `m` (empty when
-    /// pow2).
+    /// Forward spectrum of the Bluestein kernel, length `m` (empty on
+    /// the direct route).
     kernel_spec: Vec<Complex>,
 }
 
 impl FftPlan {
-    /// Build a plan for length-`n` transforms.
+    /// Build a plan for length-`n` transforms: direct radix-2 when `n`
+    /// is a power of two, Bluestein otherwise.
     pub fn new(n: usize) -> FftPlan {
+        Self::build(n, false)
+    }
+
+    /// Build a plan that runs Bluestein's algorithm even when `n` is a
+    /// power of two. Exists so the accuracy proptests and benches can
+    /// compare split-radix, direct radix-2, and Bluestein at the *same*
+    /// length; the normal constructors never take this route for pow2.
+    pub fn new_bluestein(n: usize) -> FftPlan {
+        Self::build(n, true)
+    }
+
+    fn build(n: usize, force_bluestein: bool) -> FftPlan {
         assert!(n >= 1, "FftPlan requires n >= 1");
-        let m = if n.is_power_of_two() {
-            n
-        } else {
+        let bluestein = force_bluestein || !n.is_power_of_two();
+        let m = if bluestein {
             (2 * n - 1).next_power_of_two()
+        } else {
+            n
         };
         let mut swaps = Vec::new();
         if m > 1 {
@@ -85,8 +151,7 @@ impl FftPlan {
             // Stage with butterfly span 2·half uses w^i = exp(-iπ·i/half).
             let ang = -std::f64::consts::PI / half as f64;
             for i in 0..half {
-                let a = ang * i as f64;
-                twiddles.push(Complex::new(a.cos(), a.sin()));
+                twiddles.push(Complex::cis(ang * i as f64));
             }
             half <<= 1;
         }
@@ -98,13 +163,12 @@ impl FftPlan {
             chirp: Vec::new(),
             kernel_spec: Vec::new(),
         };
-        if !n.is_power_of_two() {
+        if bluestein {
             let mut chirp = Vec::with_capacity(n);
             for k in 0..n {
                 // k² mod 2n avoids precision loss for large k.
                 let k2 = (k as u64 * k as u64) % (2 * n as u64);
-                let ang = -std::f64::consts::PI * k2 as f64 / n as f64;
-                chirp.push(Complex::new(ang.cos(), ang.sin()));
+                chirp.push(Complex::cis(-std::f64::consts::PI * k2 as f64 / n as f64));
             }
             let mut kernel = vec![Complex::ZERO; m];
             for (k, c) in chirp.iter().enumerate() {
@@ -131,10 +195,10 @@ impl FftPlan {
     }
 
     /// Required scratch length for [`forward`](Self::forward) /
-    /// [`inverse`](Self::inverse): 0 for power-of-two lengths, the
+    /// [`inverse`](Self::inverse): 0 on the direct radix-2 route, the
     /// Bluestein convolution length otherwise.
     pub fn scratch_len(&self) -> usize {
-        if self.n.is_power_of_two() {
+        if self.chirp.is_empty() {
             0
         } else {
             self.m
@@ -150,7 +214,7 @@ impl FftPlan {
     /// [`scratch_len`](Self::scratch_len).
     pub fn forward(&self, x: &mut [Complex], scratch: &mut [Complex]) {
         assert_eq!(x.len(), self.n, "plan length mismatch");
-        if self.n.is_power_of_two() {
+        if self.chirp.is_empty() {
             self.pow2_forward(x);
         } else {
             self.bluestein_forward(x, scratch);
@@ -225,33 +289,83 @@ impl FftPlan {
     }
 }
 
-/// Scratch arena for [`RfftPlan`]: the full complex buffer plus the
-/// Bluestein convolution buffer. One per worker thread; reused across
-/// every transform of the batch.
+/// Scratch arena for [`RfftPlan`]: the split-complex ping-pong arrays on
+/// the split-radix route, or the full complex buffer plus Bluestein
+/// convolution buffer on the generic route. One per worker thread;
+/// reused across every transform of the batch.
 #[derive(Clone, Debug)]
 pub struct RfftScratch {
     full: Vec<Complex>,
     blu: Vec<Complex>,
+    real: Option<RealScratch>,
+}
+
+/// Which engine a [`RfftPlan`] routes through.
+#[derive(Clone, Debug)]
+enum Route {
+    /// Half-length Stockham split-radix real path (pow2 `n ≥ 2`).
+    SplitRadix(RealPow2),
+    /// Full-length complex radix-2 / Bluestein path.
+    Generic(FftPlan),
 }
 
 /// A plan for real-input transforms in the `numpy.fft.rfft`/`irfft`
-/// conventions (`n/2 + 1` non-redundant bins), built on [`FftPlan`].
+/// conventions (`n/2 + 1` non-redundant bins).
+///
+/// Power-of-two lengths `≥ 2` take the split-radix real path with a
+/// selectable [`FftExec`] flavor; other lengths fall back to the generic
+/// complex [`FftPlan`]. See the module docs for the routing and
+/// threading contract.
 #[derive(Clone, Debug)]
 pub struct RfftPlan {
-    plan: FftPlan,
+    n: usize,
+    exec: FftExec,
+    route: Route,
 }
 
 impl RfftPlan {
-    /// Build a plan for length-`n` real transforms.
+    /// Build a plan for length-`n` real transforms with the default
+    /// execution flavor (follows the `simd` cargo feature).
     pub fn new(n: usize) -> RfftPlan {
+        Self::with_exec(n, FftExec::default())
+    }
+
+    /// Build a plan with an explicit execution flavor. The flavor only
+    /// affects the split-radix route; generic-route plans ignore it.
+    pub fn with_exec(n: usize, exec: FftExec) -> RfftPlan {
+        let route = if n >= 2 && n.is_power_of_two() {
+            Route::SplitRadix(RealPow2::new(n))
+        } else {
+            Route::Generic(FftPlan::new(n))
+        };
+        RfftPlan { n, exec, route }
+    }
+
+    /// Force the generic complex route (radix-2 for pow2 `n`, Bluestein
+    /// otherwise) — the exact pre-split-radix execution path. Used as
+    /// the bench baseline and accuracy cross-check.
+    pub fn generic(n: usize) -> RfftPlan {
         RfftPlan {
-            plan: FftPlan::new(n),
+            n,
+            exec: FftExec::Scalar,
+            route: Route::Generic(FftPlan::new(n)),
+        }
+    }
+
+    /// Force Bluestein's algorithm even for power-of-two `n` — the
+    /// third accuracy/bench contender alongside split-radix and direct
+    /// radix-2.
+    pub fn bluestein(n: usize) -> RfftPlan {
+        RfftPlan {
+            n,
+            exec: FftExec::Scalar,
+            route: Route::Generic(FftPlan::new_bluestein(n)),
         }
     }
 
     /// Signal length.
     pub fn len(&self) -> usize {
-        self.plan.n
+        self.n
     }
 
     /// Always false — plans exist only for `n ≥ 1`.
@@ -261,49 +375,151 @@ impl RfftPlan {
 
     /// Number of non-redundant spectrum bins, `n/2 + 1`.
     pub fn bins(&self) -> usize {
-        self.plan.n / 2 + 1
+        self.n / 2 + 1
+    }
+
+    /// The execution flavor split-radix butterflies run with.
+    pub fn exec(&self) -> FftExec {
+        self.exec
+    }
+
+    /// Which route this plan took: `"split-radix"` or `"generic"`.
+    pub fn path(&self) -> &'static str {
+        match self.route {
+            Route::SplitRadix(_) => "split-radix",
+            Route::Generic(_) => "generic",
+        }
     }
 
     /// Allocate a scratch arena sized for this plan.
     pub fn make_scratch(&self) -> RfftScratch {
-        RfftScratch {
-            full: vec![Complex::ZERO; self.plan.n],
-            blu: self.plan.make_scratch(),
+        match &self.route {
+            Route::SplitRadix(real) => RfftScratch {
+                full: Vec::new(),
+                blu: Vec::new(),
+                real: Some(real.make_scratch()),
+            },
+            Route::Generic(plan) => RfftScratch {
+                full: vec![Complex::ZERO; self.n],
+                blu: plan.make_scratch(),
+                real: None,
+            },
         }
     }
 
     /// Forward real transform of `x` into `out` (`bins()` long).
     /// Allocation-free given a reused scratch.
     pub fn forward_into(&self, x: &[f32], out: &mut [Complex], s: &mut RfftScratch) {
-        let n = self.plan.n;
-        assert_eq!(x.len(), n, "rfft input length mismatch");
-        assert_eq!(out.len(), self.bins(), "rfft output length mismatch");
-        for (slot, &v) in s.full.iter_mut().zip(x) {
-            *slot = Complex::new(v as f64, 0.0);
+        match &self.route {
+            Route::SplitRadix(real) => {
+                let rs = s.real.as_mut().expect("scratch built for this plan");
+                real.forward_into(self.exec, x, out, rs);
+            }
+            Route::Generic(plan) => {
+                let n = self.n;
+                assert_eq!(x.len(), n, "rfft input length mismatch");
+                assert_eq!(out.len(), self.bins(), "rfft output length mismatch");
+                for (slot, &v) in s.full.iter_mut().zip(x) {
+                    *slot = Complex::new(v as f64, 0.0);
+                }
+                plan.forward(&mut s.full, &mut s.blu);
+                out.copy_from_slice(&s.full[..out.len()]);
+            }
         }
-        self.plan.forward(&mut s.full, &mut s.blu);
-        out.copy_from_slice(&s.full[..out.len()]);
     }
 
     /// Inverse real transform of a `bins()`-long spectrum into the
     /// length-`n` real signal `out`. Allocation-free given a reused
     /// scratch.
     pub fn inverse_into(&self, spec: &[Complex], out: &mut [f32], s: &mut RfftScratch) {
-        let n = self.plan.n;
-        assert_eq!(spec.len(), self.bins(), "irfft spectrum length mismatch");
-        assert_eq!(out.len(), n, "irfft output length mismatch");
-        s.full[..spec.len()].copy_from_slice(spec);
-        for k in spec.len()..n {
-            s.full[k] = spec[n - k].conj();
+        match &self.route {
+            Route::SplitRadix(real) => {
+                let rs = s.real.as_mut().expect("scratch built for this plan");
+                real.inverse_into(self.exec, spec, out, rs);
+            }
+            Route::Generic(plan) => {
+                let n = self.n;
+                assert_eq!(spec.len(), self.bins(), "irfft spectrum length mismatch");
+                assert_eq!(out.len(), n, "irfft output length mismatch");
+                s.full[..spec.len()].copy_from_slice(spec);
+                for k in spec.len()..n {
+                    s.full[k] = spec[n - k].conj();
+                }
+                plan.inverse(&mut s.full, &mut s.blu);
+                for (o, v) in out.iter_mut().zip(&s.full) {
+                    *o = v.re as f32;
+                }
+            }
         }
-        self.plan.inverse(&mut s.full, &mut s.blu);
-        for (o, v) in out.iter_mut().zip(&s.full) {
-            *o = v.re as f32;
+    }
+
+    /// Batched forward transform over a strided sample matrix: `data`
+    /// holds `data.len() / n` consecutive length-`n` rows (row-major,
+    /// stride `n`), and `out` receives the corresponding spectra at row
+    /// stride [`bins()`](Self::bins). One plan/scratch pair serves the
+    /// whole block, so this is the unit of work the sample-parallel
+    /// kernels hand to each worker thread.
+    pub fn execute_many(&self, data: &[f32], out: &mut [Complex], s: &mut RfftScratch) {
+        let n = self.n;
+        let b = self.bins();
+        assert_eq!(data.len() % n, 0, "execute_many input not a row multiple");
+        let rows = data.len() / n;
+        assert_eq!(out.len(), rows * b, "execute_many output length mismatch");
+        for r in 0..rows {
+            self.forward_into(&data[r * n..(r + 1) * n], &mut out[r * b..(r + 1) * b], s);
         }
     }
 }
 
 // ------------------------------------------------------ per-thread cache
+
+/// Max distinct lengths each per-thread legacy cache retains. Sweeps
+/// over many `d` touch each length in long runs, so a small cap with
+/// LRU eviction keeps the working set while bounding memory (Bluestein
+/// plans hold `O(m)` tables each).
+pub const PLAN_CACHE_CAP: usize = 16;
+
+struct LruSlot<V> {
+    value: V,
+    tick: u64,
+}
+
+/// Tiny LRU map keyed by transform length. `PLAN_CACHE_CAP` is small
+/// enough that eviction scans the map instead of keeping an order list.
+struct LruCache<V> {
+    map: HashMap<usize, LruSlot<V>>,
+    tick: u64,
+}
+
+impl<V> LruCache<V> {
+    fn new() -> LruCache<V> {
+        LruCache {
+            map: HashMap::new(),
+            tick: 0,
+        }
+    }
+
+    fn get_or_insert_with(&mut self, n: usize, make: impl FnOnce() -> V) -> &mut V {
+        self.tick += 1;
+        let tick = self.tick;
+        if !self.map.contains_key(&n) && self.map.len() >= PLAN_CACHE_CAP {
+            if let Some(oldest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, slot)| slot.tick)
+                .map(|(k, _)| *k)
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        let slot = self
+            .map
+            .entry(n)
+            .or_insert_with(|| LruSlot { value: make(), tick });
+        slot.tick = tick;
+        &mut slot.value
+    }
+}
 
 struct CachedPlan {
     plan: FftPlan,
@@ -316,21 +532,22 @@ struct CachedRplan {
 }
 
 thread_local! {
-    static CPLANS: RefCell<HashMap<usize, CachedPlan>> = RefCell::new(HashMap::new());
-    static RPLANS: RefCell<HashMap<usize, CachedRplan>> = RefCell::new(HashMap::new());
+    static CPLANS: RefCell<LruCache<CachedPlan>> = RefCell::new(LruCache::new());
+    static RPLANS: RefCell<LruCache<CachedRplan>> = RefCell::new(LruCache::new());
 }
 
 /// Run `f` with this thread's cached complex plan (and its scratch) for
 /// length `n`, building and caching one on first use. This is what makes
 /// the legacy free functions (`fft::fft`, `fft::ifft`, ...) amortized:
 /// repeated calls at the same length reuse tables and Bluestein spectra
-/// instead of recomputing them per call.
+/// instead of recomputing them per call. The cache holds at most
+/// [`PLAN_CACHE_CAP`] lengths per thread, evicting least-recently-used.
 ///
 /// `f` must not recursively call back into the plan cache.
 pub fn with_plan<R>(n: usize, f: impl FnOnce(&FftPlan, &mut [Complex]) -> R) -> R {
     CPLANS.with(|cell| {
-        let mut map = cell.borrow_mut();
-        let entry = map.entry(n).or_insert_with(|| {
+        let mut cache = cell.borrow_mut();
+        let entry = cache.get_or_insert_with(n, || {
             let plan = FftPlan::new(n);
             let scratch = plan.make_scratch();
             CachedPlan { plan, scratch }
@@ -343,8 +560,8 @@ pub fn with_plan<R>(n: usize, f: impl FnOnce(&FftPlan, &mut [Complex]) -> R) -> 
 /// scratch) for length `n`. Same contract as [`with_plan`].
 pub fn with_rplan<R>(n: usize, f: impl FnOnce(&RfftPlan, &mut RfftScratch) -> R) -> R {
     RPLANS.with(|cell| {
-        let mut map = cell.borrow_mut();
-        let entry = map.entry(n).or_insert_with(|| {
+        let mut cache = cell.borrow_mut();
+        let entry = cache.get_or_insert_with(n, || {
             let plan = RfftPlan::new(n);
             let scratch = plan.make_scratch();
             CachedRplan { plan, scratch }
@@ -406,6 +623,24 @@ mod tests {
     }
 
     #[test]
+    fn forced_bluestein_matches_radix2_at_pow2_lengths() {
+        let mut rng = Rng::new(16);
+        for n in [2usize, 8, 64, 256] {
+            let x = randc(&mut rng, n);
+            let blu = FftPlan::new_bluestein(n);
+            assert!(blu.scratch_len() >= 2 * n - 1, "forced route must convolve");
+            let mut bscratch = blu.make_scratch();
+            let mut via_blu = x.clone();
+            blu.forward(&mut via_blu, &mut bscratch);
+            let direct = FftPlan::new(n);
+            let mut dscratch = direct.make_scratch();
+            let mut via_direct = x.clone();
+            direct.forward(&mut via_direct, &mut dscratch);
+            assert_close(&via_blu, &via_direct, 1e-8 * n as f64 + 1e-9);
+        }
+    }
+
+    #[test]
     fn planned_inverse_roundtrips() {
         let mut rng = Rng::new(13);
         for n in [2usize, 7, 16, 100] {
@@ -422,8 +657,16 @@ mod tests {
     #[test]
     fn rfft_plan_roundtrips_and_scratch_is_reusable() {
         let mut rng = Rng::new(14);
-        for n in [2usize, 8, 12, 64, 129] {
+        for n in [1usize, 2, 8, 12, 64, 129] {
             let plan = RfftPlan::new(n);
+            assert_eq!(
+                plan.path(),
+                if n >= 2 && n.is_power_of_two() {
+                    "split-radix"
+                } else {
+                    "generic"
+                }
+            );
             let mut scratch = plan.make_scratch();
             let mut spec = vec![Complex::ZERO; plan.bins()];
             let mut back = vec![0.0f32; n];
@@ -435,6 +678,56 @@ mod tests {
                 for (a, b) in x.iter().zip(&back) {
                     assert!((a - b).abs() < 1e-4, "n={n}: {a} vs {b}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn split_radix_generic_and_bluestein_routes_agree() {
+        let mut rng = Rng::new(17);
+        for n in [2usize, 8, 32, 256] {
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+            let mut specs = Vec::new();
+            for (plan, label) in [
+                (RfftPlan::with_exec(n, FftExec::Scalar), "split-scalar"),
+                (RfftPlan::with_exec(n, FftExec::Simd), "split-simd"),
+                (RfftPlan::generic(n), "generic"),
+                (RfftPlan::bluestein(n), "bluestein"),
+            ] {
+                assert_eq!(plan.bins(), n / 2 + 1);
+                let mut scratch = plan.make_scratch();
+                let mut spec = vec![Complex::ZERO; plan.bins()];
+                plan.forward_into(&x, &mut spec, &mut scratch);
+                specs.push((label, spec));
+            }
+            let (_, ref reference) = specs[0];
+            for (label, spec) in &specs[1..] {
+                for (k, (a, b)) in reference.iter().zip(spec).enumerate() {
+                    let tol = 1e-8 * n as f64 + 1e-9;
+                    assert!(
+                        (a.re - b.re).abs() < tol && (a.im - b.im).abs() < tol,
+                        "n={n} route={label} bin {k}: {a:?} vs {b:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn execute_many_matches_per_row_forward() {
+        let mut rng = Rng::new(18);
+        for n in [8usize, 12, 64] {
+            let rows = 5;
+            let data: Vec<f32> = (0..rows * n).map(|_| rng.gaussian()).collect();
+            let plan = RfftPlan::new(n);
+            let b = plan.bins();
+            let mut scratch = plan.make_scratch();
+            let mut batched = vec![Complex::ZERO; rows * b];
+            plan.execute_many(&data, &mut batched, &mut scratch);
+            for r in 0..rows {
+                let mut one = vec![Complex::ZERO; b];
+                plan.forward_into(&data[r * n..(r + 1) * n], &mut one, &mut scratch);
+                assert_close(&batched[r * b..(r + 1) * b], &one, 1e-12);
             }
         }
     }
@@ -456,5 +749,36 @@ mod tests {
             with_plan(n, |p, s| p.forward(&mut again, s));
             assert_close(&again, &direct, 1e-15);
         }
+    }
+
+    #[test]
+    fn plan_caches_are_bounded_and_evict_lru() {
+        // Own thread => fresh thread-local caches regardless of what
+        // other tests on this thread have already populated.
+        std::thread::spawn(|| {
+            let has = |n: usize| CPLANS.with(|c| c.borrow().map.contains_key(&n));
+            for n in 1..=PLAN_CACHE_CAP + 4 {
+                with_plan(n, |_, _| ());
+                with_rplan(n, |_, _| ());
+            }
+            assert_eq!(CPLANS.with(|c| c.borrow().map.len()), PLAN_CACHE_CAP);
+            assert_eq!(RPLANS.with(|c| c.borrow().map.len()), PLAN_CACHE_CAP);
+            // The first four lengths were least recently used => evicted.
+            for n in 1..=4 {
+                assert!(!has(n), "n={n} should have been evicted");
+            }
+            for n in 5..=PLAN_CACHE_CAP + 4 {
+                assert!(has(n), "n={n} should have survived");
+            }
+            // Touching an entry refreshes it: the next eviction takes the
+            // new oldest (6), not the freshly touched 5.
+            with_plan(5, |_, _| ());
+            with_plan(9999, |_, _| ());
+            assert!(has(5));
+            assert!(!has(6));
+            assert!(has(9999));
+        })
+        .join()
+        .unwrap();
     }
 }

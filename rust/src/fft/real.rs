@@ -1,0 +1,432 @@
+//! Split-radix real-input FFT for power-of-two lengths.
+//!
+//! This is the fast path behind [`super::RfftPlan`]: a real transform of
+//! even length `n` computed as one *half-length* complex FFT plus an
+//! `O(n)` untangling pass, instead of embedding the real signal in a
+//! full-length complex transform the way the generic plan does. Two
+//! ideas carry the speedup:
+//!
+//! 1. **Real packing.** The even/odd samples are packed into one complex
+//!    sequence `z[j] = x[2j] + i·x[2j+1]` of length `m = n/2`. With
+//!    `Z = FFT_m(z)`, Hermitian symmetry of real-input spectra recovers
+//!    the even/odd sub-spectra `E[k] = (Z[k] + conj(Z[m−k]))/2`,
+//!    `O[k] = (Z[k] − conj(Z[m−k]))/(2i)`, and the output bins are
+//!    `X[k] = E[k] + e^{−2πik/n}·O[k]` — half the FFT work of the
+//!    complex embedding.
+//! 2. **Stockham autosort, mixed radix-4/radix-2.** The half-length
+//!    complex FFT is a decimation-in-frequency Stockham transform over
+//!    split re/im arrays: no bit-reversal pass, ping-pong buffers, and a
+//!    natural-order result. Radix-4 butterflies do the bulk of the work
+//!    (one radix-2 stage finishes odd powers of two), and because the
+//!    inner loop runs over the stride index `q` with the twiddle held
+//!    fixed, the butterflies vectorize directly over [`F64x4`] lanes —
+//!    contiguous loads/stores, broadcast twiddles.
+//!
+//! Execution flavor ([`FftExec`]) is chosen per call: `Scalar` and
+//! `Simd` perform the identical IEEE-754 operations in the same order
+//! (the lane type never introduces FMA contraction), so their outputs
+//! are bit-for-bit equal — pinned by the proptests.
+
+use super::plan::FftExec;
+use super::simd::{F64x4, LANES};
+use super::Complex;
+
+/// Ping-pong split-complex work arrays for one [`RealPow2`] transform.
+/// All four live in the caller's scratch so steady-state transforms
+/// allocate nothing.
+#[derive(Clone, Debug)]
+pub(crate) struct RealScratch {
+    pub are: Vec<f64>,
+    pub aim: Vec<f64>,
+    pub bre: Vec<f64>,
+    pub bim: Vec<f64>,
+}
+
+/// One Stockham stage of the half-length complex FFT: radix 4 (or the
+/// final radix-2 when the stage count is odd), with its per-butterfly
+/// twiddles `w^p`, `w^{2p}`, `w^{3p}` precomputed.
+#[derive(Clone, Debug)]
+struct Stage {
+    radix: u8,
+    /// Sub-transform length on entry to this stage.
+    nn: usize,
+    /// Stride on entry to this stage (`s · nn` is the full length).
+    s: usize,
+    w1: Vec<Complex>,
+    w2: Vec<Complex>,
+    w3: Vec<Complex>,
+}
+
+impl Stage {
+    fn apply(&self, exec: FftExec, sre: &[f64], sim: &[f64], dre: &mut [f64], dim: &mut [f64]) {
+        if self.radix == 2 {
+            self.radix2(exec, sre, sim, dre, dim);
+        } else {
+            self.radix4(exec, sre, sim, dre, dim);
+        }
+    }
+
+    /// Radix-4 DIF butterfly block. For each butterfly index `p` and
+    /// stride slot `q`, with quarters `a,b,c,d` of the sub-transform and
+    /// `w = e^{−2πi/nn}`:
+    ///
+    /// ```text
+    /// y[4p+0] =        (a+c) + (b+d)
+    /// y[4p+1] = w^p  ·((a−c) − i(b−d))
+    /// y[4p+2] = w^2p ·((a+c) − (b+d))
+    /// y[4p+3] = w^3p ·((a−c) + i(b−d))
+    /// ```
+    fn radix4(&self, exec: FftExec, sre: &[f64], sim: &[f64], dre: &mut [f64], dim: &mut [f64]) {
+        let q4 = self.nn / 4;
+        let s = self.s;
+        let sm = s * q4;
+        for p in 0..q4 {
+            let w1 = self.w1[p];
+            let w2 = self.w2[p];
+            let w3 = self.w3[p];
+            let ia = s * p;
+            let io = 4 * s * p;
+            let mut q = 0;
+            if exec == FftExec::Simd {
+                let (w1r, w1i) = (F64x4::splat(w1.re), F64x4::splat(w1.im));
+                let (w2r, w2i) = (F64x4::splat(w2.re), F64x4::splat(w2.im));
+                let (w3r, w3i) = (F64x4::splat(w3.re), F64x4::splat(w3.im));
+                while q + LANES <= s {
+                    let ar = F64x4::load(&sre[ia + q..]);
+                    let ai = F64x4::load(&sim[ia + q..]);
+                    let br = F64x4::load(&sre[ia + sm + q..]);
+                    let bi = F64x4::load(&sim[ia + sm + q..]);
+                    let cr = F64x4::load(&sre[ia + 2 * sm + q..]);
+                    let ci = F64x4::load(&sim[ia + 2 * sm + q..]);
+                    let dr = F64x4::load(&sre[ia + 3 * sm + q..]);
+                    let di = F64x4::load(&sim[ia + 3 * sm + q..]);
+                    let apc_re = ar + cr;
+                    let apc_im = ai + ci;
+                    let amc_re = ar - cr;
+                    let amc_im = ai - ci;
+                    let bpd_re = br + dr;
+                    let bpd_im = bi + di;
+                    let bmd_re = br - dr;
+                    let bmd_im = bi - di;
+                    (apc_re + bpd_re).store(&mut dre[io + q..]);
+                    (apc_im + bpd_im).store(&mut dim[io + q..]);
+                    let t1r = amc_re + bmd_im;
+                    let t1i = amc_im - bmd_re;
+                    let t2r = apc_re - bpd_re;
+                    let t2i = apc_im - bpd_im;
+                    let t3r = amc_re - bmd_im;
+                    let t3i = amc_im + bmd_re;
+                    (t1r * w1r - t1i * w1i).store(&mut dre[io + s + q..]);
+                    (t1r * w1i + t1i * w1r).store(&mut dim[io + s + q..]);
+                    (t2r * w2r - t2i * w2i).store(&mut dre[io + 2 * s + q..]);
+                    (t2r * w2i + t2i * w2r).store(&mut dim[io + 2 * s + q..]);
+                    (t3r * w3r - t3i * w3i).store(&mut dre[io + 3 * s + q..]);
+                    (t3r * w3i + t3i * w3r).store(&mut dim[io + 3 * s + q..]);
+                    q += LANES;
+                }
+            }
+            while q < s {
+                let ar = sre[ia + q];
+                let ai = sim[ia + q];
+                let br = sre[ia + sm + q];
+                let bi = sim[ia + sm + q];
+                let cr = sre[ia + 2 * sm + q];
+                let ci = sim[ia + 2 * sm + q];
+                let dr = sre[ia + 3 * sm + q];
+                let di = sim[ia + 3 * sm + q];
+                let apc_re = ar + cr;
+                let apc_im = ai + ci;
+                let amc_re = ar - cr;
+                let amc_im = ai - ci;
+                let bpd_re = br + dr;
+                let bpd_im = bi + di;
+                let bmd_re = br - dr;
+                let bmd_im = bi - di;
+                dre[io + q] = apc_re + bpd_re;
+                dim[io + q] = apc_im + bpd_im;
+                let t1r = amc_re + bmd_im;
+                let t1i = amc_im - bmd_re;
+                let t2r = apc_re - bpd_re;
+                let t2i = apc_im - bpd_im;
+                let t3r = amc_re - bmd_im;
+                let t3i = amc_im + bmd_re;
+                dre[io + s + q] = t1r * w1.re - t1i * w1.im;
+                dim[io + s + q] = t1r * w1.im + t1i * w1.re;
+                dre[io + 2 * s + q] = t2r * w2.re - t2i * w2.im;
+                dim[io + 2 * s + q] = t2r * w2.im + t2i * w2.re;
+                dre[io + 3 * s + q] = t3r * w3.re - t3i * w3.im;
+                dim[io + 3 * s + q] = t3r * w3.im + t3i * w3.re;
+                q += 1;
+            }
+        }
+    }
+
+    /// Final radix-2 stage (`nn == 2`, twiddle `w^0 = 1`).
+    fn radix2(&self, exec: FftExec, sre: &[f64], sim: &[f64], dre: &mut [f64], dim: &mut [f64]) {
+        let s = self.s;
+        let mut q = 0;
+        if exec == FftExec::Simd {
+            while q + LANES <= s {
+                let ur = F64x4::load(&sre[q..]);
+                let ui = F64x4::load(&sim[q..]);
+                let vr = F64x4::load(&sre[s + q..]);
+                let vi = F64x4::load(&sim[s + q..]);
+                (ur + vr).store(&mut dre[q..]);
+                (ui + vi).store(&mut dim[q..]);
+                (ur - vr).store(&mut dre[s + q..]);
+                (ui - vi).store(&mut dim[s + q..]);
+                q += LANES;
+            }
+        }
+        while q < s {
+            let ur = sre[q];
+            let ui = sim[q];
+            let vr = sre[s + q];
+            let vi = sim[s + q];
+            dre[q] = ur + vr;
+            dim[q] = ui + vi;
+            dre[s + q] = ur - vr;
+            dim[s + q] = ui - vi;
+            q += 1;
+        }
+    }
+}
+
+/// Split-radix real-FFT plan for one power-of-two length `n ≥ 2`.
+///
+/// Immutable after construction and `Sync`; pair with a per-worker
+/// [`RealScratch`] for allocation-free steady-state transforms.
+#[derive(Clone, Debug)]
+pub(crate) struct RealPow2 {
+    n: usize,
+    m: usize,
+    /// Untangling twiddles `rt[k] = e^{−2πik/n}`, `k = 0..m`.
+    rt: Vec<Complex>,
+    /// Stockham schedule for the length-`m` complex FFT.
+    stages: Vec<Stage>,
+}
+
+impl RealPow2 {
+    pub fn new(n: usize) -> RealPow2 {
+        assert!(
+            n >= 2 && n.is_power_of_two(),
+            "RealPow2 requires a power-of-two length >= 2"
+        );
+        let m = n / 2;
+        let rt: Vec<Complex> = (0..m)
+            .map(|k| Complex::cis(-2.0 * std::f64::consts::PI * k as f64 / n as f64))
+            .collect();
+        let mut stages = Vec::new();
+        let mut nn = m;
+        let mut s = 1;
+        while nn > 2 {
+            let q4 = nn / 4;
+            let base = -2.0 * std::f64::consts::PI / nn as f64;
+            let mut w1 = Vec::with_capacity(q4);
+            let mut w2 = Vec::with_capacity(q4);
+            let mut w3 = Vec::with_capacity(q4);
+            for p in 0..q4 {
+                let a = base * p as f64;
+                w1.push(Complex::cis(a));
+                w2.push(Complex::cis(2.0 * a));
+                w3.push(Complex::cis(3.0 * a));
+            }
+            stages.push(Stage {
+                radix: 4,
+                nn,
+                s,
+                w1,
+                w2,
+                w3,
+            });
+            nn /= 4;
+            s *= 4;
+        }
+        if nn == 2 {
+            stages.push(Stage {
+                radix: 2,
+                nn,
+                s,
+                w1: Vec::new(),
+                w2: Vec::new(),
+                w3: Vec::new(),
+            });
+        }
+        RealPow2 { n, m, rt, stages }
+    }
+
+    /// Non-redundant output bins, `n/2 + 1`.
+    pub fn bins(&self) -> usize {
+        self.m + 1
+    }
+
+    pub fn make_scratch(&self) -> RealScratch {
+        RealScratch {
+            are: vec![0.0; self.m],
+            aim: vec![0.0; self.m],
+            bre: vec![0.0; self.m],
+            bim: vec![0.0; self.m],
+        }
+    }
+
+    /// Length-`m` complex FFT of `(s.are, s.aim)` in place (result lands
+    /// back in the `a` pair; `b` is the ping-pong partner).
+    fn fft_m(&self, exec: FftExec, s: &mut RealScratch) {
+        let mut src_is_a = true;
+        for st in &self.stages {
+            if src_is_a {
+                st.apply(exec, &s.are, &s.aim, &mut s.bre, &mut s.bim);
+            } else {
+                st.apply(exec, &s.bre, &s.bim, &mut s.are, &mut s.aim);
+            }
+            src_is_a = !src_is_a;
+        }
+        if !src_is_a {
+            s.are.copy_from_slice(&s.bre);
+            s.aim.copy_from_slice(&s.bim);
+        }
+    }
+
+    /// Normalized inverse of [`fft_m`](Self::fft_m), via
+    /// `conj → forward → conj, scale 1/m`.
+    fn ifft_m(&self, exec: FftExec, s: &mut RealScratch) {
+        for v in s.aim.iter_mut() {
+            *v = -*v;
+        }
+        self.fft_m(exec, s);
+        let inv = 1.0 / self.m as f64;
+        for v in s.are.iter_mut() {
+            *v *= inv;
+        }
+        for v in s.aim.iter_mut() {
+            *v *= -inv;
+        }
+    }
+
+    /// Forward real transform of `x` (length `n`) into `out`
+    /// (`bins()` long). Allocation-free given a reused scratch.
+    pub fn forward_into(&self, exec: FftExec, x: &[f32], out: &mut [Complex], s: &mut RealScratch) {
+        let m = self.m;
+        assert_eq!(x.len(), self.n, "rfft input length mismatch");
+        assert_eq!(out.len(), self.bins(), "rfft output length mismatch");
+        for j in 0..m {
+            s.are[j] = x[2 * j] as f64;
+            s.aim[j] = x[2 * j + 1] as f64;
+        }
+        self.fft_m(exec, s);
+        let (z0re, z0im) = (s.are[0], s.aim[0]);
+        out[0] = Complex::new(z0re + z0im, 0.0);
+        out[m] = Complex::new(z0re - z0im, 0.0);
+        for k in 1..m {
+            let zk = Complex::new(s.are[k], s.aim[k]);
+            let zmk = Complex::new(s.are[m - k], s.aim[m - k]);
+            let xe = (zk + zmk.conj()) * 0.5;
+            let t = (zk - zmk.conj()) * 0.5;
+            // X_odd[k] = t / i = −i·t
+            let xo = Complex::new(t.im, -t.re);
+            out[k] = xe + self.rt[k] * xo;
+        }
+    }
+
+    /// Inverse real transform of a `bins()`-long spectrum into the
+    /// length-`n` real signal `out`. Exact inverse of
+    /// [`forward_into`](Self::forward_into) up to rounding.
+    pub fn inverse_into(
+        &self,
+        exec: FftExec,
+        spec: &[Complex],
+        out: &mut [f32],
+        s: &mut RealScratch,
+    ) {
+        let m = self.m;
+        assert_eq!(spec.len(), self.bins(), "irfft spectrum length mismatch");
+        assert_eq!(out.len(), self.n, "irfft output length mismatch");
+        for k in 0..m {
+            let xk = spec[k];
+            let xmk = spec[m - k];
+            let xe = (xk + xmk.conj()) * 0.5;
+            let t = (xk - xmk.conj()) * 0.5;
+            let xo = self.rt[k].conj() * t;
+            // Z[k] = Xe[k] + i·Xo[k]
+            s.are[k] = xe.re - xo.im;
+            s.aim[k] = xe.im + xo.re;
+        }
+        self.ifft_m(exec, s);
+        for j in 0..m {
+            out[2 * j] = s.are[j] as f32;
+            out[2 * j + 1] = s.aim[j] as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft_naive;
+    use crate::util::rng::Rng;
+
+    fn real_dft_oracle(x: &[f32]) -> Vec<Complex> {
+        let z: Vec<Complex> = x.iter().map(|&v| Complex::new(v as f64, 0.0)).collect();
+        let full = dft_naive(&z);
+        full[..x.len() / 2 + 1].to_vec()
+    }
+
+    #[test]
+    fn forward_matches_naive_real_dft() {
+        let mut rng = Rng::new(41);
+        for n in [2usize, 4, 8, 16, 32, 64, 128, 256, 512] {
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+            let plan = RealPow2::new(n);
+            let mut scratch = plan.make_scratch();
+            let oracle = real_dft_oracle(&x);
+            for exec in [FftExec::Scalar, FftExec::Simd] {
+                let mut out = vec![Complex::ZERO; plan.bins()];
+                plan.forward_into(exec, &x, &mut out, &mut scratch);
+                for (k, (got, want)) in out.iter().zip(&oracle).enumerate() {
+                    let tol = 1e-9 * n as f64 + 1e-10;
+                    assert!(
+                        (got.re - want.re).abs() < tol && (got.im - want.im).abs() < tol,
+                        "n={n} exec={exec:?} bin {k}: {got:?} vs {want:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrips() {
+        let mut rng = Rng::new(42);
+        for n in [2usize, 4, 8, 64, 256, 1024] {
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+            let plan = RealPow2::new(n);
+            let mut scratch = plan.make_scratch();
+            for exec in [FftExec::Scalar, FftExec::Simd] {
+                let mut spec = vec![Complex::ZERO; plan.bins()];
+                let mut back = vec![0.0f32; n];
+                plan.forward_into(exec, &x, &mut spec, &mut scratch);
+                plan.inverse_into(exec, &spec, &mut back, &mut scratch);
+                for (a, b) in x.iter().zip(&back) {
+                    assert!((a - b).abs() < 1e-4, "n={n} exec={exec:?}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_is_bit_identical_to_scalar() {
+        let mut rng = Rng::new(43);
+        for n in [8usize, 32, 128, 1024] {
+            let x: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+            let plan = RealPow2::new(n);
+            let mut scratch = plan.make_scratch();
+            let mut spec_sc = vec![Complex::ZERO; plan.bins()];
+            let mut spec_sd = vec![Complex::ZERO; plan.bins()];
+            plan.forward_into(FftExec::Scalar, &x, &mut spec_sc, &mut scratch);
+            plan.forward_into(FftExec::Simd, &x, &mut spec_sd, &mut scratch);
+            for (a, b) in spec_sc.iter().zip(&spec_sd) {
+                assert_eq!(a.re.to_bits(), b.re.to_bits(), "n={n}");
+                assert_eq!(a.im.to_bits(), b.im.to_bits(), "n={n}");
+            }
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Portable SIMD lane primitive for the FFT butterfly kernels.
+//!
+//! The split-radix stages in [`super::real`] vectorize over four `f64`
+//! lanes (one 256-bit register on AVX-class hardware — the f64 analogue
+//! of an `f32x8` lane). Rather than `core::arch` intrinsics we use a
+//! plain `[f64; 4]` wrapper whose elementwise operators are written so
+//! LLVM reliably auto-vectorizes them into packed adds/multiplies: every
+//! op is `#[inline(always)]`, fixed-width, and branch-free. This keeps
+//! the crate on stable Rust with no `unsafe`, and — because each lane op
+//! is the *same* IEEE-754 operation the scalar path performs (Rust never
+//! contracts `a*b + c` into an FMA on its own) — the `Simd` execution
+//! flavor is bit-for-bit identical to the `Scalar` one, which the
+//! proptests pin.
+
+use std::ops::{Add, Mul, Neg, Sub};
+
+/// Number of `f64` lanes per vector.
+pub(crate) const LANES: usize = 4;
+
+/// Four `f64` lanes with elementwise arithmetic.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct F64x4(pub [f64; LANES]);
+
+impl F64x4 {
+    /// Broadcast one value into every lane.
+    #[inline(always)]
+    pub fn splat(v: f64) -> F64x4 {
+        F64x4([v; LANES])
+    }
+
+    /// Load the first four elements of `s`.
+    #[inline(always)]
+    pub fn load(s: &[f64]) -> F64x4 {
+        F64x4([s[0], s[1], s[2], s[3]])
+    }
+
+    /// Store the lanes into the first four elements of `d`.
+    #[inline(always)]
+    pub fn store(self, d: &mut [f64]) {
+        d[..LANES].copy_from_slice(&self.0);
+    }
+}
+
+impl Add for F64x4 {
+    type Output = F64x4;
+    #[inline(always)]
+    fn add(self, o: F64x4) -> F64x4 {
+        let mut r = [0.0; LANES];
+        for i in 0..LANES {
+            r[i] = self.0[i] + o.0[i];
+        }
+        F64x4(r)
+    }
+}
+
+impl Sub for F64x4 {
+    type Output = F64x4;
+    #[inline(always)]
+    fn sub(self, o: F64x4) -> F64x4 {
+        let mut r = [0.0; LANES];
+        for i in 0..LANES {
+            r[i] = self.0[i] - o.0[i];
+        }
+        F64x4(r)
+    }
+}
+
+impl Mul for F64x4 {
+    type Output = F64x4;
+    #[inline(always)]
+    fn mul(self, o: F64x4) -> F64x4 {
+        let mut r = [0.0; LANES];
+        for i in 0..LANES {
+            r[i] = self.0[i] * o.0[i];
+        }
+        F64x4(r)
+    }
+}
+
+impl Neg for F64x4 {
+    type Output = F64x4;
+    #[inline(always)]
+    fn neg(self) -> F64x4 {
+        let mut r = [0.0; LANES];
+        for i in 0..LANES {
+            r[i] = -self.0[i];
+        }
+        F64x4(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_ops_are_elementwise() {
+        let a = F64x4([1.0, 2.0, 3.0, 4.0]);
+        let b = F64x4([0.5, -1.0, 2.0, -0.25]);
+        let sum = a + b;
+        let dif = a - b;
+        let prd = a * b;
+        let neg = -a;
+        for i in 0..LANES {
+            assert_eq!(sum.0[i], a.0[i] + b.0[i]);
+            assert_eq!(dif.0[i], a.0[i] - b.0[i]);
+            assert_eq!(prd.0[i], a.0[i] * b.0[i]);
+            assert_eq!(neg.0[i], -a.0[i]);
+        }
+    }
+
+    #[test]
+    fn load_store_roundtrip() {
+        let src = [9.0, 8.0, 7.0, 6.0, 5.0];
+        let v = F64x4::load(&src);
+        let mut dst = [0.0; 5];
+        v.store(&mut dst);
+        assert_eq!(&dst[..4], &src[..4]);
+        assert_eq!(dst[4], 0.0);
+        assert_eq!(F64x4::splat(3.5).0, [3.5; 4]);
+    }
+}

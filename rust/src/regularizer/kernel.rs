@@ -26,11 +26,21 @@
 //! scale on read. `reset()` clears the statistics but keeps the plans, so
 //! a kernel is reusable across batches with no re-planning.
 //!
-//! Accumulation is multi-threaded: kernels built with
-//! [`with_threads`](FftSumvecKernel::with_threads) split the batch into
-//! sample chunks, run one `std::thread` scoped worker per chunk (plans
-//! are `Sync`; each worker owns its scratch), and merge the per-worker
-//! partial sums in deterministic chunk order.
+//! ## Sample parallelism
+//!
+//! All three kernels share one scoped-thread-pool helper,
+//! [`sample_parallel`]: the batch's rows split into `threads` contiguous
+//! chunks (thread counts flow down from `LossSpec.threads`), one scoped
+//! `std::thread` worker runs per chunk with its **own** scratch arena and
+//! partial accumulator (plans are `Sync` and shared by reference), and
+//! the per-worker partials merge in deterministic chunk order — so a
+//! given thread count always produces the same bits, and the
+//! single-thread path streams directly into the kernel state exactly as
+//! before. The FFT kernels additionally batch their per-worker rows
+//! through [`RfftPlan::execute_many`] in fixed row tiles, keeping the
+//! transform hot loop inside the planned SIMD butterflies. FFT-backed
+//! kernels accept an explicit [`FftExec`] flavor via `with_exec`;
+//! the default follows the `simd` cargo feature.
 //!
 //! ## Which equation is which
 //!
@@ -40,19 +50,65 @@
 //! | `FftSumvecKernel`    | `sumvec`/`R_sum` (Eqs. 5–6,12) | `O(nd log d)`     |
 //! | `GroupedFftKernel`   | `R_sum^(b)` (Eq. 13)           | `O((nd²/b) log b)`|
 
-use crate::fft::{Complex, RfftPlan};
+use std::sync::OnceLock;
+
+use crate::fft::{Complex, FftExec, RfftPlan};
 use crate::util::tensor::Tensor;
 
 use super::{accumulate_cross_range, r_sum_from_sumvec, sumvec_naive, Q};
 
+static DEFAULT_THREADS: OnceLock<usize> = OnceLock::new();
+
 /// Default worker-thread count for sample-chunk accumulation: the
 /// machine's parallelism, capped — accumulation is memory-bound and sees
-/// diminishing returns past a few workers.
+/// diminishing returns past a few workers. Queried from the OS once and
+/// cached for the process lifetime.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1)
-        .min(8)
+    *DEFAULT_THREADS.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(8)
+    })
+}
+
+/// Rows batched per [`RfftPlan::execute_many`] call inside a worker:
+/// large enough to amortize dispatch, small enough that per-worker
+/// spectra tiles stay cache-resident.
+const ROW_TILE: usize = 16;
+
+/// The shared scoped-thread-pool helper behind every kernel's
+/// `accumulate`: split rows `0..n` into `threads` contiguous chunks, run
+/// `work(lo, hi, &mut partial)` on one scoped worker per chunk (each
+/// worker owns a fresh partial from `make`), and return the partials in
+/// chunk order so the caller's merge is deterministic regardless of
+/// which worker finished first.
+fn sample_parallel<P, M, W>(n: usize, threads: usize, make: M, work: W) -> Vec<P>
+where
+    P: Send,
+    M: Fn() -> P + Sync,
+    W: Fn(usize, usize, &mut P) + Sync,
+{
+    let t = threads.max(1);
+    let chunk = n.div_ceil(t);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..t)
+            .map(|ti| {
+                let lo = ti * chunk;
+                let hi = ((ti + 1) * chunk).min(n);
+                let make = &make;
+                let work = &work;
+                scope.spawn(move || {
+                    let mut part = make();
+                    if lo < hi {
+                        work(lo, hi, &mut part);
+                    }
+                    part
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
 }
 
 /// A stateful evaluator for one decorrelation regularizer form.
@@ -159,23 +215,12 @@ impl DecorrelationKernel for NaiveMatrixKernel {
             accumulate_cross_range(&mut self.c, a, b, 0, n);
         } else {
             let d = self.dim();
-            let chunk = n.div_ceil(t);
-            let partials: Vec<Tensor> = std::thread::scope(|scope| {
-                let handles: Vec<_> = (0..t)
-                    .map(|ti| {
-                        let lo = ti * chunk;
-                        let hi = ((ti + 1) * chunk).min(n);
-                        scope.spawn(move || {
-                            let mut part = Tensor::zeros(&[d, d]);
-                            if lo < hi {
-                                accumulate_cross_range(&mut part, a, b, lo, hi);
-                            }
-                            part
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().unwrap()).collect()
-            });
+            let partials = sample_parallel(
+                n,
+                t,
+                || Tensor::zeros(&[d, d]),
+                |lo, hi, part| accumulate_cross_range(part, a, b, lo, hi),
+            );
             for part in partials {
                 for (dst, src) in self.c.data_mut().iter_mut().zip(part.data()) {
                     *dst += *src;
@@ -220,7 +265,9 @@ impl DecorrelationKernel for NaiveMatrixKernel {
 /// Spectral kernel for the flat `R_sum` (Eq. 12): accumulates
 /// `Σ_k conj(F(a_k)) ∘ F(b_k)` over the `d/2 + 1` rfft bins through one
 /// shared [`RfftPlan`]. The per-sample loop performs zero allocation —
-/// plan and scratch are built once per batch (scratch per worker).
+/// plan and scratch are built once per batch (scratch per worker), and
+/// each worker's rows run through the plan in [`ROW_TILE`]-row
+/// `execute_many` batches.
 pub struct FftSumvecKernel {
     plan: RfftPlan,
     acc: Vec<Complex>,
@@ -234,9 +281,16 @@ impl FftSumvecKernel {
         Self::with_threads(d, 1)
     }
 
-    /// Kernel accumulating over `threads` sample-chunk workers.
+    /// Kernel accumulating over `threads` sample-chunk workers, with the
+    /// default execution flavor (follows the `simd` cargo feature).
     pub fn with_threads(d: usize, threads: usize) -> FftSumvecKernel {
-        let plan = RfftPlan::new(d);
+        Self::with_exec(d, threads, FftExec::default())
+    }
+
+    /// Kernel with an explicit butterfly execution flavor — how benches
+    /// and tests pin scalar vs SIMD rows against each other.
+    pub fn with_exec(d: usize, threads: usize, exec: FftExec) -> FftSumvecKernel {
+        let plan = RfftPlan::with_exec(d, exec);
         let bins = plan.bins();
         FftSumvecKernel {
             plan,
@@ -245,10 +299,16 @@ impl FftSumvecKernel {
             threads: threads.max(1),
         }
     }
+
+    /// The butterfly execution flavor this kernel's plan runs with.
+    pub fn exec(&self) -> FftExec {
+        self.plan.exec()
+    }
 }
 
 /// Accumulate rows `lo..hi` of the spectral sum into `acc` using `plan`.
-/// All buffers are allocated here once for the whole chunk.
+/// All buffers are allocated here once for the whole chunk; rows go
+/// through the plan in [`ROW_TILE`]-row `execute_many` batches.
 fn sumvec_accumulate_rows(
     plan: &RfftPlan,
     a: &Tensor,
@@ -257,16 +317,25 @@ fn sumvec_accumulate_rows(
     hi: usize,
     acc: &mut [Complex],
 ) {
+    let d = plan.len();
     let bins = plan.bins();
     let mut scratch = plan.make_scratch();
-    let mut fa = vec![Complex::ZERO; bins];
-    let mut fb = vec![Complex::ZERO; bins];
-    for k in lo..hi {
-        plan.forward_into(a.row(k), &mut fa, &mut scratch);
-        plan.forward_into(b.row(k), &mut fb, &mut scratch);
-        for (s, (x, y)) in acc.iter_mut().zip(fa.iter().zip(&fb)) {
-            *s = *s + x.conj() * *y;
+    let mut fa = vec![Complex::ZERO; ROW_TILE * bins];
+    let mut fb = vec![Complex::ZERO; ROW_TILE * bins];
+    let mut k = lo;
+    while k < hi {
+        let rows = ROW_TILE.min(hi - k);
+        let span = k * d..(k + rows) * d;
+        plan.execute_many(&a.data()[span.clone()], &mut fa[..rows * bins], &mut scratch);
+        plan.execute_many(&b.data()[span], &mut fb[..rows * bins], &mut scratch);
+        for r in 0..rows {
+            let sa = &fa[r * bins..(r + 1) * bins];
+            let sb = &fb[r * bins..(r + 1) * bins];
+            for (s, (x, y)) in acc.iter_mut().zip(sa.iter().zip(sb)) {
+                *s = *s + x.conj() * *y;
+            }
         }
+        k += rows;
     }
 }
 
@@ -298,24 +367,13 @@ impl DecorrelationKernel for FftSumvecKernel {
             sumvec_accumulate_rows(plan, a, b, 0, n, &mut self.acc);
         } else {
             let bins = self.plan.bins();
-            let chunk = n.div_ceil(t);
             let plan = &self.plan;
-            let partials: Vec<Vec<Complex>> = std::thread::scope(|scope| {
-                let handles: Vec<_> = (0..t)
-                    .map(|ti| {
-                        let lo = ti * chunk;
-                        let hi = ((ti + 1) * chunk).min(n);
-                        scope.spawn(move || {
-                            let mut part = vec![Complex::ZERO; bins];
-                            if lo < hi {
-                                sumvec_accumulate_rows(plan, a, b, lo, hi, &mut part);
-                            }
-                            part
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().unwrap()).collect()
-            });
+            let partials = sample_parallel(
+                n,
+                t,
+                || vec![Complex::ZERO; bins],
+                |lo, hi, part| sumvec_accumulate_rows(plan, a, b, lo, hi, part),
+            );
             for part in partials {
                 for (s, v) in self.acc.iter_mut().zip(part) {
                     *s = *s + v;
@@ -348,7 +406,8 @@ impl DecorrelationKernel for FftSumvecKernel {
 /// Blockwise spectral kernel for the grouped `R_sum^(b)` (Eq. 13). The
 /// feature axis is split into `⌈d/b⌉` groups (the ragged last group is
 /// zero-padded, paper footnote 4); each sample contributes the spectrum
-/// of every group once, reused across all `(gi, gj)` block pairs.
+/// of every group once — one `execute_many` over the padded group rows —
+/// reused across all `(gi, gj)` block pairs.
 pub struct GroupedFftKernel {
     d: usize,
     block: usize,
@@ -366,11 +425,18 @@ impl GroupedFftKernel {
         Self::with_threads(d, block, 1)
     }
 
-    /// Kernel accumulating over `threads` sample-chunk workers.
+    /// Kernel accumulating over `threads` sample-chunk workers, with the
+    /// default execution flavor (follows the `simd` cargo feature).
     pub fn with_threads(d: usize, block: usize, threads: usize) -> GroupedFftKernel {
+        Self::with_exec(d, block, threads, FftExec::default())
+    }
+
+    /// Kernel with an explicit butterfly execution flavor for its
+    /// length-`block` plan.
+    pub fn with_exec(d: usize, block: usize, threads: usize, exec: FftExec) -> GroupedFftKernel {
         assert!(block >= 1, "block size must be >= 1");
         let groups = d.div_ceil(block);
-        let plan = RfftPlan::new(block);
+        let plan = RfftPlan::with_exec(block, exec);
         let bins = plan.bins();
         GroupedFftKernel {
             d,
@@ -392,35 +458,39 @@ impl GroupedFftKernel {
     pub fn groups(&self) -> usize {
         self.groups
     }
+
+    /// The butterfly execution flavor this kernel's plan runs with.
+    pub fn exec(&self) -> FftExec {
+        self.plan.exec()
+    }
 }
 
-/// Accumulate rows `lo..hi` of all block-pair spectra into `acc`.
+/// Accumulate rows `lo..hi` of all block-pair spectra into `acc`. Each
+/// row is packed (with the ragged tail zero-padded) into a
+/// `groups × block` buffer and batch-transformed in one `execute_many`
+/// call per view.
 fn grouped_accumulate_rows(
     plan: &RfftPlan,
     a: &Tensor,
     b: &Tensor,
     lo: usize,
     hi: usize,
-    block: usize,
     groups: usize,
     acc: &mut [Complex],
 ) {
     let d = a.shape()[1];
+    let block = plan.len();
     let bins = plan.bins();
     let mut scratch = plan.make_scratch();
-    let mut pad = vec![0.0f32; block];
+    // The zero tail written here persists across rows: only the first
+    // `d` slots are overwritten per row.
+    let mut packed = vec![0.0f32; groups * block];
     let mut fa = vec![Complex::ZERO; groups * bins];
     let mut fb = vec![Complex::ZERO; groups * bins];
     for k in lo..hi {
         for (view, spectra) in [(a, &mut fa), (b, &mut fb)] {
-            let row = view.row(k);
-            for g in 0..groups {
-                for (idx, slot) in pad.iter_mut().enumerate() {
-                    let col = g * block + idx;
-                    *slot = if col < d { row[col] } else { 0.0 };
-                }
-                plan.forward_into(&pad, &mut spectra[g * bins..(g + 1) * bins], &mut scratch);
-            }
+            packed[..d].copy_from_slice(view.row(k));
+            plan.execute_many(&packed, spectra, &mut scratch);
         }
         for gi in 0..groups {
             for gj in 0..groups {
@@ -458,32 +528,19 @@ impl DecorrelationKernel for GroupedFftKernel {
         assert_eq!(a.shape()[1], self.d);
         let n = a.shape()[0];
         let t = self.threads.min(n.max(1));
-        let (block, groups) = (self.block, self.groups);
+        let groups = self.groups;
         if t <= 1 {
             let plan = &self.plan;
-            grouped_accumulate_rows(plan, a, b, 0, n, block, groups, &mut self.acc);
+            grouped_accumulate_rows(plan, a, b, 0, n, groups, &mut self.acc);
         } else {
             let bins = self.plan.bins();
-            let chunk = n.div_ceil(t);
             let plan = &self.plan;
-            let partials: Vec<Vec<Complex>> = std::thread::scope(|scope| {
-                let handles: Vec<_> = (0..t)
-                    .map(|ti| {
-                        let lo = ti * chunk;
-                        let hi = ((ti + 1) * chunk).min(n);
-                        scope.spawn(move || {
-                            let mut part = vec![Complex::ZERO; groups * groups * bins];
-                            if lo < hi {
-                                grouped_accumulate_rows(
-                                    plan, a, b, lo, hi, block, groups, &mut part,
-                                );
-                            }
-                            part
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().unwrap()).collect()
-            });
+            let partials = sample_parallel(
+                n,
+                t,
+                || vec![Complex::ZERO; groups * groups * bins],
+                |lo, hi, part| grouped_accumulate_rows(plan, a, b, lo, hi, groups, part),
+            );
             for part in partials {
                 for (s, v) in self.acc.iter_mut().zip(part) {
                     *s = *s + v;
@@ -658,6 +715,40 @@ mod tests {
         npar.accumulate(&a, &b);
         let (ro_s, ro_p) = (nseq.r_off(n as f32).unwrap(), npar.r_off(n as f32).unwrap());
         assert!((ro_s - ro_p).abs() < 1e-6 * (1.0 + ro_s.abs()));
+    }
+
+    #[test]
+    fn exec_flavors_agree_bitwise_on_pow2_dims() {
+        // The SIMD and scalar butterfly flavors perform identical IEEE
+        // operations, and accumulation order is shared — so whole-kernel
+        // outputs must agree to the bit, not just within tolerance.
+        let mut rng = Rng::new(28);
+        let (n, d) = (37usize, 64usize);
+        let a = rand_tensor(&mut rng, n, d);
+        let b = rand_tensor(&mut rng, n, d);
+        let mut sc = FftSumvecKernel::with_exec(d, 2, FftExec::Scalar);
+        let mut sd = FftSumvecKernel::with_exec(d, 2, FftExec::Simd);
+        sc.accumulate(&a, &b);
+        sd.accumulate(&a, &b);
+        for (x, y) in sc.sumvec(n as f32).iter().zip(&sd.sumvec(n as f32)) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let mut gc = GroupedFftKernel::with_exec(d, 16, 2, FftExec::Scalar);
+        let mut gd = GroupedFftKernel::with_exec(d, 16, 2, FftExec::Simd);
+        gc.accumulate(&a, &b);
+        gd.accumulate(&a, &b);
+        assert_eq!(gc.exec(), FftExec::Scalar);
+        assert_eq!(gd.exec(), FftExec::Simd);
+        for (x, y) in gc.sumvec(n as f32).iter().zip(&gd.sumvec(n as f32)) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn default_threads_is_cached_and_sane() {
+        let first = default_threads();
+        assert!((1..=8).contains(&first));
+        assert_eq!(default_threads(), first);
     }
 
     #[test]

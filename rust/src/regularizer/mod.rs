@@ -20,8 +20,11 @@
 //!
 //! The heavy lifting lives in the [`kernel`] submodule: the
 //! [`DecorrelationKernel`] trait and its planned, batched, multi-threaded
-//! implementations. The free functions below are thin one-shot wrappers
-//! kept for API stability — same signatures, same numerics.
+//! implementations — all three sample-parallel through one shared
+//! scoped-thread-pool helper, with the FFT kernels batching rows through
+//! the split-radix SIMD transform substrate in [`crate::fft`]. The free
+//! functions below are thin one-shot wrappers kept for API stability —
+//! same signatures, same numerics.
 //!
 //! ## Fallible twins
 //!

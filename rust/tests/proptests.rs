@@ -254,6 +254,83 @@ fn prop_planned_rfft_matches_free_functions() {
     });
 }
 
+/// Every rfft route — default (split-radix at pow2), forced-generic,
+/// forced-Bluestein, and both explicit butterfly flavors — matches the
+/// naive O(d²) real-DFT oracle, across power-of-two and arbitrary
+/// lengths alike. Routes that require a power of two are only built
+/// where they are valid.
+#[test]
+fn prop_rfft_routes_match_naive_oracle() {
+    for_cases(30, |rng| {
+        // Alternate pow2 (2..=256) and arbitrary (2..=96) lengths.
+        let n = if rng.next_bounded(2) == 0 {
+            1usize << (1 + rng.next_bounded(8))
+        } else {
+            2 + rng.next_bounded(95) as usize
+        };
+        let x: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+        // Oracle: complex-embed the real signal, naive DFT, keep the
+        // first n/2+1 bins.
+        let embedded: Vec<fft::Complex> = x
+            .iter()
+            .map(|&v| fft::Complex::new(v as f64, 0.0))
+            .collect();
+        let oracle = fft::dft_naive(&embedded);
+        let mut routes = vec![
+            ("default", fft::RfftPlan::new(n)),
+            ("generic", fft::RfftPlan::generic(n)),
+            ("bluestein", fft::RfftPlan::bluestein(n)),
+        ];
+        if n.is_power_of_two() {
+            routes.push(("scalar", fft::RfftPlan::with_exec(n, fft::FftExec::Scalar)));
+            routes.push(("simd", fft::RfftPlan::with_exec(n, fft::FftExec::Simd)));
+        }
+        for (name, plan) in &routes {
+            let mut scratch = plan.make_scratch();
+            let mut spec = vec![fft::Complex::ZERO; plan.bins()];
+            plan.forward_into(&x, &mut spec, &mut scratch);
+            let tol = 1e-6 * (1.0 + n as f64);
+            for (i, (p, r)) in spec.iter().zip(&oracle).enumerate() {
+                assert!(
+                    (p.re - r.re).abs() < tol && (p.im - r.im).abs() < tol,
+                    "route {name} n={n} bin {i}: {p:?} vs {r:?}"
+                );
+            }
+        }
+    });
+}
+
+/// The SIMD butterfly flavor is bit-for-bit identical to the scalar one
+/// on forward and inverse transforms at random power-of-two lengths:
+/// both flavors run the same IEEE operations in the same order (the lane
+/// path only groups independent butterflies), so this is exact `to_bits`
+/// equality, not a 1-ulp tolerance.
+#[test]
+fn prop_simd_flavor_is_bit_identical_to_scalar() {
+    for_cases(30, |rng| {
+        let n = 1usize << (1 + rng.next_bounded(10));
+        let x: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+        let sc = fft::RfftPlan::with_exec(n, fft::FftExec::Scalar);
+        let sd = fft::RfftPlan::with_exec(n, fft::FftExec::Simd);
+        let (mut ssc, mut ssd) = (sc.make_scratch(), sd.make_scratch());
+        let mut spec_sc = vec![fft::Complex::ZERO; sc.bins()];
+        let mut spec_sd = vec![fft::Complex::ZERO; sd.bins()];
+        sc.forward_into(&x, &mut spec_sc, &mut ssc);
+        sd.forward_into(&x, &mut spec_sd, &mut ssd);
+        for (i, (a, b)) in spec_sc.iter().zip(&spec_sd).enumerate() {
+            assert_eq!(a.re.to_bits(), b.re.to_bits(), "n={n} bin {i} re");
+            assert_eq!(a.im.to_bits(), b.im.to_bits(), "n={n} bin {i} im");
+        }
+        let mut back_sc = vec![0.0f32; n];
+        let mut back_sd = vec![0.0f32; n];
+        sc.inverse_into(&spec_sc, &mut back_sc, &mut ssc);
+        sd.inverse_into(&spec_sd, &mut back_sd, &mut ssd);
+        for (i, (a, b)) in back_sc.iter().zip(&back_sd).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "n={n} sample {i}");
+        }
+    });
+}
+
 // --------------------------------------------------------------- kernels
 
 /// The spectral and grouped kernels match the materialized-matrix oracle
