@@ -1,15 +1,145 @@
-//! Data-pipeline bench: synthesis + augmentation throughput and the
-//! prefetching loader's ability to keep the training step fed (the L3
-//! "data must not be the bottleneck" requirement; DESIGN.md §Perf L3).
+//! Data-pipeline bench: per-image synthesis/augmentation costs, then the
+//! head-to-head the zero-stall data plane exists for — a simulated train
+//! loop driven inline (adapt + marshal on the driver thread) vs
+//! marshal-ahead (prefetch workers deliver `PreparedBatch`es), over both
+//! the procedural ShapeWorld source and a packed binary shard.
+//!
+//! Writes `BENCH_data_pipeline.json` (table `data_pipeline`, one row per
+//! path with `batches_per_sec` + per-phase stall fractions) so `decorr
+//! bench-diff` gates pipeline regressions. `DECORR_BENCH_SMOKE` shrinks
+//! batch/step counts for CI.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use decorr::bench_harness::{bench, Table};
-use decorr::data::loader::{make_batch, BatchLoader};
+use decorr::api::train::prepare_inputs;
+use decorr::bench_harness::table::write_json;
+use decorr::bench_harness::{bench, smoke_mode, Table};
+use decorr::coordinator::InputAdapter;
+use decorr::data::loader::LoaderBuilder;
+use decorr::data::shard::{ShardDataset, ShardWriter};
 use decorr::data::synth::{ShapeWorld, ShapeWorldConfig};
-use decorr::data::{AugmentConfig, Augmenter};
+use decorr::data::{AugmentConfig, Augmenter, BatchSource, PrepareFn};
+use decorr::runtime::literal_f32;
+
+/// Accumulated phase seconds of one simulated run.
+struct PathStats {
+    steps: usize,
+    wall: f64,
+    wait: f64,
+    adapt: f64,
+    marshal: f64,
+    execute: f64,
+}
+
+impl PathStats {
+    fn batches_per_sec(&self) -> f64 {
+        self.steps as f64 / self.wall.max(1e-12)
+    }
+
+    fn row(&self, label: &str) -> Vec<String> {
+        let frac = |v: f64| format!("{:.4}", v / self.wall.max(1e-12));
+        vec![
+            label.to_string(),
+            format!("{}", self.steps),
+            format!("{:.2}", self.batches_per_sec()),
+            frac(self.wait),
+            frac(self.adapt),
+            frac(self.marshal),
+            frac(self.execute),
+            "0.0000".to_string(),
+        ]
+    }
+}
+
+/// Busy-spin standing in for device execution: the driver thread is
+/// occupied (so prefetch workers can run ahead) for `secs`.
+fn spin(secs: f64) {
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < secs {
+        std::hint::black_box(0u64);
+    }
+}
+
+/// Drive `steps` simulated train steps over `source`. With
+/// `marshal_ahead`, workers run `prepare_inputs` and the "step" consumes
+/// ready tensors/literals; otherwise the driver thread adapts and builds
+/// the literals itself, exactly like the pre-pipeline step loop.
+fn run_path(
+    source: Arc<dyn BatchSource>,
+    marshal_ahead: bool,
+    batch: usize,
+    steps: usize,
+    execute_secs: f64,
+) -> PathStats {
+    let adapter = InputAdapter::FlatGray(64);
+    let prepare: Option<PrepareFn> = marshal_ahead.then(|| prepare_inputs(adapter));
+    let mut builder = LoaderBuilder::new(source, batch)
+        .epoch_size(1024)
+        .seed(11)
+        .workers(3)
+        .prefetch(4)
+        .ordered(true);
+    if let Some(p) = prepare {
+        builder = builder.prepare(p);
+    }
+    let loader = builder.build();
+
+    let mut stats = PathStats {
+        steps,
+        wall: 0.0,
+        wait: 0.0,
+        adapt: 0.0,
+        marshal: 0.0,
+        execute: 0.0,
+    };
+    // Warm the queue so both paths start with full prefetch buffers.
+    for _ in 0..2 {
+        let _ = loader.next_prepared().expect("loader alive");
+    }
+    let t_run = Instant::now();
+    for _ in 0..steps {
+        let t_wait = Instant::now();
+        let pb = loader.next_prepared().expect("loader alive");
+        stats.wait += t_wait.elapsed().as_secs_f64();
+        if marshal_ahead {
+            let p = pb.prepared.as_ref().expect("prepare fn ran");
+            assert!(p.lits.is_some(), "stream literals marshaled ahead");
+            std::hint::black_box(p.xa.data().len() + p.xb.data().len());
+        } else {
+            let t_adapt = Instant::now();
+            let xa = adapter.apply(&pb.batch.view_a.images);
+            let xb = adapter.apply(&pb.batch.view_b.images);
+            stats.adapt += t_adapt.elapsed().as_secs_f64();
+            let t_marshal = Instant::now();
+            let la = literal_f32(&xa).expect("host literal");
+            let lb = literal_f32(&xb).expect("host literal");
+            stats.marshal += t_marshal.elapsed().as_secs_f64();
+            std::hint::black_box((la, lb));
+        }
+        let t_exec = Instant::now();
+        spin(execute_secs);
+        stats.execute += t_exec.elapsed().as_secs_f64();
+    }
+    stats.wall = t_run.elapsed().as_secs_f64();
+    stats
+}
+
+/// Pack `count` ShapeWorld samples into a temp shard and open it back.
+fn packed_shard(count: u64) -> ShardDataset {
+    let world = ShapeWorld::new(ShapeWorldConfig::default());
+    let path = std::env::temp_dir().join(format!("decorr_bench_shard_{}.bin", std::process::id()));
+    let path = path.to_str().expect("utf-8 temp path").to_string();
+    let mut writer = ShardWriter::create(&path, &[32, 32, 3]).expect("create shard");
+    for i in 0..count {
+        writer.push(&world.sample(i)).expect("push sample");
+    }
+    writer.finish().expect("finish shard");
+    ShardDataset::open(&path).expect("open shard")
+}
 
 fn main() {
+    let smoke = smoke_mode();
     let ds = ShapeWorld::new(ShapeWorldConfig::default());
     let aug = Augmenter::new(AugmentConfig::default());
 
@@ -20,46 +150,52 @@ fn main() {
     let augment = bench(3, 20, || aug.view(&img, &mut rng, false));
     let mut t = Table::new(&["stage", "µs/image"]);
     t.row(vec!["synthesize".into(), format!("{:.0}", synth.median * 1e6)]);
-    t.row(vec!["augment (1 view)".into(), format!("{:.0}", augment.median * 1e6)]);
+    t.row(vec![
+        "augment (1 view)".into(),
+        format!("{:.0}", augment.median * 1e6),
+    ]);
     println!("\n[bench_data_pipeline] per-image costs:");
     t.print();
 
-    // Batch construction (single-threaded).
-    let batch128 = bench(1, 5, || make_batch(&ds, &aug, 128, 4096, 1, 0));
-    println!(
-        "single-thread batch(128): {:.1} ms ({:.0} img/s incl. both views)",
-        batch128.median * 1e3,
-        2.0 * 128.0 / batch128.median
-    );
+    // Simulated train loop: inline vs marshal-ahead, synth vs shard.
+    let (batch, steps, exec_secs, shard_count) = if smoke {
+        (32, 8, 0.003, 128)
+    } else {
+        (128, 32, 0.012, 512)
+    };
+    let shard = Arc::new(packed_shard(shard_count));
+    let sources: [(&str, Arc<dyn BatchSource>); 2] =
+        [("synth", Arc::new(ds)), ("shard", shard)];
 
-    // Loader throughput vs worker count.
-    let mut lt = Table::new(&["workers", "batches/s", "images/s"]);
-    for workers in [1usize, 2, 4, 8] {
-        let loader = BatchLoader::new(
-            ds.clone(),
-            AugmentConfig::default(),
-            128,
-            4096,
-            1,
-            workers,
-            8,
+    let mut table = Table::new(&[
+        "path",
+        "steps",
+        "batches_per_sec",
+        "stall_frac",
+        "adapt_frac",
+        "marshal_frac",
+        "execute_frac",
+        "absorb_frac",
+    ]);
+    for (name, source) in &sources {
+        let inline = run_path(source.clone(), false, batch, steps, exec_secs);
+        let ahead = run_path(source.clone(), true, batch, steps, exec_secs);
+        table.row(inline.row(&format!("inline+{name}")));
+        table.row(ahead.row(&format!("marshal_ahead+{name}")));
+        println!(
+            "{name}: marshal-ahead {:.2} batches/s vs inline {:.2} ({:.2}x)",
+            ahead.batches_per_sec(),
+            inline.batches_per_sec(),
+            ahead.batches_per_sec() / inline.batches_per_sec()
         );
-        // warm the queue
-        for _ in 0..2 {
-            let _ = loader.next();
-        }
-        let t0 = Instant::now();
-        let n = 12;
-        for _ in 0..n {
-            let _ = loader.next();
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        lt.row(vec![
-            format!("{workers}"),
-            format!("{:.1}", n as f64 / dt),
-            format!("{:.0}", n as f64 * 2.0 * 128.0 / dt),
-        ]);
     }
-    println!("\nprefetching loader throughput:");
-    lt.print();
+    println!(
+        "\nsimulated step loop ({batch}-sample batches, {:.0} ms execute):",
+        exec_secs * 1e3
+    );
+    table.print();
+
+    let path = "BENCH_data_pipeline.json";
+    write_json(path, &[("data_pipeline", &table)]).expect("write bench json");
+    println!("wrote {path}");
 }

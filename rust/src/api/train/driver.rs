@@ -16,7 +16,7 @@ use crate::coordinator::{
     Checkpoint, DdpTrainer, EmbeddingDiagnostics, InputAdapter, MetricsLogger, StepMetrics,
     Trainer,
 };
-use crate::data::SslBatch;
+use crate::data::{PreparedBatch, SslBatch};
 use crate::runtime::{Artifact, Session};
 
 use super::super::spec::LossSpec;
@@ -36,6 +36,22 @@ pub trait TrainDriver {
 
     /// Execute one optimizer step on a prepared twin-view batch.
     fn step(&mut self, batch: &SslBatch, epoch: usize) -> Result<StepMetrics>;
+
+    /// Execute one step on a loader-marshaled batch, reusing prepared
+    /// inputs when the driver can (skipping inline adapt/marshal work).
+    /// The default discards the prepared half and steps inline — numerics
+    /// are bit-identical either way (pinned by `tests/driver.rs`).
+    fn step_prepared(&mut self, batch: &PreparedBatch, epoch: usize) -> Result<StepMetrics> {
+        self.step(&batch.batch, epoch)
+    }
+
+    /// The driver's current global step (resume position). The shared
+    /// loop aligns the loader's batch indices here so a resumed run
+    /// replays the exact batch sequence. Defaults to 0 for drivers
+    /// without a restorable step counter.
+    fn global_step(&self) -> usize {
+        0
+    }
 
     /// Current parameters as a host checkpoint.
     fn snapshot(&self) -> Result<Checkpoint>;

@@ -18,11 +18,13 @@
 //!         │
 //!         ▼
 //!     run_loop(driver, loader, observers) ─→ TrainReport
-//!                              │
-//!                              ├─ MetricsObserver      (mirror JSONL)
-//!                              ├─ CheckpointObserver   (periodic v2 saves)
-//!                              ├─ DiagnosticsObserver  (Table-6 residuals)
-//!                              └─ BenchObserver        (steps/sec → JSON)
+//!         ▲                    │
+//!         │ PreparedBatch      ├─ MetricsObserver       (mirror JSONL)
+//!   BatchLoader workers        ├─ CheckpointObserver    (periodic v2 saves)
+//!   (augment + marshal-ahead   ├─ DiagnosticsObserver   (Table-6 residuals)
+//!    via prepare_inputs)       ├─ BenchObserver         (steps/sec → JSON)
+//!                              └─ PipelineStatsObserver (stall fractions →
+//!                                                        BENCH_data_pipeline)
 //!
 //!  SweepPlan ("bt_sum@b={64,128},q={1,2}")
 //!         │ expand
@@ -49,6 +51,12 @@
 //! * [`run_loop`] owns the epoch/step skeleton (batch → step → log →
 //!   observers) once, so `Trainer::run` and `DdpTrainer::run` are thin
 //!   delegations with bit-identical numerics (pinned by `tests/driver.rs`).
+//!   It pulls [`PreparedBatch`](crate::data::PreparedBatch)es from the
+//!   loader in index order and feeds them to
+//!   [`TrainDriver::step_prepared`], so input adaptation and literal
+//!   marshaling ride the prefetch workers ([`prepare_inputs`]) instead of
+//!   stalling the driver thread; per-step stall fractions land in
+//!   [`StepMetrics`](crate::coordinator::StepMetrics).
 //! * [`TrainObserver`] hooks compose side effects without touching the
 //!   loop; the four shipped observers cover metrics mirroring, periodic
 //!   checkpoints, Table-6 diagnostics, and throughput capture.
@@ -66,8 +74,11 @@ pub mod sweep;
 
 pub use driver::{DriverBuilder, TrainDriver};
 pub use observer::{
-    BenchObserver, CheckpointObserver, DiagnosticsObserver, MetricsObserver, TrainObserver,
+    BenchObserver, CheckpointObserver, DiagnosticsObserver, MetricsObserver,
+    PipelineStatsObserver, TrainObserver,
 };
-pub use run::{run_driver, run_driver_with, run_loop, run_loop_with, RunOptions, TrainReport};
+pub use run::{
+    prepare_inputs, run_driver, run_driver_with, run_loop, run_loop_with, RunOptions, TrainReport,
+};
 pub use scheduler::{SweepJobReport, SweepMode, SweepOutcome, SweepScheduler};
 pub use sweep::SweepPlan;

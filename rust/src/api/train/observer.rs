@@ -219,6 +219,121 @@ impl TrainObserver for BenchObserver {
     }
 
     fn on_finish(&mut self, _driver: &dyn TrainDriver, report: &TrainReport) -> Result<()> {
+        self.finish_table(report)
+    }
+}
+
+// -------------------------------------------------------- pipeline stats
+
+/// Aggregates the per-step stall breakdown ([`StepMetrics::data_wait`],
+/// `adapt_time`, `marshal_time`, `execute_time`, `absorb_time`) into one
+/// throughput row: batches/sec plus the fraction of driver wall time each
+/// phase consumed. `stall_frac` is the share spent blocked on the loader —
+/// the number the zero-stall data plane exists to push toward 0.
+/// Optionally written to `BENCH_data_pipeline.json` via
+/// [`table::write_json`](crate::bench_harness::table::write_json) so
+/// `decorr bench-diff` gates pipeline regressions.
+pub struct PipelineStatsObserver {
+    label: String,
+    json_path: Option<String>,
+    wait: f64,
+    adapt: f64,
+    marshal: f64,
+    execute: f64,
+    absorb: f64,
+    wall: f64,
+    steps: usize,
+    table: Option<Table>,
+}
+
+impl PipelineStatsObserver {
+    /// Capture only, labelling the row `label` (read the table back via
+    /// [`table`](Self::table)).
+    pub fn new(label: impl Into<String>) -> PipelineStatsObserver {
+        PipelineStatsObserver {
+            label: label.into(),
+            json_path: None,
+            wait: 0.0,
+            adapt: 0.0,
+            marshal: 0.0,
+            execute: 0.0,
+            absorb: 0.0,
+            wall: 0.0,
+            steps: 0,
+            table: None,
+        }
+    }
+
+    /// Capture and additionally write the finished table to `path`.
+    pub fn with_json(label: impl Into<String>, path: impl Into<String>) -> PipelineStatsObserver {
+        PipelineStatsObserver {
+            json_path: Some(path.into()),
+            ..PipelineStatsObserver::new(label)
+        }
+    }
+
+    /// Fraction of accumulated driver wall time spent blocked on the
+    /// loader (None before any step was seen).
+    pub fn stall_frac(&self) -> Option<f64> {
+        (self.steps > 0).then(|| self.wait / self.wall.max(1e-12))
+    }
+
+    /// The rendered stats table (after the run finished).
+    pub fn table(&self) -> Option<&Table> {
+        self.table.as_ref()
+    }
+}
+
+impl TrainObserver for PipelineStatsObserver {
+    fn on_step(&mut self, _driver: &dyn TrainDriver, m: &StepMetrics) -> Result<()> {
+        self.wait += m.data_wait;
+        self.adapt += m.adapt_time;
+        self.marshal += m.marshal_time;
+        self.execute += m.execute_time;
+        self.absorb += m.absorb_time;
+        // Driver wall per step = loader wait + the step body itself.
+        self.wall += m.data_wait + m.step_time;
+        self.steps += 1;
+        Ok(())
+    }
+
+    fn on_finish(&mut self, _driver: &dyn TrainDriver, _report: &TrainReport) -> Result<()> {
+        let wall = self.wall.max(1e-12);
+        let frac = |v: f64| format!("{:.4}", v / wall);
+        let mut table = Table::new(&[
+            "path",
+            "steps",
+            "batches_per_sec",
+            "stall_frac",
+            "adapt_frac",
+            "marshal_frac",
+            "execute_frac",
+            "absorb_frac",
+        ]);
+        table.row(vec![
+            self.label.clone(),
+            format!("{}", self.steps),
+            format!("{:.2}", self.steps as f64 / wall),
+            frac(self.wait),
+            frac(self.adapt),
+            frac(self.marshal),
+            frac(self.execute),
+            frac(self.absorb),
+        ]);
+        if let Some(path) = &self.json_path {
+            write_json(path, &[("data_pipeline", &table)])
+                .with_context(|| format!("writing {path}"))?;
+            println!("wrote {path}");
+        }
+        self.table = Some(table);
+        Ok(())
+    }
+}
+
+impl BenchObserver {
+    /// Render + optionally persist the throughput table (the body of the
+    /// trait `on_finish`, split out to keep the impl block above short).
+    fn finish_table(&mut self, report: &TrainReport) -> Result<()> {
         let mut table = Table::new(&[
             "spec",
             "steps",

@@ -8,11 +8,17 @@
 //! copy-paste of the loop.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::data::{AugmentConfig, BatchLoader, ShapeWorld, ShapeWorldConfig};
+use crate::coordinator::InputAdapter;
+use crate::data::{
+    AugmentConfig, BatchLoader, LoaderBuilder, PrepareFn, PreparedInputs, ShapeWorld,
+    ShapeWorldConfig,
+};
+use crate::runtime::{literal_f32, SendLiteral};
 use crate::util::json::{self, Json};
 
 use super::driver::TrainDriver;
@@ -129,8 +135,13 @@ pub fn run_loop_with(
     let t0 = Instant::now();
     for epoch in 0..epochs {
         for _ in 0..steps_per_epoch {
-            let batch = loader.next();
-            let m = driver.step(&batch, epoch)?;
+            let t_wait = Instant::now();
+            let prepared = loader
+                .next_prepared()
+                .map_err(|e| anyhow::anyhow!("data pipeline failed at epoch {epoch}: {e}"))?;
+            let wait = t_wait.elapsed().as_secs_f64();
+            let mut m = driver.step_prepared(&prepared, epoch)?;
+            m.data_wait = wait;
             if !opts.quiet && (m.step % log_every == 0 || m.step + 1 == total) {
                 println!("{}", driver.format_step(&m, total));
             }
@@ -190,16 +201,35 @@ pub fn run_driver_with(
         seed,
         ..Default::default()
     });
-    let loader = BatchLoader::new(
-        dataset,
-        AugmentConfig::default(),
-        driver.batch_size()?,
-        epoch_size,
-        seed,
-        workers,
-        prefetch,
-    );
+    let loader = LoaderBuilder::new(Arc::new(dataset), driver.batch_size()?)
+        .augment(AugmentConfig::default())
+        .epoch_size(epoch_size)
+        .seed(seed)
+        .workers(workers)
+        .prefetch(prefetch)
+        .ordered(true)
+        .start_batch(driver.global_step() as u64)
+        .prepare(prepare_inputs(driver.input_adapter()))
+        .build();
     run_loop_with(driver, &loader, observers, opts)
+}
+
+/// A loader [`PrepareFn`] that marshals ahead for `adapter`: prefetch
+/// workers adapt both views and pre-build the f32 stream literals off the
+/// driver thread, so the step only has to hand ready literals to PJRT.
+/// The DDP driver reuses the adapted tensors and ignores the literals (it
+/// slices rows per shard). Numerics are bit-identical to inline
+/// adaptation — the same `InputAdapter::apply` runs on the same batch.
+pub fn prepare_inputs(adapter: InputAdapter) -> PrepareFn {
+    Arc::new(move |batch| {
+        let xa = adapter.apply(&batch.view_a.images);
+        let xb = adapter.apply(&batch.view_b.images);
+        let lits = Some((
+            SendLiteral::new(literal_f32(&xa)?),
+            SendLiteral::new(literal_f32(&xb)?),
+        ));
+        Ok(PreparedInputs { xa, xb, lits })
+    })
 }
 
 #[cfg(test)]

@@ -916,6 +916,7 @@ pub fn bench_diff(args: &mut Args) -> Result<()> {
     let max_regress = args.get_or("max-regress", 20.0f64)?;
     let warn_only = args.switch("warn-only");
     let default_files: Vec<String> = [
+        "BENCH_data_pipeline.json",
         "BENCH_fft_host.json",
         "BENCH_regularizer_host.json",
         "BENCH_session_compile.json",
@@ -1011,4 +1012,69 @@ pub fn session_bench(args: &mut Args) -> Result<()> {
         println!("wrote {path}");
     }
     Ok(())
+}
+
+// ----------------------------------------------------------------- shard
+
+/// `decorr shard pack|inspect` — the binary shard data plane.
+///
+/// * `shard pack --out <file> [--count 4096] [--size 32] [--seed 17]`
+///   renders `count` ShapeWorld samples into one mmap-able shard file
+///   ([`ShardWriter`](crate::data::ShardWriter); the header layout is
+///   documented in [`data::shard`](crate::data::shard)).
+/// * `shard inspect <file>` opens the shard through
+///   [`ShardReader`](crate::data::ShardReader) (validating the header and
+///   payload size) and prints count, sample shape, stride, and whether
+///   the payload is memory-mapped or served by `pread`.
+pub fn shard(args: &mut Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("pack") => {
+            let out = args.str_required("out")?;
+            let count = args.get_or("count", 4096u64)?;
+            let size = args.get_or("size", 32usize)?;
+            let seed = args.get_or("seed", 17u64)?;
+            args.finish()?;
+            let world = ShapeWorld::new(ShapeWorldConfig {
+                size,
+                seed,
+                ..Default::default()
+            });
+            let t0 = std::time::Instant::now();
+            let mut writer = crate::data::ShardWriter::create(&out, &[size, size, 3])?;
+            for i in 0..count {
+                writer.push(&world.sample(i))?;
+            }
+            let written = writer.finish()?;
+            println!(
+                "packed {written} samples ({size}x{size}x3, seed {seed}) into {out} in {}",
+                human_duration(t0.elapsed().as_secs_f64())
+            );
+            Ok(())
+        }
+        Some("inspect") => {
+            let path = match args.positional.get(1) {
+                Some(p) => p.clone(),
+                None => args.str_required("path")?,
+            };
+            args.finish()?;
+            let reader = crate::data::ShardReader::open(&path)?;
+            println!("shard {path}");
+            println!("  samples : {}", reader.count());
+            println!(
+                "  shape   : {:?} ({} f32 / sample)",
+                reader.shape(),
+                reader.stride()
+            );
+            println!(
+                "  backing : {}",
+                if reader.uses_mmap() { "mmap" } else { "pread" }
+            );
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown shard action {:?} — usage: decorr shard pack --out <file> \
+             [--count N] [--size S] [--seed K] | decorr shard inspect <file>",
+            other.unwrap_or("<none>")
+        ),
+    }
 }

@@ -27,7 +27,7 @@ use anyhow::{bail, Context, Result};
 use crate::api::train::{DriverBuilder, TrainDriver};
 use crate::api::LossSpec;
 use crate::config::TrainConfig;
-use crate::data::SslBatch;
+use crate::data::{PreparedBatch, PreparedInputs, SslBatch};
 use crate::runtime::{ExecutionBinding, ParamStore, Session, SharedSession, TensorSpec};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
@@ -253,8 +253,46 @@ impl DdpTrainer {
         Ok(ckpt)
     }
 
-    /// One DDP step: broadcast params → shard grads → average → apply.
+    /// One DDP step: broadcast params → shard grads → average → apply
+    /// (inline path: view adaptation happens here on the leader thread).
     pub fn step(&mut self, batch: &SslBatch, epoch: usize) -> Result<StepMetrics> {
+        self.step_inner(batch, None, epoch)
+    }
+
+    /// Marshal-ahead fast path: reuse worker-adapted view tensors when
+    /// their shape matches this leader's adapter output, skipping the
+    /// inline `InputAdapter::apply`. (Prepared full-batch literals are
+    /// ignored — DDP slices rows per shard.) Losses are bit-identical to
+    /// the inline path.
+    pub fn step_prepared(&mut self, pb: &PreparedBatch, epoch: usize) -> Result<StepMetrics> {
+        let prepared = pb
+            .prepared
+            .as_ref()
+            .filter(|p| self.prepared_matches(p, &pb.batch));
+        self.step_inner(&pb.batch, prepared, epoch)
+    }
+
+    /// Whether loader-prepared tensors have the shape this leader's
+    /// adapter would produce for `batch`.
+    fn prepared_matches(&self, p: &PreparedInputs, batch: &SslBatch) -> bool {
+        match self.adapter {
+            InputAdapter::Image => {
+                p.xa.shape() == batch.view_a.images.shape()
+                    && p.xb.shape() == batch.view_b.images.shape()
+            }
+            InputAdapter::FlatGray(f) => {
+                let n = batch.view_a.images.shape()[0];
+                p.xa.shape() == [n, f] && p.xb.shape() == [n, f]
+            }
+        }
+    }
+
+    fn step_inner(
+        &mut self,
+        batch: &SslBatch,
+        prepared: Option<&PreparedInputs>,
+        epoch: usize,
+    ) -> Result<StepMetrics> {
         let t0 = Instant::now();
         let lr = self.sched.lr(self.global_step);
         let perm: Arc<Vec<u32>> = Arc::new(if self.cfg.permute {
@@ -267,9 +305,28 @@ impl DdpTrainer {
         let host_params: Arc<Vec<(String, Tensor)>> =
             Arc::new(self.snapshot()?.tensors);
 
+        // Adapt: skipped when the loader marshaled ahead.
+        let t_adapt = Instant::now();
+        let inline: Option<(Tensor, Tensor)> = match prepared {
+            Some(_) => None,
+            None => Some((
+                self.adapter.apply(&batch.view_a.images),
+                self.adapter.apply(&batch.view_b.images),
+            )),
+        };
+        let adapt_time = if inline.is_some() {
+            t_adapt.elapsed().as_secs_f64()
+        } else {
+            0.0
+        };
+        let (xa, xb): (&Tensor, &Tensor) = match (prepared, &inline) {
+            (Some(p), _) => (&p.xa, &p.xb),
+            (None, Some((a, b))) => (a, b),
+            (None, None) => unreachable!("inline tensors exist when nothing was prepared"),
+        };
+
         // Shard the batch row-wise and dispatch.
-        let xa = self.adapter.apply(&batch.view_a.images);
-        let xb = self.adapter.apply(&batch.view_b.images);
+        let t_marshal = Instant::now();
         anyhow::ensure!(
             xa.shape()[0] == self.batch_size(),
             "batch is {} rows, ddp expects {}",
@@ -279,8 +336,8 @@ impl DdpTrainer {
         for (wid, worker) in self.workers.iter().enumerate() {
             let job = ShardJob {
                 params: host_params.clone(),
-                xa: slice_rows(&xa, wid * self.shard_batch, self.shard_batch),
-                xb: slice_rows(&xb, wid * self.shard_batch, self.shard_batch),
+                xa: slice_rows(xa, wid * self.shard_batch, self.shard_batch),
+                xb: slice_rows(xb, wid * self.shard_batch, self.shard_batch),
                 perm: perm.clone(),
             };
             worker
@@ -288,8 +345,10 @@ impl DdpTrainer {
                 .send(job)
                 .map_err(|_| anyhow::anyhow!("worker {wid} died"))?;
         }
+        let mut marshal_time = t_marshal.elapsed().as_secs_f64();
 
         // Collect + average.
+        let t_collect = Instant::now();
         let mut acc: Option<Vec<(String, Tensor)>> = None;
         let mut loss = 0.0f32;
         let mut inv = 0.0f32;
@@ -326,10 +385,13 @@ impl DdpTrainer {
         if !loss.is_finite() {
             bail!("non-finite loss at ddp step {}", self.global_step);
         }
+        // Collect wait covers shard execution on the worker threads.
+        let collect_time = t_collect.elapsed().as_secs_f64();
 
         // Apply the optimizer update on the leader: refresh the grad store
         // with this step's averages and run one binding step — the binding
         // marshals params/opt/grads by precomputed slot index.
+        let t_marshal2 = Instant::now();
         for (name, (gname, t)) in self.grad_names.iter().zip(&grads) {
             debug_assert_eq!(
                 name.trim_start_matches("grads."),
@@ -338,7 +400,8 @@ impl DdpTrainer {
             self.grads.put(name, literal_f32(t)?)?;
         }
         let lr_lit = crate::runtime::literal::literal_scalar(lr)?;
-        let emitted = self.apply_binding.step(
+        marshal_time += t_marshal2.elapsed().as_secs_f64();
+        let (emitted, phases) = self.apply_binding.step_timed(
             &mut [&mut self.params, &mut self.opt, &mut self.grads],
             &[&lr_lit],
         )?;
@@ -356,6 +419,11 @@ impl DdpTrainer {
             inv,
             reg,
             step_time: t0.elapsed().as_secs_f64(),
+            data_wait: 0.0,
+            adapt_time,
+            marshal_time,
+            execute_time: collect_time + phases.execute_seconds,
+            absorb_time: phases.absorb_seconds,
         };
         self.global_step += 1;
         Ok(m)
@@ -420,6 +488,14 @@ impl TrainDriver for DdpTrainer {
 
     fn step(&mut self, batch: &SslBatch, epoch: usize) -> Result<StepMetrics> {
         DdpTrainer::step(self, batch, epoch)
+    }
+
+    fn step_prepared(&mut self, batch: &PreparedBatch, epoch: usize) -> Result<StepMetrics> {
+        DdpTrainer::step_prepared(self, batch, epoch)
+    }
+
+    fn global_step(&self) -> usize {
+        self.global_step
     }
 
     fn snapshot(&self) -> Result<Checkpoint> {

@@ -31,6 +31,19 @@ pub struct StepMetrics {
     pub reg: f32,
     /// Wall-clock seconds for the step (data + execute).
     pub step_time: f64,
+    /// Seconds the driver waited for the loader to hand over the batch
+    /// (filled in by `run_loop`; 0 when stepping outside the loop).
+    pub data_wait: f64,
+    /// Seconds spent in `InputAdapter::apply` on the driver thread
+    /// (0 when a marshal-ahead batch skipped inline adaptation).
+    pub adapt_time: f64,
+    /// Seconds spent building stream literals + dispatch bookkeeping on
+    /// the driver thread.
+    pub marshal_time: f64,
+    /// Seconds inside device execution.
+    pub execute_time: f64,
+    /// Seconds absorbing outputs back into the param stores.
+    pub absorb_time: f64,
 }
 
 /// The synchronized interior: history + optional JSONL mirror.
@@ -89,6 +102,11 @@ impl MetricsLogger {
                 ("inv", Json::Num(m.inv as f64)),
                 ("reg", Json::Num(m.reg as f64)),
                 ("step_time", Json::Num(m.step_time)),
+                ("data_wait", Json::Num(m.data_wait)),
+                ("adapt_time", Json::Num(m.adapt_time)),
+                ("marshal_time", Json::Num(m.marshal_time)),
+                ("execute_time", Json::Num(m.execute_time)),
+                ("absorb_time", Json::Num(m.absorb_time)),
             ]);
             writeln!(f, "{}", line.to_string_compact())?;
             f.flush()?;
@@ -137,6 +155,11 @@ mod tests {
             inv: 0.0,
             reg: 0.0,
             step_time: 0.01,
+            data_wait: 0.0,
+            adapt_time: 0.0,
+            marshal_time: 0.0,
+            execute_time: 0.0,
+            absorb_time: 0.0,
         }
     }
 

@@ -24,7 +24,7 @@ use anyhow::{bail, Context, Result};
 use crate::api::train::{DriverBuilder, TrainDriver};
 use crate::api::LossSpec;
 use crate::config::TrainConfig;
-use crate::data::SslBatch;
+use crate::data::{PreparedBatch, PreparedInputs, SslBatch};
 use crate::runtime::literal::literal_scalar;
 use crate::runtime::{Artifact, ExecutionBinding, ParamStore, Session, TensorSpec};
 use crate::util::rng::Rng;
@@ -345,9 +345,48 @@ impl Trainer {
         )
     }
 
-    /// Execute one optimizer step on a prepared batch. Returns the step
-    /// metrics.
+    /// Execute one optimizer step on a twin-view batch (inline path:
+    /// adapt + marshal happen here on the calling thread). Returns the
+    /// step metrics.
     pub fn step(&mut self, batch: &SslBatch, epoch: usize) -> Result<StepMetrics> {
+        self.step_inner(batch, None, epoch)
+    }
+
+    /// Marshal-ahead fast path: when the loader's [`PreparedInputs`]
+    /// match this trainer's adapter output shape, skip inline adaptation
+    /// (and literal creation, when the literals rode along); otherwise
+    /// fall back to the inline path. Losses are bit-identical either way
+    /// — the prepare closure runs the same `InputAdapter::apply` +
+    /// `literal_f32` sequence, just on a worker thread.
+    pub fn step_prepared(&mut self, pb: &PreparedBatch, epoch: usize) -> Result<StepMetrics> {
+        let prepared = pb
+            .prepared
+            .as_ref()
+            .filter(|p| self.prepared_matches(p, &pb.batch));
+        self.step_inner(&pb.batch, prepared, epoch)
+    }
+
+    /// Whether worker-prepared tensors have the shape this trainer's
+    /// adapter would produce for `batch`.
+    fn prepared_matches(&self, p: &PreparedInputs, batch: &SslBatch) -> bool {
+        match self.input_adapt {
+            InputAdapter::Image => {
+                p.xa.shape() == batch.view_a.images.shape()
+                    && p.xb.shape() == batch.view_b.images.shape()
+            }
+            InputAdapter::FlatGray(f) => {
+                let n = batch.view_a.images.shape()[0];
+                p.xa.shape() == [n, f] && p.xb.shape() == [n, f]
+            }
+        }
+    }
+
+    fn step_inner(
+        &mut self,
+        batch: &SslBatch,
+        prepared: Option<&PreparedInputs>,
+        epoch: usize,
+    ) -> Result<StepMetrics> {
         let t0 = Instant::now();
         let lr = self.sched.lr(self.global_step);
         let perm: Vec<u32> = if self.cfg.permute {
@@ -356,18 +395,49 @@ impl Trainer {
             (0..self.embed_dim as u32).collect()
         };
 
-        let xa = self.input_adapt.apply(&batch.view_a.images);
-        let xb = self.input_adapt.apply(&batch.view_b.images);
-        let xa_lit = literal_f32(&xa)?;
-        let xb_lit = literal_f32(&xb)?;
+        // Adapt: skipped entirely when the loader marshaled ahead.
+        let t_adapt = Instant::now();
+        let inline: Option<(Tensor, Tensor)> = match prepared {
+            Some(_) => None,
+            None => Some((
+                self.input_adapt.apply(&batch.view_a.images),
+                self.input_adapt.apply(&batch.view_b.images),
+            )),
+        };
+        let adapt_time = if inline.is_some() {
+            t_adapt.elapsed().as_secs_f64()
+        } else {
+            0.0
+        };
+
+        // Marshal: reuse worker-built literals when they rode along,
+        // otherwise build them here from whichever tensors we have.
+        let t_marshal = Instant::now();
+        let owned: Option<(xla::Literal, xla::Literal)> = match (prepared, &inline) {
+            (Some(p), _) => match &p.lits {
+                Some(_) => None,
+                None => Some((literal_f32(&p.xa)?, literal_f32(&p.xb)?)),
+            },
+            (None, Some((xa, xb))) => Some((literal_f32(xa)?, literal_f32(xb)?)),
+            (None, None) => unreachable!("inline tensors exist when nothing was prepared"),
+        };
+        let (xa_lit, xb_lit): (&xla::Literal, &xla::Literal) = match (&owned, prepared) {
+            (Some((a, b)), _) => (a, b),
+            (None, Some(p)) => {
+                let (a, b) = p.lits.as_ref().expect("owned is None only with ready lits");
+                (a.get(), b.get())
+            }
+            (None, None) => unreachable!("owned literals exist when nothing was prepared"),
+        };
         let perm_lit = literal_i32(&perm)?;
         let lr_lit = literal_scalar(lr)?;
+        let marshal_time = t_marshal.elapsed().as_secs_f64();
 
         // The binding marshals store-resident literals by precomputed slot
         // index and absorbs updated params/opt state back in place.
-        let emitted = self.binding.step(
+        let (emitted, phases) = self.binding.step_timed(
             &mut [&mut self.params, &mut self.opt],
-            &[&xa_lit, &xb_lit, &perm_lit, &lr_lit],
+            &[xa_lit, xb_lit, &perm_lit, &lr_lit],
         )?;
         let loss = scalar(&emitted[self.loss_slot])?;
         let inv = match self.inv_slot {
@@ -390,6 +460,11 @@ impl Trainer {
             inv,
             reg,
             step_time: t0.elapsed().as_secs_f64(),
+            data_wait: 0.0,
+            adapt_time,
+            marshal_time,
+            execute_time: phases.execute_seconds,
+            absorb_time: phases.absorb_seconds,
         };
         self.global_step += 1;
         Ok(m)
@@ -426,6 +501,14 @@ impl TrainDriver for Trainer {
 
     fn step(&mut self, batch: &SslBatch, epoch: usize) -> Result<StepMetrics> {
         Trainer::step(self, batch, epoch)
+    }
+
+    fn step_prepared(&mut self, batch: &PreparedBatch, epoch: usize) -> Result<StepMetrics> {
+        Trainer::step_prepared(self, batch, epoch)
+    }
+
+    fn global_step(&self) -> usize {
+        self.global_step
     }
 
     fn snapshot(&self) -> Result<Checkpoint> {

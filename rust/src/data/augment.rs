@@ -50,6 +50,44 @@ impl Default for AugmentConfig {
     }
 }
 
+/// Reusable image buffers for [`Augmenter::view_in`].
+///
+/// The augmentation pipeline needs at most two full-size images alive at
+/// once (blur and flip read one buffer while writing the other); a
+/// `ViewScratch` owns that pair so a loader worker producing thousands
+/// of views allocates exactly twice instead of twice per view. Buffers
+/// are lazily (re)sized to the input shape, and a *dirty* scratch
+/// produces bit-identical views to a fresh one — every pipeline stage
+/// fully overwrites its output (pinned by a test below).
+#[derive(Clone, Debug)]
+pub struct ViewScratch {
+    bufs: [Tensor; 2],
+}
+
+impl Default for ViewScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ViewScratch {
+    /// Create an empty scratch; buffers materialize on first use.
+    pub fn new() -> Self {
+        Self {
+            bufs: [Tensor::zeros(&[0, 0, 0]), Tensor::zeros(&[0, 0, 0])],
+        }
+    }
+
+    /// Resize both buffers to `shape` (no-op when already matching).
+    fn ensure(&mut self, shape: &[usize]) {
+        for b in &mut self.bufs {
+            if b.shape() != shape {
+                *b = Tensor::zeros(shape);
+            }
+        }
+    }
+}
+
 /// Stateless augmentation engine; all randomness comes from the caller's
 /// [`Rng`], keeping the whole data path reproducible.
 #[derive(Clone, Debug)]
@@ -65,32 +103,58 @@ impl Augmenter {
 
     /// Produce one augmented view. `view_b` selects the asymmetric branch
     /// (solarize instead of frequent blur), per the BT recipe.
+    ///
+    /// Allocates a fresh output; hot paths use [`Self::view_in`] with a
+    /// per-worker [`ViewScratch`] instead. Both produce bit-identical
+    /// results for the same `Rng` state.
     pub fn view(&self, img: &Tensor, rng: &mut Rng, view_b: bool) -> Tensor {
-        let mut out = self.random_resized_crop(img, rng);
+        let mut scratch = ViewScratch::new();
+        self.view_in(img, rng, view_b, &mut scratch).clone()
+    }
+
+    /// [`Self::view`] writing into `scratch`'s reusable buffers; returns
+    /// a borrow of the finished view (valid until the next `view_in` on
+    /// the same scratch). Zero allocation after the first call at a
+    /// given image shape.
+    pub fn view_in<'s>(
+        &self,
+        img: &Tensor,
+        rng: &mut Rng,
+        view_b: bool,
+        scratch: &'s mut ViewScratch,
+    ) -> &'s Tensor {
+        scratch.ensure(img.shape());
+        let (h, w) = (img.shape()[0], img.shape()[1]);
+        let crop = self.crop_params(img, rng);
+        let [b0, b1] = &mut scratch.bufs;
+        let (mut cur, mut alt) = (b0, b1);
+        Self::resize_bilinear_into(img, crop, h, w, cur);
         if rng.bernoulli(self.cfg.flip_p) {
-            out = Self::hflip(&out);
+            Self::hflip_into(cur, alt);
+            std::mem::swap(&mut cur, &mut alt);
         }
         if rng.bernoulli(self.cfg.jitter_p) {
-            self.color_jitter(&mut out, rng);
+            self.color_jitter(cur, rng);
         }
         if rng.bernoulli(self.cfg.grayscale_p) {
-            Self::grayscale(&mut out);
+            Self::grayscale(cur);
         }
         let blur_p = if view_b { 0.1 } else { self.cfg.blur_p };
         if rng.bernoulli(blur_p) {
-            out = Self::blur3(&out);
+            Self::blur3_into(cur, alt);
+            std::mem::swap(&mut cur, &mut alt);
         }
         if view_b && rng.bernoulli(self.cfg.solarize_p) {
-            Self::solarize(&mut out, 0.5);
+            Self::solarize(cur, 0.5);
         }
-        for v in out.data_mut() {
+        for v in cur.data_mut() {
             *v = v.clamp(0.0, 1.0);
         }
-        out
+        cur
     }
 
-    /// Random resized crop back to the original resolution (bilinear).
-    fn random_resized_crop(&self, img: &Tensor, rng: &mut Rng) -> Tensor {
+    /// Draw random-resized-crop parameters: `(y0, x0, ch, cw)`.
+    fn crop_params(&self, img: &Tensor, rng: &mut Rng) -> (usize, usize, usize, usize) {
         let (h, w) = (img.shape()[0], img.shape()[1]);
         let area = rng.uniform(self.cfg.crop_min_area, 1.0);
         let aspect = rng.uniform(0.75, 1.333);
@@ -98,7 +162,7 @@ impl Augmenter {
         let cw = ((w as f32 * area.sqrt() * aspect.sqrt()).round() as usize).clamp(4, w);
         let y0 = rng.next_bounded((h - ch + 1) as u64) as usize;
         let x0 = rng.next_bounded((w - cw + 1) as u64) as usize;
-        Self::resize_bilinear(img, y0, x0, ch, cw, h, w)
+        (y0, x0, ch, cw)
     }
 
     /// Bilinear resize of the crop `[y0..y0+ch, x0..x0+cw]` to (oh, ow).
@@ -111,8 +175,23 @@ impl Augmenter {
         oh: usize,
         ow: usize,
     ) -> Tensor {
+        let mut out = Tensor::zeros(&[oh, ow, img.shape()[2]]);
+        Self::resize_bilinear_into(img, (y0, x0, ch, cw), oh, ow, &mut out);
+        out
+    }
+
+    /// [`Self::resize_bilinear`] writing into `out` (shape `[oh, ow, c]`,
+    /// fully overwritten). `crop` is `(y0, x0, ch, cw)`.
+    fn resize_bilinear_into(
+        img: &Tensor,
+        crop: (usize, usize, usize, usize),
+        oh: usize,
+        ow: usize,
+        out: &mut Tensor,
+    ) {
+        let (y0, x0, ch, cw) = crop;
         let (h, w, c) = (img.shape()[0], img.shape()[1], img.shape()[2]);
-        let mut out = Tensor::zeros(&[oh, ow, c]);
+        debug_assert_eq!(out.shape(), &[oh, ow, c]);
         let data = img.data();
         let sy = ch as f32 / oh as f32;
         let sx = cw as f32 / ow as f32;
@@ -139,12 +218,18 @@ impl Augmenter {
                 }
             }
         }
-        out
     }
 
     fn hflip(img: &Tensor) -> Tensor {
+        let mut out = Tensor::zeros(img.shape());
+        Self::hflip_into(img, &mut out);
+        out
+    }
+
+    /// Horizontal flip of `img` into `out` (same shape, fully overwritten).
+    fn hflip_into(img: &Tensor, out: &mut Tensor) {
         let (h, w, c) = (img.shape()[0], img.shape()[1], img.shape()[2]);
-        let mut out = Tensor::zeros(&[h, w, c]);
+        debug_assert_eq!(out.shape(), img.shape());
         for y in 0..h {
             for x in 0..w {
                 for ci in 0..c {
@@ -153,7 +238,6 @@ impl Augmenter {
                 }
             }
         }
-        out
     }
 
     fn color_jitter(&self, img: &mut Tensor, rng: &mut Rng) {
@@ -184,8 +268,16 @@ impl Augmenter {
 
     /// 3×3 binomial blur (σ ≈ 0.8 — appropriate for 32×32 inputs).
     fn blur3(img: &Tensor) -> Tensor {
+        let mut out = Tensor::zeros(img.shape());
+        Self::blur3_into(img, &mut out);
+        out
+    }
+
+    /// [`Self::blur3`] into `out` (same shape, fully overwritten; `out`
+    /// must be a distinct buffer from `img`).
+    fn blur3_into(img: &Tensor, out: &mut Tensor) {
         let (h, w, c) = (img.shape()[0], img.shape()[1], img.shape()[2]);
-        let mut out = Tensor::zeros(&[h, w, c]);
+        debug_assert_eq!(out.shape(), img.shape());
         let k = [1.0f32, 2.0, 1.0];
         for y in 0..h {
             for x in 0..w {
@@ -207,7 +299,6 @@ impl Augmenter {
                 }
             }
         }
-        out
     }
 
     fn solarize(img: &mut Tensor, threshold: f32) {
@@ -257,6 +348,29 @@ mod tests {
         let v1 = aug.view(&img, &mut Rng::new(7), true);
         let v2 = aug.view(&img, &mut Rng::new(7), true);
         assert_eq!(v1.data(), v2.data());
+    }
+
+    #[test]
+    fn view_in_reused_scratch_matches_allocating_view() {
+        // A dirty, reused scratch must be invisible: every stage fully
+        // overwrites its output buffer, so view_in == view bit for bit.
+        let aug = Augmenter::new(AugmentConfig::default());
+        let ds = ShapeWorld::new(ShapeWorldConfig::default());
+        let mut scratch = ViewScratch::new();
+        let mut rng_a = Rng::new(99);
+        let mut rng_b = Rng::new(99);
+        for i in 0..50 {
+            let img = ds.sample(i).image;
+            let view_b = i % 2 == 1;
+            let fresh = aug.view(&img, &mut rng_a, view_b);
+            let reused = aug.view_in(&img, &mut rng_b, view_b, &mut scratch);
+            let same = fresh
+                .data()
+                .iter()
+                .zip(reused.data())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "sample {i}: scratch path diverged from allocating path");
+        }
     }
 
     #[test]

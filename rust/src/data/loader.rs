@@ -1,22 +1,33 @@
-//! Prefetching SSL batch loader.
+//! Marshal-ahead prefetching SSL batch loader.
 //!
-//! Producer threads synthesize + augment batches ahead of the training
-//! loop (the rust analogue of the paper's DALI/num_workers pipeline), so
-//! the PJRT step never waits on data. Bounded channels give natural
-//! backpressure; determinism is preserved by seeding each batch's RNG from
-//! `(seed, batch_index)` rather than from thread scheduling.
+//! Producer threads synthesize/read + augment batches ahead of the
+//! training loop (the rust analogue of the paper's DALI/num_workers
+//! pipeline) and — when a [`PrepareFn`] is installed — also run input
+//! adaptation and stream-literal creation, so the driver thread's step
+//! reduces to execute + absorb. Bounded channels give natural
+//! backpressure; determinism is preserved by seeding each batch's RNG
+//! from `(seed, batch_index)` rather than from thread scheduling, and
+//! the optional in-order delivery mode ([`LoaderBuilder::ordered`])
+//! additionally hands batches to the loop in index order at any worker
+//! count, keeping `--resume` positions and epoch boundaries exact.
+//!
+//! Construction goes through [`LoaderBuilder`]; `BatchLoader::new`
+//! remains as the legacy unordered ShapeWorld shorthand.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::{
     atomic::{AtomicBool, AtomicU64, Ordering},
-    Arc,
+    Arc, Mutex,
 };
 use std::thread::JoinHandle;
 
-use super::augment::{AugmentConfig, Augmenter};
+use super::augment::{AugmentConfig, Augmenter, ViewScratch};
 use super::synth::ShapeWorld;
-use super::{stack, Batch};
+use super::{Batch, BatchSource};
+use crate::runtime::SendLiteral;
 use crate::util::rng::Rng;
+use crate::util::tensor::Tensor;
 
 /// A twin-view SSL batch: two augmented views of the same base images.
 #[derive(Clone, Debug)]
@@ -29,18 +40,169 @@ pub struct SslBatch {
     pub view_b: Batch,
 }
 
-/// Multi-threaded prefetching loader over [`ShapeWorld`].
+/// Driver-ready inputs computed on a prefetch worker: the two views
+/// pushed through the trainer's `InputAdapter`, plus (optionally) the
+/// finished stream literals. Producing these off the driver thread is
+/// the "marshal-ahead" half of the zero-stall pipeline.
+pub struct PreparedInputs {
+    /// Adapted view-A tensor (e.g. flattened/pooled), step-input shape.
+    pub xa: Tensor,
+    /// Adapted view-B tensor, step-input shape.
+    pub xb: Tensor,
+    /// Ready `xa`/`xb` stream literals, when the prepare closure builds
+    /// them (host literals are thread-movable; see [`SendLiteral`]).
+    pub lits: Option<(SendLiteral, SendLiteral)>,
+}
+
+/// What the loader delivers: the raw batch plus whatever the installed
+/// [`PrepareFn`] computed ahead of time (`None` without one).
+pub struct PreparedBatch {
+    /// The deterministic twin-view batch.
+    pub batch: SslBatch,
+    /// Marshal-ahead outputs, if a prepare closure is installed.
+    pub prepared: Option<PreparedInputs>,
+}
+
+/// Marshal-ahead closure run by prefetch workers on each finished batch.
+/// Must be a pure function of the batch for the bit-identity contract
+/// to hold (the driver falls back to inline adaptation when absent).
+pub type PrepareFn = Arc<dyn Fn(&SslBatch) -> anyhow::Result<PreparedInputs> + Send + Sync>;
+
+/// Typed failure of [`BatchLoader::next`] / [`BatchLoader::next_prepared`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LoaderError {
+    /// Every producer thread has exited (panic or shutdown) — the
+    /// channel is closed and no further batches can arrive.
+    WorkersExited,
+    /// A marshal-ahead [`PrepareFn`] returned an error on a worker; the
+    /// message carries the batch index and the error chain.
+    Prepare(String),
+}
+
+impl std::fmt::Display for LoaderError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoaderError::WorkersExited => {
+                write!(f, "all loader workers have exited; no more batches")
+            }
+            LoaderError::Prepare(msg) => write!(f, "marshal-ahead prepare failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LoaderError {}
+
+/// Reorder buffer for in-order delivery: stashes early arrivals until
+/// the next expected index shows up.
+struct Reorder {
+    next_index: u64,
+    stash: BTreeMap<u64, PreparedBatch>,
+}
+
+/// Configures and starts a [`BatchLoader`] over any [`BatchSource`].
+///
+/// Defaults: default augmentations, epoch size 4096, seed 17, 2 workers,
+/// prefetch 4, **ordered** delivery, start at batch 0, no prepare.
+pub struct LoaderBuilder {
+    source: Arc<dyn BatchSource>,
+    batch: usize,
+    aug: AugmentConfig,
+    epoch_size: u64,
+    seed: u64,
+    workers: usize,
+    prefetch: usize,
+    ordered: bool,
+    start_batch: u64,
+    prepare: Option<PrepareFn>,
+}
+
+impl LoaderBuilder {
+    /// Start configuring a loader producing batches of `batch` samples.
+    pub fn new(source: Arc<dyn BatchSource>, batch: usize) -> Self {
+        Self {
+            source,
+            batch,
+            aug: AugmentConfig::default(),
+            epoch_size: 4096,
+            seed: 17,
+            workers: 2,
+            prefetch: 4,
+            ordered: true,
+            start_batch: 0,
+            prepare: None,
+        }
+    }
+
+    /// Augmentation strengths (default: [`AugmentConfig::default`]).
+    pub fn augment(mut self, aug: AugmentConfig) -> Self {
+        self.aug = aug;
+        self
+    }
+
+    /// Virtual dataset size one "epoch" of batch indices wraps over.
+    pub fn epoch_size(mut self, n: u64) -> Self {
+        self.epoch_size = n;
+        self
+    }
+
+    /// Base seed of the `(seed, batch_index)` determinism contract.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Producer thread count (clamped to at least 1).
+    pub fn workers(mut self, k: usize) -> Self {
+        self.workers = k;
+        self
+    }
+
+    /// Channel depth: how many finished batches may queue ahead.
+    pub fn prefetch(mut self, p: usize) -> Self {
+        self.prefetch = p;
+        self
+    }
+
+    /// In-order delivery (default on): hand batches to the consumer in
+    /// index order via a small reorder buffer, regardless of worker
+    /// scheduling. Off restores arrival-order delivery.
+    pub fn ordered(mut self, on: bool) -> Self {
+        self.ordered = on;
+        self
+    }
+
+    /// First batch index to produce (e.g. the global step on `--resume`).
+    pub fn start_batch(mut self, b: u64) -> Self {
+        self.start_batch = b;
+        self
+    }
+
+    /// Install a marshal-ahead closure run by workers on each batch.
+    pub fn prepare(mut self, f: PrepareFn) -> Self {
+        self.prepare = Some(f);
+        self
+    }
+
+    /// Spawn the workers and return the running loader.
+    pub fn build(self) -> BatchLoader {
+        BatchLoader::start(self)
+    }
+}
+
+/// Multi-threaded prefetching loader over a [`BatchSource`].
 pub struct BatchLoader {
-    rx: mpsc::Receiver<SslBatch>,
+    rx: mpsc::Receiver<Result<PreparedBatch, String>>,
     stop: Arc<AtomicBool>,
     workers: Vec<JoinHandle<()>>,
+    reorder: Option<Mutex<Reorder>>,
 }
 
 impl BatchLoader {
-    /// Start `workers` producer threads generating batches of size `batch`.
-    /// Batch `i` consumes dataset indices `[i*batch, (i+1)*batch)` — one
-    /// "epoch" over a virtual dataset of `epoch_size` samples wraps the
-    /// index range.
+    /// Legacy shorthand: unordered loader over [`ShapeWorld`] with no
+    /// marshal-ahead stage. Batch `i` consumes dataset indices
+    /// `[i*batch, (i+1)*batch)` — one "epoch" over a virtual dataset of
+    /// `epoch_size` samples wraps the index range. New call sites should
+    /// prefer [`LoaderBuilder`].
     pub fn new(
         dataset: ShapeWorld,
         aug: AugmentConfig,
@@ -50,21 +212,59 @@ impl BatchLoader {
         workers: usize,
         prefetch: usize,
     ) -> BatchLoader {
-        let (tx, rx) = mpsc::sync_channel(prefetch.max(1));
+        LoaderBuilder::new(Arc::new(dataset), batch)
+            .augment(aug)
+            .epoch_size(epoch_size)
+            .seed(seed)
+            .workers(workers)
+            .prefetch(prefetch)
+            .ordered(false)
+            .build()
+    }
+
+    fn start(b: LoaderBuilder) -> BatchLoader {
+        let (tx, rx) = mpsc::sync_channel(b.prefetch.max(1));
         let stop = Arc::new(AtomicBool::new(false));
-        let next_batch = Arc::new(AtomicU64::new(0));
+        let next_batch = Arc::new(AtomicU64::new(b.start_batch));
         let mut handles = Vec::new();
-        for _ in 0..workers.max(1) {
+        for _ in 0..b.workers.max(1) {
             let tx = tx.clone();
             let stop = stop.clone();
             let next_batch = next_batch.clone();
-            let dataset = dataset.clone();
-            let augmenter = Augmenter::new(aug.clone());
+            let source = b.source.clone();
+            let augmenter = Augmenter::new(b.aug.clone());
+            let prepare = b.prepare.clone();
+            let (batch, epoch_size, seed) = (b.batch, b.epoch_size, b.seed);
             handles.push(std::thread::spawn(move || {
+                let mut scratch = ViewScratch::new();
                 while !stop.load(Ordering::Relaxed) {
                     let bi = next_batch.fetch_add(1, Ordering::Relaxed);
-                    let b = make_batch(&dataset, &augmenter, batch, epoch_size, seed, bi);
-                    if tx.send(b).is_err() {
+                    let built = make_batch_from(
+                        source.as_ref(),
+                        &augmenter,
+                        batch,
+                        epoch_size,
+                        seed,
+                        bi,
+                        &mut scratch,
+                    );
+                    let prepared = match &prepare {
+                        Some(f) => match f(&built) {
+                            Ok(p) => Some(p),
+                            Err(e) => {
+                                let _ = tx.send(Err(format!("batch {bi}: {e:#}")));
+                                return;
+                            }
+                        },
+                        None => None,
+                    };
+                    if tx
+                        .send(Ok(PreparedBatch {
+                            batch: built,
+                            prepared,
+                        }))
+                        .is_err()
+                    {
                         break; // receiver dropped
                     }
                 }
@@ -74,14 +274,51 @@ impl BatchLoader {
             rx,
             stop,
             workers: handles,
+            reorder: b.ordered.then(|| {
+                Mutex::new(Reorder {
+                    next_index: b.start_batch,
+                    stash: BTreeMap::new(),
+                })
+            }),
         }
     }
 
-    /// Fetch the next prefetched batch (blocks if producers are behind).
-    /// NOTE: with >1 worker, batches may arrive slightly out of index
-    /// order; each batch is still deterministic by its `index`.
-    pub fn next(&self) -> SslBatch {
-        self.rx.recv().expect("loader workers died")
+    /// Fetch the next batch (blocks if producers are behind), dropping
+    /// any marshal-ahead outputs. In ordered mode this is batch
+    /// `start_batch + k` on the `k`-th call; otherwise arrival order.
+    pub fn next(&self) -> Result<SslBatch, LoaderError> {
+        self.next_prepared().map(|p| p.batch)
+    }
+
+    /// Fetch the next batch together with its marshal-ahead outputs.
+    pub fn next_prepared(&self) -> Result<PreparedBatch, LoaderError> {
+        match &self.reorder {
+            None => self.recv_one(),
+            Some(m) => {
+                let mut r = m.lock().unwrap_or_else(|p| p.into_inner());
+                loop {
+                    let want = r.next_index;
+                    if let Some(b) = r.stash.remove(&want) {
+                        r.next_index += 1;
+                        return Ok(b);
+                    }
+                    let b = self.recv_one()?;
+                    if b.batch.index == want {
+                        r.next_index += 1;
+                        return Ok(b);
+                    }
+                    r.stash.insert(b.batch.index, b);
+                }
+            }
+        }
+    }
+
+    fn recv_one(&self) -> Result<PreparedBatch, LoaderError> {
+        match self.rx.recv() {
+            Ok(Ok(b)) => Ok(b),
+            Ok(Err(msg)) => Err(LoaderError::Prepare(msg)),
+            Err(_) => Err(LoaderError::WorkersExited),
+        }
     }
 }
 
@@ -97,7 +334,10 @@ impl Drop for BatchLoader {
     }
 }
 
-/// Deterministically build SSL batch `batch_index`.
+/// Deterministically build SSL batch `batch_index` from a [`ShapeWorld`]
+/// with one-shot scratch buffers. Hot paths (the loader workers) use
+/// [`make_batch_from`] with a persistent [`ViewScratch`] instead; both
+/// produce bit-identical batches.
 pub fn make_batch(
     dataset: &ShapeWorld,
     augmenter: &Augmenter,
@@ -106,27 +346,64 @@ pub fn make_batch(
     seed: u64,
     batch_index: u64,
 ) -> SslBatch {
+    let mut scratch = ViewScratch::new();
+    make_batch_from(dataset, augmenter, batch, epoch_size, seed, batch_index, &mut scratch)
+}
+
+/// Deterministically build SSL batch `batch_index` from any source,
+/// augmenting straight into the stacked batch tensors through `scratch`
+/// (no per-sample allocation). Sample indices walk
+/// `(batch_index*batch ..)` modulo `epoch_size`, then modulo the
+/// source's length when it is finite.
+pub fn make_batch_from(
+    source: &dyn BatchSource,
+    augmenter: &Augmenter,
+    batch: usize,
+    epoch_size: u64,
+    seed: u64,
+    batch_index: u64,
+    scratch: &mut ViewScratch,
+) -> SslBatch {
     let mut rng = Rng::new(seed ^ batch_index.wrapping_mul(0xA24BAED4963EE407));
     let start = (batch_index * batch as u64) % epoch_size.max(1);
-    let mut va = Vec::with_capacity(batch);
-    let mut vb = Vec::with_capacity(batch);
+    let shape = source.sample_shape();
+    let stride: usize = shape.iter().product();
+    let mut full_shape = vec![batch];
+    full_shape.extend_from_slice(&shape);
+    let mut images_a = Tensor::zeros(&full_shape);
+    let mut images_b = Tensor::zeros(&full_shape);
+    let mut labels = Vec::with_capacity(batch);
+    let n = source.len();
     for i in 0..batch as u64 {
-        let sample = dataset.sample((start + i) % epoch_size.max(1));
-        let a = augmenter.view(&sample.image, &mut rng, false);
-        let b = augmenter.view(&sample.image, &mut rng, true);
-        va.push(super::Sample {
-            image: a,
-            label: sample.label,
-        });
-        vb.push(super::Sample {
-            image: b,
-            label: sample.label,
-        });
+        let mut idx = (start + i) % epoch_size.max(1);
+        if let Some(n) = n {
+            if n > 0 {
+                idx %= n;
+            }
+        }
+        let sample = source.sample(idx);
+        debug_assert_eq!(sample.image.shape(), &shape[..]);
+        let off = i as usize * stride;
+        {
+            let a = augmenter.view_in(&sample.image, &mut rng, false, scratch);
+            images_a.data_mut()[off..off + stride].copy_from_slice(a.data());
+        }
+        {
+            let b = augmenter.view_in(&sample.image, &mut rng, true, scratch);
+            images_b.data_mut()[off..off + stride].copy_from_slice(b.data());
+        }
+        labels.push(sample.label);
     }
     SslBatch {
         index: batch_index,
-        view_a: stack(&va),
-        view_b: stack(&vb),
+        view_a: Batch {
+            images: images_a,
+            labels: labels.clone(),
+        },
+        view_b: Batch {
+            images: images_b,
+            labels,
+        },
     }
 }
 
@@ -147,10 +424,18 @@ mod tests {
         )
     }
 
+    fn builder(workers: usize) -> LoaderBuilder {
+        LoaderBuilder::new(Arc::new(ShapeWorld::new(ShapeWorldConfig::default())), 4)
+            .epoch_size(64)
+            .seed(5)
+            .workers(workers)
+            .prefetch(2)
+    }
+
     #[test]
     fn produces_twin_batches() {
         let l = loader(1);
-        let b = l.next();
+        let b = l.next().unwrap();
         assert_eq!(b.view_a.images.shape(), &[8, 32, 32, 3]);
         assert_eq!(b.view_b.images.shape(), &[8, 32, 32, 3]);
         assert_eq!(b.view_a.labels, b.view_b.labels);
@@ -172,10 +457,60 @@ mod tests {
         let l = loader(3);
         let mut seen = std::collections::BTreeSet::new();
         for _ in 0..6 {
-            seen.insert(l.next().index);
+            seen.insert(l.next().unwrap().index);
         }
         // 6 distinct batch indices, regardless of arrival order
         assert_eq!(seen.len(), 6);
+    }
+
+    #[test]
+    fn ordered_mode_delivers_in_index_order() {
+        for workers in [1usize, 3, 8] {
+            let l = builder(workers).ordered(true).build();
+            for want in 0..12u64 {
+                let got = l.next().unwrap().index;
+                assert_eq!(got, want, "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn start_batch_offsets_ordered_delivery() {
+        let l = builder(2).start_batch(7).build();
+        for want in 7..11u64 {
+            assert_eq!(l.next().unwrap().index, want);
+        }
+    }
+
+    #[test]
+    fn prepared_outputs_ride_along() {
+        let l = builder(2)
+            .prepare(Arc::new(|b: &SslBatch| {
+                Ok(PreparedInputs {
+                    xa: b.view_a.images.clone(),
+                    xb: b.view_b.images.clone(),
+                    lits: None,
+                })
+            }))
+            .build();
+        let pb = l.next_prepared().unwrap();
+        let p = pb.prepared.expect("prepare closure installed");
+        assert_eq!(p.xa.data(), pb.batch.view_a.images.data());
+        assert_eq!(p.xb.data(), pb.batch.view_b.images.data());
+    }
+
+    #[test]
+    fn prepare_error_surfaces_as_typed_loader_error() {
+        let l = builder(1)
+            .prepare(Arc::new(|_: &SslBatch| -> anyhow::Result<PreparedInputs> {
+                anyhow::bail!("boom")
+            }))
+            .build();
+        match l.next_prepared() {
+            Err(LoaderError::Prepare(msg)) => assert!(msg.contains("boom"), "{msg}"),
+            Err(other) => panic!("wrong error: {other}"),
+            Ok(_) => panic!("expected the prepare failure to surface"),
+        }
     }
 
     #[test]
@@ -183,5 +518,13 @@ mod tests {
         let l = loader(2);
         let _ = l.next();
         drop(l); // must not hang
+    }
+
+    #[test]
+    fn drop_under_backpressure_does_not_hang() {
+        // Never consume: all workers end up blocked on the full channel.
+        let l = loader(3);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        drop(l); // must wake blocked senders and join
     }
 }

@@ -1,28 +1,78 @@
-//! Synthetic data substrate: dataset synthesis, SSL augmentations, and a
-//! prefetching batch loader.
+//! The streaming data plane: sample sources, SSL augmentations, binary
+//! shards, and a marshal-ahead prefetching batch loader.
 //!
-//! The paper pretrains on ImageNet/ImageNet-100, which this environment
-//! does not have. Per DESIGN.md §Substitutions we synthesize **ShapeWorld**:
-//! procedurally generated 32×32×3 images of parametric shapes. The dataset
-//! gives the two properties the paper's study actually needs:
+//! The pipeline is `BatchSource → BatchLoader → PreparedBatch → run_loop`:
 //!
-//! 1. semantics-preserving augmentations (crop/flip/jitter leave the shape
-//!    class intact), so the SSL invariance objective is meaningful;
-//! 2. a downstream label structure (shape class) for linear evaluation.
+//! ```text
+//! BatchSource (ShapeWorld | ShardDataset)
+//!     │  sample(index) — deterministic from (seed, index)
+//!     ▼
+//! BatchLoader workers (N threads, per-worker ViewScratch)
+//!     │  make_batch_from: augment two views per sample, zero realloc
+//!     │  PrepareFn (optional): InputAdapter::apply + stream literals
+//!     ▼  bounded channel of PreparedBatch, optional in-order delivery
+//! run_loop / TrainDriver::step_prepared
+//!        adapt + marshal already done → execute + absorb only
+//! ```
 //!
-//! Everything is deterministic from a seed: sample `i` of dataset `seed` is
-//! identical across runs and machines; the two augmented views of a sample
-//! use independent draws, like the paper's two transformation streams.
+//! Two sample sources implement [`BatchSource`] today. **ShapeWorld**
+//! (see [`synth`]) procedurally generates 32×32×3 images of parametric
+//! shapes — the paper pretrains on ImageNet/ImageNet-100, which this
+//! environment does not have, and ShapeWorld keeps the two properties
+//! the paper's study actually needs: semantics-preserving augmentations
+//! and a downstream label structure for linear evaluation. **Shards**
+//! (see [`shard`]) stream real datasets from memory-mapped binary files
+//! with a fixed-stride f32 payload; the header layout (magic `DCRSHRD1`,
+//! version, dtype, rank, count, dims) is documented in [`shard`].
+//!
+//! Everything is deterministic from a seed: sample `i` of dataset `seed`
+//! is identical across runs and machines; batch `k` is a pure function
+//! of `(seed, k)` regardless of worker count or delivery order; and the
+//! two augmented views of a sample use independent draws, like the
+//! paper's two transformation streams. The loader's marshal-ahead stage
+//! ([`PreparedBatch`]) moves `InputAdapter::apply` and literal creation
+//! off the driver thread without touching any of those draws, so inline
+//! and prepared paths produce bit-identical training losses (pinned in
+//! `tests/driver.rs`).
 
 pub mod augment;
 pub mod loader;
+pub mod shard;
 pub mod synth;
 
-pub use augment::{AugmentConfig, Augmenter};
-pub use loader::{BatchLoader, SslBatch};
+pub use augment::{AugmentConfig, Augmenter, ViewScratch};
+pub use loader::{
+    BatchLoader, LoaderBuilder, LoaderError, PrepareFn, PreparedBatch, PreparedInputs, SslBatch,
+};
+pub use shard::{ShardDataset, ShardReader, ShardWriter};
 pub use synth::{ShapeWorld, ShapeWorldConfig};
 
 use crate::util::tensor::Tensor;
+
+/// A deterministic, indexable source of labelled samples.
+///
+/// Implementors must make `sample(i)` a pure function of the source's
+/// own configuration and `i` — the loader's `(seed, batch_index)`
+/// determinism contract reduces every batch to a set of sample indices,
+/// so any source honoring this trait yields bit-identical batches at any
+/// worker count.
+pub trait BatchSource: Send + Sync {
+    /// Produce sample `index`. Finite sources wrap the index modulo
+    /// their length; infinite (procedural) sources use it as a seed.
+    fn sample(&self, index: u64) -> Sample;
+
+    /// Shape of every sample's image tensor, e.g. `[32, 32, 3]`.
+    fn sample_shape(&self) -> Vec<usize>;
+
+    /// `Some(n)` for finite sources (indices wrap modulo `n`), `None`
+    /// for procedural sources with unbounded index space.
+    fn len(&self) -> Option<u64>;
+
+    /// Whether a finite source holds zero samples.
+    fn is_empty(&self) -> bool {
+        self.len() == Some(0)
+    }
+}
 
 /// One labelled image: (H, W, C) tensor in `[0, 1]` plus its class id.
 #[derive(Clone, Debug)]

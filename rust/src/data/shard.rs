@@ -1,0 +1,580 @@
+//! Versioned binary shard format for streaming real datasets.
+//!
+//! A shard is a single file holding `count` fixed-stride f32 samples plus
+//! one u32 label per sample:
+//!
+//! ```text
+//! offset   size            field
+//! 0        8               magic  b"DCRSHRD1"
+//! 8        4               version (u32 LE, currently 1)
+//! 12       4               dtype   (u32 LE, 1 = f32)
+//! 16       4               rank    (u32 LE, 1..=8)
+//! 20       8               count   (u64 LE, number of samples)
+//! 28       4*rank          dims    (u32 LE each, per-sample shape)
+//! 28+4r    count*stride*4  payload: samples back to back, row-major f32 LE
+//! ...      count*4         labels: one u32 LE per sample
+//! ```
+//!
+//! `stride` is the per-sample element count (the product of `dims`), so
+//! every sample lives at a computed offset and reading one is a single
+//! bounded read — no index, no per-record framing, no heap churn beyond
+//! the output tensor. [`ShardReader`] memory-maps the file through raw
+//! `mmap(2)` (no extra dependency; this crate is Linux-only) and falls
+//! back to positioned `pread`-style reads when mapping fails.
+//!
+//! Validation on open is strict: wrong magic, unknown version or dtype
+//! tag, zero dims, and any file whose byte length does not *exactly*
+//! match the header's promise (truncated payload or trailing garbage)
+//! are all typed errors, never partial reads.
+//!
+//! [`ShardWriter`] streams samples to disk with the count patched into
+//! the header on [`ShardWriter::finish`], and [`ShardDataset`] adapts a
+//! reader to the [`BatchSource`] trait so `decorr shard pack` output
+//! drops straight into the training loop. See `decorr shard --help` for
+//! the CLI surface.
+
+use std::fs::File;
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::os::unix::fs::FileExt;
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{BatchSource, Sample};
+use crate::util::tensor::Tensor;
+
+/// File magic: "DeCoRr SHaRD v1" squeezed into eight bytes.
+pub const MAGIC: [u8; 8] = *b"DCRSHRD1";
+/// Format version this build reads and writes.
+pub const VERSION: u32 = 1;
+/// Dtype tag for little-endian IEEE-754 f32 payloads (the only dtype).
+pub const DTYPE_F32: u32 = 1;
+/// Maximum sample rank the fixed header accommodates.
+pub const MAX_RANK: u32 = 8;
+
+/// Byte offset of the `count` field (patched by [`ShardWriter::finish`]).
+const COUNT_OFFSET: u64 = 20;
+
+/// Header length in bytes for a given sample rank.
+fn header_len(rank: usize) -> u64 {
+    28 + 4 * rank as u64
+}
+
+// ------------------------------------------------------------------ mmap
+
+/// A read-only private mapping of a whole file, via raw `mmap(2)`.
+///
+/// The crate policy is "no new heavy deps", so this carries its own two
+/// foreign declarations instead of pulling in a memmap crate. The mapping
+/// is `PROT_READ`/`MAP_PRIVATE`: the kernel pages data in on demand and
+/// the file on disk can never be modified through it.
+struct Mmap {
+    ptr: *const u8,
+    len: usize,
+}
+
+const PROT_READ: i32 = 1;
+const MAP_PRIVATE: i32 = 2;
+
+extern "C" {
+    fn mmap(
+        addr: *mut std::ffi::c_void,
+        len: usize,
+        prot: i32,
+        flags: i32,
+        fd: i32,
+        offset: i64,
+    ) -> *mut std::ffi::c_void;
+    fn munmap(addr: *mut std::ffi::c_void, len: usize) -> i32;
+}
+
+// Safety: the mapping is read-only for its whole lifetime, so shared
+// access from any thread is data-race free; the pointer is owned by this
+// struct and unmapped exactly once on drop.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `len` bytes of `file` read-only; `None` when the kernel
+    /// declines (callers fall back to positioned reads).
+    fn map(file: &File, len: usize) -> Option<Mmap> {
+        if len == 0 {
+            return None;
+        }
+        let failed = usize::MAX as *mut std::ffi::c_void; // MAP_FAILED == (void*)-1
+        let ptr = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ,
+                MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == failed || ptr.is_null() {
+            None
+        } else {
+            Some(Mmap {
+                ptr: ptr as *const u8,
+                len,
+            })
+        }
+    }
+
+    /// Borrow `len` bytes starting at `off`. Callers have validated the
+    /// range against the file size on open.
+    fn bytes(&self, off: usize, len: usize) -> &[u8] {
+        debug_assert!(off + len <= self.len);
+        unsafe { std::slice::from_raw_parts(self.ptr.add(off), len) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        unsafe {
+            munmap(self.ptr as *mut std::ffi::c_void, self.len);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- writer
+
+/// Streams fixed-shape samples into a shard file.
+///
+/// The header is written on [`ShardWriter::create`] with a zero count;
+/// [`ShardWriter::finish`] appends the buffered labels, patches the real
+/// count into the header, and flushes. A writer dropped without `finish`
+/// leaves a file whose size disagrees with its header, which
+/// [`ShardReader::open`] rejects — a crashed pack can never be mistaken
+/// for a complete shard.
+pub struct ShardWriter {
+    file: BufWriter<File>,
+    shape: Vec<usize>,
+    labels: Vec<u32>,
+    count: u64,
+}
+
+impl ShardWriter {
+    /// Create (truncating) a shard at `path` for samples of `shape`.
+    pub fn create(path: impl AsRef<Path>, shape: &[usize]) -> Result<Self> {
+        let path = path.as_ref();
+        anyhow::ensure!(
+            !shape.is_empty() && shape.len() <= MAX_RANK as usize,
+            "sample rank must be 1..={MAX_RANK}, got {}",
+            shape.len()
+        );
+        anyhow::ensure!(
+            shape.iter().all(|&d| d > 0 && d <= u32::MAX as usize),
+            "sample dims must be positive u32 values, got {shape:?}"
+        );
+        let file = File::create(path)
+            .with_context(|| format!("create shard '{}'", path.display()))?;
+        let mut file = BufWriter::new(file);
+        file.write_all(&MAGIC)?;
+        file.write_all(&VERSION.to_le_bytes())?;
+        file.write_all(&DTYPE_F32.to_le_bytes())?;
+        file.write_all(&(shape.len() as u32).to_le_bytes())?;
+        file.write_all(&0u64.to_le_bytes())?; // count — patched by finish()
+        for &d in shape {
+            file.write_all(&(d as u32).to_le_bytes())?;
+        }
+        Ok(Self {
+            file,
+            shape: shape.to_vec(),
+            labels: Vec::new(),
+            count: 0,
+        })
+    }
+
+    /// Append one sample. Its image shape must match the shard shape.
+    pub fn push(&mut self, sample: &Sample) -> Result<()> {
+        anyhow::ensure!(
+            sample.image.shape() == &self.shape[..],
+            "sample shape {:?} does not match shard shape {:?}",
+            sample.image.shape(),
+            self.shape
+        );
+        for &v in sample.image.data() {
+            self.file.write_all(&v.to_le_bytes())?;
+        }
+        self.labels.push(sample.label);
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Samples appended so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Append the label block, patch the header count, flush; returns the
+    /// final sample count.
+    pub fn finish(mut self) -> Result<u64> {
+        for &label in &self.labels {
+            self.file.write_all(&label.to_le_bytes())?;
+        }
+        self.file.flush()?;
+        let file = self.file.get_mut();
+        file.seek(SeekFrom::Start(COUNT_OFFSET))?;
+        file.write_all(&self.count.to_le_bytes())?;
+        file.flush()?;
+        Ok(self.count)
+    }
+}
+
+// ---------------------------------------------------------------- reader
+
+/// Random-access reader over one shard file.
+///
+/// Prefers a whole-file read-only memory map; when mapping is
+/// unavailable every access degrades to a positioned `pread`, so the two
+/// paths return bit-identical samples (pinned by a test below).
+pub struct ShardReader {
+    file: File,
+    map: Option<Mmap>,
+    shape: Vec<usize>,
+    stride: usize,
+    count: u64,
+    payload_off: u64,
+    labels_off: u64,
+}
+
+impl ShardReader {
+    /// Open and validate a shard, memory-mapping it when possible.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        Self::open_inner(path.as_ref(), true)
+    }
+
+    /// Open forcing the positioned-read fallback (no memory map). Used by
+    /// tests to pin mmap/pread equivalence; behavior is otherwise
+    /// identical to [`ShardReader::open`].
+    pub fn open_pread(path: impl AsRef<Path>) -> Result<Self> {
+        Self::open_inner(path.as_ref(), false)
+    }
+
+    fn open_inner(path: &Path, try_mmap: bool) -> Result<Self> {
+        let file =
+            File::open(path).with_context(|| format!("open shard '{}'", path.display()))?;
+        let mut head = [0u8; 28];
+        file.read_exact_at(&mut head, 0)
+            .with_context(|| format!("shard '{}': header truncated", path.display()))?;
+        anyhow::ensure!(
+            head[..8] == MAGIC,
+            "shard '{}': bad magic (not a decorr shard)",
+            path.display()
+        );
+        let version = u32::from_le_bytes(head[8..12].try_into().unwrap());
+        anyhow::ensure!(
+            version == VERSION,
+            "shard '{}': unsupported version {version} (this build reads {VERSION})",
+            path.display()
+        );
+        let dtype = u32::from_le_bytes(head[12..16].try_into().unwrap());
+        anyhow::ensure!(
+            dtype == DTYPE_F32,
+            "shard '{}': unsupported dtype tag {dtype} (expected {DTYPE_F32} = f32)",
+            path.display()
+        );
+        let rank = u32::from_le_bytes(head[16..20].try_into().unwrap());
+        anyhow::ensure!(
+            (1..=MAX_RANK).contains(&rank),
+            "shard '{}': rank {rank} out of range 1..={MAX_RANK}",
+            path.display()
+        );
+        let count = u64::from_le_bytes(head[20..28].try_into().unwrap());
+        let mut dim_bytes = vec![0u8; 4 * rank as usize];
+        file.read_exact_at(&mut dim_bytes, 28)
+            .with_context(|| format!("shard '{}': header truncated", path.display()))?;
+        let shape: Vec<usize> = dim_bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
+        anyhow::ensure!(
+            shape.iter().all(|&d| d > 0),
+            "shard '{}': zero dim in sample shape {shape:?}",
+            path.display()
+        );
+        let stride = shape
+            .iter()
+            .copied()
+            .try_fold(1usize, usize::checked_mul)
+            .with_context(|| {
+                format!("shard '{}': sample shape {shape:?} overflows", path.display())
+            })?;
+        let payload_off = header_len(shape.len());
+        let sample_bytes = stride as u64 * 4 + 4; // f32 payload + u32 label
+        let expected = count
+            .checked_mul(sample_bytes)
+            .and_then(|b| b.checked_add(payload_off))
+            .with_context(|| format!("shard '{}': size overflows", path.display()))?;
+        let actual = file.metadata()?.len();
+        anyhow::ensure!(
+            actual == expected,
+            "shard '{}': file is {actual} bytes but the header promises {expected} \
+             (count={count}, stride={stride}) — truncated or trailing bytes",
+            path.display()
+        );
+        let labels_off = payload_off + count * stride as u64 * 4;
+        let map = if try_mmap {
+            Mmap::map(&file, actual as usize)
+        } else {
+            None
+        };
+        Ok(Self {
+            file,
+            map,
+            shape,
+            stride,
+            count,
+            payload_off,
+            labels_off,
+        })
+    }
+
+    /// Number of samples in the shard.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Per-sample shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Per-sample element count (product of [`ShardReader::shape`]).
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Whether the file is memory-mapped (vs the positioned-read path).
+    pub fn uses_mmap(&self) -> bool {
+        self.map.is_some()
+    }
+
+    /// Read sample `index` (0-based). Bit-exact: the stored f32 payload
+    /// round-trips through the little-endian encoding untouched.
+    pub fn read_sample(&self, index: u64) -> Result<Sample> {
+        anyhow::ensure!(
+            index < self.count,
+            "sample index {index} out of range (shard holds {})",
+            self.count
+        );
+        let off = self.payload_off + index * self.stride as u64 * 4;
+        let n_bytes = self.stride * 4;
+        let mut data = Vec::with_capacity(self.stride);
+        let mut buf = Vec::new();
+        let bytes: &[u8] = match &self.map {
+            Some(m) => m.bytes(off as usize, n_bytes),
+            None => {
+                buf.resize(n_bytes, 0);
+                self.file.read_exact_at(&mut buf, off)?;
+                &buf
+            }
+        };
+        data.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+        );
+        let label_off = self.labels_off + index * 4;
+        let label = match &self.map {
+            Some(m) => u32::from_le_bytes(m.bytes(label_off as usize, 4).try_into().unwrap()),
+            None => {
+                let mut b = [0u8; 4];
+                self.file.read_exact_at(&mut b, label_off)?;
+                u32::from_le_bytes(b)
+            }
+        };
+        Ok(Sample {
+            image: Tensor::from_vec(&self.shape, data),
+            label,
+        })
+    }
+}
+
+// --------------------------------------------------------------- dataset
+
+/// A shard adapted to the [`BatchSource`] trait: the loader's virtual
+/// sample indices wrap modulo the shard's count, so any `epoch_size`
+/// streams over a finite shard deterministically.
+pub struct ShardDataset {
+    reader: ShardReader,
+}
+
+impl ShardDataset {
+    /// Open the shard at `path` as a batch source.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self {
+            reader: ShardReader::open(path)?,
+        })
+    }
+
+    /// Wrap an already-open reader (e.g. one forced onto the pread path).
+    pub fn from_reader(reader: ShardReader) -> Self {
+        Self { reader }
+    }
+
+    /// The underlying reader (header fields, mmap status).
+    pub fn reader(&self) -> &ShardReader {
+        &self.reader
+    }
+}
+
+impl BatchSource for ShardDataset {
+    fn sample(&self, index: u64) -> Sample {
+        let idx = index % self.reader.count.max(1);
+        self.reader
+            .read_sample(idx)
+            .unwrap_or_else(|e| panic!("shard read failed: {e:#}"))
+    }
+
+    fn sample_shape(&self) -> Vec<usize> {
+        self.reader.shape.clone()
+    }
+
+    fn len(&self) -> Option<u64> {
+        Some(self.reader.count)
+    }
+}
+
+// ----------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn tmp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("decorr_shard_{}_{name}", std::process::id()))
+    }
+
+    fn rand_sample(rng: &mut Rng, shape: &[usize]) -> Sample {
+        let n: usize = shape.iter().product();
+        Sample {
+            image: Tensor::from_vec(shape, (0..n).map(|_| rng.gaussian()).collect()),
+            label: rng.next_bounded(10) as u32,
+        }
+    }
+
+    fn write_shard(path: &Path, shape: &[usize], count: usize, seed: u64) -> Vec<Sample> {
+        let mut rng = Rng::new(seed);
+        let mut writer = ShardWriter::create(path, shape).unwrap();
+        let samples: Vec<Sample> = (0..count).map(|_| rand_sample(&mut rng, shape)).collect();
+        for s in &samples {
+            writer.push(s).unwrap();
+        }
+        assert_eq!(writer.finish().unwrap(), count as u64);
+        samples
+    }
+
+    fn assert_bit_identical(a: &Sample, b: &Sample) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.image.shape(), b.image.shape());
+        for (x, y) in a.image.data().iter().zip(b.image.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let path = tmp_path("roundtrip");
+        let samples = write_shard(&path, &[4, 5, 3], 17, 0xD5);
+        let reader = ShardReader::open(&path).unwrap();
+        assert_eq!(reader.count(), 17);
+        assert_eq!(reader.shape(), &[4, 5, 3]);
+        assert_eq!(reader.stride(), 60);
+        for (i, want) in samples.iter().enumerate() {
+            let got = reader.read_sample(i as u64).unwrap();
+            assert_bit_identical(&got, want);
+        }
+        assert!(reader.read_sample(17).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn pread_path_matches_mmap_path() {
+        let path = tmp_path("pread");
+        write_shard(&path, &[6, 6, 3], 9, 0xBEEF);
+        let mapped = ShardReader::open(&path).unwrap();
+        let pread = ShardReader::open_pread(&path).unwrap();
+        assert!(!pread.uses_mmap());
+        for i in 0..9 {
+            assert_bit_identical(
+                &mapped.read_sample(i).unwrap(),
+                &pread.read_sample(i).unwrap(),
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_rejects_wrong_magic() {
+        let path = tmp_path("magic");
+        write_shard(&path, &[2, 2], 3, 1);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ShardReader::open(&path).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_rejects_truncated_payload() {
+        let path = tmp_path("trunc");
+        write_shard(&path, &[2, 2], 3, 2);
+        let len = std::fs::metadata(&path).unwrap().len();
+        let file = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        file.set_len(len - 3).unwrap();
+        drop(file);
+        let err = ShardReader::open(&path).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_rejects_trailing_bytes() {
+        let path = tmp_path("trail");
+        write_shard(&path, &[2, 2], 3, 3);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0, 1, 2]);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ShardReader::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_rejects_unknown_version() {
+        let path = tmp_path("version");
+        write_shard(&path, &[2, 2], 3, 4);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8] = 2; // version 2
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ShardReader::open(&path).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn writer_rejects_mismatched_sample_shape() {
+        let path = tmp_path("shape");
+        let mut rng = Rng::new(5);
+        let mut writer = ShardWriter::create(&path, &[3, 3]).unwrap();
+        assert!(writer.push(&rand_sample(&mut rng, &[2, 2])).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn dataset_wraps_indices_modulo_count() {
+        let path = tmp_path("dataset");
+        let samples = write_shard(&path, &[3, 3, 3], 5, 6);
+        let ds = ShardDataset::open(&path).unwrap();
+        assert_eq!(ds.len(), Some(5));
+        assert_eq!(ds.sample_shape(), vec![3, 3, 3]);
+        assert_bit_identical(&ds.sample(7), &samples[2]);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -9,7 +9,7 @@
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
-use super::Sample;
+use super::{BatchSource, Sample};
 
 /// Shape classes available to the renderer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -211,6 +211,23 @@ impl ShapeWorld {
             }
             Shape::Dot => u * u + v * v <= (r * 0.45) * (r * 0.45),
         }
+    }
+}
+
+/// ShapeWorld as a loader source: procedural, so the index space is
+/// unbounded and `len()` is `None`. The inherent [`ShapeWorld::sample`]
+/// is the trait method's implementation — identical bits either way.
+impl BatchSource for ShapeWorld {
+    fn sample(&self, index: u64) -> Sample {
+        ShapeWorld::sample(self, index)
+    }
+
+    fn sample_shape(&self) -> Vec<usize> {
+        vec![self.cfg.size, self.cfg.size, 3]
+    }
+
+    fn len(&self) -> Option<u64> {
+        None
     }
 }
 

@@ -6,6 +6,7 @@
 //! decorr eval    --checkpoint dir      linear evaluation of a checkpoint
 //! decorr spec    <loss-spec> [--check] inspect a parsed LossSpec's derivations
 //! decorr sweep   [--grid "bt_sum@b={64,128},q={1,2}"] [--parallel K] spec-grid sweep
+//! decorr shard   pack|inspect          pack/inspect binary sample shards
 //! decorr bench-diff --baseline <dir>   bench-trajectory regression gate
 //! decorr table1|table3|table4|table6|table7   regenerate paper tables
 //! decorr fig2|fig3                     regenerate paper figures
@@ -39,6 +40,7 @@ fn main() -> Result<()> {
         "fig3" => decorr::bench_harness::cmd::fig3(&mut args),
         "fig5" => decorr::bench_harness::cmd::fig5(&mut args),
         "sweep" => decorr::bench_harness::cmd::sweep(&mut args),
+        "shard" => decorr::bench_harness::cmd::shard(&mut args),
         "bench-diff" => decorr::bench_harness::cmd::bench_diff(&mut args),
         "session-bench" | "session" => decorr::bench_harness::cmd::session_bench(&mut args),
         "help" | "--help" | "-h" => {
@@ -71,6 +73,10 @@ SUBCOMMANDS
            --host measures the host LossExecutor instead (no artifacts
            needed); --shards K sweeps the DDP driver; --json path writes
            BENCH_spec_grid.json
+  shard    binary sample shards for the streaming data plane:
+           `shard pack --out f.shard [--count N] [--size S] [--seed K]`
+           renders ShapeWorld samples into one mmap-able file;
+           `shard inspect <file>` validates + prints its header
   bench-diff  compare two directories of BENCH_*.json perf trajectories
            (--baseline dir [--current dir] [--max-regress 20]
            [--warn-only]); warns past half the threshold, fails past it

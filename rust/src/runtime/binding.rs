@@ -252,12 +252,44 @@ impl ExecutionBinding {
         stores: &mut [&mut ParamStore],
         streams: &[&xla::Literal],
     ) -> Result<Vec<xla::Literal>> {
+        self.step_timed(stores, streams).map(|(emitted, _)| emitted)
+    }
+
+    /// [`Self::step`] with a per-phase wall-clock breakdown, feeding the
+    /// data-pipeline stall observability (`StepMetrics.execute_time` /
+    /// `.absorb_time`). Identical execution semantics — `step` delegates
+    /// here.
+    pub fn step_timed(
+        &self,
+        stores: &mut [&mut ParamStore],
+        streams: &[&xla::Literal],
+    ) -> Result<(Vec<xla::Literal>, StepPhases)> {
+        let t0 = std::time::Instant::now();
         let outputs = {
             let ro: Vec<&ParamStore> = stores.iter().map(|s| &**s).collect();
             self.execute(&ro, streams)?
         };
-        self.absorb(outputs, stores)
+        let execute_seconds = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let emitted = self.absorb(outputs, stores)?;
+        let absorb_seconds = t1.elapsed().as_secs_f64();
+        Ok((
+            emitted,
+            StepPhases {
+                execute_seconds,
+                absorb_seconds,
+            },
+        ))
     }
+}
+
+/// Wall-clock breakdown of one [`ExecutionBinding::step_timed`] call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepPhases {
+    /// Seconds spent in device execution (`execute_literals_ref`).
+    pub execute_seconds: f64,
+    /// Seconds spent absorbing outputs back into the param stores.
+    pub absorb_seconds: f64,
 }
 
 #[cfg(test)]

@@ -35,3 +35,36 @@ pub fn scalar(lit: &xla::Literal) -> Result<f32> {
     lit.get_first_element::<f32>()
         .map_err(|e| anyhow::anyhow!("{e}"))
 }
+
+/// An [`xla::Literal`] that may cross thread boundaries.
+///
+/// `xla::Literal` is `!Send` only because it holds a raw pointer; a
+/// *host* literal (as built by [`literal_f32`] & friends — plain host
+/// memory, no PJRT client involved) has no thread affinity: PJRT's
+/// single-thread expectations apply to clients, engines, and loaded
+/// executables, not to host-side literal buffers. The marshal-ahead data
+/// pipeline relies on this to prepare stream literals on prefetch worker
+/// threads and hand them to the driver thread.
+pub struct SendLiteral(xla::Literal);
+
+// Safety: see the type-level docs — the wrapped literal is host memory
+// owned by this process with no captured thread-local state, so moving
+// it between threads is sound. It is moved, never shared (`!Sync` stays).
+unsafe impl Send for SendLiteral {}
+
+impl SendLiteral {
+    /// Wrap a host literal for transport to another thread.
+    pub fn new(lit: xla::Literal) -> Self {
+        Self(lit)
+    }
+
+    /// Borrow the wrapped literal.
+    pub fn get(&self) -> &xla::Literal {
+        &self.0
+    }
+
+    /// Unwrap back into the plain literal.
+    pub fn into_inner(self) -> xla::Literal {
+        self.0
+    }
+}

@@ -43,9 +43,9 @@ pub mod params;
 pub mod session;
 
 pub use artifact::{Artifact, Manifest, TensorSpec};
-pub use binding::{EmitSpec, ExecutionBinding};
+pub use binding::{EmitSpec, ExecutionBinding, StepPhases};
 pub use engine::{artifact_paths, Engine};
-pub use literal::{literal_f32, literal_i32, literal_scalar, scalar};
+pub use literal::{literal_f32, literal_i32, literal_scalar, scalar, SendLiteral};
 pub use params::ParamStore;
 pub use session::{
     ArtifactSource, ContentKey, Session, SessionStats, SharedSession, WarmupReport,

@@ -8,16 +8,18 @@
 //! `DriverBuilder::resume_from`. The host-only tests cover the
 //! `LrSchedule` boundary cases the loop depends on and the sweep grammar.
 
+use std::sync::Arc;
+
 use decorr::api::train::{
-    run_driver, BenchObserver, CheckpointObserver, DriverBuilder, MetricsObserver, SweepPlan,
-    TrainDriver, TrainObserver, TrainReport,
+    prepare_inputs, run_driver, BenchObserver, CheckpointObserver, DriverBuilder, MetricsObserver,
+    SweepPlan, TrainDriver, TrainObserver, TrainReport,
 };
 use decorr::api::{LossExecutor, LossSpec};
 use decorr::config::TrainConfig;
 use decorr::coordinator::{Checkpoint, LrSchedule};
 use decorr::data::loader::make_batch;
 use decorr::data::synth::{ShapeWorld, ShapeWorldConfig};
-use decorr::data::{AugmentConfig, Augmenter, BatchLoader};
+use decorr::data::{AugmentConfig, Augmenter, BatchLoader, LoaderBuilder};
 
 fn artifacts_present() -> bool {
     std::path::Path::new("artifacts/train_bt_sum_tiny.manifest.json").exists()
@@ -68,7 +70,7 @@ fn direct_loop_losses(
     let mut losses = Vec::new();
     for epoch in 0..cfg.epochs {
         for _ in 0..cfg.steps_per_epoch {
-            let batch = loader.next();
+            let batch = loader.next().expect("loader alive");
             losses.push(driver.step(&batch, epoch).unwrap().loss);
         }
     }
@@ -111,6 +113,72 @@ fn run_loop_matches_direct_loop_bit_identically() {
         checked += 1;
     }
     assert!(checked > 0, "no paper-preset tiny artifacts found");
+}
+
+/// Marshal-ahead delivery is numerically invisible: step losses are
+/// bit-identical between inline stepping (`step` on raw loader batches,
+/// adapt + literal marshaling on the driver thread) and the prepared fast
+/// path (`step_prepared` on marshal-ahead batches from prefetch workers),
+/// at loader worker counts 1, 3, and 8 — ordered delivery pins the batch
+/// sequence regardless of worker interleaving.
+#[test]
+fn marshal_ahead_losses_match_inline_at_any_worker_count() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = tiny_cfg();
+    let dataset = || {
+        ShapeWorld::new(ShapeWorldConfig {
+            seed: cfg.seed,
+            ..Default::default()
+        })
+    };
+
+    // Golden: inline stepping over the sequential single-worker loader.
+    let mut driver = DriverBuilder::new(cfg.clone()).build_trainer().unwrap();
+    let loader = BatchLoader::new(
+        dataset(),
+        AugmentConfig::default(),
+        driver.batch_size().unwrap(),
+        cfg.epoch_size,
+        cfg.seed,
+        1,
+        cfg.prefetch,
+    );
+    let mut inline = Vec::new();
+    for epoch in 0..cfg.epochs {
+        for _ in 0..cfg.steps_per_epoch {
+            let batch = loader.next().expect("loader alive");
+            inline.push(driver.step(&batch, epoch).unwrap().loss);
+        }
+    }
+    let mut session = Some(driver.into_session());
+
+    for workers in [1usize, 3, 8] {
+        let mut driver = DriverBuilder::new(cfg.clone())
+            .session(session.take().unwrap())
+            .build_trainer()
+            .unwrap();
+        let loader = LoaderBuilder::new(Arc::new(dataset()), driver.batch_size().unwrap())
+            .epoch_size(cfg.epoch_size)
+            .seed(cfg.seed)
+            .workers(workers)
+            .prefetch(cfg.prefetch)
+            .ordered(true)
+            .prepare(prepare_inputs(driver.input_adapter()))
+            .build();
+        let mut prepared = Vec::new();
+        for epoch in 0..cfg.epochs {
+            for _ in 0..cfg.steps_per_epoch {
+                let pb = loader.next_prepared().expect("loader alive");
+                assert!(pb.prepared.is_some(), "prepare fn must run in workers");
+                prepared.push(driver.step_prepared(&pb, epoch).unwrap().loss);
+            }
+        }
+        assert_eq!(inline, prepared, "losses diverged at {workers} workers");
+        session = Some(driver.into_session());
+    }
 }
 
 /// Observers compose on one run: metrics mirroring, periodic checkpoints,

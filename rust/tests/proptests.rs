@@ -9,8 +9,9 @@ use decorr::api::{LossFamily, LossSpec, NormConvention, RegularizerForm};
 use decorr::config::{TrainConfig, Variant};
 use decorr::coordinator::LrSchedule;
 use decorr::data::loader::make_batch;
+use decorr::data::shard::{ShardReader, ShardWriter};
 use decorr::data::synth::{ShapeWorld, ShapeWorldConfig, Vocab};
-use decorr::data::{AugmentConfig, Augmenter};
+use decorr::data::{AugmentConfig, Augmenter, Sample};
 use decorr::fft;
 use decorr::regularizer::kernel::{
     DecorrelationKernel, FftSumvecKernel, GroupedFftKernel, NaiveMatrixKernel,
@@ -597,5 +598,95 @@ fn prop_spec_fragment_parses_back() {
         assert_eq!(back.family, spec.family, "{frag}");
         assert_eq!(back.form, spec.form, "{frag}");
         assert_eq!(back.artifact_fragment(), frag);
+    });
+}
+
+// ----------------------------------------------------------------- shards
+
+/// Per-case temp shard path (pid + tag keeps parallel test runs apart).
+fn shard_tmp(tag: u64) -> String {
+    std::env::temp_dir()
+        .join(format!("decorr_prop_shard_{}_{tag}.bin", std::process::id()))
+        .to_str()
+        .expect("utf-8 temp path")
+        .to_string()
+}
+
+/// Shard pack → read round-trips every sample bit-identically, through
+/// both the mmap and the pread read paths, across random shapes/counts.
+#[test]
+fn prop_shard_roundtrip_bit_identical() {
+    for_cases(25, |rng| {
+        let rank = 1 + rng.next_bounded(3) as usize;
+        let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.next_bounded(6) as usize).collect();
+        let count = 1 + rng.next_bounded(12) as usize;
+        let stride: usize = shape.iter().product();
+        let samples: Vec<Sample> = (0..count)
+            .map(|i| Sample {
+                image: Tensor::from_vec(&shape, (0..stride).map(|_| rng.gaussian()).collect()),
+                label: i as u32 ^ 0xAB,
+            })
+            .collect();
+        let path = shard_tmp(rng.next_bounded(1 << 40));
+        let mut w = ShardWriter::create(&path, &shape).unwrap();
+        for s in &samples {
+            w.push(s).unwrap();
+        }
+        assert_eq!(w.finish().unwrap(), count as u64);
+        let readers = [
+            ShardReader::open(&path).unwrap(),
+            ShardReader::open_pread(&path).unwrap(),
+        ];
+        for reader in &readers {
+            assert_eq!(reader.count(), count as u64);
+            assert_eq!(reader.shape(), &shape[..]);
+            for (i, s) in samples.iter().enumerate() {
+                let got = reader.read_sample(i as u64).unwrap();
+                assert_eq!(got.label, s.label, "label {i}");
+                let a: Vec<u32> = got.image.data().iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = s.image.data().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "sample {i} payload");
+            }
+        }
+        drop(readers);
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+/// Any single corruption of a valid shard — truncation, bad magic, an
+/// unknown version, trailing garbage — is rejected at open, never served
+/// as a mangled read.
+#[test]
+fn prop_shard_rejects_corruption() {
+    for_cases(25, |rng| {
+        let path = shard_tmp(0xC0_0000_0000 | rng.next_bounded(1 << 40));
+        let shape = [2usize, 3];
+        let mut w = ShardWriter::create(&path, &shape).unwrap();
+        for i in 0..4u32 {
+            w.push(&Sample {
+                image: Tensor::from_vec(&shape, (0..6).map(|_| rng.gaussian()).collect()),
+                label: i,
+            })
+            .unwrap();
+        }
+        w.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let mut corrupt = bytes.clone();
+        match rng.next_bounded(4) {
+            0 => {
+                let cut = 1 + rng.next_bounded(bytes.len() as u64 / 2) as usize;
+                corrupt.truncate(bytes.len() - cut);
+            }
+            1 => corrupt[0] ^= 0xFF,                   // magic
+            2 => corrupt[8] = 0x7F,                    // version
+            _ => corrupt.extend_from_slice(&[0u8; 3]), // trailing bytes
+        }
+        std::fs::write(&path, &corrupt).unwrap();
+        assert!(ShardReader::open(&path).is_err(), "corruption accepted");
+        assert!(
+            ShardReader::open_pread(&path).is_err(),
+            "corruption accepted on the pread path"
+        );
+        std::fs::remove_file(&path).ok();
     });
 }
