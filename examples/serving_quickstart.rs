@@ -1,0 +1,105 @@
+//! Serving quickstart: stand up a `decorr serve` instance in-process,
+//! drive it with protocol clients, and read the stats it drains with.
+//!
+//! 1. Start a host-mode server on a private unix socket — no artifacts,
+//!    no free TCP port, no external process needed.
+//! 2. Score row pairs (the per-row circular cross-correlation quantity)
+//!    and cross-check a response against the in-process `RowScorer`:
+//!    micro-batched serving is bit-identical to computing locally.
+//! 3. Ask for a whole-matrix diagnose (the spec's full `LossExecutor`).
+//! 4. Drain gracefully and print the latency/batch tables — the same
+//!    tables `decorr serve-bench --json` writes as `BENCH_serving.json`.
+//!
+//! Run with: `cargo run --release --offline --example serving_quickstart`
+//! (no artifacts required — everything here is the host path).
+
+use std::time::Duration;
+
+use anyhow::Result;
+use decorr::api::LossSpec;
+use decorr::serve::exec::RowScorer;
+use decorr::serve::{
+    serve, ExecMode, Request, RequestKind, Response, ServeAddr, ServeClient, ServeConfig,
+};
+use decorr::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // --- 1. An in-process server on a private unix socket ----------------
+    let sock = std::env::temp_dir().join(format!("decorr-quickstart-{}.sock", std::process::id()));
+    let handle = serve(ServeConfig {
+        addr: ServeAddr::Unix(sock),
+        workers: 2,
+        batch_rows: 32,
+        deadline: Duration::from_millis(2),
+        mode: ExecMode::Host,
+        ..ServeConfig::default()
+    })?;
+    println!("serving on {}", handle.local_addr());
+
+    // --- 2. Score requests ------------------------------------------------
+    let (rows, d) = (4usize, 64usize);
+    let mut rng = Rng::new(7);
+    let mut client = ServeClient::connect(handle.local_addr())?;
+    let req = Request {
+        id: 1,
+        kind: RequestKind::Score,
+        spec: "bt_sum".to_string(),
+        rows,
+        d,
+        a: (0..rows * d).map(|_| rng.gaussian()).collect(),
+        b: (0..rows * d).map(|_| rng.gaussian()).collect(),
+    };
+    let Response::Score { scores, .. } = client.call(&req)? else {
+        anyhow::bail!("expected a Score response");
+    };
+    for (r, s) in scores.iter().enumerate() {
+        println!("row {r}: score {:.6}, aligned-lag c0 {:.6}", s.score, s.align);
+    }
+    // The served result is bit-identical to scoring locally: coalescing
+    // rows from many requests into one micro-batch cannot perturb them.
+    let spec = LossSpec::parse("bt_sum")?;
+    let local = RowScorer::new(d, spec.q()).score_rows(rows, &req.a, &req.b);
+    assert!(scores
+        .iter()
+        .zip(&local)
+        .all(|(a, b)| a.score.to_bits() == b.score.to_bits()));
+    println!("served scores match the local RowScorer bit-for-bit");
+
+    // --- 3. A whole-matrix diagnose ---------------------------------------
+    let diag = Request {
+        id: 2,
+        kind: RequestKind::Diagnose,
+        spec: "vic_sum".to_string(),
+        rows: 16,
+        d,
+        a: (0..16 * d).map(|_| rng.gaussian()).collect(),
+        b: (0..16 * d).map(|_| rng.gaussian()).collect(),
+    };
+    if let Response::Diagnose {
+        backend,
+        total,
+        invariance,
+        regularizer,
+        ..
+    } = client.call(&diag)?
+    {
+        println!(
+            "diagnose vic_sum via {backend:?}: total {total:.6}, invariance {:?}, regularizer {:?}",
+            invariance, regularizer
+        );
+    }
+
+    // --- 4. Graceful drain + the serving tables ---------------------------
+    client.finish_sending()?;
+    drop(client);
+    let report = handle.join()?;
+    println!(
+        "\nserved {} requests over {} connection(s)",
+        report.stats.total_requests(),
+        report.stats.connections
+    );
+    report.stats.latency_table().print();
+    report.stats.batch_table().print();
+    println!("serving quickstart OK");
+    Ok(())
+}

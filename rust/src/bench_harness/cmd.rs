@@ -24,6 +24,9 @@ use super::stats::bench_for;
 use super::table::Table;
 use super::workload::LossWorkload;
 
+use crate::runtime::SharedSession;
+use crate::serve::{run_load, ExecMode, LoadConfig, ServeAddr, ServeConfig};
+
 // Re-exported from its new home in the coordinator so existing callers
 // (`decorr::bench_harness::cmd::project_views`) keep working.
 pub use crate::coordinator::project_views;
@@ -919,6 +922,7 @@ pub fn bench_diff(args: &mut Args) -> Result<()> {
         "BENCH_data_pipeline.json",
         "BENCH_fft_host.json",
         "BENCH_regularizer_host.json",
+        "BENCH_serving.json",
         "BENCH_session_compile.json",
         "BENCH_spec_grid.json",
         "BENCH_spec_grid_parallel.json",
@@ -1077,4 +1081,260 @@ pub fn shard(args: &mut Args) -> Result<()> {
             other.unwrap_or("<none>")
         ),
     }
+}
+
+// ----------------------------------------------------------------- serve
+
+/// `--host`-style strict switch: the greedy CLI parser takes a following
+/// bare token as the switch's value, so reject a swallowed token loudly
+/// instead of silently misparsing (same guard `sweep` uses).
+fn strict_switch(args: &mut Args, key: &str) -> Result<bool> {
+    match args.flag(key).as_deref() {
+        None | Some("false") | Some("0") | Some("no") => Ok(false),
+        Some("true") | Some("1") | Some("yes") => Ok(true),
+        Some(swallowed) => anyhow::bail!(
+            "unexpected value '{swallowed}' after --{key} (it takes no value; \
+             did you mean `--{key} --<next-flag> {swallowed}`?)"
+        ),
+    }
+}
+
+/// `decorr serve` — the micro-batched embedding-inference server
+/// ([`crate::serve`]): accept scoring / residual-diagnostic requests over
+/// `--addr` (TCP `host:port` or `unix:<path>`), coalesce them into
+/// spec-keyed micro-batch queues (fill to `--batch-rows`, flush after
+/// `--deadline-ms`), and execute on `--workers` warm worker threads —
+/// each holding one `Session` arm in device mode (`--host` forces the
+/// pure-rust executors; absent artifacts fall back per shape anyway).
+///
+/// Runs until SIGINT or `--seconds`, then drains gracefully: stops
+/// accepting, flushes every queue, answers every in-flight request, and
+/// prints the latency/batch-occupancy tables (`--json <path>` writes them
+/// as the bench-diff-gated `BENCH_serving.json` format).
+pub fn serve(args: &mut Args) -> Result<()> {
+    let addr = ServeAddr::parse(&args.str_or("addr", "127.0.0.1:7070"));
+    let workers = args.get_or("workers", 2usize)?;
+    let batch_rows = args.get_or("batch-rows", 128usize)?;
+    let deadline_ms = args.get_or("deadline-ms", 2.0f64)?;
+    let max_rows = args.get_or("max-rows", 4096usize)?;
+    let seconds = args.get_or("seconds", 0.0f64)?;
+    let host = strict_switch(args, "host")?;
+    let artifact_dir = args.str_or("artifact-dir", "artifacts");
+    let json = args.flag("json");
+    args.finish()?;
+
+    let mode = if host {
+        ExecMode::Host
+    } else {
+        ExecMode::Device(SharedSession::open(&artifact_dir))
+    };
+    let handle = crate::serve::serve(ServeConfig {
+        addr,
+        workers,
+        batch_rows,
+        deadline: std::time::Duration::from_secs_f64(deadline_ms / 1e3),
+        max_rows,
+        mode,
+        ..ServeConfig::default()
+    })?;
+    println!(
+        "serving on {} — {} workers, batch {} rows, deadline {:.1} ms, {} mode",
+        handle.local_addr(),
+        workers,
+        batch_rows,
+        deadline_ms,
+        if host { "host" } else { "device" }
+    );
+    println!(
+        "stop with SIGINT{} for a graceful drain",
+        if seconds > 0.0 {
+            format!(" (or after --seconds {seconds})")
+        } else {
+            String::new()
+        }
+    );
+
+    install_sigint_drain();
+    let t0 = std::time::Instant::now();
+    while !sigint_received() && (seconds <= 0.0 || t0.elapsed().as_secs_f64() < seconds) {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("draining...");
+    let report = handle.join()?;
+    print_serve_report(&report, json.as_deref())
+}
+
+/// Print a [`crate::serve::ServeReport`]'s tables and optionally write
+/// them as `BENCH_serving.json`.
+fn print_serve_report(report: &crate::serve::ServeReport, json: Option<&str>) -> Result<()> {
+    let stats = &report.stats;
+    println!(
+        "\nserved {} requests ({} errors) over {} connection(s), {} framing error(s)",
+        stats.total_requests(),
+        stats.total_errors(),
+        stats.connections,
+        stats.framing_errors
+    );
+    let latency = stats.latency_table();
+    let batches = stats.batch_table();
+    println!("\nper-spec request latency:");
+    latency.print();
+    println!("\nper-spec micro-batches:");
+    batches.print();
+    if let Some(path) = json {
+        super::table::write_json(
+            path,
+            &[("serving_latency", &latency), ("serving_batches", &batches)],
+        )?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+static SIGINT_FLAG: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn sigint_handler(_sig: i32) {
+    SIGINT_FLAG.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Route SIGINT to a drain flag instead of process death — same
+/// no-new-deps raw-libc idiom as `data::shard`'s mmap bindings.
+fn install_sigint_drain() {
+    const SIGINT: i32 = 2;
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    unsafe {
+        signal(SIGINT, sigint_handler as usize);
+    }
+}
+
+fn sigint_received() -> bool {
+    SIGINT_FLAG.load(std::sync::atomic::Ordering::SeqCst)
+}
+
+// ----------------------------------------------------------- serve-bench
+
+/// `decorr serve-bench` — closed-loop load generator for the serving
+/// path. With no `--addr`, it spins an in-process server on a private
+/// Unix socket (so CI needs no free TCP port), drives it with paced
+/// traffic (`--rps`, `--requests`, `--conns`, `--specs a;b`, `--rows`,
+/// `--d`, a diagnose every `--diag-every`-th request), then drains and
+/// reports three tables: client-observed load (`serving_load`) plus the
+/// server's `serving_latency` / `serving_batches`. `--json <path>`
+/// writes them as the bench-diff-gated `BENCH_serving.json`.
+///
+/// `DECORR_BENCH_SMOKE=1` shrinks the defaults so the whole run fits a
+/// CI smoke slot; `--addr` drives an already-running external server
+/// instead (client table only).
+pub fn serve_bench(args: &mut Args) -> Result<()> {
+    let smoke = super::stats::smoke_mode();
+    let external = args.flag("addr");
+    let rps = args.get_or("rps", if smoke { 400.0 } else { 2000.0 })?;
+    let requests = args.get_or("requests", if smoke { 160usize } else { 2000 })?;
+    let specs_raw = args.str_or("specs", "bt_sum;vic_sum");
+    let rows = args.get_or("rows", 16usize)?;
+    let d = args.get_or("d", if smoke { 64usize } else { 256 })?;
+    let conns = args.get_or("conns", 2usize)?;
+    let diag_every = args.get_or("diag-every", 8usize)?;
+    let seed = args.get_or("seed", 42u64)?;
+    let workers = args.get_or("workers", 2usize)?;
+    let batch_rows = args.get_or("batch-rows", if smoke { 64usize } else { 128 })?;
+    let deadline_ms = args.get_or("deadline-ms", 2.0f64)?;
+    let host = strict_switch(args, "host")?;
+    let artifact_dir = args.str_or("artifact-dir", "artifacts");
+    let json = args.flag("json");
+    args.finish()?;
+
+    let specs: Vec<String> = specs_raw
+        .split(';')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    anyhow::ensure!(!specs.is_empty(), "--specs must name at least one spec");
+
+    // In-process server on a private unix socket unless --addr points at
+    // an external one.
+    let (server, addr) = match &external {
+        Some(a) => (None, ServeAddr::parse(a)),
+        None => {
+            let sock = std::env::temp_dir().join(format!(
+                "decorr-serve-bench-{}.sock",
+                std::process::id()
+            ));
+            let mode = if host {
+                ExecMode::Host
+            } else {
+                ExecMode::Device(SharedSession::open(&artifact_dir))
+            };
+            let handle = crate::serve::serve(ServeConfig {
+                addr: ServeAddr::Unix(sock),
+                workers,
+                batch_rows,
+                deadline: std::time::Duration::from_secs_f64(deadline_ms / 1e3),
+                mode,
+                ..ServeConfig::default()
+            })?;
+            let addr = handle.local_addr().clone();
+            (Some(handle), addr)
+        }
+    };
+
+    println!(
+        "serve-bench: {} requests at {:.0} rps over {} conn(s) -> {} (specs {}; rows {}, d {})",
+        requests,
+        rps,
+        conns,
+        addr,
+        specs.join(";"),
+        rows,
+        d
+    );
+    let load = run_load(&LoadConfig {
+        addr,
+        rps,
+        requests,
+        conns,
+        specs: specs.clone(),
+        rows,
+        d,
+        diag_every,
+        seed,
+    })
+    .map_err(|e| anyhow::anyhow!("load generation failed: {e}"))?;
+
+    let load_table = load.to_table(&specs);
+    println!(
+        "\nclient: {} sent, {} ok, {} errors, {:.0} req/s achieved",
+        load.sent,
+        load.ok,
+        load.errors,
+        load.achieved_per_sec()
+    );
+    load_table.print();
+
+    let mut tables: Vec<(&str, &Table)> = vec![("serving_load", &load_table)];
+    let server_tables;
+    if let Some(handle) = server {
+        let report = handle.join()?;
+        let stats = report.stats;
+        server_tables = (stats.latency_table(), stats.batch_table());
+        println!("\nserver: per-spec request latency:");
+        server_tables.0.print();
+        println!("\nserver: per-spec micro-batches:");
+        server_tables.1.print();
+        tables.push(("serving_latency", &server_tables.0));
+        tables.push(("serving_batches", &server_tables.1));
+        anyhow::ensure!(
+            load.errors == 0,
+            "serve-bench saw {} error responses from its own in-process server",
+            load.errors
+        );
+    }
+    if let Some(path) = json {
+        super::table::write_json(&path, &tables)?;
+        println!("wrote {path}");
+    }
+    Ok(())
 }

@@ -14,9 +14,11 @@
 //! string-valued cells (spec labels, contender names, dimensions printed
 //! as labels), and numeric columns are classified by name —
 //! `*_per_sec`/`throughput`/`speedup` are higher-is-better,
-//! `ms`/`seconds`/`time`/`wall` are lower-is-better, anything else
-//! (loss values, counters) is ignored. A format change between pushes
-//! therefore degrades to "no matching rows", never to a false failure.
+//! `ms`/`seconds`/`time`/`wall` plus the serving-latency family
+//! (`p50`/`p95`/`p99`/`*_latency_ms`/`queue_depth`) are
+//! lower-is-better, anything else (loss values, counters, occupancy
+//! ratios) is ignored. A format change between pushes therefore
+//! degrades to "no matching rows", never to a false failure.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -53,19 +55,38 @@ pub fn metric_direction(column: &str) -> Option<Direction> {
         || c.contains("seconds")
         || c.contains("time")
         || c.contains("wall")
+        // Serving-trajectory metrics (`BENCH_serving.json`): latency
+        // percentiles (`p50`/`p95`/`p99`, usually suffixed `_latency_ms`
+        // and caught by the `ms` arm above, but bare too) and queue
+        // depth both improve downward.
+        || c.contains("p50")
+        || c.contains("p95")
+        || c.contains("p99")
+        || c.contains("latency")
+        || c.contains("queue_depth")
     {
         return Some(Direction::LowerBetter);
     }
     None
 }
 
-/// Absolute floor below which a time column is scheduler noise, in the
-/// column's own unit (10 µs): regressions where both sides sit under the
-/// floor never gate.
+/// Absolute floor below which a down-better column is scheduler noise,
+/// in the column's own unit (10 µs): regressions where both sides sit
+/// under the floor never gate.
 fn noise_floor(column: &str) -> f64 {
     let c = column.to_ascii_lowercase();
     if c.contains("µs") || c.contains("(us)") {
         10.0
+    } else if c.contains("latency") || c.contains("p50") || c.contains("p95") || c.contains("p99") {
+        // Serving latency percentiles in smoke mode sit in the hundreds
+        // of microseconds on shared CI runners, where scheduling jitter
+        // alone moves them several-fold. Only gate once both sides are
+        // comfortably into measurable territory (0.5 ms).
+        0.5
+    } else if c.contains("queue_depth") {
+        // Fractions of one queued request are timing accidents, not a
+        // capacity signal.
+        1.5
     } else if c.contains("ms") {
         0.01
     } else if c.contains("seconds") || c.contains("wall") || c.contains("time") {
@@ -336,6 +357,52 @@ mod tests {
         assert_eq!(metric_direction("final_loss"), None);
         assert_eq!(metric_direction("steps"), None);
         assert_eq!(metric_direction("value"), None);
+    }
+
+    #[test]
+    fn serving_columns_classify() {
+        // Latency percentiles and queue depth gate downward…
+        assert_eq!(metric_direction("p50_latency_ms"), Some(Direction::LowerBetter));
+        assert_eq!(metric_direction("p95_latency_ms"), Some(Direction::LowerBetter));
+        assert_eq!(metric_direction("p99_latency_ms"), Some(Direction::LowerBetter));
+        assert_eq!(metric_direction("max_latency_ms"), Some(Direction::LowerBetter));
+        assert_eq!(metric_direction("p99"), Some(Direction::LowerBetter));
+        assert_eq!(metric_direction("mean_queue_depth"), Some(Direction::LowerBetter));
+        assert_eq!(metric_direction("max_queue_depth"), Some(Direction::LowerBetter));
+        assert_eq!(metric_direction("achieved_per_sec"), Some(Direction::HigherBetter));
+        // …with unit-aware floors: latency gates above 0.5 ms, depth
+        // above sub-request fractions.
+        assert!(noise_floor("p99_latency_ms") > noise_floor("median (ms)"));
+        assert!(noise_floor("mean_queue_depth") >= 1.0);
+        // Counters and ratios from the serving tables never gate.
+        assert_eq!(metric_direction("requests"), None);
+        assert_eq!(metric_direction("errors"), None);
+        assert_eq!(metric_direction("batches"), None);
+        assert_eq!(metric_direction("rows"), None);
+        assert_eq!(metric_direction("occupancy_pct"), None);
+        assert_eq!(metric_direction("full_flushes"), None);
+        assert_eq!(metric_direction("deadline_flushes"), None);
+        assert_eq!(metric_direction("drain_flushes"), None);
+    }
+
+    #[test]
+    fn sub_floor_serving_latency_never_gates() {
+        // Smoke-mode latencies jitter wildly under 0.5 ms; a 5x swing
+        // there is scheduler noise, not a regression.
+        let doc = |p99: f64| {
+            json::parse(&format!(
+                r#"{{"serving_latency":{{"columns":["spec","requests","p99_latency_ms"],
+                    "rows":[{{"spec":"bt_sum","requests":160,"p99_latency_ms":{p99}}}]}}}}"#
+            ))
+            .unwrap()
+        };
+        let mut report = DiffReport::default();
+        diff_docs("BENCH_serving.json", &doc(0.05), &doc(0.25), &mut report);
+        assert!(report.comparisons.is_empty(), "{:?}", report.comparisons);
+        // But once both sides are measurable, it gates like any timing.
+        let mut report = DiffReport::default();
+        diff_docs("BENCH_serving.json", &doc(2.0), &doc(4.0), &mut report);
+        assert_eq!(report.regressions(50.0).len(), 1);
     }
 
     #[test]

@@ -114,12 +114,38 @@ fn cell_json(cell: &str) -> Json {
 /// Write one or more named tables as a single JSON document — the format
 /// of the benches' `BENCH_*.json` files, so future PRs can track a perf
 /// trajectory across revisions.
+///
+/// The write is **atomic**: the document lands in a temp file in the
+/// same directory and is renamed over `path`, so a concurrent reader
+/// (`bench-diff`, a CI artifact upload, a running serve/bench loop
+/// re-emitting tables) can never observe a torn `BENCH_*.json` — it
+/// sees either the previous complete document or the new one.
 pub fn write_json(path: &str, tables: &[(&str, &Table)]) -> std::io::Result<()> {
     let mut top = BTreeMap::new();
     for (name, t) in tables {
         top.insert((*name).to_string(), t.to_json());
     }
-    std::fs::write(path, Json::Obj(top).to_string_compact())
+    let target = std::path::Path::new(path);
+    let dir = match target.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => std::path::Path::new("."),
+    };
+    let base = target
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "table".to_string());
+    // Same-directory temp name (rename is only atomic within one
+    // filesystem); pid-qualified so concurrent writers never collide.
+    let tmp = dir.join(format!(".{base}.tmp.{}", std::process::id()));
+    let payload = Json::Obj(top).to_string_compact();
+    std::fs::write(&tmp, payload)?;
+    match std::fs::rename(&tmp, target) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -143,6 +169,35 @@ mod tests {
     #[should_panic]
     fn arity_mismatch_panics() {
         Table::new(&["a"]).row(vec!["x".into(), "y".into()]);
+    }
+
+    #[test]
+    fn write_json_is_atomic_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!("decorr-table-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_t.json");
+        let path_s = path.to_str().unwrap();
+        let mut t = Table::new(&["k", "v"]);
+        t.row(vec!["a".into(), "1".into()]);
+        write_json(path_s, &[("t", &t)]).unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        assert!(first.contains("\"columns\""));
+        // Overwrite with different content: the target is replaced whole.
+        let mut t2 = Table::new(&["k", "v"]);
+        t2.row(vec!["b".into(), "2".into()]);
+        write_json(path_s, &[("t", &t2)]).unwrap();
+        let second = std::fs::read_to_string(&path).unwrap();
+        assert!(second.contains("\"b\""), "{second}");
+        assert_ne!(first, second);
+        // No temp litter next to the target.
+        let litter: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(litter.is_empty(), "temp files left behind: {litter:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

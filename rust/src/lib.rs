@@ -72,6 +72,32 @@
 //! at any worker count — into the `BENCH_spec_grid.json` trajectory that
 //! `decorr bench-diff` gates against >20% throughput regressions in CI.
 //!
+//! ## The request path: `decorr serve`
+//!
+//! The train path's unit of work is a step; the [`serve`] subsystem
+//! serves the same specs with a *request* as the unit of work, over the
+//! same warm runtime stack:
+//!
+//! ```text
+//!  socket (tcp | unix:<path>) ── length-prefixed frames [serve::protocol]
+//!      │ decode + validate (typed ServeError; request-scoped errors
+//!      ▼  answered, connection survives)
+//!  spec-keyed micro-batch queues ─ fill to the batch shape, flush on
+//!      │                           deadline, drain on shutdown [serve::queue]
+//!      ▼
+//!  K workers × warm per-worker state ─ planned-FFT row scorer, Session
+//!      │    arm + ExecutionBinding, HostExecutor fallback [serve::exec]
+//!      ▼
+//!  scatter per-request responses; latency histograms + batch-occupancy
+//!  gauges → BENCH_serving.json, gated by `decorr bench-diff`
+//! ```
+//!
+//! Micro-batching is exact by construction: score rows are independent
+//! (coalescing requests is bit-identical to serving them alone) and
+//! diagnose requests always evaluate their own matrix. `decorr
+//! serve-bench` is the paired closed-loop load generator CI runs in
+//! smoke mode.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -127,4 +153,5 @@ pub mod data;
 pub mod fft;
 pub mod regularizer;
 pub mod runtime;
+pub mod serve;
 pub mod util;

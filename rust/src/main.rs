@@ -8,6 +8,8 @@
 //! decorr sweep   [--grid "bt_sum@b={64,128},q={1,2}"] [--parallel K] spec-grid sweep
 //! decorr shard   pack|inspect          pack/inspect binary sample shards
 //! decorr bench-diff --baseline <dir>   bench-trajectory regression gate
+//! decorr serve   [--addr host:port|unix:path]  micro-batched serving daemon
+//! decorr serve-bench [--rps N --specs a;b]     closed-loop serving load test
 //! decorr table1|table3|table4|table6|table7   regenerate paper tables
 //! decorr fig2|fig3                     regenerate paper figures
 //! ```
@@ -43,12 +45,73 @@ fn main() -> Result<()> {
         "shard" => decorr::bench_harness::cmd::shard(&mut args),
         "bench-diff" => decorr::bench_harness::cmd::bench_diff(&mut args),
         "session-bench" | "session" => decorr::bench_harness::cmd::session_bench(&mut args),
+        "serve" => decorr::bench_harness::cmd::serve(&mut args),
+        "serve-bench" => decorr::bench_harness::cmd::serve_bench(&mut args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
         }
-        other => anyhow::bail!("unknown subcommand '{other}' (try `decorr help`)"),
+        other => match nearest_subcommand(other) {
+            Some(hint) => anyhow::bail!(
+                "unknown subcommand '{other}' — did you mean '{hint}'? (try `decorr help`)"
+            ),
+            None => anyhow::bail!("unknown subcommand '{other}' (try `decorr help`)"),
+        },
     }
+}
+
+/// Every dispatchable subcommand (aliases excluded), kept in sync with
+/// the `match` above and with `HELP` by `help_covers_every_subcommand`.
+const SUBCOMMANDS: &[&str] = &[
+    "smoke",
+    "train",
+    "eval",
+    "spec",
+    "table1",
+    "table3",
+    "table4",
+    "table6",
+    "table7",
+    "table11",
+    "fig2",
+    "fig3",
+    "fig5",
+    "sweep",
+    "shard",
+    "bench-diff",
+    "session-bench",
+    "serve",
+    "serve-bench",
+    "help",
+];
+
+/// Closest known subcommand by edit distance, for typo hints. Only
+/// offered when the distance is small relative to the input — "xyzzy"
+/// gets no suggestion, "serv-bench" gets `serve-bench`.
+fn nearest_subcommand(input: &str) -> Option<&'static str> {
+    let best = SUBCOMMANDS
+        .iter()
+        .map(|cand| (levenshtein(input, cand), *cand))
+        .min_by_key(|(dist, _)| *dist)?;
+    let max_dist = (input.len().max(3) / 3).max(1) + 1;
+    (best.0 <= max_dist).then_some(best.1)
+}
+
+/// Plain O(len_a · len_b) edit distance — inputs are subcommand-sized.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 const HELP: &str = "\
@@ -92,7 +155,58 @@ SUBCOMMANDS
   fig5     simulated data-parallel training              (paper Figs. 5/6)
   session-bench  runtime session compile cache: cold vs cached artifact
                  loads over synthetic HLO (no artifacts needed; --json path)
+  serve    micro-batched embedding-inference serving over warm Session
+           arms (--addr host:port|unix:path, --workers K, --batch-rows N,
+           --deadline-ms T, --max-rows N, --seconds S [0 = until Ctrl-C],
+           --host forces the HostExecutor path, --artifact-dir dir,
+           --json path writes serving_latency/serving_batches tables)
+  serve-bench  closed-loop load generator paired with `serve`: spins an
+           in-process server (or drives --addr), paces --rps N requests
+           over --conns C connections cycling --specs a;b, a diagnose
+           every --diag-every-th call (--requests N, --rows R, --d D,
+           --seed K, --workers/--batch-rows/--deadline-ms/--host/
+           --artifact-dir for the in-process server; --json path writes
+           BENCH_serving.json for the bench-diff gate)
 ";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn help_covers_every_subcommand() {
+        for cmd in SUBCOMMANDS {
+            if *cmd == "help" {
+                continue;
+            }
+            assert!(
+                HELP.lines().any(|l| {
+                    l.strip_prefix("  ")
+                        .and_then(|l| l.split_whitespace().next())
+                        .is_some_and(|first| first == *cmd)
+                }),
+                "subcommand '{cmd}' missing from HELP"
+            );
+        }
+    }
+
+    #[test]
+    fn typos_get_a_nearest_match_hint() {
+        assert_eq!(nearest_subcommand("serv"), Some("serve"));
+        assert_eq!(nearest_subcommand("serve-benh"), Some("serve-bench"));
+        assert_eq!(nearest_subcommand("trian"), Some("train"));
+        assert_eq!(nearest_subcommand("bench_diff"), Some("bench-diff"));
+        assert_eq!(nearest_subcommand("xyzzyplugh"), None);
+    }
+
+    #[test]
+    fn edit_distance_is_sane() {
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("serve", "sweep"), 4);
+    }
+}
 
 /// Load an FFT-bearing HLO module and execute it — proves the AOT bridge
 /// (jax → HLO text → PJRT CPU) works end to end, including the `fft` op the

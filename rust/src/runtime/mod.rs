@@ -23,6 +23,27 @@
 //!   step. The trainer, DDP workers/leader, and eval paths all execute
 //!   through bindings.
 //!
+//! Two consumers drive this stack with different units of work:
+//!
+//! ```text
+//!   train path (decorr train/sweep)     request path (decorr serve)
+//!   ─────────────────────────────────   ─────────────────────────────────
+//!   step loop / SweepScheduler          socket → decode → spec queue
+//!        │  K workers                        │  micro-batch (fill /
+//!        ▼                                   ▼   deadline / drain)
+//!   per-thread Session arm              per-worker Session arm
+//!        │  ExecutionBinding                 │  ExecutionBinding
+//!        ▼   (marshal per step)              ▼   (marshal per batch)
+//!   train/grad artifact                 loss artifact → scatter per-
+//!                                       request responses
+//! ```
+//!
+//! Both sides hold one `Session` arm per worker thread (PJRT engines are
+//! thread-affine; [`SharedSession`] is the Send+Sync handle) and reuse
+//! warm `ExecutionBinding`s so the steady state is marshal + execute —
+//! the serving side falls back to the host executors per shape when an
+//! artifact is absent (see [`crate::serve`]).
+//!
 //! Interchange format is **HLO text** (not serialized `HloModuleProto`):
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids which the pinned
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids and

@@ -1,0 +1,240 @@
+//! Serving client: a blocking one-connection protocol client plus the
+//! closed-loop load generator behind `decorr serve-bench`.
+
+use std::io::Write as _;
+use std::net::Shutdown;
+use std::time::{Duration, Instant};
+
+use crate::bench_harness::table::Table;
+use crate::util::rng::Rng;
+
+use super::metrics::LatencyHistogram;
+use super::net::{ServeAddr, Stream};
+use super::protocol::{
+    decode_response_body, encode_request, read_frame, write_frame, Request, RequestKind, Response,
+    ServeError, MAX_FRAME, RESP_MAGIC,
+};
+
+/// A blocking protocol client over one connection.
+pub struct ServeClient {
+    stream: Stream,
+}
+
+impl ServeClient {
+    /// Connect to a serving endpoint.
+    pub fn connect(addr: &ServeAddr) -> Result<ServeClient, ServeError> {
+        Ok(ServeClient {
+            stream: Stream::connect(addr)?,
+        })
+    }
+
+    /// Send one request frame.
+    pub fn send(&mut self, req: &Request) -> Result<(), ServeError> {
+        write_frame(&mut self.stream, &encode_request(req))
+    }
+
+    /// Receive one response frame ([`ServeError::Closed`] on clean EOF).
+    pub fn recv(&mut self) -> Result<Response, ServeError> {
+        let body = read_frame(&mut self.stream, RESP_MAGIC, MAX_FRAME)?;
+        decode_response_body(&body)
+    }
+
+    /// Send one request and wait for its response (single-outstanding
+    /// call pattern).
+    pub fn call(&mut self, req: &Request) -> Result<Response, ServeError> {
+        self.send(req)?;
+        self.recv()
+    }
+
+    /// Signal end-of-requests by shutting down the write half. The
+    /// server's reader sees EOF and releases this connection from the
+    /// drain count; responses already in flight can still be received.
+    pub fn finish_sending(&mut self) -> Result<(), ServeError> {
+        self.stream.flush()?;
+        self.stream.shutdown(Shutdown::Write)?;
+        Ok(())
+    }
+
+    /// Write raw bytes onto the connection — test hook for exercising the
+    /// server's malformed-frame handling.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<(), ServeError> {
+        self.stream.write_all(bytes)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------ load generation
+
+/// Closed-loop load-generator configuration (`decorr serve-bench`).
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// Endpoint to drive.
+    pub addr: ServeAddr,
+    /// Target aggregate request rate (requests/second) across all
+    /// connections; `0` means as fast as the closed loop allows.
+    pub rps: f64,
+    /// Total requests to issue (split across connections).
+    pub requests: usize,
+    /// Concurrent connections, each on its own thread.
+    pub conns: usize,
+    /// Specs cycled round-robin per request.
+    pub specs: Vec<String>,
+    /// Rows per score request.
+    pub rows: usize,
+    /// Embedding dimension.
+    pub d: usize,
+    /// Issue a whole-matrix diagnose every `diag_every`-th request
+    /// (0 disables diagnose traffic).
+    pub diag_every: usize,
+    /// Payload RNG seed.
+    pub seed: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            addr: ServeAddr::parse("127.0.0.1:7070"),
+            rps: 200.0,
+            requests: 200,
+            conns: 2,
+            specs: vec!["bt_sum".to_string()],
+            rows: 16,
+            d: 64,
+            diag_every: 8,
+            seed: 42,
+        }
+    }
+}
+
+/// What the load generator measured, client-side.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    /// Requests sent.
+    pub sent: u64,
+    /// Ok responses received.
+    pub ok: u64,
+    /// Error responses received.
+    pub errors: u64,
+    /// Client-observed call latency (send → matching response).
+    pub latency: LatencyHistogram,
+    /// Wall-clock of the whole run.
+    pub wall_seconds: f64,
+}
+
+impl LoadReport {
+    /// Achieved aggregate request rate.
+    pub fn achieved_per_sec(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            0.0
+        } else {
+            self.sent as f64 / self.wall_seconds
+        }
+    }
+
+    /// The client-side table (`serving_load`) for `BENCH_serving.json`.
+    pub fn to_table(&self, specs: &[String]) -> Table {
+        let mut t = Table::new(&[
+            "specs",
+            "requests",
+            "ok",
+            "errors",
+            "achieved_per_sec",
+            "p50_latency_ms",
+            "p99_latency_ms",
+        ]);
+        t.row(vec![
+            specs.join(";"),
+            self.sent.to_string(),
+            self.ok.to_string(),
+            self.errors.to_string(),
+            format!("{:.1}", self.achieved_per_sec()),
+            format!("{:.3}", self.latency.percentile_ms(50.0)),
+            format!("{:.3}", self.latency.percentile_ms(99.0)),
+        ]);
+        t
+    }
+}
+
+/// Drive `cfg.addr` with paced closed-loop traffic: `conns` threads,
+/// each sending its share of `requests` (round-robin specs, a diagnose
+/// every `diag_every`-th call) and waiting for each response before the
+/// next send. Pacing sleeps to approximate `rps` aggregate.
+pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport, ServeError> {
+    let conns = cfg.conns.max(1);
+    let per_conn = cfg.requests.div_ceil(conns);
+    let interval = if cfg.rps > 0.0 {
+        Duration::from_secs_f64(conns as f64 / cfg.rps)
+    } else {
+        Duration::ZERO
+    };
+    let t0 = Instant::now();
+    let mut threads = Vec::with_capacity(conns);
+    for c in 0..conns {
+        let cfg = cfg.clone();
+        threads.push(std::thread::spawn(move || -> Result<LoadReport, ServeError> {
+            let mut report = LoadReport::default();
+            let mut client = ServeClient::connect(&cfg.addr)?;
+            let mut rng = Rng::new(cfg.seed ^ (c as u64).wrapping_mul(0x9e37_79b9));
+            let mut next_send = Instant::now();
+            for i in 0..per_conn {
+                if !interval.is_zero() {
+                    let now = Instant::now();
+                    if next_send > now {
+                        std::thread::sleep(next_send - now);
+                    }
+                    next_send += interval;
+                }
+                let global = c * per_conn + i;
+                let kind = if cfg.diag_every > 0 && global % cfg.diag_every == cfg.diag_every - 1 {
+                    RequestKind::Diagnose
+                } else {
+                    RequestKind::Score
+                };
+                let spec = cfg.specs[global % cfg.specs.len()].clone();
+                let elems = cfg.rows * cfg.d;
+                let req = Request {
+                    id: global as u64 + 1,
+                    kind,
+                    spec,
+                    rows: cfg.rows,
+                    d: cfg.d,
+                    a: (0..elems).map(|_| rng.gaussian()).collect(),
+                    b: (0..elems).map(|_| rng.gaussian()).collect(),
+                };
+                let sent_at = Instant::now();
+                let resp = client.call(&req)?;
+                report.sent += 1;
+                report.latency.record(sent_at.elapsed());
+                match resp {
+                    Response::Error { .. } => report.errors += 1,
+                    _ => report.ok += 1,
+                }
+            }
+            client.finish_sending()?;
+            Ok(report)
+        }));
+    }
+    let mut merged = LoadReport::default();
+    let mut first_err = None;
+    for t in threads {
+        match t.join() {
+            Ok(Ok(r)) => {
+                merged.sent += r.sent;
+                merged.ok += r.ok;
+                merged.errors += r.errors;
+                merged.latency.merge(&r.latency);
+            }
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => {
+                first_err =
+                    first_err.or(Some(ServeError::Exec("load thread panicked".to_string())))
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    merged.wall_seconds = t0.elapsed().as_secs_f64();
+    Ok(merged)
+}

@@ -1,0 +1,410 @@
+//! Warm per-spec execution state for the serving workers.
+//!
+//! Each worker thread owns one [`SpecExecCache`]: a map from queue key to
+//! a [`SpecExec`] holding everything expensive to build — the row-scoring
+//! FFT plan and scratch, the host `LossExecutor`, and (when artifacts
+//! exist) an [`ExecutionBinding`] over the spec's loss artifact executed
+//! through the worker's `Session` arm. Requests pay construction once per
+//! `(spec, d)` per worker; after that the hot path is allocation-light.
+//!
+//! ## The two request paths
+//!
+//! **Score** — per-row circular cross-correlation through the planned
+//! real FFT: for a row pair `(a, b)` of dimension `d`,
+//!
+//! ```text
+//! c = irfft( conj(rfft(a)) ∘ rfft(b) )          // c_j = Σ_i a_i b_{(i+j) mod d}
+//! score = Σ_{j≥1} |c_j|^q                        // Eq. 12 summand at norm 1
+//! align = c_0 = a · b                            // the aligned-lag term
+//! ```
+//!
+//! Rows are independent, so a micro-batch coalesced from many requests is
+//! **bit-identical** to scoring each request alone — the property the
+//! serving integration test pins. Padding rows are simply never scored.
+//!
+//! **Diagnose** — the whole request matrix through the spec's
+//! `LossExecutor`. When the worker has a `Session` arm and the loss
+//! artifact for shape `(rows, d)` exists, the evaluation runs on device
+//! through a cached [`ExecutionBinding`] (all manifest inputs bound as
+//! streams, identity permutation); a failed load is remembered per shape
+//! so absent artifacts (the CI case) cost one attempt, not one per
+//! request, before falling back to the warm `HostExecutor`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::api::{HostExecutor, LossExecutor, LossOutput, LossSpec};
+use crate::fft::plan::{RfftPlan, RfftScratch};
+use crate::fft::Complex;
+use crate::regularizer::Q;
+use crate::runtime::{literal_f32, literal_i32, scalar, ExecutionBinding, Session};
+use crate::util::tensor::Tensor;
+
+use super::protocol::{RequestKind, RespondedBy, RowScore, ServeError};
+use super::queue::QueueKey;
+
+/// Per-row scorer: one planned real FFT of length `d`, reused across
+/// every row of every micro-batch.
+pub struct RowScorer {
+    d: usize,
+    q: Q,
+    plan: RfftPlan,
+    scratch: RfftScratch,
+    fa: Vec<Complex>,
+    fb: Vec<Complex>,
+    corr: Vec<f32>,
+}
+
+impl RowScorer {
+    /// Build a scorer for dimension `d` under shaping `q`.
+    pub fn new(d: usize, q: Q) -> RowScorer {
+        let plan = RfftPlan::new(d);
+        let scratch = plan.make_scratch();
+        let bins = plan.bins();
+        RowScorer {
+            d,
+            q,
+            plan,
+            scratch,
+            fa: vec![Complex::ZERO; bins],
+            fb: vec![Complex::ZERO; bins],
+            corr: vec![0.0; d],
+        }
+    }
+
+    /// Score one row pair (each `d` long). See the module docs for the
+    /// quantity computed.
+    pub fn score_row(&mut self, a: &[f32], b: &[f32]) -> RowScore {
+        debug_assert_eq!(a.len(), self.d);
+        debug_assert_eq!(b.len(), self.d);
+        self.plan.forward_into(a, &mut self.fa, &mut self.scratch);
+        self.plan.forward_into(b, &mut self.fb, &mut self.scratch);
+        for k in 0..self.fa.len() {
+            self.fa[k] = self.fa[k].conj() * self.fb[k];
+        }
+        let (fa, corr) = (&self.fa, &mut self.corr);
+        self.plan.inverse_into(fa, corr, &mut self.scratch);
+        let score: f64 = self.corr[1..]
+            .iter()
+            .map(|&c| self.q.apply(c) as f64)
+            .sum();
+        RowScore {
+            score,
+            align: self.corr[0] as f64,
+        }
+    }
+
+    /// Score the first `rows` rows of two row-major `capacity × d`
+    /// buffers (padding rows beyond `rows` are never touched). Output
+    /// order is input row order, so scattering back to requests is a
+    /// contiguous split.
+    pub fn score_rows(&mut self, rows: usize, a: &[f32], b: &[f32]) -> Vec<RowScore> {
+        let d = self.d;
+        (0..rows)
+            .map(|r| self.score_row(&a[r * d..(r + 1) * d], &b[r * d..(r + 1) * d]))
+            .collect()
+    }
+}
+
+/// A warm device binding for one diagnose shape `(rows, d)`.
+struct DeviceDiag {
+    binding: ExecutionBinding,
+    perm: xla::Literal,
+    n_streams: usize,
+}
+
+/// Everything warm for one `(spec, d)` queue key on one worker thread.
+pub struct SpecExec {
+    spec: LossSpec,
+    d: usize,
+    scorer: RowScorer,
+    host: HostExecutor,
+    /// Device diagnose bindings, keyed by request row count.
+    device: BTreeMap<usize, DeviceDiag>,
+    /// Row counts whose artifact load already failed — fall back to the
+    /// host without retrying every request.
+    device_failed: BTreeSet<usize>,
+}
+
+impl SpecExec {
+    /// Build the warm state for `key`. Fails typed (`BadSpec`) when the
+    /// spec string does not parse or cannot be instantiated at `d`
+    /// (block mismatch, `d < 2`).
+    pub fn new(key: &QueueKey) -> Result<SpecExec, ServeError> {
+        let bad = |reason: String| ServeError::BadSpec {
+            spec: key.spec.clone(),
+            reason,
+        };
+        let spec = LossSpec::parse(&key.spec).map_err(|e| bad(e.to_string()))?;
+        let host = spec
+            .host_executor(key.d)
+            .map_err(|e| bad(format!("cannot instantiate at d={}: {e}", key.d)))?;
+        Ok(SpecExec {
+            spec,
+            d: key.d,
+            scorer: RowScorer::new(key.d, spec.q()),
+            host,
+            device: BTreeMap::new(),
+            device_failed: BTreeSet::new(),
+        })
+    }
+
+    /// The parsed spec.
+    pub fn spec(&self) -> &LossSpec {
+        &self.spec
+    }
+
+    /// Score the first `rows` rows of a (possibly padded) micro-batch.
+    pub fn score(&mut self, rows: usize, a: &[f32], b: &[f32]) -> Vec<RowScore> {
+        self.scorer.score_rows(rows, a, b)
+    }
+
+    /// Diagnose one whole-matrix request: device through the warm binding
+    /// when the `(rows, d)` loss artifact loads on `session`, warm host
+    /// executor otherwise.
+    pub fn diagnose(
+        &mut self,
+        session: Option<&Session>,
+        rows: usize,
+        a: &[f32],
+        b: &[f32],
+    ) -> Result<(LossOutput, RespondedBy), ServeError> {
+        if let Some(session) = session {
+            if !self.device_failed.contains(&rows) {
+                match self.diagnose_device(session, rows, a, b) {
+                    Ok(out) => return Ok((out, RespondedBy::Device)),
+                    Err(_) => {
+                        // Artifact absent or shape-incompatible: remember
+                        // and serve from the host from now on.
+                        self.device_failed.insert(rows);
+                        self.device.remove(&rows);
+                    }
+                }
+            }
+        }
+        let ta = Tensor::from_vec(&[rows, self.d], a.to_vec());
+        let tb = Tensor::from_vec(&[rows, self.d], b.to_vec());
+        let out = self
+            .host
+            .evaluate(&ta, &tb)
+            .map_err(|e| ServeError::Exec(format!("{e:#}")))?;
+        Ok((out, RespondedBy::Host))
+    }
+
+    fn diagnose_device(
+        &mut self,
+        session: &Session,
+        rows: usize,
+        a: &[f32],
+        b: &[f32],
+    ) -> anyhow::Result<LossOutput> {
+        if !self.device.contains_key(&rows) {
+            let name = self.spec.loss_artifact(self.d, rows, false);
+            let artifact = session.load(&name)?;
+            // Every manifest input is a per-request stream: views by
+            // position, the permutation slot fed identity.
+            let names: Vec<String> = artifact
+                .manifest()
+                .inputs
+                .iter()
+                .map(|i| i.name.clone())
+                .collect();
+            anyhow::ensure!(
+                names.len() == 3,
+                "loss artifact '{name}' has {} inputs, expected (xa, xb, perm)",
+                names.len()
+            );
+            let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+            let binding = ExecutionBinding::bind(artifact, &[], &name_refs)?;
+            let perm = literal_i32(&(0..self.d as u32).collect::<Vec<u32>>())?;
+            self.device.insert(
+                rows,
+                DeviceDiag {
+                    binding,
+                    perm,
+                    n_streams: names.len(),
+                },
+            );
+        }
+        let diag = self.device.get(&rows).expect("inserted above");
+        let za = literal_f32(&Tensor::from_vec(&[rows, self.d], a.to_vec()))?;
+        let zb = literal_f32(&Tensor::from_vec(&[rows, self.d], b.to_vec()))?;
+        let mut streams: Vec<&xla::Literal> = Vec::with_capacity(diag.n_streams);
+        streams.push(&za);
+        streams.push(&zb);
+        streams.push(&diag.perm);
+        let out = diag.binding.execute(&[], &streams)?;
+        let total = scalar(&out[0])? as f64;
+        Ok(LossOutput {
+            total,
+            invariance: None,
+            regularizer: None,
+        })
+    }
+}
+
+/// The per-worker warm cache: queue key → [`SpecExec`], plus the
+/// worker's optional `Session` arm (created on the worker thread —
+/// PJRT engines are thread-affine).
+#[derive(Default)]
+pub struct SpecExecCache {
+    execs: BTreeMap<QueueKey, SpecExec>,
+}
+
+impl SpecExecCache {
+    /// The warm executor for `key`, built on first use.
+    pub fn get(&mut self, key: &QueueKey) -> Result<&mut SpecExec, ServeError> {
+        if !self.execs.contains_key(key) {
+            let exec = SpecExec::new(key)?;
+            self.execs.insert(key.clone(), exec);
+        }
+        Ok(self.execs.get_mut(key).expect("inserted above"))
+    }
+
+    /// Validate a request's spec/shape against the serving limits without
+    /// building anything. Returns the queue key on success.
+    pub fn validate(
+        kind: RequestKind,
+        spec: &str,
+        rows: usize,
+        d: usize,
+        max_rows: usize,
+    ) -> Result<QueueKey, ServeError> {
+        let _ = kind;
+        LossSpec::parse(spec).map_err(|e| ServeError::BadSpec {
+            spec: spec.to_string(),
+            reason: e.to_string(),
+        })?;
+        if rows == 0 || rows > max_rows {
+            return Err(ServeError::RowsOutOfRange {
+                rows,
+                max: max_rows,
+            });
+        }
+        Ok(QueueKey {
+            spec: spec.to_string(),
+            d,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_rows(rng: &mut Rng, rows: usize, d: usize) -> Vec<f32> {
+        (0..rows * d).map(|_| rng.gaussian()).collect()
+    }
+
+    /// Naive O(d²) circular cross-correlation reference.
+    fn naive_score(a: &[f32], b: &[f32], q: Q) -> (f64, f64) {
+        let d = a.len();
+        let mut c = vec![0f32; d];
+        for (j, cj) in c.iter_mut().enumerate() {
+            *cj = (0..d).map(|i| a[i] * b[(i + j) % d]).sum();
+        }
+        let score = c[1..].iter().map(|&v| q.apply(v) as f64).sum();
+        (score, c[0] as f64)
+    }
+
+    #[test]
+    fn scorer_matches_naive_correlation() {
+        let mut rng = Rng::new(77);
+        for d in [4usize, 8, 12, 16] {
+            let a = rand_rows(&mut rng, 1, d);
+            let b = rand_rows(&mut rng, 1, d);
+            for q in [Q::L1, Q::L2] {
+                let mut scorer = RowScorer::new(d, q);
+                let got = scorer.score_row(&a, &b);
+                let (score, align) = naive_score(&a, &b, q);
+                assert!(
+                    (got.score - score).abs() < 1e-5 * (1.0 + score.abs()),
+                    "d={d} q={q:?}: {} vs {score}",
+                    got.score
+                );
+                assert!((got.align - align).abs() < 1e-5 * (1.0 + align.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn batched_scoring_is_bit_identical_to_single_rows() {
+        let mut rng = Rng::new(78);
+        let (rows, d, capacity) = (5usize, 16usize, 8usize);
+        let mut a = rand_rows(&mut rng, rows, d);
+        let mut b = rand_rows(&mut rng, rows, d);
+        // Pad to capacity with garbage that must never leak into results.
+        a.resize(capacity * d, 123.0);
+        b.resize(capacity * d, -55.0);
+        let mut batched = RowScorer::new(d, Q::L2);
+        let batch = batched.score_rows(rows, &a, &b);
+        assert_eq!(batch.len(), rows);
+        for r in 0..rows {
+            // A fresh scorer per row: the plan is stateless across rows.
+            let mut single = RowScorer::new(d, Q::L2);
+            let one = single.score_row(&a[r * d..(r + 1) * d], &b[r * d..(r + 1) * d]);
+            assert_eq!(one.score.to_bits(), batch[r].score.to_bits(), "row {r}");
+            assert_eq!(one.align.to_bits(), batch[r].align.to_bits(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn host_diagnose_is_bit_identical_to_direct_executor() {
+        let mut rng = Rng::new(79);
+        let (rows, d) = (16usize, 8usize);
+        let a = rand_rows(&mut rng, rows, d);
+        let b = rand_rows(&mut rng, rows, d);
+        let key = QueueKey {
+            spec: "bt_sum".to_string(),
+            d,
+        };
+        let mut exec = SpecExec::new(&key).unwrap();
+        let (out, by) = exec.diagnose(None, rows, &a, &b).unwrap();
+        assert_eq!(by, RespondedBy::Host);
+
+        let spec = LossSpec::parse("bt_sum").unwrap();
+        let mut direct = spec.host_executor(d).unwrap();
+        let want = direct
+            .evaluate(
+                &Tensor::from_vec(&[rows, d], a.clone()),
+                &Tensor::from_vec(&[rows, d], b.clone()),
+            )
+            .unwrap();
+        assert_eq!(out.total.to_bits(), want.total.to_bits());
+        assert_eq!(out.invariance, want.invariance);
+        assert_eq!(out.regularizer, want.regularizer);
+    }
+
+    #[test]
+    fn bad_specs_are_typed_not_panics() {
+        for bad in ["nope_sum", "bt_sum@b=7", ""] {
+            let key = QueueKey {
+                spec: bad.to_string(),
+                d: 16,
+            };
+            match SpecExec::new(&key) {
+                Err(ServeError::BadSpec { .. }) => {}
+                other => panic!("spec '{bad}': expected BadSpec, got {:?}", other.is_ok()),
+            }
+        }
+        // Valid grammar, uninstantiable dimension.
+        let key = QueueKey {
+            spec: "bt_sum@b=64".to_string(),
+            d: 10,
+        };
+        assert!(matches!(
+            SpecExec::new(&key),
+            Err(ServeError::BadSpec { .. })
+        ));
+    }
+
+    #[test]
+    fn validate_rejects_rows_out_of_range() {
+        let err = SpecExecCache::validate(RequestKind::Score, "bt_sum", 0, 8, 512).unwrap_err();
+        assert!(matches!(err, ServeError::RowsOutOfRange { .. }));
+        let err = SpecExecCache::validate(RequestKind::Score, "bt_sum", 513, 8, 512).unwrap_err();
+        assert!(matches!(err, ServeError::RowsOutOfRange { .. }));
+        let key = SpecExecCache::validate(RequestKind::Diagnose, "bt_sum", 8, 8, 512).unwrap();
+        assert_eq!(key.d, 8);
+    }
+}

@@ -1,0 +1,386 @@
+//! Serving observability: per-request latency histograms and per-queue
+//! micro-batch gauges, reduced to the `table::write_json` shape so
+//! `BENCH_serving.json` rides the same bench-diff gate as every other
+//! recorded trajectory.
+//!
+//! The histogram is fixed-size and geometric (no allocation per record,
+//! merge-friendly across worker threads): 96 buckets growing ~19% per
+//! step cover ~1 µs to ~20 minutes, which bounds percentile error to the
+//! bucket ratio — plenty for a p50/p95/p99 gate whose noise floor is
+//! far coarser. Exact count/sum/min/max ride along for means and tails.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::bench_harness::table::Table;
+
+/// Histogram bucket count.
+const BUCKETS: usize = 96;
+/// Geometric bucket growth per step (~19%; 96 steps span ~10^7.3).
+const GROWTH: f64 = 1.19;
+/// Lower edge of bucket 0, in microseconds.
+const FLOOR_US: f64 = 1.0;
+
+/// A fixed-size geometric latency histogram (microsecond domain).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum_us: f64,
+    min_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum_us: 0.0,
+            min_us: f64::INFINITY,
+            max_us: 0.0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one latency sample.
+    pub fn record(&mut self, latency: Duration) {
+        let us = latency.as_secs_f64() * 1e6;
+        let idx = if us <= FLOOR_US {
+            0
+        } else {
+            (((us / FLOOR_US).ln() / GROWTH.ln()) as usize).min(BUCKETS - 1)
+        };
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Fold another histogram into this one (worker-thread merge).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean latency in milliseconds (0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64 / 1e3
+        }
+    }
+
+    /// Maximum recorded latency in milliseconds.
+    pub fn max_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max_us / 1e3
+        }
+    }
+
+    /// The `p`-th percentile (0 < p <= 100) in milliseconds: the upper
+    /// edge of the bucket holding the p-th sample, clamped to the exact
+    /// observed min/max so single-sample histograms report exactly.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let upper_us = FLOOR_US * GROWTH.powi(i as i32 + 1);
+                return (upper_us.clamp(self.min_us, self.max_us)) / 1e3;
+            }
+        }
+        self.max_us / 1e3
+    }
+}
+
+/// Micro-batch gauges for one spec queue: how full the flushed batches
+/// ran and why they flushed.
+#[derive(Clone, Debug, Default)]
+pub struct BatchGauges {
+    /// Batches flushed.
+    pub batches: u64,
+    /// Real (non-padding) rows executed across all batches.
+    pub rows: u64,
+    /// Capacity (in rows) the batches were padded to, summed.
+    pub capacity_rows: u64,
+    /// Flushes because the batch filled to the artifact shape.
+    pub full_flushes: u64,
+    /// Flushes because the oldest request aged past the deadline.
+    pub deadline_flushes: u64,
+    /// Flushes forced by graceful drain.
+    pub drain_flushes: u64,
+    /// Sum of queue depths (waiting rows) sampled at each flush.
+    pub depth_sum: u64,
+    /// Maximum queue depth sampled at a flush.
+    pub depth_max: u64,
+}
+
+impl BatchGauges {
+    /// Record one flushed batch.
+    pub fn record(&mut self, rows: u64, capacity: u64, reason: FlushReason, depth_after: u64) {
+        self.batches += 1;
+        self.rows += rows;
+        self.capacity_rows += capacity;
+        match reason {
+            FlushReason::Full => self.full_flushes += 1,
+            FlushReason::Deadline => self.deadline_flushes += 1,
+            FlushReason::Drain => self.drain_flushes += 1,
+        }
+        self.depth_sum += depth_after;
+        self.depth_max = self.depth_max.max(depth_after);
+    }
+
+    /// Fold another gauge set into this one.
+    pub fn merge(&mut self, other: &BatchGauges) {
+        self.batches += other.batches;
+        self.rows += other.rows;
+        self.capacity_rows += other.capacity_rows;
+        self.full_flushes += other.full_flushes;
+        self.deadline_flushes += other.deadline_flushes;
+        self.drain_flushes += other.drain_flushes;
+        self.depth_sum += other.depth_sum;
+        self.depth_max = self.depth_max.max(other.depth_max);
+    }
+
+    /// Mean batch occupancy in percent (rows executed / rows padded to).
+    pub fn occupancy_pct(&self) -> f64 {
+        if self.capacity_rows == 0 {
+            0.0
+        } else {
+            self.rows as f64 / self.capacity_rows as f64 * 100.0
+        }
+    }
+
+    /// Mean queue depth sampled at flush time.
+    pub fn mean_depth(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.depth_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Why a micro-batch left its queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// The queue reached the batch capacity.
+    Full,
+    /// The oldest waiting request aged past the flush deadline.
+    Deadline,
+    /// Graceful drain flushed the remainder.
+    Drain,
+}
+
+/// Per-spec serving statistics: request latencies plus batch gauges.
+#[derive(Clone, Debug, Default)]
+pub struct SpecServeStats {
+    /// End-to-end request latency (decode complete → response written).
+    pub latency: LatencyHistogram,
+    /// Requests answered (ok responses).
+    pub requests: u64,
+    /// Error responses sent.
+    pub errors: u64,
+    /// Micro-batch gauges (score path).
+    pub gauges: BatchGauges,
+}
+
+/// Process-wide serving statistics, keyed by spec label.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Per-spec stats in label order.
+    pub specs: BTreeMap<String, SpecServeStats>,
+    /// Connections accepted.
+    pub connections: u64,
+    /// Framing errors that closed a connection.
+    pub framing_errors: u64,
+}
+
+impl ServeStats {
+    /// The mutable per-spec slot for `spec`.
+    pub fn spec_mut(&mut self, spec: &str) -> &mut SpecServeStats {
+        self.specs.entry(spec.to_string()).or_default()
+    }
+
+    /// Total ok responses across specs.
+    pub fn total_requests(&self) -> u64 {
+        self.specs.values().map(|s| s.requests).sum()
+    }
+
+    /// Total error responses across specs.
+    pub fn total_errors(&self) -> u64 {
+        self.specs.values().map(|s| s.errors).sum()
+    }
+
+    /// The per-spec latency table (`serving_latency`): p50/p95/p99/max
+    /// request latency in milliseconds, bench-diff-gated lower-is-better.
+    pub fn latency_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "spec",
+            "requests",
+            "errors",
+            "p50_latency_ms",
+            "p95_latency_ms",
+            "p99_latency_ms",
+            "max_latency_ms",
+        ]);
+        for (spec, s) in &self.specs {
+            t.row(vec![
+                spec.clone(),
+                s.requests.to_string(),
+                s.errors.to_string(),
+                format!("{:.3}", s.latency.percentile_ms(50.0)),
+                format!("{:.3}", s.latency.percentile_ms(95.0)),
+                format!("{:.3}", s.latency.percentile_ms(99.0)),
+                format!("{:.3}", s.latency.max_ms()),
+            ]);
+        }
+        t
+    }
+
+    /// The per-spec micro-batch table (`serving_batches`): occupancy,
+    /// flush-reason counts, and queue-depth gauges.
+    pub fn batch_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "spec",
+            "batches",
+            "rows",
+            "occupancy_pct",
+            "full_flushes",
+            "deadline_flushes",
+            "drain_flushes",
+            "mean_queue_depth",
+            "max_queue_depth",
+        ]);
+        for (spec, s) in &self.specs {
+            t.row(vec![
+                spec.clone(),
+                s.gauges.batches.to_string(),
+                s.gauges.rows.to_string(),
+                format!("{:.1}", s.gauges.occupancy_pct()),
+                s.gauges.full_flushes.to_string(),
+                s.gauges.deadline_flushes.to_string(),
+                s.gauges.drain_flushes.to_string(),
+                format!("{:.2}", s.gauges.mean_depth()),
+                s.gauges.depth_max.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_order_and_clamp() {
+        let mut h = LatencyHistogram::default();
+        for ms in [1.0f64, 2.0, 3.0, 4.0, 100.0] {
+            h.record(Duration::from_secs_f64(ms / 1e3));
+        }
+        assert_eq!(h.count(), 5);
+        let p50 = h.percentile_ms(50.0);
+        let p99 = h.percentile_ms(99.0);
+        assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+        // p50 lands in the bucket holding 3ms — within one growth step.
+        assert!((2.0..=4.0).contains(&p50), "p50 {p50}");
+        // p99 is clamped to the observed max.
+        assert!((80.0..=100.0).contains(&p99), "p99 {p99}");
+        assert!((h.max_ms() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample_is_exact_via_clamp() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(1500));
+        for p in [1.0, 50.0, 99.0] {
+            assert!((h.percentile_ms(p) - 1.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let (mut a, mut b, mut both) = (
+            LatencyHistogram::default(),
+            LatencyHistogram::default(),
+            LatencyHistogram::default(),
+        );
+        for i in 0..50 {
+            let d = Duration::from_micros(100 + i * 37);
+            if i % 2 == 0 {
+                a.record(d);
+            } else {
+                b.record(d);
+            }
+            both.record(d);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.counts, both.counts);
+        assert!((a.percentile_ms(95.0) - both.percentile_ms(95.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile_ms(99.0), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.max_ms(), 0.0);
+    }
+
+    #[test]
+    fn gauges_occupancy_and_depth() {
+        let mut g = BatchGauges::default();
+        g.record(128, 128, FlushReason::Full, 12);
+        g.record(64, 128, FlushReason::Deadline, 0);
+        g.record(32, 128, FlushReason::Drain, 4);
+        assert_eq!(g.batches, 3);
+        assert_eq!(g.full_flushes, 1);
+        assert_eq!(g.deadline_flushes, 1);
+        assert_eq!(g.drain_flushes, 1);
+        let occ = g.occupancy_pct();
+        assert!((occ - (224.0 / 384.0 * 100.0)).abs() < 1e-9, "{occ}");
+        assert!((g.mean_depth() - 16.0 / 3.0).abs() < 1e-9);
+        assert_eq!(g.depth_max, 12);
+    }
+
+    #[test]
+    fn tables_have_gateable_columns() {
+        let mut stats = ServeStats::default();
+        let s = stats.spec_mut("bt_sum");
+        s.requests = 10;
+        s.latency.record(Duration::from_millis(2));
+        s.gauges.record(100, 128, FlushReason::Full, 3);
+        let lat = stats.latency_table().to_json();
+        let cols = lat.get("columns").and_then(|c| c.as_arr()).unwrap();
+        let names: Vec<&str> = cols.iter().filter_map(|c| c.as_str()).collect();
+        assert!(names.contains(&"p50_latency_ms"));
+        assert!(names.contains(&"p99_latency_ms"));
+        let batches = stats.batch_table().to_json();
+        let cols = batches.get("columns").and_then(|c| c.as_arr()).unwrap();
+        let names: Vec<&str> = cols.iter().filter_map(|c| c.as_str()).collect();
+        assert!(names.contains(&"occupancy_pct"));
+        assert!(names.contains(&"mean_queue_depth"));
+    }
+}

@@ -1,0 +1,54 @@
+//! # The serving subsystem — `decorr serve`
+//!
+//! Long-lived embedding-inference serving over the same warm runtime
+//! stack the trainer uses. The unit of work is a *request*, not an
+//! epoch:
+//!
+//! ```text
+//! socket (tcp | unix:<path>)
+//!    │  length-prefixed binary frames        [protocol]
+//!    ▼
+//! decode + validate (typed ServeError; connection survives
+//!    │                request-scoped errors) [protocol, exec]
+//!    ▼
+//! spec-keyed micro-batch queues              [queue]
+//!    │  fill to the artifact batch shape, flush on deadline,
+//!    │  drain on shutdown
+//!    ▼
+//! K workers × warm per-worker state          [server, exec]
+//!    │  planned FFT row scorer · Session arm + ExecutionBinding
+//!    │  (device diagnose) · HostExecutor fallback
+//!    ▼
+//! scatter per-request responses; record latency histograms
+//!    and batch-occupancy gauges              [metrics]
+//! ```
+//!
+//! Two request kinds keep micro-batching *exact*:
+//!
+//! * **Score** — per-row circular cross-correlation scores. Rows are
+//!   independent, so coalescing rows from many requests into one padded
+//!   batch is bit-identical to serving each request alone.
+//! * **Diagnose** — the spec's full `LossExecutor` on exactly the
+//!   request's matrix; batching here means warm per-spec executors and
+//!   artifact bindings, never mixing matrices.
+//!
+//! The observability side reduces to `table::write_json` tables
+//! (`serving_latency`, `serving_batches`, `serving_load`) written as
+//! `BENCH_serving.json`, which CI gates with `decorr bench-diff` exactly
+//! like the training trajectories. `decorr serve-bench` is the paired
+//! closed-loop load generator ([`client::run_load`]) that makes the whole
+//! path benchable without real traffic.
+
+pub mod client;
+pub mod exec;
+pub mod metrics;
+pub mod net;
+pub mod protocol;
+pub mod queue;
+pub mod server;
+
+pub use client::{run_load, LoadConfig, LoadReport, ServeClient};
+pub use metrics::{BatchGauges, FlushReason, LatencyHistogram, ServeStats};
+pub use net::{Listener, ServeAddr, Stream};
+pub use protocol::{Request, RequestKind, RespondedBy, Response, RowScore, ServeError};
+pub use server::{serve, ExecMode, ServeConfig, ServeReport, ServerHandle};

@@ -1,0 +1,199 @@
+//! Transport for the serving subsystem: one address grammar and one
+//! stream/listener pair covering TCP and Unix-domain sockets, so the
+//! server, client, and load generator are transport-agnostic.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+
+/// A serving endpoint: `unix:<path>` or a TCP `host:port` (port `0`
+/// binds an ephemeral port — read the actual one back from
+/// [`Listener::bind`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeAddr {
+    /// TCP `host:port`.
+    Tcp(String),
+    /// Unix-domain socket path.
+    Unix(PathBuf),
+}
+
+impl ServeAddr {
+    /// Parse the address grammar: a `unix:` prefix selects a Unix-domain
+    /// socket, anything else is a TCP `host:port`.
+    pub fn parse(s: &str) -> ServeAddr {
+        match s.strip_prefix("unix:") {
+            Some(path) => ServeAddr::Unix(PathBuf::from(path)),
+            None => ServeAddr::Tcp(s.to_string()),
+        }
+    }
+}
+
+impl fmt::Display for ServeAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeAddr::Tcp(hp) => f.write_str(hp),
+            ServeAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// A bound listener on either transport.
+pub enum Listener {
+    /// TCP listener.
+    Tcp(TcpListener),
+    /// Unix-domain listener (the socket file is unlinked on drop).
+    Unix(UnixListener, PathBuf),
+}
+
+impl Listener {
+    /// Bind `addr`, returning the listener and the *actual* address (TCP
+    /// port 0 resolves to the kernel-assigned port). A pre-existing Unix
+    /// socket file at the path is replaced.
+    pub fn bind(addr: &ServeAddr) -> io::Result<(Listener, ServeAddr)> {
+        match addr {
+            ServeAddr::Tcp(hp) => {
+                let l = TcpListener::bind(hp.as_str())?;
+                let actual = ServeAddr::Tcp(l.local_addr()?.to_string());
+                Ok((Listener::Tcp(l), actual))
+            }
+            ServeAddr::Unix(path) => {
+                // A stale socket file from a previous run refuses the
+                // bind; replacing it is the standard daemon idiom.
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)?;
+                Ok((Listener::Unix(l, path.clone()), addr.clone()))
+            }
+        }
+    }
+
+    /// Switch the accept loop between blocking and polling mode.
+    pub fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            Listener::Unix(l, _) => l.set_nonblocking(nb),
+        }
+    }
+
+    /// Accept one connection (stream returned in blocking mode).
+    pub fn accept(&self) -> io::Result<Stream> {
+        let s = match self {
+            Listener::Tcp(l) => Stream::Tcp(l.accept()?.0),
+            Listener::Unix(l, _) => Stream::Unix(l.accept()?.0),
+        };
+        s.set_nonblocking(false)?;
+        Ok(s)
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// A connected stream on either transport.
+pub enum Stream {
+    /// TCP connection.
+    Tcp(TcpStream),
+    /// Unix-domain connection.
+    Unix(UnixStream),
+}
+
+impl Stream {
+    /// Connect to a serving endpoint.
+    pub fn connect(addr: &ServeAddr) -> io::Result<Stream> {
+        Ok(match addr {
+            ServeAddr::Tcp(hp) => Stream::Tcp(TcpStream::connect(hp.as_str())?),
+            ServeAddr::Unix(p) => Stream::Unix(UnixStream::connect(p)?),
+        })
+    }
+
+    /// A second handle to the same connection (read/write halves run on
+    /// different threads).
+    pub fn try_clone(&self) -> io::Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+        })
+    }
+
+    /// Shut down one or both halves.
+    pub fn shutdown(&self, how: Shutdown) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.shutdown(how),
+            Stream::Unix(s) => s.shutdown(how),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+            Stream::Unix(s) => s.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_grammar_roundtrips() {
+        let tcp = ServeAddr::parse("127.0.0.1:7070");
+        assert_eq!(tcp, ServeAddr::Tcp("127.0.0.1:7070".to_string()));
+        assert_eq!(tcp.to_string(), "127.0.0.1:7070");
+        let unix = ServeAddr::parse("unix:/tmp/decorr.sock");
+        assert_eq!(unix, ServeAddr::Unix(PathBuf::from("/tmp/decorr.sock")));
+        assert_eq!(unix.to_string(), "unix:/tmp/decorr.sock");
+    }
+
+    #[test]
+    fn tcp_ephemeral_port_resolves() {
+        let (l, actual) = Listener::bind(&ServeAddr::parse("127.0.0.1:0")).unwrap();
+        match &actual {
+            ServeAddr::Tcp(hp) => assert!(!hp.ends_with(":0"), "{hp}"),
+            other => panic!("{other}"),
+        }
+        drop(l);
+    }
+
+    #[test]
+    fn unix_socket_binds_and_unlinks_on_drop() {
+        let path = std::env::temp_dir().join(format!("decorr-net-test-{}.sock", std::process::id()));
+        let addr = ServeAddr::Unix(path.clone());
+        let (l, actual) = Listener::bind(&addr).unwrap();
+        assert_eq!(actual, addr);
+        assert!(path.exists());
+        drop(l);
+        assert!(!path.exists(), "socket file should be unlinked on drop");
+    }
+}

@@ -1,0 +1,789 @@
+//! The serving wire format: length-prefixed binary frames over a byte
+//! stream, decoded with typed [`ServeError`]s — never a panic, never a
+//! partial read mistaken for success.
+//!
+//! ## Frame layout
+//!
+//! Every frame (either direction) is an 8-byte header followed by a body:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"DCRQ" (request) / b"DCRP" (response)
+//! 4       4     body length (u32 LE, <= MAX_FRAME)
+//! 8       len   body
+//! ```
+//!
+//! Request body (`version`-prefixed, all integers LE, floats IEEE-754 LE
+//! — the same conventions as the `data::shard` format):
+//!
+//! ```text
+//! u8    version (1)
+//! u8    kind    (1 = Score, 2 = Diagnose)
+//! u64   request id (client-chosen, echoed in the response)
+//! u16   spec string length, then that many utf8 bytes (a LossSpec
+//!       grammar string, e.g. "bt_sum@b=64,q=1" — parsed server-side)
+//! u32   rows
+//! u32   d
+//! f32×(rows·d)  view A, row-major
+//! f32×(rows·d)  view B, row-major
+//! ```
+//!
+//! Response body:
+//!
+//! ```text
+//! u8    version (1)
+//! u64   request id
+//! u8    status (0 = ok, 1 = error)
+//! ok, Score:     u8 kind tag (1), u32 rows, rows × (f64 score, f64 align)
+//! ok, Diagnose:  u8 kind tag (2), u8 backend (0 host / 1 device),
+//!                u8 flags (bit0: invariance present, bit1: regularizer
+//!                present), f64 total, f64 invariance, f64 regularizer
+//! error:         u16 error code (see [`ServeError::code`]), u16 message
+//!                length + utf8 bytes
+//! ```
+//!
+//! ## Error taxonomy
+//!
+//! [`ServeError`] splits along one load-bearing line: *framing* errors
+//! ([`ServeError::is_framing`] — bad magic, oversize length, truncation,
+//! I/O) mean the byte stream can no longer be trusted and the connection
+//! must close; *request* errors (unknown spec, rows out of range, …) are
+//! scoped to one well-framed request, answered with an error response,
+//! and the connection survives. The proptests in `tests/proptests.rs`
+//! pin that arbitrary corruption decodes to a typed error.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Request frame magic.
+pub const REQ_MAGIC: [u8; 4] = *b"DCRQ";
+/// Response frame magic.
+pub const RESP_MAGIC: [u8; 4] = *b"DCRP";
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Hard ceiling on a frame body (64 MiB): an adversarial or corrupt
+/// length prefix must not allocate unbounded memory.
+pub const MAX_FRAME: usize = 1 << 26;
+/// Ceiling on the spec-string field.
+pub const MAX_SPEC_LEN: usize = 256;
+
+/// Typed serving failure. See the module docs for the framing/request
+/// split that decides whether a connection survives the error.
+#[derive(Debug)]
+pub enum ServeError {
+    /// Frame header did not start with the expected magic.
+    BadMagic {
+        /// The four bytes actually read.
+        got: [u8; 4],
+    },
+    /// Length prefix exceeds [`MAX_FRAME`].
+    Oversize {
+        /// Declared body length.
+        len: usize,
+        /// The ceiling it exceeded.
+        max: usize,
+    },
+    /// Body ended before the declared content (or a field overran the
+    /// body): `need` bytes wanted, `got` available.
+    Truncated {
+        /// Bytes the decoder needed.
+        need: usize,
+        /// Bytes that were actually present.
+        got: usize,
+    },
+    /// Unknown protocol version byte.
+    BadVersion(u8),
+    /// Unknown request/response kind tag.
+    UnknownKind(u8),
+    /// Spec string failed utf8 or `LossSpec` parsing, or exceeded
+    /// [`MAX_SPEC_LEN`].
+    BadSpec {
+        /// The offending spec string (lossy utf8).
+        spec: String,
+        /// Why it was rejected.
+        reason: String,
+    },
+    /// Request row count outside the served range.
+    RowsOutOfRange {
+        /// Rows the request declared.
+        rows: usize,
+        /// Server's per-request ceiling.
+        max: usize,
+    },
+    /// Declared rows/d disagree with the payload length.
+    PayloadMismatch {
+        /// Payload f32 count the header promised per view.
+        expect: usize,
+        /// f32 count actually present per view.
+        got: usize,
+    },
+    /// The peer closed the stream mid-frame or refused the write.
+    Io(std::io::Error),
+    /// Clean end of stream between frames (not an error per se; readers
+    /// use it to exit their loop).
+    Closed,
+    /// Server-side execution failed after a well-formed request.
+    Exec(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::BadMagic { got } => {
+                write!(f, "bad frame magic {:02x?} (expected DCRQ/DCRP)", got)
+            }
+            ServeError::Oversize { len, max } => {
+                write!(f, "frame body of {len} bytes exceeds the {max}-byte ceiling")
+            }
+            ServeError::Truncated { need, got } => {
+                write!(f, "truncated frame: needed {need} bytes, had {got}")
+            }
+            ServeError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            ServeError::UnknownKind(k) => write!(f, "unknown request kind tag {k}"),
+            ServeError::BadSpec { spec, reason } => {
+                write!(f, "unserveable spec '{spec}': {reason}")
+            }
+            ServeError::RowsOutOfRange { rows, max } => {
+                write!(f, "request rows {rows} outside the served range 1..={max}")
+            }
+            ServeError::PayloadMismatch { expect, got } => {
+                write!(f, "payload holds {got} f32s per view, header promised {expect}")
+            }
+            ServeError::Io(e) => write!(f, "serving i/o: {e}"),
+            ServeError::Closed => write!(f, "connection closed"),
+            ServeError::Exec(msg) => write!(f, "execution failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ServeError {
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            ServeError::Closed
+        } else {
+            ServeError::Io(e)
+        }
+    }
+}
+
+impl ServeError {
+    /// Whether this error corrupts the framing (connection must close)
+    /// rather than one request (connection survives).
+    pub fn is_framing(&self) -> bool {
+        matches!(
+            self,
+            ServeError::BadMagic { .. }
+                | ServeError::Oversize { .. }
+                | ServeError::Truncated { .. }
+                | ServeError::BadVersion(_)
+                | ServeError::Io(_)
+                | ServeError::Closed
+        )
+    }
+
+    /// Stable wire code for the error-response frame.
+    pub fn code(&self) -> u16 {
+        match self {
+            ServeError::BadMagic { .. } => 1,
+            ServeError::Oversize { .. } => 2,
+            ServeError::Truncated { .. } => 3,
+            ServeError::BadVersion(_) => 4,
+            ServeError::UnknownKind(_) => 5,
+            ServeError::BadSpec { .. } => 6,
+            ServeError::RowsOutOfRange { .. } => 7,
+            ServeError::PayloadMismatch { .. } => 8,
+            ServeError::Io(_) => 9,
+            ServeError::Closed => 10,
+            ServeError::Exec(_) => 11,
+        }
+    }
+}
+
+/// What a request asks the server to compute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestKind {
+    /// Per-row embedding scoring: each row pair scores independently, so
+    /// rows from many requests coalesce into one micro-batch.
+    Score,
+    /// Whole-matrix residual diagnostics: the spec's `LossExecutor`
+    /// evaluated on exactly this request's views.
+    Diagnose,
+}
+
+impl RequestKind {
+    fn tag(self) -> u8 {
+        match self {
+            RequestKind::Score => 1,
+            RequestKind::Diagnose => 2,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<RequestKind, ServeError> {
+        match t {
+            1 => Ok(RequestKind::Score),
+            2 => Ok(RequestKind::Diagnose),
+            other => Err(ServeError::UnknownKind(other)),
+        }
+    }
+}
+
+/// A decoded request frame. Payload views are row-major `rows × d`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Client-chosen id, echoed in the response (responses may arrive
+    /// out of order across specs).
+    pub id: u64,
+    /// What to compute.
+    pub kind: RequestKind,
+    /// Loss-spec grammar string (parsed and validated server-side).
+    pub spec: String,
+    /// Row count of each view.
+    pub rows: usize,
+    /// Embedding dimension.
+    pub d: usize,
+    /// View A, row-major `rows · d` f32s.
+    pub a: Vec<f32>,
+    /// View B, row-major `rows · d` f32s.
+    pub b: Vec<f32>,
+}
+
+/// One row pair's scoring result.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RowScore {
+    /// The row's decorrelation score: `Σ_{j≥1} |c_j|^q` over its
+    /// circular cross-correlation `c` (the Eq. 12 summand at norm 1).
+    pub score: f64,
+    /// The aligned-lag correlation `c_0 = a·b`.
+    pub align: f64,
+}
+
+/// Which substrate answered a diagnose request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RespondedBy {
+    /// Pure-rust `HostExecutor`.
+    Host,
+    /// PJRT artifact through a warm `Session` arm.
+    Device,
+}
+
+/// A decoded response frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Per-row scores for a [`RequestKind::Score`] request, in request
+    /// row order.
+    Score {
+        /// Echoed request id.
+        id: u64,
+        /// One entry per request row.
+        scores: Vec<RowScore>,
+    },
+    /// Loss decomposition for a [`RequestKind::Diagnose`] request.
+    Diagnose {
+        /// Echoed request id.
+        id: u64,
+        /// Which substrate computed it.
+        backend: RespondedBy,
+        /// Total loss.
+        total: f64,
+        /// Invariance term, when the backend decomposes it.
+        invariance: Option<f64>,
+        /// Regularizer term, when the backend decomposes it.
+        regularizer: Option<f64>,
+    },
+    /// The request failed; the connection survives unless the error was
+    /// a framing one.
+    Error {
+        /// Echoed request id (0 when the id never decoded).
+        id: u64,
+        /// Wire code (see [`ServeError::code`]).
+        code: u16,
+        /// Human-readable reason.
+        message: String,
+    },
+}
+
+impl Response {
+    /// The echoed request id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Score { id, .. }
+            | Response::Diagnose { id, .. }
+            | Response::Error { id, .. } => *id,
+        }
+    }
+}
+
+// ------------------------------------------------------------- encoding
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    out.reserve(vs.len() * 4);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn frame(magic: [u8; 4], body: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + body.len());
+    out.extend_from_slice(&magic);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Encode a request into one wire frame.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut body = Vec::with_capacity(24 + req.spec.len() + 8 * req.rows * req.d);
+    body.push(VERSION);
+    body.push(req.kind.tag());
+    put_u64(&mut body, req.id);
+    put_u16(&mut body, req.spec.len() as u16);
+    body.extend_from_slice(req.spec.as_bytes());
+    put_u32(&mut body, req.rows as u32);
+    put_u32(&mut body, req.d as u32);
+    put_f32s(&mut body, &req.a);
+    put_f32s(&mut body, &req.b);
+    frame(REQ_MAGIC, body)
+}
+
+/// Encode a response into one wire frame.
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut body = Vec::new();
+    body.push(VERSION);
+    put_u64(&mut body, resp.id());
+    match resp {
+        Response::Score { scores, .. } => {
+            body.push(0); // status ok
+            body.push(RequestKind::Score.tag());
+            put_u32(&mut body, scores.len() as u32);
+            for s in scores {
+                put_f64(&mut body, s.score);
+                put_f64(&mut body, s.align);
+            }
+        }
+        Response::Diagnose {
+            backend,
+            total,
+            invariance,
+            regularizer,
+            ..
+        } => {
+            body.push(0);
+            body.push(RequestKind::Diagnose.tag());
+            body.push(match backend {
+                RespondedBy::Host => 0,
+                RespondedBy::Device => 1,
+            });
+            let flags = u8::from(invariance.is_some()) | (u8::from(regularizer.is_some()) << 1);
+            body.push(flags);
+            put_f64(&mut body, *total);
+            put_f64(&mut body, invariance.unwrap_or(0.0));
+            put_f64(&mut body, regularizer.unwrap_or(0.0));
+        }
+        Response::Error { code, message, .. } => {
+            body.push(1); // status error
+            put_u16(&mut body, *code);
+            let msg = &message.as_bytes()[..message.len().min(u16::MAX as usize)];
+            put_u16(&mut body, msg.len() as u16);
+            body.extend_from_slice(msg);
+        }
+    }
+    frame(RESP_MAGIC, body)
+}
+
+// ------------------------------------------------------------- decoding
+
+/// Bounds-checked cursor over one frame body: every overrun is a typed
+/// [`ServeError::Truncated`], never a slice panic.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ServeError> {
+        let end = self.off.checked_add(n).ok_or(ServeError::Truncated {
+            need: n,
+            got: self.buf.len().saturating_sub(self.off),
+        })?;
+        if end > self.buf.len() {
+            return Err(ServeError::Truncated {
+                need: n,
+                got: self.buf.len() - self.off,
+            });
+        }
+        let s = &self.buf[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ServeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ServeError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ServeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ServeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, ServeError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, count: usize) -> Result<Vec<f32>, ServeError> {
+        let bytes = self.take(count.checked_mul(4).ok_or(ServeError::Oversize {
+            len: usize::MAX,
+            max: MAX_FRAME,
+        })?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.off
+    }
+}
+
+/// Decode a request frame body (the bytes after the 8-byte header).
+pub fn decode_request_body(body: &[u8]) -> Result<Request, ServeError> {
+    let mut c = Cursor::new(body);
+    let version = c.u8()?;
+    if version != VERSION {
+        return Err(ServeError::BadVersion(version));
+    }
+    let kind = RequestKind::from_tag(c.u8()?)?;
+    let id = c.u64()?;
+    let spec_len = c.u16()? as usize;
+    if spec_len > MAX_SPEC_LEN {
+        return Err(ServeError::BadSpec {
+            spec: format!("<{spec_len} bytes>"),
+            reason: format!("spec string exceeds {MAX_SPEC_LEN} bytes"),
+        });
+    }
+    let spec_bytes = c.take(spec_len)?;
+    let spec = std::str::from_utf8(spec_bytes)
+        .map_err(|e| ServeError::BadSpec {
+            spec: String::from_utf8_lossy(spec_bytes).into_owned(),
+            reason: format!("not utf8: {e}"),
+        })?
+        .to_string();
+    let rows = c.u32()? as usize;
+    let d = c.u32()? as usize;
+    let elems = rows.checked_mul(d).ok_or(ServeError::Oversize {
+        len: usize::MAX,
+        max: MAX_FRAME,
+    })?;
+    // The remaining body must hold exactly two views of rows·d f32s —
+    // anything else means the header lies about the payload.
+    if c.remaining() != elems * 8 {
+        return Err(ServeError::PayloadMismatch {
+            expect: elems,
+            got: c.remaining() / 8,
+        });
+    }
+    let a = c.f32s(elems)?;
+    let b = c.f32s(elems)?;
+    Ok(Request {
+        id,
+        kind,
+        spec,
+        rows,
+        d,
+        a,
+        b,
+    })
+}
+
+/// Decode a response frame body.
+pub fn decode_response_body(body: &[u8]) -> Result<Response, ServeError> {
+    let mut c = Cursor::new(body);
+    let version = c.u8()?;
+    if version != VERSION {
+        return Err(ServeError::BadVersion(version));
+    }
+    let id = c.u64()?;
+    match c.u8()? {
+        0 => match RequestKind::from_tag(c.u8()?)? {
+            RequestKind::Score => {
+                let rows = c.u32()? as usize;
+                let mut scores = Vec::with_capacity(rows.min(MAX_FRAME / 16));
+                for _ in 0..rows {
+                    let score = c.f64()?;
+                    let align = c.f64()?;
+                    scores.push(RowScore { score, align });
+                }
+                Ok(Response::Score { id, scores })
+            }
+            RequestKind::Diagnose => {
+                let backend = match c.u8()? {
+                    0 => RespondedBy::Host,
+                    1 => RespondedBy::Device,
+                    other => return Err(ServeError::UnknownKind(other)),
+                };
+                let flags = c.u8()?;
+                let total = c.f64()?;
+                let inv = c.f64()?;
+                let reg = c.f64()?;
+                Ok(Response::Diagnose {
+                    id,
+                    backend,
+                    total,
+                    invariance: (flags & 1 != 0).then_some(inv),
+                    regularizer: (flags & 2 != 0).then_some(reg),
+                })
+            }
+        },
+        1 => {
+            let code = c.u16()?;
+            let len = c.u16()? as usize;
+            let msg = c.take(len)?;
+            Ok(Response::Error {
+                id,
+                code,
+                message: String::from_utf8_lossy(msg).into_owned(),
+            })
+        }
+        other => Err(ServeError::UnknownKind(other)),
+    }
+}
+
+// -------------------------------------------------------------- framing
+
+/// Read one frame (header + body) from a byte stream, checking the magic
+/// against `expect_magic` and the length against `max_frame`. A clean EOF
+/// *between* frames returns [`ServeError::Closed`]; EOF mid-frame is
+/// [`ServeError::Truncated`] via the I/O layer.
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    expect_magic: [u8; 4],
+    max_frame: usize,
+) -> Result<Vec<u8>, ServeError> {
+    let mut header = [0u8; 8];
+    // First byte decides Closed-vs-Truncated: a clean EOF before any
+    // header byte is a normal end of stream.
+    let mut got = 0usize;
+    while got < header.len() {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                return Err(if got == 0 {
+                    ServeError::Closed
+                } else {
+                    ServeError::Truncated {
+                        need: header.len(),
+                        got,
+                    }
+                })
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let magic: [u8; 4] = header[..4].try_into().unwrap();
+    if magic != expect_magic {
+        return Err(ServeError::BadMagic { got: magic });
+    }
+    let len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+    if len > max_frame {
+        return Err(ServeError::Oversize {
+            len,
+            max: max_frame,
+        });
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            ServeError::Truncated { need: len, got: 0 }
+        } else {
+            ServeError::from(e)
+        }
+    })?;
+    Ok(body)
+}
+
+/// Write one pre-encoded frame to a byte stream.
+pub fn write_frame<W: Write>(w: &mut W, frame: &[u8]) -> Result<(), ServeError> {
+    w.write_all(frame)?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(kind: RequestKind, rows: usize, d: usize) -> Request {
+        Request {
+            id: 42,
+            kind,
+            spec: "bt_sum".to_string(),
+            rows,
+            d,
+            a: (0..rows * d).map(|i| i as f32 * 0.25).collect(),
+            b: (0..rows * d).map(|i| -(i as f32) * 0.5).collect(),
+        }
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        for kind in [RequestKind::Score, RequestKind::Diagnose] {
+            let r = req(kind, 3, 8);
+            let frame = encode_request(&r);
+            assert_eq!(&frame[..4], &REQ_MAGIC);
+            let body = &frame[8..];
+            let back = decode_request_body(body).unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let responses = [
+            Response::Score {
+                id: 7,
+                scores: vec![
+                    RowScore {
+                        score: 1.5,
+                        align: -0.25,
+                    },
+                    RowScore {
+                        score: 0.0,
+                        align: 3.0,
+                    },
+                ],
+            },
+            Response::Diagnose {
+                id: 8,
+                backend: RespondedBy::Host,
+                total: 2.5,
+                invariance: Some(1.0),
+                regularizer: Some(1.5),
+            },
+            Response::Diagnose {
+                id: 9,
+                backend: RespondedBy::Device,
+                total: 0.125,
+                invariance: None,
+                regularizer: None,
+            },
+            Response::Error {
+                id: 10,
+                code: 6,
+                message: "unserveable spec 'nope'".to_string(),
+            },
+        ];
+        for r in responses {
+            let frame = encode_response(&r);
+            assert_eq!(&frame[..4], &RESP_MAGIC);
+            assert_eq!(decode_response_body(&frame[8..]).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_typed() {
+        let frame = encode_request(&req(RequestKind::Score, 2, 4));
+        let body = &frame[8..];
+        for cut in 0..body.len() {
+            let err = decode_request_body(&body[..cut]).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    ServeError::Truncated { .. } | ServeError::PayloadMismatch { .. }
+                ),
+                "cut {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn framing_errors_from_stream() {
+        // Bad magic.
+        let mut bad = b"NOPE\x00\x00\x00\x00".to_vec();
+        let err = read_frame(&mut bad.as_slice(), REQ_MAGIC, MAX_FRAME).unwrap_err();
+        assert!(matches!(err, ServeError::BadMagic { got } if &got == b"NOPE"));
+        assert!(err.is_framing());
+
+        // Oversize length prefix: rejected before any allocation.
+        let mut oversize = Vec::new();
+        oversize.extend_from_slice(&REQ_MAGIC);
+        oversize.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut oversize.as_slice(), REQ_MAGIC, MAX_FRAME).unwrap_err();
+        assert!(matches!(err, ServeError::Oversize { .. }));
+
+        // Header truncated mid-way.
+        let mut short = REQ_MAGIC[..3].to_vec();
+        let err = read_frame(&mut short.as_slice(), REQ_MAGIC, MAX_FRAME).unwrap_err();
+        assert!(matches!(err, ServeError::Truncated { .. }));
+
+        // Clean EOF between frames.
+        let err = read_frame(&mut (&[][..]), REQ_MAGIC, MAX_FRAME).unwrap_err();
+        assert!(matches!(err, ServeError::Closed));
+
+        // Body shorter than the declared length.
+        let frame = encode_request(&req(RequestKind::Score, 1, 4));
+        let cut = &frame[..frame.len() - 3];
+        let err = read_frame(&mut &cut[..], REQ_MAGIC, MAX_FRAME).unwrap_err();
+        assert!(matches!(err, ServeError::Truncated { .. }));
+    }
+
+    #[test]
+    fn payload_mismatch_is_typed() {
+        let mut r = req(RequestKind::Score, 2, 4);
+        r.a.pop();
+        let frame = encode_request(&r);
+        let err = decode_request_body(&frame[8..]).unwrap_err();
+        assert!(matches!(err, ServeError::PayloadMismatch { .. }));
+        assert!(!err.is_framing());
+    }
+
+    #[test]
+    fn error_codes_are_stable() {
+        assert_eq!(ServeError::BadMagic { got: [0; 4] }.code(), 1);
+        assert_eq!(
+            ServeError::BadSpec {
+                spec: String::new(),
+                reason: String::new()
+            }
+            .code(),
+            6
+        );
+        assert_eq!(ServeError::Exec(String::new()).code(), 11);
+    }
+}

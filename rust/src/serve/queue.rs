@@ -1,0 +1,420 @@
+//! Spec-keyed micro-batch queues: the coalescing heart of `decorr serve`.
+//!
+//! Requests land in per-`(spec, d)` queues. Score requests carry
+//! independent rows, so they coalesce: a worker takes whole requests
+//! until the batch reaches the configured capacity (the artifact's batch
+//! shape), or the oldest waiting request ages past the flush deadline,
+//! or a graceful drain flushes the remainder. Diagnose requests are
+//! whole-matrix jobs — they never merge, but ride the same queues so a
+//! warm per-spec executor serves both kinds.
+//!
+//! Everything here is pure data structure plus clock arithmetic — the
+//! `now` instant is a parameter, so flush policy is unit-tested without
+//! sockets or sleeps. The server wraps one [`QueueSet`] in a
+//! `Mutex`/`Condvar` pair; [`QueueSet::next_deadline`] bounds the
+//! condvar wait so deadline flushes fire on time.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use super::metrics::FlushReason;
+use super::protocol::RequestKind;
+
+/// Queue identity: requests only coalesce when both the spec label and
+/// the embedding dimension agree (one executor/plan per key).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct QueueKey {
+    /// Canonical spec label.
+    pub spec: String,
+    /// Embedding dimension.
+    pub d: usize,
+}
+
+/// One queued request, with the reply handle the server will scatter the
+/// result back through. Generic over the handle so the queue logic tests
+/// without connections.
+#[derive(Debug)]
+pub struct Job<R> {
+    /// Client request id.
+    pub id: u64,
+    /// Score (coalescable rows) or Diagnose (whole matrix).
+    pub kind: RequestKind,
+    /// Row count of each view.
+    pub rows: usize,
+    /// View A, row-major `rows · d`.
+    pub a: Vec<f32>,
+    /// View B, row-major `rows · d`.
+    pub b: Vec<f32>,
+    /// When the request finished decoding (latency measurement origin).
+    pub arrival: Instant,
+    /// Where the response goes.
+    pub reply: R,
+}
+
+#[derive(Debug)]
+struct SpecQueue<R> {
+    score: VecDeque<Job<R>>,
+    score_rows: usize,
+    diag: VecDeque<Job<R>>,
+}
+
+impl<R> Default for SpecQueue<R> {
+    fn default() -> Self {
+        SpecQueue {
+            score: VecDeque::new(),
+            score_rows: 0,
+            diag: VecDeque::new(),
+        }
+    }
+}
+
+/// A batch a worker claimed from the queues.
+#[derive(Debug)]
+pub enum Taken<R> {
+    /// One whole-matrix diagnose job.
+    Diagnose {
+        /// Queue it came from.
+        key: QueueKey,
+        /// The job.
+        job: Job<R>,
+    },
+    /// A coalesced score micro-batch: whole requests, in arrival order,
+    /// whose rows sum to at most the capacity.
+    Score {
+        /// Queue it came from.
+        key: QueueKey,
+        /// The member requests, arrival order.
+        jobs: Vec<Job<R>>,
+        /// Total real rows across `jobs`.
+        rows: usize,
+        /// Why the batch flushed.
+        reason: FlushReason,
+        /// Rows still waiting in this queue after the take (the
+        /// queue-depth gauge sample).
+        depth_after: usize,
+    },
+}
+
+/// The spec-keyed queue set. See the module docs.
+#[derive(Debug)]
+pub struct QueueSet<R> {
+    queues: BTreeMap<QueueKey, SpecQueue<R>>,
+}
+
+impl<R> Default for QueueSet<R> {
+    fn default() -> Self {
+        QueueSet {
+            queues: BTreeMap::new(),
+        }
+    }
+}
+
+impl<R> QueueSet<R> {
+    /// Enqueue a decoded request.
+    pub fn push(&mut self, key: QueueKey, job: Job<R>) {
+        let q = self.queues.entry(key).or_default();
+        match job.kind {
+            RequestKind::Score => {
+                q.score_rows += job.rows;
+                q.score.push_back(job);
+            }
+            RequestKind::Diagnose => q.diag.push_back(job),
+        }
+    }
+
+    /// Whether nothing is waiting anywhere.
+    pub fn is_empty(&self) -> bool {
+        self.queues
+            .values()
+            .all(|q| q.score.is_empty() && q.diag.is_empty())
+    }
+
+    /// Rows currently waiting in the score queue for `key`.
+    pub fn depth_rows(&self, key: &QueueKey) -> usize {
+        self.queues.get(key).map_or(0, |q| q.score_rows)
+    }
+
+    /// Claim the next ready batch, if any:
+    ///
+    /// 1. any waiting diagnose job (whole-matrix, never coalesced);
+    /// 2. a score queue holding `capacity`+ rows — a *full* flush;
+    /// 3. a score queue whose oldest job aged past `deadline` — a
+    ///    *deadline* flush;
+    /// 4. under `drain`, any non-empty score queue — a *drain* flush.
+    ///
+    /// Requests are atomic: a batch takes whole jobs in arrival order
+    /// while they fit, so one batch never splits a request's rows.
+    pub fn take_ready(
+        &mut self,
+        now: Instant,
+        capacity: usize,
+        deadline: Duration,
+        drain: bool,
+    ) -> Option<Taken<R>> {
+        // 1: diagnose jobs.
+        let diag_key = self
+            .queues
+            .iter()
+            .find(|(_, q)| !q.diag.is_empty())
+            .map(|(k, _)| k.clone());
+        if let Some(key) = diag_key {
+            let job = self
+                .queues
+                .get_mut(&key)
+                .and_then(|q| q.diag.pop_front())
+                .expect("diag job present under lock");
+            return Some(Taken::Diagnose { key, job });
+        }
+        // 2–4: score batches, by decreasing urgency.
+        let pick = |q: &SpecQueue<R>| -> Option<FlushReason> {
+            if q.score.is_empty() {
+                return None;
+            }
+            if q.score_rows >= capacity {
+                return Some(FlushReason::Full);
+            }
+            let oldest = q.score.front().expect("non-empty").arrival;
+            if now.duration_since(oldest) >= deadline {
+                return Some(FlushReason::Deadline);
+            }
+            if drain {
+                return Some(FlushReason::Drain);
+            }
+            None
+        };
+        let mut chosen: Option<(QueueKey, FlushReason)> = None;
+        for (k, q) in &self.queues {
+            if let Some(reason) = pick(q) {
+                // Full beats deadline beats drain; first key wins ties.
+                let better = match (&chosen, reason) {
+                    (None, _) => true,
+                    (Some((_, FlushReason::Full)), _) => false,
+                    (Some(_), FlushReason::Full) => true,
+                    (Some((_, FlushReason::Deadline)), _) => false,
+                    (Some(_), FlushReason::Deadline) => true,
+                    _ => false,
+                };
+                if better {
+                    chosen = Some((k.clone(), reason));
+                }
+            }
+        }
+        let (key, reason) = chosen?;
+        let q = self.queues.get_mut(&key).expect("chosen key exists");
+        let mut jobs = Vec::new();
+        let mut rows = 0usize;
+        while let Some(front) = q.score.front() {
+            if !jobs.is_empty() && rows + front.rows > capacity {
+                break;
+            }
+            let job = q.score.pop_front().expect("front present");
+            q.score_rows -= job.rows;
+            rows += job.rows;
+            jobs.push(job);
+            if rows >= capacity {
+                break;
+            }
+        }
+        let depth_after = q.score_rows;
+        Some(Taken::Score {
+            key,
+            jobs,
+            rows,
+            reason,
+            depth_after,
+        })
+    }
+
+    /// Time until the earliest pending flush deadline (zero if one has
+    /// already passed), or `None` when no score rows are waiting. Bounds
+    /// the worker condvar wait.
+    pub fn next_deadline(&self, now: Instant, deadline: Duration) -> Option<Duration> {
+        self.queues
+            .values()
+            .filter_map(|q| q.score.front())
+            .map(|j| {
+                let age = now.duration_since(j.arrival);
+                deadline.saturating_sub(age)
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, kind: RequestKind, rows: usize, arrival: Instant) -> Job<u64> {
+        Job {
+            id,
+            kind,
+            rows,
+            a: vec![0.0; rows * 4],
+            b: vec![0.0; rows * 4],
+            arrival,
+            reply: id,
+        }
+    }
+
+    fn key(spec: &str) -> QueueKey {
+        QueueKey {
+            spec: spec.to_string(),
+            d: 4,
+        }
+    }
+
+    const DEADLINE: Duration = Duration::from_millis(5);
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let mut qs = QueueSet::default();
+        let t0 = Instant::now();
+        for i in 0..4 {
+            qs.push(key("bt_sum"), job(i, RequestKind::Score, 4, t0));
+        }
+        // 16 rows at capacity 8: a full batch is ready right now.
+        match qs.take_ready(t0, 8, DEADLINE, false) {
+            Some(Taken::Score {
+                jobs,
+                rows,
+                reason,
+                depth_after,
+                ..
+            }) => {
+                assert_eq!(jobs.len(), 2);
+                assert_eq!(rows, 8);
+                assert_eq!(reason, FlushReason::Full);
+                assert_eq!(depth_after, 8);
+                assert_eq!(jobs[0].id, 0);
+                assert_eq!(jobs[1].id, 1);
+            }
+            other => panic!("expected full score batch, got {other:?}"),
+        }
+        // Remaining 8 rows flush as the second full batch.
+        match qs.take_ready(t0, 8, DEADLINE, false) {
+            Some(Taken::Score { rows, reason, .. }) => {
+                assert_eq!(rows, 8);
+                assert_eq!(reason, FlushReason::Full);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(qs.is_empty());
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let mut qs = QueueSet::default();
+        let t0 = Instant::now();
+        qs.push(key("bt_sum"), job(1, RequestKind::Score, 3, t0));
+        // Young and under capacity: not ready.
+        assert!(qs.take_ready(t0, 8, DEADLINE, false).is_none());
+        let wait = qs.next_deadline(t0, DEADLINE).unwrap();
+        assert!(wait <= DEADLINE);
+        // Past the deadline: flushes partial.
+        match qs.take_ready(t0 + DEADLINE, 8, DEADLINE, false) {
+            Some(Taken::Score {
+                rows,
+                reason,
+                depth_after,
+                ..
+            }) => {
+                assert_eq!(rows, 3);
+                assert_eq!(reason, FlushReason::Deadline);
+                assert_eq!(depth_after, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn requests_are_atomic_across_batches() {
+        let mut qs = QueueSet::default();
+        let t0 = Instant::now();
+        qs.push(key("s"), job(1, RequestKind::Score, 5, t0));
+        qs.push(key("s"), job(2, RequestKind::Score, 5, t0));
+        // Capacity 8 fits one 5-row request but not two: the second
+        // request is never split.
+        match qs.take_ready(t0 + DEADLINE, 8, DEADLINE, false) {
+            Some(Taken::Score { jobs, rows, .. }) => {
+                assert_eq!(jobs.len(), 1);
+                assert_eq!(rows, 5);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(qs.depth_rows(&key("s")), 5);
+    }
+
+    #[test]
+    fn specs_never_coalesce_together() {
+        let mut qs = QueueSet::default();
+        let t0 = Instant::now();
+        qs.push(key("a"), job(1, RequestKind::Score, 4, t0));
+        qs.push(key("b"), job(2, RequestKind::Score, 4, t0));
+        let taken = qs.take_ready(t0 + DEADLINE, 8, DEADLINE, false).unwrap();
+        match taken {
+            Taken::Score { key: k, jobs, .. } => {
+                assert_eq!(jobs.len(), 1, "one spec per batch");
+                assert_eq!(k.spec, "a");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn diagnose_preempts_and_never_merges() {
+        let mut qs = QueueSet::default();
+        let t0 = Instant::now();
+        qs.push(key("s"), job(1, RequestKind::Score, 8, t0));
+        qs.push(key("s"), job(2, RequestKind::Diagnose, 32, t0));
+        match qs.take_ready(t0, 8, DEADLINE, false) {
+            Some(Taken::Diagnose { job, .. }) => assert_eq!(job.id, 2),
+            other => panic!("{other:?}"),
+        }
+        match qs.take_ready(t0, 8, DEADLINE, false) {
+            Some(Taken::Score { jobs, .. }) => assert_eq!(jobs[0].id, 1),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn drain_flushes_everything() {
+        let mut qs = QueueSet::default();
+        let t0 = Instant::now();
+        qs.push(key("a"), job(1, RequestKind::Score, 2, t0));
+        qs.push(key("b"), job(2, RequestKind::Score, 1, t0));
+        let mut seen = 0;
+        while let Some(t) = qs.take_ready(t0, 8, DEADLINE, true) {
+            match t {
+                Taken::Score { reason, jobs, .. } => {
+                    assert_eq!(reason, FlushReason::Drain);
+                    seen += jobs.len();
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(seen, 2);
+        assert!(qs.is_empty());
+    }
+
+    #[test]
+    fn full_beats_deadline_beats_drain() {
+        let mut qs = QueueSet::default();
+        let t0 = Instant::now();
+        qs.push(key("young_full"), job(1, RequestKind::Score, 8, t0 + DEADLINE));
+        qs.push(key("old_partial"), job(2, RequestKind::Score, 2, t0));
+        match qs.take_ready(t0 + DEADLINE, 8, DEADLINE, true) {
+            Some(Taken::Score { key: k, reason, .. }) => {
+                assert_eq!(k.spec, "young_full");
+                assert_eq!(reason, FlushReason::Full);
+            }
+            other => panic!("{other:?}"),
+        }
+        match qs.take_ready(t0 + DEADLINE, 8, DEADLINE, true) {
+            Some(Taken::Score { key: k, reason, .. }) => {
+                assert_eq!(k.spec, "old_partial");
+                assert_eq!(reason, FlushReason::Deadline);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,553 @@
+//! The `decorr serve` server: acceptor + per-connection readers +
+//! K micro-batching workers over warm per-worker execution state.
+//!
+//! ```text
+//!            acceptor (poll loop, stops at drain)
+//!                │ spawn per connection
+//!                ▼
+//!   reader: read_frame → decode → validate spec ──err──► error frame
+//!                │ enqueue Job {reply: Arc<Mutex<write half>>}
+//!                ▼
+//!        QueueSet under Mutex + Condvar  ◄───────────────┐
+//!                │ take_ready (full / deadline / drain)  │ notify
+//!                ▼                                       │
+//!   worker ×K: pad batch → SpecExec (FFT scorer /        │
+//!              Session-arm binding / host fallback) ─────┘
+//!                │ scatter per-request frames through each job's reply
+//!                ▼
+//!        ServeStats (latency histograms, batch gauges)
+//! ```
+//!
+//! ## Drain correctness
+//!
+//! The active-reader count lives under the **same mutex** as the queues
+//! and is decremented only *after* a reader's final enqueue, so a worker
+//! that observes `draining && queues.is_empty() && readers == 0` knows no
+//! further job can appear. Well-behaved clients shut down their write
+//! half when done; the reader sees EOF and exits. Connections still idle
+//! past `drain_timeout` are force-closed so `join` always returns.
+
+use std::collections::VecDeque;
+use std::io::Write as _;
+use std::net::Shutdown;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Session, SharedSession};
+
+use super::exec::{SpecExec, SpecExecCache};
+use super::metrics::{FlushReason, ServeStats};
+use super::net::{Listener, ServeAddr, Stream};
+use super::protocol::{
+    decode_request_body, encode_response, read_frame, write_frame, Request, RequestKind, Response,
+    ServeError, REQ_MAGIC,
+};
+use super::queue::{Job, QueueKey, QueueSet, Taken};
+
+/// Which substrate the workers execute on.
+#[derive(Clone)]
+pub enum ExecMode {
+    /// Pure-rust executors; no artifacts required (the CI smoke mode).
+    Host,
+    /// Each worker opens one `Session` arm of this shared session on its
+    /// own thread and tries the spec's loss artifact for diagnose
+    /// requests, falling back to the host per shape when absent.
+    Device(SharedSession),
+}
+
+/// Server configuration. `Default` gives the CI smoke shape: loopback
+/// TCP, two workers, 128-row batches, a 2 ms flush deadline.
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// Endpoint to bind.
+    pub addr: ServeAddr,
+    /// Micro-batching worker threads (each with its own warm cache).
+    pub workers: usize,
+    /// Score-batch capacity in rows — fill to here, then flush.
+    pub batch_rows: usize,
+    /// Oldest-request age that force-flushes a partial batch.
+    pub deadline: Duration,
+    /// Per-request row ceiling (typed reject above).
+    pub max_rows: usize,
+    /// Execution substrate.
+    pub mode: ExecMode,
+    /// Frame-body ceiling handed to the protocol layer.
+    pub max_frame: usize,
+    /// How long `join` waits for idle connections to hang up before
+    /// force-closing them.
+    pub drain_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: ServeAddr::parse("127.0.0.1:0"),
+            workers: 2,
+            batch_rows: 128,
+            deadline: Duration::from_millis(2),
+            max_rows: 4096,
+            mode: ExecMode::Host,
+            max_frame: super::protocol::MAX_FRAME,
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// What the server reports after a graceful drain.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Merged serving statistics (latency tables, batch gauges).
+    pub stats: ServeStats,
+}
+
+/// One connection's write half, shared by every worker that owes it a
+/// response (responses from different batches interleave frame-atomically
+/// under the lock).
+type Reply = Arc<Mutex<Stream>>;
+
+/// Queue + drain state guarded by one mutex (see the module docs).
+struct Central {
+    queues: QueueSet<Reply>,
+    /// Readers that may still enqueue. Decremented after the final
+    /// enqueue, under this lock.
+    readers: usize,
+}
+
+struct Shared {
+    central: Mutex<Central>,
+    cv: Condvar,
+    stats: Mutex<ServeStats>,
+    draining: AtomicBool,
+    batch_rows: usize,
+    deadline: Duration,
+    max_rows: usize,
+    max_frame: usize,
+}
+
+impl Shared {
+    fn note_framing_error(&self) {
+        self.stats.lock().expect("stats lock").framing_errors += 1;
+    }
+}
+
+/// A running server. Obtain with [`serve`], stop with
+/// [`shutdown`](ServerHandle::shutdown) + [`join`](ServerHandle::join).
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+    local_addr: ServeAddr,
+    accepting: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    conns: Arc<Mutex<Vec<Stream>>>,
+    drain_timeout: Duration,
+}
+
+/// Bind, spawn the acceptor and `workers` micro-batching workers, and
+/// return the handle. The bound address (ephemeral TCP ports resolved)
+/// is available immediately via [`ServerHandle::local_addr`].
+pub fn serve(cfg: ServeConfig) -> Result<ServerHandle> {
+    let (listener, local_addr) =
+        Listener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    listener.set_nonblocking(true)?;
+    let shared = Arc::new(Shared {
+        central: Mutex::new(Central {
+            queues: QueueSet::default(),
+            readers: 0,
+        }),
+        cv: Condvar::new(),
+        stats: Mutex::new(ServeStats::default()),
+        draining: AtomicBool::new(false),
+        batch_rows: cfg.batch_rows.max(1),
+        deadline: cfg.deadline,
+        max_rows: cfg.max_rows.max(1),
+        max_frame: cfg.max_frame,
+    });
+    let accepting = Arc::new(AtomicBool::new(true));
+    let readers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+    let conns: Arc<Mutex<Vec<Stream>>> = Arc::new(Mutex::new(Vec::new()));
+
+    let mut workers = Vec::with_capacity(cfg.workers.max(1));
+    for _ in 0..cfg.workers.max(1) {
+        let shared = shared.clone();
+        let mode = cfg.mode.clone();
+        workers.push(std::thread::spawn(move || worker_loop(&shared, &mode)));
+    }
+
+    let acceptor = {
+        let shared = shared.clone();
+        let accepting = accepting.clone();
+        let readers = readers.clone();
+        let conns = conns.clone();
+        std::thread::spawn(move || {
+            accept_loop(&listener, &shared, &accepting, &readers, &conns);
+        })
+    };
+
+    Ok(ServerHandle {
+        shared,
+        local_addr,
+        accepting,
+        acceptor: Some(acceptor),
+        workers,
+        readers,
+        conns,
+        drain_timeout: cfg.drain_timeout,
+    })
+}
+
+impl ServerHandle {
+    /// The actually-bound endpoint (connect clients here).
+    pub fn local_addr(&self) -> &ServeAddr {
+        &self.local_addr
+    }
+
+    /// Begin graceful drain: stop accepting, flush every queue, answer
+    /// every in-flight request. Idempotent; `join` also calls it.
+    pub fn shutdown(&self) {
+        self.accepting.store(false, Ordering::SeqCst);
+        self.shared.draining.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+    }
+
+    /// Drain and wait for every thread, returning the merged stats.
+    /// Connections still idle after the drain timeout are force-closed.
+    pub fn join(mut self) -> Result<ServeReport> {
+        self.shutdown();
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        // Give well-behaved clients until the drain timeout to hang up,
+        // then force-close what remains so join always returns.
+        let gave_up_at = Instant::now() + self.drain_timeout;
+        loop {
+            {
+                let central = self.shared.central.lock().expect("central lock");
+                if central.readers == 0 {
+                    break;
+                }
+            }
+            if Instant::now() >= gave_up_at {
+                for c in self.conns.lock().expect("conns lock").iter() {
+                    let _ = c.shutdown(Shutdown::Both);
+                }
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let handles = std::mem::take(&mut *self.readers.lock().expect("readers lock"));
+        for h in handles {
+            let _ = h.join();
+        }
+        self.shared.cv.notify_all();
+        for w in std::mem::take(&mut self.workers) {
+            let _ = w.join();
+        }
+        let stats = self.shared.stats.lock().expect("stats lock").clone();
+        Ok(ServeReport { stats })
+    }
+}
+
+// ------------------------------------------------------------- acceptor
+
+fn accept_loop(
+    listener: &Listener,
+    shared: &Arc<Shared>,
+    accepting: &AtomicBool,
+    readers: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+    conns: &Arc<Mutex<Vec<Stream>>>,
+) {
+    while accepting.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok(stream) => {
+                let reply = match stream.try_clone() {
+                    Ok(w) => Arc::new(Mutex::new(w)),
+                    Err(_) => continue,
+                };
+                if let Ok(extra) = stream.try_clone() {
+                    conns.lock().expect("conns lock").push(extra);
+                }
+                shared.stats.lock().expect("stats lock").connections += 1;
+                shared.central.lock().expect("central lock").readers += 1;
+                let shared = shared.clone();
+                let handle = std::thread::spawn(move || reader_loop(stream, reply, &shared));
+                readers.lock().expect("readers lock").push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+// --------------------------------------------------------------- reader
+
+fn send_response(reply: &Reply, resp: &Response) -> Result<(), ServeError> {
+    let frame = encode_response(resp);
+    let mut w = reply.lock().expect("reply lock");
+    write_frame(&mut *w, &frame)?;
+    w.flush()?;
+    Ok(())
+}
+
+fn reader_loop(mut stream: Stream, reply: Reply, shared: &Arc<Shared>) {
+    loop {
+        let body = match read_frame(&mut stream, REQ_MAGIC, shared.max_frame) {
+            Ok(b) => b,
+            Err(ServeError::Closed) => break,
+            Err(e) => {
+                // Framing gone: best-effort error frame, then close.
+                shared.note_framing_error();
+                let _ = send_response(
+                    &reply,
+                    &Response::Error {
+                        id: 0,
+                        code: e.code(),
+                        message: e.to_string(),
+                    },
+                );
+                break;
+            }
+        };
+        let req = match decode_request_body(&body) {
+            Ok(r) => r,
+            Err(e) if e.is_framing() => {
+                shared.note_framing_error();
+                let _ = send_response(
+                    &reply,
+                    &Response::Error {
+                        id: 0,
+                        code: e.code(),
+                        message: e.to_string(),
+                    },
+                );
+                break;
+            }
+            Err(e) => {
+                // Request-scoped decode failure: the frame boundary held,
+                // so answer and keep the connection.
+                let _ = send_response(
+                    &reply,
+                    &Response::Error {
+                        id: 0,
+                        code: e.code(),
+                        message: e.to_string(),
+                    },
+                );
+                continue;
+            }
+        };
+        match SpecExecCache::validate(req.kind, &req.spec, req.rows, req.d, shared.max_rows) {
+            Ok(key) => enqueue(shared, key, req, &reply),
+            Err(e) => {
+                let mut stats = shared.stats.lock().expect("stats lock");
+                stats.spec_mut(&req.spec).errors += 1;
+                drop(stats);
+                let _ = send_response(
+                    &reply,
+                    &Response::Error {
+                        id: req.id,
+                        code: e.code(),
+                        message: e.to_string(),
+                    },
+                );
+            }
+        }
+    }
+    // Final decrement under the queue lock: after this, a worker that
+    // sees empty queues knows this connection contributes nothing more.
+    let mut central = shared.central.lock().expect("central lock");
+    central.readers = central.readers.saturating_sub(1);
+    drop(central);
+    shared.cv.notify_all();
+}
+
+fn enqueue(shared: &Arc<Shared>, key: QueueKey, req: Request, reply: &Reply) {
+    let Request {
+        id, kind, rows, a, b, ..
+    } = req;
+    let job = Job {
+        id,
+        kind,
+        rows,
+        a,
+        b,
+        arrival: Instant::now(),
+        reply: reply.clone(),
+    };
+    let mut central = shared.central.lock().expect("central lock");
+    central.queues.push(key, job);
+    drop(central);
+    shared.cv.notify_all();
+}
+
+// --------------------------------------------------------------- worker
+
+fn worker_loop(shared: &Arc<Shared>, mode: &ExecMode) {
+    // The Session arm is created here, on the worker thread: PJRT
+    // engines are thread-affine, SharedSession is the Send+Sync handle.
+    let session: Option<Session> = match mode {
+        ExecMode::Host => None,
+        ExecMode::Device(s) => s.session().ok(),
+    };
+    let mut cache = SpecExecCache::default();
+    loop {
+        let taken = {
+            let mut central = shared.central.lock().expect("central lock");
+            loop {
+                let drain = shared.draining.load(Ordering::SeqCst);
+                let now = Instant::now();
+                if let Some(t) =
+                    central
+                        .queues
+                        .take_ready(now, shared.batch_rows, shared.deadline, drain)
+                {
+                    break Some(t);
+                }
+                if drain && central.queues.is_empty() && central.readers == 0 {
+                    break None;
+                }
+                let wait = central
+                    .queues
+                    .next_deadline(now, shared.deadline)
+                    .unwrap_or(Duration::from_millis(50))
+                    .min(Duration::from_millis(50))
+                    .max(Duration::from_micros(100));
+                central = shared
+                    .cv
+                    .wait_timeout(central, wait)
+                    .expect("central lock")
+                    .0;
+            }
+        };
+        let Some(taken) = taken else {
+            // Propagate the exit condition to sibling workers.
+            shared.cv.notify_all();
+            return;
+        };
+        match taken {
+            Taken::Diagnose { key, job } => run_diagnose(shared, &mut cache, session.as_ref(), key, job),
+            Taken::Score {
+                key,
+                jobs,
+                rows,
+                reason,
+                depth_after,
+            } => run_score(shared, &mut cache, key, jobs, rows, reason, depth_after),
+        }
+    }
+}
+
+fn respond_exec_error(shared: &Arc<Shared>, spec: &str, id: u64, reply: &Reply, e: &ServeError) {
+    shared.stats.lock().expect("stats lock").spec_mut(spec).errors += 1;
+    let _ = send_response(
+        reply,
+        &Response::Error {
+            id,
+            code: e.code(),
+            message: e.to_string(),
+        },
+    );
+}
+
+fn run_diagnose(
+    shared: &Arc<Shared>,
+    cache: &mut SpecExecCache,
+    session: Option<&Session>,
+    key: QueueKey,
+    job: Job<Reply>,
+) {
+    let exec = match cache.get(&key) {
+        Ok(e) => e,
+        Err(e) => return respond_exec_error(shared, &key.spec, job.id, &job.reply, &e),
+    };
+    match exec.diagnose(session, job.rows, &job.a, &job.b) {
+        Ok((out, backend)) => {
+            let resp = Response::Diagnose {
+                id: job.id,
+                backend,
+                total: out.total,
+                invariance: out.invariance,
+                regularizer: out.regularizer,
+            };
+            let sent = send_response(&job.reply, &resp).is_ok();
+            let mut stats = shared.stats.lock().expect("stats lock");
+            let s = stats.spec_mut(&key.spec);
+            if sent {
+                s.requests += 1;
+                s.latency.record(job.arrival.elapsed());
+            } else {
+                stats.framing_errors += 1;
+            }
+        }
+        Err(e) => respond_exec_error(shared, &key.spec, job.id, &job.reply, &e),
+    }
+}
+
+fn run_score(
+    shared: &Arc<Shared>,
+    cache: &mut SpecExecCache,
+    key: QueueKey,
+    jobs: Vec<Job<Reply>>,
+    rows: usize,
+    reason: FlushReason,
+    depth_after: usize,
+) {
+    let exec: &mut SpecExec = match cache.get(&key) {
+        Ok(e) => e,
+        Err(e) => {
+            for job in &jobs {
+                respond_exec_error(shared, &key.spec, job.id, &job.reply, &e);
+            }
+            return;
+        }
+    };
+    // Pad to the artifact batch shape: zero rows beyond the real ones.
+    // The scorer only touches the first `rows` rows, so padding cannot
+    // perturb results — micro-batched output is bit-identical to
+    // single-request output by construction.
+    let capacity = rows.max(shared.batch_rows);
+    let d = key.d;
+    let mut a = vec![0f32; capacity * d];
+    let mut b = vec![0f32; capacity * d];
+    let mut off = 0usize;
+    for job in &jobs {
+        let n = job.rows * d;
+        a[off..off + n].copy_from_slice(&job.a);
+        b[off..off + n].copy_from_slice(&job.b);
+        off += n;
+    }
+    let scores = exec.score(rows, &a, &b);
+    // Scatter contiguous row spans back to their requests.
+    let mut results: VecDeque<_> = scores.into();
+    let mut sent_ok = 0u64;
+    let mut write_failures = 0u64;
+    let mut latencies = Vec::with_capacity(jobs.len());
+    for job in &jobs {
+        let mine: Vec<_> = results.drain(..job.rows).collect();
+        let resp = Response::Score {
+            id: job.id,
+            scores: mine,
+        };
+        if send_response(&job.reply, &resp).is_ok() {
+            sent_ok += 1;
+            latencies.push(job.arrival.elapsed());
+        } else {
+            write_failures += 1;
+        }
+    }
+    let mut stats = shared.stats.lock().expect("stats lock");
+    let s = stats.spec_mut(&key.spec);
+    s.requests += sent_ok;
+    for l in latencies {
+        s.latency.record(l);
+    }
+    s.gauges
+        .record(rows as u64, capacity as u64, reason, depth_after as u64);
+    stats.framing_errors += write_failures;
+}

@@ -17,6 +17,11 @@ use decorr::regularizer::kernel::{
     DecorrelationKernel, FftSumvecKernel, GroupedFftKernel, NaiveMatrixKernel,
 };
 use decorr::regularizer::{self, Q};
+use decorr::serve::exec::SpecExecCache;
+use decorr::serve::protocol::{
+    decode_request_body, decode_response_body, encode_request, encode_response, read_frame,
+    Request, RequestKind, RespondedBy, Response, RowScore, ServeError, MAX_FRAME, REQ_MAGIC,
+};
 use decorr::util::json;
 use decorr::util::rng::Rng;
 use decorr::util::tensor::Tensor;
@@ -688,5 +693,208 @@ fn prop_shard_rejects_corruption() {
             "corruption accepted on the pread path"
         );
         std::fs::remove_file(&path).ok();
+    });
+}
+
+// ---------------------------------------------------------- serving wire
+
+/// A random request over the wire format's full envelope: both kinds,
+/// arbitrary spec strings (the wire layer only caps length and requires
+/// utf8 — spec *grammar* is validated later, server-side), small random
+/// shapes, and payloads that occasionally contain non-finite floats.
+fn rand_wire_request(rng: &mut Rng) -> Request {
+    let rows = 1 + rng.next_bounded(6) as usize;
+    let d = 1 + rng.next_bounded(24) as usize;
+    let specs = ["bt_sum", "vic_off@t=4", "", "not a spec!", "日本語✓", "zz"];
+    let elems = rows * d;
+    let payload = |rng: &mut Rng| -> Vec<f32> {
+        (0..elems)
+            .map(|_| match rng.next_bounded(12) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                _ => rng.gaussian(),
+            })
+            .collect()
+    };
+    Request {
+        id: rng.next_u64(),
+        kind: if rng.bernoulli(0.5) {
+            RequestKind::Score
+        } else {
+            RequestKind::Diagnose
+        },
+        spec: specs[rng.next_bounded(specs.len() as u64) as usize].to_string(),
+        rows,
+        d,
+        a: payload(rng),
+        b: payload(rng),
+    }
+}
+
+/// Requests round-trip the wire bit-identically — ids, kinds, arbitrary
+/// spec strings, and every payload f32 (including NaN/Inf bit patterns).
+#[test]
+fn prop_serve_request_roundtrip() {
+    for_cases(60, |rng| {
+        let req = rand_wire_request(rng);
+        let frame = encode_request(&req);
+        assert_eq!(&frame[..4], &REQ_MAGIC);
+        let len = u32::from_le_bytes(frame[4..8].try_into().unwrap()) as usize;
+        assert_eq!(len, frame.len() - 8);
+        let back = decode_request_body(&frame[8..]).unwrap();
+        assert_eq!(back.id, req.id);
+        assert_eq!(back.kind, req.kind);
+        assert_eq!(back.spec, req.spec);
+        assert_eq!(back.rows, req.rows);
+        assert_eq!(back.d, req.d);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.a), bits(&req.a));
+        assert_eq!(bits(&back.b), bits(&req.b));
+    });
+}
+
+/// All three response variants round-trip the wire exactly.
+#[test]
+fn prop_serve_response_roundtrip() {
+    for_cases(60, |rng| {
+        let id = rng.next_u64();
+        let resp = match rng.next_bounded(3) {
+            0 => Response::Score {
+                id,
+                scores: (0..rng.next_bounded(8))
+                    .map(|_| RowScore {
+                        score: rng.gaussian() as f64,
+                        align: rng.gaussian() as f64,
+                    })
+                    .collect(),
+            },
+            1 => Response::Diagnose {
+                id,
+                backend: if rng.bernoulli(0.5) {
+                    RespondedBy::Host
+                } else {
+                    RespondedBy::Device
+                },
+                total: rng.gaussian() as f64,
+                invariance: rng.bernoulli(0.5).then(|| rng.gaussian() as f64),
+                regularizer: rng.bernoulli(0.5).then(|| rng.gaussian() as f64),
+            },
+            _ => Response::Error {
+                id,
+                code: rng.next_bounded(12) as u16,
+                message: format!("err ✓ {}", rng.next_bounded(100)),
+            },
+        };
+        let frame = encode_response(&resp);
+        let back = decode_response_body(&frame[8..]).unwrap();
+        assert_eq!(back, resp);
+    });
+}
+
+/// Any prefix truncation of a valid frame decodes to a typed framing
+/// error (`Closed` before any byte, `Truncated` after) — never a panic,
+/// never a mangled `Ok`.
+#[test]
+fn prop_serve_truncated_frames_reject() {
+    for_cases(50, |rng| {
+        let req = rand_wire_request(rng);
+        let frame = encode_request(&req);
+        let cut = rng.next_bounded(frame.len() as u64) as usize; // 0..len-1: always short
+        let mut r: &[u8] = &frame[..cut];
+        let err = read_frame(&mut r, REQ_MAGIC, MAX_FRAME)
+            .expect_err("truncated frame must not decode");
+        match (cut, &err) {
+            (0, ServeError::Closed) => {}
+            (_, ServeError::Truncated { .. }) => {}
+            other => panic!("cut={cut}: unexpected {:?}", other.1),
+        }
+        assert!(err.is_framing(), "truncation must close the connection");
+        // Body-level truncation is typed too: every short body errors.
+        if cut > 8 {
+            let err = decode_request_body(&frame[8..cut])
+                .expect_err("short body must not decode");
+            assert!(err.code() > 0);
+        }
+    });
+}
+
+/// Corrupt headers are rejected before any allocation: wrong magic →
+/// `BadMagic` echoing the bytes, oversize length prefix → `Oversize`,
+/// wrong version byte → `BadVersion`.
+#[test]
+fn prop_serve_bad_headers_reject() {
+    for_cases(50, |rng| {
+        let frame = encode_request(&rand_wire_request(rng));
+        // Flip one magic byte.
+        let mut bad = frame.clone();
+        let i = rng.next_bounded(4) as usize;
+        bad[i] ^= 1 + rng.next_bounded(255) as u8;
+        let mut r: &[u8] = &bad;
+        match read_frame(&mut r, REQ_MAGIC, MAX_FRAME) {
+            Err(ServeError::BadMagic { got }) => assert_eq!(got, bad[..4]),
+            other => panic!("bad magic accepted: {other:?}"),
+        }
+        // Oversize length prefix: rejected by header inspection alone,
+        // even though no such body exists to read.
+        let mut bad = frame.clone();
+        let lie = (MAX_FRAME as u32) + 1 + rng.next_bounded(1 << 20) as u32;
+        bad[4..8].copy_from_slice(&lie.to_le_bytes());
+        let mut r: &[u8] = &bad;
+        match read_frame(&mut r, REQ_MAGIC, MAX_FRAME) {
+            Err(ServeError::Oversize { len, max }) => {
+                assert_eq!(len, lie as usize);
+                assert_eq!(max, MAX_FRAME);
+            }
+            other => panic!("oversize accepted: {other:?}"),
+        }
+        // Unknown version byte (first body byte).
+        let mut bad = frame;
+        bad[8] = 2 + rng.next_bounded(254) as u8;
+        match decode_request_body(&bad[8..]) {
+            Err(ServeError::BadVersion(v)) => assert_eq!(v, bad[8]),
+            other => panic!("bad version accepted: {other:?}"),
+        }
+    });
+}
+
+/// Arbitrary byte soup never panics either decoder — it decodes or it
+/// returns a typed error (the `for_cases` harness converts any panic
+/// into a failure with the reproducing seed).
+#[test]
+fn prop_serve_garbage_bodies_never_panic() {
+    for_cases(80, |rng| {
+        let len = rng.next_bounded(200) as usize;
+        let body: Vec<u8> = (0..len).map(|_| rng.next_bounded(256) as u8).collect();
+        let _ = decode_request_body(&body);
+        let _ = decode_response_body(&body);
+    });
+}
+
+/// Spec-grammar validation (the server-side layer above the wire) is
+/// typed: garbage specs are `BadSpec` request errors the connection
+/// survives, out-of-range rows are `RowsOutOfRange`, and well-formed
+/// requests produce the queue key they route on.
+#[test]
+fn prop_serve_unknown_specs_typed_rejection() {
+    for_cases(40, |rng| {
+        let d = 2 + rng.next_bounded(30) as usize;
+        let garbage = format!("zz{}!{}", rng.next_bounded(100), rng.next_bounded(100));
+        match SpecExecCache::validate(RequestKind::Score, &garbage, 1, d, 64) {
+            Err(e @ ServeError::BadSpec { .. }) => {
+                assert!(!e.is_framing(), "spec errors must not close the connection")
+            }
+            other => panic!("garbage spec '{garbage}' accepted: {other:?}"),
+        }
+        let max = 1 + rng.next_bounded(64) as usize;
+        let too_many = max + 1 + rng.next_bounded(64) as usize;
+        match SpecExecCache::validate(RequestKind::Score, "bt_sum", too_many, d, max) {
+            Err(ServeError::RowsOutOfRange { rows, max: m }) => {
+                assert_eq!(rows, too_many);
+                assert_eq!(m, max);
+            }
+            other => panic!("rows {too_many} > {max} accepted: {other:?}"),
+        }
+        let key = SpecExecCache::validate(RequestKind::Diagnose, "bt_sum", 1, d, 64).unwrap();
+        assert_eq!(key.d, d);
     });
 }

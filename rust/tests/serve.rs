@@ -1,0 +1,247 @@
+//! Integration tests for the serving subsystem: a real server on a real
+//! socket, driven by real protocol clients.
+//!
+//! The two load-bearing properties, both pinned bit-exactly:
+//!
+//! * micro-batched responses equal single-request host-executor results
+//!   (`to_bits` equality, not a tolerance), and
+//! * graceful drain returns every in-flight response before `join`.
+
+use decorr::api::{LossExecutor, LossSpec};
+use decorr::serve::exec::RowScorer;
+use decorr::serve::{
+    serve, ExecMode, Request, RequestKind, Response, ServeAddr, ServeClient, ServeConfig,
+    ServerHandle,
+};
+use decorr::util::rng::Rng;
+use decorr::util::tensor::Tensor;
+use std::time::Duration;
+
+/// Per-test unix-socket address (pid + tag keeps parallel runs apart).
+fn unix_addr(tag: &str) -> ServeAddr {
+    ServeAddr::Unix(
+        std::env::temp_dir().join(format!("decorr-serve-test-{}-{tag}.sock", std::process::id())),
+    )
+}
+
+fn host_server(addr: ServeAddr, batch_rows: usize, deadline: Duration) -> ServerHandle {
+    serve(ServeConfig {
+        addr,
+        workers: 2,
+        batch_rows,
+        deadline,
+        mode: ExecMode::Host,
+        ..ServeConfig::default()
+    })
+    .expect("server binds")
+}
+
+fn score_request(id: u64, spec: &str, rows: usize, d: usize, rng: &mut Rng) -> Request {
+    Request {
+        id,
+        kind: RequestKind::Score,
+        spec: spec.to_string(),
+        rows,
+        d,
+        a: (0..rows * d).map(|_| rng.gaussian()).collect(),
+        b: (0..rows * d).map(|_| rng.gaussian()).collect(),
+    }
+}
+
+/// Concurrent clients force real coalescing (batch of 8 rows, 3-row
+/// requests), and every response must still be bit-identical to scoring
+/// that request alone — the padding/scatter path cannot perturb results.
+#[test]
+fn microbatched_scores_bit_identical_to_single_request() {
+    let handle = host_server(unix_addr("batch"), 8, Duration::from_millis(1));
+    let addr = handle.local_addr().clone();
+    let (rows, d) = (3usize, 16usize);
+    let spec = LossSpec::parse("bt_sum").unwrap();
+    let threads: Vec<_> = (0..4u64)
+        .map(|t| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut client = ServeClient::connect(&addr).expect("connect");
+                let mut rng = Rng::new(0xBA7C4 + t);
+                let mut oracle = RowScorer::new(d, spec.q());
+                for i in 0..6u64 {
+                    let req = score_request(t * 100 + i, "bt_sum", rows, d, &mut rng);
+                    let resp = client.call(&req).expect("call");
+                    let Response::Score { id, scores } = resp else {
+                        panic!("expected Score, got {resp:?}");
+                    };
+                    assert_eq!(id, req.id);
+                    assert_eq!(scores.len(), rows);
+                    let want = oracle.score_rows(rows, &req.a, &req.b);
+                    for (r, (got, want)) in scores.iter().zip(&want).enumerate() {
+                        assert_eq!(got.score.to_bits(), want.score.to_bits(), "row {r}");
+                        assert_eq!(got.align.to_bits(), want.align.to_bits(), "row {r}");
+                    }
+                }
+                client.finish_sending().ok();
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("client thread");
+    }
+    let report = handle.join().expect("join");
+    assert_eq!(report.stats.total_requests(), 24);
+    assert_eq!(report.stats.total_errors(), 0);
+    assert_eq!(report.stats.connections, 4);
+}
+
+/// A diagnose response equals evaluating the same matrices through the
+/// spec's `HostExecutor` directly, bit for bit.
+#[test]
+fn diagnose_bit_identical_to_host_executor() {
+    let handle = host_server(unix_addr("diag"), 32, Duration::from_millis(1));
+    let mut client = ServeClient::connect(handle.local_addr()).expect("connect");
+    let (rows, d) = (8usize, 12usize);
+    let mut rng = Rng::new(0xD1A6);
+    for spec_str in ["bt_sum", "vic_sum"] {
+        let mut req = score_request(7, spec_str, rows, d, &mut rng);
+        req.kind = RequestKind::Diagnose;
+        let resp = client.call(&req).expect("call");
+        let Response::Diagnose {
+            id,
+            total,
+            invariance,
+            regularizer,
+            ..
+        } = resp
+        else {
+            panic!("expected Diagnose, got {resp:?}");
+        };
+        assert_eq!(id, 7);
+        let spec = LossSpec::parse(spec_str).unwrap();
+        let mut direct = spec.host_executor(d).unwrap();
+        let want = direct
+            .evaluate(
+                &Tensor::from_vec(&[rows, d], req.a.clone()),
+                &Tensor::from_vec(&[rows, d], req.b.clone()),
+            )
+            .unwrap();
+        assert_eq!(total.to_bits(), want.total.to_bits(), "{spec_str}");
+        assert_eq!(
+            invariance.map(f64::to_bits),
+            want.invariance.map(f64::to_bits),
+            "{spec_str}"
+        );
+        assert_eq!(
+            regularizer.map(f64::to_bits),
+            want.regularizer.map(f64::to_bits),
+            "{spec_str}"
+        );
+    }
+    client.finish_sending().ok();
+    drop(client);
+    handle.join().expect("join");
+}
+
+/// Requests parked behind a far-off deadline are flushed by the drain:
+/// every in-flight response arrives before `join` returns.
+#[test]
+fn graceful_drain_returns_every_inflight_response() {
+    // 64-row batch + 10 s deadline: five 2-row requests can only be
+    // answered by the drain flush, never by fill or deadline.
+    let handle = host_server(unix_addr("drain"), 64, Duration::from_secs(10));
+    let mut client = ServeClient::connect(handle.local_addr()).expect("connect");
+    let (rows, d) = (2usize, 8usize);
+    let mut rng = Rng::new(0xD3A1);
+    let reqs: Vec<Request> = (1..=5u64)
+        .map(|id| score_request(id, "bt_sum", rows, d, &mut rng))
+        .collect();
+    for req in &reqs {
+        client.send(req).expect("send");
+    }
+    client.finish_sending().expect("finish");
+    handle.shutdown();
+    let mut seen: Vec<u64> = Vec::new();
+    for _ in 0..reqs.len() {
+        let resp = client.recv().expect("drained response");
+        match resp {
+            Response::Score { id, scores } => {
+                assert_eq!(scores.len(), rows);
+                seen.push(id);
+            }
+            other => panic!("expected Score, got {other:?}"),
+        }
+    }
+    seen.sort_unstable();
+    assert_eq!(seen, vec![1, 2, 3, 4, 5]);
+    let report = handle.join().expect("join");
+    assert_eq!(report.stats.total_requests(), 5);
+    // The flush that answered them was the drain, and the tables carry
+    // the serving columns the bench-diff gate classifies.
+    let batches = report.stats.batch_table().render();
+    assert!(batches.contains("drain_flushes"), "{batches}");
+    let latency = report.stats.latency_table().render();
+    for col in ["p50_latency_ms", "p95_latency_ms", "p99_latency_ms"] {
+        assert!(latency.contains(col), "{latency}");
+    }
+}
+
+/// Request-scoped failures answer with a typed error and the connection
+/// survives; a framing failure answers id 0 and closes it.
+#[test]
+fn unknown_spec_errors_then_connection_survives() {
+    let handle = host_server(unix_addr("err"), 8, Duration::from_millis(1));
+    let mut client = ServeClient::connect(handle.local_addr()).expect("connect");
+    let mut rng = Rng::new(0xE44);
+
+    // Unknown spec: typed error echoing the id, connection stays up.
+    let bad = score_request(11, "definitely_not_a_spec", 2, 8, &mut rng);
+    match client.call(&bad).expect("error response") {
+        Response::Error { id, code, message } => {
+            assert_eq!(id, 11);
+            assert!(code > 0);
+            assert!(message.contains("definitely_not_a_spec"), "{message}");
+        }
+        other => panic!("expected Error, got {other:?}"),
+    }
+
+    // Same connection immediately serves a valid request.
+    let good = score_request(12, "bt_sum", 2, 8, &mut rng);
+    match client.call(&good).expect("valid response") {
+        Response::Score { id, scores } => {
+            assert_eq!(id, 12);
+            assert_eq!(scores.len(), 2);
+        }
+        other => panic!("expected Score, got {other:?}"),
+    }
+
+    // A corrupt magic is a framing error: the server answers id 0 and
+    // hangs up on this connection.
+    client.send_raw(b"XXXX\x04\x00\x00\x00abcd").expect("raw");
+    match client.recv().expect("framing error response") {
+        Response::Error { id, .. } => assert_eq!(id, 0),
+        other => panic!("expected Error, got {other:?}"),
+    }
+    drop(client);
+
+    let report = handle.join().expect("join");
+    assert_eq!(report.stats.framing_errors, 1);
+    assert_eq!(report.stats.total_errors(), 1);
+    assert_eq!(report.stats.total_requests(), 1);
+}
+
+/// The TCP path works end to end on an ephemeral loopback port (the unix
+/// path is exercised by every other test here).
+#[test]
+fn tcp_ephemeral_port_serves() {
+    let handle = host_server(ServeAddr::parse("127.0.0.1:0"), 8, Duration::from_millis(1));
+    let mut client = ServeClient::connect(handle.local_addr()).expect("connect");
+    let mut rng = Rng::new(0x7C9);
+    let req = score_request(1, "vic_off", 4, 8, &mut rng);
+    match client.call(&req).expect("call") {
+        Response::Score { id, scores } => {
+            assert_eq!(id, 1);
+            assert_eq!(scores.len(), 4);
+        }
+        other => panic!("expected Score, got {other:?}"),
+    }
+    client.finish_sending().ok();
+    drop(client);
+    handle.join().expect("join");
+}
