@@ -59,6 +59,7 @@ use crate::bench_harness::table::Table;
 use crate::config::TrainConfig;
 use crate::runtime::{Session, SessionStats, SharedSession};
 use crate::util::rng::Rng;
+use crate::util::sync as usync;
 use crate::util::tensor::Tensor;
 
 use super::super::executor::LossExecutor;
@@ -368,12 +369,9 @@ fn run_train(
                 let mut arm = match shared.session() {
                     Ok(s) => Some(s),
                     Err(e) => {
-                        setup_errors
-                            .lock()
-                            .unwrap_or_else(|p| p.into_inner())
-                            .push(e.context(format!(
-                                "creating the session arm for sweep worker {w}"
-                            )));
+                        usync::lock(setup_errors).push(e.context(format!(
+                            "creating the session arm for sweep worker {w}"
+                        )));
                         return;
                     }
                 };
@@ -390,9 +388,7 @@ fn run_train(
         }
     });
     let stats = shared.stats().delta(&before);
-    let errors = setup_errors
-        .into_inner()
-        .unwrap_or_else(|p| p.into_inner());
+    let errors = usync::into_inner(setup_errors);
     Ok((collect_slots(jobs, slots, errors)?, stats))
 }
 

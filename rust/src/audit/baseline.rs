@@ -1,0 +1,174 @@
+//! The ratchet baseline (`rust/audit.toml`).
+//!
+//! Rules that cannot yet be driven to zero (today: `unwrap`) are gated by
+//! a committed per-rule count. An audit run fails if a rule's live count
+//! *exceeds* its baseline; when the count drops below, the run prints a
+//! notice asking for the baseline to be ratcheted down (via
+//! `decorr audit --write-baseline`). Counts only ever go down — the file
+//! is the debt ledger, reviewed like any other source change.
+//!
+//! Format (parsed with the in-repo TOML subset, [`crate::config::toml`]):
+//!
+//! ```toml
+//! [ratchet]
+//! unwrap = 42
+//! ```
+//!
+//! Rules absent from `[ratchet]` default to a baseline of zero, so new
+//! rules are born strict.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::rules::Rule;
+use crate::config::toml::{parse_toml, TomlValue};
+
+/// Per-rule allowed violation counts.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Baseline {
+    counts: BTreeMap<String, usize>,
+}
+
+impl Baseline {
+    /// The allowed count for a rule (zero when unlisted).
+    pub fn allowed(&self, rule: Rule) -> usize {
+        self.counts.get(rule.key()).copied().unwrap_or(0)
+    }
+
+    /// Record a rule's count (used by `--write-baseline`). Zero counts
+    /// are dropped so the file only lists live debt.
+    pub fn set(&mut self, rule: Rule, count: usize) {
+        if count == 0 {
+            self.counts.remove(rule.key());
+        } else {
+            self.counts.insert(rule.key().to_string(), count);
+        }
+    }
+
+    /// Parse `audit.toml` text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = parse_toml(text).context("parsing audit baseline")?;
+        let mut counts = BTreeMap::new();
+        let valid: Vec<&str> = Rule::all().iter().map(|r| r.key()).collect();
+        for (key, value) in doc.section("ratchet") {
+            if !valid.contains(&key) {
+                bail!("audit baseline lists unknown rule '{key}' (valid: {valid:?})");
+            }
+            let TomlValue::Int(n) = value else {
+                bail!("audit baseline entry '{key}' must be an integer count");
+            };
+            if *n < 0 {
+                bail!("audit baseline entry '{key}' must be non-negative");
+            }
+            counts.insert(key.to_string(), *n as usize);
+        }
+        Ok(Self { counts })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading audit baseline {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Serialize back to `audit.toml` text.
+    pub fn to_toml(&self) -> String {
+        let mut out = String::from(
+            "# Audit ratchet baseline — per-rule allowed violation counts.\n\
+             # Counts only go down: `decorr audit` fails when a rule's live count\n\
+             # exceeds its entry here, and asks for a ratchet when it drops below.\n\
+             # Regenerate with `decorr audit --write-baseline` after paying down debt.\n\
+             \n[ratchet]\n",
+        );
+        for (key, count) in &self.counts {
+            // audit.toml keys are rule keys — plain identifiers, no quoting needed.
+            let _ = writeln!(out, "{key} = {count}");
+        }
+        out
+    }
+}
+
+/// Outcome of comparing live per-rule counts against the baseline.
+#[derive(Clone, Debug, Default)]
+pub struct RatchetReport {
+    /// Rules whose live count exceeds the baseline: `(rule, live, allowed)`.
+    pub regressions: Vec<(Rule, usize, usize)>,
+    /// Rules whose live count dropped below a non-zero baseline:
+    /// `(rule, live, allowed)` — ratchet the file down.
+    pub improvements: Vec<(Rule, usize, usize)>,
+}
+
+impl RatchetReport {
+    /// Did any rule regress past its baseline?
+    pub fn failed(&self) -> bool {
+        !self.regressions.is_empty()
+    }
+}
+
+/// Compare live counts to the baseline.
+pub fn compare(live: &BTreeMap<Rule, usize>, baseline: &Baseline) -> RatchetReport {
+    let mut report = RatchetReport::default();
+    for rule in Rule::all() {
+        let count = live.get(&rule).copied().unwrap_or(0);
+        let allowed = baseline.allowed(rule);
+        if count > allowed {
+            report.regressions.push((rule, count, allowed));
+        } else if count < allowed {
+            report.improvements.push((rule, count, allowed));
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_through_to_toml() {
+        let b = Baseline::parse("[ratchet]\nunwrap = 7\n").unwrap();
+        assert_eq!(b.allowed(Rule::Unwrap), 7);
+        assert_eq!(b.allowed(Rule::Lock), 0);
+        let again = Baseline::parse(&b.to_toml()).unwrap();
+        assert_eq!(b, again);
+    }
+
+    #[test]
+    fn unknown_rule_and_bad_types_rejected() {
+        assert!(Baseline::parse("[ratchet]\nbogus = 1\n").is_err());
+        assert!(Baseline::parse("[ratchet]\nunwrap = \"many\"\n").is_err());
+        assert!(Baseline::parse("[ratchet]\nunwrap = -3\n").is_err());
+    }
+
+    #[test]
+    fn compare_flags_regressions_and_improvements() {
+        let baseline = Baseline::parse("[ratchet]\nunwrap = 5\n").unwrap();
+        let mut live = BTreeMap::new();
+        live.insert(Rule::Unwrap, 6);
+        let r = compare(&live, &baseline);
+        assert!(r.failed());
+        assert_eq!(r.regressions, vec![(Rule::Unwrap, 6, 5)]);
+
+        live.insert(Rule::Unwrap, 3);
+        let r = compare(&live, &baseline);
+        assert!(!r.failed());
+        assert_eq!(r.improvements, vec![(Rule::Unwrap, 3, 5)]);
+
+        // A rule with no baseline entry fails on its first violation.
+        live.insert(Rule::Lock, 1);
+        assert!(compare(&live, &baseline).failed());
+    }
+
+    #[test]
+    fn set_drops_zero_counts() {
+        let mut b = Baseline::default();
+        b.set(Rule::Unwrap, 4);
+        assert!(b.to_toml().contains("unwrap = 4"));
+        b.set(Rule::Unwrap, 0);
+        assert!(!b.to_toml().contains("unwrap"));
+    }
+}

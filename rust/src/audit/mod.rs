@@ -1,0 +1,273 @@
+//! In-repo static-analysis lint pass (`decorr audit`).
+//!
+//! A lightweight, dependency-free scanner over `rust/src` that enforces
+//! the repo's hardening invariants. It is *not* a Rust parser — it is a
+//! line/token scanner with a comment/string-aware lexer
+//! ([`scanner`]), which is exactly enough for the rules below and cheap
+//! enough to run on every CI push.
+//!
+//! # Rule catalog
+//!
+//! | key | rule |
+//! |-----|------|
+//! | `unsafe` | every `unsafe` block/fn/impl carries a `// SAFETY:` comment (same line or the contiguous comment block above) documenting the invariant |
+//! | `unwrap` | no `.unwrap()` / `.expect(` in non-test library code; escape with `// audit: allow(unwrap, <reason>)`; gated by the ratchet baseline |
+//! | `lock` | no bare `Mutex::lock().unwrap()` / `.expect(..)` — route through the poison-recovering [`crate::util::sync::lock`] |
+//! | `nondet` | no `Instant::now` / `SystemTime` / `env::var` inside `fft/` and `regularizer/` — the bit-identity contract forbids time/env dependence in those kernels |
+//! | `thread` | `thread::spawn` / `thread::scope` only in the approved concurrency modules ([`rules::APPROVED_THREAD_MODULES`]) |
+//! | `bench_drift` | every `BENCH_*.json` a bench writes is registered in the bench-diff default set ([`crate::bench_harness::diff::default_bench_files`]) and the CI upload list |
+//!
+//! Escapes: `// audit: allow(<rule>, <reason>)` on the offending line or
+//! immediately above it. The reason is mandatory — it is the review
+//! trail. `#[cfg(test)]` / `#[test]` regions are exempt from every rule.
+//!
+//! # Ratchet
+//!
+//! `rust/audit.toml` ([`baseline`]) holds per-rule allowed counts for
+//! debt that predates a rule (today only `unwrap`). The audit fails when
+//! a live count exceeds its baseline and prints a ratchet notice when it
+//! drops below; `decorr audit --write-baseline` rewrites the file after
+//! debt is paid down. Counts only go down.
+
+pub mod baseline;
+pub mod rules;
+pub mod scanner;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::cli::Args;
+use baseline::{Baseline, RatchetReport};
+use rules::{Rule, Violation};
+use scanner::{scan_source, ScannedFile};
+
+/// What to audit. `root` is the crate directory (contains `src/`,
+/// `benches/`, `audit.toml`).
+#[derive(Clone, Debug)]
+pub struct AuditConfig {
+    /// Crate root.
+    pub root: PathBuf,
+    /// Ratchet baseline to compare against.
+    pub baseline: Baseline,
+    /// CI workflow file for the bench-drift upload check; `None` skips
+    /// that half of the rule (fixtures, repos without CI).
+    pub workflow: Option<PathBuf>,
+}
+
+/// Result of a full audit run.
+#[derive(Clone, Debug, Default)]
+pub struct AuditOutcome {
+    /// Every violation found, in (file, line) order.
+    pub violations: Vec<Violation>,
+    /// Live per-rule counts.
+    pub counts: BTreeMap<Rule, usize>,
+    /// Comparison against the ratchet baseline.
+    pub ratchet: RatchetReport,
+}
+
+impl AuditOutcome {
+    /// Did the audit fail (any rule past its baseline)?
+    pub fn failed(&self) -> bool {
+        self.ratchet.failed()
+    }
+}
+
+/// Run the full audit over a crate tree.
+pub fn run_audit(config: &AuditConfig) -> Result<AuditOutcome> {
+    let src = config.root.join("src");
+    if !src.is_dir() {
+        bail!("audit root {} has no src/ directory", config.root.display());
+    }
+    let mut violations = Vec::new();
+
+    // Library sources: R1–R4 and the thread half of R5.
+    for path in rust_files(&src)? {
+        let rel = rel_path(&src, &path);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let file = scan_source(&rel, &text);
+        rules::check_unsafe(&file, &mut violations);
+        rules::check_unwrap(&file, &mut violations);
+        rules::check_lock(&file, &mut violations);
+        rules::check_nondet(&file, &mut violations);
+        rules::check_thread(&file, &mut violations);
+    }
+
+    // Benches: the drift half of R5 — every BENCH_*.json written must be
+    // registered for diffing and CI upload.
+    let benches_dir = config.root.join("benches");
+    let mut benches: Vec<ScannedFile> = Vec::new();
+    if benches_dir.is_dir() {
+        for path in rust_files(&benches_dir)? {
+            let rel = format!("benches/{}", rel_path(&benches_dir, &path));
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            benches.push(scan_source(&rel, &text));
+        }
+    }
+    let registry_path = src.join("bench_harness").join("diff.rs");
+    let registry = std::fs::read_to_string(registry_path).ok();
+    let workflow = match &config.workflow {
+        Some(p) => Some(
+            std::fs::read_to_string(p)
+                .with_context(|| format!("reading CI workflow {}", p.display()))?,
+        ),
+        None => None,
+    };
+    rules::check_bench_drift(
+        &benches,
+        registry.as_deref(),
+        workflow.as_deref(),
+        &mut violations,
+    );
+
+    violations.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    let mut counts = BTreeMap::new();
+    for v in &violations {
+        *counts.entry(v.rule).or_insert(0) += 1;
+    }
+    let ratchet = baseline::compare(&counts, &config.baseline);
+    Ok(AuditOutcome {
+        violations,
+        counts,
+        ratchet,
+    })
+}
+
+/// All `.rs` files under `dir`, recursively, sorted for deterministic
+/// output.
+fn rust_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let entries = std::fs::read_dir(&d)
+            .with_context(|| format!("listing {}", d.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Forward-slash path of `path` relative to `base`.
+fn rel_path(base: &Path, path: &Path) -> String {
+    path.strip_prefix(base)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Find the crate root from the current directory: `.` when it holds
+/// `src/`, `rust/` when run from the repo root.
+fn default_root() -> PathBuf {
+    if Path::new("src").is_dir() {
+        PathBuf::from(".")
+    } else {
+        PathBuf::from("rust")
+    }
+}
+
+/// `decorr audit` — run the lint pass; exit non-zero on regression.
+pub fn cmd_audit(args: &mut Args) -> Result<()> {
+    let root = PathBuf::from(args.str_or("root", &default_root().to_string_lossy()));
+    let baseline_path = match args.flag("baseline") {
+        Some(p) => PathBuf::from(p),
+        None => root.join("audit.toml"),
+    };
+    let write = args.switch("write-baseline");
+    let list_all = args.switch("list");
+    let workflow = match args.flag("workflow") {
+        Some(p) if p == "none" => None,
+        Some(p) => Some(PathBuf::from(p)),
+        None => {
+            let default = root.join("..").join(".github/workflows/ci.yml");
+            default.is_file().then_some(default)
+        }
+    };
+    args.finish()?;
+
+    let baseline = if baseline_path.is_file() {
+        Baseline::load(&baseline_path)?
+    } else if write {
+        Baseline::default()
+    } else {
+        bail!(
+            "no audit baseline at {} (run `decorr audit --write-baseline` to create one)",
+            baseline_path.display()
+        );
+    };
+
+    let config = AuditConfig {
+        root,
+        baseline,
+        workflow,
+    };
+    let outcome = run_audit(&config)?;
+
+    if write {
+        let mut new_baseline = Baseline::default();
+        for rule in Rule::all() {
+            new_baseline.set(rule, outcome.counts.get(&rule).copied().unwrap_or(0));
+        }
+        std::fs::write(&baseline_path, new_baseline.to_toml())
+            .with_context(|| format!("writing {}", baseline_path.display()))?;
+        println!("audit: wrote baseline {}", baseline_path.display());
+        for rule in Rule::all() {
+            let n = outcome.counts.get(&rule).copied().unwrap_or(0);
+            if n > 0 {
+                println!("audit:   {rule} = {n}");
+            }
+        }
+        return Ok(());
+    }
+
+    // Violations for regressed rules are the actionable output; debt
+    // within the baseline is summarized unless --list asks for it all.
+    let regressed: Vec<Rule> = outcome.ratchet.regressions.iter().map(|r| r.0).collect();
+    for v in &outcome.violations {
+        if list_all || regressed.contains(&v.rule) {
+            println!("{v}");
+        }
+    }
+    for rule in Rule::all() {
+        let n = outcome.counts.get(&rule).copied().unwrap_or(0);
+        let allowed = config.baseline.allowed(rule);
+        if n > 0 || allowed > 0 {
+            println!("audit: {rule}: {n} (baseline {allowed})");
+        }
+    }
+    for (rule, live, allowed) in &outcome.ratchet.improvements {
+        println!(
+            "audit: notice: {rule} dropped to {live} (baseline {allowed}) — ratchet down \
+             with `decorr audit --write-baseline`"
+        );
+    }
+    if outcome.failed() {
+        for (rule, live, allowed) in &outcome.ratchet.regressions {
+            eprintln!("audit: FAIL: {rule}: {live} violations (baseline allows {allowed})");
+        }
+        bail!("audit failed: {} rule(s) regressed", outcome.ratchet.regressions.len());
+    }
+    println!("audit: clean ({} files checked)", count_checked(&config)?);
+    Ok(())
+}
+
+/// How many source files the audit covered (for the summary line).
+fn count_checked(config: &AuditConfig) -> Result<usize> {
+    let mut n = rust_files(&config.root.join("src"))?.len();
+    let benches = config.root.join("benches");
+    if benches.is_dir() {
+        n += rust_files(&benches)?.len();
+    }
+    Ok(n)
+}

@@ -1,0 +1,552 @@
+//! The audit rules (R1–R5) over scanned sources.
+//!
+//! Each rule walks the [`ScannedFile`] line channels produced by
+//! [`super::scanner`] and emits [`Violation`]s. Rules only look at
+//! non-test code; every rule except `unsafe` honors the inline escape
+//! comment
+//!
+//! ```text
+//! // audit: allow(<rule>, <reason>)
+//! ```
+//!
+//! on the offending line or in the contiguous comment block immediately
+//! above it (the `unsafe` rule's escape *is* its `// SAFETY:` comment).
+//! An escape without a reason is not honored — the reason is the review
+//! trail.
+
+use std::fmt;
+
+use super::scanner::ScannedFile;
+
+/// The audit rules. See [`super`] for the full catalog.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// R1: every `unsafe` site carries a `// SAFETY:` comment.
+    Unsafe,
+    /// R2: no `.unwrap()` / `.expect(` in non-test library code.
+    Unwrap,
+    /// R3: no bare `Mutex::lock().unwrap()` — use `util::sync::lock`.
+    Lock,
+    /// R4: no wall-clock / env reads in `fft/` and `regularizer/`.
+    Nondet,
+    /// R5a: `thread::spawn` / `thread::scope` only in approved modules.
+    Thread,
+    /// R5b: every bench-written `BENCH_*.json` is registered for diffing
+    /// and CI upload.
+    BenchDrift,
+}
+
+impl Rule {
+    /// Stable key used in `audit.toml` and the escape syntax.
+    pub fn key(self) -> &'static str {
+        match self {
+            Rule::Unsafe => "unsafe",
+            Rule::Unwrap => "unwrap",
+            Rule::Lock => "lock",
+            Rule::Nondet => "nondet",
+            Rule::Thread => "thread",
+            Rule::BenchDrift => "bench_drift",
+        }
+    }
+
+    /// All rules, in catalog order.
+    pub fn all() -> [Rule; 6] {
+        [
+            Rule::Unsafe,
+            Rule::Unwrap,
+            Rule::Lock,
+            Rule::Nondet,
+            Rule::Thread,
+            Rule::BenchDrift,
+        ]
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+/// One rule violation at a source location.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Which rule fired.
+    pub rule: Rule,
+    /// Path relative to the scan root.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    /// What was found / what to do instead.
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Modules allowed to spawn threads. Everything else must route its
+/// parallelism through these (scoped kernels, the sweep scheduler, the
+/// loader pipeline, the serve topology, session warmup) so the
+/// bit-identity tests keep a closed list of concurrency surfaces to pin.
+pub const APPROVED_THREAD_MODULES: &[&str] = &[
+    "api/train/scheduler.rs",
+    "data/loader.rs",
+    "regularizer/kernel.rs",
+    "runtime/session.rs",
+    "serve/client.rs",
+    "serve/server.rs",
+];
+
+/// Tokens forbidden in the deterministic hot-path modules (R4): the FFT
+/// plans and regularizer kernels back the bit-identity contract, so
+/// wall-clock and environment reads cannot influence them.
+const NONDET_TOKENS: &[&str] = &["Instant::now", "SystemTime", "env::var", "env::var_os"];
+
+/// Path prefixes R4 governs.
+pub const DETERMINISTIC_PREFIXES: &[&str] = &["fft/", "regularizer/"];
+
+/// Does `code` contain `needle` as a whole token (no identifier chars
+/// hugging either end)?
+fn has_token(code: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(needle) {
+        let start = from + pos;
+        let end = start + needle.len();
+        let before_ok = start == 0
+            || !code[..start]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let after_ok = !code[end..]
+            .chars()
+            .next()
+            .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Is line `i` escaped for `rule`? Checks the line's own comment, then
+/// the contiguous comment/attribute block immediately above.
+fn escaped(file: &ScannedFile, i: usize, rule: Rule) -> bool {
+    if comment_allows(&file.lines[i].comment, rule) {
+        return true;
+    }
+    preceding_comment(file, i, |c| comment_allows(c, rule))
+}
+
+/// Does any comment line in the contiguous block above line `i` satisfy
+/// `pred`? Attribute-only lines are skipped; any other code stops the
+/// walk.
+fn preceding_comment(file: &ScannedFile, i: usize, pred: impl Fn(&str) -> bool) -> bool {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let line = &file.lines[j];
+        let code = line.code.trim();
+        if code.is_empty() {
+            if line.comment.is_empty() {
+                // Blank line ends the contiguous block.
+                return false;
+            }
+            if pred(&line.comment) {
+                return true;
+            }
+        } else if code.starts_with("#[") || code.starts_with("#![") {
+            // Attributes may sit between the comment and the item.
+            if pred(&line.comment) {
+                return true;
+            }
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+/// Does a comment carry `audit: allow(<rule>, <reason>)` with a
+/// non-empty reason?
+fn comment_allows(comment: &str, rule: Rule) -> bool {
+    let mut rest = comment;
+    while let Some(pos) = rest.find("audit: allow(") {
+        let args = &rest[pos + "audit: allow(".len()..];
+        if let Some(close) = args.find(')') {
+            let inner = &args[..close];
+            if let Some((name, reason)) = inner.split_once(',') {
+                if name.trim() == rule.key() && !reason.trim().is_empty() {
+                    return true;
+                }
+            }
+        }
+        rest = &rest[pos + "audit: allow(".len()..];
+    }
+    false
+}
+
+/// R1: every non-test `unsafe` token carries a `// SAFETY:` comment on
+/// the same line or in the contiguous comment block above.
+pub fn check_unsafe(file: &ScannedFile, out: &mut Vec<Violation>) {
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test || !has_token(&line.code, "unsafe") {
+            continue;
+        }
+        let documented = line.comment.contains("SAFETY:")
+            || preceding_comment(file, i, |c| c.contains("SAFETY:"));
+        if !documented {
+            out.push(Violation {
+                rule: Rule::Unsafe,
+                file: file.rel.clone(),
+                line: line.number,
+                message: "`unsafe` without a `// SAFETY:` comment documenting the invariant"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// R2: `.unwrap()` / `.expect(` in non-test code, unless escaped with
+/// `// audit: allow(unwrap, <reason>)`. Gated by the ratchet baseline.
+pub fn check_unwrap(file: &ScannedFile, out: &mut Vec<Violation>) {
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        // Count every occurrence — the ratchet baseline is a count, so
+        // two unwraps on one line are two units of debt.
+        for (needle, what) in [(".unwrap()", ".unwrap()"), (".expect(", ".expect(..)")] {
+            for _ in 0..line.code.matches(needle).count() {
+                if !escaped(file, i, Rule::Unwrap) {
+                    out.push(Violation {
+                        rule: Rule::Unwrap,
+                        file: file.rel.clone(),
+                        line: line.number,
+                        message: format!(
+                            "{what} in library code — return a typed error, or escape with \
+                             `// audit: allow(unwrap, <reason>)`"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// R3: `.lock()` immediately followed by `.unwrap` / `.expect`
+/// (including across line breaks) — bare poison panics cascade through
+/// drain/shutdown paths; route through `util::sync::lock`.
+pub fn check_lock(file: &ScannedFile, out: &mut Vec<Violation>) {
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let mut from = 0usize;
+        while let Some(pos) = line.code[from..].find(".lock()") {
+            let after = from + pos + ".lock()".len();
+            if follows_with(file, i, after, &[".unwrap", ".expect"])
+                && !escaped(file, i, Rule::Lock)
+            {
+                out.push(Violation {
+                    rule: Rule::Lock,
+                    file: file.rel.clone(),
+                    line: line.number,
+                    message: "bare `Mutex::lock().unwrap()`/`.expect(..)` — use the \
+                              poison-recovering `util::sync::lock` helper"
+                        .into(),
+                });
+            }
+            from = after;
+        }
+    }
+}
+
+/// Does the token stream starting at `(line i, column at)` continue,
+/// after whitespace/newlines, with one of `nexts`?
+fn follows_with(file: &ScannedFile, i: usize, at: usize, nexts: &[&str]) -> bool {
+    let mut line_idx = i;
+    let mut col = at;
+    loop {
+        let code = &file.lines[line_idx].code;
+        let rest = code[col.min(code.len())..].trim_start();
+        if !rest.is_empty() {
+            return nexts.iter().any(|n| rest.starts_with(n));
+        }
+        line_idx += 1;
+        col = 0;
+        if line_idx >= file.lines.len() {
+            return false;
+        }
+    }
+}
+
+/// R4: wall-clock / env reads inside the deterministic hot-path modules.
+pub fn check_nondet(file: &ScannedFile, out: &mut Vec<Violation>) {
+    if !DETERMINISTIC_PREFIXES.iter().any(|p| file.rel.starts_with(p)) {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for tok in NONDET_TOKENS {
+            if has_token(&line.code, tok) && !escaped(file, i, Rule::Nondet) {
+                out.push(Violation {
+                    rule: Rule::Nondet,
+                    file: file.rel.clone(),
+                    line: line.number,
+                    message: format!(
+                        "`{tok}` in a deterministic hot-path module — the FFT/regularizer \
+                         bit-identity contract forbids time/env dependence"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// R5a: thread spawns outside the approved concurrency modules.
+pub fn check_thread(file: &ScannedFile, out: &mut Vec<Violation>) {
+    if APPROVED_THREAD_MODULES.contains(&file.rel.as_str()) {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for tok in ["thread::spawn", "thread::scope"] {
+            if has_token(&line.code, tok) && !escaped(file, i, Rule::Thread) {
+                out.push(Violation {
+                    rule: Rule::Thread,
+                    file: file.rel.clone(),
+                    line: line.number,
+                    message: format!(
+                        "`{tok}` outside the approved concurrency modules \
+                         ({APPROVED_THREAD_MODULES:?})"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// R5b: every `BENCH_*.json` literal a bench writes must appear in the
+/// bench-diff default registry and in the CI upload list, so recorded
+/// trajectories cannot silently fall out of the regression gate.
+pub fn check_bench_drift(
+    bench_files: &[ScannedFile],
+    diff_registry: Option<&str>,
+    workflow: Option<&str>,
+    out: &mut Vec<Violation>,
+) {
+    for file in bench_files {
+        for line in &file.lines {
+            if line.in_test {
+                continue;
+            }
+            for s in &line.strings {
+                for name in bench_json_names(s) {
+                    if let Some(registry) = diff_registry {
+                        if !registry.contains(&name) {
+                            out.push(Violation {
+                                rule: Rule::BenchDrift,
+                                file: file.rel.clone(),
+                                line: line.number,
+                                message: format!(
+                                    "`{name}` is written here but not registered in the \
+                                     bench-diff default file set (bench_harness/diff.rs)"
+                                ),
+                            });
+                        }
+                    }
+                    if let Some(wf) = workflow {
+                        if !wf.contains(&name) {
+                            out.push(Violation {
+                                rule: Rule::BenchDrift,
+                                file: file.rel.clone(),
+                                line: line.number,
+                                message: format!(
+                                    "`{name}` is written here but missing from the CI \
+                                     workflow (upload/gate list)"
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Extract `BENCH_*.json` names from a string literal.
+fn bench_json_names(s: &str) -> Vec<String> {
+    let mut names = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = s[from..].find("BENCH_") {
+        let start = from + pos;
+        let tail = &s[start..];
+        let end = tail
+            .char_indices()
+            .find(|(_, c)| !(c.is_alphanumeric() || *c == '_' || *c == '.'))
+            .map(|(b, _)| b)
+            .unwrap_or(tail.len());
+        let cand = &tail[..end];
+        if let Some(stem) = cand.strip_suffix(".json") {
+            if stem.len() > "BENCH_".len() {
+                names.push(cand.to_string());
+            }
+        }
+        from = start + "BENCH_".len();
+    }
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::audit::scanner::scan_source;
+
+    fn violations_of(rule: Rule, src: &str, rel: &str) -> Vec<Violation> {
+        let file = scan_source(rel, src);
+        let mut out = Vec::new();
+        match rule {
+            Rule::Unsafe => check_unsafe(&file, &mut out),
+            Rule::Unwrap => check_unwrap(&file, &mut out),
+            Rule::Lock => check_lock(&file, &mut out),
+            Rule::Nondet => check_nondet(&file, &mut out),
+            Rule::Thread => check_thread(&file, &mut out),
+            Rule::BenchDrift => unreachable!("use check_bench_drift directly"),
+        }
+        out
+    }
+
+    #[test]
+    fn undocumented_unsafe_fires_documented_passes() {
+        let bad = "unsafe impl Send for X {}\n";
+        assert_eq!(violations_of(Rule::Unsafe, bad, "a.rs").len(), 1);
+        let good = "// SAFETY: X owns its pointer exclusively.\nunsafe impl Send for X {}\n";
+        assert!(violations_of(Rule::Unsafe, good, "a.rs").is_empty());
+        let same_line = "unsafe impl Send for X {} // SAFETY: owned pointer\n";
+        assert!(violations_of(Rule::Unsafe, same_line, "a.rs").is_empty());
+    }
+
+    #[test]
+    fn safety_comment_does_not_leak_past_code() {
+        let src = "// SAFETY: documents only the first site\nunsafe impl Send for X {}\nunsafe impl Sync for X {}\n";
+        let v = violations_of(Rule::Unsafe, src, "a.rs");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn unsafe_in_comment_string_or_test_is_ignored() {
+        let src = "// unsafe is discussed here\nlet s = \"unsafe\";\n#[cfg(test)]\nmod t { fn f() { unsafe { x() } } }\n";
+        assert!(violations_of(Rule::Unsafe, src, "a.rs").is_empty());
+    }
+
+    #[test]
+    fn deny_attribute_is_not_an_unsafe_site() {
+        let src = "#![deny(unsafe_op_in_unsafe_fn)]\n";
+        assert!(violations_of(Rule::Unsafe, src, "lib.rs").is_empty());
+    }
+
+    #[test]
+    fn unwrap_fires_and_escape_is_honored() {
+        let bad = "let x = y.unwrap();\nlet z = w.expect(\"boom\");\n";
+        assert_eq!(violations_of(Rule::Unwrap, bad, "a.rs").len(), 2);
+        let escaped =
+            "// audit: allow(unwrap, startup path, config already validated)\nlet x = y.unwrap();\n";
+        assert!(violations_of(Rule::Unwrap, escaped, "a.rs").is_empty());
+        let inline = "let x = y.unwrap(); // audit: allow(unwrap, see above)\n";
+        assert!(violations_of(Rule::Unwrap, inline, "a.rs").is_empty());
+    }
+
+    #[test]
+    fn escape_without_reason_is_not_honored() {
+        let src = "// audit: allow(unwrap)\nlet x = y.unwrap();\n";
+        assert_eq!(violations_of(Rule::Unwrap, src, "a.rs").len(), 1);
+        let wrong_rule = "// audit: allow(lock, reason)\nlet x = y.unwrap();\n";
+        assert_eq!(violations_of(Rule::Unwrap, wrong_rule, "a.rs").len(), 1);
+    }
+
+    #[test]
+    fn unwrap_or_else_is_not_unwrap() {
+        let src = "let x = y.unwrap_or_else(|p| p.into_inner());\nlet z = w.unwrap_or(0);\n";
+        assert!(violations_of(Rule::Unwrap, src, "a.rs").is_empty());
+    }
+
+    #[test]
+    fn bare_lock_unwrap_fires_including_multiline() {
+        let bad = "let g = m.lock().unwrap();\n";
+        assert_eq!(violations_of(Rule::Lock, bad, "a.rs").len(), 1);
+        let multiline = "let g = m\n    .lock()\n    .expect(\"poisoned\");\n";
+        assert_eq!(violations_of(Rule::Lock, multiline, "a.rs").len(), 1);
+        let helper = "let g = usync::lock(&m);\n";
+        assert!(violations_of(Rule::Lock, helper, "a.rs").is_empty());
+        // The recover-inline idiom also routes through the helper now.
+        let recover = "let g = m.lock().unwrap_or_else(|p| p.into_inner());\n";
+        assert_eq!(violations_of(Rule::Lock, recover, "a.rs").len(), 1);
+    }
+
+    #[test]
+    fn nondet_only_governs_hot_path_modules() {
+        let src = "let t = Instant::now();\n";
+        assert_eq!(violations_of(Rule::Nondet, src, "fft/plan.rs").len(), 1);
+        assert_eq!(violations_of(Rule::Nondet, src, "regularizer/kernel.rs").len(), 1);
+        assert!(violations_of(Rule::Nondet, src, "coordinator/trainer.rs").is_empty());
+        // Tests inside the hot-path modules may time things.
+        let in_test = "#[cfg(test)]\nmod t { fn f() { let t = Instant::now(); } }\n";
+        assert!(violations_of(Rule::Nondet, in_test, "fft/plan.rs").is_empty());
+    }
+
+    #[test]
+    fn thread_spawns_confined_to_approved_modules() {
+        let src = "std::thread::spawn(|| {});\n";
+        assert!(violations_of(Rule::Thread, src, "serve/server.rs").is_empty());
+        assert_eq!(violations_of(Rule::Thread, src, "coordinator/trainer.rs").len(), 1);
+        let scoped = "std::thread::scope(|s| {});\n";
+        assert_eq!(violations_of(Rule::Thread, scoped, "fft/plan.rs").len(), 1);
+    }
+
+    #[test]
+    fn bench_drift_checks_registry_and_workflow() {
+        let bench = scan_source(
+            "benches/bench_x.rs",
+            "fn main() { write_json(\"BENCH_x.json\", &[]); }\n",
+        );
+        let mut out = Vec::new();
+        check_bench_drift(
+            std::slice::from_ref(&bench),
+            Some("registry: BENCH_x.json"),
+            Some("upload: BENCH_x.json"),
+            &mut out,
+        );
+        assert!(out.is_empty());
+        check_bench_drift(
+            std::slice::from_ref(&bench),
+            Some("registry without it"),
+            Some("upload without it"),
+            &mut out,
+        );
+        assert_eq!(out.len(), 2, "{out:?}");
+    }
+
+    #[test]
+    fn bench_names_extracted_from_literals() {
+        assert_eq!(bench_json_names("BENCH_fft_host.json"), vec!["BENCH_fft_host.json"]);
+        assert_eq!(
+            bench_json_names("wrote BENCH_a.json and BENCH_b.json"),
+            vec!["BENCH_a.json", "BENCH_b.json"]
+        );
+        assert!(bench_json_names("BENCH_.json").is_empty());
+        assert!(bench_json_names("no bench here").is_empty());
+    }
+}

@@ -1,0 +1,382 @@
+//! Comment/string-aware line scanner for the audit rules.
+//!
+//! The rules in [`super::rules`] match token patterns (`unsafe`,
+//! `.unwrap()`, `.lock()`, `Instant::now`, …) that also appear freely in
+//! doc comments, error messages, and test code. Running plain substring
+//! greps over raw source would drown the rules in false positives, so
+//! the scanner performs a small single-pass lex of each file:
+//!
+//! - string literals (plain, raw `r#"…"#`, byte) are blanked out of the
+//!   code channel and collected verbatim into a per-line `strings` list
+//!   (the bench-drift rule needs the `BENCH_*.json` literal contents);
+//! - line comments (`//`, `///`, `//!`) and (nested) block comments are
+//!   moved to a per-line `comment` channel, where the `SAFETY:` and
+//!   `audit: allow(…)` escapes live;
+//! - char literals and lifetimes are disambiguated so `'{'` cannot
+//!   corrupt the brace depth used for test tracking;
+//! - `#[cfg(test)]` / `#[test]` items are brace-matched and every line
+//!   inside them is flagged `in_test`, because the rules only govern
+//!   library code.
+//!
+//! This is deliberately not a full Rust parser: it only needs to be
+//! faithful about *where code is*, not what it means.
+
+/// One scanned source line, split into channels.
+#[derive(Clone, Debug)]
+pub struct ScannedLine {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code with string/char contents blanked and comments removed.
+    pub code: String,
+    /// Concatenated comment text on this line (no `//` markers).
+    pub comment: String,
+    /// String-literal contents that appear on this line.
+    pub strings: Vec<String>,
+    /// Whether the line sits inside a `#[cfg(test)]` / `#[test]` item.
+    pub in_test: bool,
+}
+
+/// A fully scanned file.
+#[derive(Clone, Debug)]
+pub struct ScannedFile {
+    /// Path relative to the scan root, with `/` separators.
+    pub rel: String,
+    /// The scanned lines, in order.
+    pub lines: Vec<ScannedLine>,
+}
+
+/// Lexer state that can span line boundaries.
+enum Mode {
+    Code,
+    /// Nested block comment depth.
+    Block(usize),
+    /// Inside a plain string literal.
+    Str,
+    /// Inside a raw string literal closed by `"` + this many `#`s.
+    RawStr(usize),
+}
+
+/// Scan one file's text. `rel` is the path recorded on violations.
+pub fn scan_source(rel: &str, text: &str) -> ScannedFile {
+    let mut lines = Vec::new();
+    let mut mode = Mode::Code;
+    for (idx, raw) in text.lines().enumerate() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::with_capacity(raw.len());
+        let mut comment = String::new();
+        let mut strings = Vec::new();
+        let mut cur_string = String::new();
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            match mode {
+                Mode::Block(depth) => {
+                    if c == '*' && chars.get(i + 1) == Some(&'/') {
+                        mode = if depth == 1 {
+                            Mode::Code
+                        } else {
+                            Mode::Block(depth - 1)
+                        };
+                        i += 2;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if c == '\\' {
+                        if let Some(&n) = chars.get(i + 1) {
+                            cur_string.push(c);
+                            cur_string.push(n);
+                            i += 2;
+                        } else {
+                            // Trailing `\` continues the string onto the
+                            // next line.
+                            i += 1;
+                        }
+                    } else if c == '"' {
+                        code.push('"');
+                        strings.push(std::mem::take(&mut cur_string));
+                        mode = Mode::Code;
+                        i += 1;
+                    } else {
+                        cur_string.push(c);
+                        i += 1;
+                    }
+                }
+                Mode::RawStr(hashes) => {
+                    if c == '"' && closes_raw(&chars, i + 1, hashes) {
+                        code.push('"');
+                        strings.push(std::mem::take(&mut cur_string));
+                        mode = Mode::Code;
+                        i += 1 + hashes;
+                    } else {
+                        cur_string.push(c);
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        comment.push_str(&raw[byte_offset(raw, i + 2)..]);
+                        break;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        mode = Mode::Str;
+                        i += 1;
+                    } else if let Some(h) = raw_string_start(&chars, i) {
+                        // `r"`, `r#"`, `br"`, … — emit the opening quote
+                        // only, so the code channel stays balanced.
+                        code.push('"');
+                        mode = Mode::RawStr(h.hashes);
+                        i = h.after_open;
+                    } else if c == '\'' {
+                        if let Some(end) = char_literal_end(&chars, i) {
+                            code.push_str("' '");
+                            i = end;
+                        } else {
+                            // A lifetime: keep it as code.
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        // A string whose content spans the newline keeps accumulating on
+        // the next line; what was gathered so far still counts here.
+        if !cur_string.is_empty() {
+            strings.push(std::mem::take(&mut cur_string));
+        }
+        lines.push(ScannedLine {
+            number: idx + 1,
+            code,
+            comment,
+            strings,
+            in_test: false,
+        });
+    }
+    mark_test_regions(&mut lines);
+    ScannedFile {
+        rel: rel.to_string(),
+        lines,
+    }
+}
+
+/// Char index → byte offset (for slicing the comment tail).
+fn byte_offset(s: &str, char_idx: usize) -> usize {
+    s.char_indices()
+        .nth(char_idx)
+        .map(|(b, _)| b)
+        .unwrap_or(s.len())
+}
+
+struct RawOpen {
+    hashes: usize,
+    after_open: usize,
+}
+
+/// Does a raw string literal open at `i`? (`r"`, `r##"`, `br"`, …)
+fn raw_string_start(chars: &[char], i: usize) -> Option<RawOpen> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    // `r` must start the token: an identifier char before it means we
+    // are inside a name like `for_rstr`.
+    if i > 0 && is_ident_char(chars[i - 1]) {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(RawOpen {
+            hashes,
+            after_open: j + 1,
+        })
+    } else {
+        None
+    }
+}
+
+/// Does `"` at some position close a raw string with `hashes` trailing `#`s?
+fn closes_raw(chars: &[char], after_quote: usize, hashes: usize) -> bool {
+    (0..hashes).all(|k| chars.get(after_quote + k) == Some(&'#'))
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// If a char literal starts at `i` (which holds `'`), return the index
+/// one past its closing quote; `None` means `i` starts a lifetime.
+fn char_literal_end(chars: &[char], i: usize) -> Option<usize> {
+    match chars.get(i + 1) {
+        // `'\…'` — escaped char, scan for the closing quote.
+        Some(&'\\') => {
+            let mut j = i + 2;
+            while j < chars.len() {
+                if chars[j] == '\\' {
+                    j += 2;
+                } else if chars[j] == '\'' {
+                    return Some(j + 1);
+                } else {
+                    j += 1;
+                }
+            }
+            None
+        }
+        // `'x'` — plain char iff the very next position closes it;
+        // otherwise it is a lifetime like `'a` or `'static`.
+        Some(_) => (chars.get(i + 2) == Some(&'\'')).then_some(i + 3),
+        None => None,
+    }
+}
+
+/// Flag every line inside a `#[cfg(test)]` / `#[test]` item.
+///
+/// Walks the code channel tracking brace depth. A test attribute arms a
+/// pending flag; the next `{` at or below the attribute's depth opens
+/// the test region, which closes when depth returns to its opening
+/// value. `mod tests;` (a `;` before any `{`) disarms the flag.
+fn mark_test_regions(lines: &mut [ScannedLine]) {
+    let mut depth = 0usize;
+    let mut pending = false;
+    let mut region_depth: Option<usize> = None;
+    for line in lines.iter_mut() {
+        let code = line.code.clone();
+        let trimmed = code.trim();
+        if region_depth.is_none()
+            && (trimmed.contains("#[cfg(test)]")
+                || trimmed.contains("#[cfg(all(test")
+                || trimmed.contains("#[test]"))
+        {
+            pending = true;
+        }
+        if pending || region_depth.is_some() {
+            line.in_test = true;
+        }
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    if pending && region_depth.is_none() {
+                        pending = false;
+                        region_depth = Some(depth - 1);
+                    }
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if region_depth == Some(depth) {
+                        region_depth = None;
+                    }
+                }
+                ';' => {
+                    if pending && region_depth.is_none() {
+                        // `mod tests;` — the item lives in another file.
+                        pending = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(text: &str) -> ScannedFile {
+        scan_source("t.rs", text)
+    }
+
+    #[test]
+    fn strings_are_blanked_and_collected() {
+        let f = scan("let x = \"has .unwrap() inside\";\n");
+        assert_eq!(f.lines[0].code, "let x = \"\";");
+        assert_eq!(f.lines[0].strings, vec!["has .unwrap() inside"]);
+    }
+
+    #[test]
+    fn escapes_in_strings_do_not_end_them() {
+        let f = scan(r#"let x = "a\"b.unwrap()"; x.lock()"#);
+        assert!(!f.lines[0].code.contains(".unwrap()"));
+        assert!(f.lines[0].code.contains(".lock()"));
+        assert_eq!(f.lines[0].strings, vec![r#"a\"b.unwrap()"#]);
+    }
+
+    #[test]
+    fn raw_strings_span_lines() {
+        let f = scan("let x = r#\"line one .unwrap()\nline two\"#;\nlet y = 1.unwrap();\n");
+        assert!(!f.lines[0].code.contains("unwrap"));
+        assert!(!f.lines[1].code.contains("line two"));
+        assert!(f.lines[2].code.contains(".unwrap()"));
+        assert_eq!(f.lines[0].strings, vec!["line one .unwrap()"]);
+    }
+
+    #[test]
+    fn comments_are_split_out() {
+        let f = scan("foo(); // trailing .unwrap() note\n/* block\nstill block */ bar();\n");
+        assert_eq!(f.lines[0].code.trim(), "foo();");
+        assert!(f.lines[0].comment.contains(".unwrap() note"));
+        assert!(f.lines[1].comment.contains("block"));
+        assert!(f.lines[2].code.contains("bar();"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let f = scan("let a: Vec<'static> = x('{', '\\'', '\"');\nfn f<'a>(x: &'a str) {}\n");
+        // Brace chars inside char literals must not affect depth.
+        assert!(!f.lines[0].code.contains('{'));
+        assert!(f.lines[1].code.contains("<'a>"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_flagged() {
+        let src = "fn lib() { a.unwrap(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       #[test]\n\
+                       fn t() { b.unwrap(); }\n\
+                   }\n\
+                   fn lib2() {}\n";
+        let f = scan(src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test);
+        assert!(f.lines[2].in_test);
+        assert!(f.lines[4].in_test);
+        assert!(f.lines[5].in_test);
+        assert!(!f.lines[6].in_test, "region must close after the mod");
+    }
+
+    #[test]
+    fn test_attribute_on_single_fn() {
+        let src = "#[test]\nfn t() {\n x.unwrap();\n}\nfn lib() {}\n";
+        let f = scan(src);
+        assert!(f.lines[2].in_test);
+        assert!(!f.lines[4].in_test);
+    }
+
+    #[test]
+    fn mod_tests_semicolon_disarms() {
+        let src = "#[cfg(test)]\nmod tests;\nfn lib() { x.unwrap(); }\n";
+        let f = scan(src);
+        assert!(!f.lines[2].in_test);
+    }
+}

@@ -918,24 +918,13 @@ pub fn bench_diff(args: &mut Args) -> Result<()> {
     let current = args.str_or("current", ".");
     let max_regress = args.get_or("max-regress", 20.0f64)?;
     let warn_only = args.switch("warn-only");
-    let default_files: Vec<String> = [
-        "BENCH_data_pipeline.json",
-        "BENCH_fft_host.json",
-        "BENCH_regularizer_host.json",
-        "BENCH_serving.json",
-        "BENCH_session_compile.json",
-        "BENCH_spec_grid.json",
-        "BENCH_spec_grid_parallel.json",
-    ]
-    .map(String::from)
-    .to_vec();
     let files: Vec<String> = match args.flag("files") {
         Some(list) => list
             .split(',')
             .filter(|s| !s.trim().is_empty())
             .map(|s| s.trim().to_string())
             .collect(),
-        None => default_files,
+        None => super::diff::default_bench_files(),
     };
     args.finish()?;
 
@@ -1204,6 +1193,10 @@ fn install_sigint_drain() {
     extern "C" {
         fn signal(signum: i32, handler: usize) -> usize;
     }
+    // SAFETY: signal(2) FFI installing an async-signal-safe handler that
+    // only stores a SeqCst atomic flag — no allocation, no locks, no
+    // reentrancy hazard; `sigint_handler` is `extern "C"` with the exact
+    // signature signal(2) expects, cast to the handler address.
     unsafe {
         signal(SIGINT, sigint_handler as usize);
     }

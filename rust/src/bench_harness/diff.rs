@@ -29,6 +29,31 @@ use crate::util::json::{self, Json};
 
 use super::table::Table;
 
+/// The default trajectory set `decorr bench-diff` compares: every
+/// `BENCH_*.json` the benches and bench-style subcommands write. This is
+/// the single registry — the CI workflow uploads the same names, and the
+/// `decorr audit` bench-drift rule fails any bench writing a
+/// `BENCH_*.json` that is not listed here, so recorded trajectories
+/// cannot silently fall out of the regression gate.
+pub const DEFAULT_BENCH_FILES: &[&str] = &[
+    "BENCH_data_pipeline.json",
+    "BENCH_fft_host.json",
+    "BENCH_multi_step.json",
+    "BENCH_regularizer_host.json",
+    "BENCH_serving.json",
+    "BENCH_session_compile.json",
+    "BENCH_spec_grid.json",
+    "BENCH_spec_grid_parallel.json",
+    "BENCH_sweep_scheduler.json",
+    "BENCH_train_step.json",
+];
+
+/// [`DEFAULT_BENCH_FILES`] as owned strings (the [`diff_dirs`] input
+/// shape).
+pub fn default_bench_files() -> Vec<String> {
+    DEFAULT_BENCH_FILES.iter().map(|s| s.to_string()).collect()
+}
+
 /// Which way a metric column improves.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Direction {
@@ -332,6 +357,18 @@ fn diff_tables(file: &str, table: &str, baseline: &Json, current: &Json, report:
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn default_bench_files_sorted_unique_and_well_formed() {
+        let mut sorted = DEFAULT_BENCH_FILES.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted, DEFAULT_BENCH_FILES, "registry must stay sorted and unique");
+        assert!(DEFAULT_BENCH_FILES
+            .iter()
+            .all(|f| f.starts_with("BENCH_") && f.ends_with(".json")));
+        assert_eq!(default_bench_files().len(), DEFAULT_BENCH_FILES.len());
+    }
 
     fn grid_doc(spec: &str, steps_per_sec: f64, wall: f64) -> Json {
         json::parse(&format!(

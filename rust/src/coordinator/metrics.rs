@@ -13,6 +13,7 @@ use std::sync::{Mutex, MutexGuard};
 use anyhow::{Context, Result};
 
 use crate::util::json::{self, Json};
+use crate::util::sync as usync;
 
 /// One logged training step.
 #[derive(Clone, Debug)]
@@ -87,7 +88,7 @@ impl MetricsLogger {
     /// Lock the interior, recovering from a poisoned lock (a panicking
     /// observer must not wedge every later metrics read).
     fn lock(&self) -> MutexGuard<'_, MetricsInner> {
-        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+        usync::lock(&self.inner)
     }
 
     /// Record one step.

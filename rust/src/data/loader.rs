@@ -27,6 +27,7 @@ use super::synth::ShapeWorld;
 use super::{Batch, BatchSource};
 use crate::runtime::SendLiteral;
 use crate::util::rng::Rng;
+use crate::util::sync as usync;
 use crate::util::tensor::Tensor;
 
 /// A twin-view SSL batch: two augmented views of the same base images.
@@ -295,7 +296,7 @@ impl BatchLoader {
         match &self.reorder {
             None => self.recv_one(),
             Some(m) => {
-                let mut r = m.lock().unwrap_or_else(|p| p.into_inner());
+                let mut r = usync::lock(m);
                 loop {
                     let want = r.next_index;
                     if let Some(b) = r.stash.remove(&want) {

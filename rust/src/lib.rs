@@ -144,8 +144,31 @@
 //! slot maps once, marshal borrowed literals per step). Trainer, DDP,
 //! linear eval, and the bench harness all load through it, with artifact
 //! ids derived from the spec.
+//!
+//! ## Hardening: the `audit` lint pass
+//!
+//! The crate audits itself. [`audit`] is a dependency-free static-analysis
+//! pass (`decorr audit`, a required CI step) whose scanner understands
+//! comments, strings, and `#[cfg(test)]` regions, enforcing:
+//!
+//! - every `unsafe` site carries a `// SAFETY:` comment (and the crate
+//!   denies `unsafe_op_in_unsafe_fn` below);
+//! - no `.unwrap()`/`.expect(` in non-test library code without a
+//!   reasoned `// audit: allow(unwrap, …)` escape, ratcheted by the
+//!   committed `rust/audit.toml` baseline — counts only go down;
+//! - no bare `Mutex::lock().unwrap()` — poisoned locks recover through
+//!   [`util::sync::lock`] so a panicked worker cannot cascade into the
+//!   drain/shutdown paths;
+//! - [`fft`] and [`regularizer`] stay deterministic (no wall-clock or
+//!   env reads — they back the bit-identity tests);
+//! - thread spawns stay confined to the approved concurrency modules,
+//!   and every `BENCH_*.json` a bench writes is registered with the
+//!   bench-diff gate and the CI upload list.
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod api;
+pub mod audit;
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;

@@ -12,6 +12,7 @@
 //! decorr serve-bench [--rps N --specs a;b]     closed-loop serving load test
 //! decorr table1|table3|table4|table6|table7   regenerate paper tables
 //! decorr fig2|fig3                     regenerate paper figures
+//! decorr audit   [--write-baseline]    in-repo static-analysis lint pass
 //! ```
 //!
 //! Subcommand bodies live in `decorr::bench_harness::cmd` so examples and
@@ -47,6 +48,7 @@ fn main() -> Result<()> {
         "session-bench" | "session" => decorr::bench_harness::cmd::session_bench(&mut args),
         "serve" => decorr::bench_harness::cmd::serve(&mut args),
         "serve-bench" => decorr::bench_harness::cmd::serve_bench(&mut args),
+        "audit" => decorr::audit::cmd_audit(&mut args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -82,6 +84,7 @@ const SUBCOMMANDS: &[&str] = &[
     "session-bench",
     "serve",
     "serve-bench",
+    "audit",
     "help",
 ];
 
@@ -167,6 +170,13 @@ SUBCOMMANDS
            --seed K, --workers/--batch-rows/--deadline-ms/--host/
            --artifact-dir for the in-process server; --json path writes
            BENCH_serving.json for the bench-diff gate)
+  audit    in-repo static-analysis lint pass over rust/src: SAFETY
+           comments on unsafe, no bare unwrap/expect or Mutex poison
+           panics, deterministic fft/regularizer modules, confined
+           thread spawns, bench-artifact drift — gated by the ratchet
+           baseline in audit.toml (--root dir, --baseline file,
+           --write-baseline rewrites counts, --list prints known debt,
+           --workflow path|none for the CI upload check)
 ";
 
 #[cfg(test)]

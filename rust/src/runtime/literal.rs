@@ -47,7 +47,7 @@ pub fn scalar(lit: &xla::Literal) -> Result<f32> {
 /// threads and hand them to the driver thread.
 pub struct SendLiteral(xla::Literal);
 
-// Safety: see the type-level docs — the wrapped literal is host memory
+// SAFETY: see the type-level docs — the wrapped literal is host memory
 // owned by this process with no captured thread-local state, so moving
 // it between threads is sound. It is moved, never shared (`!Sync` stays).
 unsafe impl Send for SendLiteral {}

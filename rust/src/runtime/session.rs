@@ -58,6 +58,7 @@ use anyhow::{Context, Result};
 use super::artifact::{Artifact, Manifest};
 use super::engine::{artifact_paths, Engine};
 use crate::util::json::{self, Json};
+use crate::util::sync as usync;
 
 /// File name of the persistent compile-time index, under the artifact dir.
 pub const SESSION_INDEX_FILE: &str = ".session-index.json";
@@ -354,7 +355,7 @@ impl SharedSession {
     pub fn source(&self, name: &str) -> Result<Arc<ArtifactSource>> {
         self.core.stats.source_requests.fetch_add(1, Ordering::Relaxed);
         let stripe = &self.core.sources[name_stripe(name)];
-        let mut map = stripe.lock().expect("source stripe poisoned");
+        let mut map = usync::lock(stripe);
         if let Some(src) = map.get(name) {
             return Ok(src.clone());
         }
@@ -514,7 +515,7 @@ impl Session {
         stats.loads.fetch_add(1, Ordering::Relaxed);
         let src = self.shared.source(name)?;
         let stripe = &self.compiled[src.key.stripe()];
-        let mut map = stripe.lock().expect("compiled stripe poisoned");
+        let mut map = usync::lock(stripe);
         if let Some(cached) = map.get(&src.key) {
             anyhow::ensure!(
                 cached.signature == src.signature,
@@ -536,12 +537,7 @@ impl Session {
         stats
             .compile_nanos
             .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
-        self.shared
-            .core
-            .index
-            .lock()
-            .expect("index poisoned")
-            .record(&src, elapsed.as_secs_f64() * 1e3);
+        usync::lock(&self.shared.core.index).record(&src, elapsed.as_secs_f64() * 1e3);
         let artifact = Arc::new(artifact);
         map.insert(
             src.key,

@@ -38,6 +38,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::runtime::{Session, SharedSession};
+use crate::util::sync as usync;
 
 use super::exec::{SpecExec, SpecExecCache};
 use super::metrics::{FlushReason, ServeStats};
@@ -130,7 +131,7 @@ struct Shared {
 
 impl Shared {
     fn note_framing_error(&self) {
-        self.stats.lock().expect("stats lock").framing_errors += 1;
+        usync::lock(&self.stats).framing_errors += 1;
     }
 }
 
@@ -226,20 +227,20 @@ impl ServerHandle {
         let gave_up_at = Instant::now() + self.drain_timeout;
         loop {
             {
-                let central = self.shared.central.lock().expect("central lock");
+                let central = usync::lock(&self.shared.central);
                 if central.readers == 0 {
                     break;
                 }
             }
             if Instant::now() >= gave_up_at {
-                for c in self.conns.lock().expect("conns lock").iter() {
+                for c in usync::lock(&self.conns).iter() {
                     let _ = c.shutdown(Shutdown::Both);
                 }
                 break;
             }
             std::thread::sleep(Duration::from_millis(2));
         }
-        let handles = std::mem::take(&mut *self.readers.lock().expect("readers lock"));
+        let handles = std::mem::take(&mut *usync::lock(&self.readers));
         for h in handles {
             let _ = h.join();
         }
@@ -247,7 +248,7 @@ impl ServerHandle {
         for w in std::mem::take(&mut self.workers) {
             let _ = w.join();
         }
-        let stats = self.shared.stats.lock().expect("stats lock").clone();
+        let stats = usync::lock(&self.shared.stats).clone();
         Ok(ServeReport { stats })
     }
 }
@@ -269,13 +270,13 @@ fn accept_loop(
                     Err(_) => continue,
                 };
                 if let Ok(extra) = stream.try_clone() {
-                    conns.lock().expect("conns lock").push(extra);
+                    usync::lock(conns).push(extra);
                 }
-                shared.stats.lock().expect("stats lock").connections += 1;
-                shared.central.lock().expect("central lock").readers += 1;
+                usync::lock(&shared.stats).connections += 1;
+                usync::lock(&shared.central).readers += 1;
                 let shared = shared.clone();
                 let handle = std::thread::spawn(move || reader_loop(stream, reply, &shared));
-                readers.lock().expect("readers lock").push(handle);
+                usync::lock(readers).push(handle);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(2));
@@ -289,7 +290,7 @@ fn accept_loop(
 
 fn send_response(reply: &Reply, resp: &Response) -> Result<(), ServeError> {
     let frame = encode_response(resp);
-    let mut w = reply.lock().expect("reply lock");
+    let mut w = usync::lock(reply);
     write_frame(&mut *w, &frame)?;
     w.flush()?;
     Ok(())
@@ -345,7 +346,7 @@ fn reader_loop(mut stream: Stream, reply: Reply, shared: &Arc<Shared>) {
         match SpecExecCache::validate(req.kind, &req.spec, req.rows, req.d, shared.max_rows) {
             Ok(key) => enqueue(shared, key, req, &reply),
             Err(e) => {
-                let mut stats = shared.stats.lock().expect("stats lock");
+                let mut stats = usync::lock(&shared.stats);
                 stats.spec_mut(&req.spec).errors += 1;
                 drop(stats);
                 let _ = send_response(
@@ -361,7 +362,7 @@ fn reader_loop(mut stream: Stream, reply: Reply, shared: &Arc<Shared>) {
     }
     // Final decrement under the queue lock: after this, a worker that
     // sees empty queues knows this connection contributes nothing more.
-    let mut central = shared.central.lock().expect("central lock");
+    let mut central = usync::lock(&shared.central);
     central.readers = central.readers.saturating_sub(1);
     drop(central);
     shared.cv.notify_all();
@@ -380,7 +381,7 @@ fn enqueue(shared: &Arc<Shared>, key: QueueKey, req: Request, reply: &Reply) {
         arrival: Instant::now(),
         reply: reply.clone(),
     };
-    let mut central = shared.central.lock().expect("central lock");
+    let mut central = usync::lock(&shared.central);
     central.queues.push(key, job);
     drop(central);
     shared.cv.notify_all();
@@ -398,7 +399,7 @@ fn worker_loop(shared: &Arc<Shared>, mode: &ExecMode) {
     let mut cache = SpecExecCache::default();
     loop {
         let taken = {
-            let mut central = shared.central.lock().expect("central lock");
+            let mut central = usync::lock(&shared.central);
             loop {
                 let drain = shared.draining.load(Ordering::SeqCst);
                 let now = Instant::now();
@@ -418,11 +419,7 @@ fn worker_loop(shared: &Arc<Shared>, mode: &ExecMode) {
                     .unwrap_or(Duration::from_millis(50))
                     .min(Duration::from_millis(50))
                     .max(Duration::from_micros(100));
-                central = shared
-                    .cv
-                    .wait_timeout(central, wait)
-                    .expect("central lock")
-                    .0;
+                central = usync::wait_timeout(&shared.cv, central, wait).0;
             }
         };
         let Some(taken) = taken else {
@@ -444,7 +441,7 @@ fn worker_loop(shared: &Arc<Shared>, mode: &ExecMode) {
 }
 
 fn respond_exec_error(shared: &Arc<Shared>, spec: &str, id: u64, reply: &Reply, e: &ServeError) {
-    shared.stats.lock().expect("stats lock").spec_mut(spec).errors += 1;
+    usync::lock(&shared.stats).spec_mut(spec).errors += 1;
     let _ = send_response(
         reply,
         &Response::Error {
@@ -476,7 +473,7 @@ fn run_diagnose(
                 regularizer: out.regularizer,
             };
             let sent = send_response(&job.reply, &resp).is_ok();
-            let mut stats = shared.stats.lock().expect("stats lock");
+            let mut stats = usync::lock(&shared.stats);
             let s = stats.spec_mut(&key.spec);
             if sent {
                 s.requests += 1;
@@ -541,7 +538,7 @@ fn run_score(
             write_failures += 1;
         }
     }
-    let mut stats = shared.stats.lock().expect("stats lock");
+    let mut stats = usync::lock(&shared.stats);
     let s = stats.spec_mut(&key.spec);
     s.requests += sent_ok;
     for l in latencies {

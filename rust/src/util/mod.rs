@@ -1,7 +1,9 @@
-//! Small self-contained utilities: RNG, JSON, tensors, timing.
+//! Small self-contained utilities: RNG, JSON, tensors, timing, and the
+//! poison-recovering lock helpers every `Mutex` consumer routes through.
 
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod sync;
 pub mod tensor;
 pub mod timer;

@@ -1,0 +1,94 @@
+//! Poison-recovering synchronization helpers.
+//!
+//! Every shared-state consumer in this crate (serve queues, session
+//! caches, metrics history, sweep error sinks, loader reorder buffers)
+//! guards plain data with a `Mutex`: no guarded invariant spans a panic
+//! point, so a worker that panicked mid-update leaves the data in a
+//! state some *other* thread already observed or will overwrite — there
+//! is nothing the poison flag protects here. What the flag *does* do is
+//! cascade: one panicking serve worker would make every later
+//! `lock().unwrap()` on the drain/shutdown path panic too, turning a
+//! single bug into a wedged server that answers nothing.
+//!
+//! [`lock`] and [`wait_timeout`] therefore clear the poison flag and
+//! hand back the guard. The `decorr audit` rule `lock` (see
+//! [`crate::audit`]) forbids bare `Mutex::lock().unwrap()` /
+//! `.expect(..)` in library code so every lock acquisition routes
+//! through here.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Acquire `m`, recovering the guard from a poisoned lock.
+///
+/// A panicked holder cannot wedge later acquisitions: callers must keep
+/// their guarded data panic-consistent (all users in this crate guard
+/// plain data with no cross-panic invariants).
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // audit: allow(lock, this is the poison-recovering helper itself)
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait_timeout`] with the same poison recovery as [`lock`].
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur)
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Consume a `Mutex`, recovering the inner value from a poisoned lock.
+pub fn into_inner<T>(m: Mutex<T>) -> T {
+    m.into_inner().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = m.clone();
+        // Poison the mutex by panicking while holding it.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        // A bare lock().unwrap() here would panic; the helper recovers.
+        let mut g = lock(&m);
+        assert_eq!(*g, 7);
+        *g = 8;
+        drop(g);
+        assert_eq!(*lock(&m), 8);
+    }
+
+    #[test]
+    fn into_inner_recovers_from_poison() {
+        let m = Mutex::new(vec![1, 2, 3]);
+        // Poison via a scoped panic holding the guard.
+        let _ = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _g = m.lock().unwrap();
+                panic!("poison it");
+            })
+            .join()
+        });
+        assert_eq!(into_inner(m), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn wait_timeout_times_out_and_returns_guard() {
+        let m = Mutex::new(0u32);
+        let cv = Condvar::new();
+        let g = lock(&m);
+        let (g, res) = wait_timeout(&cv, g, Duration::from_millis(1));
+        assert!(res.timed_out());
+        assert_eq!(*g, 0);
+    }
+}

@@ -1,0 +1,244 @@
+//! Integration tests for the `decorr audit` lint pass: fixture crates
+//! with seeded violations, the escape/ratchet machinery, and — most
+//! importantly — the live tree itself, which must stay audit-clean
+//! against the committed `rust/audit.toml` baseline.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use decorr::audit::baseline::{compare, Baseline};
+use decorr::audit::rules::Rule;
+use decorr::audit::{run_audit, AuditConfig};
+
+/// Build a throwaway fixture crate: `root/src/<rel>` files plus an
+/// optional `benches/` dir. Returns the root.
+struct Fixture {
+    root: PathBuf,
+}
+
+impl Fixture {
+    fn new(tag: &str) -> Self {
+        let root = std::env::temp_dir().join(format!("decorr_audit_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(root.join("src")).expect("fixture mkdir");
+        Fixture { root }
+    }
+
+    fn write(&self, rel: &str, text: &str) -> &Self {
+        let path = self.root.join(rel);
+        std::fs::create_dir_all(path.parent().expect("fixture path has a parent"))
+            .expect("fixture mkdir");
+        std::fs::write(path, text).expect("fixture write");
+        self
+    }
+
+    fn audit(&self, baseline: Baseline) -> decorr::audit::AuditOutcome {
+        run_audit(&AuditConfig {
+            root: self.root.clone(),
+            baseline,
+            workflow: None,
+        })
+        .expect("audit runs")
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.root);
+    }
+}
+
+#[test]
+fn seeded_violations_are_detected() {
+    let fx = Fixture::new("seeded");
+    fx.write(
+        "src/lib.rs",
+        "pub fn f(m: &std::sync::Mutex<u32>) -> u32 {\n\
+         \x20   unsafe { g() };\n\
+         \x20   *m.lock().unwrap()\n\
+         }\n",
+    );
+    let out = fx.audit(Baseline::default());
+    assert!(out.failed(), "seeded fixture must fail the audit");
+    let counts: BTreeMap<_, _> = out.counts.clone();
+    assert_eq!(counts.get(&Rule::Unsafe), Some(&1), "{:?}", out.violations);
+    assert_eq!(counts.get(&Rule::Lock), Some(&1), "{:?}", out.violations);
+    // The bare lock().unwrap() also counts as an unwrap in library code.
+    assert_eq!(counts.get(&Rule::Unwrap), Some(&1), "{:?}", out.violations);
+    // Violations carry usable locations.
+    let v = &out.violations[0];
+    assert_eq!(v.file, "lib.rs");
+    assert!(v.line >= 1);
+}
+
+#[test]
+fn allow_escapes_and_safety_comments_are_honored() {
+    let fx = Fixture::new("escapes");
+    fx.write(
+        "src/lib.rs",
+        "pub fn f(m: &std::sync::Mutex<u32>) -> u32 {\n\
+         \x20   // SAFETY: g has no preconditions in this fixture.\n\
+         \x20   unsafe { g() };\n\
+         \x20   // audit: allow(lock, fixture exercises the escape path)\n\
+         \x20   // audit: allow(unwrap, fixture exercises the escape path)\n\
+         \x20   *m.lock().unwrap()\n\
+         }\n",
+    );
+    let out = fx.audit(Baseline::default());
+    assert!(!out.failed(), "escaped fixture must pass: {:?}", out.violations);
+    assert!(out.violations.is_empty());
+}
+
+#[test]
+fn test_code_is_exempt() {
+    let fx = Fixture::new("testexempt");
+    fx.write(
+        "src/lib.rs",
+        "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let x: Option<u32> = None;\n        x.unwrap();\n    }\n}\n",
+    );
+    let out = fx.audit(Baseline::default());
+    assert!(!out.failed(), "{:?}", out.violations);
+}
+
+#[test]
+fn ratchet_allows_baseline_debt_and_fails_regressions() {
+    let fx = Fixture::new("ratchet");
+    fx.write(
+        "src/lib.rs",
+        "pub fn f(a: Option<u32>, b: Option<u32>) -> u32 {\n\
+         \x20   a.unwrap() + b.unwrap()\n\
+         }\n",
+    );
+    // Two unwraps on one line are two violations; baseline 2 passes…
+    let ok = fx.audit(Baseline::parse("[ratchet]\nunwrap = 2\n").expect("parse"));
+    assert!(!ok.failed(), "{:?}", ok.violations);
+    // …baseline 1 is a regression and fails.
+    let bad = fx.audit(Baseline::parse("[ratchet]\nunwrap = 1\n").expect("parse"));
+    assert!(bad.failed());
+    assert_eq!(bad.ratchet.regressions, vec![(Rule::Unwrap, 2, 1)]);
+    // Dropping below baseline is an improvement notice, not a failure.
+    let loose = fx.audit(Baseline::parse("[ratchet]\nunwrap = 5\n").expect("parse"));
+    assert!(!loose.failed());
+    assert_eq!(loose.ratchet.improvements, vec![(Rule::Unwrap, 2, 5)]);
+}
+
+#[test]
+fn nondet_and_thread_rules_fire_on_the_right_modules() {
+    let fx = Fixture::new("modules");
+    fx.write("src/fft/plan.rs", "pub fn t() { let _ = std::time::Instant::now(); }\n")
+        .write("src/widgets.rs", "pub fn s() { std::thread::spawn(|| {}); }\n")
+        .write(
+            "src/serve/server.rs",
+            "pub fn s() { std::thread::spawn(|| {}); }\n",
+        )
+        .write("src/lib.rs", "pub mod widgets;\n");
+    let out = fx.audit(Baseline::default());
+    assert_eq!(out.counts.get(&Rule::Nondet), Some(&1), "{:?}", out.violations);
+    // widgets.rs fires; serve/server.rs is approved.
+    assert_eq!(out.counts.get(&Rule::Thread), Some(&1), "{:?}", out.violations);
+    assert!(out.violations.iter().any(|v| v.file == "widgets.rs"));
+    assert!(!out.violations.iter().any(|v| v.file == "serve/server.rs"));
+}
+
+#[test]
+fn bench_drift_fires_when_a_bench_output_is_unregistered() {
+    let fx = Fixture::new("drift");
+    fx.write("src/lib.rs", "\n")
+        .write(
+            "src/bench_harness/diff.rs",
+            "pub const DEFAULT_BENCH_FILES: &[&str] = &[\"BENCH_known.json\"];\n",
+        )
+        .write(
+            "benches/bench_thing.rs",
+            "fn main() { write(\"BENCH_known.json\"); write(\"BENCH_rogue.json\"); }\n",
+        );
+    let out = fx.audit(Baseline::default());
+    assert_eq!(out.counts.get(&Rule::BenchDrift), Some(&1), "{:?}", out.violations);
+    assert!(out.violations[0].message.contains("BENCH_rogue.json"));
+}
+
+/// The tree audits itself: the repo must stay clean against the
+/// committed baseline. Every rule except `unwrap` is at zero; `unwrap`
+/// may only ratchet down.
+#[test]
+fn live_tree_is_audit_clean_against_committed_baseline() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let baseline_path = root.join("audit.toml");
+    assert!(
+        baseline_path.is_file(),
+        "rust/audit.toml must be committed (regenerate with `decorr audit --write-baseline`)"
+    );
+    let baseline = Baseline::load(&baseline_path).expect("baseline parses");
+    let workflow = root.join("../.github/workflows/ci.yml");
+    let out = run_audit(&AuditConfig {
+        root: root.clone(),
+        baseline: baseline.clone(),
+        workflow: workflow.is_file().then_some(workflow),
+    })
+    .expect("audit runs on the live tree");
+
+    let zero_rules = [
+        Rule::Unsafe,
+        Rule::Lock,
+        Rule::Nondet,
+        Rule::Thread,
+        Rule::BenchDrift,
+    ];
+    for rule in zero_rules {
+        let offenders: Vec<String> = out
+            .violations
+            .iter()
+            .filter(|v| v.rule == rule)
+            .map(|v| v.to_string())
+            .collect();
+        assert!(
+            offenders.is_empty(),
+            "live tree has {rule} violations:\n{}",
+            offenders.join("\n")
+        );
+    }
+    let unwraps = out.counts.get(&Rule::Unwrap).copied().unwrap_or(0);
+    assert!(
+        unwraps <= baseline.allowed(Rule::Unwrap),
+        "unwrap debt grew: {unwraps} > baseline {} — return errors or add a reasoned \
+         `// audit: allow(unwrap, …)` escape",
+        baseline.allowed(Rule::Unwrap)
+    );
+    assert!(!out.failed());
+}
+
+/// The ratchet comparison is pure — exercise it against the live counts
+/// to pin the "counts only go down" contract end to end.
+#[test]
+fn live_tree_ratchet_would_catch_a_one_unwrap_regression() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let baseline = Baseline::load(&root.join("audit.toml")).expect("baseline parses");
+    let out = run_audit(&AuditConfig {
+        root,
+        baseline: baseline.clone(),
+        workflow: None,
+    })
+    .expect("audit runs");
+    let mut inflated = out.counts.clone();
+    *inflated.entry(Rule::Unwrap).or_insert(0) += 1;
+    let report = compare(&inflated, &baseline);
+    assert!(
+        report.failed(),
+        "one extra unwrap past the baseline must fail the ratchet"
+    );
+}
+
+/// `audit.toml` must not list rules that are already at zero — the file
+/// is a debt ledger, and paid-off rules leave it.
+#[test]
+fn committed_baseline_lists_only_live_debt() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let baseline = Baseline::load(&root.join("audit.toml")).expect("baseline parses");
+    for rule in [Rule::Unsafe, Rule::Lock, Rule::Nondet, Rule::Thread, Rule::BenchDrift] {
+        assert_eq!(
+            baseline.allowed(rule),
+            0,
+            "{rule} must stay at zero — it is not ratcheted debt"
+        );
+    }
+}
