@@ -3,8 +3,10 @@
 //! content key, over synthetic FFT-free HLO artifacts generated on the fly
 //! — no `make artifacts` required, only a working PJRT client. Also loads
 //! a byte-identical alias under a different name to show the content
-//! addressing dedupe. Emits `BENCH_session_compile.json` for the perf
-//! trajectory (ROADMAP "device-side plan reuse").
+//! addressing dedupe, and resolves every artifact through the
+//! cross-process registry from a session with no artifact directory (the
+//! registry-warm contender). Emits `BENCH_session_compile.json` for the
+//! perf trajectory (ROADMAP "device-side plan reuse").
 
 use decorr::bench_harness::{session_compile_bench, smoke_budget, table};
 
@@ -20,6 +22,9 @@ fn main() {
     };
     println!("\n[bench_session_compile] cached vs cold artifact loads:");
     outcome.compile_table.print();
+    println!("\nregistry warm start (no artifact dir):");
+    outcome.registry_table.print();
+    println!("{}", outcome.registry_line);
     println!("\nsession stats:");
     outcome.stats_table.print();
     println!(
@@ -31,6 +36,7 @@ fn main() {
         "BENCH_session_compile.json",
         &[
             ("session_compile", &outcome.compile_table),
+            ("session_registry", &outcome.registry_table),
             ("session_stats", &outcome.stats_table),
         ],
     ) {

@@ -12,6 +12,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::config::TrainConfig;
+use crate::coordinator::ddp::DdpBackend;
 use crate::coordinator::{
     Checkpoint, DdpTrainer, EmbeddingDiagnostics, InputAdapter, MetricsLogger, StepMetrics,
     Trainer,
@@ -130,6 +131,7 @@ pub struct DriverBuilder {
     session: Option<Session>,
     artifact: Option<Arc<Artifact>>,
     shards: Option<usize>,
+    rank_addr: Option<String>,
     resume: Option<String>,
 }
 
@@ -141,6 +143,7 @@ impl DriverBuilder {
             session: None,
             artifact: None,
             shards: None,
+            rank_addr: None,
             resume: None,
         }
     }
@@ -171,6 +174,19 @@ impl DriverBuilder {
     /// of the monolithic trainer.
     pub fn ddp(mut self, shards: usize) -> DriverBuilder {
         self.shards = Some(shards);
+        self
+    }
+
+    /// Exchange gradients with `shards` external rank processes (started
+    /// with `decorr rank`) over `addr` — `unix:<path>` or a TCP
+    /// `host:port` — instead of in-process worker threads. Construction
+    /// blocks until all ranks have connected and passed the
+    /// content-key handshake (see `coordinator::ddp_net`); the resulting
+    /// driver is bit-identical to the thread-backed DDP driver at the
+    /// same seed.
+    pub fn ddp_net(mut self, shards: usize, addr: impl Into<String>) -> DriverBuilder {
+        self.shards = Some(shards);
+        self.rank_addr = Some(addr.into());
         self
     }
 
@@ -243,7 +259,13 @@ impl DriverBuilder {
             None => None,
         };
         let resume = Self::resolve_resume(self.resume.as_deref())?;
-        DdpTrainer::from_parts(self.cfg, shards, session, resume.as_ref())
+        let backend = match self.rank_addr.as_deref() {
+            Some(addr) => DdpBackend::Net {
+                addr: crate::serve::ServeAddr::parse(addr),
+            },
+            None => DdpBackend::Threads,
+        };
+        DdpTrainer::from_parts(self.cfg, shards, session, resume.as_ref(), backend)
     }
 
     /// Build the driver the builder describes: [`DdpTrainer`] when a

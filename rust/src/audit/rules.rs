@@ -97,6 +97,7 @@ impl fmt::Display for Violation {
 /// bit-identity tests keep a closed list of concurrency surfaces to pin.
 pub const APPROVED_THREAD_MODULES: &[&str] = &[
     "api/train/scheduler.rs",
+    "coordinator/ddp_net.rs",
     "data/loader.rs",
     "regularizer/kernel.rs",
     "runtime/session.rs",

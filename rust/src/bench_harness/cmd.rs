@@ -152,6 +152,12 @@ fn parse_variant_list(args: &mut Args, key: &str, defaults: &[String]) -> Result
 /// step), so `--resume <checkpoint>` continues momentum and the
 /// LR-schedule position through `DriverBuilder::resume_from`; v1
 /// params-only checkpoints still resume with fresh optimizer state.
+///
+/// `--ranks K` shards the step across K DDP workers — in-process threads
+/// by default, or real rank processes (started with `decorr rank`) when
+/// `--rank-addr <addr>` names the socket to exchange gradients over.
+/// Either backend produces losses bit-identical to the other at the same
+/// seed (the `coordinator::ddp_net` contract).
 pub fn train(args: &mut Args) -> Result<()> {
     let mut cfg = TrainConfig::default();
     if let Some(path) = args.flag("config") {
@@ -160,7 +166,13 @@ pub fn train(args: &mut Args) -> Result<()> {
     }
     cfg.apply_args(args)?;
     let resume = args.flag("resume");
+    let ranks = args.get_or("ranks", 0usize)?;
+    let rank_addr = args.flag("rank-addr");
     args.finish()?;
+    anyhow::ensure!(
+        rank_addr.is_none() || ranks > 0,
+        "--rank-addr needs --ranks K (the number of rank processes)"
+    );
     println!("training {} on preset {}", cfg.spec, cfg.preset);
     let out_dir = cfg.out_dir.clone();
     let mut builder = DriverBuilder::new(cfg);
@@ -168,9 +180,28 @@ pub fn train(args: &mut Args) -> Result<()> {
         println!("resuming parameters from {path}");
         builder = builder.resume_from(path.clone());
     }
-    let mut trainer = builder.build_trainer()?;
-    let report = trainer.run()?;
-    let snap = trainer.snapshot_state()?;
+    let (report, snap) = if ranks > 0 {
+        builder = match &rank_addr {
+            // Real rank processes over sockets: construction blocks in
+            // NetExchange::accept until every `decorr rank` has connected
+            // and passed the content-key handshake.
+            Some(addr) => {
+                println!(
+                    "waiting for {ranks} rank process(es) on {addr} \
+                     (start them with `decorr rank --addr {addr}`)"
+                );
+                builder.ddp_net(ranks, addr.clone())
+            }
+            None => builder.ddp(ranks),
+        };
+        let mut driver = builder.build()?;
+        let report = crate::api::train::run_driver(driver.as_mut(), &mut [])?;
+        let snap = driver.snapshot_state()?;
+        (report, snap)
+    } else {
+        let mut trainer = builder.build_trainer()?;
+        (trainer.run()?, trainer.snapshot_state()?)
+    };
     std::fs::create_dir_all(&out_dir)?;
     let ckpt_path = format!("{out_dir}/final.ckpt");
     snap.save(&ckpt_path)?;
@@ -682,11 +713,14 @@ pub fn fig3(args: &mut Args) -> Result<()> {
 /// `decorr spec <spec-string>` — parse a loss spec and pretty-print every
 /// component the `api` front door derives from it: the typed fields, the
 /// artifact ids (train per preset, loss/lossgrad at `--d`/`--n`, DDP
-/// grad), the host kernel, the Table-6 residual family, labels, and the
-/// loss-node memory model. `--check` additionally evaluates the spec on
-/// random views through the host `LossExecutor` (and the device one too
-/// when `--device` is given and the artifact exists) — the polymorphic
-/// facade end to end.
+/// grad), the host kernel, the Table-6 residual family, labels, the
+/// loss-node memory model, and — when `DECORR_REGISTRY` is set — how many
+/// of the derived artifacts are already warm in the cross-process
+/// registry. `--check` additionally evaluates the spec on random views
+/// through the host `LossExecutor` (and the device one too when
+/// `--device` is given and the artifact exists) — the polymorphic facade
+/// end to end, reporting whether the device artifact was a fresh compile
+/// or a registry warm start.
 pub fn spec(args: &mut Args) -> Result<()> {
     let mut input = args.positional.first().cloned().or_else(|| args.flag("spec"));
     let d = args.get_or("d", 512usize)?;
@@ -742,23 +776,41 @@ pub fn spec(args: &mut Args) -> Result<()> {
         "residual family".into(),
         format!("{:?}", spec.residual_family()),
     ]);
+    let mut artifact_ids: Vec<String> = Vec::new();
     for preset in ["tiny", "small", "e2e"] {
-        table.row(vec![
-            format!("train artifact ({preset})"),
-            spec.train_artifact(preset),
-        ]);
+        let id = spec.train_artifact(preset);
+        table.row(vec![format!("train artifact ({preset})"), id.clone()]);
+        artifact_ids.push(id);
     }
+    for (label, id) in [
+        (format!("loss artifact (d={d}, n={n})"), spec.loss_artifact(d, n, false)),
+        (format!("lossgrad artifact (d={d}, n={n})"), spec.loss_artifact(d, n, true)),
+        ("grad artifact (small, 4 shards)".into(), spec.grad_artifact("small", 4)),
+    ] {
+        table.row(vec![label, id.clone()]);
+        artifact_ids.push(id);
+    }
+    // Cross-process warm state: which of the derived artifact ids already
+    // resolve through the DECORR_REGISTRY store (runtime::registry)?
     table.row(vec![
-        format!("loss artifact (d={d}, n={n})"),
-        spec.loss_artifact(d, n, false),
-    ]);
-    table.row(vec![
-        format!("lossgrad artifact (d={d}, n={n})"),
-        spec.loss_artifact(d, n, true),
-    ]);
-    table.row(vec![
-        "grad artifact (small, 4 shards)".into(),
-        spec.grad_artifact("small", 4),
+        "registry warm-state".into(),
+        match crate::runtime::Registry::from_env() {
+            None => format!(
+                "- (set {} to warm-start across processes)",
+                crate::runtime::registry::REGISTRY_ENV
+            ),
+            Some(reg) => {
+                let warm = artifact_ids
+                    .iter()
+                    .filter(|id| reg.resolve_name(id).is_some())
+                    .count();
+                format!(
+                    "{warm}/{} derived artifacts warm in {}",
+                    artifact_ids.len(),
+                    reg.dir().display()
+                )
+            }
+        },
     ]);
     match spec.kernel(d) {
         Ok(k) => table.row(vec![format!("host kernel (d={d})"), k.name().to_string()]),
@@ -778,9 +830,11 @@ pub fn spec(args: &mut Args) -> Result<()> {
         // Polymorphic selection: host always; device when requested.
         let mut executors: Vec<Box<dyn LossExecutor>> =
             vec![Box::new(spec.host_executor(d)?)];
+        let mut device_session = None;
         if device {
             let session = Session::open(&artifact_dir)?;
             executors.push(Box::new(spec.device_executor(&session, d, n, false)?));
+            device_session = Some(session);
         }
         let mut out = Table::new(&["executor", "backend", "total", "invariance", "regularizer"]);
         for exec in &mut executors {
@@ -796,6 +850,18 @@ pub fn spec(args: &mut Args) -> Result<()> {
         }
         println!("\nexecutor check (random views, n={n}, d={d}):");
         out.print();
+        if let Some(session) = &device_session {
+            // Where the device artifact came from: a fresh compile, or a
+            // warm start out of the cross-process registry.
+            let stats = session.stats();
+            println!(
+                "session: {} compile(s); registry {} hit(s) / {} miss(es) / {} store(s)",
+                stats.compiles,
+                stats.registry_hits,
+                stats.registry_misses,
+                stats.registry_stores
+            );
+        }
     }
     Ok(())
 }
@@ -978,8 +1044,13 @@ pub fn bench_diff(args: &mut Args) -> Result<()> {
 /// the cached reload of the same content key, over synthetic FFT-free HLO
 /// artifacts generated on the fly (no `make artifacts` needed). Also
 /// demonstrates content addressing: an aliased copy of an artifact under a
-/// different name is a cache hit, not a compile. `--json <path>` writes
-/// the machine-readable tables (the `BENCH_session_compile.json` format).
+/// different name is a cache hit, not a compile. A registry-warm phase
+/// then resolves every artifact from the cross-process registry
+/// ([`DECORR_REGISTRY`](crate::runtime::registry::REGISTRY_ENV) when set,
+/// a private temp registry otherwise) through a session with **no**
+/// artifact directory — run it twice against one registry and the second
+/// process warms from the first. `--json <path>` writes the
+/// machine-readable tables (the `BENCH_session_compile.json` format).
 pub fn session_bench(args: &mut Args) -> Result<()> {
     let budget = args.get_or("budget", super::stats::smoke_budget(0.2))?;
     let json = args.flag("json");
@@ -988,6 +1059,9 @@ pub fn session_bench(args: &mut Args) -> Result<()> {
     let outcome = super::workload::session_compile_bench(budget)?;
     println!("\nsession compile cache (synthetic artifacts):");
     outcome.compile_table.print();
+    println!("\nregistry warm start (no artifact dir):");
+    outcome.registry_table.print();
+    println!("{}", outcome.registry_line);
     println!("\nsession stats:");
     outcome.stats_table.print();
     println!(
@@ -999,6 +1073,7 @@ pub fn session_bench(args: &mut Args) -> Result<()> {
             &path,
             &[
                 ("session_compile", &outcome.compile_table),
+                ("session_registry", &outcome.registry_table),
                 ("session_stats", &outcome.stats_table),
             ],
         )?;
@@ -1070,6 +1145,143 @@ pub fn shard(args: &mut Args) -> Result<()> {
             other.unwrap_or("<none>")
         ),
     }
+}
+
+// -------------------------------------------------------------- registry
+
+/// Resolve the registry a `decorr registry ...` action operates on:
+/// `--dir` wins, then the `DECORR_REGISTRY` environment variable.
+fn open_registry(dir: Option<String>) -> Result<crate::runtime::Registry> {
+    match dir {
+        Some(d) => crate::runtime::Registry::open(&d),
+        None => crate::runtime::Registry::from_env().with_context(|| {
+            format!(
+                "no registry named — pass --dir <path> or set {}",
+                crate::runtime::registry::REGISTRY_ENV
+            )
+        }),
+    }
+}
+
+/// `decorr registry inspect|gc|warm` — the operator surface over the
+/// cross-process compiled-artifact registry
+/// ([`runtime::registry`](crate::runtime::registry)). The registry named
+/// by `--dir` (falling back to `DECORR_REGISTRY`) is created on first
+/// touch.
+///
+/// * `registry inspect` prints one row per entry — content key, recorded
+///   name, codec, engine fingerprint, payload size, and health; corrupt
+///   entries are listed with their reason, not hidden.
+/// * `registry warm --artifacts <dir>` pre-populates portable source
+///   snapshots from every manifest/HLO pair under an artifact directory,
+///   so later processes (sweep workers, `decorr rank`) resolve sources
+///   with no artifact directory at all.
+/// * `registry gc [--keep key1,key2]` removes entries outside the keep
+///   set — plus anything corrupt regardless of key — and reports the
+///   bytes reclaimed.
+pub fn registry(args: &mut Args) -> Result<()> {
+    let dir = args.flag("dir");
+    match args.positional.first().map(String::as_str) {
+        Some("inspect") => {
+            args.finish()?;
+            let reg = open_registry(dir)?;
+            let entries = reg.inspect()?;
+            let mut table =
+                Table::new(&["key", "name", "codec", "fingerprint", "bytes", "health"]);
+            let mut corrupt = 0usize;
+            for e in &entries {
+                let health = match &e.corrupt {
+                    None => "ok".to_string(),
+                    Some(why) => {
+                        corrupt += 1;
+                        format!("CORRUPT: {why}")
+                    }
+                };
+                table.row(vec![
+                    e.key.clone(),
+                    e.name.clone(),
+                    e.codec.clone(),
+                    e.fingerprint.clone(),
+                    format!("{}", e.payload_len),
+                    health,
+                ]);
+            }
+            println!(
+                "registry {} — {} entries ({} corrupt):",
+                reg.dir().display(),
+                entries.len(),
+                corrupt
+            );
+            table.print();
+            Ok(())
+        }
+        Some("warm") => {
+            let artifacts = args.str_or("artifacts", "artifacts");
+            args.finish()?;
+            let reg = open_registry(dir)?;
+            let report = reg.warm_from_dir(std::path::Path::new(&artifacts))?;
+            println!(
+                "warmed registry {} from {artifacts}: {} scanned, {} stored, \
+                 {} already warm, {} malformed",
+                reg.dir().display(),
+                report.scanned,
+                report.stored,
+                report.skipped,
+                report.malformed
+            );
+            Ok(())
+        }
+        Some("gc") => {
+            let keep: std::collections::BTreeSet<String> = match args.flag("keep") {
+                Some(list) => list
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(String::from)
+                    .collect(),
+                None => Default::default(),
+            };
+            args.finish()?;
+            let reg = open_registry(dir)?;
+            let report = reg.gc(&keep)?;
+            println!(
+                "gc over registry {}: {} scanned, {} kept, {} removed, {} bytes freed",
+                reg.dir().display(),
+                report.scanned,
+                report.kept,
+                report.removed,
+                report.bytes_freed
+            );
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown registry action {:?} — usage: decorr registry inspect [--dir d] | \
+             decorr registry warm --artifacts <dir> [--dir d] | \
+             decorr registry gc [--keep key1,key2] [--dir d]",
+            other.unwrap_or("<none>")
+        ),
+    }
+}
+
+// ------------------------------------------------------------------ rank
+
+/// `decorr rank` — one DDP rank worker process. Dials the leader started
+/// by `decorr train --ranks K --rank-addr <addr>` (retrying while the
+/// leader is still binding), passes the content-key handshake
+/// ([`coordinator::ddp_net`](crate::coordinator::ddp_net)), then computes
+/// gradient shards until the leader sends shutdown or closes the
+/// connection. When `--artifacts` is absent on disk, the grad artifact's
+/// source resolves through the `DECORR_REGISTRY` warm store instead.
+pub fn rank(args: &mut Args) -> Result<()> {
+    let addr = args.str_required("addr")?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    args.finish()?;
+    let report = crate::coordinator::run_rank(&ServeAddr::parse(&addr), &artifacts)?;
+    println!(
+        "rank {} done: {} step(s) over artifact key {}",
+        report.rank, report.steps, report.key_hex
+    );
+    Ok(())
 }
 
 // ----------------------------------------------------------------- serve

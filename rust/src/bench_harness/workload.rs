@@ -10,7 +10,7 @@ use anyhow::{Context, Result};
 
 use crate::api::LossSpec;
 use crate::runtime::literal::{literal_f32, literal_i32, scalar};
-use crate::runtime::{artifact_paths, Artifact, Session, SessionStats};
+use crate::runtime::{artifact_paths, Artifact, Registry, Session, SessionStats, SharedSession};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
 
@@ -239,6 +239,12 @@ pub struct SessionBenchOutcome {
     pub compile_table: Table,
     /// Session counters after the run (compiles, hits, source reads, ...).
     pub stats_table: Table,
+    /// Registry-warm contender: loads resolved from the cross-process
+    /// registry by a session whose artifact directory does not exist.
+    pub registry_table: Table,
+    /// One-line registry efficacy summary (what CI greps for): warm
+    /// resolutions, artifact-dir reads, entries published this process.
+    pub registry_line: String,
     /// Smallest cached-reload speedup across the shapes.
     pub min_speedup: f64,
 }
@@ -255,7 +261,19 @@ pub fn session_compile_bench(budget: f64) -> Result<SessionBenchOutcome> {
     let alias = format!("{alias_of}_alias");
     synth.alias(&alias_of, &alias)?;
 
-    let session = Session::open(&synth.dir)?;
+    // Attach a cross-process registry: the `DECORR_REGISTRY` directory
+    // when set (so efficacy accumulates across bench processes — the CI
+    // warm-start smoke runs this twice against one registry), a private
+    // temp dir otherwise (so the registry contender always runs).
+    let (registry, reg_tmp) = match Registry::from_env() {
+        Some(reg) => (reg, None),
+        None => {
+            let dir = std::env::temp_dir().join(format!("decorr_synth_reg_{}", std::process::id()));
+            (Registry::open(&dir)?, Some(dir))
+        }
+    };
+    let session =
+        SharedSession::open_with_registry(&synth.dir, Some(registry.clone())).session()?;
     let mut table = Table::new(&[
         "artifact",
         "cold load (ms)",
@@ -293,10 +311,63 @@ pub fn session_compile_bench(budget: f64) -> Result<SessionBenchOutcome> {
         if deduped { "dedup hit" } else { "MISS" }.to_string(),
     ]);
 
-    let stats_table = session_stats_table(&session.stats());
+    // Registry-warm contender: a second shared core whose artifact
+    // directory does not exist — the situation a rank worker or repeat CI
+    // run is in — must resolve every name from the registry's portable
+    // source snapshots (published by the loads above). On a surface whose
+    // `exe_codec` round-trips executables the warm loads also skip the
+    // PJRT compile entirely; on the pinned xla-rs surface they recompile
+    // from the snapshot (the graceful-degradation contract).
+    let missing_dir = synth.dir.join("no-such-artifact-dir");
+    let warm_shared =
+        SharedSession::open_with_registry(&missing_dir, Some(registry.clone()));
+    let warm_session = warm_shared.session()?;
+    let mut registry_table = Table::new(&["artifact", "no-dir load (ms)", "resolution"]);
+    for name in &synth.names {
+        let t0 = Instant::now();
+        let artifact = warm_session.load(name)?;
+        let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+        SynthArtifacts::smoke(&artifact)?;
+        registry_table.row(vec![
+            name.clone(),
+            format!("{warm_ms:.2}"),
+            "registry source snapshot".into(),
+        ]);
+    }
+    let warm_stats = warm_session.stats();
+    let total = synth.names.len() as u64;
+    anyhow::ensure!(
+        warm_stats.registry_hits == total && warm_stats.source_reads == 0,
+        "registry warm start leaked to the artifact dir: {}/{total} hits, {} dir reads",
+        warm_stats.registry_hits,
+        warm_stats.source_reads
+    );
+    if crate::runtime::registry::exe_codec::supported() {
+        anyhow::ensure!(
+            warm_stats.compiles == 0,
+            "executable codec is supported but the warm run still compiled {} time(s)",
+            warm_stats.compiles
+        );
+    }
+    let stats = session.stats();
+    let registry_line = format!(
+        "registry warm start: {}/{total} loads resolved without an artifact dir \
+         ({} dir reads, {} warm compiles); entries published by this process: {}",
+        warm_stats.registry_hits,
+        warm_stats.source_reads,
+        warm_stats.compiles,
+        stats.registry_stores
+    );
+    if let Some(dir) = reg_tmp {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    let stats_table = session_stats_table(&stats);
     Ok(SessionBenchOutcome {
         compile_table: table,
         stats_table,
+        registry_table,
+        registry_line,
         min_speedup,
     })
 }
@@ -321,6 +392,18 @@ pub fn session_stats_table(stats: &SessionStats) -> Table {
         format!("{}", stats.source_reads),
     ]);
     table.row(vec!["execution arms".into(), format!("{}", stats.arms)]);
+    table.row(vec![
+        "registry hits".into(),
+        format!("{}", stats.registry_hits),
+    ]);
+    table.row(vec![
+        "registry misses".into(),
+        format!("{}", stats.registry_misses),
+    ]);
+    table.row(vec![
+        "registry stores".into(),
+        format!("{}", stats.registry_stores),
+    ]);
     table
 }
 

@@ -28,9 +28,11 @@ use crate::api::train::{DriverBuilder, TrainDriver};
 use crate::api::LossSpec;
 use crate::config::TrainConfig;
 use crate::data::{PreparedBatch, PreparedInputs, SslBatch};
-use crate::runtime::{ExecutionBinding, ParamStore, Session, SharedSession, TensorSpec};
+use crate::runtime::{Artifact, ExecutionBinding, Manifest, ParamStore, Session, SharedSession, TensorSpec};
 use crate::util::rng::Rng;
 use crate::util::tensor::Tensor;
+
+use super::ddp_net;
 
 use super::checkpoint::Checkpoint;
 use super::metrics::{MetricsLogger, StepMetrics};
@@ -40,20 +42,54 @@ use super::trainer::{
     TrainReport,
 };
 
-/// Work order broadcast to a worker for one step.
-struct ShardJob {
-    params: Arc<Vec<(String, Tensor)>>,
-    xa: Tensor,
-    xb: Tensor,
-    perm: Arc<Vec<u32>>,
+/// Work order broadcast to one shard for one step. `step` pins the job
+/// to a leader step so out-of-process backends can detect drift.
+pub(crate) struct ShardJob {
+    pub(crate) step: usize,
+    pub(crate) params: Arc<Vec<(String, Tensor)>>,
+    pub(crate) xa: Tensor,
+    pub(crate) xb: Tensor,
+    pub(crate) perm: Arc<Vec<u32>>,
 }
 
-/// Gradients + metrics returned by a worker.
-struct ShardResult {
-    grads: Vec<(String, Tensor)>,
-    loss: f32,
-    inv: f32,
-    reg: f32,
+/// Gradients + metrics returned by one shard.
+pub(crate) struct ShardResult {
+    pub(crate) grads: Vec<(String, Tensor)>,
+    pub(crate) loss: f32,
+    pub(crate) inv: f32,
+    pub(crate) reg: f32,
+}
+
+/// The gradient-exchange backend behind [`DdpTrainer`]: how shard jobs
+/// reach the K shard executors and how their results come back. The
+/// leader math (sharding, summation order, averaging, apply) is written
+/// once in `step_inner` against this trait, so every backend is
+/// bit-identical by construction:
+///
+/// * [`ThreadExchange`] — in-process worker threads over one shared
+///   session core (the historical simulated-DDP backend);
+/// * [`ddp_net::NetExchange`] — external rank processes over TCP/UDS
+///   (`decorr rank`), frames defined in [`ddp_net`].
+pub(crate) trait GradExchange {
+    /// Hand shard `wid` its job for this step.
+    fn dispatch(&mut self, wid: usize, job: ShardJob) -> Result<()>;
+    /// Block for shard `wid`'s gradients. Called in shard order — the
+    /// leader's accumulation order is part of the bit-identity contract.
+    fn collect(&mut self, wid: usize) -> Result<ShardResult>;
+    /// Short backend tag for console lines ("ddp" / "ddp-net").
+    fn label(&self) -> &'static str;
+}
+
+/// Which [`GradExchange`] backend [`DdpTrainer::from_parts`] builds.
+pub(crate) enum DdpBackend {
+    /// In-process worker threads (default).
+    Threads,
+    /// External rank processes connecting to `addr` (see
+    /// [`ddp_net::run_rank`]).
+    Net {
+        /// Endpoint the leader listens on.
+        addr: crate::serve::ServeAddr,
+    },
 }
 
 struct Worker {
@@ -62,15 +98,156 @@ struct Worker {
     handle: Option<JoinHandle<()>>,
 }
 
+/// In-process backend: one worker thread per shard, each holding its own
+/// session arm over the leader's shared core.
+struct ThreadExchange {
+    workers: Vec<Worker>,
+}
+
+impl GradExchange for ThreadExchange {
+    fn dispatch(&mut self, wid: usize, job: ShardJob) -> Result<()> {
+        self.workers[wid]
+            .tx
+            .send(job)
+            .map_err(|_| anyhow::anyhow!("worker {wid} died"))
+    }
+
+    fn collect(&mut self, wid: usize) -> Result<ShardResult> {
+        self.workers[wid]
+            .rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker channel closed"))?
+    }
+
+    fn label(&self) -> &'static str {
+        "ddp"
+    }
+}
+
+impl Drop for ThreadExchange {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            // Closing the job channel stops the worker loop.
+            let (tx, _rx) = mpsc::channel();
+            drop(std::mem::replace(&mut w.tx, tx));
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// The per-shard compute kernel, shared verbatim by the in-process
+/// worker threads and the out-of-process rank loop
+/// ([`ddp_net::run_rank`]): bind the grad artifact once, then per step
+/// refresh the broadcast parameters, execute, and parse the emitted
+/// gradients + metrics. One implementation means one set of numerics.
+pub(crate) struct ShardExecutor {
+    binding: ExecutionBinding,
+    manifest: Manifest,
+    param_specs: Vec<TensorSpec>,
+    params: ParamStore,
+    // Broadcast order is fixed across steps (the leader snapshots the
+    // same spec list every time); resolve name → broadcast index once,
+    // on the first job.
+    broadcast_order: Option<Vec<usize>>,
+}
+
+impl ShardExecutor {
+    /// Bind a compiled per-shard gradient artifact.
+    pub(crate) fn new(artifact: Arc<Artifact>) -> Result<ShardExecutor> {
+        let binding = ExecutionBinding::bind(artifact, &["params."], &["xa", "xb", "perm"])?;
+        let param_specs: Vec<TensorSpec> = binding
+            .manifest()
+            .inputs_with_prefix("params.")
+            .into_iter()
+            .cloned()
+            .collect();
+        let params = ParamStore::zeros(&param_specs.iter().collect::<Vec<_>>())?;
+        let manifest = binding.manifest().clone();
+        Ok(ShardExecutor {
+            binding,
+            manifest,
+            param_specs,
+            params,
+            broadcast_order: None,
+        })
+    }
+
+    /// One shard step: load the broadcast parameters, execute the grad
+    /// artifact on this shard's views, and split the emits into
+    /// gradients and scalar metrics.
+    pub(crate) fn execute(
+        &mut self,
+        bparams: &[(String, Tensor)],
+        xa: &Tensor,
+        xb: &Tensor,
+        perm: &[u32],
+    ) -> Result<ShardResult> {
+        let xa_lit = literal_f32(xa)?;
+        let xb_lit = literal_f32(xb)?;
+        let perm_lit = literal_i32(perm)?;
+        if self.broadcast_order.is_none() {
+            let mut order = Vec::with_capacity(self.param_specs.len());
+            for spec in &self.param_specs {
+                let idx = bparams
+                    .iter()
+                    .position(|(n, _)| n == &spec.name)
+                    .with_context(|| format!("broadcast missing {}", spec.name))?;
+                order.push(idx);
+            }
+            self.broadcast_order = Some(order);
+        }
+        let order = self.broadcast_order.as_ref().expect("resolved above");
+        for (spec, &bi) in self.param_specs.iter().zip(order.iter()) {
+            let (name, t) = &bparams[bi];
+            anyhow::ensure!(
+                name == &spec.name,
+                "broadcast order changed: expected {}, got {name}",
+                spec.name
+            );
+            self.params.put(&spec.name, literal_f32(t)?)?;
+        }
+        let emitted = self
+            .binding
+            .step(&mut [&mut self.params], &[&xa_lit, &xb_lit, &perm_lit])?;
+        let mut grads = Vec::new();
+        let mut loss = f32::NAN;
+        let mut inv = f32::NAN;
+        let mut reg = f32::NAN;
+        for (emit, lit) in self.binding.emits().iter().zip(emitted) {
+            if emit.name.starts_with("grads.") {
+                let spec = &self.manifest.outputs[emit.output_index];
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+                grads.push((emit.name.clone(), Tensor::from_vec(&spec.shape, data)));
+            } else {
+                match emit.name.as_str() {
+                    "loss" => loss = scalar(&lit)?,
+                    "inv" => inv = scalar(&lit)?,
+                    "reg" => reg = scalar(&lit)?,
+                    other => bail!("unexpected grad output '{other}'"),
+                }
+            }
+        }
+        Ok(ShardResult {
+            grads,
+            loss,
+            inv,
+            reg,
+        })
+    }
+}
+
 /// The DDP leader: owns the apply executable and the parameter store,
 /// delegates gradient computation to shard workers.
 pub struct DdpTrainer {
     /// Run configuration (batch size read from the grad manifest × shards).
     pub cfg: TrainConfig,
     shards: usize,
-    workers: Vec<Worker>,
-    // `Option` so `into_session` can move the arm out of a `Drop` type;
-    // `None` is unobservable (the taking method consumes `self`).
+    exchange: Box<dyn GradExchange>,
+    // `Option` so `into_session` can move the arm out without
+    // destructuring past the exchange's shutdown logic; `None` is
+    // unobservable (the taking method consumes `self`).
     session: Option<Session>,
     apply_binding: ExecutionBinding,
     params: ParamStore,
@@ -97,12 +274,15 @@ impl DdpTrainer {
 
     /// The real constructor, reached only through [`DriverBuilder`]. An
     /// existing `session` arm shares its `SharedSession` core with the
-    /// workers; `resume` replaces the init-checkpoint parameters.
+    /// workers; `resume` replaces the init-checkpoint parameters;
+    /// `backend` selects the gradient-exchange substrate (in-process
+    /// threads or external rank processes).
     pub(crate) fn from_parts(
         cfg: TrainConfig,
         shards: usize,
         session: Option<Session>,
         resume: Option<&Checkpoint>,
+        backend: DdpBackend,
     ) -> Result<DdpTrainer> {
         anyhow::ensure!(shards >= 1, "need at least one shard");
         // Spec-derived per-shard gradient artifact id.
@@ -168,10 +348,12 @@ impl DdpTrainer {
         let global_step = ckpt.step;
         let grads = ParamStore::zeros(&grad_specs.iter().collect::<Vec<_>>())?;
 
-        // Probe the worker artifact's manifest through the shared source
-        // cache — no compile on the leader, and the workers reuse the
-        // parsed source when they compile on their own threads.
-        let probe = shared.manifest(&grad_name)?;
+        // Probe the worker artifact's source through the shared cache —
+        // no compile on the leader, the workers reuse the parsed source
+        // when they compile on their own threads, and the content key
+        // pins out-of-process ranks to the exact same artifact bytes.
+        let src = shared.source(&grad_name)?;
+        let probe = src.manifest.clone();
         cfg.spec
             .validate_manifest(&probe, None)
             .with_context(|| format!("grad artifact {grad_name} vs configured spec"))?;
@@ -184,10 +366,29 @@ impl DdpTrainer {
             .meta_usize("d")
             .context("grad manifest missing meta.d")?;
 
-        let mut workers = Vec::with_capacity(shards);
-        for wid in 0..shards {
-            workers.push(spawn_worker(wid, shared.clone(), grad_name.clone())?);
-        }
+        let exchange: Box<dyn GradExchange> = match backend {
+            DdpBackend::Threads => {
+                let mut workers = Vec::with_capacity(shards);
+                for wid in 0..shards {
+                    workers.push(spawn_worker(wid, shared.clone(), grad_name.clone())?);
+                }
+                Box::new(ThreadExchange { workers })
+            }
+            DdpBackend::Net { addr } => Box::new(
+                ddp_net::NetExchange::accept(
+                    &addr,
+                    &ddp_net::Handshake {
+                        spec: cfg.spec.to_string(),
+                        preset: cfg.preset.clone(),
+                        grad_name: grad_name.clone(),
+                        key_hex: src.key.hex(),
+                        step0: global_step as u64,
+                        shards,
+                    },
+                )
+                .with_context(|| format!("accepting {shards} ranks on {addr}"))?,
+            ),
+        };
 
         let sched = LrSchedule::from_epochs(cfg.lr, cfg.warmup_epochs, cfg.epochs, cfg.steps_per_epoch);
         let metrics = if cfg.out_dir.is_empty() {
@@ -201,7 +402,7 @@ impl DdpTrainer {
         Ok(DdpTrainer {
             cfg,
             shards,
-            workers,
+            exchange,
             session: Some(session),
             apply_binding,
             params,
@@ -333,31 +534,27 @@ impl DdpTrainer {
             xa.shape()[0],
             self.batch_size()
         );
-        for (wid, worker) in self.workers.iter().enumerate() {
+        for wid in 0..self.shards {
             let job = ShardJob {
+                step: self.global_step,
                 params: host_params.clone(),
                 xa: slice_rows(xa, wid * self.shard_batch, self.shard_batch),
                 xb: slice_rows(xb, wid * self.shard_batch, self.shard_batch),
                 perm: perm.clone(),
             };
-            worker
-                .tx
-                .send(job)
-                .map_err(|_| anyhow::anyhow!("worker {wid} died"))?;
+            self.exchange.dispatch(wid, job)?;
         }
         let mut marshal_time = t_marshal.elapsed().as_secs_f64();
 
-        // Collect + average.
+        // Collect + average, always in shard order: the f32 summation
+        // order is part of the bit-identity contract across backends.
         let t_collect = Instant::now();
         let mut acc: Option<Vec<(String, Tensor)>> = None;
         let mut loss = 0.0f32;
         let mut inv = 0.0f32;
         let mut reg = 0.0f32;
-        for worker in &self.workers {
-            let result = worker
-                .rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("worker channel closed"))??;
+        for wid in 0..self.shards {
+            let result = self.exchange.collect(wid)?;
             loss += result.loss;
             inv += result.inv;
             reg += result.reg;
@@ -532,26 +729,14 @@ impl TrainDriver for DdpTrainer {
 
     fn format_step(&self, m: &StepMetrics, total: usize) -> String {
         format!(
-            "[ddp x{}] step {:>5}/{} loss {:.4} ({:.0} ms)",
+            "[{} x{}] step {:>5}/{} loss {:.4} ({:.0} ms)",
+            self.exchange.label(),
             self.shards,
             m.step,
             total,
             m.loss,
             m.step_time * 1e3
         )
-    }
-}
-
-impl Drop for DdpTrainer {
-    fn drop(&mut self) {
-        for w in &mut self.workers {
-            // Closing the job channel stops the worker loop.
-            let (tx, _rx) = mpsc::channel();
-            drop(std::mem::replace(&mut w.tx, tx));
-            if let Some(h) = w.handle.take() {
-                let _ = h.join();
-            }
-        }
     }
 }
 
@@ -581,18 +766,10 @@ fn spawn_worker(wid: usize, shared: SharedSession, grad_name: String) -> Result<
             let setup = (|| -> Result<_> {
                 let session = shared.session()?;
                 let artifact = session.load(&grad_name)?;
-                let binding =
-                    ExecutionBinding::bind(artifact, &["params."], &["xa", "xb", "perm"])?;
-                let param_specs: Vec<TensorSpec> = binding
-                    .manifest()
-                    .inputs_with_prefix("params.")
-                    .into_iter()
-                    .cloned()
-                    .collect();
-                let params = ParamStore::zeros(&param_specs.iter().collect::<Vec<_>>())?;
-                Ok((session, binding, param_specs, params))
+                let exec = ShardExecutor::new(artifact)?;
+                Ok((session, exec))
             })();
-            let (_session, binding, param_specs, mut params) = match setup {
+            let (_session, mut exec) = match setup {
                 Ok(v) => {
                     let _ = ready_tx.send(Ok(()));
                     v
@@ -602,67 +779,8 @@ fn spawn_worker(wid: usize, shared: SharedSession, grad_name: String) -> Result<
                     return;
                 }
             };
-            // Broadcast order is fixed across steps (the leader snapshots
-            // the same spec list every time); resolve name → broadcast
-            // index once, on the first job.
-            let mut broadcast_order: Option<Vec<usize>> = None;
-            let manifest = binding.manifest().clone();
             while let Ok(job) = job_rx.recv() {
-                let result = (|| -> Result<ShardResult> {
-                    let xa_lit = literal_f32(&job.xa)?;
-                    let xb_lit = literal_f32(&job.xb)?;
-                    let perm_lit = literal_i32(&job.perm)?;
-                    if broadcast_order.is_none() {
-                        let mut order = Vec::with_capacity(param_specs.len());
-                        for spec in &param_specs {
-                            let idx = job
-                                .params
-                                .iter()
-                                .position(|(n, _)| n == &spec.name)
-                                .with_context(|| format!("broadcast missing {}", spec.name))?;
-                            order.push(idx);
-                        }
-                        broadcast_order = Some(order);
-                    }
-                    let order = broadcast_order.as_ref().expect("resolved above");
-                    for (spec, &bi) in param_specs.iter().zip(order.iter()) {
-                        let (name, t) = &job.params[bi];
-                        anyhow::ensure!(
-                            name == &spec.name,
-                            "broadcast order changed: expected {}, got {name}",
-                            spec.name
-                        );
-                        params.put(&spec.name, literal_f32(t)?)?;
-                    }
-                    let emitted =
-                        binding.step(&mut [&mut params], &[&xa_lit, &xb_lit, &perm_lit])?;
-                    let mut grads = Vec::new();
-                    let mut loss = f32::NAN;
-                    let mut inv = f32::NAN;
-                    let mut reg = f32::NAN;
-                    for (emit, lit) in binding.emits().iter().zip(emitted) {
-                        if emit.name.starts_with("grads.") {
-                            let spec = &manifest.outputs[emit.output_index];
-                            let data = lit
-                                .to_vec::<f32>()
-                                .map_err(|e| anyhow::anyhow!("{e}"))?;
-                            grads.push((emit.name.clone(), Tensor::from_vec(&spec.shape, data)));
-                        } else {
-                            match emit.name.as_str() {
-                                "loss" => loss = scalar(&lit)?,
-                                "inv" => inv = scalar(&lit)?,
-                                "reg" => reg = scalar(&lit)?,
-                                other => bail!("unexpected grad output '{other}'"),
-                            }
-                        }
-                    }
-                    Ok(ShardResult {
-                        grads,
-                        loss,
-                        inv,
-                        reg,
-                    })
-                })();
+                let result = exec.execute(&job.params, &job.xa, &job.xb, &job.perm);
                 if res_tx.send(result).is_err() {
                     break;
                 }

@@ -1,0 +1,1171 @@
+//! Rank-over-socket DDP: the out-of-process gradient exchange behind
+//! `decorr train --ranks K --rank-addr <addr>` and `decorr rank`.
+//!
+//! The in-process [`DdpTrainer`](super::DdpTrainer) simulates data
+//! parallelism with worker threads over one shared session core. This
+//! module breaks the workers out into real processes: the leader listens
+//! on a TCP or Unix-domain endpoint (the [`crate::serve::ServeAddr`]
+//! grammar), K rank processes connect, and gradients flow over
+//! length-prefixed binary frames with the same framing discipline as the
+//! serving protocol ([`crate::serve::protocol`] — its `read_frame` /
+//! `write_frame` are reused verbatim under a distinct magic).
+//!
+//! ## Frame layout
+//!
+//! Every frame (either direction) is an 8-byte header followed by a body:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"DCRD"
+//! 4       4     body length (u32 LE, <= MAX_FRAME)
+//! 8       len   body: u8 version (1), u8 kind, payload
+//! ```
+//!
+//! All integers are LE; floats are IEEE-754 f32 LE, so tensors cross the
+//! wire **bit-exactly** — a prerequisite for the bit-identity contract
+//! below. Strings are u16 length + utf8; tensors are u8 ndim, u32 dims,
+//! then row-major f32 data. Message kinds:
+//!
+//! ```text
+//! 1 HELLO    rank → leader   engine fingerprint (informational)
+//! 2 WELCOME  leader → rank   rank id, shard count, step0, spec string,
+//!                            preset, grad artifact name, content key
+//! 3 READY    rank → leader   echoed content key of the rank's artifact
+//! 4 JOB      leader → rank   step, broadcast params, xa/xb shard, perm
+//! 5 GRADS    rank → leader   step echo, loss/inv/reg, named gradients
+//! 6 SHUTDOWN leader → rank   clean end of run
+//! 7 ERROR    either          wire code (see [`DdpNetError::code`]) + text
+//! ```
+//!
+//! ## Handshake pinning
+//!
+//! The per-rank handshake pins **spec and step**: WELCOME names the grad
+//! artifact and its [`ContentKey`](crate::runtime::ContentKey) hex as the
+//! leader hashed it; the rank resolves the same name through its own
+//! session (artifact directory or [`crate::runtime::Registry`] snapshot —
+//! ranks warm from the shared registry when `DECORR_REGISTRY` points at
+//! one) and must echo an identical key in READY, otherwise both sides
+//! abort with [`DdpNetError::KeyMismatch`]. Content equality is stronger
+//! than name equality: two checkouts with different artifact bytes
+//! cannot silently train on disagreeing graphs. Every JOB carries the
+//! leader's step and every GRADS echoes it; a rank that drifts answers
+//! with [`DdpNetError::StepMismatch`] and the run stops.
+//!
+//! ## Bit-identity
+//!
+//! [`NetExchange`] implements the same `GradExchange` trait as the
+//! thread backend, and ranks execute through the same `ShardExecutor`,
+//! so the leader's sharding, f32 summation order, averaging, and apply
+//! step are shared code — a K-rank socket run is bit-identical to a
+//! K-shard thread run at the same seed (pinned by `tests/ddp_net.rs`
+//! against real rank subprocesses).
+
+use std::io::{Read, Write};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::SharedSession;
+use crate::serve::net::{Listener, ServeAddr, Stream};
+use crate::serve::protocol::{read_frame, write_frame, ServeError};
+use crate::util::tensor::Tensor;
+
+use super::ddp::{GradExchange, ShardExecutor, ShardJob, ShardResult};
+
+/// Frame magic for every ddp-net message (both directions).
+pub const MAGIC: [u8; 4] = *b"DCRD";
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Hard ceiling on a frame body (256 MiB): a JOB frame carries a full
+/// parameter broadcast, which dwarfs the serving protocol's payloads.
+pub const MAX_FRAME: usize = 1 << 28;
+/// Ceiling on any string field (spec, names, error text).
+pub const MAX_STR_LEN: usize = 4096;
+/// Ceiling on tensor rank on the wire (mirrors the shard format's cap).
+pub const MAX_TENSOR_RANK: usize = 8;
+
+/// Read timeout on leader-side streams: generous enough to cover a rank
+/// compiling its artifact during the handshake, short enough that a
+/// wedged rank fails the run instead of hanging it forever.
+const LEADER_IO_TIMEOUT: Duration = Duration::from_secs(600);
+/// How long [`run_rank`] keeps retrying the initial connect while the
+/// leader is still starting up.
+const CONNECT_RETRY: Duration = Duration::from_secs(60);
+
+/// Typed ddp-net failure. Framing errors mean the byte stream can no
+/// longer be trusted and the connection closes; the run aborts either
+/// way — unlike serving, a training step cannot proceed minus a shard.
+#[derive(Debug)]
+pub enum DdpNetError {
+    /// Frame header did not start with [`MAGIC`].
+    BadMagic {
+        /// The four bytes actually read.
+        got: [u8; 4],
+    },
+    /// Length prefix exceeds [`MAX_FRAME`] (or a field overflowed).
+    Oversize {
+        /// Declared length.
+        len: usize,
+        /// The ceiling it exceeded.
+        max: usize,
+    },
+    /// Body ended before the declared content: `need` bytes wanted,
+    /// `got` available.
+    Truncated {
+        /// Bytes the decoder needed.
+        need: usize,
+        /// Bytes actually present.
+        got: usize,
+    },
+    /// Unknown protocol version byte.
+    BadVersion(u8),
+    /// Unknown message kind tag.
+    UnknownKind(u8),
+    /// A string field failed utf8 decoding or exceeded [`MAX_STR_LEN`].
+    BadString {
+        /// Why the field was rejected.
+        reason: String,
+    },
+    /// The peer sent a well-formed message that is wrong for the current
+    /// protocol state (e.g. GRADS during the handshake).
+    Handshake {
+        /// What went wrong.
+        reason: String,
+    },
+    /// A JOB/GRADS step number disagreed with the pinned sequence.
+    StepMismatch {
+        /// Step the receiver expected.
+        expect: u64,
+        /// Step the frame carried.
+        got: u64,
+    },
+    /// The rank's artifact content key differs from the leader's — the
+    /// two processes would train on different graphs.
+    KeyMismatch {
+        /// Leader-side content key (hex).
+        leader: String,
+        /// Rank-side content key (hex).
+        rank: String,
+    },
+    /// Shard execution failed on the rank after a well-formed JOB.
+    Exec(String),
+    /// The peer reported a typed error over the wire.
+    Remote {
+        /// Wire code of the remote error.
+        code: u16,
+        /// Human-readable detail.
+        detail: String,
+    },
+    /// The peer closed the stream or refused the I/O.
+    Io(std::io::Error),
+    /// Clean end of stream between frames (a rank treats this as the
+    /// leader finishing without a SHUTDOWN frame).
+    Closed,
+}
+
+impl std::fmt::Display for DdpNetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DdpNetError::BadMagic { got } => {
+                write!(f, "bad ddp frame magic {:02x?} (expected DCRD)", got)
+            }
+            DdpNetError::Oversize { len, max } => {
+                write!(f, "ddp frame of {len} bytes exceeds the {max}-byte ceiling")
+            }
+            DdpNetError::Truncated { need, got } => {
+                write!(f, "truncated ddp frame: needed {need} bytes, had {got}")
+            }
+            DdpNetError::BadVersion(v) => write!(f, "unsupported ddp protocol version {v}"),
+            DdpNetError::UnknownKind(k) => write!(f, "unknown ddp message kind {k}"),
+            DdpNetError::BadString { reason } => write!(f, "bad string field: {reason}"),
+            DdpNetError::Handshake { reason } => write!(f, "ddp handshake failed: {reason}"),
+            DdpNetError::StepMismatch { expect, got } => {
+                write!(f, "step drift: expected step {expect}, frame carried {got}")
+            }
+            DdpNetError::KeyMismatch { leader, rank } => write!(
+                f,
+                "artifact content mismatch: leader has {leader}, rank has {rank}"
+            ),
+            DdpNetError::Exec(msg) => write!(f, "shard execution failed: {msg}"),
+            DdpNetError::Remote { code, detail } => {
+                write!(f, "peer reported error {code}: {detail}")
+            }
+            DdpNetError::Io(e) => write!(f, "ddp i/o: {e}"),
+            DdpNetError::Closed => write!(f, "connection closed"),
+        }
+    }
+}
+
+impl std::error::Error for DdpNetError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DdpNetError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for DdpNetError {
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            DdpNetError::Closed
+        } else {
+            DdpNetError::Io(e)
+        }
+    }
+}
+
+impl From<ServeError> for DdpNetError {
+    fn from(e: ServeError) -> Self {
+        match e {
+            ServeError::BadMagic { got } => DdpNetError::BadMagic { got },
+            ServeError::Oversize { len, max } => DdpNetError::Oversize { len, max },
+            ServeError::Truncated { need, got } => DdpNetError::Truncated { need, got },
+            ServeError::Io(e) => DdpNetError::Io(e),
+            ServeError::Closed => DdpNetError::Closed,
+            // read_frame/write_frame only produce the framing subset
+            // above; anything else is a programming error surfaced as a
+            // handshake failure rather than a panic.
+            other => DdpNetError::Handshake {
+                reason: other.to_string(),
+            },
+        }
+    }
+}
+
+impl DdpNetError {
+    /// Stable wire code for ERROR frames.
+    pub fn code(&self) -> u16 {
+        match self {
+            DdpNetError::BadMagic { .. } => 1,
+            DdpNetError::Oversize { .. } => 2,
+            DdpNetError::Truncated { .. } => 3,
+            DdpNetError::BadVersion(_) => 4,
+            DdpNetError::UnknownKind(_) => 5,
+            DdpNetError::BadString { .. } => 6,
+            DdpNetError::Handshake { .. } => 7,
+            DdpNetError::StepMismatch { .. } => 8,
+            DdpNetError::KeyMismatch { .. } => 9,
+            DdpNetError::Exec(_) => 10,
+            DdpNetError::Remote { .. } => 11,
+            DdpNetError::Io(_) => 12,
+            DdpNetError::Closed => 13,
+        }
+    }
+}
+
+// ------------------------------------------------------------- messages
+
+const KIND_HELLO: u8 = 1;
+const KIND_WELCOME: u8 = 2;
+const KIND_READY: u8 = 3;
+const KIND_JOB: u8 = 4;
+const KIND_GRADS: u8 = 5;
+const KIND_SHUTDOWN: u8 = 6;
+const KIND_ERROR: u8 = 7;
+
+/// Rank → leader greeting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hello {
+    /// The rank's engine fingerprint (informational — the exchange ships
+    /// host f32s, so heterogeneous engines are allowed).
+    pub fingerprint: String,
+}
+
+/// Leader → rank handshake: everything a rank needs to pin itself to
+/// this run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Welcome {
+    /// This rank's id (0-based, also its shard index).
+    pub rank: u32,
+    /// Total shard count K.
+    pub shards: u32,
+    /// First step the leader will dispatch (resume position).
+    pub step0: u64,
+    /// Loss-spec grammar string (informational; the artifact key is the
+    /// binding pin).
+    pub spec: String,
+    /// Preset name.
+    pub preset: String,
+    /// Per-shard gradient artifact name the rank must load.
+    pub grad_name: String,
+    /// Leader-side content key (hex) of that artifact.
+    pub key_hex: String,
+}
+
+/// Rank → leader handshake completion: the rank compiled its artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ready {
+    /// Content key (hex) of the artifact the rank resolved — must equal
+    /// the leader's.
+    pub key_hex: String,
+}
+
+/// Leader → rank work order for one step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobMsg {
+    /// Leader step this job belongs to.
+    pub step: u64,
+    /// Broadcast parameter snapshot, in the leader's spec order.
+    pub params: Vec<(String, Tensor)>,
+    /// This shard's rows of view A.
+    pub xa: Tensor,
+    /// This shard's rows of view B.
+    pub xb: Tensor,
+    /// The step's §4.3 permutation (shared by all shards).
+    pub perm: Vec<u32>,
+}
+
+/// Rank → leader result for one step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GradsMsg {
+    /// Echo of the job's step.
+    pub step: u64,
+    /// Shard loss.
+    pub loss: f32,
+    /// Shard invariance term.
+    pub inv: f32,
+    /// Shard regularizer term.
+    pub reg: f32,
+    /// Named shard gradients, in emit order.
+    pub grads: Vec<(String, Tensor)>,
+}
+
+/// A decoded ddp-net message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Rank greeting.
+    Hello(Hello),
+    /// Leader handshake.
+    Welcome(Welcome),
+    /// Rank handshake completion.
+    Ready(Ready),
+    /// Per-step work order.
+    Job(JobMsg),
+    /// Per-step result.
+    Grads(GradsMsg),
+    /// Clean end of run.
+    Shutdown,
+    /// Typed failure relayed over the wire.
+    Error {
+        /// Wire code (see [`DdpNetError::code`]).
+        code: u16,
+        /// Human-readable detail.
+        detail: String,
+    },
+}
+
+// ------------------------------------------------------------- encoding
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = &s.as_bytes()[..s.len().min(MAX_STR_LEN)];
+    put_u16(out, bytes.len() as u16);
+    out.extend_from_slice(bytes);
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    out.push(t.shape().len() as u8);
+    for &d in t.shape() {
+        put_u32(out, d as u32);
+    }
+    out.reserve(t.data().len() * 4);
+    for v in t.data() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_named_tensors(out: &mut Vec<u8>, ts: &[(String, Tensor)]) {
+    put_u32(out, ts.len() as u32);
+    for (name, t) in ts {
+        put_str(out, name);
+        put_tensor(out, t);
+    }
+}
+
+fn frame(body: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+fn body(kind: u8) -> Vec<u8> {
+    vec![VERSION, kind]
+}
+
+/// Encode a JOB frame directly from borrowed leader-side state, so the
+/// per-step hot path never clones the parameter snapshot into an owned
+/// [`JobMsg`] first.
+pub fn encode_job(
+    step: u64,
+    params: &[(String, Tensor)],
+    xa: &Tensor,
+    xb: &Tensor,
+    perm: &[u32],
+) -> Vec<u8> {
+    let mut b = body(KIND_JOB);
+    put_u64(&mut b, step);
+    put_u32(&mut b, perm.len() as u32);
+    for &p in perm {
+        put_u32(&mut b, p);
+    }
+    put_tensor(&mut b, xa);
+    put_tensor(&mut b, xb);
+    put_named_tensors(&mut b, params);
+    frame(b)
+}
+
+/// Encode one message into a complete wire frame (header + body).
+pub fn encode_msg(msg: &Msg) -> Vec<u8> {
+    match msg {
+        Msg::Hello(h) => {
+            let mut b = body(KIND_HELLO);
+            put_str(&mut b, &h.fingerprint);
+            frame(b)
+        }
+        Msg::Welcome(w) => {
+            let mut b = body(KIND_WELCOME);
+            put_u32(&mut b, w.rank);
+            put_u32(&mut b, w.shards);
+            put_u64(&mut b, w.step0);
+            put_str(&mut b, &w.spec);
+            put_str(&mut b, &w.preset);
+            put_str(&mut b, &w.grad_name);
+            put_str(&mut b, &w.key_hex);
+            frame(b)
+        }
+        Msg::Ready(r) => {
+            let mut b = body(KIND_READY);
+            put_str(&mut b, &r.key_hex);
+            frame(b)
+        }
+        Msg::Job(j) => encode_job(j.step, &j.params, &j.xa, &j.xb, &j.perm),
+        Msg::Grads(g) => {
+            let mut b = body(KIND_GRADS);
+            put_u64(&mut b, g.step);
+            put_f32(&mut b, g.loss);
+            put_f32(&mut b, g.inv);
+            put_f32(&mut b, g.reg);
+            put_named_tensors(&mut b, &g.grads);
+            frame(b)
+        }
+        Msg::Shutdown => frame(body(KIND_SHUTDOWN)),
+        Msg::Error { code, detail } => {
+            let mut b = body(KIND_ERROR);
+            put_u16(&mut b, *code);
+            put_str(&mut b, detail);
+            frame(b)
+        }
+    }
+}
+
+// ------------------------------------------------------------- decoding
+
+/// Bounds-checked cursor over one frame body: every overrun is a typed
+/// [`DdpNetError::Truncated`], never a slice panic.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DdpNetError> {
+        let end = self.off.checked_add(n).ok_or(DdpNetError::Truncated {
+            need: n,
+            got: self.buf.len().saturating_sub(self.off),
+        })?;
+        if end > self.buf.len() {
+            return Err(DdpNetError::Truncated {
+                need: n,
+                got: self.buf.len() - self.off,
+            });
+        }
+        let s = &self.buf[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, DdpNetError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, DdpNetError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, DdpNetError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, DdpNetError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32(&mut self) -> Result<f32, DdpNetError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn string(&mut self) -> Result<String, DdpNetError> {
+        let len = self.u16()? as usize;
+        if len > MAX_STR_LEN {
+            return Err(DdpNetError::BadString {
+                reason: format!("string field of {len} bytes exceeds {MAX_STR_LEN}"),
+            });
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| DdpNetError::BadString {
+            reason: format!("not utf8: {e}"),
+        })
+    }
+
+    fn tensor(&mut self) -> Result<Tensor, DdpNetError> {
+        let ndim = self.u8()? as usize;
+        if ndim > MAX_TENSOR_RANK {
+            return Err(DdpNetError::Oversize {
+                len: ndim,
+                max: MAX_TENSOR_RANK,
+            });
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        let mut count = 1usize;
+        for _ in 0..ndim {
+            let d = self.u32()? as usize;
+            count = count.checked_mul(d).ok_or(DdpNetError::Oversize {
+                len: usize::MAX,
+                max: MAX_FRAME,
+            })?;
+            shape.push(d);
+        }
+        let bytes = self.take(count.checked_mul(4).ok_or(DdpNetError::Oversize {
+            len: usize::MAX,
+            max: MAX_FRAME,
+        })?)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Tensor::from_vec(&shape, data))
+    }
+
+    fn named_tensors(&mut self) -> Result<Vec<(String, Tensor)>, DdpNetError> {
+        let count = self.u32()? as usize;
+        // The count field is attacker-controlled; cap the preallocation
+        // by what the remaining body could possibly hold.
+        let mut out = Vec::with_capacity(count.min(self.buf.len() / 4));
+        for _ in 0..count {
+            let name = self.string()?;
+            let t = self.tensor()?;
+            out.push((name, t));
+        }
+        Ok(out)
+    }
+}
+
+/// Decode one frame body (the bytes after the 8-byte header).
+pub fn decode_msg(bytes: &[u8]) -> Result<Msg, DdpNetError> {
+    let mut c = Cursor::new(bytes);
+    let version = c.u8()?;
+    if version != VERSION {
+        return Err(DdpNetError::BadVersion(version));
+    }
+    match c.u8()? {
+        KIND_HELLO => Ok(Msg::Hello(Hello {
+            fingerprint: c.string()?,
+        })),
+        KIND_WELCOME => Ok(Msg::Welcome(Welcome {
+            rank: c.u32()?,
+            shards: c.u32()?,
+            step0: c.u64()?,
+            spec: c.string()?,
+            preset: c.string()?,
+            grad_name: c.string()?,
+            key_hex: c.string()?,
+        })),
+        KIND_READY => Ok(Msg::Ready(Ready {
+            key_hex: c.string()?,
+        })),
+        KIND_JOB => {
+            let step = c.u64()?;
+            let perm_len = c.u32()? as usize;
+            if perm_len > MAX_FRAME / 4 {
+                return Err(DdpNetError::Oversize {
+                    len: perm_len,
+                    max: MAX_FRAME / 4,
+                });
+            }
+            let mut perm = Vec::with_capacity(perm_len.min(bytes.len() / 4));
+            for _ in 0..perm_len {
+                perm.push(c.u32()?);
+            }
+            let xa = c.tensor()?;
+            let xb = c.tensor()?;
+            let params = c.named_tensors()?;
+            Ok(Msg::Job(JobMsg {
+                step,
+                params,
+                xa,
+                xb,
+                perm,
+            }))
+        }
+        KIND_GRADS => {
+            let step = c.u64()?;
+            let loss = c.f32()?;
+            let inv = c.f32()?;
+            let reg = c.f32()?;
+            let grads = c.named_tensors()?;
+            Ok(Msg::Grads(GradsMsg {
+                step,
+                loss,
+                inv,
+                reg,
+                grads,
+            }))
+        }
+        KIND_SHUTDOWN => Ok(Msg::Shutdown),
+        KIND_ERROR => Ok(Msg::Error {
+            code: c.u16()?,
+            detail: c.string()?,
+        }),
+        other => Err(DdpNetError::UnknownKind(other)),
+    }
+}
+
+/// Read one message from the stream (framing via the serving protocol's
+/// `read_frame` under the ddp magic).
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg, DdpNetError> {
+    let bytes = read_frame(r, MAGIC, MAX_FRAME)?;
+    decode_msg(&bytes)
+}
+
+/// Write one message to the stream.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<(), DdpNetError> {
+    write_frame(w, &encode_msg(msg)).map_err(DdpNetError::from)
+}
+
+/// Short tag for protocol-state errors — never the Debug form, which
+/// would dump whole tensors into an error string.
+fn kind_of(m: &Msg) -> &'static str {
+    match m {
+        Msg::Hello(_) => "HELLO",
+        Msg::Welcome(_) => "WELCOME",
+        Msg::Ready(_) => "READY",
+        Msg::Job(_) => "JOB",
+        Msg::Grads(_) => "GRADS",
+        Msg::Shutdown => "SHUTDOWN",
+        Msg::Error { .. } => "ERROR",
+    }
+}
+
+/// Best-effort error relay before tearing a connection down.
+fn relay_error<W: Write>(w: &mut W, err: &DdpNetError) {
+    let _ = write_msg(
+        w,
+        &Msg::Error {
+            code: err.code(),
+            detail: err.to_string(),
+        },
+    );
+}
+
+// -------------------------------------------------------------- leader
+
+/// Everything the leader pins a connecting rank to (see the module docs
+/// on handshake pinning).
+pub(crate) struct Handshake {
+    /// Loss-spec grammar string.
+    pub(crate) spec: String,
+    /// Preset name.
+    pub(crate) preset: String,
+    /// Per-shard gradient artifact name.
+    pub(crate) grad_name: String,
+    /// Leader-side content key (hex) of that artifact.
+    pub(crate) key_hex: String,
+    /// First step that will be dispatched.
+    pub(crate) step0: u64,
+    /// Shard count K.
+    pub(crate) shards: usize,
+}
+
+/// The socket-backed gradient exchange: K connected, handshaken rank
+/// streams, addressed by shard id. Implements the same `GradExchange`
+/// contract as the thread backend.
+pub(crate) struct NetExchange {
+    peers: Vec<Stream>,
+    last_step: u64,
+}
+
+impl NetExchange {
+    /// Bind `addr`, accept and handshake exactly `hs.shards` ranks (in
+    /// connection order — the i-th connection becomes rank i), and
+    /// return the ready exchange. The listener closes afterwards:
+    /// membership is fixed for the run.
+    pub(crate) fn accept(addr: &ServeAddr, hs: &Handshake) -> Result<NetExchange> {
+        let (listener, actual) = Listener::bind(addr)
+            .with_context(|| format!("binding ddp leader endpoint {addr}"))?;
+        let mut peers = Vec::with_capacity(hs.shards);
+        for rank in 0..hs.shards {
+            let mut stream = listener
+                .accept()
+                .with_context(|| format!("accepting rank {rank} on {actual}"))?;
+            stream
+                .set_read_timeout(Some(LEADER_IO_TIMEOUT))
+                .context("setting rank stream timeout")?;
+            Self::handshake(&mut stream, rank as u32, hs)
+                .with_context(|| format!("handshaking rank {rank}"))?;
+            peers.push(stream);
+        }
+        Ok(NetExchange {
+            peers,
+            last_step: 0,
+        })
+    }
+
+    fn handshake(stream: &mut Stream, rank: u32, hs: &Handshake) -> Result<()> {
+        match read_msg(stream)? {
+            Msg::Hello(_) => {}
+            Msg::Error { code, detail } => bail!("rank reported error {code}: {detail}"),
+            other => {
+                let err = DdpNetError::Handshake {
+                    reason: format!("expected HELLO, got {}", kind_of(&other)),
+                };
+                relay_error(stream, &err);
+                return Err(err.into());
+            }
+        }
+        write_msg(
+            stream,
+            &Msg::Welcome(Welcome {
+                rank,
+                shards: hs.shards as u32,
+                step0: hs.step0,
+                spec: hs.spec.clone(),
+                preset: hs.preset.clone(),
+                grad_name: hs.grad_name.clone(),
+                key_hex: hs.key_hex.clone(),
+            }),
+        )?;
+        match read_msg(stream)? {
+            Msg::Ready(r) => {
+                if r.key_hex != hs.key_hex {
+                    let err = DdpNetError::KeyMismatch {
+                        leader: hs.key_hex.clone(),
+                        rank: r.key_hex,
+                    };
+                    relay_error(stream, &err);
+                    return Err(err.into());
+                }
+                Ok(())
+            }
+            Msg::Error { code, detail } => bail!("rank reported error {code}: {detail}"),
+            other => {
+                let err = DdpNetError::Handshake {
+                    reason: format!("expected READY, got {}", kind_of(&other)),
+                };
+                relay_error(stream, &err);
+                Err(err.into())
+            }
+        }
+    }
+}
+
+impl GradExchange for NetExchange {
+    fn dispatch(&mut self, wid: usize, job: ShardJob) -> Result<()> {
+        self.last_step = job.step as u64;
+        let frame = encode_job(job.step as u64, &job.params, &job.xa, &job.xb, &job.perm);
+        write_frame(&mut self.peers[wid], &frame)
+            .map_err(DdpNetError::from)
+            .with_context(|| format!("dispatching step {} to rank {wid}", job.step))
+    }
+
+    fn collect(&mut self, wid: usize) -> Result<ShardResult> {
+        match read_msg(&mut self.peers[wid])
+            .with_context(|| format!("collecting gradients from rank {wid}"))?
+        {
+            Msg::Grads(g) => {
+                anyhow::ensure!(
+                    g.step == self.last_step,
+                    DdpNetError::StepMismatch {
+                        expect: self.last_step,
+                        got: g.step,
+                    }
+                );
+                Ok(ShardResult {
+                    grads: g.grads,
+                    loss: g.loss,
+                    inv: g.inv,
+                    reg: g.reg,
+                })
+            }
+            Msg::Error { code, detail } => {
+                bail!("rank {wid} failed at step {}: {detail} (wire code {code})", self.last_step)
+            }
+            other => bail!("rank {wid} sent {} where GRADS was expected", kind_of(&other)),
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        "ddp-net"
+    }
+}
+
+impl Drop for NetExchange {
+    fn drop(&mut self) {
+        for peer in &mut self.peers {
+            // Best-effort clean shutdown; ranks also treat a plain close
+            // as end of run.
+            let _ = write_msg(peer, &Msg::Shutdown);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rank
+
+/// What [`run_rank`] did, for the CLI summary line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RankReport {
+    /// Rank id assigned by the leader.
+    pub rank: usize,
+    /// Steps executed.
+    pub steps: u64,
+    /// Content key (hex) of the gradient artifact served.
+    pub key_hex: String,
+}
+
+fn connect_with_retry(addr: &ServeAddr, budget: Duration) -> Result<Stream> {
+    let deadline = Instant::now() + budget;
+    loop {
+        match Stream::connect(addr) {
+            Ok(s) => return Ok(s),
+            // The leader may still be starting: refused while its socket
+            // backlog doesn't exist yet, not-found while a unix socket
+            // path hasn't been bound.
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::ConnectionRefused | std::io::ErrorKind::NotFound
+                ) && Instant::now() < deadline =>
+            {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("connecting to ddp leader at {addr}"))
+            }
+        }
+    }
+}
+
+/// The rank worker loop behind `decorr rank`: connect to the leader at
+/// `addr`, handshake (pinning this process to the leader's artifact
+/// content key and step sequence), then serve JOB frames until SHUTDOWN
+/// or a clean close.
+///
+/// The artifact resolves through a [`SharedSession`] over
+/// `artifact_dir`, which consults the compiled-artifact
+/// [`Registry`](crate::runtime::Registry) when `DECORR_REGISTRY` is set —
+/// a rank on a machine without the artifact directory warms from the
+/// registry's source snapshots instead.
+pub fn run_rank(addr: &ServeAddr, artifact_dir: &str) -> Result<RankReport> {
+    let shared = SharedSession::open(artifact_dir);
+    let session = shared.session().context("opening PJRT session for rank")?;
+    let mut stream = connect_with_retry(addr, CONNECT_RETRY)?;
+
+    write_msg(
+        &mut stream,
+        &Msg::Hello(Hello {
+            fingerprint: session.engine().fingerprint(),
+        }),
+    )
+    .context("sending HELLO")?;
+    let welcome = match read_msg(&mut stream).context("awaiting WELCOME")? {
+        Msg::Welcome(w) => w,
+        Msg::Error { code, detail } => bail!("leader rejected handshake ({code}): {detail}"),
+        other => bail!("expected WELCOME, got {}", kind_of(&other)),
+    };
+
+    // Pin to the leader's artifact *content*, not just its name.
+    let src = shared
+        .source(&welcome.grad_name)
+        .with_context(|| format!("resolving grad artifact {}", welcome.grad_name))?;
+    let key_hex = src.key.hex();
+    if key_hex != welcome.key_hex {
+        let err = DdpNetError::KeyMismatch {
+            leader: welcome.key_hex.clone(),
+            rank: key_hex.clone(),
+        };
+        relay_error(&mut stream, &err);
+        return Err(err).with_context(|| {
+            format!("artifact {} differs from the leader's", welcome.grad_name)
+        });
+    }
+
+    // Compile (or warm-load) before READY so the leader's first dispatch
+    // meets a ready executor.
+    let artifact = session
+        .load(&welcome.grad_name)
+        .with_context(|| format!("compiling {}", welcome.grad_name))?;
+    let mut exec = ShardExecutor::new(artifact)?;
+    write_msg(&mut stream, &Msg::Ready(Ready { key_hex: key_hex.clone() }))
+        .context("sending READY")?;
+
+    let mut expected = welcome.step0;
+    let mut steps = 0u64;
+    loop {
+        let msg = match read_msg(&mut stream) {
+            Ok(m) => m,
+            // The leader dropping the connection without a SHUTDOWN
+            // frame (e.g. its own error path) ends the run cleanly on
+            // this side; the leader reports the real failure.
+            Err(DdpNetError::Closed) => break,
+            Err(e) => return Err(e).context("reading job frame"),
+        };
+        match msg {
+            Msg::Job(job) => {
+                if job.step != expected {
+                    let err = DdpNetError::StepMismatch {
+                        expect: expected,
+                        got: job.step,
+                    };
+                    relay_error(&mut stream, &err);
+                    return Err(err.into());
+                }
+                match exec.execute(&job.params, &job.xa, &job.xb, &job.perm) {
+                    Ok(res) => {
+                        write_msg(
+                            &mut stream,
+                            &Msg::Grads(GradsMsg {
+                                step: job.step,
+                                loss: res.loss,
+                                inv: res.inv,
+                                reg: res.reg,
+                                grads: res.grads,
+                            }),
+                        )
+                        .with_context(|| format!("returning gradients for step {}", job.step))?;
+                    }
+                    Err(e) => {
+                        relay_error(&mut stream, &DdpNetError::Exec(format!("{e:#}")));
+                        return Err(e).with_context(|| format!("executing step {}", job.step));
+                    }
+                }
+                expected += 1;
+                steps += 1;
+            }
+            Msg::Shutdown => break,
+            Msg::Error { code, detail } => bail!("leader reported error {code}: {detail}"),
+            other => {
+                let err = DdpNetError::Handshake {
+                    reason: format!("expected JOB or SHUTDOWN, got {}", kind_of(&other)),
+                };
+                relay_error(&mut stream, &err);
+                return Err(err.into());
+            }
+        }
+    }
+
+    Ok(RankReport {
+        rank: welcome.rank as usize,
+        steps,
+        key_hex,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|i| i as f32 * 0.5 - 1.0).collect())
+    }
+
+    fn roundtrip(msg: Msg) {
+        let frame = encode_msg(&msg);
+        assert_eq!(&frame[..4], &MAGIC);
+        let len = u32::from_le_bytes([frame[4], frame[5], frame[6], frame[7]]) as usize;
+        assert_eq!(len, frame.len() - 8);
+        assert_eq!(decode_msg(&frame[8..]).unwrap(), msg);
+    }
+
+    #[test]
+    fn messages_roundtrip() {
+        roundtrip(Msg::Hello(Hello {
+            fingerprint: "pjrt:cpu:d1:hlo-text-v1".into(),
+        }));
+        roundtrip(Msg::Welcome(Welcome {
+            rank: 3,
+            shards: 4,
+            step0: 120,
+            spec: "bt_sum@b=64,q=1".into(),
+            preset: "small".into(),
+            grad_name: "grad_bt_sum_small_s4".into(),
+            key_hex: "00112233445566778899aabbccddeeff".into(),
+        }));
+        roundtrip(Msg::Ready(Ready {
+            key_hex: "ffeeddccbbaa99887766554433221100".into(),
+        }));
+        roundtrip(Msg::Job(JobMsg {
+            step: 7,
+            params: vec![("params.w".into(), t(&[2, 3])), ("params.b".into(), t(&[3]))],
+            xa: t(&[4, 6]),
+            xb: t(&[4, 6]),
+            perm: vec![2, 0, 1],
+        }));
+        roundtrip(Msg::Grads(GradsMsg {
+            step: 7,
+            loss: 1.25,
+            inv: 0.5,
+            reg: 0.75,
+            grads: vec![("grads.w".into(), t(&[2, 3]))],
+        }));
+        roundtrip(Msg::Shutdown);
+        roundtrip(Msg::Error {
+            code: 9,
+            detail: "artifact content mismatch".into(),
+        });
+    }
+
+    #[test]
+    fn f32_payloads_cross_the_wire_bit_exactly() {
+        // Denormals, negative zero, extreme exponents: the exchange must
+        // preserve bits, not values-after-rounding.
+        let data = vec![
+            f32::MIN_POSITIVE / 2.0,
+            -0.0,
+            f32::MAX,
+            f32::MIN,
+            1e-38,
+            -3.5e37,
+        ];
+        let msg = Msg::Grads(GradsMsg {
+            step: 0,
+            loss: -0.0,
+            inv: f32::MIN_POSITIVE,
+            reg: 0.0,
+            grads: vec![("grads.w".into(), Tensor::from_vec(&[6], data.clone()))],
+        });
+        let frame = encode_msg(&msg);
+        match decode_msg(&frame[8..]).unwrap() {
+            Msg::Grads(g) => {
+                let back = &g.grads[0].1;
+                for (a, b) in data.iter().zip(back.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                assert_eq!(g.loss.to_bits(), (-0.0f32).to_bits());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_bodies_are_typed() {
+        let frame = encode_msg(&Msg::Job(JobMsg {
+            step: 3,
+            params: vec![("params.w".into(), t(&[2, 2]))],
+            xa: t(&[2, 4]),
+            xb: t(&[2, 4]),
+            perm: vec![1, 0],
+        }));
+        let body = &frame[8..];
+        for cut in 0..body.len() {
+            let err = decode_msg(&body[..cut]).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    DdpNetError::Truncated { .. }
+                        | DdpNetError::BadString { .. }
+                        | DdpNetError::Oversize { .. }
+                ),
+                "cut {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_version_and_kind_are_typed() {
+        let err = decode_msg(&[9, KIND_HELLO]).unwrap_err();
+        assert!(matches!(err, DdpNetError::BadVersion(9)));
+        let err = decode_msg(&[VERSION, 200]).unwrap_err();
+        assert!(matches!(err, DdpNetError::UnknownKind(200)));
+    }
+
+    #[test]
+    fn framing_reuses_the_serving_discipline() {
+        // A serving frame's magic is rejected by the ddp reader with a
+        // typed BadMagic, proving the magics partition the streams.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"DCRQ");
+        bytes.extend_from_slice(&4u32.to_le_bytes());
+        bytes.extend_from_slice(&[0; 4]);
+        let err = read_msg(&mut bytes.as_slice()).unwrap_err();
+        assert!(matches!(err, DdpNetError::BadMagic { got } if &got == b"DCRQ"));
+
+        // Oversize length prefixes are refused before allocation.
+        let mut oversize = Vec::new();
+        oversize.extend_from_slice(&MAGIC);
+        oversize.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_msg(&mut oversize.as_slice()).unwrap_err();
+        assert!(matches!(err, DdpNetError::Oversize { .. }));
+
+        // Clean EOF between frames is Closed, not Truncated.
+        let err = read_msg(&mut (&[][..])).unwrap_err();
+        assert!(matches!(err, DdpNetError::Closed));
+    }
+
+    #[test]
+    fn error_codes_are_stable() {
+        assert_eq!(DdpNetError::BadMagic { got: [0; 4] }.code(), 1);
+        assert_eq!(
+            DdpNetError::KeyMismatch {
+                leader: String::new(),
+                rank: String::new()
+            }
+            .code(),
+            9
+        );
+        assert_eq!(DdpNetError::Exec(String::new()).code(), 10);
+        assert_eq!(DdpNetError::Closed.code(), 13);
+    }
+
+    #[test]
+    fn oversize_tensor_rank_is_rejected() {
+        let mut b = vec![VERSION, KIND_GRADS];
+        b.extend_from_slice(&0u64.to_le_bytes());
+        b.extend_from_slice(&0f32.to_le_bytes());
+        b.extend_from_slice(&0f32.to_le_bytes());
+        b.extend_from_slice(&0f32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.push(b'g');
+        b.push((MAX_TENSOR_RANK + 1) as u8); // absurd ndim
+        let err = decode_msg(&b).unwrap_err();
+        assert!(matches!(err, DdpNetError::Oversize { .. }), "{err}");
+    }
+}

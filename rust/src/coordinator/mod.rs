@@ -1,5 +1,6 @@
 //! The L3 coordinator: training backends, schedules, permutation
 //! sampling, metrics, checkpoints, and the linear-evaluation protocol.
+//! (System-wide map: `docs/ARCHITECTURE.md`.)
 //!
 //! The paper's system contribution is the loss (L1/L2); the coordinator is
 //! everything a practitioner needs around it — with Python strictly at
@@ -22,9 +23,13 @@
 //! * [`Trainer`] — the monolithic backend: one fused AOT train artifact
 //!   per optimizer step, executed through a pre-resolved
 //!   `ExecutionBinding`.
-//! * [`DdpTrainer`] — the simulated-DDP backend (paper App. E.3): K shard
-//!   workers over one shared runtime session core, plain gradient
-//!   averaging, leader-side apply artifact.
+//! * [`DdpTrainer`] — the DDP backend (paper App. E.3): K shards with
+//!   plain gradient averaging and a leader-side apply artifact, over a
+//!   pluggable gradient exchange — in-process worker threads sharing one
+//!   runtime session core, or real rank processes over TCP/UDS frames
+//!   ([`ddp_net`], `decorr train --ranks K --rank-addr` + `decorr rank`).
+//!   Both exchanges drive the same leader math and the same per-shard
+//!   executor, so socket runs are bit-identical to thread runs.
 //! * [`MetricsLogger`] — internally synchronized (`log` takes `&self`),
 //!   so the shared loop and any observer can record through one logger.
 //! * [`Checkpoint`] — parameter snapshots; `DriverBuilder::resume_from`
@@ -41,6 +46,7 @@
 
 pub mod checkpoint;
 pub mod ddp;
+pub mod ddp_net;
 pub mod linear_eval;
 pub mod metrics;
 pub mod schedule;
@@ -48,6 +54,7 @@ pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use ddp::DdpTrainer;
+pub use ddp_net::{run_rank, DdpNetError, RankReport};
 pub use linear_eval::{extract_features, linear_eval, project_views, EvalResult, LinearProbe};
 pub use metrics::{MetricsLogger, StepMetrics};
 pub use schedule::LrSchedule;

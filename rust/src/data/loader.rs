@@ -104,6 +104,19 @@ struct Reorder {
 ///
 /// Defaults: default augmentations, epoch size 4096, seed 17, 2 workers,
 /// prefetch 4, **ordered** delivery, start at batch 0, no prepare.
+///
+/// ```
+/// use std::sync::Arc;
+/// use decorr::data::{LoaderBuilder, ShapeWorld, ShapeWorldConfig};
+///
+/// let source = Arc::new(ShapeWorld::new(ShapeWorldConfig::default()));
+/// let loader = LoaderBuilder::new(source, 4).seed(7).workers(1).build();
+/// let batch = loader.next().unwrap();
+/// // Two augmented views of the same 4 samples, stacked (n, H, W, C).
+/// assert_eq!(batch.index, 0);
+/// assert_eq!(batch.view_a.images.shape(), batch.view_b.images.shape());
+/// assert_eq!(batch.view_a.images.shape()[0], 4);
+/// ```
 pub struct LoaderBuilder {
     source: Arc<dyn BatchSource>,
     batch: usize,

@@ -1,5 +1,6 @@
 //! The streaming data plane: sample sources, SSL augmentations, binary
-//! shards, and a marshal-ahead prefetching batch loader.
+//! shards, and a marshal-ahead prefetching batch loader. (System-wide
+//! map: `docs/ARCHITECTURE.md`; the shard file format: `docs/FORMATS.md`.)
 //!
 //! The pipeline is `BatchSource → BatchLoader → PreparedBatch → run_loop`:
 //!
@@ -34,6 +35,8 @@
 //! off the driver thread without touching any of those draws, so inline
 //! and prepared paths produce bit-identical training losses (pinned in
 //! `tests/driver.rs`).
+
+#![deny(missing_docs)]
 
 pub mod augment;
 pub mod loader;

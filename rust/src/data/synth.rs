@@ -14,15 +14,25 @@ use super::{BatchSource, Sample};
 /// Shape classes available to the renderer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Shape {
+    /// Filled disc.
     Circle,
+    /// Axis-aligned filled square.
     Square,
+    /// Upward-pointing filled triangle.
     Triangle,
+    /// Plus-sign of two crossing bars.
     Cross,
+    /// Annulus (disc with a hole).
     Ring,
+    /// Square rotated 45° (filled rhombus).
     Diamond,
+    /// Horizontal bar across the shape's extent.
     HBar,
+    /// Vertical bar across the shape's extent.
     VBar,
+    /// 2×2 checkerboard patch.
     Checker,
+    /// Small filled disc (scaled-down circle).
     Dot,
 }
 

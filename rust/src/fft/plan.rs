@@ -316,6 +316,26 @@ enum Route {
 /// selectable [`FftExec`] flavor; other lengths fall back to the generic
 /// complex [`FftPlan`]. See the module docs for the routing and
 /// threading contract.
+///
+/// Build once, make one scratch per worker thread, then transform
+/// allocation-free:
+///
+/// ```
+/// use decorr::fft::plan::RfftPlan;
+///
+/// let plan = RfftPlan::new(8);
+/// let mut scratch = plan.make_scratch();
+/// let x = [1.0f32, 2.0, 3.0, 4.0, 4.0, 3.0, 2.0, 1.0];
+/// let mut spec = vec![decorr::fft::Complex::ZERO; plan.bins()]; // n/2 + 1 bins
+/// plan.forward_into(&x, &mut spec, &mut scratch);
+/// // DC bin is the plain sum of the signal.
+/// assert!((spec[0].re - 20.0).abs() < 1e-5 && spec[0].im.abs() < 1e-9);
+/// let mut back = [0.0f32; 8];
+/// plan.inverse_into(&spec, &mut back, &mut scratch);
+/// for (a, b) in x.iter().zip(&back) {
+///     assert!((a - b).abs() < 1e-5);
+/// }
+/// ```
 #[derive(Clone, Debug)]
 pub struct RfftPlan {
     n: usize,

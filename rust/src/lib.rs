@@ -19,6 +19,14 @@
 //! Python never runs on the training path: `make artifacts` lowers the
 //! compute graphs once; afterwards the `decorr` binary is self-contained.
 //!
+//! Two companion documents map the whole system: `docs/ARCHITECTURE.md`
+//! (one dataflow diagram per subsystem — spec front door, step path,
+//! runtime/registry stack, DDP backends, data plane, serving, benches,
+//! audit) and `docs/FORMATS.md` (every on-disk and wire format, with the
+//! magic bytes drift-tested against the code constants in
+//! `tests/formats.rs`). This page keeps only the front-door overview;
+//! per-subsystem diagrams live in the book and the module docs.
+//!
 //! ## The `api` front door
 //!
 //! The crate's single entry point for naming a loss is the typed
@@ -76,27 +84,11 @@
 //!
 //! The train path's unit of work is a step; the [`serve`] subsystem
 //! serves the same specs with a *request* as the unit of work, over the
-//! same warm runtime stack:
-//!
-//! ```text
-//!  socket (tcp | unix:<path>) ── length-prefixed frames [serve::protocol]
-//!      │ decode + validate (typed ServeError; request-scoped errors
-//!      ▼  answered, connection survives)
-//!  spec-keyed micro-batch queues ─ fill to the batch shape, flush on
-//!      │                           deadline, drain on shutdown [serve::queue]
-//!      ▼
-//!  K workers × warm per-worker state ─ planned-FFT row scorer, Session
-//!      │    arm + ExecutionBinding, HostExecutor fallback [serve::exec]
-//!      ▼
-//!  scatter per-request responses; latency histograms + batch-occupancy
-//!  gauges → BENCH_serving.json, gated by `decorr bench-diff`
-//! ```
-//!
-//! Micro-batching is exact by construction: score rows are independent
-//! (coalescing requests is bit-identical to serving them alone) and
-//! diagnose requests always evaluate their own matrix. `decorr
-//! serve-bench` is the paired closed-loop load generator CI runs in
-//! smoke mode.
+//! same warm runtime stack — socket frames → spec-keyed micro-batch
+//! queues → warm worker state, with micro-batching exact by
+//! construction. The dataflow diagram lives in `docs/ARCHITECTURE.md`
+//! and the [`serve`] module docs; `decorr serve-bench` is the paired
+//! closed-loop load generator CI runs in smoke mode.
 //!
 //! ## Quick tour
 //!

@@ -7,6 +7,8 @@
 //! decorr spec    <loss-spec> [--check] inspect a parsed LossSpec's derivations
 //! decorr sweep   [--grid "bt_sum@b={64,128},q={1,2}"] [--parallel K] spec-grid sweep
 //! decorr shard   pack|inspect          pack/inspect binary sample shards
+//! decorr registry inspect|gc|warm      cross-process compiled-artifact registry
+//! decorr rank    --addr <addr>         DDP rank worker for `train --rank-addr`
 //! decorr bench-diff --baseline <dir>   bench-trajectory regression gate
 //! decorr serve   [--addr host:port|unix:path]  micro-batched serving daemon
 //! decorr serve-bench [--rps N --specs a;b]     closed-loop serving load test
@@ -44,6 +46,8 @@ fn main() -> Result<()> {
         "fig5" => decorr::bench_harness::cmd::fig5(&mut args),
         "sweep" => decorr::bench_harness::cmd::sweep(&mut args),
         "shard" => decorr::bench_harness::cmd::shard(&mut args),
+        "registry" => decorr::bench_harness::cmd::registry(&mut args),
+        "rank" => decorr::bench_harness::cmd::rank(&mut args),
         "bench-diff" => decorr::bench_harness::cmd::bench_diff(&mut args),
         "session-bench" | "session" => decorr::bench_harness::cmd::session_bench(&mut args),
         "serve" => decorr::bench_harness::cmd::serve(&mut args),
@@ -80,6 +84,8 @@ const SUBCOMMANDS: &[&str] = &[
     "fig5",
     "sweep",
     "shard",
+    "registry",
+    "rank",
     "bench-diff",
     "session-bench",
     "serve",
@@ -127,7 +133,10 @@ SUBCOMMANDS
   train    SSL pretraining (--preset tiny|small|e2e, --variant bt_sum, ...;
            --variant accepts full loss specs, e.g. 'bt_sum@b=64,q=1';
            --resume <ckpt> restores params — and, from v2 checkpoints,
-           the optimizer state and LR-schedule position)
+           the optimizer state and LR-schedule position; --ranks K
+           shards the step across K DDP workers — in-process threads,
+           or real rank processes when --rank-addr <addr> names the
+           socket `decorr rank` workers dial in on)
   eval     linear evaluation of a saved checkpoint (--checkpoint dir)
   spec     parse a loss spec and pretty-print its derived components
            (kernel, artifact ids, labels; --check evaluates it through
@@ -143,6 +152,18 @@ SUBCOMMANDS
            `shard pack --out f.shard [--count N] [--size S] [--seed K]`
            renders ShapeWorld samples into one mmap-able file;
            `shard inspect <file>` validates + prints its header
+  registry cross-process compiled-artifact registry (content-addressed
+           warm-start store; sessions attach via DECORR_REGISTRY):
+           `registry inspect [--dir d]` lists entries + health;
+           `registry warm --artifacts <dir> [--dir d]` pre-populates
+           portable source snapshots from an artifact directory;
+           `registry gc [--keep key1,key2] [--dir d]` removes entries
+           not in the keep set (plus corrupt ones)
+  rank     DDP rank worker process: connect to a `train --ranks K
+           --rank-addr <addr>` leader, pass the content-key handshake,
+           and compute gradient shards until shutdown (--addr host:port|
+           unix:path, --artifacts dir; warms from DECORR_REGISTRY when
+           the artifact directory is absent)
   bench-diff  compare two directories of BENCH_*.json perf trajectories
            (--baseline dir [--current dir] [--max-regress 20]
            [--warn-only]); warns past half the threshold, fails past it
@@ -206,6 +227,9 @@ mod tests {
         assert_eq!(nearest_subcommand("serve-benh"), Some("serve-bench"));
         assert_eq!(nearest_subcommand("trian"), Some("train"));
         assert_eq!(nearest_subcommand("bench_diff"), Some("bench-diff"));
+        assert_eq!(nearest_subcommand("registy"), Some("registry"));
+        assert_eq!(nearest_subcommand("regsitry"), Some("registry"));
+        assert_eq!(nearest_subcommand("rnak"), Some("rank"));
         assert_eq!(nearest_subcommand("xyzzyplugh"), None);
     }
 

@@ -50,6 +50,20 @@ impl Engine {
         self.client.device_count()
     }
 
+    /// Device/engine fingerprint pinning registry entries that are NOT
+    /// portable across engines (serialized executables). Combines the
+    /// PJRT platform, the addressable device count, and a tag for the
+    /// compile interchange this build speaks (HLO text — see the module
+    /// docs on why protos are off the table). Any component changing
+    /// makes foreign entries miss and recompile, by design.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "pjrt:{}:d{}:hlo-text-v1",
+            self.platform(),
+            self.device_count()
+        )
+    }
+
     /// Directory artifacts are loaded from.
     pub fn artifact_dir(&self) -> &Path {
         &self.artifact_dir

@@ -1,5 +1,6 @@
 //! PJRT runtime: loads AOT artifacts produced by `python/compile/aot.py`
-//! and executes them from the rust hot path.
+//! and executes them from the rust hot path. (System-wide map:
+//! `docs/ARCHITECTURE.md`; on-disk formats: `docs/FORMATS.md`.)
 //!
 //! ## Session / Binding architecture
 //!
@@ -17,6 +18,13 @@
 //!   cache): loading the same name — or identical HLO + io-signature under
 //!   a different name — twice compiles once. This is the device-side
 //!   mirror of the host `fft::plan` contract.
+//! * [`Registry`] (in [`registry`]) — the *cross-process* tier under the
+//!   session: a content-addressed on-disk store (same [`ContentKey`]
+//!   keying plus an engine fingerprint) that persists compiled-artifact
+//!   state between processes. Sessions consult it before compiling and
+//!   publish into it after; rank workers and sweep re-runs warm from it
+//!   without an artifact directory. See `docs/FORMATS.md` for the entry
+//!   format and `runtime::registry` for the codec / fallback contract.
 //! * [`ExecutionBinding`] (in [`binding`]) — resolves a manifest's
 //!   input/output slot mapping (parameter stores vs per-step streams)
 //!   once, then marshals borrowed literals by precomputed index on every
@@ -56,11 +64,14 @@
 //! tuple literal; [`Artifact::execute`] decomposes it into the named
 //! outputs.
 
+#![deny(missing_docs)]
+
 mod artifact;
 pub mod binding;
 mod engine;
 pub mod literal;
 pub mod params;
+pub mod registry;
 pub mod session;
 
 pub use artifact::{Artifact, Manifest, TensorSpec};
@@ -68,6 +79,7 @@ pub use binding::{EmitSpec, ExecutionBinding, StepPhases};
 pub use engine::{artifact_paths, Engine};
 pub use literal::{literal_f32, literal_i32, literal_scalar, scalar, SendLiteral};
 pub use params::ParamStore;
+pub use registry::Registry;
 pub use session::{
     ArtifactSource, ContentKey, Session, SessionStats, SharedSession, WarmupReport,
     SESSION_INDEX_FILE,

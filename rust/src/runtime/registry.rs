@@ -1,0 +1,931 @@
+//! Cross-process registry of compiled-artifact state.
+//!
+//! The [`SharedSession`](super::SharedSession) cache is process-wide:
+//! every sweep worker, DDP shard, and CI run still pays the O(seconds)
+//! PJRT compile for shapes an earlier *process* already compiled. The
+//! registry is the cross-process half of that story — a content-addressed
+//! on-disk store, keyed exactly like the session cache
+//! ([`ContentKey`]: FNV-128 of manifest io-signature + HLO text) plus an
+//! engine fingerprint, that persists compiled-artifact state between
+//! processes.
+//!
+//! ## On-disk layout
+//!
+//! ```text
+//! <registry>/
+//!   entries/<keyhex>.dcre     one entry per content key (format below)
+//!   names/<name>.key          name → keyhex marker (one line, atomic)
+//!   hlo/<keyhex>.hlo.txt      materialized HLO text for engine compiles
+//! ```
+//!
+//! Entry file format (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"DCRREG01"
+//! 8       4     header length H (u32 LE)
+//! 12      H     header JSON: {"version","key","name","signature",
+//!                             "codec","fingerprint","payload_len",
+//!                             "checksum"}
+//! 12+H    P     payload (P == payload_len; FNV-128 checksum in header)
+//! ```
+//!
+//! Writes are **atomic**: an entry is staged to a same-directory temp
+//! file and `rename(2)`d into place, so readers observe either the old
+//! entry, the new entry, or nothing — never a torn prefix. Lookups never
+//! fail the caller: wrong magic, truncated files, checksum mismatches,
+//! unknown versions, and foreign engine fingerprints all degrade to a
+//! typed [`Miss`] and the session recompiles (the graceful-fallback
+//! contract from ROADMAP).
+//!
+//! ## Payload codecs — and the pinned xla-rs surface
+//!
+//! What an entry's payload *is* depends on its `codec` header:
+//!
+//! * [`CODEC_SOURCE`] (`"src1"`) — a portable source snapshot: the raw
+//!   manifest JSON and HLO text, length-prefixed (see
+//!   [`encode_source`]). Engine-independent (`fingerprint` is
+//!   [`FP_PORTABLE`]): any process on any device can warm from it
+//!   without an artifact directory — this is how `decorr rank` workers
+//!   and sweep re-runs resolve sources when `artifacts/` is absent.
+//! * [`CODEC_PJRT`] (`"pjrt1"`) — a serialized PJRT executable, pinned
+//!   to the writing engine's fingerprint. **The pinned xla-rs surface
+//!   this crate builds against exposes no executable
+//!   serialize/deserialize entry points**, so on this build
+//!   [`exe_codec`] reports unsupported, no `pjrt1` entries are written,
+//!   and lookups of foreign ones miss with [`Miss::Codec`] — the session
+//!   recompiles from the source snapshot instead. All of that policy
+//!   lives in the tiny [`exe_codec`] module so a capable surface needs a
+//!   one-module change, not a redesign.
+//!
+//! `SessionStats` exposes the traffic as `registry_hits` /
+//! `registry_misses` / `registry_stores`; `decorr registry
+//! inspect|gc|warm` is the operator surface.
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::session::ContentKey;
+
+/// Entry-file magic: "DeCoRr REGistry" + the major format version.
+pub const MAGIC: [u8; 8] = *b"DCRREG01";
+/// Header version this build reads and writes.
+pub const VERSION: u32 = 1;
+/// Codec tag for portable source snapshots (manifest JSON + HLO text).
+pub const CODEC_SOURCE: &str = "src1";
+/// Codec tag for serialized PJRT executables (device-pinned).
+pub const CODEC_PJRT: &str = "pjrt1";
+/// Fingerprint sentinel for engine-independent payloads.
+pub const FP_PORTABLE: &str = "portable";
+/// Environment variable naming the registry directory; when set,
+/// [`Registry::from_env`] opens it and `SharedSession::open` attaches it.
+pub const REGISTRY_ENV: &str = "DECORR_REGISTRY";
+/// Entry file suffix under `entries/`.
+pub const ENTRY_SUFFIX: &str = ".dcre";
+
+/// The single pin-point where compiled-executable persistence would meet
+/// the xla-rs API. Kept deliberately tiny: flipping this crate onto an
+/// xla surface that exposes `PJRT_Executable_Serialize` /
+/// `DeserializeAndLoad` means implementing these three functions — every
+/// other registry path (keying, store/lookup, fingerprint pinning,
+/// corruption handling, stats, CLI, CI gates) is already exercised
+/// through the portable source codec.
+pub mod exe_codec {
+    /// Can this build round-trip compiled executables through the
+    /// registry? The pinned xla-rs surface (see `runtime::engine`)
+    /// exposes compile-from-HLO-text only — no executable
+    /// serialization — so this is `false`, and warm starts degrade to
+    /// recompiling from the registry's source snapshots.
+    pub fn supported() -> bool {
+        false
+    }
+
+    /// Serialize a compiled executable for a [`CODEC_PJRT`] entry.
+    /// Returns `None` on this surface (nothing is written).
+    ///
+    /// [`CODEC_PJRT`]: super::CODEC_PJRT
+    pub fn encode(_artifact: &crate::runtime::Artifact) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Deserialize a [`CODEC_PJRT`] payload onto an engine, attaching
+    /// the manifest the executable was compiled under. Returns `None`
+    /// on this surface (the caller recompiles).
+    ///
+    /// [`CODEC_PJRT`]: super::CODEC_PJRT
+    pub fn decode(
+        _engine: &crate::runtime::Engine,
+        _manifest: crate::runtime::Manifest,
+        _payload: &[u8],
+    ) -> Option<crate::runtime::Artifact> {
+        None
+    }
+}
+
+// ----------------------------------------------------------------- entry
+
+/// A fully decoded registry entry (header + verified payload).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    /// Content key, hex form (32 chars; see `ContentKey::hex`).
+    pub key: String,
+    /// Artifact name recorded at store time (informational — the key is
+    /// the address; the same content under two names shares one entry).
+    pub name: String,
+    /// Manifest io-signature (collision guard, mirrors the session).
+    pub signature: String,
+    /// Payload codec tag ([`CODEC_SOURCE`] or [`CODEC_PJRT`]).
+    pub codec: String,
+    /// Engine fingerprint the payload is pinned to, or [`FP_PORTABLE`].
+    pub fingerprint: String,
+    /// Raw payload bytes (checksum-verified).
+    pub payload: Vec<u8>,
+}
+
+/// Why a lookup did not produce a usable entry. Every variant degrades
+/// to "the session compiles as if no registry existed" — lookups never
+/// propagate errors into the load path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Miss {
+    /// No entry file for the key.
+    Absent,
+    /// Entry file exists but is unreadable: bad magic, truncated header
+    /// or payload, malformed header JSON, or checksum mismatch.
+    Corrupt(String),
+    /// Entry was written by an incompatible format version.
+    Version(u32),
+    /// Entry's payload is pinned to a different engine.
+    Fingerprint {
+        /// Fingerprint recorded in the entry.
+        entry: String,
+        /// Fingerprint of the engine asking.
+        engine: String,
+    },
+    /// Entry's codec cannot be decoded by this build (e.g. a `pjrt1`
+    /// executable on a surface without deserialization).
+    Codec(String),
+}
+
+impl std::fmt::Display for Miss {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Miss::Absent => write!(f, "absent"),
+            Miss::Corrupt(why) => write!(f, "corrupt ({why})"),
+            Miss::Version(v) => write!(f, "unknown version {v}"),
+            Miss::Fingerprint { entry, engine } => {
+                write!(f, "fingerprint mismatch (entry {entry}, engine {engine})")
+            }
+            Miss::Codec(c) => write!(f, "undecodable codec '{c}'"),
+        }
+    }
+}
+
+/// Outcome of [`Registry::lookup`].
+#[derive(Clone, Debug)]
+pub enum Lookup {
+    /// A verified, fingerprint-compatible entry.
+    Hit(Entry),
+    /// No usable entry; the reason is telemetry, not an error.
+    Miss(Miss),
+}
+
+/// Header-only view of an entry, for `decorr registry inspect`.
+#[derive(Clone, Debug)]
+pub struct EntrySummary {
+    /// Content key (hex), from the file name.
+    pub key: String,
+    /// Artifact name recorded at store time (empty when corrupt).
+    pub name: String,
+    /// Payload codec tag (empty when corrupt).
+    pub codec: String,
+    /// Engine fingerprint (empty when corrupt).
+    pub fingerprint: String,
+    /// Payload size in bytes (0 when corrupt).
+    pub payload_len: usize,
+    /// `None` when healthy; `Some(reason)` for undecodable entries.
+    pub corrupt: Option<String>,
+}
+
+/// Result of [`Registry::warm_from_dir`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WarmReport {
+    /// Manifest/HLO pairs found under the artifact directory.
+    pub scanned: usize,
+    /// New entries written.
+    pub stored: usize,
+    /// Pairs whose content key was already registered.
+    pub skipped: usize,
+    /// Pairs that failed to read or parse (skipped, not fatal).
+    pub malformed: usize,
+}
+
+/// Result of [`Registry::gc`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GcReport {
+    /// Entry files examined.
+    pub scanned: usize,
+    /// Entries kept because their key was in the in-use set.
+    pub kept: usize,
+    /// Entries removed (not in use, or corrupt).
+    pub removed: usize,
+    /// Bytes reclaimed by the removals.
+    pub bytes_freed: u64,
+}
+
+// -------------------------------------------------------------- payloads
+
+/// Encode a [`CODEC_SOURCE`] payload: `u32 LE` manifest length, manifest
+/// JSON bytes, `u32 LE` HLO length, HLO text bytes.
+pub fn encode_source(manifest_json: &str, hlo_text: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + manifest_json.len() + hlo_text.len());
+    out.extend_from_slice(&(manifest_json.len() as u32).to_le_bytes());
+    out.extend_from_slice(manifest_json.as_bytes());
+    out.extend_from_slice(&(hlo_text.len() as u32).to_le_bytes());
+    out.extend_from_slice(hlo_text.as_bytes());
+    out
+}
+
+/// Decode a [`CODEC_SOURCE`] payload back into `(manifest_json,
+/// hlo_text)`. Bounds-checked; truncation is an error, never a panic.
+pub fn decode_source(payload: &[u8]) -> Result<(String, String)> {
+    let read_chunk = |at: usize| -> Result<(String, usize)> {
+        let len_end = at.checked_add(4).context("source payload truncated")?;
+        anyhow::ensure!(payload.len() >= len_end, "source payload truncated");
+        let mut len4 = [0u8; 4];
+        len4.copy_from_slice(&payload[at..len_end]);
+        let len = u32::from_le_bytes(len4) as usize;
+        let end = len_end.checked_add(len).context("source payload length overflow")?;
+        anyhow::ensure!(payload.len() >= end, "source payload truncated");
+        let text = std::str::from_utf8(&payload[len_end..end])
+            .context("source payload is not UTF-8")?
+            .to_string();
+        Ok((text, end))
+    };
+    let (manifest, at) = read_chunk(0)?;
+    let (hlo, end) = read_chunk(at)?;
+    anyhow::ensure!(end == payload.len(), "trailing bytes after source payload");
+    Ok((manifest, hlo))
+}
+
+// -------------------------------------------------------------- registry
+
+/// A content-addressed on-disk registry of compiled-artifact state.
+/// Cheap handle (a directory path); safe to use from many processes at
+/// once — all writes are atomic renames, all reads verify checksums.
+#[derive(Clone, Debug)]
+pub struct Registry {
+    dir: PathBuf,
+}
+
+impl Registry {
+    /// Open (creating if needed) a registry rooted at `dir`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        for sub in ["entries", "names", "hlo"] {
+            let p = dir.join(sub);
+            std::fs::create_dir_all(&p)
+                .with_context(|| format!("creating registry dir {}", p.display()))?;
+        }
+        Ok(Registry { dir })
+    }
+
+    /// Open the registry named by the `DECORR_REGISTRY` environment
+    /// variable, if set and creatable. `None` (never an error) otherwise
+    /// — an unusable registry must not take the session down with it.
+    pub fn from_env() -> Option<Registry> {
+        let dir = std::env::var_os(REGISTRY_ENV)?;
+        if dir.is_empty() {
+            return None;
+        }
+        Registry::open(PathBuf::from(dir)).ok()
+    }
+
+    /// The registry root directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path of the entry file for `key` (hex form).
+    pub fn entry_path(&self, key: &str) -> PathBuf {
+        self.dir.join("entries").join(format!("{key}{ENTRY_SUFFIX}"))
+    }
+
+    fn name_path(&self, name: &str) -> PathBuf {
+        self.dir.join("names").join(format!("{name}.key"))
+    }
+
+    /// Atomically write `bytes` to `path` via a same-directory temp file
+    /// + rename, so concurrent readers never observe a torn prefix and
+    /// concurrent writers race benignly (last rename wins, both files
+    /// were complete).
+    fn write_atomic(&self, path: &Path, bytes: &[u8]) -> Result<()> {
+        let parent = path.parent().context("registry path has no parent")?;
+        let stem = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .context("registry path has no file name")?;
+        let tmp = parent.join(format!(".{stem}.{}.tmp", std::process::id()));
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(bytes)
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            f.sync_all().ok(); // durability is best-effort; atomicity is not
+        }
+        std::fs::rename(&tmp, path).with_context(|| {
+            let _ = std::fs::remove_file(&tmp);
+            format!("renaming {} into place", path.display())
+        })
+    }
+
+    /// Store an entry (atomic; overwrites any previous entry for the
+    /// key) and drop a `names/<name>.key` marker so the artifact name
+    /// resolves to this key in processes without an artifact directory.
+    pub fn store(&self, entry: &Entry) -> Result<()> {
+        let checksum = ContentKey::of_bytes(&entry.payload).hex();
+        let header = crate::util::json::obj(vec![
+            ("version", crate::util::json::Json::Num(VERSION as f64)),
+            ("key", crate::util::json::Json::Str(entry.key.clone())),
+            ("name", crate::util::json::Json::Str(entry.name.clone())),
+            (
+                "signature",
+                crate::util::json::Json::Str(entry.signature.clone()),
+            ),
+            ("codec", crate::util::json::Json::Str(entry.codec.clone())),
+            (
+                "fingerprint",
+                crate::util::json::Json::Str(entry.fingerprint.clone()),
+            ),
+            (
+                "payload_len",
+                crate::util::json::Json::Num(entry.payload.len() as f64),
+            ),
+            ("checksum", crate::util::json::Json::Str(checksum)),
+        ])
+        .to_string_compact();
+        let mut bytes = Vec::with_capacity(12 + header.len() + entry.payload.len());
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&entry.payload);
+        self.write_atomic(&self.entry_path(&entry.key), &bytes)?;
+        if !entry.name.is_empty() {
+            self.write_atomic(&self.name_path(&entry.name), entry.key.as_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Is there an entry file for `key`? (No validation — use
+    /// [`Registry::lookup`] for that.)
+    pub fn contains(&self, key: &str) -> bool {
+        self.entry_path(key).exists()
+    }
+
+    /// Resolve an artifact name to its content key via the name marker,
+    /// if one was stored.
+    pub fn resolve_name(&self, name: &str) -> Option<String> {
+        let text = std::fs::read_to_string(self.name_path(name)).ok()?;
+        let key = text.trim().to_string();
+        if key.is_empty() {
+            None
+        } else {
+            Some(key)
+        }
+    }
+
+    /// Look up `key` for an engine with fingerprint `engine_fp`.
+    /// Infallible by design: every failure mode is a typed [`Miss`] the
+    /// caller counts and recovers from by compiling.
+    pub fn lookup(&self, key: &str, engine_fp: &str) -> Lookup {
+        let path = self.entry_path(key);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Lookup::Miss(Miss::Absent)
+            }
+            Err(e) => return Lookup::Miss(Miss::Corrupt(format!("read failed: {e}"))),
+        };
+        match decode_entry(&bytes) {
+            Ok(entry) => {
+                if entry.fingerprint != FP_PORTABLE && entry.fingerprint != engine_fp {
+                    return Lookup::Miss(Miss::Fingerprint {
+                        entry: entry.fingerprint,
+                        engine: engine_fp.to_string(),
+                    });
+                }
+                if entry.codec != CODEC_SOURCE
+                    && !(entry.codec == CODEC_PJRT && exe_codec::supported())
+                {
+                    return Lookup::Miss(Miss::Codec(entry.codec));
+                }
+                Lookup::Hit(entry)
+            }
+            Err(miss) => Lookup::Miss(miss),
+        }
+    }
+
+    /// Materialize the HLO text of a source-snapshot hit under
+    /// `hlo/<keyhex>.hlo.txt` (idempotent, atomic) and return the path —
+    /// the engine's compile entry point reads HLO from a file.
+    pub fn materialize_hlo(&self, key: &str, hlo_text: &str) -> Result<PathBuf> {
+        let path = self.dir.join("hlo").join(format!("{key}.hlo.txt"));
+        if !path.exists() {
+            self.write_atomic(&path, hlo_text.as_bytes())?;
+        }
+        Ok(path)
+    }
+
+    /// Header-only scan of every entry, sorted by key. Corrupt entries
+    /// are reported, not skipped — `inspect` is how an operator finds
+    /// them.
+    pub fn inspect(&self) -> Result<Vec<EntrySummary>> {
+        let mut out = Vec::new();
+        for key in self.entry_keys()? {
+            let path = self.entry_path(&key);
+            let summary = match std::fs::read(&path) {
+                Ok(bytes) => match decode_entry(&bytes) {
+                    Ok(e) => EntrySummary {
+                        key: key.clone(),
+                        name: e.name,
+                        codec: e.codec,
+                        fingerprint: e.fingerprint,
+                        payload_len: e.payload.len(),
+                        corrupt: None,
+                    },
+                    Err(miss) => EntrySummary {
+                        key: key.clone(),
+                        name: String::new(),
+                        codec: String::new(),
+                        fingerprint: String::new(),
+                        payload_len: 0,
+                        corrupt: Some(miss.to_string()),
+                    },
+                },
+                Err(e) => EntrySummary {
+                    key: key.clone(),
+                    name: String::new(),
+                    codec: String::new(),
+                    fingerprint: String::new(),
+                    payload_len: 0,
+                    corrupt: Some(format!("read failed: {e}")),
+                },
+            };
+            out.push(summary);
+        }
+        Ok(out)
+    }
+
+    /// Remove every entry whose key is *not* in `in_use`, plus any entry
+    /// that no longer decodes (corrupt files are dead weight regardless
+    /// of their key). Name markers pointing at removed keys are dropped
+    /// too. Entries in `in_use` are never touched — a sweep running in
+    /// another process keeps its warm state.
+    pub fn gc(&self, in_use: &BTreeSet<String>) -> Result<GcReport> {
+        let mut report = GcReport::default();
+        let mut removed_keys: BTreeSet<String> = BTreeSet::new();
+        for key in self.entry_keys()? {
+            report.scanned += 1;
+            let path = self.entry_path(&key);
+            let healthy = std::fs::read(&path)
+                .ok()
+                .is_some_and(|bytes| decode_entry(&bytes).is_ok());
+            if in_use.contains(&key) && healthy {
+                report.kept += 1;
+                continue;
+            }
+            let len = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            if std::fs::remove_file(&path).is_ok() {
+                report.removed += 1;
+                report.bytes_freed += len;
+                removed_keys.insert(key.clone());
+            }
+            let hlo = self.dir.join("hlo").join(format!("{key}.hlo.txt"));
+            let _ = std::fs::remove_file(hlo);
+        }
+        // Drop name markers that now dangle.
+        if let Ok(dir) = std::fs::read_dir(self.dir.join("names")) {
+            for dent in dir.flatten() {
+                if let Ok(text) = std::fs::read_to_string(dent.path()) {
+                    if removed_keys.contains(text.trim()) {
+                        let _ = std::fs::remove_file(dent.path());
+                    }
+                }
+            }
+        }
+        Ok(report)
+    }
+
+    /// Pre-populate the registry with portable source snapshots for
+    /// every `<name>.hlo.txt` / `<name>.manifest.json` pair under an
+    /// artifact directory — the `decorr registry warm` backend. Existing
+    /// entries are left alone (`skipped`); malformed pairs are counted
+    /// and skipped rather than aborting the sweep over the rest.
+    pub fn warm_from_dir(&self, artifacts: &Path) -> Result<WarmReport> {
+        let mut report = WarmReport::default();
+        let iter = std::fs::read_dir(artifacts)
+            .with_context(|| format!("reading {}", artifacts.display()))?;
+        let mut names: Vec<String> = Vec::new();
+        for dent in iter.flatten() {
+            let file = dent.file_name();
+            let Some(file) = file.to_str() else { continue };
+            if let Some(stem) = file.strip_suffix(".manifest.json") {
+                names.push(stem.to_string());
+            }
+        }
+        names.sort();
+        for name in names {
+            report.scanned += 1;
+            let (hlo_path, manifest_path) =
+                super::engine::artifact_paths(artifacts, &name);
+            let pair = std::fs::read_to_string(&manifest_path).and_then(|m| {
+                std::fs::read_to_string(&hlo_path).map(|h| (m, h))
+            });
+            let Ok((manifest_text, hlo_text)) = pair else {
+                report.malformed += 1;
+                continue;
+            };
+            let Ok(manifest) = super::artifact::Manifest::parse(&manifest_text) else {
+                report.malformed += 1;
+                continue;
+            };
+            let signature = manifest.io_signature();
+            let key = ContentKey::of(&signature, &hlo_text).hex();
+            if self.contains(&key) {
+                // Refresh the name marker (aliases of a warm key still
+                // need to resolve), but skip rewriting the payload.
+                self.write_atomic(&self.name_path(&name), key.as_bytes())?;
+                report.skipped += 1;
+                continue;
+            }
+            self.store(&Entry {
+                key,
+                name,
+                signature,
+                codec: CODEC_SOURCE.to_string(),
+                fingerprint: FP_PORTABLE.to_string(),
+                payload: encode_source(&manifest_text, &hlo_text),
+            })?;
+            report.stored += 1;
+        }
+        Ok(report)
+    }
+
+    /// All entry keys currently on disk (file stems under `entries/`).
+    pub fn entry_keys(&self) -> Result<Vec<String>> {
+        let dir = self.dir.join("entries");
+        let mut keys = Vec::new();
+        let iter = std::fs::read_dir(&dir)
+            .with_context(|| format!("reading {}", dir.display()))?;
+        for dent in iter.flatten() {
+            let name = dent.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(stem) = name.strip_suffix(ENTRY_SUFFIX) {
+                if !stem.starts_with('.') {
+                    keys.push(stem.to_string());
+                }
+            }
+        }
+        keys.sort();
+        Ok(keys)
+    }
+}
+
+/// Decode + verify an entry file's bytes. Errors are [`Miss`] values —
+/// the caller's recovery is identical for every reason.
+fn decode_entry(bytes: &[u8]) -> std::result::Result<Entry, Miss> {
+    if bytes.len() < 12 {
+        return Err(Miss::Corrupt("shorter than the fixed header".into()));
+    }
+    if bytes[..8] != MAGIC {
+        return Err(Miss::Corrupt("bad magic".into()));
+    }
+    let mut len4 = [0u8; 4];
+    len4.copy_from_slice(&bytes[8..12]);
+    let header_len = u32::from_le_bytes(len4) as usize;
+    let Some(header_end) = 12usize.checked_add(header_len) else {
+        return Err(Miss::Corrupt("header length overflow".into()));
+    };
+    if bytes.len() < header_end {
+        return Err(Miss::Corrupt("truncated header".into()));
+    }
+    let header_text = std::str::from_utf8(&bytes[12..header_end])
+        .map_err(|_| Miss::Corrupt("header is not UTF-8".into()))?;
+    let header = crate::util::json::parse(header_text)
+        .map_err(|e| Miss::Corrupt(format!("header JSON: {e}")))?;
+    let version = header
+        .get("version")
+        .and_then(crate::util::json::Json::as_usize)
+        .unwrap_or(0) as u32;
+    if version != VERSION {
+        return Err(Miss::Version(version));
+    }
+    let field = |k: &str| -> std::result::Result<String, Miss> {
+        header
+            .get(k)
+            .and_then(crate::util::json::Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| Miss::Corrupt(format!("header missing '{k}'")))
+    };
+    let payload_len = header
+        .get("payload_len")
+        .and_then(crate::util::json::Json::as_usize)
+        .ok_or_else(|| Miss::Corrupt("header missing 'payload_len'".into()))?;
+    let payload = &bytes[header_end..];
+    if payload.len() != payload_len {
+        return Err(Miss::Corrupt(format!(
+            "payload is {} bytes, header promises {payload_len}",
+            payload.len()
+        )));
+    }
+    let checksum = field("checksum")?;
+    let actual = ContentKey::of_bytes(payload).hex();
+    if actual != checksum {
+        return Err(Miss::Corrupt("payload checksum mismatch".into()));
+    }
+    Ok(Entry {
+        key: field("key")?,
+        name: field("name")?,
+        signature: field("signature")?,
+        codec: field("codec")?,
+        fingerprint: field("fingerprint")?,
+        payload: payload.to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_registry(tag: &str) -> Registry {
+        let dir = std::env::temp_dir().join(format!(
+            "decorr_reg_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        Registry::open(&dir).unwrap()
+    }
+
+    fn sample_entry(key: &str, name: &str) -> Entry {
+        Entry {
+            key: key.to_string(),
+            name: name.to_string(),
+            signature: "in:xa f32[4,16]|out:out f32[4,16]".into(),
+            codec: CODEC_SOURCE.to_string(),
+            fingerprint: FP_PORTABLE.to_string(),
+            payload: encode_source(r#"{"name":"m"}"#, "HloModule m\n"),
+        }
+    }
+
+    #[test]
+    fn store_lookup_roundtrip() {
+        let reg = temp_registry("roundtrip");
+        let entry = sample_entry("aa11", "toy");
+        reg.store(&entry).unwrap();
+        match reg.lookup("aa11", "any-engine") {
+            Lookup::Hit(found) => assert_eq!(found, entry),
+            Lookup::Miss(m) => panic!("expected hit, got {m}"),
+        }
+        assert_eq!(reg.resolve_name("toy").as_deref(), Some("aa11"));
+        let (manifest, hlo) = decode_source(&entry.payload).unwrap();
+        assert_eq!(manifest, r#"{"name":"m"}"#);
+        assert_eq!(hlo, "HloModule m\n");
+        std::fs::remove_dir_all(reg.dir()).ok();
+    }
+
+    #[test]
+    fn absent_key_misses_absent() {
+        let reg = temp_registry("absent");
+        assert!(matches!(
+            reg.lookup("feed", "fp"),
+            Lookup::Miss(Miss::Absent)
+        ));
+        std::fs::remove_dir_all(reg.dir()).ok();
+    }
+
+    #[test]
+    fn truncated_and_garbage_entries_miss_corrupt() {
+        let reg = temp_registry("corrupt");
+        let entry = sample_entry("bb22", "t");
+        reg.store(&entry).unwrap();
+        let path = reg.entry_path("bb22");
+        let full = std::fs::read(&path).unwrap();
+        // Truncate mid-payload: checksum/length validation must catch it.
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        assert!(matches!(
+            reg.lookup("bb22", "fp"),
+            Lookup::Miss(Miss::Corrupt(_))
+        ));
+        // Garbage magic.
+        std::fs::write(&path, b"NOTAREG!rest").unwrap();
+        assert!(matches!(
+            reg.lookup("bb22", "fp"),
+            Lookup::Miss(Miss::Corrupt(_))
+        ));
+        // Flipped payload byte: checksum mismatch.
+        let mut flipped = full.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0xFF;
+        std::fs::write(&path, &flipped).unwrap();
+        match reg.lookup("bb22", "fp") {
+            Lookup::Miss(Miss::Corrupt(why)) => assert!(why.contains("checksum"), "{why}"),
+            other => panic!("expected checksum corrupt, got {other:?}"),
+        }
+        std::fs::remove_dir_all(reg.dir()).ok();
+    }
+
+    #[test]
+    fn foreign_fingerprint_misses_portable_passes() {
+        let reg = temp_registry("fp");
+        let mut pinned = sample_entry("cc33", "pinned");
+        pinned.codec = CODEC_PJRT.into();
+        pinned.fingerprint = "cpu:other-host".into();
+        reg.store(&pinned).unwrap();
+        match reg.lookup("cc33", "cpu:this-host") {
+            Lookup::Miss(Miss::Fingerprint { entry, engine }) => {
+                assert_eq!(entry, "cpu:other-host");
+                assert_eq!(engine, "cpu:this-host");
+            }
+            other => panic!("expected fingerprint miss, got {other:?}"),
+        }
+        let portable = sample_entry("dd44", "portable");
+        reg.store(&portable).unwrap();
+        assert!(matches!(
+            reg.lookup("dd44", "cpu:this-host"),
+            Lookup::Hit(_)
+        ));
+        std::fs::remove_dir_all(reg.dir()).ok();
+    }
+
+    #[test]
+    fn pjrt_codec_unsupported_on_this_surface() {
+        assert!(!exe_codec::supported());
+        let reg = temp_registry("codec");
+        let mut entry = sample_entry("ee55", "exe");
+        entry.codec = CODEC_PJRT.into();
+        entry.fingerprint = "matching".into();
+        reg.store(&entry).unwrap();
+        assert!(matches!(
+            reg.lookup("ee55", "matching"),
+            Lookup::Miss(Miss::Codec(_))
+        ));
+        std::fs::remove_dir_all(reg.dir()).ok();
+    }
+
+    #[test]
+    fn unknown_version_misses_version() {
+        let reg = temp_registry("version");
+        let entry = sample_entry("ff66", "v");
+        reg.store(&entry).unwrap();
+        let path = reg.entry_path("ff66");
+        let bytes = std::fs::read(&path).unwrap();
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        // Bump the header's version field in place (same byte length).
+        let patched = text.replace("\"version\":1", "\"version\":9");
+        assert_ne!(patched, text);
+        std::fs::write(&path, patched).unwrap();
+        assert!(matches!(
+            reg.lookup("ff66", "fp"),
+            Lookup::Miss(Miss::Version(9))
+        ));
+        std::fs::remove_dir_all(reg.dir()).ok();
+    }
+
+    #[test]
+    fn gc_keeps_in_use_removes_the_rest() {
+        let reg = temp_registry("gc");
+        reg.store(&sample_entry("11aa", "keep")).unwrap();
+        reg.store(&sample_entry("22bb", "drop")).unwrap();
+        let in_use: BTreeSet<String> = ["11aa".to_string()].into();
+        let report = reg.gc(&in_use).unwrap();
+        assert_eq!(report.scanned, 2);
+        assert_eq!(report.kept, 1);
+        assert_eq!(report.removed, 1);
+        assert!(report.bytes_freed > 0);
+        assert!(reg.contains("11aa"));
+        assert!(!reg.contains("22bb"));
+        // The in-use entry still resolves; the dropped name marker is gone.
+        assert!(matches!(reg.lookup("11aa", "fp"), Lookup::Hit(_)));
+        assert_eq!(reg.resolve_name("keep").as_deref(), Some("11aa"));
+        assert_eq!(reg.resolve_name("drop"), None);
+        std::fs::remove_dir_all(reg.dir()).ok();
+    }
+
+    #[test]
+    fn gc_removes_corrupt_even_when_in_use() {
+        let reg = temp_registry("gc_corrupt");
+        reg.store(&sample_entry("33cc", "c")).unwrap();
+        std::fs::write(reg.entry_path("33cc"), b"garbage").unwrap();
+        let in_use: BTreeSet<String> = ["33cc".to_string()].into();
+        let report = reg.gc(&in_use).unwrap();
+        assert_eq!(report.removed, 1);
+        assert!(!reg.contains("33cc"));
+        std::fs::remove_dir_all(reg.dir()).ok();
+    }
+
+    #[test]
+    fn concurrent_writers_never_produce_torn_reads() {
+        let reg = temp_registry("race");
+        let key = "77ee";
+        // Two distinct valid entries of different sizes racing on one
+        // key; readers must only ever see a complete one (or nothing).
+        let small = sample_entry(key, "small");
+        let mut big = sample_entry(key, "big");
+        big.payload = encode_source(
+            &format!(r#"{{"name":"{}"}}"#, "b".repeat(512)),
+            &"HloModule big\n".repeat(64),
+        );
+        std::thread::scope(|scope| {
+            for variant in 0..4 {
+                let reg = reg.clone();
+                let entry = if variant % 2 == 0 { small.clone() } else { big.clone() };
+                scope.spawn(move || {
+                    for _ in 0..25 {
+                        reg.store(&entry).unwrap();
+                    }
+                });
+            }
+            for _ in 0..4 {
+                let reg = reg.clone();
+                scope.spawn(move || {
+                    for _ in 0..100 {
+                        match reg.lookup(key, "fp") {
+                            Lookup::Hit(e) => {
+                                assert!(e.name == "small" || e.name == "big");
+                                decode_source(&e.payload).unwrap();
+                            }
+                            Lookup::Miss(Miss::Absent) => {}
+                            Lookup::Miss(m) => panic!("torn read: {m}"),
+                        }
+                    }
+                });
+            }
+        });
+        std::fs::remove_dir_all(reg.dir()).ok();
+    }
+
+    #[test]
+    fn warm_from_dir_stores_once_and_resolves_names() {
+        let reg = temp_registry("warm");
+        let art = std::env::temp_dir().join(format!(
+            "decorr_warm_art_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&art);
+        std::fs::create_dir_all(&art).unwrap();
+        for name in ["w0", "w1"] {
+            std::fs::write(
+                art.join(format!("{name}.hlo.txt")),
+                "HloModule shared\n",
+            )
+            .unwrap();
+            std::fs::write(
+                art.join(format!("{name}.manifest.json")),
+                format!(r#"{{"name":"{name}","inputs":[],"outputs":[]}}"#),
+            )
+            .unwrap();
+        }
+        std::fs::write(art.join("broken.manifest.json"), "{not json").unwrap();
+        std::fs::write(art.join("broken.hlo.txt"), "HloModule broken\n").unwrap();
+
+        let first = reg.warm_from_dir(&art).unwrap();
+        assert_eq!(first.scanned, 3);
+        // w0 and w1 share one content key (identical HLO, identical
+        // empty io-signature) — one stored, one skipped via the marker.
+        assert_eq!(first.stored, 1);
+        assert_eq!(first.skipped, 1);
+        assert_eq!(first.malformed, 1);
+        let key = reg.resolve_name("w0").unwrap();
+        assert_eq!(reg.resolve_name("w1").as_deref(), Some(key.as_str()));
+        assert!(matches!(reg.lookup(&key, "any"), Lookup::Hit(_)));
+
+        let second = reg.warm_from_dir(&art).unwrap();
+        assert_eq!(second.stored, 0);
+        assert_eq!(second.skipped, 2);
+        std::fs::remove_dir_all(&art).ok();
+        std::fs::remove_dir_all(reg.dir()).ok();
+    }
+
+    #[test]
+    fn source_payload_decode_rejects_truncation() {
+        let payload = encode_source("{}", "HloModule x\n");
+        for cut in [0, 3, 5, payload.len() - 1] {
+            assert!(decode_source(&payload[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut trailing = payload.clone();
+        trailing.push(0);
+        assert!(decode_source(&trailing).is_err());
+    }
+
+    #[test]
+    fn from_env_respects_unset_and_empty() {
+        // Uses a per-test variable name indirection-free check: the
+        // helper reads the real env var, so only assert the unset path
+        // when it is genuinely unset in the test environment.
+        if std::env::var_os(REGISTRY_ENV).is_none() {
+            assert!(Registry::from_env().is_none());
+        }
+    }
+}

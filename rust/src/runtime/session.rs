@@ -57,6 +57,7 @@ use anyhow::{Context, Result};
 
 use super::artifact::{Artifact, Manifest};
 use super::engine::{artifact_paths, Engine};
+use super::registry;
 use crate::util::json::{self, Json};
 use crate::util::sync as usync;
 
@@ -94,6 +95,17 @@ impl ContentKey {
                 a = (a ^ byte as u64).wrapping_mul(FNV_PRIME);
                 b = (b ^ byte as u64).wrapping_mul(FNV_PRIME);
             }
+        }
+        ContentKey { hi: b, lo: a }
+    }
+
+    /// Hash raw bytes (the registry's payload checksum). Same FNV-128
+    /// construction as [`ContentKey::of`] without the two-field framing.
+    pub fn of_bytes(bytes: &[u8]) -> ContentKey {
+        let (mut a, mut b) = (FNV_BASIS_A, FNV_BASIS_B);
+        for &byte in bytes {
+            a = (a ^ byte as u64).wrapping_mul(FNV_PRIME);
+            b = (b ^ byte as u64).wrapping_mul(FNV_PRIME);
         }
         ContentKey { hi: b, lo: a }
     }
@@ -146,6 +158,9 @@ struct StatsCells {
     source_requests: AtomicU64,
     source_reads: AtomicU64,
     arms: AtomicU64,
+    registry_hits: AtomicU64,
+    registry_misses: AtomicU64,
+    registry_stores: AtomicU64,
 }
 
 /// Snapshot of the session's compile/hit/miss counters. Loads and source
@@ -168,6 +183,14 @@ pub struct SessionStats {
     pub source_reads: u64,
     /// Per-thread execution arms handed out by [`SharedSession::session`].
     pub arms: u64,
+    /// Loads or source resolutions answered by the cross-process
+    /// [`Registry`](super::registry::Registry) (zero when none attached).
+    pub registry_hits: u64,
+    /// Registry consultations that found no usable entry (absent,
+    /// corrupt, version/fingerprint mismatch, undecodable codec).
+    pub registry_misses: u64,
+    /// Entries this process wrote into the registry.
+    pub registry_stores: u64,
 }
 
 impl SessionStats {
@@ -183,6 +206,9 @@ impl SessionStats {
             source_requests: self.source_requests.saturating_sub(before.source_requests),
             source_reads: self.source_reads.saturating_sub(before.source_reads),
             arms: self.arms.saturating_sub(before.arms),
+            registry_hits: self.registry_hits.saturating_sub(before.registry_hits),
+            registry_misses: self.registry_misses.saturating_sub(before.registry_misses),
+            registry_stores: self.registry_stores.saturating_sub(before.registry_stores),
         }
     }
 }
@@ -197,6 +223,9 @@ impl StatsCells {
             source_requests: self.source_requests.load(Ordering::Relaxed),
             source_reads: self.source_reads.load(Ordering::Relaxed),
             arms: self.arms.load(Ordering::Relaxed),
+            registry_hits: self.registry_hits.load(Ordering::Relaxed),
+            registry_misses: self.registry_misses.load(Ordering::Relaxed),
+            registry_stores: self.registry_stores.load(Ordering::Relaxed),
         }
     }
 }
@@ -308,6 +337,7 @@ struct SessionCore {
     sources: Vec<Mutex<HashMap<String, Arc<ArtifactSource>>>>,
     stats: StatsCells,
     index: Mutex<SessionIndex>,
+    registry: Option<registry::Registry>,
 }
 
 fn name_stripe(name: &str) -> usize {
@@ -329,8 +359,22 @@ pub struct SharedSession {
 impl SharedSession {
     /// Open the shared core over an artifact directory. Does not touch
     /// PJRT — cheap, and usable on machines without the XLA extension
-    /// (e.g. for manifest inspection).
+    /// (e.g. for manifest inspection). When the `DECORR_REGISTRY`
+    /// environment variable names a directory, the cross-process
+    /// [`registry::Registry`] there is attached automatically.
     pub fn open(artifact_dir: impl AsRef<Path>) -> SharedSession {
+        Self::open_with_registry(artifact_dir, registry::Registry::from_env())
+    }
+
+    /// Open the shared core with an explicit registry attachment (or
+    /// explicitly none, overriding the environment). With a registry,
+    /// source resolution falls back to registry snapshots when the
+    /// artifact directory lacks a name, and every compile publishes its
+    /// source snapshot for other processes to warm from.
+    pub fn open_with_registry(
+        artifact_dir: impl AsRef<Path>,
+        registry: Option<registry::Registry>,
+    ) -> SharedSession {
         let dir = artifact_dir.as_ref().to_path_buf();
         let index = SessionIndex::open(&dir);
         SharedSession {
@@ -339,8 +383,14 @@ impl SharedSession {
                 sources: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
                 stats: StatsCells::default(),
                 index: Mutex::new(index),
+                registry,
             }),
         }
+    }
+
+    /// The attached cross-process registry, if any.
+    pub fn registry(&self) -> Option<&registry::Registry> {
+        self.core.registry.as_ref()
     }
 
     /// The artifact directory this session loads from.
@@ -352,6 +402,12 @@ impl SharedSession {
     /// process: concurrent requests for the same name from any number of
     /// threads perform a single read. The stripe lock is held across the
     /// read so racing requesters wait for, then share, the first result.
+    ///
+    /// Resolution order: the artifact directory first; when it lacks the
+    /// name and a [`registry::Registry`] is attached, the registry's
+    /// portable source snapshot answers instead (`registry_hits` in the
+    /// stats) — this is how rank processes and sweep re-runs resolve
+    /// artifacts with no artifact directory at all.
     pub fn source(&self, name: &str) -> Result<Arc<ArtifactSource>> {
         self.core.stats.source_requests.fetch_add(1, Ordering::Relaxed);
         let stripe = &self.core.sources[name_stripe(name)];
@@ -359,7 +415,36 @@ impl SharedSession {
         if let Some(src) = map.get(name) {
             return Ok(src.clone());
         }
-        self.core.stats.source_reads.fetch_add(1, Ordering::Relaxed);
+        let src = match self.source_from_dir(name) {
+            Ok(src) => {
+                self.core.stats.source_reads.fetch_add(1, Ordering::Relaxed);
+                src
+            }
+            Err(dir_err) => match self.source_from_registry(name) {
+                Some(src) => src,
+                None => {
+                    return Err(dir_err).with_context(|| {
+                        match &self.core.registry {
+                            Some(reg) => format!(
+                                "artifact '{name}' not in the artifact dir and not \
+                                 resolvable from the registry at {}",
+                                reg.dir().display()
+                            ),
+                            None => format!(
+                                "artifact '{name}' not in the artifact dir \
+                                 (no registry attached)"
+                            ),
+                        }
+                    })
+                }
+            },
+        };
+        map.insert(name.to_string(), src.clone());
+        Ok(src)
+    }
+
+    /// Read + parse + hash `<name>` from the artifact directory.
+    fn source_from_dir(&self, name: &str) -> Result<Arc<ArtifactSource>> {
         let (hlo_path, manifest_path) = artifact_paths(&self.core.artifact_dir, name);
         let manifest_text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("reading {}", manifest_path.display()))?;
@@ -369,16 +454,57 @@ impl SharedSession {
             .with_context(|| format!("reading {}", hlo_path.display()))?;
         let signature = manifest.io_signature();
         let key = ContentKey::of(&signature, &hlo_text);
-        let src = Arc::new(ArtifactSource {
+        Ok(Arc::new(ArtifactSource {
             name: name.to_string(),
             hlo_path,
             hlo_bytes: hlo_text.len(),
             manifest,
             signature,
             key,
-        });
-        map.insert(name.to_string(), src.clone());
-        Ok(src)
+        }))
+    }
+
+    /// Resolve `<name>` from the attached registry's source snapshot:
+    /// name marker → entry lookup → decode → materialize the HLO text
+    /// under the registry (the engine compiles from a file path).
+    /// `None` on any miss — the caller reports the artifact-dir error,
+    /// which is the primary source of truth.
+    fn source_from_registry(&self, name: &str) -> Option<Arc<ArtifactSource>> {
+        let reg = self.core.registry.as_ref()?;
+        let stats = &self.core.stats;
+        let miss = |stats: &StatsCells| {
+            stats.registry_misses.fetch_add(1, Ordering::Relaxed);
+            None
+        };
+        let Some(key_hex) = reg.resolve_name(name) else {
+            return miss(stats);
+        };
+        // Portable snapshots match any engine; the sentinel fingerprint
+        // is enough for a source-level lookup.
+        let entry = match reg.lookup(&key_hex, registry::FP_PORTABLE) {
+            registry::Lookup::Hit(entry) if entry.codec == registry::CODEC_SOURCE => entry,
+            _ => return miss(stats),
+        };
+        let Ok((manifest_text, hlo_text)) = registry::decode_source(&entry.payload) else {
+            return miss(stats);
+        };
+        let Ok(manifest) = Manifest::parse(&manifest_text) else {
+            return miss(stats);
+        };
+        let Ok(hlo_path) = reg.materialize_hlo(&key_hex, &hlo_text) else {
+            return miss(stats);
+        };
+        let signature = manifest.io_signature();
+        let key = ContentKey::of(&signature, &hlo_text);
+        stats.registry_hits.fetch_add(1, Ordering::Relaxed);
+        Some(Arc::new(ArtifactSource {
+            name: name.to_string(),
+            hlo_path,
+            hlo_bytes: hlo_text.len(),
+            manifest,
+            signature,
+            key,
+        }))
     }
 
     /// The manifest of `<name>` without compiling anything — replaces the
@@ -527,6 +653,23 @@ impl Session {
             stats.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(cached.artifact.clone());
         }
+        // Cross-process warm start: a registry entry holding a serialized
+        // executable for this engine skips the compile entirely. On the
+        // pinned xla-rs surface `exe_codec` reports unsupported, so this
+        // arm is dormant and loads degrade to the compile below — the
+        // graceful-fallback contract (see `runtime::registry`).
+        if let Some(artifact) = self.executable_from_registry(&src) {
+            stats.registry_hits.fetch_add(1, Ordering::Relaxed);
+            let artifact = Arc::new(artifact);
+            map.insert(
+                src.key,
+                CachedArtifact {
+                    signature: src.signature.clone(),
+                    artifact: artifact.clone(),
+                },
+            );
+            return Ok(artifact);
+        }
         let t0 = Instant::now();
         let artifact = self
             .engine
@@ -538,6 +681,7 @@ impl Session {
             .compile_nanos
             .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
         usync::lock(&self.shared.core.index).record(&src, elapsed.as_secs_f64() * 1e3);
+        self.publish_to_registry(&src, &artifact);
         let artifact = Arc::new(artifact);
         map.insert(
             src.key,
@@ -547,6 +691,92 @@ impl Session {
             },
         );
         Ok(artifact)
+    }
+
+    /// Try to revive a compiled executable for `src` from the attached
+    /// registry. Only consults the registry when this build's
+    /// [`registry::exe_codec`] can actually decode executables, so the
+    /// common (unsupported) surface pays nothing and counts no
+    /// misleading misses.
+    fn executable_from_registry(&self, src: &ArtifactSource) -> Option<Artifact> {
+        let reg = self.shared.core.registry.as_ref()?;
+        if !registry::exe_codec::supported() {
+            return None;
+        }
+        let stats = &self.shared.core.stats;
+        match reg.lookup(&src.key.hex(), &self.engine.fingerprint()) {
+            registry::Lookup::Hit(entry)
+                if entry.codec == registry::CODEC_PJRT
+                    && entry.signature == src.signature =>
+            {
+                match registry::exe_codec::decode(
+                    &self.engine,
+                    src.manifest.clone(),
+                    &entry.payload,
+                ) {
+                    Some(artifact) => Some(artifact),
+                    None => {
+                        stats.registry_misses.fetch_add(1, Ordering::Relaxed);
+                        None
+                    }
+                }
+            }
+            _ => {
+                stats.registry_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Publish what this compile produced into the registry, for other
+    /// processes to warm from: the serialized executable when the
+    /// surface supports it, and always the portable source snapshot
+    /// (skipped if the key is already registered). Best-effort — a
+    /// read-only or broken registry never fails the load.
+    fn publish_to_registry(&self, src: &ArtifactSource, artifact: &Artifact) {
+        let Some(reg) = self.shared.core.registry.as_ref() else {
+            return;
+        };
+        let stats = &self.shared.core.stats;
+        let key_hex = src.key.hex();
+        if let Some(payload) = registry::exe_codec::encode(artifact) {
+            let stored = reg.store(&registry::Entry {
+                key: key_hex.clone(),
+                name: src.name.clone(),
+                signature: src.signature.clone(),
+                codec: registry::CODEC_PJRT.to_string(),
+                fingerprint: self.engine.fingerprint(),
+                payload,
+            });
+            if stored.is_ok() {
+                stats.registry_stores.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        if reg.contains(&key_hex) {
+            return;
+        }
+        // Re-read the source files; the snapshot must be byte-faithful
+        // to what other processes will parse, not to the parsed structs.
+        let (hlo_path, manifest_path) =
+            artifact_paths(self.shared.artifact_dir(), &src.name);
+        let Ok(manifest_text) = std::fs::read_to_string(&manifest_path) else {
+            return;
+        };
+        let Ok(hlo_text) = std::fs::read_to_string(&hlo_path) else {
+            return;
+        };
+        let stored = reg.store(&registry::Entry {
+            key: key_hex,
+            name: src.name.clone(),
+            signature: src.signature.clone(),
+            codec: registry::CODEC_SOURCE.to_string(),
+            fingerprint: registry::FP_PORTABLE.to_string(),
+            payload: registry::encode_source(&manifest_text, &hlo_text),
+        });
+        if stored.is_ok() {
+            stats.registry_stores.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Warm the cache for a batch of artifact names.
@@ -693,6 +923,9 @@ mod tests {
             source_requests: 12,
             source_reads: 3,
             arms: 2,
+            registry_hits: 5,
+            registry_misses: 3,
+            registry_stores: 4,
         };
         let before = SessionStats {
             loads: 4,
@@ -702,6 +935,9 @@ mod tests {
             source_requests: 5,
             source_reads: 1,
             arms: 1,
+            registry_hits: 1,
+            registry_misses: 1,
+            registry_stores: 1,
         };
         let d = after.delta(&before);
         assert_eq!(d.loads, 6);
@@ -711,10 +947,53 @@ mod tests {
         assert_eq!(d.source_requests, 7);
         assert_eq!(d.source_reads, 2);
         assert_eq!(d.arms, 1);
+        assert_eq!(d.registry_hits, 4);
+        assert_eq!(d.registry_misses, 2);
+        assert_eq!(d.registry_stores, 3);
         // A stale "before" from a later snapshot clamps instead of wrapping.
         let clamped = before.delta(&after);
         assert_eq!(clamped.loads, 0);
         assert!(clamped.compile_ms.abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_resolves_sources_without_an_artifact_dir() {
+        let base = std::env::temp_dir().join(format!(
+            "decorr_regsrc_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&base);
+        let art = base.join("artifacts");
+        std::fs::create_dir_all(&art).unwrap();
+        std::fs::write(art.join("r.hlo.txt"), "HloModule r\n").unwrap();
+        std::fs::write(
+            art.join("r.manifest.json"),
+            r#"{"name":"r","inputs":[],"outputs":[]}"#,
+        )
+        .unwrap();
+        let reg = registry::Registry::open(base.join("registry")).unwrap();
+        reg.warm_from_dir(&art).unwrap();
+
+        // A session over an EMPTY artifact dir resolves 'r' from the
+        // registry snapshot alone.
+        let empty = base.join("empty");
+        std::fs::create_dir_all(&empty).unwrap();
+        let shared = SharedSession::open_with_registry(&empty, Some(reg));
+        let src = shared.source("r").unwrap();
+        assert_eq!(src.name, "r");
+        assert!(src.hlo_path.starts_with(shared.registry().unwrap().dir()));
+        let stats = shared.stats();
+        assert_eq!(stats.registry_hits, 1);
+        assert_eq!(stats.source_reads, 0, "artifact dir was never read");
+        // Unknown names miss the registry and report both paths.
+        let err = shared.source("ghost").unwrap_err();
+        assert!(format!("{err:#}").contains("registry"));
+        assert_eq!(shared.stats().registry_misses, 1);
+        // Without a registry, the same setup is a plain dir error.
+        let bare = SharedSession::open_with_registry(&empty, None);
+        assert!(bare.source("r").is_err());
+        assert_eq!(bare.stats().registry_misses, 0);
+        std::fs::remove_dir_all(&base).ok();
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! # The serving subsystem — `decorr serve`
 //!
 //! Long-lived embedding-inference serving over the same warm runtime
-//! stack the trainer uses. The unit of work is a *request*, not an
-//! epoch:
+//! stack the trainer uses. (System-wide map: `docs/ARCHITECTURE.md`;
+//! the wire format: `docs/FORMATS.md`.) The unit of work is a
+//! *request*, not an epoch:
 //!
 //! ```text
 //! socket (tcp | unix:<path>)
@@ -38,6 +39,8 @@
 //! like the training trajectories. `decorr serve-bench` is the paired
 //! closed-loop load generator ([`client::run_load`]) that makes the whole
 //! path benchable without real traffic.
+
+#![deny(missing_docs)]
 
 pub mod client;
 pub mod exec;

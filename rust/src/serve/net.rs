@@ -129,6 +129,16 @@ impl Stream {
         }
     }
 
+    /// Bound blocking reads: a peer that wedges mid-frame surfaces as a
+    /// timeout error instead of hanging the caller forever. `None`
+    /// removes the bound.
+    pub fn set_read_timeout(&self, dur: Option<std::time::Duration>) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(dur),
+            Stream::Unix(s) => s.set_read_timeout(dur),
+        }
+    }
+
     fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
         match self {
             Stream::Tcp(s) => s.set_nonblocking(nb),

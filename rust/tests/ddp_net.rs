@@ -1,0 +1,134 @@
+//! Multi-process DDP integration: real `decorr rank` subprocesses
+//! exchanging gradients with a leader over a Unix socket must be
+//! bit-identical to the in-process thread-backed `DdpTrainer` at the
+//! same seed (the `coordinator::ddp_net` contract).
+//!
+//! The protocol itself (framing, typed errors, f32 bit-exactness) is
+//! pinned by unit tests inside `coordinator::ddp_net`; this file covers
+//! the part that needs real processes: handshake against a live leader,
+//! job/grads exchange across process boundaries, and clean shutdown.
+
+use std::process::{Child, Command, Stdio};
+
+use decorr::api::train::DriverBuilder;
+use decorr::config::TrainConfig;
+use decorr::coordinator::DdpTrainer;
+use decorr::data::loader::make_batch;
+use decorr::data::synth::{ShapeWorld, ShapeWorldConfig};
+use decorr::data::{AugmentConfig, Augmenter};
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/grad_bt_sum_small_s2.manifest.json").exists()
+}
+
+fn small_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::preset_small();
+    cfg.out_dir = String::new();
+    cfg.epochs = 1;
+    cfg.steps_per_epoch = 3;
+    cfg
+}
+
+/// Spawn one `decorr rank` worker pointed at `addr`. Ranks retry the
+/// connect while the leader is still binding, so spawning them before
+/// the leader exists is the intended order.
+fn spawn_rank(addr: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_decorr"))
+        .args(["rank", "--addr", addr, "--artifacts", "artifacts"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawning decorr rank")
+}
+
+/// K = 2 rank subprocesses over a private Unix socket, stepped in
+/// lockstep with a thread-backed `DdpTrainer` on identical batches:
+/// every per-step loss/invariance/regularizer value and every final
+/// parameter must agree to the bit.
+#[test]
+fn rank_processes_match_thread_ddp_bit_exactly() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    const SHARDS: usize = 2;
+    let cfg = small_cfg();
+
+    // Reference run: the historical in-process thread exchange.
+    let mut threads = DdpTrainer::new(cfg.clone(), SHARDS).unwrap();
+
+    // Socket run: ranks first (they retry-connect), then the leader
+    // (whose construction blocks until both ranks pass the handshake).
+    let sock = std::env::temp_dir().join(format!("decorr-ddp-net-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&sock);
+    let addr = format!("unix:{}", sock.display());
+    let mut ranks: Vec<Child> = (0..SHARDS).map(|_| spawn_rank(&addr)).collect();
+    let mut net = DriverBuilder::new(cfg.clone())
+        .ddp_net(SHARDS, addr.clone())
+        .build_ddp()
+        .unwrap();
+    assert_eq!(net.batch_size(), threads.batch_size());
+
+    let dataset = ShapeWorld::new(ShapeWorldConfig {
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    let aug = Augmenter::new(AugmentConfig::default());
+    for step in 0..3 {
+        let batch = make_batch(&dataset, &aug, net.batch_size(), 2048, cfg.seed, step);
+        let mt = threads.step(&batch, 0).unwrap();
+        let mn = net.step(&batch, 0).unwrap();
+        assert_eq!(
+            mt.loss.to_bits(),
+            mn.loss.to_bits(),
+            "step {step}: thread loss {} vs net loss {}",
+            mt.loss,
+            mn.loss
+        );
+        assert_eq!(mt.inv.to_bits(), mn.inv.to_bits(), "step {step}: inv");
+        assert_eq!(mt.reg.to_bits(), mn.reg.to_bits(), "step {step}: reg");
+    }
+
+    // Identical losses could still hide divergent gradients; identical
+    // parameters after three updates cannot.
+    let st = threads.snapshot().unwrap();
+    let sn = net.snapshot().unwrap();
+    assert_eq!(st.tensors.len(), sn.tensors.len());
+    for ((n1, t1), (n2, t2)) in st.tensors.iter().zip(&sn.tensors) {
+        assert_eq!(n1, n2);
+        let diverged = t1
+            .data()
+            .iter()
+            .zip(t2.data())
+            .filter(|(a, b)| a.to_bits() != b.to_bits())
+            .count();
+        assert_eq!(diverged, 0, "{n1}: {diverged} parameter(s) differ bitwise");
+    }
+
+    // Dropping the leader sends SHUTDOWN; every rank must exit cleanly.
+    drop(net);
+    for (i, rank) in ranks.iter_mut().enumerate() {
+        let status = rank.wait().expect("waiting on rank");
+        assert!(status.success(), "rank {i} exited with {status}");
+    }
+    let _ = std::fs::remove_file(&sock);
+}
+
+/// A leader whose shard count has no matching grad artifact must fail
+/// its own build without wedging: the error surfaces before any rank
+/// traffic, and already-spawned ranks exit once the socket closes.
+#[test]
+fn missing_shard_artifact_fails_leader_cleanly() {
+    if !artifacts_present() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let sock = std::env::temp_dir().join(format!("decorr-ddp-net-bad-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&sock);
+    let addr = format!("unix:{}", sock.display());
+    // No artifact is emitted for 3 shards on the small preset, so the
+    // leader's source resolution fails before it ever binds the socket.
+    let err = DriverBuilder::new(small_cfg()).ddp_net(3, addr).build_ddp();
+    assert!(err.is_err());
+    assert!(!sock.exists(), "failed leader left its socket behind");
+}

@@ -1,0 +1,107 @@
+//! Doc-drift guard for `docs/FORMATS.md`: every magic byte string,
+//! version number, and size ceiling the document quotes must match the
+//! constants in code, so the format book cannot silently rot as formats
+//! evolve. Renaming or re-versioning a format means updating the doc in
+//! the same change — which is the point.
+
+use std::sync::OnceLock;
+
+/// The format book's text (the test fails loudly if the file moved).
+fn formats_md() -> &'static str {
+    static DOC: OnceLock<String> = OnceLock::new();
+    DOC.get_or_init(|| {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/FORMATS.md");
+        std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("docs/FORMATS.md must exist next to rust/ ({e})"))
+    })
+}
+
+/// Assert the doc quotes `magic` exactly as code defines it.
+fn assert_documented(what: &str, magic: &str) {
+    assert!(
+        formats_md().contains(magic),
+        "docs/FORMATS.md no longer mentions the {what} magic '{magic}' — \
+         update the doc to match the code constant"
+    );
+}
+
+#[test]
+fn registry_magic_matches_doc() {
+    let magic = std::str::from_utf8(&decorr::runtime::registry::MAGIC).unwrap();
+    assert_eq!(magic, "DCRREG01");
+    assert_documented("registry entry", magic);
+    assert_documented("registry source codec", decorr::runtime::registry::CODEC_SOURCE);
+    assert_documented("registry pjrt codec", decorr::runtime::registry::CODEC_PJRT);
+    assert_documented("registry portable fingerprint", decorr::runtime::registry::FP_PORTABLE);
+    assert_documented("registry env var", decorr::runtime::registry::REGISTRY_ENV);
+    assert_documented("registry entry suffix", decorr::runtime::registry::ENTRY_SUFFIX);
+}
+
+#[test]
+fn shard_magic_matches_doc() {
+    let magic = std::str::from_utf8(&decorr::data::shard::MAGIC).unwrap();
+    assert_eq!(magic, "DCRSHRD1");
+    assert_documented("shard file", magic);
+}
+
+#[test]
+fn serve_magics_match_doc() {
+    let req = std::str::from_utf8(&decorr::serve::protocol::REQ_MAGIC).unwrap();
+    let resp = std::str::from_utf8(&decorr::serve::protocol::RESP_MAGIC).unwrap();
+    assert_eq!((req, resp), ("DCRQ", "DCRP"));
+    assert_documented("serve request", req);
+    assert_documented("serve response", resp);
+    // The doc quotes the frame ceiling as a shift expression; keep the
+    // number and the prose in sync.
+    assert_eq!(decorr::serve::protocol::MAX_FRAME, 1 << 26);
+    assert_documented("serve frame ceiling", "MAX_FRAME = 1 << 26");
+}
+
+#[test]
+fn ddp_net_magic_matches_doc() {
+    let magic = std::str::from_utf8(&decorr::coordinator::ddp_net::MAGIC).unwrap();
+    assert_eq!(magic, "DCRD");
+    assert_documented("ddp-net frame", magic);
+    assert_eq!(decorr::coordinator::ddp_net::MAX_FRAME, 1 << 28);
+    assert_documented("ddp-net frame ceiling", "MAX_FRAME = 1 << 28");
+}
+
+#[test]
+fn checkpoint_magics_match_doc() {
+    // checkpoint.rs keeps its magics private (they never cross an API
+    // boundary); pin the literals here against both the doc and a real
+    // save so a silent rename fails this test, not a user's resume.
+    assert_documented("checkpoint v1", "DECORRCKPT1");
+    assert_documented("checkpoint v2", "DECORRCKPT2");
+    let dir = std::env::temp_dir().join(format!("decorr_fmt_doc_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("probe.ckpt");
+    let ckpt = decorr::coordinator::Checkpoint {
+        tensors: vec![("w".to_string(), decorr::util::tensor::Tensor::zeros(&[2, 2]))],
+        ..Default::default()
+    };
+    ckpt.save(&path).unwrap();
+    // The payload after the header is raw tensor bytes; compare bytes, not
+    // text, so a non-UTF-8 payload never trips the probe.
+    let head = std::fs::read(&path).unwrap();
+    assert!(
+        head.starts_with(b"DECORRCKPT1") || head.starts_with(b"DECORRCKPT2"),
+        "checkpoint writer no longer emits a documented magic"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_registry_matches_doc() {
+    // The doc points at DEFAULT_BENCH_FILES as the single registry of
+    // gated files rather than duplicating the list; pin that pointer and
+    // the naming convention the registry promises.
+    for file in decorr::bench_harness::diff::DEFAULT_BENCH_FILES {
+        assert!(
+            file.starts_with("BENCH_") && file.ends_with(".json"),
+            "unexpected bench registry entry {file}"
+        );
+    }
+    assert_documented("bench registry", "DEFAULT_BENCH_FILES");
+    assert_documented("session index", decorr::runtime::session::SESSION_INDEX_FILE);
+}

@@ -1,0 +1,213 @@
+//! Integration tests for the cross-process compiled-artifact registry:
+//! session source resolution from registry snapshots (the rank-worker /
+//! repeat-CI path), graceful degradation on corrupt entries, warm-from-dir
+//! idempotence, and gc interplay with name markers.
+//!
+//! Source resolution goes through `SharedSession` and never touches PJRT,
+//! so most of these run everywhere; the end-to-end execute test needs a
+//! PJRT client and skips without one, same as `tests/session.rs`.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use decorr::bench_harness::SynthArtifacts;
+use decorr::runtime::{registry, Registry, SharedSession};
+
+/// A registry under a fresh temp dir, removed by `TempRegistry::drop`.
+struct TempRegistry {
+    dir: PathBuf,
+    reg: Registry,
+}
+
+impl TempRegistry {
+    fn create(tag: &str) -> TempRegistry {
+        let dir =
+            std::env::temp_dir().join(format!("decorr_regtest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = Registry::open(&dir).unwrap();
+        TempRegistry { dir, reg }
+    }
+}
+
+impl Drop for TempRegistry {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+#[test]
+fn warm_from_dir_is_idempotent_and_resolvable() {
+    let synth = SynthArtifacts::generate("regwarm", &[(4, 16), (4, 32)]).unwrap();
+    let tmp = TempRegistry::create("warm");
+
+    let first = tmp.reg.warm_from_dir(&synth.dir).unwrap();
+    assert_eq!(first.scanned, 2);
+    assert_eq!(first.stored, 2);
+    assert_eq!(first.malformed, 0);
+
+    // Second warm over the same dir stores nothing new.
+    let second = tmp.reg.warm_from_dir(&synth.dir).unwrap();
+    assert_eq!(second.stored, 0);
+    assert_eq!(second.skipped, 2);
+
+    // Every name resolves to a healthy portable source entry.
+    for name in &synth.names {
+        let key = tmp.reg.resolve_name(name).expect("name marker");
+        match tmp.reg.lookup(&key, registry::FP_PORTABLE) {
+            registry::Lookup::Hit(entry) => {
+                assert_eq!(entry.codec, registry::CODEC_SOURCE);
+                assert_eq!(entry.name, *name);
+                registry::decode_source(&entry.payload).unwrap();
+            }
+            registry::Lookup::Miss(m) => panic!("expected hit for {name}, got {m:?}"),
+        }
+    }
+    let healthy = tmp.reg.inspect().unwrap();
+    assert_eq!(healthy.len(), 2);
+    assert!(healthy.iter().all(|e| e.corrupt.is_none()));
+}
+
+#[test]
+fn session_resolves_sources_from_registry_without_artifact_dir() {
+    let synth = SynthArtifacts::generate("regsrc", &[(4, 16), (8, 32)]).unwrap();
+    let tmp = TempRegistry::create("src");
+    tmp.reg.warm_from_dir(&synth.dir).unwrap();
+
+    // A shared core over a directory that does not exist: every source
+    // must come from the registry (zero artifact-dir reads).
+    let missing = synth.dir.join("no-such-dir");
+    let shared = SharedSession::open_with_registry(&missing, Some(tmp.reg.clone()));
+    for name in &synth.names {
+        let src = shared.source(name).unwrap();
+        assert_eq!(&src.name, name);
+        // The materialized HLO lives under the registry, not the
+        // (nonexistent) artifact dir.
+        assert!(src.hlo_path.starts_with(&tmp.dir));
+    }
+    let stats = shared.stats();
+    assert_eq!(stats.registry_hits, synth.names.len() as u64);
+    assert_eq!(stats.source_reads, 0);
+    assert_eq!(stats.registry_misses, 0);
+
+    // Repeat requests hit the in-process source cache, not the registry.
+    shared.source(&synth.names[0]).unwrap();
+    assert_eq!(shared.stats().registry_hits, synth.names.len() as u64);
+}
+
+#[test]
+fn artifact_dir_wins_over_registry_when_both_resolve() {
+    let synth = SynthArtifacts::generate("regdir", &[(4, 16)]).unwrap();
+    let tmp = TempRegistry::create("dir");
+    tmp.reg.warm_from_dir(&synth.dir).unwrap();
+
+    let shared = SharedSession::open_with_registry(&synth.dir, Some(tmp.reg.clone()));
+    let src = shared.source(&synth.names[0]).unwrap();
+    assert!(src.hlo_path.starts_with(&synth.dir));
+    let stats = shared.stats();
+    assert_eq!(stats.source_reads, 1);
+    assert_eq!(stats.registry_hits, 0);
+}
+
+#[test]
+fn corrupt_entry_degrades_to_typed_miss_not_panic() {
+    let synth = SynthArtifacts::generate("regcorrupt", &[(4, 16)]).unwrap();
+    let tmp = TempRegistry::create("corrupt");
+    tmp.reg.warm_from_dir(&synth.dir).unwrap();
+    let name = &synth.names[0];
+    let key = tmp.reg.resolve_name(name).unwrap();
+
+    // Truncate the entry mid-payload: the checksum no longer verifies.
+    let path = tmp.reg.entry_path(&key);
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+
+    let missing = synth.dir.join("no-such-dir");
+    let shared = SharedSession::open_with_registry(&missing, Some(tmp.reg.clone()));
+    let err = shared.source(name).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("not resolvable from the registry"),
+        "error should name the registry fallback: {msg}"
+    );
+    assert_eq!(shared.stats().registry_misses, 1);
+    assert_eq!(shared.stats().registry_hits, 0);
+
+    // `inspect` reports the entry as corrupt instead of erroring out.
+    let summaries = tmp.reg.inspect().unwrap();
+    assert_eq!(summaries.len(), 1);
+    assert!(summaries[0].corrupt.is_some());
+
+    // With the artifact dir back in the picture the same name resolves
+    // fine — the corrupt registry never blocks a dir-backed load.
+    let dir_shared = SharedSession::open_with_registry(&synth.dir, Some(tmp.reg.clone()));
+    dir_shared.source(name).unwrap();
+}
+
+#[test]
+fn gc_drops_unused_entries_and_dangling_name_markers() {
+    let synth = SynthArtifacts::generate("reggc", &[(4, 16), (4, 32), (4, 64)]).unwrap();
+    let tmp = TempRegistry::create("gc");
+    tmp.reg.warm_from_dir(&synth.dir).unwrap();
+
+    let keep_name = &synth.names[0];
+    let keep_key = tmp.reg.resolve_name(keep_name).unwrap();
+    let mut in_use = BTreeSet::new();
+    in_use.insert(keep_key.clone());
+
+    let report = tmp.reg.gc(&in_use).unwrap();
+    assert_eq!(report.scanned, 3);
+    assert_eq!(report.kept, 1);
+    assert_eq!(report.removed, 2);
+    assert!(report.bytes_freed > 0);
+
+    // The kept entry still resolves; the collected names lost their
+    // markers, so a no-dir session now misses them.
+    assert_eq!(tmp.reg.resolve_name(keep_name).as_deref(), Some(&keep_key[..]));
+    for name in &synth.names[1..] {
+        assert!(tmp.reg.resolve_name(name).is_none(), "{name} should be gone");
+    }
+
+    let missing = synth.dir.join("no-such-dir");
+    let shared = SharedSession::open_with_registry(&missing, Some(tmp.reg.clone()));
+    shared.source(keep_name).unwrap();
+    assert!(shared.source(&synth.names[1]).is_err());
+}
+
+/// End to end on a real PJRT client: publish by loading through a
+/// dir-backed session, then compile-and-execute the same artifacts from a
+/// registry-only session and compare outputs bit-exactly. Skips when no
+/// PJRT client can be created, like the artifact-gated tests.
+#[test]
+fn registry_only_session_executes_identically() {
+    let synth = SynthArtifacts::generate("regexec", &[(4, 16)]).unwrap();
+    let tmp = TempRegistry::create("exec");
+
+    let publisher = SharedSession::open_with_registry(&synth.dir, Some(tmp.reg.clone()));
+    let pub_session = match publisher.session() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping: no PJRT client ({e:#})");
+            return;
+        }
+    };
+    let name = &synth.names[0];
+    let dir_artifact = pub_session.load(name).unwrap();
+    let dir_value = SynthArtifacts::smoke(&dir_artifact).unwrap();
+    assert_eq!(publisher.stats().registry_stores, 1);
+
+    let missing = synth.dir.join("no-such-dir");
+    let warm_shared = SharedSession::open_with_registry(&missing, Some(tmp.reg.clone()));
+    let warm_session = warm_shared.session().unwrap();
+    let warm_artifact = warm_session.load(name).unwrap();
+    let warm_value = SynthArtifacts::smoke(&warm_artifact).unwrap();
+
+    assert_eq!(dir_value.to_bits(), warm_value.to_bits());
+    let stats = warm_shared.stats();
+    assert_eq!(stats.registry_hits, 1);
+    assert_eq!(stats.source_reads, 0);
+    if registry::exe_codec::supported() {
+        assert_eq!(stats.compiles, 0, "warm run must reuse the stored executable");
+    } else {
+        assert_eq!(stats.compiles, 1, "source snapshot degrades to one recompile");
+    }
+}
